@@ -1,0 +1,114 @@
+//! Ablation study: the design choices DESIGN.md calls out.
+//!
+//! 1. **Kernel family** — the paper fixes Matérn-5/2 (Eq. 3); §3.2 argues
+//!    the method is kernel-agnostic. We sweep Matérn-5/2 / Matérn-3/2 /
+//!    RBF / Exponential on the 5-D Levy.
+//! 2. **Acquisition function** — §3.2.1: "exchanging the utility function
+//!    does not influence the overall structure." We sweep EI / PI / UCB.
+//! 3. **Batch size t** — §3.4's parallel scheme: how does suggestion batch
+//!    size trade rounds for redundancy on the ResNet surface?
+//!
+//! ```bash
+//! cargo run --release --example ablation [iters]   # default 120
+//! ```
+
+use std::sync::Arc;
+
+use lazygp::acquisition::functions::AcquisitionKind;
+use lazygp::bo::{BoConfig, BoDriver, InitDesign};
+use lazygp::coordinator::{CoordinatorConfig, ParallelBo};
+use lazygp::kernels::{Kernel, KernelKind, KernelParams};
+use lazygp::objectives::levy::Levy;
+use lazygp::objectives::trainer::ResNetCifarSim;
+use lazygp::objectives::Objective;
+use lazygp::util::bench::render_table;
+
+fn main() {
+    let iters: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
+
+    // ---- 1. kernel family on 5-D Levy ----
+    let mut rows = Vec::new();
+    for kind in [
+        KernelKind::Matern52,
+        KernelKind::Matern32,
+        KernelKind::Rbf,
+        KernelKind::Exponential,
+    ] {
+        let mut cfg = BoConfig::lazy().with_seed(5).with_init(InitDesign::Lhs(20));
+        cfg.kernel = Kernel::new(kind, KernelParams::paper_default());
+        let mut d = BoDriver::new(cfg, Box::new(Levy::new(5)));
+        let best = d.run(iters);
+        rows.push(vec![
+            kind.name().to_string(),
+            format!("{:.3}", best.value),
+            best.iteration.to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &format!("kernel ablation — 5-D Levy, {iters} iters (optimum 0)"),
+            &["kernel", "final best", "found at iter"],
+            &rows
+        )
+    );
+
+    // ---- 2. acquisition function on 5-D Levy ----
+    let mut rows = Vec::new();
+    for (name, acq) in [
+        ("ei(xi=0.01)", AcquisitionKind::Ei { xi: 0.01 }),
+        ("ei(xi=0.1)", AcquisitionKind::Ei { xi: 0.1 }),
+        ("pi(xi=0.01)", AcquisitionKind::Pi { xi: 0.01 }),
+        ("ucb(beta=2)", AcquisitionKind::Ucb { beta: 2.0 }),
+    ] {
+        let cfg = BoConfig::lazy()
+            .with_seed(5)
+            .with_init(InitDesign::Lhs(20))
+            .with_acquisition(acq);
+        let mut d = BoDriver::new(cfg, Box::new(Levy::new(5)));
+        let best = d.run(iters);
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.3}", best.value),
+            best.iteration.to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &format!("acquisition ablation — 5-D Levy, {iters} iters"),
+            &["acquisition", "final best", "found at iter"],
+            &rows
+        )
+    );
+
+    // ---- 3. batch size on the ResNet surface ----
+    let mut rows = Vec::new();
+    for t in [1usize, 5, 10, 20] {
+        let obj: Arc<dyn Objective> = Arc::new(ResNetCifarSim::new());
+        let mut pbo = ParallelBo::new(
+            BoConfig::lazy().with_seed(5).with_init(InitDesign::Random(1)),
+            obj,
+            CoordinatorConfig { workers: t, batch_size: t, seed: 5, ..Default::default() },
+        );
+        let best = pbo.run_until_evals(iters.max(40));
+        let rounds = pbo.rounds().len();
+        let virt = pbo.virtual_seconds();
+        rows.push(vec![
+            t.to_string(),
+            format!("{:.3}", best.value),
+            rounds.to_string(),
+            format!("{:.1} min", virt / 60.0),
+        ]);
+        pbo.finish();
+    }
+    println!(
+        "{}",
+        render_table(
+            "batch-size ablation — simulated ResNet32/CIFAR10 (virtual wall-clock)",
+            &["t (workers)", "final best", "rounds", "virtual time"],
+            &rows
+        )
+    );
+    println!("note: larger t trades per-round redundancy for fewer synchronization\nrounds — the §3.4 trade; virtual time shrinks ~linearly until the\nacquisition surface runs out of distinct local maxima to exploit.");
+}

@@ -1,0 +1,161 @@
+//! END-TO-END DRIVER: exercises every layer of the stack on a realistic
+//! workload and reports the paper's headline metric.
+//!
+//! Layers composed here:
+//!   L1/L2 — the AOT-compiled JAX/Pallas `gp_score` artifacts (built once
+//!           by `make artifacts`), loaded through PJRT;
+//!   L3    — the lazy GP (incremental Cholesky, paper Alg. 3), the EI
+//!           acquisition optimizer, and the leader/worker coordinator.
+//!
+//! Workload: simulated ResNet32/CIFAR10 hyper-parameter search (§4.3/4.4),
+//! three arms at matching budgets:
+//!   1. naive baseline (exact GP, sequential)
+//!   2. lazy GP (sequential)
+//!   3. lazy GP + parallel coordinator (t workers)
+//! with the acquisition's candidate scoring for arm 3's suggestion pass
+//! additionally cross-checked against the compiled XLA artifact.
+//!
+//! Reported: accuracy milestones, GP-update totals (the Fig.1/Fig.5
+//! quantity), virtual wall-clock (Table 2/3/4 quantity), XLA-vs-native
+//! scoring parity. Recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end [evals]
+//! ```
+
+use std::sync::Arc;
+
+use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
+use lazygp::bo::{BoConfig, BoDriver, InitDesign};
+use lazygp::coordinator::{CoordinatorConfig, ParallelBo};
+use lazygp::gp::lazy::LazyGp;
+use lazygp::gp::Surrogate;
+use lazygp::objectives::trainer::ResNetCifarSim;
+use lazygp::objectives::Objective;
+use lazygp::runtime::{score_native, GpScorer, PjrtRuntime};
+use lazygp::util::rng::Pcg64;
+use lazygp::util::timer::{fmt_duration_s, Stopwatch};
+
+const TARGET_ACC: f64 = 0.79; // Table 3's naive-baseline endpoint
+
+fn main() -> anyhow::Result<()> {
+    let evals: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
+    println!("=== lazygp end-to-end driver: simulated ResNet32/CIFAR10 HPO, {evals} evaluations/arm ===\n");
+
+    // ---------- arm 1: naive baseline ----------
+    let sw = Stopwatch::new();
+    let mut naive =
+        BoDriver::new(BoConfig::exact().with_seed(9).with_init(InitDesign::Random(1)), Box::new(ResNetCifarSim::new()));
+    let naive_best = naive.run(evals);
+    let naive_wall = sw.elapsed_s();
+    let naive_to_target = naive
+        .history()
+        .iter()
+        .find(|r| r.best >= TARGET_ACC)
+        .map(|r| r.iter);
+
+    // ---------- arm 2: lazy GP, sequential ----------
+    let sw = Stopwatch::new();
+    let mut lazy =
+        BoDriver::new(BoConfig::lazy().with_seed(9).with_init(InitDesign::Random(1)), Box::new(ResNetCifarSim::new()));
+    let lazy_best = lazy.run(evals);
+    let lazy_wall = sw.elapsed_s();
+    let lazy_to_target =
+        lazy.history().iter().find(|r| r.best >= TARGET_ACC).map(|r| r.iter);
+
+    // ---------- arm 3: lazy GP + parallel coordinator ----------
+    let obj: Arc<dyn Objective> = Arc::new(ResNetCifarSim::new());
+    let mut par = ParallelBo::new(
+        BoConfig::lazy().with_seed(9).with_init(InitDesign::Random(1)),
+        obj,
+        CoordinatorConfig {
+            workers: 20,
+            batch_size: 20,
+            sleep_scale: 1e-5,
+            fail_prob: 0.02,
+            max_retries: 3,
+            seed: 9,
+        },
+    );
+    let par_best = par.run_until_evals(evals);
+    let par_rounds = par.rounds().len();
+    let par_virtual = par.virtual_seconds();
+
+    // ---------- L1/L2 composition check: XLA scoring on the live state ----------
+    let xla_report = match PjrtRuntime::new_default() {
+        Ok(rt) => {
+            let scorer = GpScorer::new(rt);
+            // rebuild a lazy GP from the parallel arm's history so the
+            // compiled artifact scores a *real* mid-run posterior
+            let mut gp = LazyGp::paper_default();
+            for rec in par.driver().history().iter().take(100) {
+                gp.observe(&rec.x, rec.y);
+            }
+            let acq =
+                Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, gp.incumbent().unwrap().1);
+            let mut rng = Pcg64::new(99);
+            let bounds = ResNetCifarSim::new().bounds().to_vec();
+            let cands: Vec<Vec<f64>> = (0..256).map(|_| rng.point_in(&bounds)).collect();
+            let t = Stopwatch::new();
+            let xla = scorer.score_batch(&gp, &acq, 0.01, &cands)?;
+            let t_xla = t.elapsed_s();
+            let t = Stopwatch::new();
+            let native = score_native(&gp, &acq, &cands);
+            let t_nat = t.elapsed_s();
+            let max_dev = xla
+                .iter()
+                .zip(&native)
+                .map(|(a, b)| (a.ei - b.ei).abs())
+                .fold(0.0f64, f64::max);
+            let (xc, nc) = scorer.call_counts();
+            format!(
+                "xla scoring: 256 cands in {} ({} native) | max |EI dev| {:.2e} | calls xla={} fallback={}",
+                fmt_duration_s(t_xla),
+                fmt_duration_s(t_nat),
+                max_dev,
+                xc,
+                nc
+            )
+        }
+        Err(e) => format!("xla runtime unavailable ({e}); run `make artifacts`"),
+    };
+
+    // ---------- report ----------
+    println!("arm                  best    it→{TARGET_ACC}   GP-update    real wall   virtual wall");
+    println!(
+        "naive (exact GP)   {:.4}   {:>7}   {:>9}   {:>9}   {:>12}",
+        naive_best.value,
+        naive_to_target.map_or("—".into(), |i| i.to_string()),
+        fmt_duration_s(naive.gp_seconds_total()),
+        fmt_duration_s(naive_wall),
+        fmt_duration_s(naive.sim_cost_total()),
+    );
+    println!(
+        "lazy  (sequential) {:.4}   {:>7}   {:>9}   {:>9}   {:>12}",
+        lazy_best.value,
+        lazy_to_target.map_or("—".into(), |i| i.to_string()),
+        fmt_duration_s(lazy.gp_seconds_total()),
+        fmt_duration_s(lazy_wall),
+        fmt_duration_s(lazy.sim_cost_total()),
+    );
+    println!(
+        "lazy  (parallel)   {:.4}   {:>7}   {:>9}   {:>9}   {:>12}  ({par_rounds} rounds)",
+        par_best.value,
+        par.driver()
+            .history()
+            .iter()
+            .find(|r| r.best >= TARGET_ACC)
+            .map_or("—".into(), |r| r.iter.to_string()),
+        fmt_duration_s(par.rounds().iter().map(|r| r.sync_seconds).sum()),
+        "—",
+        fmt_duration_s(par_virtual),
+    );
+    println!(
+        "\nGP-update speedup (lazy vs naive): {:.1}×",
+        naive.gp_seconds_total() / lazy.gp_seconds_total().max(1e-9)
+    );
+    println!("virtual-time speedup (parallel vs naive seq): {:.1}×", naive.sim_cost_total() / par_virtual.max(1e-9));
+    println!("{xla_report}");
+    par.finish();
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Quickstart: optimize the Branin function with the lazy GP in ~20 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use lazygp::bo::{BoConfig, BoDriver, InitDesign};
+use lazygp::objectives::suite::Branin;
+
+fn main() {
+    // the paper's configuration: frozen Matérn-5/2 kernel + EI, with an
+    // 8-point Latin-hypercube initialization
+    let config = BoConfig::lazy().with_seed(42).with_init(InitDesign::Lhs(8));
+    let mut driver = BoDriver::new(config, Box::new(Branin::new()));
+
+    let best = driver.run(40);
+
+    println!("Branin (maximizing −branin; optimum ≈ −0.398):");
+    for (iter, value) in driver.milestones() {
+        println!("  iteration {iter:>3}: best {value:.5}");
+    }
+    println!(
+        "\nbest {:.5} at x = [{:.4}, {:.4}] (found at iteration {})",
+        best.value, best.x[0], best.x[1], best.iteration
+    );
+    println!("total GP update time: {:.2} ms", driver.gp_seconds_total() * 1e3);
+    assert!(best.value > -2.0, "quickstart should land in the basin");
+}

@@ -1,0 +1,108 @@
+"""AOT lowering: JAX/Pallas ``gp_score`` → HLO *text* artifacts for the
+Rust PJRT runtime.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which the ``xla`` crate's bundled xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+One artifact per size bucket ``(N, D)`` with a fixed candidate batch M:
+the Rust runtime pads the live GP state (n ≤ N) into the bucket and
+masks the padding. A JSON manifest lists every bucket for the runtime's
+registry.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+# GP math is f64 end-to-end: the Rust coordinator maintains the factor in
+# f64, and f32 scoring loses EI precision on the ill-conditioned covariances
+# BO produces late in a run (samples cluster around the optimum). XLA CPU
+# executes f64 at full speed, so the artifacts are lowered in f64.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import gp_score
+
+# Candidate batch per scoring call; matches the Rust acquisition
+# optimizer's scoring batch and the Pallas tile edge.
+M = 128
+
+# (N, D) buckets: N covers the growth of the sample set over a
+# 1000-iteration run; D covers the paper's search spaces (2-D diagnostics,
+# ResNet 3-D, LeNet 5-D).
+BUCKETS_FULL = [
+    (n, d)
+    for d in (2, 3, 5)
+    for n in (64, 128, 256, 512, 1024)
+]
+BUCKETS_QUICK = [(64, 2), (64, 5), (128, 3)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n: int, d: int, m: int = M) -> str:
+    """Lower gp_score for one (N, D) bucket to HLO text."""
+    f64 = jnp.float64
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, f64)  # noqa: E731
+    lowered = jax.jit(gp_score).lower(
+        spec((n, d)),      # x_train
+        spec((n, n)),      # l_factor
+        spec((n,)),        # alpha
+        spec((n,)),        # mask
+        spec((m, d)),      # cand
+        spec(()),          # best_f
+        spec(()),          # xi
+        spec(()),          # mean_offset
+    )
+    return to_hlo_text(lowered)
+
+
+def artifact_name(n: int, d: int, m: int = M) -> str:
+    return f"gp_score_n{n}_d{d}_m{m}.hlo.txt"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="emit only the small CI bucket set")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    buckets = BUCKETS_QUICK if args.quick else BUCKETS_FULL
+    manifest = {"m": M, "buckets": [], "format": "hlo-text",
+                "kernel": {"kind": "matern52", "variance": 1.0,
+                           "length_scale": 1.0}}
+    for n, d in buckets:
+        text = lower_bucket(n, d)
+        name = artifact_name(n, d)
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["buckets"].append({"n": n, "d": d, "m": M, "file": name})
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(buckets)} artifacts + manifest to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

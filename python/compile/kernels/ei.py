@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernel: fused Expected Improvement.
+
+Elementwise over the candidate batch: given posterior mean/variance and the
+incumbent, produce EI (paper Eq. 11, Jones/Mockus form). Pure VPU work —
+one fused multiply/exp/erf chain per lane, no memory traffic beyond the
+three M-vectors, so the kernel exists to keep the whole scoring pipeline
+inside one lowered module rather than for FLOP throughput.
+
+``interpret=True`` as everywhere (CPU PJRT cannot run Mosaic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INV_SQRT2 = 2.0 ** -0.5
+INV_SQRT_2PI = float(1.0 / (2.0 * jnp.pi) ** 0.5)
+
+# Lane-block size for the 1-D grid.
+BLOCK = 128
+
+
+def _erf_approx(x):
+    """Abramowitz–Stegun 7.1.26 rational erf, |err| < 1.5e-7 — well below
+    f32 resolution for the EI decision.
+
+    Deliberately NOT ``jax.lax.erf``: modern StableHLO→HLO conversion emits
+    a first-class ``erf`` opcode that the ``xla`` crate's bundled
+    xla_extension 0.5.1 text parser rejects ("Unknown opcode: erf"); this
+    expansion lowers to mul/add/exp which every XLA version parses.
+    """
+    a1, a2, a3 = 0.254829592, -0.284496736, 1.421413741
+    a4, a5, p = -1.453152027, 1.061405429, 0.3275911
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + p * ax)
+    poly = ((((a5 * t + a4) * t + a3) * t + a2) * t + a1) * t
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def _ei_block_kernel(mu_ref, var_ref, best_ref, xi_ref, out_ref):
+    mu = mu_ref[...]
+    var = var_ref[...]
+    best_f = best_ref[0]
+    xi = xi_ref[0]
+    sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+    gamma = mu - best_f - xi
+    safe = jnp.where(sigma > 1e-12, sigma, 1.0)
+    z = gamma / safe
+    cdf = 0.5 * (1.0 + _erf_approx(z * INV_SQRT2))
+    pdf = jnp.exp(-0.5 * z * z) * INV_SQRT_2PI
+    ei = gamma * cdf + safe * pdf
+    out_ref[...] = jnp.where(sigma > 1e-12, jnp.maximum(ei, 0.0), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def expected_improvement(mu, var, best_f, xi, block=BLOCK):
+    """EI over a candidate batch. ``mu``/``var`` are ``[M]``; ``best_f`` and
+    ``xi`` are scalars (passed as rank-1 size-1 arrays to sit in SMEM-like
+    operands)."""
+    (m,) = mu.shape
+    block = min(block, m)
+    assert m % block == 0, f"M={m} not a multiple of block={block}"
+    best_arr = jnp.reshape(jnp.asarray(best_f, dtype=mu.dtype), (1,))
+    xi_arr = jnp.reshape(jnp.asarray(xi, dtype=mu.dtype), (1,))
+    return pl.pallas_call(
+        _ei_block_kernel,
+        grid=(m // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), mu.dtype),
+        interpret=True,
+    )(mu, var, best_arr, xi_arr)

@@ -1,0 +1,72 @@
+"""Layer-1 Pallas kernel: tiled Matérn-5/2 cross-covariance.
+
+Computes ``K*ᵀ[m, n] = κ(cand_m, x_train_n)`` for a batch of M candidates
+against N training points, tiled ``(BM × BN)`` so each instance touches one
+VMEM-resident output tile and two small operand slabs.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the squared distance is
+expanded as ``‖a‖² + ‖b‖² − 2aᵀb`` so the inner product runs on the MXU as
+a ``[BM, D] × [D, BN]`` contraction; the Matérn polynomial+exp tail is VPU
+elementwise work fused onto the same tile. With BM = BN = 128 and D ≤ 8 the
+tile working set is < 0.3 MiB — far under the ~16 MiB VMEM budget, so the
+grid is compute-bound on the exp, not on HBM↔VMEM traffic.
+
+Always lowered with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md), and interpret-mode
+lowering produces plain HLO that XLA fuses well.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT5 = 5.0 ** 0.5
+
+# Tile sizes. 128 matches the MXU systolic-array edge; candidates and
+# training points are padded to multiples of these by the caller (aot.py
+# only emits bucketed shapes that divide evenly).
+BM = 128
+BN = 128
+
+
+def _matern52_tile_kernel(cand_ref, train_ref, out_ref, *, variance, length_scale):
+    """One (BM × BN) tile: distances via MXU-friendly expansion, then the
+    Matérn-5/2 response."""
+    a = cand_ref[...]            # [BM, D]
+    b = train_ref[...]           # [BN, D]
+    a_n2 = jnp.sum(a * a, axis=1, keepdims=True)        # [BM, 1]
+    b_n2 = jnp.sum(b * b, axis=1, keepdims=True).T      # [1, BN]
+    # MXU contraction; negative round-off clamped before the sqrt
+    d2 = jnp.maximum(a_n2 + b_n2 - 2.0 * jnp.dot(a, b.T), 0.0)
+    d = jnp.sqrt(d2) / length_scale
+    t = SQRT5 * d
+    out_ref[...] = variance * (1.0 + t + (5.0 / 3.0) * d * d) * jnp.exp(-t)
+
+
+@functools.partial(jax.jit, static_argnames=("variance", "length_scale", "bm", "bn"))
+def matern52_cross(cand, x_train, variance=1.0, length_scale=1.0, bm=BM, bn=BN):
+    """Tiled cross-covariance ``[M, N]``; shapes must divide the tile grid
+    (the AOT buckets guarantee this; tests exercise ragged shapes through
+    the reference instead)."""
+    m, d = cand.shape
+    n, d2 = x_train.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, f"shape ({m},{n}) not tiled by ({bm},{bn})"
+    kernel = functools.partial(
+        _matern52_tile_kernel, variance=float(variance), length_scale=float(length_scale)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), cand.dtype),
+        interpret=True,
+    )(cand, x_train)

@@ -1,0 +1,82 @@
+"""Layer-2 JAX model: batched GP posterior scoring (paper Alg. 1 lines
+4–6 + Eq. 11), calling the Layer-1 Pallas kernels.
+
+``gp_score`` is the compute hot-spot the Rust coordinator offloads: given a
+Cholesky factor ``L`` (maintained incrementally on the Rust side via the
+paper's Alg. 3), the weights ``α``, and a batch of ``M`` candidate points,
+produce posterior mean, variance and Expected Improvement per candidate.
+
+Static shapes only (AOT): the Rust runtime pads the live GP state into the
+nearest size bucket:
+
+* ``x_train`` padded rows — arbitrary values, killed by ``mask``;
+* ``l_factor`` padded rows — zeros with a unit diagonal, so the triangular
+  solve leaves padded coordinates at 0;
+* ``alpha`` padded entries — zeros.
+
+With that padding, the padded subspace contributes exactly nothing to
+either the mean or the variance, which the pytest suite asserts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ei import expected_improvement
+from .kernels.matern import matern52_cross
+
+
+def solve_lower_loop(l, b):
+    """Forward substitution ``L X = B`` (``L`` lower-triangular ``[N,N]``,
+    ``B`` ``[N,M]``) as a ``fori_loop`` of masked row updates.
+
+    Deliberately NOT ``jax.scipy.linalg.solve_triangular``: on CPU that
+    lowers to a ``lapack_strsm_ffi`` custom-call (API_VERSION_TYPED_FFI)
+    which the ``xla`` crate's bundled xla_extension 0.5.1 cannot compile.
+    This loop lowers to ``while`` + ``dynamic-(update-)slice`` — opcodes
+    every XLA version supports — at the same O(N²M) flop count.
+    """
+    n = l.shape[0]
+    row_idx = jnp.arange(n)
+
+    def body(i, x):
+        li = jax.lax.dynamic_slice_in_dim(l, i, 1, axis=0)          # [1, N]
+        # only already-solved rows (j < i) contribute
+        solved = jnp.where((row_idx < i)[:, None], x, 0.0)          # [N, M]
+        s = li @ solved                                             # [1, M]
+        bi = jax.lax.dynamic_slice_in_dim(b, i, 1, axis=0)          # [1, M]
+        lii = jax.lax.dynamic_slice(l, (i, i), (1, 1))              # [1, 1]
+        xi = (bi - s) / lii
+        return jax.lax.dynamic_update_slice_in_dim(x, xi, i, axis=0)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def gp_score(x_train, l_factor, alpha, mask, cand, best_f, xi, mean_offset,
+             *, variance=1.0, length_scale=1.0):
+    """Posterior + EI for a candidate batch.
+
+    Args:
+      x_train: ``[N, D]`` training inputs (padded to the bucket size N).
+      l_factor: ``[N, N]`` lower Cholesky factor of ``K_y`` (padded).
+      alpha: ``[N]`` weights ``K_y⁻¹ (y − μ₀)`` (padded with zeros).
+      mask: ``[N]`` 1.0 for live rows, 0.0 for padding.
+      cand: ``[M, D]`` candidate points.
+      best_f, xi, mean_offset: scalars (incumbent, EI trade-off, prior mean).
+      variance, length_scale: kernel hyper-parameters, baked at trace time —
+        the lazy GP freezes them (paper §3.3), which is precisely what makes
+        AOT compilation of this graph sound.
+
+    Returns:
+      ``(mu[M], var[M], ei[M])``.
+    """
+    # L1 kernel: K*ᵀ ∈ [M, N] cross-covariance on the MXU-friendly path
+    kstar = matern52_cross(cand, x_train, variance=variance, length_scale=length_scale)
+    kstar = kstar * mask[None, :]
+    # Alg. 1 line 4: mean
+    mu = kstar @ alpha + mean_offset
+    # Alg. 1 lines 5–6: v = L⁻¹ k*, var = κ(x*,x*) − vᵀv
+    v = solve_lower_loop(l_factor, kstar.T)
+    var = jnp.maximum(variance - jnp.sum(v * v, axis=0), 0.0)
+    # L1 kernel: fused EI tail
+    ei = expected_improvement(mu, var, best_f, xi)
+    return mu, var, ei

@@ -1,0 +1,13 @@
+"""Make the build-time package importable when pytest runs from python/."""
+
+import os
+import sys
+
+# The build-time stack is f64 end-to-end (the AOT artifacts are lowered in
+# f64 — see compile/aot.py); enable x64 before jax initializes anywhere.
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,15 @@
+"""Tiny numpy forward-substitution helper (scipy is not a dependency)."""
+
+import numpy as np
+
+
+def solve_lower(l, b):
+    """Solve ``L X = B`` for lower-triangular ``L`` (multi-RHS), f64."""
+    l = np.asarray(l, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    n = l.shape[0]
+    x = b.copy()
+    for i in range(n):
+        x[i] -= l[i, :i] @ x[:i]
+        x[i] /= l[i, i]
+    return x

@@ -1,0 +1,57 @@
+"""AOT lowering smoke tests: the HLO-text bridge the Rust runtime consumes."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile.aot import artifact_name, lower_bucket, BUCKETS_QUICK
+
+
+def test_lower_bucket_emits_hlo_text():
+    text = lower_bucket(64, 2)
+    assert text.startswith("HloModule")
+    # the triangular solve of Alg. 1 line 5 lowers to a while loop (no
+    # lapack custom-call — xla_extension 0.5.1 can't compile TYPED_FFI)
+    assert "while" in text
+    assert "custom-call" not in text
+    # the EI tail must NOT use the erf opcode (xla_extension 0.5.1's text
+    # parser rejects it) — the kernel expands erf to mul/add/exp instead
+    assert " erf(" not in text
+    assert "exponential" in text or "exp" in text
+
+
+def test_artifact_names_stable():
+    assert artifact_name(256, 5) == "gp_score_n256_d5_m128.hlo.txt"
+
+
+@pytest.mark.parametrize("n,d", BUCKETS_QUICK)
+def test_quick_buckets_lower(n, d):
+    text = lower_bucket(n, d)
+    assert len(text) > 1000
+    # static shapes visible in the module signature
+    assert f"f64[{n},{d}]" in text
+    assert f"f64[{n},{n}]" in text
+
+
+def test_cli_quick_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    repo_python = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--quick"],
+        cwd=repo_python,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["m"] == 128
+    assert len(manifest["buckets"]) == len(BUCKETS_QUICK)
+    for b in manifest["buckets"]:
+        assert (out / b["file"]).exists()
+        assert (out / b["file"]).read_text().startswith("HloModule")

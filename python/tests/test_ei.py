@@ -1,0 +1,77 @@
+"""Pallas EI kernel vs the pure-jnp reference."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ei import expected_improvement
+from compile.kernels.ref import ei_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("m", [128, 256, 512])
+def test_matches_reference(m):
+    rng = np.random.default_rng(m)
+    mu = jnp.asarray(rng.uniform(-3, 3, m), dtype=jnp.float64)
+    var = jnp.asarray(rng.uniform(0, 4, m), dtype=jnp.float64)
+    got = expected_improvement(mu, var, 0.5, 0.01)
+    want = ei_ref(mu, var, 0.5, 0.01)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-6)
+
+
+@hypothesis.settings(deadline=None, max_examples=30)
+@hypothesis.given(
+    best_f=st.floats(-10.0, 10.0),
+    xi=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_reference_hypothesis(best_f, xi, seed):
+    rng = np.random.default_rng(seed)
+    mu = jnp.asarray(rng.uniform(-12, 12, 128), dtype=jnp.float64)
+    var = jnp.asarray(rng.uniform(0, 9, 128), dtype=jnp.float64)
+    got = expected_improvement(mu, var, best_f, xi)
+    want = ei_ref(mu, var, best_f, xi)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=2e-6)
+
+
+def test_zero_variance_gives_zero_ei():
+    mu = jnp.linspace(-2, 2, 128, dtype=jnp.float64)
+    var = jnp.zeros(128, dtype=jnp.float64)
+    got = np.asarray(expected_improvement(mu, var, 0.0, 0.0))
+    np.testing.assert_array_equal(got, np.zeros(128))
+
+
+def test_nonnegative():
+    rng = np.random.default_rng(7)
+    mu = jnp.asarray(rng.uniform(-100, 100, 256), dtype=jnp.float64)
+    var = jnp.asarray(rng.uniform(0, 100, 256), dtype=jnp.float64)
+    got = np.asarray(expected_improvement(mu, var, 50.0, 0.1))
+    assert (got >= 0.0).all()
+
+
+def test_monotone_in_mean():
+    mu = jnp.linspace(-5, 5, 128, dtype=jnp.float64)
+    var = jnp.full(128, 1.0, dtype=jnp.float64)
+    got = np.asarray(expected_improvement(mu, var, 0.0, 0.0))
+    assert (np.diff(got) >= -1e-6).all()
+
+
+def test_far_above_incumbent_tends_to_gamma():
+    # for μ ≫ f', EI → γ = μ − f' − ξ
+    mu = jnp.full(128, 100.0, dtype=jnp.float64)
+    var = jnp.full(128, 1.0, dtype=jnp.float64)
+    got = np.asarray(expected_improvement(mu, var, 0.0, 0.0))
+    np.testing.assert_allclose(got, 100.0, rtol=1e-5)
+
+
+def test_ragged_length_falls_back_to_single_block():
+    rng = np.random.default_rng(9)
+    mu = jnp.asarray(rng.uniform(-3, 3, 100), dtype=jnp.float64)
+    var = jnp.asarray(rng.uniform(0, 4, 100), dtype=jnp.float64)
+    got = expected_improvement(mu, var, 0.25, 0.01)
+    want = ei_ref(mu, var, 0.25, 0.01)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=2e-6)

@@ -1,0 +1,102 @@
+"""L2 gp_score vs the reference and vs a from-scratch numpy GP, incl. the
+padding/masking contract the Rust runtime relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import gp_score_ref, matern52_cross_ref
+from compile.model import gp_score
+
+jax.config.update("jax_platform_name", "cpu")
+
+N, M, D = 128, 128, 3
+
+
+def make_gp_state(rng, n_live, n_bucket, d):
+    """Build a live GP state (numpy, f64) and its padded f32 bucket form."""
+    x = rng.uniform(-2, 2, (n_live, d))
+    y = np.sin(x.sum(axis=1))
+    k = np.array(matern52_cross_ref(jnp.asarray(x), jnp.asarray(x)), dtype=np.float64)
+    k[np.diag_indices_from(k)] += 1e-6
+    l = np.linalg.cholesky(k)
+    offset = y.mean()
+    alpha = np.linalg.solve(k, y - offset)
+
+    # pad into the bucket: unit-diagonal L rows, zero alpha, zero mask
+    xp = np.zeros((n_bucket, d))
+    xp[:n_live] = x
+    lp = np.eye(n_bucket)
+    lp[:n_live, :n_live] = l
+    ap = np.zeros(n_bucket)
+    ap[:n_live] = alpha
+    mask = np.zeros(n_bucket)
+    mask[:n_live] = 1.0
+    f32 = lambda a: jnp.asarray(a, dtype=jnp.float64)  # noqa: E731
+    return (x, l, alpha, offset), (f32(xp), f32(lp), f32(ap), f32(mask))
+
+
+def test_matches_reference_full_bucket():
+    rng = np.random.default_rng(11)
+    (_, _, _, offset), (xp, lp, ap, mask) = make_gp_state(rng, N, N, D)
+    cand = jnp.asarray(rng.uniform(-2, 2, (M, D)), dtype=jnp.float64)
+    got = gp_score(xp, lp, ap, mask, cand, 0.8, 0.01, offset)
+    want = gp_score_ref(xp, lp, ap, mask, cand, 0.8, 0.01, offset)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_live", [1, 7, 40, 127])
+def test_padding_is_inert(n_live):
+    """Scoring a padded state must equal scoring the unpadded state."""
+    rng = np.random.default_rng(100 + n_live)
+    (x, l, alpha, offset), (xp, lp, ap, mask) = make_gp_state(rng, n_live, N, D)
+    cand_np = rng.uniform(-2, 2, (M, D))
+    cand = jnp.asarray(cand_np, dtype=jnp.float64)
+
+    mu_pad, var_pad, ei_pad = gp_score(xp, lp, ap, mask, cand, 0.5, 0.01, offset)
+
+    # exact (f64, numpy) posterior on the live state
+    ks = np.asarray(
+        matern52_cross_ref(jnp.asarray(cand_np), jnp.asarray(x)), dtype=np.float64
+    )
+    mu_true = ks @ alpha + offset
+    from scipy_free_solve import solve_lower  # local helper below
+
+    v = solve_lower(l, ks.T)
+    var_true = np.maximum(1.0 - (v * v).sum(axis=0), 0.0)
+
+    np.testing.assert_allclose(mu_pad, mu_true, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(var_pad, var_true, rtol=2e-3, atol=2e-3)
+    assert np.asarray(ei_pad).min() >= 0.0
+
+
+def test_variance_at_training_points_near_zero():
+    rng = np.random.default_rng(13)
+    (x, _, _, offset), (xp, lp, ap, mask) = make_gp_state(rng, 32, N, D)
+    cand = jnp.asarray(np.vstack([x[:16], rng.uniform(5, 6, (M - 16, D))]),
+                       dtype=jnp.float64)
+    _, var, _ = gp_score(xp, lp, ap, mask, cand, 0.0, 0.01, offset)
+    var = np.asarray(var)
+    assert (var[:16] < 1e-2).all(), var[:16]
+    assert (var[16:] > 0.5).all()  # far from data ⇒ near prior variance
+
+
+def test_mean_far_away_returns_prior_offset():
+    rng = np.random.default_rng(17)
+    (_, _, _, offset), (xp, lp, ap, mask) = make_gp_state(rng, 32, N, D)
+    cand = jnp.asarray(rng.uniform(50, 60, (M, D)), dtype=jnp.float64)
+    mu, var, _ = gp_score(xp, lp, ap, mask, cand, 0.0, 0.01, offset)
+    np.testing.assert_allclose(mu, offset, atol=1e-3)
+    np.testing.assert_allclose(var, 1.0, atol=1e-3)
+
+
+def test_jit_and_eager_agree():
+    rng = np.random.default_rng(19)
+    (_, _, _, offset), (xp, lp, ap, mask) = make_gp_state(rng, 64, N, D)
+    cand = jnp.asarray(rng.uniform(-2, 2, (M, D)), dtype=jnp.float64)
+    eager = gp_score(xp, lp, ap, mask, cand, 0.3, 0.01, offset)
+    jitted = jax.jit(gp_score)(xp, lp, ap, mask, cand, 0.3, 0.01, offset)
+    for e, j in zip(eager, jitted):
+        np.testing.assert_allclose(e, j, rtol=1e-5, atol=1e-6)

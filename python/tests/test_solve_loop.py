@@ -1,0 +1,72 @@
+"""The fori_loop forward substitution (compile/model.py) vs numpy.
+
+This loop replaces jax.scipy's solve_triangular (whose CPU lowering is a
+LAPACK FFI custom-call that xla_extension 0.5.1 cannot compile), so it gets
+its own correctness sweep.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import solve_lower_loop
+from scipy_free_solve import solve_lower
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_lower(rng, n):
+    l = np.tril(rng.uniform(-1.0, 1.0, (n, n)))
+    l[np.diag_indices(n)] = rng.uniform(0.5, 2.0, n)  # well-conditioned
+    return l
+
+
+def test_identity_is_noop():
+    b = np.arange(12, dtype=np.float64).reshape(4, 3)
+    x = solve_lower_loop(jnp.eye(4), jnp.asarray(b))
+    np.testing.assert_allclose(x, b, rtol=1e-14)
+
+
+def test_matches_numpy_forward_substitution():
+    rng = np.random.default_rng(31)
+    for n, m in [(1, 1), (5, 3), (32, 8), (128, 128)]:
+        l = random_lower(rng, n)
+        b = rng.uniform(-2, 2, (n, m))
+        got = solve_lower_loop(jnp.asarray(l), jnp.asarray(b))
+        want = solve_lower(l, b)
+        np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(
+    n=st.integers(1, 48),
+    m=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_numpy_hypothesis(n, m, seed):
+    rng = np.random.default_rng(seed)
+    l = random_lower(rng, n)
+    b = rng.uniform(-3, 3, (n, m))
+    got = solve_lower_loop(jnp.asarray(l), jnp.asarray(b))
+    want = solve_lower(l, b)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-11)
+
+
+def test_residual_is_tiny():
+    rng = np.random.default_rng(37)
+    n, m = 64, 7
+    l = random_lower(rng, n)
+    b = rng.uniform(-1, 1, (n, m))
+    x = np.asarray(solve_lower_loop(jnp.asarray(l), jnp.asarray(b)))
+    np.testing.assert_allclose(l @ x, b, rtol=1e-9, atol=1e-11)
+
+
+def test_jit_matches_eager():
+    rng = np.random.default_rng(41)
+    l = jnp.asarray(random_lower(rng, 24))
+    b = jnp.asarray(rng.uniform(-1, 1, (24, 4)))
+    np.testing.assert_allclose(
+        jax.jit(solve_lower_loop)(l, b), solve_lower_loop(l, b), rtol=1e-14
+    )

@@ -1,0 +1,68 @@
+//! **Fig. 1** — computational overhead of hyper-parameter optimization on
+//! (simulated) LeNet/MNIST with 5 hyper-parameters: per-iteration time
+//! split into training cost vs GP overhead, naive baseline vs lazy GP.
+//!
+//! The paper's observation: the naive baseline's per-iteration time grows
+//! to ~4.5× its initial value by iteration 1000 while the lazy GP stays
+//! flat. Output: target/experiments/fig1_{naive,lazy}.csv.
+
+use lazygp::bo::{BoConfig, BoDriver, InitDesign};
+use lazygp::metrics::Trace;
+use lazygp::objectives::trainer::LeNetMnistSim;
+use lazygp::util::timer::fmt_duration_s;
+
+fn run(label: &str, cfg: BoConfig, iters: usize) -> Trace {
+    let mut d = BoDriver::new(cfg, Box::new(LeNetMnistSim::new()));
+    d.run(iters);
+    let t = Trace::from_history(label, d.history());
+    t.write_csv(&format!("target/experiments/fig1_{label}.csv")).unwrap();
+    t
+}
+
+fn main() {
+    let quick = std::env::var("LAZYGP_BENCH_QUICK").is_ok();
+    let iters = if quick { 120 } else { 400 };
+    println!("## Fig. 1 — per-iteration overhead, simulated LeNet/MNIST, {iters} iterations");
+    println!("(naive arm re-fits kernel parameters every step, as the paper's baseline does)\n");
+
+    let lazy = run("lazy", BoConfig::lazy().with_seed(1).with_init(InitDesign::Random(1)), iters);
+    let naive = run("naive", BoConfig::exact().with_seed(1).with_init(InitDesign::Random(1)), iters);
+
+    let window = (iters / 10).max(1);
+    let avg_gp = |t: &Trace, from: usize, to: usize| -> f64 {
+        let pts = &t.points[from.min(t.points.len())..to.min(t.points.len())];
+        if pts.is_empty() {
+            return 0.0;
+        }
+        pts.iter().map(|p| p.gp_seconds).sum::<f64>() / pts.len() as f64
+    };
+    println!("per-iteration GP overhead (training itself is a constant ≈8 s simulated):");
+    println!("{:>12} {:>14} {:>14} {:>10}", "iterations", "naive", "lazy", "ratio");
+    for chunk in (0..iters).step_by(window * 2) {
+        let n_gp = avg_gp(&naive, chunk, chunk + window);
+        let l_gp = avg_gp(&lazy, chunk, chunk + window);
+        println!(
+            "{:>12} {:>14} {:>14} {:>9.1}×",
+            format!("{}..{}", chunk, chunk + window),
+            fmt_duration_s(n_gp),
+            fmt_duration_s(l_gp),
+            n_gp / l_gp.max(1e-12)
+        );
+    }
+
+    let first = avg_gp(&naive, 0, window).max(1e-12);
+    let last = avg_gp(&naive, iters - window, iters);
+    println!("\nnaive per-iteration GP overhead growth over the run: {:.1}× (paper: ~4.5× at 1000 iters)", last / first);
+    println!(
+        "total GP overhead: naive {} vs lazy {} ({:.0}× reduction)",
+        fmt_duration_s(naive.gp_seconds_total()),
+        fmt_duration_s(lazy.gp_seconds_total()),
+        naive.gp_seconds_total() / lazy.gp_seconds_total().max(1e-12)
+    );
+    println!(
+        "simulated wall-clock incl. training: naive {} vs lazy {}",
+        fmt_duration_s(naive.summarize().sim_cost_total + naive.gp_seconds_total()),
+        fmt_duration_s(lazy.summarize().sim_cost_total + lazy.gp_seconds_total()),
+    );
+    println!("csv: target/experiments/fig1_{{naive,lazy}}.csv");
+}

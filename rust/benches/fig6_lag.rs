@@ -1,0 +1,67 @@
+//! **Fig. 6** — the lagging-factor trade-off: computational time and
+//! iterations-to-fixed-accuracy as a function of the lag `l`, on the 5-D
+//! Levy function with 200 seed points (the paper's setting).
+//!
+//! `l = 1` is the exact baseline (re-fit + full factorization every step);
+//! `l = ∞` (printed as 0) is the fully lazy GP. Expect time to fall and
+//! iterations-to-accuracy to rise with l — with the jumps in time caused
+//! by the full factorizations at lag boundaries, as the paper notes.
+//!
+//! Output: target/experiments/fig6.csv.
+
+use lazygp::bo::{BoConfig, BoDriver, InitDesign};
+use lazygp::metrics::CsvWriter;
+use lazygp::objectives::levy::Levy;
+use lazygp::util::timer::fmt_duration_s;
+
+fn main() {
+    let quick = std::env::var("LAZYGP_BENCH_QUICK").is_ok();
+    let (iters, seeds, accuracy) = if quick { (60, 50, -2.0) } else { (200, 200, -1.0) };
+    let lags: &[usize] = if quick { &[1, 3, 10, 0] } else { &[1, 2, 3, 5, 10, 25, 50, 100, 0] };
+    println!("## Fig. 6 — lag sweep on 5-D Levy, {seeds} seeds, {iters} iterations, target best ≥ {accuracy}");
+    println!("{:>6} {:>14} {:>16} {:>12}", "lag", "gp_time", "iters_to_acc", "final_best");
+
+    let mut w = CsvWriter::create(
+        "target/experiments/fig6.csv",
+        &["lag", "gp_seconds", "iters_to_accuracy", "final_best", "full_refactorizations"],
+    )
+    .unwrap();
+
+    for &lag in lags {
+        let cfg = if lag == 1 {
+            BoConfig::exact()
+        } else {
+            BoConfig::lazy_lagged(lag)
+        }
+        .with_seed(6)
+        .with_init(InitDesign::Lhs(seeds));
+        let mut d = BoDriver::new(cfg, Box::new(Levy::new(5)));
+        d.ensure_seeded();
+        let mut reached = None;
+        for i in 1..=iters {
+            d.step();
+            if reached.is_none() && d.best().unwrap().value >= accuracy {
+                reached = Some(i);
+            }
+        }
+        let gp_s = d.gp_seconds_total();
+        let best = d.best().unwrap().value;
+        println!(
+            "{:>6} {:>14} {:>16} {:>12.3}",
+            if lag == 0 { "∞".to_string() } else { lag.to_string() },
+            fmt_duration_s(gp_s),
+            reached.map_or("—".into(), |i| i.to_string()),
+            best
+        );
+        w.write_row_f64(&[
+            lag as f64,
+            gp_s,
+            reached.map_or(-1.0, |i| i as f64),
+            best,
+            0.0,
+        ])
+        .unwrap();
+    }
+    w.flush().unwrap();
+    println!("\ncsv: target/experiments/fig6.csv");
+}

@@ -1,0 +1,128 @@
+//! **§Perf** — microbenchmarks of every hot path, feeding the
+//! EXPERIMENTS.md §Perf table: incremental extension, full factorizations
+//! (blocked vs unblocked), triangular solves, border-vector assembly,
+//! batched candidate scoring (native vs XLA artifact), and one full
+//! suggest() call at realistic state sizes.
+//!
+//! Output: target/experiments/perf_hotpath.csv.
+
+use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
+use lazygp::gp::lazy::LazyGp;
+use lazygp::gp::Surrogate;
+use lazygp::kernels::{cov_matrix, CovCache, Kernel};
+use lazygp::linalg::cholesky::{cholesky_in_place, cholesky_unblocked};
+use lazygp::linalg::{GrowingCholesky, Matrix};
+use lazygp::runtime::{score_native, GpScorer, PjrtRuntime};
+use lazygp::util::bench::{black_box, BenchConfig, Bencher};
+use lazygp::util::rng::Pcg64;
+
+fn spd(rng: &mut Pcg64, kernel: &Kernel, n: usize, d: usize) -> (Vec<Vec<f64>>, Matrix) {
+    let xs: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.uniform(-5.0, 5.0)).collect()).collect();
+    let k = cov_matrix(kernel, &xs);
+    (xs, k)
+}
+
+fn main() {
+    let mut b = Bencher::with_config(BenchConfig::default());
+    let kernel = Kernel::paper_default();
+    let mut rng = Pcg64::new(99);
+
+    b.group("extend (Alg. 3, O(n²))");
+    for n in [128usize, 512, 1024, 2048] {
+        let (_, k) = spd(&mut rng, &kernel, n, 5);
+        let base = GrowingCholesky::from_spd(&Matrix::from_fn(n - 1, n - 1, |i, j| k[(i, j)])).unwrap();
+        let p: Vec<f64> = (0..n - 1).map(|i| k[(n - 1, i)]).collect();
+        let c = k[(n - 1, n - 1)];
+        // time ONLY the extension — the state clone needed to reset the
+        // factor between iterations is excluded (it was 4× the extension
+        // itself at n=2048 and polluted the first §Perf baseline)
+        b.bench_timed(&format!("n={n}"), || {
+            let mut g = base.clone();
+            let t = std::time::Instant::now();
+            black_box(g.extend(&p, c));
+            t.elapsed().as_secs_f64()
+        });
+    }
+
+    b.group("full cholesky (Alg. 2, O(n³))");
+    for n in [256usize, 512, 1024] {
+        let (_, k) = spd(&mut rng, &kernel, n, 5);
+        b.bench(&format!("unblocked n={n}"), || {
+            let mut a = k.clone();
+            cholesky_unblocked(&mut a).unwrap();
+            black_box(&a);
+        });
+        b.bench(&format!("blocked   n={n}"), || {
+            let mut a = k.clone();
+            cholesky_in_place(&mut a).unwrap();
+            black_box(&a);
+        });
+    }
+
+    b.group("triangular solves");
+    for n in [512usize, 2048] {
+        let (_, k) = spd(&mut rng, &kernel, n, 5);
+        let g = GrowingCholesky::from_spd(&k).unwrap();
+        let y: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        b.bench(&format!("solve_spd n={n}"), || {
+            black_box(g.solve_spd(&y));
+        });
+    }
+
+    b.group("border vector (kernel row)");
+    for n in [1024usize, 4096] {
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..5).map(|_| rng.uniform(-5.0, 5.0)).collect()).collect();
+        let mut cache = CovCache::new();
+        for x in &xs {
+            cache.push_with_border(&kernel, x);
+        }
+        let probe: Vec<f64> = (0..5).map(|_| rng.uniform(-5.0, 5.0)).collect();
+        b.bench(&format!("n={n}"), || {
+            black_box(cache.border(&kernel, &probe));
+        });
+    }
+
+    b.group("candidate scoring (256 cands)");
+    let mut gp = LazyGp::paper_default();
+    for _ in 0..500 {
+        let x: Vec<f64> = (0..5).map(|_| rng.uniform(-10.0, 10.0)).collect();
+        let y = x.iter().sum::<f64>().sin();
+        gp.observe(&x, y);
+    }
+    let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, gp.incumbent().unwrap().1);
+    let cands: Vec<Vec<f64>> =
+        (0..256).map(|_| (0..5).map(|_| rng.uniform(-10.0, 10.0)).collect()).collect();
+    b.bench("native n=500", || {
+        black_box(score_native(&gp, &acq, &cands));
+    });
+    if let Ok(rt) = PjrtRuntime::new_default() {
+        let scorer = GpScorer::new(rt);
+        // warm the executable cache outside the timed region
+        let _ = scorer.score_batch(&gp, &acq, 0.01, &cands).unwrap();
+        b.bench("xla    n=500", || {
+            black_box(scorer.score_batch(&gp, &acq, 0.01, &cands).unwrap());
+        });
+    } else {
+        println!("(xla scoring skipped: artifacts not built)");
+    }
+
+    b.group("one BO suggest() at n=500");
+    {
+        use lazygp::acquisition::optim::OptimConfig;
+        use lazygp::bo::{BoConfig, BoDriver, InitDesign};
+        use lazygp::objectives::levy::Levy;
+        let cfg = BoConfig::lazy()
+            .with_seed(3)
+            .with_init(InitDesign::Lhs(500))
+            .with_optim(OptimConfig::fast());
+        let mut d = BoDriver::new(cfg, Box::new(Levy::new(5)));
+        d.ensure_seeded();
+        b.bench("suggest", || {
+            black_box(d.suggest());
+        });
+    }
+
+    b.write_csv("target/experiments/perf_hotpath.csv").unwrap();
+    println!("\ncsv: target/experiments/perf_hotpath.csv");
+}

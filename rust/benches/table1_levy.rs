@@ -1,0 +1,55 @@
+//! **Table 1** — accuracy-improvement milestones on the 5-D Levy function:
+//! naive vs optimized (lazy) Cholesky, with 1 random seed and with 100
+//! seed points, printed in the paper's row format.
+//!
+//! Output: target/experiments/table1_{arm}_{seeds}.csv.
+
+use lazygp::bo::{BoConfig, BoDriver, InitDesign};
+use lazygp::metrics::Trace;
+use lazygp::objectives::levy::Levy;
+use lazygp::util::bench::render_table;
+
+fn arm(label: &str, cfg: BoConfig, iters: usize) -> Vec<(usize, f64)> {
+    let mut d = BoDriver::new(cfg, Box::new(Levy::new(5)));
+    d.run(iters);
+    Trace::from_history(label, d.history())
+        .write_csv(&format!("target/experiments/table1_{label}.csv"))
+        .unwrap();
+    d.milestones()
+}
+
+fn rows(ms: &[(usize, f64)]) -> Vec<Vec<String>> {
+    // the paper prints the last handful of improvements
+    ms.iter()
+        .rev()
+        .take(8)
+        .rev()
+        .map(|(i, v)| vec![i.to_string(), format!("{v:.2}")])
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::var("LAZYGP_BENCH_QUICK").is_ok();
+    let iters = if quick { 100 } else { 400 };
+    println!("## Table 1 — 5-D Levy milestones, naive vs lazy, 1 vs 100 seeds ({iters} iterations)");
+
+    let naive_1 = arm("naive_seed1", BoConfig::exact().with_seed(10).with_init(InitDesign::Random(1)), iters);
+    let naive_100 = arm("naive_seed100", BoConfig::exact().with_seed(10).with_init(InitDesign::Lhs(100)), iters);
+    let lazy_1 = arm("lazy_seed1", BoConfig::lazy().with_seed(10).with_init(InitDesign::Random(1)), iters);
+    let lazy_100 = arm("lazy_seed100", BoConfig::lazy().with_seed(10).with_init(InitDesign::Lhs(100)), iters);
+
+    println!("{}", render_table("Naive Cholesky — 1 seed", &["Iteration", "Best"], &rows(&naive_1)));
+    println!("{}", render_table("Naive Cholesky — 100 seeds", &["Iteration", "Best"], &rows(&naive_100)));
+    println!("{}", render_table("Optimized Cholesky — 1 seed", &["Iteration", "Best"], &rows(&lazy_1)));
+    println!("{}", render_table("Optimized Cholesky — 100 seeds", &["Iteration", "Best"], &rows(&lazy_100)));
+
+    let final_of = |ms: &[(usize, f64)]| ms.last().map_or(f64::NEG_INFINITY, |m| m.1);
+    println!(
+        "final best — naive(1): {:.2}, naive(100): {:.2}, lazy(1): {:.2}, lazy(100): {:.2}  (optimum 0)",
+        final_of(&naive_1),
+        final_of(&naive_100),
+        final_of(&lazy_1),
+        final_of(&lazy_100)
+    );
+    println!("csv: target/experiments/table1_*.csv");
+}

@@ -1,0 +1,63 @@
+//! **Table 3** — accuracy milestones for simulated ResNet32/CIFAR10 HPO
+//! (3 hyper-parameters), sequential: naive vs lazy. The paper reports the
+//! lazy GP reaching the naive endpoint (0.79) in ~1/3 of the iterations
+//! and a better final accuracy (0.81).
+//!
+//! Output: target/experiments/table3_{naive,lazy}.csv.
+
+use lazygp::bo::{BoConfig, BoDriver, InitDesign};
+use lazygp::metrics::Trace;
+use lazygp::objectives::trainer::ResNetCifarSim;
+use lazygp::util::bench::render_table;
+use lazygp::util::timer::fmt_duration_s;
+
+fn main() {
+    let quick = std::env::var("LAZYGP_BENCH_QUICK").is_ok();
+    let iters = if quick { 80 } else { 300 };
+    let target = 0.79; // the naive arm's endpoint in the paper
+    println!("## Table 3 — simulated ResNet32/CIFAR10 milestones, sequential ({iters} iterations)");
+
+    let mut naive = BoDriver::new(
+        BoConfig::exact().with_seed(13).with_init(InitDesign::Random(1)),
+        Box::new(ResNetCifarSim::new()),
+    );
+    naive.run(iters);
+    Trace::from_history("naive", naive.history())
+        .write_csv("target/experiments/table3_naive.csv")
+        .unwrap();
+
+    let mut lazy = BoDriver::new(
+        BoConfig::lazy().with_seed(13).with_init(InitDesign::Random(1)),
+        Box::new(ResNetCifarSim::new()),
+    );
+    lazy.run(iters);
+    Trace::from_history("lazy", lazy.history())
+        .write_csv("target/experiments/table3_lazy.csv")
+        .unwrap();
+
+    let rows = |d: &BoDriver| -> Vec<Vec<String>> {
+        d.milestones().iter().map(|(i, v)| vec![i.to_string(), format!("{v:.2}")]).collect()
+    };
+    println!("{}", render_table("Naive Cholesky", &["Iteration", "Accuracy"], &rows(&naive)));
+    println!("{}", render_table("Optimized Cholesky", &["Iteration", "Accuracy"], &rows(&lazy)));
+
+    let to_target = |d: &BoDriver| d.history().iter().find(|r| r.best >= target).map(|r| r.iter);
+    let (nt, lt) = (to_target(&naive), to_target(&lazy));
+    println!(
+        "iterations to ≥ {target}: naive {} vs lazy {}",
+        nt.map_or("—".into(), |i| i.to_string()),
+        lt.map_or("—".into(), |i| i.to_string())
+    );
+    if let (Some(n), Some(l)) = (nt, lt) {
+        // each iteration is one ~190 s training: iteration ratio ≈ time ratio
+        println!("iteration ratio {:.1}× (paper: ~3× — 176 vs 62 iterations)", n as f64 / l as f64);
+    }
+    println!(
+        "final: naive {:.3} vs lazy {:.3} | GP overhead {} vs {}",
+        naive.best().unwrap().value,
+        lazy.best().unwrap().value,
+        fmt_duration_s(naive.gp_seconds_total()),
+        fmt_duration_s(lazy.gp_seconds_total()),
+    );
+    println!("csv: target/experiments/table3_{{naive,lazy}}.csv");
+}

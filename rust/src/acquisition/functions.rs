@@ -1,0 +1,163 @@
+//! Acquisition functions over a GP posterior.
+
+use crate::util::stats::{norm_cdf, norm_pdf};
+
+/// Which acquisition function to use. EI is the paper's choice ("we focus
+/// in the following on expected improvement, but without loss of
+/// generality" — §3.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AcquisitionKind {
+    /// Expected Improvement with exploration trade-off ξ (Eq. 11).
+    Ei { xi: f64 },
+    /// Probability of Improvement with trade-off ξ.
+    Pi { xi: f64 },
+    /// Upper Confidence Bound `μ + β σ` (maximization form).
+    Ucb { beta: f64 },
+}
+
+impl AcquisitionKind {
+    /// The paper's default: EI with a small exploration bonus.
+    pub fn paper_default() -> Self {
+        AcquisitionKind::Ei { xi: 0.01 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AcquisitionKind::Ei { .. } => "ei",
+            AcquisitionKind::Pi { .. } => "pi",
+            AcquisitionKind::Ucb { .. } => "ucb",
+        }
+    }
+}
+
+/// A configured acquisition: kind + the current incumbent `f'_n` (Eq. 9).
+#[derive(Debug, Clone, Copy)]
+pub struct Acquisition {
+    pub kind: AcquisitionKind,
+    /// best observed value so far (`f'_n = max_m f(x_m)`)
+    pub best_f: f64,
+}
+
+impl Acquisition {
+    pub fn new(kind: AcquisitionKind, best_f: f64) -> Self {
+        Self { kind, best_f }
+    }
+
+    /// Score a point from its posterior `(mean, variance)`.
+    ///
+    /// EI (Eq. 11, standard Jones/Mockus form — the paper's printed case
+    /// split is garbled, see DESIGN.md §5):
+    /// `γ = μ(x) − f'_n − ξ`, `Z = γ/σ`,
+    /// `EI = γ Φ(Z) + σ φ(Z)` if `σ > 0` else `0`.
+    #[inline]
+    pub fn score(&self, mean: f64, variance: f64) -> f64 {
+        let sigma = variance.max(0.0).sqrt();
+        match self.kind {
+            AcquisitionKind::Ei { xi } => {
+                if sigma <= 1e-12 {
+                    return 0.0;
+                }
+                let gamma = mean - self.best_f - xi;
+                let z = gamma / sigma;
+                (gamma * norm_cdf(z) + sigma * norm_pdf(z)).max(0.0)
+            }
+            AcquisitionKind::Pi { xi } => {
+                if sigma <= 1e-12 {
+                    return if mean > self.best_f + xi { 1.0 } else { 0.0 };
+                }
+                norm_cdf((mean - self.best_f - xi) / sigma)
+            }
+            AcquisitionKind::Ucb { beta } => mean + beta * sigma,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ei(best: f64) -> Acquisition {
+        Acquisition::new(AcquisitionKind::Ei { xi: 0.0 }, best)
+    }
+
+    #[test]
+    fn ei_zero_variance_is_zero() {
+        assert_eq!(ei(0.0).score(10.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn ei_increases_with_mean() {
+        let a = ei(0.0);
+        let lo = a.score(0.0, 1.0);
+        let hi = a.score(1.0, 1.0);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn ei_increases_with_variance_below_incumbent() {
+        // below the incumbent, only uncertainty creates improvement hope
+        let a = ei(5.0);
+        let small = a.score(0.0, 0.25);
+        let large = a.score(0.0, 4.0);
+        assert!(large > small);
+    }
+
+    #[test]
+    fn ei_known_value_at_mean_equal_best() {
+        // γ=0 ⇒ EI = σ φ(0) = σ/√(2π)
+        let a = ei(1.0);
+        let sigma: f64 = 2.0;
+        let want = sigma * (1.0 / (2.0 * std::f64::consts::PI).sqrt());
+        assert!((a.score(1.0, sigma * sigma) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ei_nonnegative_everywhere() {
+        let a = ei(0.5);
+        for m in -5..=5 {
+            for v in 0..=5 {
+                let s = a.score(m as f64, v as f64 * 0.5);
+                assert!(s >= 0.0, "EI({m},{v}) = {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn xi_reduces_ei() {
+        let plain = Acquisition::new(AcquisitionKind::Ei { xi: 0.0 }, 0.0);
+        let explore = Acquisition::new(AcquisitionKind::Ei { xi: 0.5 }, 0.0);
+        assert!(explore.score(1.0, 1.0) < plain.score(1.0, 1.0));
+    }
+
+    #[test]
+    fn pi_is_probability() {
+        let a = Acquisition::new(AcquisitionKind::Pi { xi: 0.0 }, 0.0);
+        for m in -3..=3 {
+            let p = a.score(m as f64, 1.0);
+            assert!((0.0..=1.0).contains(&p));
+        }
+        // far above the incumbent ⇒ ~1, far below ⇒ ~0
+        assert!(a.score(10.0, 0.01) > 0.999);
+        assert!(a.score(-10.0, 0.01) < 0.001);
+    }
+
+    #[test]
+    fn pi_zero_variance_step_function() {
+        let a = Acquisition::new(AcquisitionKind::Pi { xi: 0.1 }, 1.0);
+        assert_eq!(a.score(2.0, 0.0), 1.0);
+        assert_eq!(a.score(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn ucb_is_mean_plus_beta_sigma() {
+        let a = Acquisition::new(AcquisitionKind::Ucb { beta: 2.0 }, f64::NEG_INFINITY);
+        assert!((a.score(1.0, 4.0) - (1.0 + 2.0 * 2.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(AcquisitionKind::paper_default().name(), "ei");
+        assert_eq!(AcquisitionKind::Pi { xi: 0.0 }.name(), "pi");
+        assert_eq!(AcquisitionKind::Ucb { beta: 1.0 }.name(), "ucb");
+    }
+}

@@ -1,0 +1,22 @@
+//! Acquisition functions and their optimizer.
+//!
+//! * [`functions`] — Expected Improvement (paper §3.2.1, Eq. 11, with the
+//!   exploration trade-off ξ), Probability of Improvement, and Upper
+//!   Confidence Bound.
+//! * [`optim`] — derivative-free maximization of the acquisition surface:
+//!   seeded multi-start (uniform + Latin hypercube + jittered incumbent)
+//!   followed by Nelder–Mead refinement of the best starts, "initialization
+//!   with different seed points and several restarts" exactly as §3.2.1
+//!   describes.
+//! * [`topk`] — extraction of the **top-t local maxima** (paper §3.4 /
+//!   Fig. 3 bottom): the refined starts are deduplicated by basin (spatial
+//!   distance) and the best `t` survivors are proposed for parallel
+//!   evaluation.
+
+pub mod functions;
+pub mod optim;
+pub mod topk;
+
+pub use functions::{Acquisition, AcquisitionKind};
+pub use optim::{maximize, nelder_mead, OptimConfig};
+pub use topk::top_local_maxima;

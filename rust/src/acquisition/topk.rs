@@ -1,0 +1,119 @@
+//! Top-t local-maxima extraction (paper §3.4, Fig. 3 bottom).
+//!
+//! "It is now straight forward to not only evaluate the best suggestion of
+//! the acquisition function but to assess the function values at all local
+//! maxima" — the parallel coordinator trains one model per surviving local
+//! maximum. Refined multi-start results that converged into the same basin
+//! are deduplicated by normalized distance, keeping the higher-scoring
+//! representative.
+
+/// Deduplicate `(x, score)` pairs by spatial proximity and return at most
+/// `t`, best score first.
+///
+/// `min_dist` is measured in *normalized* coordinates (each dimension
+/// scaled by its box edge), so one threshold works across heterogeneous
+/// hyper-parameter ranges — e.g. learning rate in `[1e-4, 0.1]` next to
+/// momentum in `[0, 0.99]` (the §4.2 search space).
+pub fn top_local_maxima(
+    mut results: Vec<(Vec<f64>, f64)>,
+    bounds: &[(f64, f64)],
+    t: usize,
+    min_dist: f64,
+) -> Vec<(Vec<f64>, f64)> {
+    results.retain(|(_, v)| v.is_finite());
+    results.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut kept: Vec<(Vec<f64>, f64)> = Vec::with_capacity(t);
+    for (x, v) in results {
+        let dup = kept.iter().any(|(kx, _)| normalized_dist(kx, &x, bounds) < min_dist);
+        if !dup {
+            kept.push((x, v));
+            if kept.len() == t {
+                break;
+            }
+        }
+    }
+    kept
+}
+
+/// Euclidean distance after scaling each axis to `[0,1]` by its box edge.
+pub fn normalized_dist(a: &[f64], b: &[f64], bounds: &[(f64, f64)]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), bounds.len());
+    a.iter()
+        .zip(b)
+        .zip(bounds)
+        .map(|((ai, bi), &(lo, hi))| {
+            let w = (hi - lo).max(1e-300);
+            let d = (ai - bi) / w;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B: [(f64, f64); 1] = [(0.0, 10.0)];
+
+    #[test]
+    fn keeps_best_first() {
+        let res = vec![
+            (vec![1.0], 0.5),
+            (vec![5.0], 0.9),
+            (vec![9.0], 0.1),
+        ];
+        let top = top_local_maxima(res, &B, 3, 0.01);
+        assert_eq!(top.len(), 3);
+        assert_eq!(top[0].0, vec![5.0]);
+        assert!(top[0].1 >= top[1].1 && top[1].1 >= top[2].1);
+    }
+
+    #[test]
+    fn dedups_same_basin() {
+        // three near-identical converged points + one distant one
+        let res = vec![
+            (vec![5.0], 0.9),
+            (vec![5.01], 0.89),
+            (vec![5.02], 0.88),
+            (vec![1.0], 0.5),
+        ];
+        let top = top_local_maxima(res, &B, 4, 0.05);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].0, vec![5.0]); // best representative survives
+        assert_eq!(top[1].0, vec![1.0]);
+    }
+
+    #[test]
+    fn truncates_to_t() {
+        let res: Vec<_> = (0..20).map(|i| (vec![i as f64 * 0.5], 1.0 - i as f64 * 0.01)).collect();
+        let top = top_local_maxima(res, &B, 5, 0.01);
+        assert_eq!(top.len(), 5);
+    }
+
+    #[test]
+    fn drops_non_finite_scores() {
+        let res = vec![(vec![1.0], f64::NAN), (vec![2.0], 0.5)];
+        let top = top_local_maxima(res, &B, 3, 0.01);
+        assert_eq!(top.len(), 1);
+        assert_eq!(top[0].0, vec![2.0]);
+    }
+
+    #[test]
+    fn normalized_distance_accounts_for_scale() {
+        // lr axis [1e-4, 0.1] vs momentum axis [0, 0.99]: a difference of
+        // 0.05 in lr is *huge* (half the range) while 0.05 in momentum is
+        // small — normalized distance must reflect that
+        let bounds = [(1e-4, 0.1), (0.0, 0.99)];
+        let lr_far = normalized_dist(&[0.01, 0.5], &[0.06, 0.5], &bounds);
+        let mom_near = normalized_dist(&[0.01, 0.5], &[0.01, 0.55], &bounds);
+        assert!(lr_far > 5.0 * mom_near);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let top = top_local_maxima(Vec::new(), &B, 5, 0.1);
+        assert!(top.is_empty());
+    }
+}

@@ -1,0 +1,445 @@
+//! The sequential BO loop and its batched suggestion API.
+
+use crate::acquisition::functions::{Acquisition, AcquisitionKind};
+use crate::acquisition::optim::OptimConfig;
+use crate::acquisition::topk::top_local_maxima;
+use crate::gp::exact::{ExactGp, ExactGpConfig};
+use crate::gp::lazy::{LazyGp, LazyGpConfig};
+use crate::gp::Surrogate;
+use crate::kernels::Kernel;
+use crate::objectives::{Evaluation, Objective};
+use crate::util::rng::{latin_hypercube, Pcg64};
+use crate::util::timer::Stopwatch;
+
+/// Which surrogate the driver instantiates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SurrogateChoice {
+    /// The paper's lazy GP; `lag = 0` means never re-fit (fully lazy),
+    /// `lag = l` re-fits every `l` iterations (Fig. 6).
+    Lazy { lag: usize },
+    /// The naive baseline: re-fit + full re-factorization per step.
+    Exact,
+}
+
+/// Initial design for seeding the surrogate before the loop starts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InitDesign {
+    /// `n` uniform random points (paper's "1 random seed" setting uses 1).
+    Random(usize),
+    /// `n` Latin-hypercube points (space-filling; for the "100 seeds"
+    /// setting this matches the paper's "broad initialization").
+    Lhs(usize),
+}
+
+impl InitDesign {
+    pub fn count(&self) -> usize {
+        match *self {
+            InitDesign::Random(n) | InitDesign::Lhs(n) => n,
+        }
+    }
+}
+
+/// Full driver configuration.
+#[derive(Debug, Clone)]
+pub struct BoConfig {
+    pub surrogate: SurrogateChoice,
+    pub kernel: Kernel,
+    pub acquisition: AcquisitionKind,
+    pub optim: OptimConfig,
+    pub init: InitDesign,
+    pub seed: u64,
+    /// min normalized distance between batch suggestions (§3.4 dedup)
+    pub batch_min_dist: f64,
+}
+
+impl BoConfig {
+    /// The paper's lazy configuration (frozen Matérn-5/2, EI).
+    pub fn lazy() -> Self {
+        Self {
+            surrogate: SurrogateChoice::Lazy { lag: 0 },
+            kernel: Kernel::paper_default(),
+            acquisition: AcquisitionKind::paper_default(),
+            optim: OptimConfig::fast(),
+            init: InitDesign::Random(1),
+            seed: 0,
+            batch_min_dist: 0.05,
+        }
+    }
+
+    /// The lagged variant of Fig. 6.
+    pub fn lazy_lagged(lag: usize) -> Self {
+        Self { surrogate: SurrogateChoice::Lazy { lag }, ..Self::lazy() }
+    }
+
+    /// The naive baseline of every paper table.
+    pub fn exact() -> Self {
+        Self { surrogate: SurrogateChoice::Exact, ..Self::lazy() }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_init(mut self, init: InitDesign) -> Self {
+        self.init = init;
+        self
+    }
+
+    pub fn with_acquisition(mut self, acq: AcquisitionKind) -> Self {
+        self.acquisition = acq;
+        self
+    }
+
+    pub fn with_optim(mut self, optim: OptimConfig) -> Self {
+        self.optim = optim;
+        self
+    }
+
+    fn build_surrogate(&self) -> Box<dyn Surrogate> {
+        match self.surrogate {
+            SurrogateChoice::Lazy { lag } => Box::new(LazyGp::new(
+                LazyGpConfig { kernel: self.kernel, ..LazyGpConfig::default() }.with_lag(lag),
+            )),
+            SurrogateChoice::Exact => Box::new(ExactGp::new(ExactGpConfig {
+                kernel: self.kernel,
+                ..Default::default()
+            })),
+        }
+    }
+}
+
+/// One iteration's record — the raw material for every table/figure.
+#[derive(Debug, Clone)]
+pub struct IterationRecord {
+    /// 1-based optimization iteration (seed evaluations are iteration 0)
+    pub iter: usize,
+    pub x: Vec<f64>,
+    pub y: f64,
+    /// incumbent after this iteration
+    pub best: f64,
+    /// seconds spent in the GP update for this iteration
+    pub gp_seconds: f64,
+    /// seconds spent maximizing the acquisition
+    pub acq_seconds: f64,
+    /// simulated objective cost (e.g. NN training time)
+    pub sim_cost_s: f64,
+}
+
+/// Best-so-far summary.
+#[derive(Debug, Clone)]
+pub struct Best {
+    pub x: Vec<f64>,
+    pub value: f64,
+    /// iteration at which the incumbent was found (0 = during seeding)
+    pub iteration: usize,
+}
+
+/// The sequential BO driver.
+pub struct BoDriver {
+    pub config: BoConfig,
+    objective: Box<dyn Objective>,
+    surrogate: Box<dyn Surrogate>,
+    rng: Pcg64,
+    history: Vec<IterationRecord>,
+    best: Option<Best>,
+    iter: usize,
+    seeded: bool,
+}
+
+impl BoDriver {
+    pub fn new(config: BoConfig, objective: Box<dyn Objective>) -> Self {
+        let rng = Pcg64::new(config.seed);
+        let surrogate = config.build_surrogate();
+        Self {
+            config,
+            objective,
+            surrogate,
+            rng,
+            history: Vec::new(),
+            best: None,
+            iter: 0,
+            seeded: false,
+        }
+    }
+
+    pub fn objective(&self) -> &dyn Objective {
+        self.objective.as_ref()
+    }
+
+    pub fn surrogate(&self) -> &dyn Surrogate {
+        self.surrogate.as_ref()
+    }
+
+    pub fn history(&self) -> &[IterationRecord] {
+        &self.history
+    }
+
+    pub fn best(&self) -> Option<&Best> {
+        self.best.as_ref()
+    }
+
+    pub fn rng_mut(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    /// Evaluate the initial design (idempotent: runs once).
+    pub fn ensure_seeded(&mut self) {
+        if self.seeded {
+            return;
+        }
+        self.seeded = true;
+        let bounds = self.objective.bounds().to_vec();
+        let points: Vec<Vec<f64>> = match self.config.init {
+            InitDesign::Random(n) => (0..n).map(|_| self.rng.point_in(&bounds)).collect(),
+            InitDesign::Lhs(n) => latin_hypercube(&mut self.rng, n, &bounds),
+        };
+        for x in points {
+            let eval = self.objective.eval(&x, &mut self.rng);
+            self.record(x, eval, 0.0);
+        }
+    }
+
+    fn record(&mut self, x: Vec<f64>, eval: Evaluation, acq_seconds: f64) {
+        let gp_before = self.surrogate.update_seconds();
+        self.surrogate.observe(&x, eval.value);
+        let gp_seconds = self.surrogate.update_seconds() - gp_before;
+        if self.best.as_ref().map_or(true, |b| eval.value > b.value) {
+            self.best = Some(Best { x: x.clone(), value: eval.value, iteration: self.iter });
+        }
+        let best = self.best.as_ref().unwrap().value;
+        self.history.push(IterationRecord {
+            iter: self.iter,
+            x,
+            y: eval.value,
+            best,
+            gp_seconds,
+            acq_seconds,
+            sim_cost_s: eval.sim_cost_s,
+        });
+    }
+
+    /// Maximize the acquisition over the surrogate posterior and return the
+    /// single best suggestion.
+    pub fn suggest(&mut self) -> Vec<f64> {
+        self.suggest_batch(1).pop().expect("suggest: empty batch")
+    }
+
+    /// §3.4: return up to `t` deduplicated local maxima of the acquisition
+    /// surface, best first.
+    pub fn suggest_batch(&mut self, t: usize) -> Vec<Vec<f64>> {
+        self.ensure_seeded();
+        let bounds = self.objective.bounds().to_vec();
+        let best_f = self.surrogate.incumbent().map_or(f64::NEG_INFINITY, |(_, y)| y);
+        let acq = Acquisition::new(self.config.acquisition, best_f);
+        let surrogate = &*self.surrogate;
+        let f = |x: &[f64]| {
+            let (m, v) = surrogate.predict(x);
+            acq.score(m, v)
+        };
+        // widen the multi-start budget for batch suggestions so t distinct
+        // basins have a chance to surface
+        let mut cfg = self.config.optim.clone();
+        if t > 1 {
+            cfg.restarts = cfg.restarts.max(t * 3);
+            cfg.candidates = cfg.candidates.max(t * 64);
+        }
+        let incumbent: Option<Vec<f64>> =
+            self.surrogate.incumbent().map(|(x, _)| x.to_vec());
+        // score the seed candidates in ONE batched posterior pass (§Perf:
+        // multi-RHS solve / the XLA artifact path), then refine only the
+        // best `restarts` starts with Nelder–Mead on the scalar closure
+        let seeds = crate::acquisition::optim::seed_candidates(
+            &mut self.rng,
+            &bounds,
+            &cfg,
+            incumbent.as_deref(),
+        );
+        let preds = self.surrogate.predict_batch(&seeds);
+        let mut scored: Vec<(Vec<f64>, f64)> = seeds
+            .into_iter()
+            .zip(preds)
+            .map(|(x, (m, v))| (x, acq.score(m, v)))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.truncate(cfg.restarts.max(1));
+        let all: Vec<(Vec<f64>, f64)> = scored
+            .into_iter()
+            .map(|(x, _)| {
+                crate::acquisition::optim::nelder_mead(&f, &x, &bounds, cfg.nm_iters, cfg.nm_scale)
+            })
+            .collect();
+        let mut picked = top_local_maxima(all, &bounds, t, self.config.batch_min_dist);
+        // pad with random exploration if dedup collapsed the set
+        while picked.len() < t {
+            let x = self.rng.point_in(&bounds);
+            let s = f(&x);
+            picked.push((x, s));
+        }
+        picked.into_iter().map(|(x, _)| x).collect()
+    }
+
+    /// Feed back an externally evaluated observation (used by the parallel
+    /// coordinator, which owns the objective evaluations).
+    pub fn observe_external(&mut self, x: Vec<f64>, eval: Evaluation) {
+        self.ensure_seeded();
+        self.iter += 1;
+        self.record(x, eval, 0.0);
+    }
+
+    /// One sequential BO iteration: suggest → evaluate → observe.
+    pub fn step(&mut self) -> &IterationRecord {
+        self.ensure_seeded();
+        self.iter += 1;
+        let sw = Stopwatch::new();
+        let x = self.suggest();
+        let acq_seconds = sw.elapsed_s();
+        let eval = self.objective.eval(&x, &mut self.rng);
+        self.record(x, eval, acq_seconds);
+        self.history.last().unwrap()
+    }
+
+    /// Run `iters` sequential iterations; returns the final best.
+    pub fn run(&mut self, iters: usize) -> Best {
+        self.ensure_seeded();
+        for _ in 0..iters {
+            self.step();
+        }
+        self.best.clone().expect("run: no observations")
+    }
+
+    /// Improvement milestones `(iteration, best)` — the rows of paper
+    /// Tables 1–4.
+    pub fn milestones(&self) -> Vec<(usize, f64)> {
+        let mut out = Vec::new();
+        let mut best = f64::NEG_INFINITY;
+        for rec in &self.history {
+            if rec.y > best {
+                best = rec.y;
+                out.push((rec.iter, best));
+            }
+        }
+        out
+    }
+
+    /// Total GP-update seconds (the Fig. 1/5 overhead quantity).
+    pub fn gp_seconds_total(&self) -> f64 {
+        self.surrogate.update_seconds()
+    }
+
+    /// Total simulated objective cost.
+    pub fn sim_cost_total(&self) -> f64 {
+        self.history.iter().map(|r| r.sim_cost_s).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectives::suite::{Branin, Sphere};
+    use crate::objectives::levy::Levy;
+
+    fn fast(mut config: BoConfig) -> BoConfig {
+        config.optim = OptimConfig { candidates: 128, restarts: 3, nm_iters: 25, nm_scale: 0.08 };
+        config
+    }
+
+    #[test]
+    fn optimizes_sphere_quickly() {
+        let cfg = fast(BoConfig::lazy().with_seed(3).with_init(InitDesign::Lhs(5)));
+        let mut d = BoDriver::new(cfg, Box::new(Sphere::new(2)));
+        let best = d.run(25);
+        // sphere max is 0 at the origin; BO should get close
+        assert!(best.value > -0.5, "best={:?}", best);
+    }
+
+    #[test]
+    fn optimizes_branin() {
+        let cfg = fast(BoConfig::lazy().with_seed(7).with_init(InitDesign::Lhs(8)));
+        let mut d = BoDriver::new(cfg, Box::new(Branin::new()));
+        let best = d.run(35);
+        assert!(best.value > -1.0, "branin best={}", best.value); // optimum ≈ −0.398
+    }
+
+    #[test]
+    fn exact_surrogate_also_works() {
+        let cfg = fast(BoConfig::exact().with_seed(11).with_init(InitDesign::Lhs(5)));
+        let mut d = BoDriver::new(cfg, Box::new(Sphere::new(2)));
+        let best = d.run(15);
+        assert!(best.value > -2.0, "best={}", best.value);
+    }
+
+    #[test]
+    fn history_and_milestones_consistent() {
+        let cfg = fast(BoConfig::lazy().with_seed(13).with_init(InitDesign::Random(3)));
+        let mut d = BoDriver::new(cfg, Box::new(Levy::new(2)));
+        d.run(10);
+        let hist = d.history();
+        assert_eq!(hist.len(), 3 + 10);
+        // best column is monotone non-decreasing
+        for w in hist.windows(2) {
+            assert!(w[1].best >= w[0].best);
+        }
+        let ms = d.milestones();
+        assert!(!ms.is_empty());
+        for w in ms.windows(2) {
+            assert!(w[1].0 > w[0].0 || w[1].0 == w[0].0);
+            assert!(w[1].1 > w[0].1);
+        }
+        // last milestone equals final best
+        assert_eq!(ms.last().unwrap().1, d.best().unwrap().value);
+    }
+
+    #[test]
+    fn suggest_batch_is_deduplicated_and_padded() {
+        let cfg = fast(BoConfig::lazy().with_seed(17).with_init(InitDesign::Lhs(6)));
+        let mut d = BoDriver::new(cfg, Box::new(Levy::new(2)));
+        let batch = d.suggest_batch(6);
+        assert_eq!(batch.len(), 6);
+        let bounds = d.objective().bounds();
+        for i in 0..batch.len() {
+            for (v, &(lo, hi)) in batch[i].iter().zip(bounds) {
+                assert!((lo..=hi).contains(v));
+            }
+        }
+    }
+
+    #[test]
+    fn observe_external_advances_state() {
+        let cfg = fast(BoConfig::lazy().with_seed(19).with_init(InitDesign::Random(2)));
+        let mut d = BoDriver::new(cfg, Box::new(Sphere::new(2)));
+        d.ensure_seeded();
+        let n0 = d.surrogate().len();
+        d.observe_external(vec![0.1, 0.1], Evaluation { value: -0.02, sim_cost_s: 1.5 });
+        assert_eq!(d.surrogate().len(), n0 + 1);
+        assert!((d.sim_cost_total() - 1.5).abs() < 1e-12);
+        assert_eq!(d.best().unwrap().value, -0.02);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let cfg = fast(BoConfig::lazy().with_seed(23).with_init(InitDesign::Lhs(4)));
+            let mut d = BoDriver::new(cfg, Box::new(Levy::new(3)));
+            d.run(8).value
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn seeding_is_idempotent() {
+        let cfg = fast(BoConfig::lazy().with_seed(29).with_init(InitDesign::Random(5)));
+        let mut d = BoDriver::new(cfg, Box::new(Sphere::new(2)));
+        d.ensure_seeded();
+        d.ensure_seeded();
+        assert_eq!(d.surrogate().len(), 5);
+    }
+
+    #[test]
+    fn gp_seconds_accumulate() {
+        let cfg = fast(BoConfig::lazy().with_seed(31).with_init(InitDesign::Random(2)));
+        let mut d = BoDriver::new(cfg, Box::new(Sphere::new(2)));
+        d.run(5);
+        assert!(d.gp_seconds_total() > 0.0);
+    }
+}

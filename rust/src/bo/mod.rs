@@ -1,0 +1,11 @@
+//! Bayesian-optimization drivers.
+//!
+//! [`BoDriver`] runs the sequential loop of paper §3.1: seed → fit
+//! surrogate → maximize acquisition → evaluate objective → observe →
+//! repeat. [`BoDriver::suggest_batch`] exposes the §3.4 batched variant
+//! (top-t local maxima of the acquisition surface) consumed by the
+//! [`crate::coordinator`] for parallel trial execution.
+
+pub mod driver;
+
+pub use driver::{BoConfig, BoDriver, Best, InitDesign, IterationRecord, SurrogateChoice};

@@ -1,0 +1,371 @@
+//! Typed experiment configuration + named presets.
+//!
+//! Every paper table/figure is regenerated from a [`Preset`]; the launcher
+//! (`lazygp run --preset table1`) and the benches both resolve through this
+//! module so EXPERIMENTS.md numbers come from exactly one source of truth.
+
+use super::json::{Json, JsonError};
+use crate::acquisition::functions::AcquisitionKind;
+use crate::acquisition::optim::OptimConfig;
+use crate::bo::driver::{BoConfig, InitDesign, SurrogateChoice};
+use crate::kernels::{Kernel, KernelKind, KernelParams};
+
+/// A fully-specified experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub objective: String,
+    pub surrogate: SurrogateChoice,
+    pub kernel_kind: KernelKind,
+    pub kernel_params: KernelParams,
+    pub acquisition: AcquisitionKind,
+    pub init: InitDesign,
+    pub iters: usize,
+    pub seed: u64,
+    /// parallel workers (1 = sequential; 20 = paper §4.4)
+    pub workers: usize,
+    pub optim: OptimConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "adhoc".into(),
+            objective: "levy5".into(),
+            surrogate: SurrogateChoice::Lazy { lag: 0 },
+            kernel_kind: KernelKind::Matern52,
+            kernel_params: KernelParams::paper_default(),
+            acquisition: AcquisitionKind::paper_default(),
+            init: InitDesign::Random(1),
+            iters: 100,
+            seed: 0,
+            workers: 1,
+            optim: OptimConfig::fast(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Convert to a [`BoConfig`] for the sequential driver.
+    pub fn bo_config(&self) -> BoConfig {
+        BoConfig {
+            surrogate: self.surrogate,
+            kernel: Kernel::new(self.kernel_kind, self.kernel_params),
+            acquisition: self.acquisition,
+            optim: self.optim.clone(),
+            init: self.init,
+            seed: self.seed,
+            batch_min_dist: 0.05,
+        }
+    }
+
+    // ---------- JSON ----------
+
+    pub fn to_json(&self) -> Json {
+        let surrogate = match self.surrogate {
+            SurrogateChoice::Lazy { lag } => Json::obj(vec![
+                ("kind", Json::Str("lazy".into())),
+                ("lag", Json::Num(lag as f64)),
+            ]),
+            SurrogateChoice::Exact => Json::obj(vec![("kind", Json::Str("exact".into()))]),
+        };
+        let acquisition = match self.acquisition {
+            AcquisitionKind::Ei { xi } => Json::obj(vec![
+                ("kind", Json::Str("ei".into())),
+                ("xi", Json::Num(xi)),
+            ]),
+            AcquisitionKind::Pi { xi } => Json::obj(vec![
+                ("kind", Json::Str("pi".into())),
+                ("xi", Json::Num(xi)),
+            ]),
+            AcquisitionKind::Ucb { beta } => Json::obj(vec![
+                ("kind", Json::Str("ucb".into())),
+                ("beta", Json::Num(beta)),
+            ]),
+        };
+        let init = match self.init {
+            InitDesign::Random(n) => Json::obj(vec![
+                ("kind", Json::Str("random".into())),
+                ("n", Json::Num(n as f64)),
+            ]),
+            InitDesign::Lhs(n) => Json::obj(vec![
+                ("kind", Json::Str("lhs".into())),
+                ("n", Json::Num(n as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("objective", Json::Str(self.objective.clone())),
+            ("surrogate", surrogate),
+            ("kernel", Json::obj(vec![
+                ("kind", Json::Str(self.kernel_kind.name().into())),
+                ("variance", Json::Num(self.kernel_params.variance)),
+                ("length_scale", Json::Num(self.kernel_params.length_scale)),
+                ("noise", Json::Num(self.kernel_params.noise)),
+            ])),
+            ("acquisition", acquisition),
+            ("init", init),
+            ("iters", Json::Num(self.iters as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("optim", Json::obj(vec![
+                ("candidates", Json::Num(self.optim.candidates as f64)),
+                ("restarts", Json::Num(self.optim.restarts as f64)),
+                ("nm_iters", Json::Num(self.optim.nm_iters as f64)),
+                ("nm_scale", Json::Num(self.optim.nm_scale)),
+            ])),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut cfg = ExperimentConfig::default();
+        let get_str = |j: &Json, k: &str| -> Option<String> {
+            j.get(k).and_then(|v| v.as_str()).map(str::to_string)
+        };
+        if let Some(v) = get_str(j, "name") {
+            cfg.name = v;
+        }
+        if let Some(v) = get_str(j, "objective") {
+            cfg.objective = v;
+        }
+        if let Some(s) = j.get("surrogate") {
+            match s.get("kind").and_then(|v| v.as_str()) {
+                Some("lazy") => {
+                    let lag = s.get("lag").and_then(|v| v.as_usize()).unwrap_or(0);
+                    cfg.surrogate = SurrogateChoice::Lazy { lag };
+                }
+                Some("exact") => cfg.surrogate = SurrogateChoice::Exact,
+                other => return Err(format!("bad surrogate kind {other:?}")),
+            }
+        }
+        if let Some(k) = j.get("kernel") {
+            if let Some(kind) = k.get("kind").and_then(|v| v.as_str()) {
+                cfg.kernel_kind =
+                    KernelKind::from_name(kind).ok_or_else(|| format!("bad kernel `{kind}`"))?;
+            }
+            if let Some(v) = k.get("variance").and_then(|v| v.as_f64()) {
+                cfg.kernel_params.variance = v;
+            }
+            if let Some(v) = k.get("length_scale").and_then(|v| v.as_f64()) {
+                cfg.kernel_params.length_scale = v;
+            }
+            if let Some(v) = k.get("noise").and_then(|v| v.as_f64()) {
+                cfg.kernel_params.noise = v;
+            }
+        }
+        if let Some(a) = j.get("acquisition") {
+            cfg.acquisition = match a.get("kind").and_then(|v| v.as_str()) {
+                Some("ei") => AcquisitionKind::Ei {
+                    xi: a.get("xi").and_then(|v| v.as_f64()).unwrap_or(0.01),
+                },
+                Some("pi") => AcquisitionKind::Pi {
+                    xi: a.get("xi").and_then(|v| v.as_f64()).unwrap_or(0.01),
+                },
+                Some("ucb") => AcquisitionKind::Ucb {
+                    beta: a.get("beta").and_then(|v| v.as_f64()).unwrap_or(2.0),
+                },
+                other => return Err(format!("bad acquisition kind {other:?}")),
+            };
+        }
+        if let Some(i) = j.get("init") {
+            let n = i.get("n").and_then(|v| v.as_usize()).unwrap_or(1);
+            cfg.init = match i.get("kind").and_then(|v| v.as_str()) {
+                Some("random") | None => InitDesign::Random(n),
+                Some("lhs") => InitDesign::Lhs(n),
+                other => return Err(format!("bad init kind {other:?}")),
+            };
+        }
+        if let Some(v) = j.get("iters").and_then(|v| v.as_usize()) {
+            cfg.iters = v;
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_u64()) {
+            cfg.seed = v;
+        }
+        if let Some(v) = j.get("workers").and_then(|v| v.as_usize()) {
+            cfg.workers = v;
+        }
+        if let Some(o) = j.get("optim") {
+            if let Some(v) = o.get("candidates").and_then(|v| v.as_usize()) {
+                cfg.optim.candidates = v;
+            }
+            if let Some(v) = o.get("restarts").and_then(|v| v.as_usize()) {
+                cfg.optim.restarts = v;
+            }
+            if let Some(v) = o.get("nm_iters").and_then(|v| v.as_usize()) {
+                cfg.optim.nm_iters = v;
+            }
+            if let Some(v) = o.get("nm_scale").and_then(|v| v.as_f64()) {
+                cfg.optim.nm_scale = v;
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_json_str(s: &str) -> Result<Self, String> {
+        let j = Json::parse(s).map_err(|e: JsonError| e.to_string())?;
+        Self::from_json(&j)
+    }
+}
+
+/// Named experiment presets, one per paper table/figure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preset {
+    /// Fig. 5 setting: 5-D Levy, lazy vs naive Cholesky timing.
+    Fig5,
+    /// Fig. 6 setting: lag sweep on 5-D Levy, 200 seeds.
+    Fig6,
+    /// Tab. 1: 5-D Levy, 1 seed and 100 seeds, naive vs lazy.
+    Table1,
+    /// Tab. 2 / Fig. 1: LeNet/MNIST simulated HPO, 5 hyper-parameters.
+    Table2,
+    /// Tab. 3: ResNet32/CIFAR10 simulated HPO, sequential.
+    Table3,
+    /// Tab. 4: ResNet32/CIFAR10 simulated HPO, parallel (20 workers).
+    Table4,
+}
+
+impl Preset {
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "fig5" => Some(Preset::Fig5),
+            "fig6" => Some(Preset::Fig6),
+            "table1" => Some(Preset::Table1),
+            "table2" | "fig1" => Some(Preset::Table2),
+            "table3" => Some(Preset::Table3),
+            "table4" => Some(Preset::Table4),
+            _ => None,
+        }
+    }
+
+    pub fn names() -> &'static [&'static str] {
+        &["fig5", "fig6", "table1", "table2", "table3", "table4"]
+    }
+
+    /// The lazy-arm config for this preset (the exact arm is derived by the
+    /// bench harness by swapping `surrogate`).
+    pub fn config(self) -> ExperimentConfig {
+        match self {
+            Preset::Fig5 => ExperimentConfig {
+                name: "fig5".into(),
+                objective: "levy5".into(),
+                iters: 1000,
+                init: InitDesign::Random(1),
+                ..Default::default()
+            },
+            Preset::Fig6 => ExperimentConfig {
+                name: "fig6".into(),
+                objective: "levy5".into(),
+                iters: 300,
+                init: InitDesign::Lhs(200),
+                surrogate: SurrogateChoice::Lazy { lag: 3 },
+                ..Default::default()
+            },
+            Preset::Table1 => ExperimentConfig {
+                name: "table1".into(),
+                objective: "levy5".into(),
+                iters: 1000,
+                init: InitDesign::Random(1),
+                ..Default::default()
+            },
+            Preset::Table2 => ExperimentConfig {
+                name: "table2".into(),
+                objective: "lenet_mnist".into(),
+                iters: 1000,
+                init: InitDesign::Random(1),
+                ..Default::default()
+            },
+            Preset::Table3 => ExperimentConfig {
+                name: "table3".into(),
+                objective: "resnet_cifar10".into(),
+                iters: 300,
+                init: InitDesign::Random(1),
+                ..Default::default()
+            },
+            Preset::Table4 => ExperimentConfig {
+                name: "table4".into(),
+                objective: "resnet_cifar10".into(),
+                iters: 300,
+                init: InitDesign::Random(1),
+                workers: 20,
+                ..Default::default()
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_default() {
+        let cfg = ExperimentConfig::default();
+        let j = cfg.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.name, cfg.name);
+        assert_eq!(back.objective, cfg.objective);
+        assert_eq!(back.surrogate, cfg.surrogate);
+        assert_eq!(back.kernel_kind, cfg.kernel_kind);
+        assert_eq!(back.iters, cfg.iters);
+        assert_eq!(back.workers, cfg.workers);
+    }
+
+    #[test]
+    fn json_roundtrip_exotic() {
+        let cfg = ExperimentConfig {
+            name: "x".into(),
+            objective: "hartmann6".into(),
+            surrogate: SurrogateChoice::Lazy { lag: 7 },
+            kernel_kind: KernelKind::Rbf,
+            kernel_params: KernelParams { variance: 2.0, length_scale: 0.5, noise: 1e-4 },
+            acquisition: AcquisitionKind::Ucb { beta: 3.0 },
+            init: InitDesign::Lhs(50),
+            iters: 77,
+            seed: 12345,
+            workers: 4,
+            optim: OptimConfig { candidates: 99, restarts: 9, nm_iters: 11, nm_scale: 0.3 },
+        };
+        let text = cfg.to_json().to_string_pretty();
+        let back = ExperimentConfig::from_json_str(&text).unwrap();
+        assert_eq!(back.surrogate, SurrogateChoice::Lazy { lag: 7 });
+        assert_eq!(back.kernel_kind, KernelKind::Rbf);
+        assert_eq!(back.kernel_params.noise, 1e-4);
+        assert_eq!(back.acquisition, AcquisitionKind::Ucb { beta: 3.0 });
+        assert_eq!(back.init, InitDesign::Lhs(50));
+        assert_eq!(back.optim.candidates, 99);
+        assert_eq!(back.seed, 12345);
+    }
+
+    #[test]
+    fn bad_json_rejected() {
+        assert!(ExperimentConfig::from_json_str("{").is_err());
+        assert!(ExperimentConfig::from_json_str(r#"{"surrogate":{"kind":"wat"}}"#).is_err());
+        assert!(ExperimentConfig::from_json_str(r#"{"kernel":{"kind":"wat"}}"#).is_err());
+        assert!(ExperimentConfig::from_json_str(r#"{"acquisition":{"kind":"wat"}}"#).is_err());
+    }
+
+    #[test]
+    fn presets_resolve() {
+        for name in Preset::names() {
+            let p = Preset::from_name(name).unwrap();
+            let cfg = p.config();
+            assert!(crate::objectives::by_name(&cfg.objective).is_some(), "{name}");
+            assert!(cfg.iters > 0);
+        }
+        assert_eq!(Preset::from_name("fig1"), Some(Preset::Table2));
+        assert!(Preset::from_name("nope").is_none());
+    }
+
+    #[test]
+    fn table4_is_parallel() {
+        assert_eq!(Preset::Table4.config().workers, 20);
+        assert_eq!(Preset::Table3.config().workers, 1);
+    }
+
+    #[test]
+    fn bo_config_reflects_choice() {
+        let mut cfg = Preset::Table1.config();
+        cfg.surrogate = SurrogateChoice::Exact;
+        assert_eq!(cfg.bo_config().surrogate, SurrogateChoice::Exact);
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment configuration.
+//!
+//! * [`json`] — a hand-rolled JSON parser/serializer (the offline crate set
+//!   has no `serde`/`serde_json`). Full JSON: objects, arrays, strings with
+//!   escapes, numbers, booleans, null; precise error positions.
+//! * [`experiment`] — typed experiment configs, their JSON (de)serialization
+//!   and the named presets that regenerate every paper table/figure.
+
+pub mod experiment;
+pub mod json;
+
+pub use experiment::{ExperimentConfig, Preset};
+pub use json::Json;

@@ -1,0 +1,359 @@
+//! The leader: batched suggestion, scatter/gather, retry, and the
+//! `t·O(n²)` posterior synchronization of paper §3.4.
+
+use std::sync::Arc;
+
+use super::messages::{Trial, TrialOutcome};
+use super::worker::{WorkerConfig, WorkerPool};
+use crate::bo::driver::{Best, BoConfig, BoDriver};
+use crate::objectives::{Evaluation, Objective};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// Coordinator configuration (on top of the BO config).
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// worker threads (paper §4.4: 20)
+    pub workers: usize,
+    /// suggestions per round `t` (paper: "the 20 best local maxima")
+    pub batch_size: usize,
+    /// real seconds slept per simulated objective second
+    pub sleep_scale: f64,
+    /// failure-injection probability per trial
+    pub fail_prob: f64,
+    /// maximum resubmissions of a failed trial before it is dropped
+    pub max_retries: u32,
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            batch_size: 4,
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+            max_retries: 2,
+            seed: 0,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// The paper's Table 4 topology: 20 workers, t = 20.
+    pub fn paper_parallel() -> Self {
+        Self { workers: 20, batch_size: 20, ..Default::default() }
+    }
+}
+
+/// Per-round telemetry.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: u64,
+    /// trials evaluated successfully this round
+    pub completed: usize,
+    /// trials dropped after exhausting retries
+    pub dropped: usize,
+    /// seconds the leader spent choosing the batch (acquisition)
+    pub suggest_seconds: f64,
+    /// seconds synchronizing the surrogate (t incremental extensions)
+    pub sync_seconds: f64,
+    /// *virtual* wall-clock for the round on the paper's testbed: the max
+    /// simulated training cost over the parallel trials + sync time
+    pub virtual_wall_s: f64,
+    /// incumbent after the round
+    pub best: f64,
+}
+
+/// Parallel BO: a [`BoDriver`] whose evaluations run on a [`WorkerPool`].
+pub struct ParallelBo {
+    driver: BoDriver,
+    pool: WorkerPool,
+    config: CoordinatorConfig,
+    rounds: Vec<RoundRecord>,
+    next_trial_id: u64,
+    virtual_seconds: f64,
+}
+
+/// Adapter sharing one objective between the leader's driver (suggestion
+/// bookkeeping only) and the workers (actual evaluation).
+struct SharedObjective(Arc<dyn Objective>);
+
+impl Objective for SharedObjective {
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+    fn bounds(&self) -> &[(f64, f64)] {
+        self.0.bounds()
+    }
+    fn eval(&self, x: &[f64], rng: &mut Pcg64) -> Evaluation {
+        self.0.eval(x, rng)
+    }
+    fn optimum(&self) -> Option<f64> {
+        self.0.optimum()
+    }
+}
+
+impl ParallelBo {
+    pub fn new(
+        bo_config: BoConfig,
+        objective: Arc<dyn Objective>,
+        config: CoordinatorConfig,
+    ) -> Self {
+        let driver =
+            BoDriver::new(bo_config, Box::new(SharedObjective(Arc::clone(&objective))));
+        let pool = WorkerPool::spawn(
+            objective,
+            WorkerConfig {
+                workers: config.workers,
+                sleep_scale: config.sleep_scale,
+                fail_prob: config.fail_prob,
+                queue_cap: (config.batch_size * 2).max(8),
+                seed: config.seed ^ 0x9e37_79b9_7f4a_7c15,
+            },
+        );
+        Self { driver, pool, config, rounds: Vec::new(), next_trial_id: 0, virtual_seconds: 0.0 }
+    }
+
+    pub fn driver(&self) -> &BoDriver {
+        &self.driver
+    }
+
+    pub fn rounds(&self) -> &[RoundRecord] {
+        &self.rounds
+    }
+
+    /// Total *virtual* wall-clock consumed so far (the paper-testbed time:
+    /// per round, the slowest parallel trial + leader sync).
+    pub fn virtual_seconds(&self) -> f64 {
+        self.virtual_seconds
+    }
+
+    /// Run one round: suggest `t`, scatter, gather (with retries), sync.
+    /// Returns the round record.
+    pub fn round(&mut self) -> &RoundRecord {
+        let round_no = self.rounds.len() as u64;
+        let t = self.config.batch_size;
+
+        let sw = Stopwatch::new();
+        let batch = self.driver.suggest_batch(t);
+        let suggest_seconds = sw.elapsed_s();
+
+        // scatter
+        let mut in_flight = 0usize;
+        for x in batch {
+            self.pool.submit(Trial { id: self.next_trial_id, round: round_no, x, attempt: 0 });
+            self.next_trial_id += 1;
+            in_flight += 1;
+        }
+
+        // gather (+ retry failed trials)
+        let mut outcomes: Vec<TrialOutcome> = Vec::with_capacity(in_flight);
+        let mut dropped = 0usize;
+        while in_flight > 0 {
+            let o = self.pool.recv();
+            in_flight -= 1;
+            match &o.result {
+                Ok(_) => outcomes.push(o),
+                Err(_) => {
+                    if o.trial.attempt < self.config.max_retries {
+                        let mut retry = o.trial.clone();
+                        retry.attempt += 1;
+                        retry.id = self.next_trial_id;
+                        self.next_trial_id += 1;
+                        self.pool.submit(retry);
+                        in_flight += 1;
+                    } else {
+                        dropped += 1;
+                    }
+                }
+            }
+        }
+
+        // synchronize: t successive incremental extensions (t·O(n²))
+        let sw = Stopwatch::new();
+        let mut max_cost = 0.0f64;
+        let completed = outcomes.len();
+        for o in outcomes {
+            let eval = o.result.expect("only Ok outcomes reach sync");
+            max_cost = max_cost.max(eval.sim_cost_s);
+            self.driver.observe_external(o.trial.x, eval);
+        }
+        let sync_seconds = sw.elapsed_s();
+
+        let virtual_wall_s = max_cost + sync_seconds + suggest_seconds;
+        self.virtual_seconds += virtual_wall_s;
+        let best = self.driver.best().map_or(f64::NEG_INFINITY, |b| b.value);
+        self.rounds.push(RoundRecord {
+            round: round_no,
+            completed,
+            dropped,
+            suggest_seconds,
+            sync_seconds,
+            virtual_wall_s,
+            best,
+        });
+        self.rounds.last().unwrap()
+    }
+
+    /// Run until `total_evals` objective evaluations have been *observed*
+    /// (matching the paper's iteration counting, which counts trainings).
+    pub fn run_until_evals(&mut self, total_evals: usize) -> Best {
+        self.driver.ensure_seeded();
+        while self.driver.history().len() < total_evals {
+            self.round();
+        }
+        self.driver.best().cloned().expect("no observations")
+    }
+
+    /// Run a fixed number of rounds.
+    pub fn run_rounds(&mut self, rounds: usize) -> Best {
+        for _ in 0..rounds {
+            self.round();
+        }
+        self.driver.best().cloned().expect("no observations")
+    }
+
+    /// Shut the pool down and return the driver for post-analysis.
+    pub fn finish(self) -> BoDriver {
+        self.pool.shutdown();
+        self.driver
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acquisition::optim::OptimConfig;
+    use crate::bo::driver::InitDesign;
+    use crate::objectives::levy::Levy;
+    use crate::objectives::suite::Sphere;
+
+    fn fast_bo(seed: u64) -> BoConfig {
+        BoConfig::lazy()
+            .with_seed(seed)
+            .with_init(InitDesign::Lhs(5))
+            .with_optim(OptimConfig { candidates: 96, restarts: 3, nm_iters: 20, nm_scale: 0.08 })
+    }
+
+    #[test]
+    fn parallel_bo_optimizes_sphere() {
+        let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
+        let mut pbo = ParallelBo::new(
+            fast_bo(41),
+            obj,
+            CoordinatorConfig { workers: 3, batch_size: 3, ..Default::default() },
+        );
+        let best = pbo.run_rounds(8);
+        assert!(best.value > -1.0, "best={}", best.value);
+        assert_eq!(pbo.rounds().len(), 8);
+        // 5 seeds + 8 rounds × 3 trials
+        assert_eq!(pbo.driver().history().len(), 5 + 24);
+    }
+
+    #[test]
+    fn batch_counting_matches_run_until_evals() {
+        let obj: Arc<dyn Objective> = Arc::new(Levy::new(2));
+        let mut pbo = ParallelBo::new(
+            fast_bo(43),
+            obj,
+            CoordinatorConfig { workers: 4, batch_size: 4, ..Default::default() },
+        );
+        pbo.run_until_evals(20);
+        assert!(pbo.driver().history().len() >= 20);
+    }
+
+    #[test]
+    fn virtual_time_beats_sequential_for_parallel_trials() {
+        use crate::objectives::trainer::ResNetCifarSim;
+        let obj: Arc<dyn Objective> = Arc::new(ResNetCifarSim::new());
+        let mut pbo = ParallelBo::new(
+            fast_bo(47),
+            obj,
+            CoordinatorConfig { workers: 4, batch_size: 4, ..Default::default() },
+        );
+        pbo.run_rounds(3);
+        // 3 rounds × 4 trials ⇒ 12 trainings ≈ 190 s each sequentially,
+        // but virtually only ~3 × 190 s in parallel
+        let virt = pbo.virtual_seconds();
+        let seq: f64 = pbo.driver().history().iter().map(|r| r.sim_cost_s).sum();
+        assert!(virt < seq * 0.5, "virt={virt} seq={seq}");
+    }
+
+    #[test]
+    fn failure_injection_retries_and_completes() {
+        let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
+        let mut pbo = ParallelBo::new(
+            fast_bo(53),
+            obj,
+            CoordinatorConfig {
+                workers: 2,
+                batch_size: 4,
+                fail_prob: 0.3,
+                max_retries: 10,
+                ..Default::default()
+            },
+        );
+        let rec = pbo.round().clone();
+        assert_eq!(rec.completed, 4, "all trials should eventually succeed");
+        assert_eq!(rec.dropped, 0);
+    }
+
+    #[test]
+    fn exhausted_retries_drop_trials() {
+        let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
+        let mut pbo = ParallelBo::new(
+            fast_bo(59),
+            obj,
+            CoordinatorConfig {
+                workers: 2,
+                batch_size: 8,
+                fail_prob: 1.0, // everything crashes
+                max_retries: 1,
+                ..Default::default()
+            },
+        );
+        let rec = pbo.round().clone();
+        assert_eq!(rec.completed, 0);
+        assert_eq!(rec.dropped, 8);
+    }
+
+    #[test]
+    fn rounds_record_sync_time_and_best() {
+        let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
+        let mut pbo = ParallelBo::new(
+            fast_bo(61),
+            obj,
+            CoordinatorConfig { workers: 2, batch_size: 2, ..Default::default() },
+        );
+        pbo.run_rounds(4);
+        for (i, r) in pbo.rounds().iter().enumerate() {
+            assert_eq!(r.round, i as u64);
+            assert!(r.sync_seconds >= 0.0);
+            assert!(r.best.is_finite());
+        }
+        // best is monotone across rounds
+        for w in pbo.rounds().windows(2) {
+            assert!(w[1].best >= w[0].best);
+        }
+        let _driver = pbo.finish(); // clean shutdown
+    }
+
+    #[test]
+    fn deterministic_suggestions_across_runs() {
+        // worker evaluation order is nondeterministic, but the *first*
+        // round's suggested batch (before any worker results) must be
+        // deterministic given the seed
+        let batch = |seed: u64| {
+            let obj: Arc<dyn Objective> = Arc::new(Levy::new(2));
+            let mut pbo = ParallelBo::new(
+                fast_bo(seed),
+                obj,
+                CoordinatorConfig { workers: 2, batch_size: 3, ..Default::default() },
+            );
+            pbo.driver.ensure_seeded();
+            pbo.driver.suggest_batch(3)
+        };
+        assert_eq!(batch(71), batch(71));
+    }
+}

@@ -1,0 +1,72 @@
+//! Message types exchanged between the leader and the worker pool.
+
+use crate::objectives::Evaluation;
+
+/// A unit of work: evaluate the objective at `x`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trial {
+    /// globally unique trial id (monotone, assigned by the leader)
+    pub id: u64,
+    /// round the trial belongs to (one batch of t suggestions per round)
+    pub round: u64,
+    pub x: Vec<f64>,
+    /// how many times this trial has been retried after failures
+    pub attempt: u32,
+}
+
+/// Why a trial failed.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum TrialError {
+    /// Injected / simulated crash of the training process.
+    #[error("simulated worker crash")]
+    SimulatedCrash,
+    /// The evaluation produced a non-finite value.
+    #[error("objective returned non-finite value {0}")]
+    NonFinite(f64),
+}
+
+/// Result of one trial, successful or not.
+#[derive(Debug, Clone)]
+pub struct TrialOutcome {
+    pub trial: Trial,
+    pub worker_id: usize,
+    pub result: Result<Evaluation, TrialError>,
+    /// real seconds the worker spent on this trial (scaled sleep + eval)
+    pub worker_seconds: f64,
+}
+
+impl TrialOutcome {
+    pub fn is_ok(&self) -> bool {
+        self.result.is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_ok_flag() {
+        let t = Trial { id: 1, round: 0, x: vec![0.0], attempt: 0 };
+        let ok = TrialOutcome {
+            trial: t.clone(),
+            worker_id: 0,
+            result: Ok(Evaluation { value: 1.0, sim_cost_s: 2.0 }),
+            worker_seconds: 0.0,
+        };
+        assert!(ok.is_ok());
+        let bad = TrialOutcome {
+            trial: t,
+            worker_id: 0,
+            result: Err(TrialError::SimulatedCrash),
+            worker_seconds: 0.0,
+        };
+        assert!(!bad.is_ok());
+    }
+
+    #[test]
+    fn error_messages_render() {
+        assert_eq!(TrialError::SimulatedCrash.to_string(), "simulated worker crash");
+        assert!(TrialError::NonFinite(f64::NAN).to_string().contains("non-finite"));
+    }
+}

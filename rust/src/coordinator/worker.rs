@@ -1,0 +1,259 @@
+//! The worker pool: OS threads evaluating trials from a bounded queue.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::messages::{Trial, TrialError, TrialOutcome};
+use crate::objectives::Objective;
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// Worker-pool configuration.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub workers: usize,
+    /// real seconds slept per simulated objective second (e.g. `1e-4`
+    /// compresses a 190 s ResNet run into 19 ms — enough to exercise the
+    /// scheduling without waiting for the paper's cluster hours)
+    pub sleep_scale: f64,
+    /// probability a trial crashes (failure injection)
+    pub fail_prob: f64,
+    /// queue capacity (bounded ⇒ backpressure on the leader)
+    pub queue_cap: usize,
+    /// base seed for the per-worker RNG streams
+    pub seed: u64,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        Self { workers: 4, sleep_scale: 0.0, fail_prob: 0.0, queue_cap: 64, seed: 0 }
+    }
+}
+
+/// A pool of worker threads sharing a trial queue.
+pub struct WorkerPool {
+    tx: Option<SyncSender<Trial>>,
+    results: Receiver<TrialOutcome>,
+    handles: Vec<JoinHandle<()>>,
+    dispatched: AtomicU64,
+}
+
+impl WorkerPool {
+    /// Spawn the pool. `objective` is shared read-only; each worker gets an
+    /// independent deterministic RNG stream (`seed`, stream = worker id).
+    pub fn spawn(objective: Arc<dyn Objective>, config: WorkerConfig) -> Self {
+        assert!(config.workers > 0);
+        let (tx, rx) = sync_channel::<Trial>(config.queue_cap);
+        let rx = Arc::new(Mutex::new(rx));
+        let (res_tx, res_rx) = std::sync::mpsc::channel::<TrialOutcome>();
+        let mut handles = Vec::with_capacity(config.workers);
+        for wid in 0..config.workers {
+            let rx = Arc::clone(&rx);
+            let res_tx: Sender<TrialOutcome> = res_tx.clone();
+            let obj = Arc::clone(&objective);
+            let cfg = config.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("lazygp-worker-{wid}"))
+                    .spawn(move || worker_loop(wid, obj, rx, res_tx, cfg))
+                    .expect("spawn worker"),
+            );
+        }
+        Self { tx: Some(tx), results: res_rx, handles, dispatched: AtomicU64::new(0) }
+    }
+
+    /// Enqueue a trial (blocks when the queue is full — backpressure).
+    pub fn submit(&self, trial: Trial) {
+        self.dispatched.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(trial)
+            .expect("worker pool hung up");
+    }
+
+    /// Blocking receive of the next outcome.
+    pub fn recv(&self) -> TrialOutcome {
+        self.results.recv().expect("all workers exited")
+    }
+
+    /// Receive with a timeout (used by tests to assert liveness).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<TrialOutcome> {
+        self.results.recv_timeout(timeout).ok()
+    }
+
+    /// Trials submitted so far.
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched.load(Ordering::Relaxed)
+    }
+
+    /// Graceful shutdown: close the queue and join every worker.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close channel ⇒ workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    wid: usize,
+    objective: Arc<dyn Objective>,
+    rx: Arc<Mutex<Receiver<Trial>>>,
+    res_tx: Sender<TrialOutcome>,
+    cfg: WorkerConfig,
+) {
+    let mut rng = Pcg64::with_stream(cfg.seed, wid as u64 + 1);
+    loop {
+        // hold the lock only while receiving so evaluation runs in parallel
+        let trial = match rx.lock().expect("queue poisoned").recv() {
+            Ok(t) => t,
+            Err(_) => return, // leader closed the queue
+        };
+        let sw = Stopwatch::new();
+        // failure injection: crash *before* producing a result
+        let result = if cfg.fail_prob > 0.0 && rng.next_f64() < cfg.fail_prob {
+            Err(TrialError::SimulatedCrash)
+        } else {
+            let eval = objective.eval(&trial.x, &mut rng);
+            if cfg.sleep_scale > 0.0 && eval.sim_cost_s > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(
+                    (eval.sim_cost_s * cfg.sleep_scale).min(5.0),
+                ));
+            }
+            if eval.value.is_finite() {
+                Ok(eval)
+            } else {
+                Err(TrialError::NonFinite(eval.value))
+            }
+        };
+        let outcome =
+            TrialOutcome { trial, worker_id: wid, result, worker_seconds: sw.elapsed_s() };
+        if res_tx.send(outcome).is_err() {
+            return; // leader gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectives::suite::Sphere;
+
+    fn pool(workers: usize, fail_prob: f64) -> WorkerPool {
+        let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
+        WorkerPool::spawn(
+            obj,
+            WorkerConfig { workers, fail_prob, seed: 7, ..Default::default() },
+        )
+    }
+
+    fn trial(id: u64) -> Trial {
+        Trial { id, round: 0, x: vec![0.5, -0.5], attempt: 0 }
+    }
+
+    #[test]
+    fn evaluates_trials() {
+        let p = pool(2, 0.0);
+        for i in 0..6 {
+            p.submit(trial(i));
+        }
+        let mut ids = Vec::new();
+        for _ in 0..6 {
+            let o = p.recv();
+            assert!(o.is_ok());
+            let v = o.result.unwrap().value;
+            assert!((v + 0.5).abs() < 1e-12, "sphere(0.5,-0.5) = -0.5, got {v}");
+            ids.push(o.trial.id);
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        assert_eq!(p.dispatched(), 6);
+        p.shutdown();
+    }
+
+    #[test]
+    fn parallel_workers_all_participate() {
+        // use a sleep-scaled trainer objective so trials take ~1 ms each —
+        // with instant evals a single worker can legitimately drain the
+        // whole queue before its siblings wake up
+        use crate::objectives::trainer::LeNetMnistSim;
+        let obj: Arc<dyn Objective> = Arc::new(LeNetMnistSim::new());
+        let p = WorkerPool::spawn(
+            obj,
+            WorkerConfig { workers: 4, sleep_scale: 2e-4, seed: 11, ..Default::default() },
+        );
+        for i in 0..32 {
+            p.submit(Trial { id: i, round: 0, x: vec![0.7, 0.7, 0.02, 3e-4, 0.7], attempt: 0 });
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..32 {
+            seen.insert(p.recv().worker_id);
+        }
+        assert!(seen.len() >= 2, "worker ids seen: {seen:?}");
+        p.shutdown();
+    }
+
+    #[test]
+    fn failure_injection_produces_crashes() {
+        let p = pool(2, 0.5);
+        for i in 0..40 {
+            p.submit(trial(i));
+        }
+        let mut fails = 0;
+        for _ in 0..40 {
+            if !p.recv().is_ok() {
+                fails += 1;
+            }
+        }
+        assert!(fails > 5 && fails < 35, "fails={fails}");
+        p.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let p = pool(3, 0.0);
+        p.submit(trial(0));
+        let _ = p.recv();
+        p.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn sleep_scale_simulates_training_time() {
+        use crate::objectives::trainer::LeNetMnistSim;
+        let obj: Arc<dyn Objective> = Arc::new(LeNetMnistSim::new());
+        let p = WorkerPool::spawn(
+            obj,
+            WorkerConfig { workers: 1, sleep_scale: 1e-4, seed: 3, ..Default::default() },
+        );
+        p.submit(Trial { id: 0, round: 0, x: vec![0.7, 0.7, 0.02, 3e-4, 0.7], attempt: 0 });
+        let o = p.recv_timeout(Duration::from_secs(5)).expect("timed out");
+        // ~8 s simulated * 1e-4 ⇒ ≈ 0.8 ms of real sleep
+        assert!(o.worker_seconds >= 0.0003, "worker_seconds={}", o.worker_seconds);
+        p.shutdown();
+    }
+
+    #[test]
+    fn deterministic_given_seed_single_worker() {
+        let run = || {
+            let p = pool(1, 0.0);
+            p.submit(trial(0));
+            let o = p.recv();
+            p.shutdown();
+            o.result.unwrap().value
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,379 @@
+//! The lazy Gaussian process — the paper's contribution (§3.3, Alg. 3).
+//!
+//! Kernel hyper-parameters are frozen, so each new observation only
+//! *borders* `K_y`; the Cholesky factor is extended incrementally in
+//! `O(n²)`. The *lagging factor* `l` (§4.1, Fig. 6) optionally re-fits the
+//! kernel every `l` observations, paying one full `O(n³)` factorization at
+//! each lag boundary — `l = 1` degenerates to the exact baseline,
+//! `l = ∞` is the fully lazy GP the headline speedups use.
+
+use super::hyperfit::{fit_params, FitSpace};
+use super::posterior::{compute_alpha, standardize, Posterior};
+use super::Surrogate;
+use crate::kernels::{CovCache, Kernel};
+use crate::linalg::incremental::ExtendStats;
+use crate::linalg::GrowingCholesky;
+use crate::util::timer::Stopwatch;
+
+/// When to pay a full re-fit + re-factorization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LagSchedule {
+    /// Never re-fit: the fully lazy GP (paper's headline configuration).
+    Never,
+    /// Re-fit every `l` observations (Fig. 6's lagging factor).
+    Every(usize),
+}
+
+impl LagSchedule {
+    pub fn from_lag(l: usize) -> Self {
+        if l == 0 {
+            LagSchedule::Never
+        } else {
+            LagSchedule::Every(l)
+        }
+    }
+
+    fn due(&self, n_observed: usize) -> bool {
+        match *self {
+            LagSchedule::Never => false,
+            LagSchedule::Every(l) => l > 0 && n_observed % l == 0,
+        }
+    }
+}
+
+/// Configuration of the lazy GP.
+#[derive(Debug, Clone)]
+pub struct LazyGpConfig {
+    pub kernel: Kernel,
+    pub lag: LagSchedule,
+    /// whether lag boundaries also re-fit kernel parameters (they always
+    /// re-factorize); Fig. 6 uses re-fit = true
+    pub refit_at_lag: bool,
+    pub fit_space: FitSpace,
+}
+
+impl Default for LazyGpConfig {
+    fn default() -> Self {
+        Self {
+            kernel: Kernel::paper_default(),
+            lag: LagSchedule::Never,
+            refit_at_lag: true,
+            fit_space: FitSpace::default(),
+        }
+    }
+}
+
+impl LazyGpConfig {
+    pub fn with_lag(mut self, l: usize) -> Self {
+        self.lag = LagSchedule::from_lag(l);
+        self
+    }
+}
+
+/// The lazy GP. `observe` is `O(n²)` except at lag boundaries.
+pub struct LazyGp {
+    config: LazyGpConfig,
+    kernel: Kernel,
+    cov: CovCache,
+    y: Vec<f64>,
+    factor: GrowingCholesky,
+    alpha: Vec<f64>,
+    mean_offset: f64,
+    y_scale: f64,
+    update_seconds: f64,
+    best_idx: Option<usize>,
+    full_refactorizations: u64,
+}
+
+impl LazyGp {
+    pub fn new(config: LazyGpConfig) -> Self {
+        let kernel = config.kernel;
+        Self {
+            config,
+            kernel,
+            cov: CovCache::new(),
+            y: Vec::new(),
+            factor: GrowingCholesky::new(),
+            alpha: Vec::new(),
+            mean_offset: 0.0,
+            y_scale: 1.0,
+            update_seconds: 0.0,
+            best_idx: None,
+            full_refactorizations: 0,
+        }
+    }
+
+    /// Paper defaults: Matérn-5/2, ρ=1 frozen forever.
+    pub fn paper_default() -> Self {
+        Self::new(LazyGpConfig::default())
+    }
+
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    pub fn posterior(&self) -> Posterior<'_> {
+        Posterior {
+            factor: &self.factor,
+            alpha: &self.alpha,
+            mean_offset: self.mean_offset,
+            y_scale: self.y_scale,
+            kernel: self.kernel,
+        }
+    }
+
+    /// Incremental-extension telemetry (clamp events etc.).
+    pub fn extend_stats(&self) -> ExtendStats {
+        self.factor.stats()
+    }
+
+    /// Number of full `O(n³)` factorizations paid (1 per lag boundary; 0
+    /// for the fully lazy configuration after warm-up).
+    pub fn full_refactorizations(&self) -> u64 {
+        self.full_refactorizations
+    }
+
+    /// The training inputs observed so far.
+    pub fn points(&self) -> &[Vec<f64>] {
+        self.cov.points()
+    }
+
+    /// The training targets observed so far.
+    pub fn targets(&self) -> &[f64] {
+        &self.y
+    }
+
+    fn refresh_alpha(&mut self) {
+        // O(n²): two triangular solves — this, not the factor extension,
+        // would dominate if we recomputed the offset-centered alpha naively
+        // per prediction; doing it once per observe keeps predicts O(n).
+        let (offset, scale) = standardize(&self.y);
+        self.mean_offset = offset;
+        self.y_scale = scale;
+        self.alpha = compute_alpha(&self.factor, &self.y, offset, scale);
+    }
+
+    fn full_refactorize(&mut self) {
+        if self.config.refit_at_lag && self.y.len() >= 3 {
+            self.kernel.params =
+                fit_params(&self.kernel, self.cov.points(), &self.y, &self.config.fit_space);
+        }
+        let prior_stats = self.factor.stats();
+        let k = self.cov.full_cov(&self.kernel);
+        match GrowingCholesky::from_spd(&k) {
+            Ok(f) => self.factor = f,
+            Err(_) => {
+                self.kernel.params.noise = (self.kernel.params.noise * 10.0).max(1e-8);
+                let k2 = self.cov.full_cov(&self.kernel);
+                self.factor =
+                    GrowingCholesky::from_spd(&k2).expect("covariance not PD with boosted noise");
+            }
+        }
+        // cumulative telemetry survives the factor swap
+        self.factor.carry_stats(prior_stats);
+        self.full_refactorizations += 1;
+    }
+}
+
+impl Surrogate for LazyGp {
+    fn observe(&mut self, x: &[f64], y: f64) {
+        let sw = Stopwatch::new();
+        // Alg. 3 line 8: border vector p against existing samples
+        let p = self.cov.push_with_border(&self.kernel, x);
+        let c = self.kernel.self_cov() + self.kernel.params.noise;
+        self.y.push(y);
+        if self.best_idx.map_or(true, |i| y > self.y[i]) {
+            self.best_idx = Some(self.y.len() - 1);
+        }
+        if self.config.lag.due(self.y.len()) {
+            // lag boundary: full refit + refactorization (Fig. 6's jumps)
+            self.full_refactorize();
+        } else {
+            // Alg. 3 lines 11–13: O(n²) incremental extension
+            self.factor.extend(&p, c);
+        }
+        self.refresh_alpha();
+        self.update_seconds += sw.elapsed_s();
+    }
+
+    fn predict(&self, x: &[f64]) -> (f64, f64) {
+        if self.cov.is_empty() {
+            return (0.0, self.kernel.self_cov());
+        }
+        let kstar = self.cov.border(&self.kernel, x);
+        self.posterior().predict_from_border(&kstar)
+    }
+
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        if self.cov.is_empty() || xs.is_empty() {
+            return xs.iter().map(|x| self.predict(x)).collect();
+        }
+        // assemble K* column-per-candidate, then one multi-RHS solve
+        // (§Perf: replaces m independent O(n²) solves)
+        let n = self.y.len();
+        let m = xs.len();
+        let mut kstar = crate::linalg::Matrix::zeros(n, m);
+        for (c, x) in xs.iter().enumerate() {
+            let col = self.cov.border(&self.kernel, x);
+            for i in 0..n {
+                kstar[(i, c)] = col[i];
+            }
+        }
+        self.posterior().predict_batch_from_borders(&kstar)
+    }
+
+    fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    fn log_marginal_likelihood(&self) -> f64 {
+        if self.y.is_empty() {
+            return 0.0;
+        }
+        let centered: Vec<f64> =
+            self.y.iter().map(|v| (v - self.mean_offset) / self.y_scale).collect();
+        self.posterior().log_marginal_likelihood(&centered)
+    }
+
+    fn incumbent(&self) -> Option<(&[f64], f64)> {
+        self.best_idx.map(|i| (self.cov.point(i), self.y[i]))
+    }
+
+    fn name(&self) -> &'static str {
+        "lazy"
+    }
+
+    fn update_seconds(&self) -> f64 {
+        self.update_seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::exact::{ExactGp, ExactGpConfig};
+    use crate::util::proptest as pt;
+    use crate::util::rng::Pcg64;
+
+    /// The paper's core claim: with frozen kernel parameters, the lazy GP's
+    /// posterior is *identical* to the exact GP's (it computes the same
+    /// factor, just incrementally).
+    #[test]
+    fn lazy_equals_exact_when_kernel_frozen() {
+        let mut rng = Pcg64::new(101);
+        let mut lazy = LazyGp::paper_default();
+        let mut exact = ExactGp::new(ExactGpConfig { refit_each_step: false, ..Default::default() });
+        for _ in 0..30 {
+            let x = vec![rng.uniform(-5.0, 5.0), rng.uniform(-5.0, 5.0)];
+            let y = (x[0] - x[1]).sin();
+            lazy.observe(&x, y);
+            exact.observe(&x, y);
+        }
+        for _ in 0..20 {
+            let q = vec![rng.uniform(-5.0, 5.0), rng.uniform(-5.0, 5.0)];
+            let (ml, vl) = lazy.predict(&q);
+            let (me, ve) = exact.predict(&q);
+            assert!((ml - me).abs() < 1e-8, "mean {ml} vs {me}");
+            assert!((vl - ve).abs() < 1e-8, "var {vl} vs {ve}");
+        }
+        assert!(
+            (lazy.log_marginal_likelihood() - exact.log_marginal_likelihood()).abs() < 1e-7
+        );
+    }
+
+    #[test]
+    fn lag_every_one_refactorizes_each_step() {
+        let mut gp = LazyGp::new(LazyGpConfig::default().with_lag(1));
+        for i in 0..5 {
+            gp.observe(&[i as f64], 0.1 * i as f64);
+        }
+        assert_eq!(gp.full_refactorizations(), 5);
+    }
+
+    #[test]
+    fn lag_never_does_zero_refactorizations() {
+        let mut gp = LazyGp::paper_default();
+        for i in 0..10 {
+            gp.observe(&[i as f64 / 3.0], (i as f64).cos());
+        }
+        assert_eq!(gp.full_refactorizations(), 0);
+        assert_eq!(gp.extend_stats().extensions, 10);
+    }
+
+    #[test]
+    fn lag_every_three_pattern() {
+        let mut gp = LazyGp::new(LazyGpConfig { refit_at_lag: false, ..LazyGpConfig::default().with_lag(3) });
+        for i in 0..9 {
+            gp.observe(&[i as f64], i as f64 * 0.2);
+        }
+        assert_eq!(gp.full_refactorizations(), 3); // at n = 3, 6, 9
+        assert_eq!(gp.extend_stats().extensions, 6);
+    }
+
+    #[test]
+    fn lagged_posterior_matches_exact_posterior_at_boundary() {
+        // with refit disabled and lag=4, right after a boundary the lazy
+        // factor equals a from-scratch factorization exactly
+        let mut rng = Pcg64::new(103);
+        let mut lazy = LazyGp::new(LazyGpConfig { refit_at_lag: false, ..LazyGpConfig::default().with_lag(4) });
+        let mut exact =
+            ExactGp::new(ExactGpConfig { refit_each_step: false, ..Default::default() });
+        for _ in 0..8 {
+            let x = vec![rng.uniform(-2.0, 2.0)];
+            let y = x[0] * x[0];
+            lazy.observe(&x, y);
+            exact.observe(&x, y);
+        }
+        let q = vec![0.3];
+        let (ml, vl) = lazy.predict(&q);
+        let (me, ve) = exact.predict(&q);
+        assert!((ml - me).abs() < 1e-9);
+        assert!((vl - ve).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incumbent_and_targets() {
+        let mut gp = LazyGp::paper_default();
+        gp.observe(&[0.0], -1.0);
+        gp.observe(&[1.0], 5.0);
+        gp.observe(&[2.0], 3.0);
+        let (x, y) = gp.incumbent().unwrap();
+        assert_eq!(x, &[1.0]);
+        assert_eq!(y, 5.0);
+        assert_eq!(gp.targets(), &[-1.0, 5.0, 3.0]);
+        assert_eq!(gp.points().len(), 3);
+    }
+
+    #[test]
+    fn duplicate_observation_stays_finite() {
+        let mut gp = LazyGp::paper_default();
+        gp.observe(&[1.0, 2.0], 0.5);
+        gp.observe(&[1.0, 2.0], 0.6); // near-singular extension → clamp
+        let (m, v) = gp.predict(&[1.0, 2.0]);
+        assert!(m.is_finite() && v.is_finite());
+        assert!(gp.extend_stats().clamped <= 1);
+    }
+
+    #[test]
+    fn prop_lazy_matches_exact_random_streams() {
+        let sizes = pt::usize_in(1, 25);
+        pt::check("lazy_vs_exact_stream", &sizes, |&n| {
+            let mut rng = Pcg64::new(n as u64 + 7000);
+            let mut lazy = LazyGp::paper_default();
+            let mut exact = ExactGp::new(ExactGpConfig {
+                refit_each_step: false,
+                ..Default::default()
+            });
+            for _ in 0..n {
+                let x = vec![rng.uniform(-4.0, 4.0), rng.uniform(-4.0, 4.0), rng.uniform(-4.0, 4.0)];
+                let y = x.iter().sum::<f64>().tanh();
+                lazy.observe(&x, y);
+                exact.observe(&x, y);
+            }
+            let q = vec![rng.uniform(-4.0, 4.0); 3];
+            let (ml, vl) = lazy.predict(&q);
+            let (me, ve) = exact.predict(&q);
+            (ml - me).abs() < 1e-7 && (vl - ve).abs() < 1e-7
+        });
+    }
+}

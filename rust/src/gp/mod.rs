@@ -1,0 +1,60 @@
+//! Gaussian-process surrogate models.
+//!
+//! * [`posterior`] — the shared prediction math of paper **Alg. 1**
+//!   (mean, variance, log marginal likelihood from a Cholesky factor).
+//! * [`exact`] — [`ExactGp`]: the naive baseline. Every `observe` re-fits
+//!   the kernel hyper-parameters and re-factorizes `K_y` from scratch with
+//!   the full `O(n³)` Cholesky (paper Alg. 2). This is the comparator in
+//!   every paper table/figure.
+//! * [`lazy`] — [`LazyGp`]: the paper's contribution. Kernel parameters are
+//!   frozen (or re-fit only every `l` iterations — the *lagging factor* of
+//!   §4.1/Fig. 6), so `observe` extends the factor incrementally in
+//!   `O(n²)` via [`crate::linalg::GrowingCholesky`].
+//! * [`hyperfit`] — kernel-parameter fitting by log-marginal-likelihood
+//!   maximization (log-scale grid + local refinement), used by `ExactGp`
+//!   each step and by `LazyGp` at lag boundaries.
+
+pub mod exact;
+pub mod hyperfit;
+pub mod lazy;
+pub mod posterior;
+
+pub use exact::ExactGp;
+pub use lazy::{LagSchedule, LazyGp};
+pub use posterior::Posterior;
+
+/// Common interface of both surrogates, used by the BO drivers and the
+/// coordinator so experiments can swap models by config.
+pub trait Surrogate: Send {
+    /// Insert an observation `(x, y)` and update the model.
+    fn observe(&mut self, x: &[f64], y: f64);
+
+    /// Posterior `(mean, variance)` at a point (Alg. 1 lines 4–6).
+    fn predict(&self, x: &[f64]) -> (f64, f64);
+
+    /// Batched prediction; the default loops, implementations may vectorize
+    /// or offload to the XLA runtime.
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        xs.iter().map(|x| self.predict(x)).collect()
+    }
+
+    /// Number of observations.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Log marginal likelihood of the current data (Alg. 1 line 7).
+    fn log_marginal_likelihood(&self) -> f64;
+
+    /// Best observation so far `(x, y)` — the incumbent `f'_n` of Eq. 9.
+    fn incumbent(&self) -> Option<(&[f64], f64)>;
+
+    /// Human-readable model name for logs/metrics.
+    fn name(&self) -> &'static str;
+
+    /// Cumulative seconds spent inside GP updates (factorizations +
+    /// solves); this is the quantity Fig. 1/Fig. 5 plot.
+    fn update_seconds(&self) -> f64;
+}

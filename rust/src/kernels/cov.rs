@@ -1,0 +1,209 @@
+//! Covariance-matrix assembly: `K_y`, border vectors `p`, cross-covariance
+//! `k*` — plus a norm cache so assembly shares work with the expanded
+//! distance form the XLA path uses.
+
+use super::functions::{sq_dist, Kernel};
+use crate::linalg::Matrix;
+
+/// Full training covariance `K_y = κ(X, X) + noise·I` (paper Eq. 5).
+pub fn cov_matrix(kernel: &Kernel, xs: &[Vec<f64>]) -> Matrix {
+    let n = xs.len();
+    let mut k = Matrix::zeros(n, n);
+    for i in 0..n {
+        k[(i, i)] = kernel.self_cov() + kernel.params.noise;
+        for j in 0..i {
+            let v = kernel.from_sq_dist(sq_dist(&xs[i], &xs[j]));
+            k[(i, j)] = v;
+            k[(j, i)] = v;
+        }
+    }
+    k
+}
+
+/// Border vector `p` of paper Eq. 13: covariances of a new point against
+/// the existing sample set (no noise — noise only sits on the diagonal).
+pub fn cov_vector(kernel: &Kernel, xs: &[Vec<f64>], x_new: &[f64]) -> Vec<f64> {
+    xs.iter().map(|x| kernel.from_sq_dist(sq_dist(x, x_new))).collect()
+}
+
+/// Cross-covariance matrix `K* ∈ R^{N×M}` between training points and `M`
+/// candidates (columns are candidates), used by batched posterior scoring.
+pub fn cov_cross(kernel: &Kernel, xs: &[Vec<f64>], cands: &[Vec<f64>]) -> Matrix {
+    let n = xs.len();
+    let m = cands.len();
+    Matrix::from_fn(n, m, |i, j| kernel.from_sq_dist(sq_dist(&xs[i], &cands[j])))
+}
+
+/// Incrementally maintained covariance state: the sample list plus cached
+/// squared norms (shared sub-expression of the expanded distance), so each
+/// border vector costs one pass over the data with no re-allocation of K.
+#[derive(Debug, Clone, Default)]
+pub struct CovCache {
+    xs: Vec<Vec<f64>>,
+    norms: Vec<f64>,
+}
+
+impl CovCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn points(&self) -> &[Vec<f64>] {
+        &self.xs
+    }
+
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.xs[i]
+    }
+
+    /// Append a point, returning its border vector `p` against the points
+    /// already present (Alg. 3 line 8) computed via the expanded form.
+    pub fn push_with_border(&mut self, kernel: &Kernel, x: &[f64]) -> Vec<f64> {
+        let xn = crate::linalg::matrix::norm2_sq(x);
+        let p: Vec<f64> = self
+            .xs
+            .iter()
+            .zip(&self.norms)
+            .map(|(xi, &ni)| {
+                let r2 = super::functions::sq_dist_expanded(xi, x, ni, xn);
+                kernel.from_sq_dist(r2)
+            })
+            .collect();
+        self.xs.push(x.to_vec());
+        self.norms.push(xn);
+        p
+    }
+
+    /// Border vector without inserting (used for candidate scoring).
+    pub fn border(&self, kernel: &Kernel, x: &[f64]) -> Vec<f64> {
+        let xn = crate::linalg::matrix::norm2_sq(x);
+        self.xs
+            .iter()
+            .zip(&self.norms)
+            .map(|(xi, &ni)| {
+                let r2 = super::functions::sq_dist_expanded(xi, x, ni, xn);
+                kernel.from_sq_dist(r2)
+            })
+            .collect()
+    }
+
+    /// Rebuild the full `K_y` (needed at lag boundaries when the exact GP
+    /// re-fits kernel parameters).
+    pub fn full_cov(&self, kernel: &Kernel) -> Matrix {
+        cov_matrix(kernel, &self.xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::functions::{KernelKind, KernelParams};
+    use crate::util::rng::Pcg64;
+
+    fn points(rng: &mut Pcg64, n: usize, d: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|_| (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect()).collect()
+    }
+
+    #[test]
+    fn cov_matrix_diagonal_has_noise() {
+        let k = Kernel::new(KernelKind::Matern52, KernelParams::paper_default().with_noise(0.25));
+        let xs = vec![vec![0.0], vec![1.0]];
+        let m = cov_matrix(&k, &xs);
+        assert!((m[(0, 0)] - 1.25).abs() < 1e-15);
+        assert!((m[(1, 1)] - 1.25).abs() < 1e-15);
+        assert!(m.is_symmetric(0.0));
+        assert!(m[(0, 1)] < 1.0); // off-diagonal has no noise
+    }
+
+    #[test]
+    fn cov_matrix_is_spd_for_distinct_points() {
+        let mut rng = Pcg64::new(61);
+        let k = Kernel::paper_default();
+        let xs = points(&mut rng, 25, 4);
+        let m = cov_matrix(&k, &xs);
+        assert!(crate::linalg::cholesky::cholesky(&m).is_ok());
+    }
+
+    #[test]
+    fn cov_vector_matches_matrix_column() {
+        let mut rng = Pcg64::new(63);
+        let k = Kernel::paper_default();
+        let mut xs = points(&mut rng, 10, 3);
+        let x_new = xs.pop().unwrap();
+        let p = cov_vector(&k, &xs, &x_new);
+        // compare against the last column of the full matrix
+        let mut all = xs.clone();
+        all.push(x_new.clone());
+        let full = cov_matrix(&k, &all);
+        for i in 0..xs.len() {
+            assert!((p[i] - full[(9, i)]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn cache_border_matches_cov_vector() {
+        let mut rng = Pcg64::new(65);
+        let k = Kernel::paper_default();
+        let xs = points(&mut rng, 12, 5);
+        let mut cache = CovCache::new();
+        for x in &xs {
+            cache.push_with_border(&k, x);
+        }
+        let probe: Vec<f64> = (0..5).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let via_cache = cache.border(&k, &probe);
+        let direct = cov_vector(&k, &xs, &probe);
+        for (a, b) in via_cache.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cache_push_border_is_incremental_column() {
+        let mut rng = Pcg64::new(67);
+        let k = Kernel::paper_default();
+        let xs = points(&mut rng, 8, 2);
+        let mut cache = CovCache::new();
+        let mut borders = Vec::new();
+        for x in &xs {
+            borders.push(cache.push_with_border(&k, x));
+        }
+        let full = cov_matrix(&k, &xs);
+        for (m, p) in borders.iter().enumerate() {
+            assert_eq!(p.len(), m);
+            for i in 0..m {
+                assert!((p[i] - full[(m, i)]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_cov_shape_and_values() {
+        let mut rng = Pcg64::new(69);
+        let k = Kernel::paper_default();
+        let xs = points(&mut rng, 6, 3);
+        let cs = points(&mut rng, 4, 3);
+        let kc = cov_cross(&k, &xs, &cs);
+        assert_eq!((kc.rows(), kc.cols()), (6, 4));
+        assert!((kc[(2, 3)] - k.eval(&xs[2], &cs[3])).abs() < 1e-15);
+    }
+
+    #[test]
+    fn full_cov_from_cache_matches_direct() {
+        let mut rng = Pcg64::new(71);
+        let k = Kernel::paper_default();
+        let xs = points(&mut rng, 9, 4);
+        let mut cache = CovCache::new();
+        for x in &xs {
+            cache.push_with_border(&k, x);
+        }
+        assert!(cache.full_cov(&k).max_abs_diff(&cov_matrix(&k, &xs)) < 1e-12);
+    }
+}

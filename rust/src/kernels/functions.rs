@@ -1,0 +1,251 @@
+//! Stationary kernel functions.
+
+use crate::linalg::matrix::dot;
+
+/// Kernel hyper-parameters.
+///
+/// * `variance` — signal variance σ² (output scale).
+/// * `length_scale` — ρ in the paper's Eq. 3. The lazy GP freezes it at 1.
+/// * `noise` — observation noise σ_n² added to the diagonal of `K_y`
+///   (paper Eq. 5: `K_y = κ(x,x) + σ²I`). Also acts as the jitter keeping
+///   `K_y` SPD, which is what the well-definedness Lemma leans on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelParams {
+    pub variance: f64,
+    pub length_scale: f64,
+    pub noise: f64,
+}
+
+impl KernelParams {
+    /// The paper's lazy-GP setting: σ² = 1, ρ = 1, small noise.
+    pub fn paper_default() -> Self {
+        Self { variance: 1.0, length_scale: 1.0, noise: 1e-6 }
+    }
+
+    pub fn with_noise(mut self, noise: f64) -> Self {
+        self.noise = noise;
+        self
+    }
+
+    pub fn with_length_scale(mut self, ls: f64) -> Self {
+        self.length_scale = ls;
+        self
+    }
+
+    pub fn with_variance(mut self, v: f64) -> Self {
+        self.variance = v;
+        self
+    }
+}
+
+impl Default for KernelParams {
+    fn default() -> Self {
+        Self::paper_default()
+    }
+}
+
+/// Which stationary kernel to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Matérn ν = 5/2 — the paper's kernel (Eq. 3, sign-corrected).
+    Matern52,
+    /// Matérn ν = 3/2.
+    Matern32,
+    /// Squared exponential / RBF.
+    Rbf,
+    /// Exponential (Matérn ν = 1/2).
+    Exponential,
+}
+
+impl KernelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Matern52 => "matern52",
+            KernelKind::Matern32 => "matern32",
+            KernelKind::Rbf => "rbf",
+            KernelKind::Exponential => "exponential",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "matern52" => Some(KernelKind::Matern52),
+            "matern32" => Some(KernelKind::Matern32),
+            "rbf" => Some(KernelKind::Rbf),
+            "exponential" => Some(KernelKind::Exponential),
+            _ => None,
+        }
+    }
+}
+
+/// A configured kernel: kind + parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Kernel {
+    pub kind: KernelKind,
+    pub params: KernelParams,
+}
+
+impl Kernel {
+    pub fn new(kind: KernelKind, params: KernelParams) -> Self {
+        Self { kind, params }
+    }
+
+    /// The paper's configuration: Matérn-5/2, σ²=1, ρ=1.
+    pub fn paper_default() -> Self {
+        Self::new(KernelKind::Matern52, KernelParams::paper_default())
+    }
+
+    /// Kernel value from squared distance `r² = ‖x − x'‖²`.
+    ///
+    /// Taking r² (not r) lets covariance assembly share the
+    /// `‖a‖² + ‖b‖² − 2aᵀb` expansion with the XLA/Pallas path.
+    #[inline]
+    pub fn from_sq_dist(&self, r2: f64) -> f64 {
+        let s2 = self.params.variance;
+        let rho = self.params.length_scale;
+        debug_assert!(r2 >= -1e-12, "negative squared distance {r2}");
+        let r2 = r2.max(0.0);
+        match self.kind {
+            KernelKind::Matern52 => {
+                // σ² (1 + √5 d/ρ + 5d²/(3ρ²)) exp(−√5 d/ρ)
+                let d = r2.sqrt() / rho;
+                let a = 5.0_f64.sqrt() * d;
+                s2 * (1.0 + a + 5.0 * d * d / 3.0) * (-a).exp()
+            }
+            KernelKind::Matern32 => {
+                let d = r2.sqrt() / rho;
+                let a = 3.0_f64.sqrt() * d;
+                s2 * (1.0 + a) * (-a).exp()
+            }
+            KernelKind::Rbf => s2 * (-0.5 * r2 / (rho * rho)).exp(),
+            KernelKind::Exponential => s2 * (-(r2.sqrt()) / rho).exp(),
+        }
+    }
+
+    /// Kernel value between two points.
+    #[inline]
+    pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        self.from_sq_dist(sq_dist(a, b))
+    }
+
+    /// Self-covariance `κ(x, x)` = σ².
+    #[inline]
+    pub fn self_cov(&self) -> f64 {
+        self.params.variance
+    }
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Squared distance via the inner-product expansion used by the XLA path:
+/// `‖a−b‖² = ‖a‖² + ‖b‖² − 2aᵀb`. Kept for parity tests with the Pallas
+/// kernel, which uses the same algebra for MXU-friendliness.
+#[inline]
+pub fn sq_dist_expanded(a: &[f64], b: &[f64], a_norm2: f64, b_norm2: f64) -> f64 {
+    (a_norm2 + b_norm2 - 2.0 * dot(a, b)).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matern52_at_zero_is_variance() {
+        let k = Kernel::paper_default();
+        assert!((k.from_sq_dist(0.0) - 1.0).abs() < 1e-15);
+        let k2 = Kernel::new(KernelKind::Matern52, KernelParams::paper_default().with_variance(2.5));
+        assert!((k2.from_sq_dist(0.0) - 2.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn matern52_reference_values() {
+        // hand-computed: d=1, ρ=1 → (1 + √5 + 5/3) e^{−√5}
+        let k = Kernel::paper_default();
+        let want = (1.0 + 5f64.sqrt() + 5.0 / 3.0) * (-(5f64.sqrt())).exp();
+        assert!((k.from_sq_dist(1.0) - want).abs() < 1e-14);
+    }
+
+    #[test]
+    fn kernels_decay_monotonically() {
+        for kind in [
+            KernelKind::Matern52,
+            KernelKind::Matern32,
+            KernelKind::Rbf,
+            KernelKind::Exponential,
+        ] {
+            let k = Kernel::new(kind, KernelParams::paper_default());
+            let mut prev = f64::INFINITY;
+            for i in 0..50 {
+                let d = i as f64 * 0.2;
+                let v = k.from_sq_dist(d * d);
+                assert!(v <= prev + 1e-15, "{kind:?} not decaying at d={d}");
+                assert!(v >= 0.0);
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_vanish_at_infinity() {
+        for kind in [
+            KernelKind::Matern52,
+            KernelKind::Matern32,
+            KernelKind::Rbf,
+            KernelKind::Exponential,
+        ] {
+            let k = Kernel::new(kind, KernelParams::paper_default());
+            assert!(k.from_sq_dist(1e6) < 1e-8, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn length_scale_stretches() {
+        let narrow = Kernel::new(KernelKind::Matern52, KernelParams::paper_default());
+        let wide = Kernel::new(
+            KernelKind::Matern52,
+            KernelParams::paper_default().with_length_scale(10.0),
+        );
+        // at the same distance the wide kernel retains more correlation
+        assert!(wide.from_sq_dist(4.0) > narrow.from_sq_dist(4.0));
+    }
+
+    #[test]
+    fn eval_is_symmetric() {
+        let k = Kernel::paper_default();
+        let a = [0.3, -1.2, 4.0];
+        let b = [1.0, 0.0, -2.0];
+        assert_eq!(k.eval(&a, &b), k.eval(&b, &a));
+    }
+
+    #[test]
+    fn sq_dist_expansion_matches() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [-0.5, 0.25, 7.0];
+        let na = dot(&a, &a);
+        let nb = dot(&b, &b);
+        assert!((sq_dist(&a, &b) - sq_dist_expanded(&a, &b, na, nb)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for kind in [
+            KernelKind::Matern52,
+            KernelKind::Matern32,
+            KernelKind::Rbf,
+            KernelKind::Exponential,
+        ] {
+            assert_eq!(KernelKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(KernelKind::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,18 @@
+//! Covariance kernels and covariance-matrix assembly.
+//!
+//! The paper fixes a Matérn-5/2 kernel (its Eq. 3) with length-scale
+//! `ρ = 1` for the lazy GP; the exact baseline re-fits `(σ², ρ)` every
+//! iteration. All kernels here are stationary — they depend only on the
+//! Euclidean distance `d = ‖x − x'‖` — which is what makes the bordered
+//! covariance structure of Alg. 3 possible.
+//!
+//! Note on the paper's Eq. 3: as printed it has `exp(+√5 d/ρ)`, which
+//! diverges; we implement the standard Matérn-5/2 with `exp(−√5 d/ρ)`
+//! (Rasmussen & Williams 2006, Eq. 4.17), which is also what the authors'
+//! released code uses.
+
+pub mod cov;
+pub mod functions;
+
+pub use cov::{cov_cross, cov_matrix, cov_vector, CovCache};
+pub use functions::{Kernel, KernelKind, KernelParams};

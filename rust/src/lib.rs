@@ -1,0 +1,66 @@
+//! # lazygp — Scalable Hyperparameter Optimization with Lazy Gaussian Processes
+//!
+//! A production-grade reproduction of *"Scalable Hyperparameter Optimization
+//! with Lazy Gaussian Processes"* (Ram, Müller, Pfreundt, Gauger, Keuper;
+//! cs.LG 2020).
+//!
+//! The paper's observation: in Bayesian optimization the covariance matrix
+//! only *grows* if the kernel hyper-parameters are frozen, so the Cholesky
+//! factor can be extended incrementally in `O(n²)` per new observation
+//! instead of re-factorized in `O(n³)`. Freezing (or *lagging*) the kernel
+//! updates makes the GP "lazy"; the cheap posterior update in turn makes it
+//! practical to evaluate the top-`t` local maxima of the acquisition
+//! function in parallel and synchronize the results with `t` successive
+//! incremental extensions.
+//!
+//! ## Crate layout (layer 3 of the three-layer stack)
+//!
+//! * [`linalg`] — dense-matrix substrate: full Cholesky (paper Alg. 2),
+//!   **incremental Cholesky extension (paper Alg. 3)**, triangular solves.
+//! * [`kernels`] — covariance kernels (Matérn-5/2 of paper Eq. 3, …).
+//! * [`gp`] — [`gp::ExactGp`] (naive baseline) and [`gp::LazyGp`]
+//!   (the paper's contribution, with lagging factor `l`).
+//! * [`acquisition`] — Expected Improvement (paper Eq. 11), PI, UCB and the
+//!   multi-start optimizer incl. top-`t` local-maxima extraction (§3.4).
+//! * [`bo`] — sequential/batch Bayesian-optimization drivers.
+//! * [`objectives`] — Levy functions (paper Eq. 7/19), a synthetic suite and
+//!   the simulated LeNet/MNIST + ResNet32/CIFAR10 trainers (§4.2–4.4).
+//! * [`coordinator`] — leader/worker parallel runtime (§3.4, Table 4).
+//! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas scoring
+//!   artifacts (layers 1+2), with a native fallback.
+//! * [`config`], [`metrics`], [`util`] — experiment configs (hand-rolled
+//!   JSON), traces/CSV, and the offline substrates (RNG, CLI, bench,
+//!   property testing).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries don't inherit the rpath to
+//! # // libxla_extension's bundled libstdc++; examples/quickstart.rs runs
+//! # // this exact flow under `cargo run --example quickstart`.
+//! use lazygp::bo::{BoConfig, BoDriver};
+//! use lazygp::objectives::{suite::Branin, Objective};
+//!
+//! let obj = Branin::new();
+//! let mut driver = BoDriver::new(BoConfig::lazy().with_seed(7), Box::new(obj));
+//! let best = driver.run(40);
+//! assert!(best.value > -1.5); // maximizing -branin; optimum is ~-0.398
+//! ```
+
+pub mod acquisition;
+pub mod bo;
+pub mod config;
+pub mod coordinator;
+pub mod gp;
+pub mod kernels;
+pub mod linalg;
+pub mod metrics;
+pub mod objectives;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI and embedded in experiment metadata.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

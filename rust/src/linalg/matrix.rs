@@ -1,0 +1,397 @@
+//! Row-major dense matrix.
+//!
+//! Deliberately minimal: the GP stack needs symmetric assembly, matvec,
+//! dot products, and slicing of contiguous rows — not a general BLAS. The
+//! storage is a single `Vec<f64>` so Cholesky factors can grow in place
+//! with amortized-constant row appends (see [`crate::linalg::incremental`]).
+
+use std::fmt;
+
+/// Row-major dense `rows × cols` matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity of size `n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Contiguous row slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable contiguous row slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Two disjoint rows, `i < j`, borrowed simultaneously (needed by the
+    /// in-place factorization inner loops).
+    #[inline]
+    pub fn two_rows_mut(&mut self, i: usize, j: usize) -> (&mut [f64], &mut [f64]) {
+        debug_assert!(i < j && j < self.rows);
+        let (a, b) = self.data.split_at_mut(j * self.cols);
+        (&mut a[i * self.cols..(i + 1) * self.cols], &mut b[..self.cols])
+    }
+
+    /// Raw storage (row-major).
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the raw storage vector.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Matrix–vector product `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec shape");
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// Transposed matrix–vector product `y = Aᵀ x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "matvec_t shape");
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                for (yj, &aij) in y.iter_mut().zip(self.row(i)) {
+                    *yj += xi * aij;
+                }
+            }
+        }
+        y
+    }
+
+    /// Dense product `C = A B` (small sizes only; used by tests and the
+    /// posterior covariance of batched predictions).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul shape");
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik != 0.0 {
+                    let brow = b.row(k);
+                    let crow = c.row_mut(i);
+                    for j in 0..brow.len() {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// Transpose copy.
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Append a row (the matrix must stay rectangular).
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.cols, "push_row width");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Grow a square matrix by one row *and* one column, placing `col` in
+    /// the new column (first `n` entries), `row` in the new row, and `corner`
+    /// at the new diagonal. Used to grow covariance matrices in place.
+    pub fn grow_square(&mut self, row: &[f64], col: &[f64], corner: f64) {
+        assert!(self.is_square());
+        let n = self.rows;
+        assert_eq!(row.len(), n);
+        assert_eq!(col.len(), n);
+        let mut data = Vec::with_capacity((n + 1) * (n + 1));
+        for i in 0..n {
+            data.extend_from_slice(self.row(i));
+            data.push(col[i]);
+        }
+        data.extend_from_slice(row);
+        data.push(corner);
+        self.rows = n + 1;
+        self.cols = n + 1;
+        self.data = data;
+    }
+
+    /// Max absolute element-wise difference to another matrix.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Is the matrix symmetric to tolerance `tol`?
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if !self.is_square() {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// `L Lᵀ` for a lower-triangular `L` (verification helper).
+    pub fn llt(&self) -> Matrix {
+        assert!(self.is_square());
+        let n = self.rows;
+        Matrix::from_fn(n, n, |i, j| {
+            let m = i.min(j);
+            (0..=m).map(|k| self[(i, k)] * self[(j, k)]).sum()
+        })
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols, "index ({i},{j}) out of {}x{}", self.rows, self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  [")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}]", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Dot product with 4-way unrolled accumulation (helps the triangular-solve
+/// hot loop; see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y ← y + alpha * x` (axpy).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    if alpha == 0.0 {
+        return;
+    }
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_from_fn() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m[(0, 0)], 0.0);
+        assert_eq!(m[(2, 3)], 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn identity_matvec() {
+        let m = Matrix::identity(4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(m.matvec(&x), x);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.matvec(&[1.0, 1.0, 1.0]), vec![6.0, 15.0]);
+        assert_eq!(m.matvec_t(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_fn(3, 3, |i, j| (i + j) as f64);
+        let i3 = Matrix::identity(3);
+        assert_eq!(a.matmul(&i3), a);
+        assert_eq!(i3.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::from_fn(3, 5, |i, j| (i * 7 + j * 3) as f64);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn grow_square_layout() {
+        let mut m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 5.0]);
+        m.grow_square(&[7.0, 8.0], &[7.0, 8.0], 9.0);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.as_slice(), &[1.0, 2.0, 7.0, 2.0, 5.0, 8.0, 7.0, 8.0, 9.0]);
+        assert!(m.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn push_row_grows() {
+        let mut m = Matrix::zeros(1, 3);
+        m.push_row(&[1.0, 2.0, 3.0]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(1), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn two_rows_mut_disjoint() {
+        let mut m = Matrix::from_fn(3, 2, |i, _| i as f64);
+        let (a, b) = m.two_rows_mut(0, 2);
+        a[0] = 100.0;
+        b[1] = 200.0;
+        assert_eq!(m[(0, 0)], 100.0);
+        assert_eq!(m[(2, 1)], 200.0);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..13).map(|i| i as f64 * 0.5).collect();
+        let b: Vec<f64> = (0..13).map(|i| (13 - i) as f64).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn llt_of_identity() {
+        let l = Matrix::identity(5);
+        assert_eq!(l.llt(), Matrix::identity(5));
+    }
+
+    #[test]
+    fn symmetry_check() {
+        let s = Matrix::from_fn(4, 4, |i, j| (i + j) as f64);
+        assert!(s.is_symmetric(0.0));
+        let mut a = s.clone();
+        a[(0, 1)] += 1.0;
+        assert!(!a.is_symmetric(1e-9));
+    }
+
+    #[test]
+    fn axpy_adds() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 14.0, 16.0]);
+    }
+}

@@ -1,0 +1,24 @@
+//! Dense linear-algebra substrate.
+//!
+//! Everything the paper's GP inference needs, built from scratch:
+//!
+//! * [`matrix`] — a row-major dense [`matrix::Matrix`] with the small set of
+//!   BLAS-level operations the GP uses (symmetric assembly, matvec, dot).
+//! * [`cholesky`] — the full factorization (paper **Alg. 2**), in both the
+//!   textbook form and a cache-blocked right-looking form used after the
+//!   performance pass.
+//! * [`triangular`] — forward/backward substitution, single and multi-RHS.
+//! * [`incremental`] — the paper's contribution (**Alg. 3**): `O(n²)`
+//!   extension of an existing Cholesky factor by one or more rows, plus the
+//!   growable [`incremental::GrowingCholesky`] state used by `gp::LazyGp`
+//!   and the coordinator's synchronization step.
+
+pub mod cholesky;
+pub mod incremental;
+pub mod matrix;
+pub mod triangular;
+
+pub use cholesky::{cholesky_in_place, CholeskyError};
+pub use incremental::GrowingCholesky;
+pub use matrix::Matrix;
+pub use triangular::{solve_lower, solve_lower_transpose, solve_upper};

@@ -1,0 +1,237 @@
+//! Triangular solves.
+//!
+//! Forward substitution `L q = p` is the inner loop of the paper's Alg. 3
+//! (the `O(n²)` step that replaces the `O(n³)` refactorization), and the
+//! pair of solves `L α' = y`, `Lᵀ α = α'` implements Alg. 1 line 3.
+
+use super::matrix::{dot, Matrix};
+
+/// Solve `L x = b` for lower-triangular `L` (forward substitution).
+/// `O(n²)`. Panics on shape mismatch; division by a zero diagonal yields
+/// `inf`/`nan` which the GP layer guards against upstream (jitter floor).
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    assert!(l.is_square());
+    let n = l.rows();
+    assert_eq!(b.len(), n, "solve_lower shape");
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let row = l.row(i);
+        let s = b[i] - dot(&row[..i], &x[..i]);
+        x[i] = s / row[i];
+    }
+    x
+}
+
+/// Solve `Lᵀ x = b` for lower-triangular `L` (backward substitution over
+/// the transpose, without materializing it). `O(n²)`.
+pub fn solve_lower_transpose(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    assert!(l.is_square());
+    let n = l.rows();
+    assert_eq!(b.len(), n, "solve_lower_transpose shape");
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let xi = x[i] / l[(i, i)];
+        x[i] = xi;
+        if xi != 0.0 {
+            // eliminate x[i] from the remaining equations: column i of Lᵀ
+            // is row i of L
+            for j in 0..i {
+                x[j] -= l[(i, j)] * xi;
+            }
+        }
+    }
+    x
+}
+
+/// Solve `U x = b` for upper-triangular `U` (backward substitution).
+pub fn solve_upper(u: &Matrix, b: &[f64]) -> Vec<f64> {
+    assert!(u.is_square());
+    let n = u.rows();
+    assert_eq!(b.len(), n, "solve_upper shape");
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let row = u.row(i);
+        let s = b[i] - dot(&row[i + 1..], &x[i + 1..]);
+        x[i] = s / row[i];
+    }
+    x
+}
+
+/// Multi-RHS forward substitution: solve `L X = B` where the `k`-th RHS is
+/// `B` column `k`. `B` is `n × m`, returned `X` is `n × m`. Column-blocked
+/// to keep `L` rows hot in cache — this is the hot path of batched
+/// candidate scoring (posterior variance needs `v = L⁻¹ k*` per candidate).
+pub fn solve_lower_multi(l: &Matrix, b: &Matrix) -> Matrix {
+    assert!(l.is_square());
+    let n = l.rows();
+    assert_eq!(b.rows(), n, "solve_lower_multi shape");
+    let m = b.cols();
+    let mut x = b.clone();
+    for i in 0..n {
+        let lrow = l.row(i).to_vec(); // copy to sidestep aliasing on x rows
+        let diag = lrow[i];
+        for k in 0..i {
+            let lik = lrow[k];
+            if lik != 0.0 {
+                let (xk, xi) = x.two_rows_mut(k, i);
+                for c in 0..m {
+                    xi[c] -= lik * xk[c];
+                }
+            }
+        }
+        let xi = x.row_mut(i);
+        for c in 0..m {
+            xi[c] /= diag;
+        }
+    }
+    x
+}
+
+/// Invert a lower-triangular matrix (used only by small verification code
+/// paths and tests — never in the hot loop).
+pub fn invert_lower(l: &Matrix) -> Matrix {
+    assert!(l.is_square());
+    let n = l.rows();
+    let mut inv = Matrix::zeros(n, n);
+    for col in 0..n {
+        let mut e = vec![0.0; n];
+        e[col] = 1.0;
+        let x = solve_lower(l, &e);
+        for i in 0..n {
+            inv[(i, col)] = x[i];
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky::cholesky;
+    use crate::util::proptest as pt;
+    use crate::util::rng::Pcg64;
+
+    fn random_lower(rng: &mut Pcg64, n: usize) -> Matrix {
+        Matrix::from_fn(n, n, |i, j| {
+            if j < i {
+                rng.uniform(-1.0, 1.0)
+            } else if j == i {
+                rng.uniform(0.5, 2.0) // well-conditioned diagonal
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn forward_solves_identity() {
+        let l = Matrix::identity(5);
+        let b = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(solve_lower(&l, &b), b);
+    }
+
+    #[test]
+    fn forward_known_2x2() {
+        let l = Matrix::from_vec(2, 2, vec![2.0, 0.0, 1.0, 3.0]);
+        // L x = [4, 7] -> x0 = 2, x1 = (7-2)/3
+        let x = solve_lower(&l, &[4.0, 7.0]);
+        assert!((x[0] - 2.0).abs() < 1e-15);
+        assert!((x[1] - 5.0 / 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn forward_residual_small() {
+        let mut rng = Pcg64::new(21);
+        for &n in &[1, 2, 9, 33, 120] {
+            let l = random_lower(&mut rng, n);
+            let b: Vec<f64> = (0..n).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let x = solve_lower(&l, &b);
+            let r = l.matvec(&x);
+            let err = r.iter().zip(&b).map(|(a, c)| (a - c).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-9, "n={n} err={err:e}");
+        }
+    }
+
+    #[test]
+    fn transpose_solve_residual_small() {
+        let mut rng = Pcg64::new(23);
+        for &n in &[1, 5, 40, 90] {
+            let l = random_lower(&mut rng, n);
+            let b: Vec<f64> = (0..n).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let x = solve_lower_transpose(&l, &b);
+            let r = l.transpose().matvec(&x);
+            let err = r.iter().zip(&b).map(|(a, c)| (a - c).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-9, "n={n} err={err:e}");
+        }
+    }
+
+    #[test]
+    fn upper_solve_residual_small() {
+        let mut rng = Pcg64::new(25);
+        let n = 30;
+        let u = random_lower(&mut rng, n).transpose();
+        let b: Vec<f64> = (0..n).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let x = solve_upper(&u, &b);
+        let r = u.matvec(&x);
+        let err = r.iter().zip(&b).map(|(a, c)| (a - c).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-10);
+    }
+
+    #[test]
+    fn multi_rhs_matches_single() {
+        let mut rng = Pcg64::new(27);
+        let n = 25;
+        let m = 7;
+        let l = random_lower(&mut rng, n);
+        let b = Matrix::from_fn(n, m, |_, _| rng.uniform(-2.0, 2.0));
+        let x = solve_lower_multi(&l, &b);
+        for col in 0..m {
+            let bc: Vec<f64> = (0..n).map(|i| b[(i, col)]).collect();
+            let xc = solve_lower(&l, &bc);
+            for i in 0..n {
+                assert!((x[(i, col)] - xc[i]).abs() < 1e-11, "col {col} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn invert_lower_gives_inverse() {
+        let mut rng = Pcg64::new(29);
+        let n = 12;
+        let l = random_lower(&mut rng, n);
+        let inv = invert_lower(&l);
+        let prod = l.matmul(&inv);
+        assert!(prod.max_abs_diff(&Matrix::identity(n)) < 1e-9);
+    }
+
+    #[test]
+    fn solve_pair_inverts_spd_system() {
+        // combined forward+transpose solve = K^{-1} y via Cholesky
+        let mut rng = Pcg64::new(31);
+        let a = Matrix::from_fn(10, 10, |_, _| rng.uniform(-1.0, 1.0));
+        let mut k = a.matmul(&a.transpose());
+        for i in 0..10 {
+            k[(i, i)] += 10.0;
+        }
+        let l = cholesky(&k).unwrap();
+        let y: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let alpha = solve_lower_transpose(&l, &solve_lower(&l, &y));
+        let r = k.matvec(&alpha);
+        for i in 0..10 {
+            assert!((r[i] - y[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn prop_forward_then_mul_roundtrips() {
+        let sizes = pt::usize_in(1, 50);
+        pt::check("tri_solve_roundtrip", &sizes, |&n| {
+            let mut rng = Pcg64::new(n as u64 + 3000);
+            let l = random_lower(&mut rng, n);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let b = l.matvec(&x_true);
+            let x = solve_lower(&l, &b);
+            x.iter().zip(&x_true).all(|(a, b)| (a - b).abs() < 1e-8)
+        });
+    }
+}

@@ -1,0 +1,260 @@
+//! `lazygp` — the command-line launcher.
+//!
+//! ```text
+//! lazygp run     --preset table1 | --objective levy5 [--surrogate lazy|exact]
+//! lazygp parallel --objective resnet_cifar10 --workers 20 --batch 20
+//! lazygp list
+//! lazygp info    # PJRT platform + artifact buckets
+//! lazygp score   # XLA-vs-native scoring parity + throughput check
+//! ```
+
+use std::sync::Arc;
+
+use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign, SurrogateChoice};
+use lazygp::config::experiment::{ExperimentConfig, Preset};
+use lazygp::coordinator::{CoordinatorConfig, ParallelBo};
+use lazygp::gp::Surrogate;
+use lazygp::metrics::Trace;
+use lazygp::objectives;
+use lazygp::runtime::{GpScorer, PjrtRuntime};
+use lazygp::util::bench::render_table;
+use lazygp::util::cli::{App, CommandSpec};
+use lazygp::util::timer::fmt_duration_s;
+
+fn app() -> App {
+    App::new("lazygp", "scalable hyperparameter optimization with lazy Gaussian processes")
+        .global_opt("seed", "base RNG seed", Some("0"))
+        .command(
+            CommandSpec::new("run", "run a sequential BO experiment")
+                .opt("preset", "named paper experiment (fig5, fig6, table1..table4)", None)
+                .opt("config", "path to a JSON experiment config", None)
+                .opt("objective", "objective name (see `lazygp list`)", Some("levy5"))
+                .opt("surrogate", "lazy | exact", Some("lazy"))
+                .opt("lag", "lagging factor l (0 = never re-fit)", Some("0"))
+                .opt("iters", "optimization iterations", Some("100"))
+                .opt("seeds", "initial design size", Some("1"))
+                .opt("init", "random | lhs", Some("random"))
+                .opt("out", "write per-iteration trace CSV here", None),
+        )
+        .command(
+            CommandSpec::new("parallel", "run parallel BO (paper §3.4 / Table 4)")
+                .opt("objective", "objective name", Some("resnet_cifar10"))
+                .opt("workers", "worker threads", Some("20"))
+                .opt("batch", "suggestions per round t", Some("20"))
+                .opt("evals", "total objective evaluations", Some("300"))
+                .opt("sleep-scale", "real s slept per simulated s", Some("0"))
+                .opt("fail-prob", "failure injection probability", Some("0"))
+                .opt("out", "write per-iteration trace CSV here", None),
+        )
+        .command(CommandSpec::new("list", "list objectives and presets"))
+        .command(CommandSpec::new("info", "PJRT platform and artifact buckets"))
+        .command(
+            CommandSpec::new("score", "XLA-vs-native scoring parity + throughput")
+                .opt("n", "GP observations", Some("100"))
+                .opt("d", "input dimension", Some("5"))
+                .opt("candidates", "candidate batch size", Some("512")),
+        )
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match app().parse(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            std::process::exit(if args.is_empty() { 0 } else { 2 });
+        }
+    };
+    let result = match parsed.command.as_str() {
+        "run" => cmd_run(&parsed),
+        "parallel" => cmd_parallel(&parsed),
+        "list" => cmd_list(),
+        "info" => cmd_info(),
+        "score" => cmd_score(&parsed),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn experiment_from_args(p: &lazygp::util::cli::Parsed) -> anyhow::Result<ExperimentConfig> {
+    if let Some(path) = p.str("config") {
+        let text = std::fs::read_to_string(path)?;
+        return ExperimentConfig::from_json_str(&text).map_err(|e| anyhow::anyhow!(e));
+    }
+    if let Some(name) = p.str("preset") {
+        let preset = Preset::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset `{name}` (try: {:?})", Preset::names()))?;
+        let mut cfg = preset.config();
+        cfg.seed = p.u64("seed").map_err(|e| anyhow::anyhow!(e.0))?;
+        return Ok(cfg);
+    }
+    let mut cfg = ExperimentConfig {
+        objective: p.str_or("objective", "levy5"),
+        iters: p.usize("iters").map_err(|e| anyhow::anyhow!(e.0))?,
+        seed: p.u64("seed").map_err(|e| anyhow::anyhow!(e.0))?,
+        ..Default::default()
+    };
+    let seeds = p.usize("seeds").map_err(|e| anyhow::anyhow!(e.0))?;
+    cfg.init = match p.str_or("init", "random").as_str() {
+        "random" => InitDesign::Random(seeds),
+        "lhs" => InitDesign::Lhs(seeds),
+        other => anyhow::bail!("bad --init `{other}`"),
+    };
+    let lag = p.usize("lag").map_err(|e| anyhow::anyhow!(e.0))?;
+    cfg.surrogate = match p.str_or("surrogate", "lazy").as_str() {
+        "lazy" => SurrogateChoice::Lazy { lag },
+        "exact" => SurrogateChoice::Exact,
+        other => anyhow::bail!("bad --surrogate `{other}`"),
+    };
+    Ok(cfg)
+}
+
+fn cmd_run(p: &lazygp::util::cli::Parsed) -> anyhow::Result<()> {
+    let cfg = experiment_from_args(p)?;
+    let obj = objectives::by_name(&cfg.objective)
+        .ok_or_else(|| anyhow::anyhow!("unknown objective `{}`", cfg.objective))?;
+    println!(
+        "## lazygp run — objective={} surrogate={:?} iters={} seed={}",
+        cfg.objective, cfg.surrogate, cfg.iters, cfg.seed
+    );
+    let mut driver = BoDriver::new(cfg.bo_config(), obj);
+    let sw = lazygp::util::timer::Stopwatch::new();
+    let best = driver.run(cfg.iters);
+    let wall = sw.elapsed_s();
+
+    let rows: Vec<Vec<String>> = driver
+        .milestones()
+        .into_iter()
+        .map(|(it, v)| vec![it.to_string(), format!("{v:.4}")])
+        .collect();
+    println!("{}", render_table("improvement milestones", &["Iteration", "Best"], &rows));
+    println!(
+        "best {:.6} at iteration {} | gp updates {} | wall {} | sim cost {}",
+        best.value,
+        best.iteration,
+        fmt_duration_s(driver.gp_seconds_total()),
+        fmt_duration_s(wall),
+        fmt_duration_s(driver.sim_cost_total()),
+    );
+    if let Some(out) = p.str("out") {
+        Trace::from_history(&cfg.name, driver.history()).write_csv(out)?;
+        println!("trace written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> anyhow::Result<()> {
+    let name = p.str_or("objective", "resnet_cifar10");
+    let obj = objectives::by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown objective `{name}`"))?;
+    let obj: Arc<dyn objectives::Objective> = Arc::from(obj);
+    let seed = p.u64("seed").map_err(|e| anyhow::anyhow!(e.0))?;
+    let coord = CoordinatorConfig {
+        workers: p.usize("workers").map_err(|e| anyhow::anyhow!(e.0))?,
+        batch_size: p.usize("batch").map_err(|e| anyhow::anyhow!(e.0))?,
+        sleep_scale: p.f64("sleep-scale").map_err(|e| anyhow::anyhow!(e.0))?,
+        fail_prob: p.f64("fail-prob").map_err(|e| anyhow::anyhow!(e.0))?,
+        max_retries: 3,
+        seed,
+    };
+    let evals = p.usize("evals").map_err(|e| anyhow::anyhow!(e.0))?;
+    println!(
+        "## lazygp parallel — objective={name} workers={} t={} evals={evals}",
+        coord.workers, coord.batch_size
+    );
+    let bo = BoConfig::lazy().with_seed(seed).with_init(InitDesign::Random(1));
+    let mut pbo = ParallelBo::new(bo, obj, coord);
+    let best = pbo.run_until_evals(evals);
+    println!(
+        "best {:.6} after {} evaluations in {} rounds | virtual wall {} | sync total {}",
+        best.value,
+        pbo.driver().history().len(),
+        pbo.rounds().len(),
+        fmt_duration_s(pbo.virtual_seconds()),
+        fmt_duration_s(pbo.rounds().iter().map(|r| r.sync_seconds).sum()),
+    );
+    let rows: Vec<Vec<String>> = pbo
+        .driver()
+        .milestones()
+        .into_iter()
+        .map(|(it, v)| vec![it.to_string(), format!("{v:.4}")])
+        .collect();
+    println!("{}", render_table("improvement milestones", &["Evaluation", "Best"], &rows));
+    if let Some(out) = p.str("out") {
+        Trace::from_history(&name, pbo.driver().history()).write_csv(out)?;
+        println!("trace written to {out}");
+    }
+    pbo.finish();
+    Ok(())
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    println!("objectives:");
+    for name in objectives::registry_names() {
+        let obj = objectives::by_name(name).unwrap();
+        println!("  {:<16} d={} bounds[0]={:?}", name, obj.dim(), obj.bounds()[0]);
+    }
+    println!("\npresets: {}", Preset::names().join(", "));
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    match PjrtRuntime::new_default() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifact buckets (candidate batch M = {}):", rt.manifest().m);
+            for b in &rt.manifest().buckets {
+                println!("  n={:<5} d={} → {}", b.n, b.d, b.file);
+            }
+        }
+        Err(e) => {
+            println!("runtime unavailable ({e:#}); run `make artifacts` first");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_score(p: &lazygp::util::cli::Parsed) -> anyhow::Result<()> {
+    use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
+    use lazygp::gp::lazy::LazyGp;
+    use lazygp::runtime::score_native;
+    use lazygp::util::rng::Pcg64;
+
+    let n = p.usize("n").map_err(|e| anyhow::anyhow!(e.0))?;
+    let d = p.usize("d").map_err(|e| anyhow::anyhow!(e.0))?;
+    let m = p.usize("candidates").map_err(|e| anyhow::anyhow!(e.0))?;
+    let scorer = GpScorer::new(PjrtRuntime::new_default()?);
+
+    let mut rng = Pcg64::new(p.u64("seed").map_err(|e| anyhow::anyhow!(e.0))?);
+    let mut gp = LazyGp::paper_default();
+    for _ in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let y = x.iter().map(|v| v.sin()).sum::<f64>();
+        gp.observe(&x, y);
+    }
+    let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, gp.incumbent().unwrap().1);
+    let cands: Vec<Vec<f64>> =
+        (0..m).map(|_| (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect()).collect();
+
+    let (xla, t_xla) = lazygp::util::timer::timed(|| scorer.score_batch(&gp, &acq, 0.01, &cands));
+    let xla = xla?;
+    let (native, t_nat) = lazygp::util::timer::timed(|| score_native(&gp, &acq, &cands));
+    let max_dev = xla
+        .iter()
+        .zip(&native)
+        .map(|(a, b)| (a.ei - b.ei).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "scored {m} candidates against n={n}, d={d}\n  xla    {}  ({:.0}/s)\n  native {}  ({:.0}/s)\n  max |EI dev| {max_dev:.2e}",
+        fmt_duration_s(t_xla),
+        m as f64 / t_xla,
+        fmt_duration_s(t_nat),
+        m as f64 / t_nat,
+    );
+    let (x_calls, n_calls) = scorer.call_counts();
+    println!("  scorer calls: xla={x_calls} native-fallback={n_calls}");
+    Ok(())
+}

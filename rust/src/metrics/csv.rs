@@ -1,0 +1,98 @@
+//! Tiny CSV writer with RFC-4180 quoting.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent directories) and write the header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<Self> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = Self { out: BufWriter::new(File::create(path)?), columns: header.len() };
+        w.write_row_strs(header)?;
+        Ok(w)
+    }
+
+    /// Write a row of raw string cells (quoted as needed).
+    pub fn write_row_strs(&mut self, cells: &[&str]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.columns, "csv row width mismatch");
+        let mut first = true;
+        for cell in cells {
+            if !first {
+                self.out.write_all(b",")?;
+            }
+            first = false;
+            if cell.contains([',', '"', '\n']) {
+                write!(self.out, "\"{}\"", cell.replace('"', "\"\""))?;
+            } else {
+                self.out.write_all(cell.as_bytes())?;
+            }
+        }
+        self.out.write_all(b"\n")
+    }
+
+    /// Write a row of f64 cells with full precision.
+    pub fn write_row_f64(&mut self, cells: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = cells.iter().map(|v| format!("{v}")).collect();
+        let refs: Vec<&str> = strs.iter().map(String::as_str).collect();
+        self.write_row_strs(&refs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("lazygp_csv_{name}_{}.csv", std::process::id()))
+    }
+
+    #[test]
+    fn writes_header_and_rows() {
+        let path = tmp("basic");
+        {
+            let mut w = CsvWriter::create(&path, &["iter", "best"]).unwrap();
+            w.write_row_f64(&[1.0, -5.23]).unwrap();
+            w.write_row_f64(&[2.0, -4.5]).unwrap();
+            w.flush().unwrap();
+        }
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body, "iter,best\n1,-5.23\n2,-4.5\n");
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn quotes_special_cells() {
+        let path = tmp("quote");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.write_row_strs(&["x,y", "he said \"hi\""]).unwrap();
+            w.flush().unwrap();
+        }
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"x,y\""));
+        assert!(body.contains("\"he said \"\"hi\"\"\""));
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn rejects_wrong_width() {
+        let path = tmp("width");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = w.write_row_f64(&[1.0]);
+    }
+}

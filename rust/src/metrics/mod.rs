@@ -1,0 +1,11 @@
+//! Metrics: per-iteration traces, CSV emission, and run summaries.
+//!
+//! Every experiment driver appends [`TracePoint`]s to a [`Trace`]; the
+//! bench targets render them to CSV under `target/experiments/` so each
+//! paper figure can be re-plotted from machine-readable output.
+
+pub mod csv;
+pub mod trace;
+
+pub use csv::CsvWriter;
+pub use trace::{RunSummary, Trace, TracePoint};

@@ -1,0 +1,240 @@
+//! Per-iteration experiment traces and run summaries.
+
+use super::csv::CsvWriter;
+use crate::bo::driver::IterationRecord;
+use crate::util::stats::Summary;
+
+/// One iteration's metrics, flattened for CSV.
+#[derive(Debug, Clone)]
+pub struct TracePoint {
+    pub iter: usize,
+    pub y: f64,
+    pub best: f64,
+    pub gp_seconds: f64,
+    pub acq_seconds: f64,
+    pub sim_cost_s: f64,
+    /// cumulative GP seconds up to and including this iteration
+    pub gp_seconds_cum: f64,
+}
+
+/// A named sequence of trace points.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub name: String,
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), points: Vec::new() }
+    }
+
+    /// Build from a BO driver's history.
+    pub fn from_history(name: impl Into<String>, history: &[IterationRecord]) -> Self {
+        let mut t = Self::new(name);
+        let mut cum = 0.0;
+        for rec in history {
+            cum += rec.gp_seconds;
+            t.points.push(TracePoint {
+                iter: rec.iter,
+                y: rec.y,
+                best: rec.best,
+                gp_seconds: rec.gp_seconds,
+                acq_seconds: rec.acq_seconds,
+                sim_cost_s: rec.sim_cost_s,
+                gp_seconds_cum: cum,
+            });
+        }
+        t
+    }
+
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    /// First iteration at which `best` reached `threshold` (maximization).
+    pub fn iters_to_reach(&self, threshold: f64) -> Option<usize> {
+        self.points.iter().find(|p| p.best >= threshold).map(|p| p.iter)
+    }
+
+    /// Final incumbent.
+    pub fn final_best(&self) -> Option<f64> {
+        self.points.last().map(|p| p.best)
+    }
+
+    /// Total GP update time.
+    pub fn gp_seconds_total(&self) -> f64 {
+        self.points.last().map_or(0.0, |p| p.gp_seconds_cum)
+    }
+
+    /// Milestone rows `(iter, best)` — the paper's table format.
+    pub fn milestones(&self) -> Vec<(usize, f64)> {
+        let mut out = Vec::new();
+        let mut best = f64::NEG_INFINITY;
+        for p in &self.points {
+            if p.y > best {
+                best = p.y;
+                out.push((p.iter, best));
+            }
+        }
+        out
+    }
+
+    /// Write to CSV.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["iter", "y", "best", "gp_seconds", "acq_seconds", "sim_cost_s", "gp_seconds_cum"],
+        )?;
+        for p in &self.points {
+            w.write_row_f64(&[
+                p.iter as f64,
+                p.y,
+                p.best,
+                p.gp_seconds,
+                p.acq_seconds,
+                p.sim_cost_s,
+                p.gp_seconds_cum,
+            ])?;
+        }
+        w.flush()
+    }
+
+    /// Aggregate into a [`RunSummary`].
+    pub fn summarize(&self) -> RunSummary {
+        let mut gp = Summary::new();
+        let mut acq = Summary::new();
+        for p in &self.points {
+            gp.push(p.gp_seconds);
+            acq.push(p.acq_seconds);
+        }
+        RunSummary {
+            name: self.name.clone(),
+            iters: self.points.len(),
+            final_best: self.final_best().unwrap_or(f64::NEG_INFINITY),
+            gp_seconds_total: self.gp_seconds_total(),
+            gp_seconds_mean: gp.mean(),
+            gp_seconds_max: if gp.count() > 0 { gp.max() } else { 0.0 },
+            acq_seconds_mean: acq.mean(),
+            sim_cost_total: self.points.iter().map(|p| p.sim_cost_s).sum(),
+        }
+    }
+}
+
+/// Aggregated metrics of one run.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub name: String,
+    pub iters: usize,
+    pub final_best: f64,
+    pub gp_seconds_total: f64,
+    pub gp_seconds_mean: f64,
+    pub gp_seconds_max: f64,
+    pub acq_seconds_mean: f64,
+    pub sim_cost_total: f64,
+}
+
+impl RunSummary {
+    /// Render one human-readable line.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<24} iters {:>5}  best {:>12.4}  gp_total {:>10.3}s  gp_mean {:>9.6}s  sim_cost {:>10.1}s",
+            self.name,
+            self.iters,
+            self.final_best,
+            self.gp_seconds_total,
+            self.gp_seconds_mean,
+            self.sim_cost_total
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_trace() -> Trace {
+        let mut t = Trace::new("demo");
+        let ys = [-5.0, -3.0, -4.0, -1.0, -2.0];
+        let mut best = f64::NEG_INFINITY;
+        let mut cum = 0.0;
+        for (i, &y) in ys.iter().enumerate() {
+            best = best.max(y);
+            cum += 0.1;
+            t.push(TracePoint {
+                iter: i + 1,
+                y,
+                best,
+                gp_seconds: 0.1,
+                acq_seconds: 0.05,
+                sim_cost_s: 8.0,
+                gp_seconds_cum: cum,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn milestones_are_strict_improvements() {
+        let t = demo_trace();
+        assert_eq!(t.milestones(), vec![(1, -5.0), (2, -3.0), (4, -1.0)]);
+    }
+
+    #[test]
+    fn iters_to_reach_threshold() {
+        let t = demo_trace();
+        assert_eq!(t.iters_to_reach(-3.5), Some(2));
+        assert_eq!(t.iters_to_reach(-1.0), Some(4));
+        assert_eq!(t.iters_to_reach(0.0), None);
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let s = demo_trace().summarize();
+        assert_eq!(s.iters, 5);
+        assert_eq!(s.final_best, -1.0);
+        assert!((s.gp_seconds_total - 0.5).abs() < 1e-12);
+        assert!((s.gp_seconds_mean - 0.1).abs() < 1e-12);
+        assert!((s.sim_cost_total - 40.0).abs() < 1e-12);
+        assert!(!s.render().is_empty());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = demo_trace();
+        let path = std::env::temp_dir().join(format!("lazygp_trace_{}.csv", std::process::id()));
+        t.write_csv(path.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("iter,y,best"));
+        assert_eq!(body.lines().count(), 6);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn from_history_computes_cumsum() {
+        use crate::bo::driver::IterationRecord;
+        let hist = vec![
+            IterationRecord {
+                iter: 1,
+                x: vec![0.0],
+                y: 1.0,
+                best: 1.0,
+                gp_seconds: 0.5,
+                acq_seconds: 0.0,
+                sim_cost_s: 0.0,
+            },
+            IterationRecord {
+                iter: 2,
+                x: vec![0.0],
+                y: 2.0,
+                best: 2.0,
+                gp_seconds: 0.25,
+                acq_seconds: 0.0,
+                sim_cost_s: 0.0,
+            },
+        ];
+        let t = Trace::from_history("h", &hist);
+        assert!((t.points[1].gp_seconds_cum - 0.75).abs() < 1e-12);
+        assert_eq!(t.final_best(), Some(2.0));
+    }
+}

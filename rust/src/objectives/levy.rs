@@ -1,0 +1,154 @@
+//! The Levy function — the paper's synthetic benchmark (§4.1).
+//!
+//! d-dimensional form (paper Eq. 19):
+//!
+//! ```text
+//! f(x) = sin²(π w₁)
+//!      + Σ_{i=1}^{d−1} (wᵢ − 1)² [1 + 10 sin²(π wᵢ + 1)]
+//!      + (w_d − 1)² [1 + sin²(2π w_d)]
+//! where wᵢ = 1 + (xᵢ − 1)/4
+//! ```
+//!
+//! evaluated on `xᵢ ∈ [−10, 10]` with global *minimum* 0 at `x* = 1`.
+//! Following the paper we maximize `−f` so the optimum is 0 from below.
+//! The 1-D special case (paper Eq. 7) drops the middle sum.
+
+use super::{Evaluation, Objective};
+use crate::util::rng::Pcg64;
+use std::f64::consts::PI;
+
+/// Negated d-dimensional Levy function on `[−10, 10]^d`.
+#[derive(Debug, Clone)]
+pub struct Levy {
+    name: String,
+    bounds: Vec<(f64, f64)>,
+}
+
+impl Levy {
+    pub fn new(d: usize) -> Self {
+        assert!(d >= 1);
+        Self { name: format!("levy{d}"), bounds: vec![(-10.0, 10.0); d] }
+    }
+
+    /// Raw (positive, to-minimize) Levy value, paper Eq. 19.
+    pub fn raw(x: &[f64]) -> f64 {
+        let d = x.len();
+        let w = |i: usize| 1.0 + (x[i] - 1.0) / 4.0;
+        let w1 = w(0);
+        let wd = w(d - 1);
+        let mut f = (PI * w1).sin().powi(2);
+        for i in 0..d - 1 {
+            let wi = w(i);
+            f += (wi - 1.0).powi(2) * (1.0 + 10.0 * (PI * wi + 1.0).sin().powi(2));
+        }
+        f += (wd - 1.0).powi(2) * (1.0 + (2.0 * PI * wd).sin().powi(2));
+        f
+    }
+
+    /// The 1-D special case of paper Eq. 7 (identical to `raw` at d=1 —
+    /// kept explicit so Figs. 2/3 reference the formula the paper prints).
+    pub fn raw_1d(x: f64) -> f64 {
+        let w = 1.0 + (x - 1.0) / 4.0;
+        (PI * w).sin().powi(2) + (w - 1.0).powi(2) * (1.0 + (2.0 * PI * w).sin().powi(2))
+    }
+}
+
+impl Objective for Levy {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn bounds(&self) -> &[(f64, f64)] {
+        &self.bounds
+    }
+
+    fn eval(&self, x: &[f64], _rng: &mut Pcg64) -> Evaluation {
+        Evaluation { value: -Self::raw(x), sim_cost_s: 0.0 }
+    }
+
+    fn optimum(&self) -> Option<f64> {
+        Some(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+
+    #[test]
+    fn optimum_at_ones() {
+        for d in [1, 2, 5, 10] {
+            let x = vec![1.0; d];
+            assert!(Levy::raw(&x).abs() < 1e-15, "d={d}");
+        }
+    }
+
+    #[test]
+    fn nonnegative_everywhere_sampled() {
+        let mut rng = Pcg64::new(121);
+        for d in [1, 3, 5] {
+            let levy = Levy::new(d);
+            for _ in 0..500 {
+                let x = rng.point_in(levy.bounds());
+                assert!(Levy::raw(&x) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn eval_is_negated_raw() {
+        let levy = Levy::new(5);
+        let mut rng = Pcg64::new(123);
+        let x = rng.point_in(levy.bounds());
+        let e = levy.eval(&x, &mut rng);
+        assert!((e.value + Levy::raw(&x)).abs() < 1e-15);
+        assert_eq!(e.sim_cost_s, 0.0);
+    }
+
+    #[test]
+    fn raw_1d_matches_raw() {
+        for i in -20..=20 {
+            let x = i as f64 / 2.0;
+            assert!((Levy::raw_1d(x) - Levy::raw(&[x])).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn known_1d_value() {
+        // w(0) = 0.75 ⇒ sin²(0.75π) + (−0.25)²(1 + sin²(1.5π))
+        let w: f64 = 0.75;
+        let want =
+            (PI * w).sin().powi(2) + (w - 1.0).powi(2) * (1.0 + (2.0 * PI * w).sin().powi(2));
+        assert!((Levy::raw_1d(0.0) - want).abs() < 1e-14);
+    }
+
+    #[test]
+    fn multimodal_in_1d() {
+        // count local minima of the 1-D Levy on a fine grid — must be > 1
+        let n = 2000;
+        let f: Vec<f64> =
+            (0..n).map(|i| Levy::raw_1d(-10.0 + 20.0 * i as f64 / (n - 1) as f64)).collect();
+        let mut minima = 0;
+        for i in 1..n - 1 {
+            if f[i] < f[i - 1] && f[i] < f[i + 1] {
+                minima += 1;
+            }
+        }
+        assert!(minima > 3, "only {minima} local minima found");
+    }
+
+    #[test]
+    fn prop_value_zero_only_near_ones() {
+        // values very close to 0 should imply x close to 1 in every coord
+        let g = pt::vec_of(5, pt::f64_in(-10.0, 10.0));
+        pt::check("levy_zero_implies_ones", &g, |x| {
+            let v = Levy::raw(x);
+            if v < 1e-4 {
+                x.iter().all(|&xi| (xi - 1.0).abs() < 0.2)
+            } else {
+                true
+            }
+        });
+    }
+}

@@ -1,0 +1,141 @@
+//! Objective functions: everything Bayesian optimization can be pointed at.
+//!
+//! * [`levy`] — the paper's d-dimensional Levy function (Eq. 19, §4.1) and
+//!   its 1-D special case (Eq. 7, Figs. 2/3).
+//! * [`suite`] — standard synthetic benchmarks (Branin, Ackley, Rastrigin,
+//!   Rosenbrock, Hartmann-6, Sphere, Griewank) used by tests, examples and
+//!   ablations.
+//! * [`trainer`] — the **simulated neural-network trainers** standing in
+//!   for the paper's real LeNet/MNIST and ResNet32/CIFAR10 runs (§4.2–4.4).
+//!   See DESIGN.md §4 for the substitution argument.
+//!
+//! All objectives are *maximized* (the paper maximizes `−f_L` and test
+//! accuracy), may be stochastic (the trainers are), and expose a simulated
+//! wall-clock cost so end-to-end experiments can reproduce the paper's
+//! time-dominance structure (training time vs GP overhead, Fig. 1).
+
+pub mod levy;
+pub mod suite;
+pub mod trainer;
+
+use crate::util::rng::Pcg64;
+
+/// Result of one objective evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Evaluation {
+    /// objective value (to maximize)
+    pub value: f64,
+    /// simulated wall-clock seconds this evaluation would have cost on the
+    /// paper's testbed (0 for analytic functions)
+    pub sim_cost_s: f64,
+}
+
+/// A black-box objective over a box-bounded domain.
+pub trait Objective: Send + Sync {
+    /// Short identifier used by the CLI/config (`levy5`, `lenet_mnist`, …).
+    fn name(&self) -> &str;
+
+    /// Box bounds, one `(lo, hi)` per dimension.
+    fn bounds(&self) -> &[(f64, f64)];
+
+    fn dim(&self) -> usize {
+        self.bounds().len()
+    }
+
+    /// Evaluate at `x`. Stochastic objectives draw noise from `rng`
+    /// (deterministic objectives ignore it), keeping whole experiments
+    /// replayable from a single seed.
+    fn eval(&self, x: &[f64], rng: &mut Pcg64) -> Evaluation;
+
+    /// Known global maximum of the *noise-free* objective, when available
+    /// (used for convergence milestones — e.g. 0 for the negated Levy).
+    fn optimum(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Look up an objective by CLI name. Central registry used by the launcher
+/// and the config layer.
+pub fn by_name(name: &str) -> Option<Box<dyn Objective>> {
+    match name {
+        "levy1" => Some(Box::new(levy::Levy::new(1))),
+        "levy2" => Some(Box::new(levy::Levy::new(2))),
+        "levy5" => Some(Box::new(levy::Levy::new(5))),
+        "levy10" => Some(Box::new(levy::Levy::new(10))),
+        "branin" => Some(Box::new(suite::Branin::new())),
+        "ackley5" => Some(Box::new(suite::Ackley::new(5))),
+        "rastrigin5" => Some(Box::new(suite::Rastrigin::new(5))),
+        "rosenbrock5" => Some(Box::new(suite::Rosenbrock::new(5))),
+        "hartmann6" => Some(Box::new(suite::Hartmann6::new())),
+        "sphere5" => Some(Box::new(suite::Sphere::new(5))),
+        "griewank5" => Some(Box::new(suite::Griewank::new(5))),
+        "lenet_mnist" => Some(Box::new(trainer::LeNetMnistSim::new())),
+        "resnet_cifar10" => Some(Box::new(trainer::ResNetCifarSim::new())),
+        _ => {
+            // parametric forms: levy<d>
+            if let Some(d) = name.strip_prefix("levy").and_then(|s| s.parse::<usize>().ok()) {
+                if d >= 1 && d <= 100 {
+                    return Some(Box::new(levy::Levy::new(d)));
+                }
+            }
+            None
+        }
+    }
+}
+
+/// All registered objective names (for `lazygp list`).
+pub fn registry_names() -> Vec<&'static str> {
+    vec![
+        "levy1",
+        "levy2",
+        "levy5",
+        "levy10",
+        "branin",
+        "ackley5",
+        "rastrigin5",
+        "rosenbrock5",
+        "hartmann6",
+        "sphere5",
+        "griewank5",
+        "lenet_mnist",
+        "resnet_cifar10",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in registry_names() {
+            let obj = by_name(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(obj.name(), name);
+            assert!(obj.dim() > 0);
+            assert_eq!(obj.bounds().len(), obj.dim());
+        }
+    }
+
+    #[test]
+    fn parametric_levy() {
+        let o = by_name("levy7").unwrap();
+        assert_eq!(o.dim(), 7);
+        assert!(by_name("levy0").is_none());
+        assert!(by_name("levyx").is_none());
+        assert!(by_name("unknown").is_none());
+    }
+
+    #[test]
+    fn evaluations_are_finite_at_random_points() {
+        let mut rng = Pcg64::new(1);
+        for name in registry_names() {
+            let obj = by_name(name).unwrap();
+            for _ in 0..20 {
+                let x = rng.point_in(obj.bounds());
+                let e = obj.eval(&x, &mut rng);
+                assert!(e.value.is_finite(), "{name} at {x:?}");
+                assert!(e.sim_cost_s >= 0.0);
+            }
+        }
+    }
+}

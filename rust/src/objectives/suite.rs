@@ -1,0 +1,343 @@
+//! Standard synthetic benchmark functions (all negated for maximization).
+//!
+//! Used by unit/integration tests, the quickstart example, and the ablation
+//! benches. Definitions follow the Virtual Library of Simulation
+//! Experiments (Surjanovic & Bingham).
+
+use super::{Evaluation, Objective};
+use crate::util::rng::Pcg64;
+use std::f64::consts::{E, PI};
+
+macro_rules! simple_objective {
+    ($t:ident, $name:expr, $optimum:expr) => {
+        impl Objective for $t {
+            fn name(&self) -> &str {
+                $name
+            }
+            fn bounds(&self) -> &[(f64, f64)] {
+                &self.bounds
+            }
+            fn eval(&self, x: &[f64], _rng: &mut Pcg64) -> Evaluation {
+                Evaluation { value: -Self::raw(x), sim_cost_s: 0.0 }
+            }
+            fn optimum(&self) -> Option<f64> {
+                $optimum
+            }
+        }
+    };
+}
+
+/// Branin–Hoo on `[−5, 10] × [0, 15]`; three global minima of value
+/// ≈ 0.397887.
+#[derive(Debug, Clone)]
+pub struct Branin {
+    bounds: Vec<(f64, f64)>,
+}
+
+impl Branin {
+    pub fn new() -> Self {
+        Self { bounds: vec![(-5.0, 10.0), (0.0, 15.0)] }
+    }
+
+    pub fn raw(x: &[f64]) -> f64 {
+        let (x1, x2) = (x[0], x[1]);
+        let a = 1.0;
+        let b = 5.1 / (4.0 * PI * PI);
+        let c = 5.0 / PI;
+        let r = 6.0;
+        let s = 10.0;
+        let t = 1.0 / (8.0 * PI);
+        a * (x2 - b * x1 * x1 + c * x1 - r).powi(2) + s * (1.0 - t) * x1.cos() + s
+    }
+}
+
+impl Default for Branin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+simple_objective!(Branin, "branin", Some(-0.39788735772973816));
+
+/// Ackley on `[−32.768, 32.768]^d`; global minimum 0 at the origin.
+#[derive(Debug, Clone)]
+pub struct Ackley {
+    name: String,
+    bounds: Vec<(f64, f64)>,
+}
+
+impl Ackley {
+    pub fn new(d: usize) -> Self {
+        Self { name: format!("ackley{d}"), bounds: vec![(-32.768, 32.768); d] }
+    }
+
+    pub fn raw(x: &[f64]) -> f64 {
+        let d = x.len() as f64;
+        let sum_sq: f64 = x.iter().map(|v| v * v).sum();
+        let sum_cos: f64 = x.iter().map(|v| (2.0 * PI * v).cos()).sum();
+        -20.0 * (-0.2 * (sum_sq / d).sqrt()).exp() - (sum_cos / d).exp() + 20.0 + E
+    }
+}
+
+impl Objective for Ackley {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn bounds(&self) -> &[(f64, f64)] {
+        &self.bounds
+    }
+    fn eval(&self, x: &[f64], _rng: &mut Pcg64) -> Evaluation {
+        Evaluation { value: -Self::raw(x), sim_cost_s: 0.0 }
+    }
+    fn optimum(&self) -> Option<f64> {
+        Some(0.0)
+    }
+}
+
+/// Rastrigin on `[−5.12, 5.12]^d`; global minimum 0 at the origin; highly
+/// multimodal.
+#[derive(Debug, Clone)]
+pub struct Rastrigin {
+    name: String,
+    bounds: Vec<(f64, f64)>,
+}
+
+impl Rastrigin {
+    pub fn new(d: usize) -> Self {
+        Self { name: format!("rastrigin{d}"), bounds: vec![(-5.12, 5.12); d] }
+    }
+
+    pub fn raw(x: &[f64]) -> f64 {
+        10.0 * x.len() as f64
+            + x.iter().map(|v| v * v - 10.0 * (2.0 * PI * v).cos()).sum::<f64>()
+    }
+}
+
+impl Objective for Rastrigin {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn bounds(&self) -> &[(f64, f64)] {
+        &self.bounds
+    }
+    fn eval(&self, x: &[f64], _rng: &mut Pcg64) -> Evaluation {
+        Evaluation { value: -Self::raw(x), sim_cost_s: 0.0 }
+    }
+    fn optimum(&self) -> Option<f64> {
+        Some(0.0)
+    }
+}
+
+/// Rosenbrock on `[−5, 10]^d`; global minimum 0 at `(1, …, 1)`; the curved
+/// valley stresses the acquisition optimizer.
+#[derive(Debug, Clone)]
+pub struct Rosenbrock {
+    name: String,
+    bounds: Vec<(f64, f64)>,
+}
+
+impl Rosenbrock {
+    pub fn new(d: usize) -> Self {
+        assert!(d >= 2);
+        Self { name: format!("rosenbrock{d}"), bounds: vec![(-5.0, 10.0); d] }
+    }
+
+    pub fn raw(x: &[f64]) -> f64 {
+        (0..x.len() - 1)
+            .map(|i| 100.0 * (x[i + 1] - x[i] * x[i]).powi(2) + (1.0 - x[i]).powi(2))
+            .sum()
+    }
+}
+
+impl Objective for Rosenbrock {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn bounds(&self) -> &[(f64, f64)] {
+        &self.bounds
+    }
+    fn eval(&self, x: &[f64], _rng: &mut Pcg64) -> Evaluation {
+        Evaluation { value: -Self::raw(x), sim_cost_s: 0.0 }
+    }
+    fn optimum(&self) -> Option<f64> {
+        Some(0.0)
+    }
+}
+
+/// Hartmann-6 on `[0, 1]^6`; global minimum ≈ −3.32237.
+#[derive(Debug, Clone)]
+pub struct Hartmann6 {
+    bounds: Vec<(f64, f64)>,
+}
+
+impl Hartmann6 {
+    pub fn new() -> Self {
+        Self { bounds: vec![(0.0, 1.0); 6] }
+    }
+
+    pub fn raw(x: &[f64]) -> f64 {
+        const ALPHA: [f64; 4] = [1.0, 1.2, 3.0, 3.2];
+        const A: [[f64; 6]; 4] = [
+            [10.0, 3.0, 17.0, 3.5, 1.7, 8.0],
+            [0.05, 10.0, 17.0, 0.1, 8.0, 14.0],
+            [3.0, 3.5, 1.7, 10.0, 17.0, 8.0],
+            [17.0, 8.0, 0.05, 10.0, 0.1, 14.0],
+        ];
+        const P: [[f64; 6]; 4] = [
+            [0.1312, 0.1696, 0.5569, 0.0124, 0.8283, 0.5886],
+            [0.2329, 0.4135, 0.8307, 0.3736, 0.1004, 0.9991],
+            [0.2348, 0.1451, 0.3522, 0.2883, 0.3047, 0.6650],
+            [0.4047, 0.8828, 0.8732, 0.5743, 0.1091, 0.0381],
+        ];
+        -(0..4)
+            .map(|i| {
+                let inner: f64 =
+                    (0..6).map(|j| A[i][j] * (x[j] - P[i][j]).powi(2)).sum();
+                ALPHA[i] * (-inner).exp()
+            })
+            .sum::<f64>()
+    }
+}
+
+impl Default for Hartmann6 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+simple_objective!(Hartmann6, "hartmann6", Some(3.32236801141551));
+
+/// Sphere on `[−5.12, 5.12]^d` — the sanity-check convex bowl.
+#[derive(Debug, Clone)]
+pub struct Sphere {
+    name: String,
+    bounds: Vec<(f64, f64)>,
+}
+
+impl Sphere {
+    pub fn new(d: usize) -> Self {
+        Self { name: format!("sphere{d}"), bounds: vec![(-5.12, 5.12); d] }
+    }
+
+    pub fn raw(x: &[f64]) -> f64 {
+        x.iter().map(|v| v * v).sum()
+    }
+}
+
+impl Objective for Sphere {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn bounds(&self) -> &[(f64, f64)] {
+        &self.bounds
+    }
+    fn eval(&self, x: &[f64], _rng: &mut Pcg64) -> Evaluation {
+        Evaluation { value: -Self::raw(x), sim_cost_s: 0.0 }
+    }
+    fn optimum(&self) -> Option<f64> {
+        Some(0.0)
+    }
+}
+
+/// Griewank on `[−600, 600]^d`; global minimum 0 at the origin.
+#[derive(Debug, Clone)]
+pub struct Griewank {
+    name: String,
+    bounds: Vec<(f64, f64)>,
+}
+
+impl Griewank {
+    pub fn new(d: usize) -> Self {
+        Self { name: format!("griewank{d}"), bounds: vec![(-600.0, 600.0); d] }
+    }
+
+    pub fn raw(x: &[f64]) -> f64 {
+        let sum: f64 = x.iter().map(|v| v * v / 4000.0).sum();
+        let prod: f64 =
+            x.iter().enumerate().map(|(i, v)| (v / ((i + 1) as f64).sqrt()).cos()).product();
+        sum - prod + 1.0
+    }
+}
+
+impl Objective for Griewank {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn bounds(&self) -> &[(f64, f64)] {
+        &self.bounds
+    }
+    fn eval(&self, x: &[f64], _rng: &mut Pcg64) -> Evaluation {
+        Evaluation { value: -Self::raw(x), sim_cost_s: 0.0 }
+    }
+    fn optimum(&self) -> Option<f64> {
+        Some(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn branin_minima() {
+        // the three known minimizers
+        for m in [[-PI, 12.275], [PI, 2.275], [9.42478, 2.475]] {
+            assert!((Branin::raw(&m) - 0.397887).abs() < 1e-4, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn ackley_zero_at_origin() {
+        for d in [1, 2, 5] {
+            assert!(Ackley::raw(&vec![0.0; d]).abs() < 1e-12);
+        }
+        assert!(Ackley::raw(&[1.0, 1.0]) > 1.0);
+    }
+
+    #[test]
+    fn rastrigin_zero_at_origin_and_multimodal() {
+        assert!(Rastrigin::raw(&[0.0, 0.0]).abs() < 1e-12);
+        // integer points are local minima; value 1 at distance-1 points
+        // along one axis times cos term... just check > 0 off-origin
+        assert!(Rastrigin::raw(&[1.0, 0.0]) > 0.5);
+    }
+
+    #[test]
+    fn rosenbrock_zero_at_ones() {
+        assert!(Rosenbrock::raw(&[1.0, 1.0, 1.0]).abs() < 1e-12);
+        assert!(Rosenbrock::raw(&[0.0, 0.0]) > 0.5);
+    }
+
+    #[test]
+    fn hartmann6_known_optimum() {
+        let x_star = [0.20169, 0.150011, 0.476874, 0.275332, 0.311652, 0.6573];
+        assert!((Hartmann6::raw(&x_star) + 3.32237).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sphere_and_griewank_zero_at_origin() {
+        assert_eq!(Sphere::raw(&[0.0; 4]), 0.0);
+        assert!(Griewank::raw(&[0.0; 4]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optima_consistent_with_eval_sign() {
+        // `optimum()` is in maximize-space: eval values never exceed it
+        let mut rng = Pcg64::new(131);
+        let objs: Vec<Box<dyn Objective>> = vec![
+            Box::new(Branin::new()),
+            Box::new(Ackley::new(3)),
+            Box::new(Rastrigin::new(3)),
+            Box::new(Hartmann6::new()),
+            Box::new(Sphere::new(3)),
+        ];
+        for obj in &objs {
+            let opt = obj.optimum().unwrap();
+            for _ in 0..200 {
+                let x = rng.point_in(obj.bounds());
+                let v = obj.eval(&x, &mut rng).value;
+                assert!(v <= opt + 1e-9, "{} exceeded optimum: {v} > {opt}", obj.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Simulated neural-network trainers — the stand-ins for the paper's real
+//! LeNet/MNIST and ResNet32/CIFAR10 training runs (§4.2–4.4).
+//!
+//! The paper's testbed (GTX 1080Ti nodes, TensorFlow 1.12) is unavailable;
+//! per DESIGN.md §4 we substitute analytic *accuracy response surfaces*
+//! with heteroscedastic noise plus a wall-clock cost model. Bayesian
+//! optimization only ever sees `(x, accuracy)` pairs and the elapsed time,
+//! so a surface with the right topology (a needle-ish optimum basin in
+//! log-learning-rate space, divergence cliffs, interacting momentum, mild
+//! weight-decay curvature, dropout underfitting walls) exercises exactly
+//! the code path the paper exercises, at the same per-iteration cost
+//! structure (training ≫ GP update early on; GP update exploding for the
+//! naive baseline as n grows).
+//!
+//! The surfaces are calibrated so that well-tuned configurations reach the
+//! paper's reported accuracies (≈ 0.97 for LeNet/MNIST after 10 epochs,
+//! ≈ 0.81 for ResNet32/CIFAR10 after 10 epochs) and bad ones collapse to
+//! chance (0.1 for ten classes).
+
+use super::{Evaluation, Objective};
+use crate::util::rng::Pcg64;
+
+/// Effective learning rate under SGD momentum: `lr / (1 − m)`.
+#[inline]
+fn effective_lr(lr: f64, momentum: f64) -> f64 {
+    lr / (1.0 - momentum.min(0.995))
+}
+
+/// Smooth "accuracy from effective learning rate" bump in log10 space:
+/// peak 1.0 at `log_opt`, Gaussian falloff with width `width` below the
+/// divergence threshold, collapse above it.
+fn lr_response(eff_lr: f64, log_opt: f64, width: f64, diverge_at: f64) -> f64 {
+    let l = eff_lr.max(1e-12).log10();
+    if eff_lr >= diverge_at {
+        // diverged: exploding loss, accuracy at chance
+        return 0.0;
+    }
+    let z = (l - log_opt) / width;
+    (-0.5 * z * z).exp()
+}
+
+/// Simulated LeNet-5 on MNIST (paper §4.2).
+///
+/// Hyper-parameters (paper order): dropout keep probabilities
+/// `d₁, d₂ ∈ [0.01, 1]`, learning rate `lr ∈ [1e-4, 0.1]`, weight decay
+/// `w ∈ [0, 1e-3]`, momentum `m ∈ [0, 0.99]`.
+/// Well-tuned accuracy ≈ 0.97 (paper Tab. 2); simulated cost ≈ 8 s
+/// per 10-epoch training run (paper: "in average 8 seconds").
+#[derive(Debug, Clone)]
+pub struct LeNetMnistSim {
+    bounds: Vec<(f64, f64)>,
+    /// mean simulated seconds per training run
+    pub train_cost_s: f64,
+}
+
+impl LeNetMnistSim {
+    pub const PEAK_ACCURACY: f64 = 0.975;
+
+    pub fn new() -> Self {
+        Self {
+            bounds: vec![
+                (0.01, 1.0),   // d1 keep prob
+                (0.01, 1.0),   // d2 keep prob
+                (1e-4, 0.1),   // learning rate
+                (0.0, 1e-3),   // weight decay
+                (0.0, 0.99),   // momentum
+            ],
+            train_cost_s: 8.0,
+        }
+    }
+
+    /// Noise-free accuracy surface.
+    pub fn accuracy(x: &[f64]) -> f64 {
+        let (d1, d2, lr, wd, m) = (x[0], x[1], x[2], x[3], x[4]);
+        let eff = effective_lr(lr, m);
+        // MNIST/LeNet sweet spot: eff lr ≈ 0.06 (log10 ≈ −1.2); diverges
+        // past ≈ 1.0
+        let lr_term = lr_response(eff, -1.2, 0.65, 1.0);
+        if lr_term == 0.0 {
+            return 0.1; // chance for 10 classes
+        }
+        // dropout: keep probs below ~0.3 underfit hard; ~0.5–0.9 is ideal;
+        // keeping everything (1.0) overfits slightly
+        let drop = |d: f64| -> f64 {
+            let under = if d < 0.35 { (0.35 - d) * 0.9 } else { 0.0 };
+            let over = if d > 0.9 { (d - 0.9) * 0.06 } else { 0.0 };
+            under + over
+        };
+        // weight decay: mild preference for ≈ 3e-4
+        let wd_pen = ((wd - 3e-4) / 1e-3).powi(2) * 0.004;
+        // momentum mildly helps via eff-lr already; very high momentum is
+        // unstable on its own
+        let m_pen = if m > 0.95 { (m - 0.95) * 0.8 } else { 0.0 };
+
+        let acc = Self::PEAK_ACCURACY * lr_term - drop(d1) - drop(d2) - wd_pen - m_pen;
+        acc.clamp(0.1, Self::PEAK_ACCURACY)
+    }
+}
+
+impl Default for LeNetMnistSim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Objective for LeNetMnistSim {
+    fn name(&self) -> &str {
+        "lenet_mnist"
+    }
+
+    fn bounds(&self) -> &[(f64, f64)] {
+        &self.bounds
+    }
+
+    fn eval(&self, x: &[f64], rng: &mut Pcg64) -> Evaluation {
+        let mean_acc = Self::accuracy(x);
+        // heteroscedastic seed/shuffle noise: tight near the peak (well-
+        // conditioned training), sloppy in bad regions
+        let noise_std = 0.002 + 0.02 * (1.0 - mean_acc / Self::PEAK_ACCURACY).max(0.0);
+        let value = (mean_acc + rng.normal() * noise_std).clamp(0.05, 0.995);
+        // cost jitters ±10% around the 8 s mean
+        let cost = self.train_cost_s * (1.0 + 0.1 * rng.normal()).max(0.5);
+        Evaluation { value, sim_cost_s: cost }
+    }
+
+    fn optimum(&self) -> Option<f64> {
+        Some(Self::PEAK_ACCURACY)
+    }
+}
+
+/// Simulated ResNet-32 on CIFAR10 (paper §4.3/§4.4).
+///
+/// Hyper-parameters: `lr ∈ [1e-4, 0.1]`, weight decay `w ∈ [0, 1e-3]`,
+/// momentum `m ∈ [0, 0.99]`. Well-tuned accuracy ≈ 0.81 after 10 epochs
+/// (paper Tab. 3); simulated cost ≈ 190 s per run (paper: "190 sec on
+/// average").
+#[derive(Debug, Clone)]
+pub struct ResNetCifarSim {
+    bounds: Vec<(f64, f64)>,
+    pub train_cost_s: f64,
+}
+
+impl ResNetCifarSim {
+    pub const PEAK_ACCURACY: f64 = 0.815;
+
+    pub fn new() -> Self {
+        Self {
+            bounds: vec![
+                (1e-4, 0.1), // learning rate
+                (0.0, 1e-3), // weight decay
+                (0.0, 0.99), // momentum
+            ],
+            train_cost_s: 190.0,
+        }
+    }
+
+    /// Noise-free accuracy surface.
+    pub fn accuracy(x: &[f64]) -> f64 {
+        let (lr, wd, m) = (x[0], x[1], x[2]);
+        let eff = effective_lr(lr, m);
+        // CIFAR10/ResNet sweet spot: eff lr ≈ 0.1 (the classic lr=0.1-with-
+        // schedule regime, scaled for 10 epochs); diverges past ≈ 1.6.
+        // Narrower basin than LeNet — deeper nets are touchier.
+        let lr_term = lr_response(eff, -1.0, 0.45, 1.6);
+        if lr_term == 0.0 {
+            return 0.1;
+        }
+        // weight decay matters much more than on MNIST: preference ≈ 5e-4
+        let wd_pen = ((wd - 5e-4) / 1e-3).powi(2) * 0.05;
+        // momentum: plain SGD (m≈0) measurably worse on ResNet
+        let m_term = if m < 0.5 { (0.5 - m) * 0.05 } else { 0.0 };
+        let m_pen = if m > 0.97 { (m - 0.97) * 2.0 } else { 0.0 };
+
+        let acc = Self::PEAK_ACCURACY * lr_term - wd_pen - m_term - m_pen;
+        acc.clamp(0.1, Self::PEAK_ACCURACY)
+    }
+}
+
+impl Default for ResNetCifarSim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Objective for ResNetCifarSim {
+    fn name(&self) -> &str {
+        "resnet_cifar10"
+    }
+
+    fn bounds(&self) -> &[(f64, f64)] {
+        &self.bounds
+    }
+
+    fn eval(&self, x: &[f64], rng: &mut Pcg64) -> Evaluation {
+        let mean_acc = Self::accuracy(x);
+        let noise_std = 0.004 + 0.025 * (1.0 - mean_acc / Self::PEAK_ACCURACY).max(0.0);
+        let value = (mean_acc + rng.normal() * noise_std).clamp(0.05, 0.99);
+        let cost = self.train_cost_s * (1.0 + 0.08 * rng.normal()).max(0.5);
+        Evaluation { value, sim_cost_s: cost }
+    }
+
+    fn optimum(&self) -> Option<f64> {
+        Some(Self::PEAK_ACCURACY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_peak_region_reaches_097() {
+        // a hand-tuned good configuration
+        let x = [0.7, 0.7, 0.02, 3e-4, 0.7]; // eff lr ≈ 0.067
+        let acc = LeNetMnistSim::accuracy(&x);
+        assert!(acc > 0.95, "acc={acc}");
+    }
+
+    #[test]
+    fn lenet_diverges_at_huge_lr() {
+        let x = [0.7, 0.7, 0.1, 3e-4, 0.95]; // eff lr = 2.0 > 1.0
+        assert_eq!(LeNetMnistSim::accuracy(&x), 0.1);
+    }
+
+    #[test]
+    fn lenet_dropout_underfit_penalty() {
+        let good = [0.7, 0.7, 0.02, 3e-4, 0.7];
+        let bad = [0.05, 0.05, 0.02, 3e-4, 0.7];
+        assert!(LeNetMnistSim::accuracy(&bad) < LeNetMnistSim::accuracy(&good) - 0.2);
+    }
+
+    #[test]
+    fn lenet_tiny_lr_underperforms() {
+        let slow = [0.7, 0.7, 1e-4, 3e-4, 0.0]; // eff lr 1e-4, log −4, far off peak
+        assert!(LeNetMnistSim::accuracy(&slow) < 0.5);
+    }
+
+    #[test]
+    fn lenet_noise_is_bounded_and_costed() {
+        let sim = LeNetMnistSim::new();
+        let mut rng = Pcg64::new(141);
+        let x = [0.7, 0.7, 0.02, 3e-4, 0.7];
+        for _ in 0..100 {
+            let e = sim.eval(&x, &mut rng);
+            assert!((0.05..=0.995).contains(&e.value));
+            assert!(e.sim_cost_s > 4.0 && e.sim_cost_s < 12.0);
+        }
+    }
+
+    #[test]
+    fn lenet_noise_tighter_near_peak() {
+        let sim = LeNetMnistSim::new();
+        let mut rng = Pcg64::new(143);
+        let good = [0.7, 0.7, 0.02, 3e-4, 0.7];
+        let bad = [0.4, 0.4, 0.001, 0.0, 0.0];
+        let spread = |x: &[f64], rng: &mut Pcg64| {
+            let vals: Vec<f64> = (0..200).map(|_| sim.eval(x, rng).value).collect();
+            let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+            (vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64).sqrt()
+        };
+        assert!(spread(&good, &mut rng) < spread(&bad, &mut rng));
+    }
+
+    #[test]
+    fn resnet_peak_region_reaches_081() {
+        let x = [0.033, 5e-4, 0.7]; // eff lr ≈ 0.11
+        let acc = ResNetCifarSim::accuracy(&x);
+        assert!(acc > 0.79, "acc={acc}");
+    }
+
+    #[test]
+    fn resnet_diverges_and_chance_floor() {
+        let x = [0.1, 5e-4, 0.95]; // eff lr = 2.0 > 1.6
+        assert_eq!(ResNetCifarSim::accuracy(&x), 0.1);
+    }
+
+    #[test]
+    fn resnet_momentum_helps() {
+        let with_m = [0.033, 5e-4, 0.7];
+        let without_m = [0.11, 5e-4, 0.0]; // same eff lr, no momentum
+        assert!(
+            ResNetCifarSim::accuracy(&with_m) > ResNetCifarSim::accuracy(&without_m)
+        );
+    }
+
+    #[test]
+    fn resnet_wd_curvature() {
+        let tuned = [0.033, 5e-4, 0.7];
+        let no_wd = [0.033, 0.0, 0.7];
+        assert!(ResNetCifarSim::accuracy(&tuned) > ResNetCifarSim::accuracy(&no_wd));
+    }
+
+    #[test]
+    fn resnet_cost_model_is_190s() {
+        let sim = ResNetCifarSim::new();
+        let mut rng = Pcg64::new(145);
+        let mean: f64 = (0..200)
+            .map(|_| sim.eval(&[0.03, 5e-4, 0.7], &mut rng).sim_cost_s)
+            .sum::<f64>()
+            / 200.0;
+        assert!((mean - 190.0).abs() < 10.0, "mean cost {mean}");
+    }
+
+    #[test]
+    fn surfaces_bounded_everywhere() {
+        let mut rng = Pcg64::new(147);
+        let lenet = LeNetMnistSim::new();
+        let resnet = ResNetCifarSim::new();
+        for _ in 0..2000 {
+            let xl = rng.point_in(lenet.bounds());
+            let al = LeNetMnistSim::accuracy(&xl);
+            assert!((0.1..=LeNetMnistSim::PEAK_ACCURACY).contains(&al), "{xl:?} {al}");
+            let xr = rng.point_in(resnet.bounds());
+            let ar = ResNetCifarSim::accuracy(&xr);
+            assert!((0.1..=ResNetCifarSim::PEAK_ACCURACY).contains(&ar));
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Artifact manifest: which `(N, D)` buckets were AOT-compiled.
+
+use crate::config::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One compiled size bucket.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bucket {
+    /// padded training-set size
+    pub n: usize,
+    /// input dimension (exact match required)
+    pub d: usize,
+    /// candidate batch size
+    pub m: usize,
+    pub file: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub m: usize,
+    pub buckets: Vec<Bucket>,
+}
+
+impl ArtifactManifest {
+    /// Load from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Default location: `$LAZYGP_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> anyhow::Result<Self> {
+        let dir = std::env::var("LAZYGP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let m = j
+            .get("m")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing m"))?;
+        let mut buckets = Vec::new();
+        for b in j
+            .get("buckets")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing buckets"))?
+        {
+            buckets.push(Bucket {
+                n: b.get("n").and_then(|v| v.as_usize()).ok_or_else(|| anyhow::anyhow!("bucket n"))?,
+                d: b.get("d").and_then(|v| v.as_usize()).ok_or_else(|| anyhow::anyhow!("bucket d"))?,
+                m: b.get("m").and_then(|v| v.as_usize()).unwrap_or(m),
+                file: b
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("bucket file"))?
+                    .to_string(),
+            });
+        }
+        buckets.sort_by_key(|b| (b.d, b.n));
+        Ok(Self { dir, m, buckets })
+    }
+
+    /// Smallest bucket that fits `(n, d)` (d exact, n ≤ bucket n).
+    pub fn bucket_for(&self, n: usize, d: usize) -> Option<&Bucket> {
+        self.buckets.iter().filter(|b| b.d == d && b.n >= n).min_by_key(|b| b.n)
+    }
+
+    pub fn path_of(&self, b: &Bucket) -> PathBuf {
+        self.dir.join(&b.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DEMO: &str = r#"{
+        "m": 128,
+        "buckets": [
+            {"n": 64, "d": 2, "m": 128, "file": "a.hlo.txt"},
+            {"n": 256, "d": 2, "m": 128, "file": "b.hlo.txt"},
+            {"n": 64, "d": 5, "m": 128, "file": "c.hlo.txt"}
+        ],
+        "format": "hlo-text"
+    }"#;
+
+    #[test]
+    fn parses_and_selects_buckets() {
+        let m = ArtifactManifest::parse(DEMO, PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(m.m, 128);
+        assert_eq!(m.buckets.len(), 3);
+        // exact-fit and round-up selection
+        assert_eq!(m.bucket_for(10, 2).unwrap().n, 64);
+        assert_eq!(m.bucket_for(64, 2).unwrap().n, 64);
+        assert_eq!(m.bucket_for(65, 2).unwrap().n, 256);
+        assert_eq!(m.bucket_for(30, 5).unwrap().n, 64);
+        // no bucket: dimension unknown or state too large
+        assert!(m.bucket_for(10, 7).is_none());
+        assert!(m.bucket_for(300, 2).is_none());
+    }
+
+    #[test]
+    fn path_resolution() {
+        let m = ArtifactManifest::parse(DEMO, PathBuf::from("/art")).unwrap();
+        let b = m.bucket_for(10, 2).unwrap();
+        assert_eq!(m.path_of(b), PathBuf::from("/art/a.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ArtifactManifest::parse("{}", PathBuf::new()).is_err());
+        assert!(ArtifactManifest::parse("{\"m\": 1}", PathBuf::new()).is_err());
+        assert!(ArtifactManifest::parse("not json", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        // integration check against the checked-out artifacts/ (built by
+        // `make artifacts`); skipped when absent
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = ArtifactManifest::load(&dir).unwrap();
+            assert!(m.bucket_for(100, 5).is_some());
+            for b in &m.buckets {
+                assert!(m.path_of(b).exists(), "{:?}", b.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! The PJRT runtime: load the AOT-compiled JAX/Pallas scoring artifacts
+//! (layers 1+2) and run them from the Rust hot path.
+//!
+//! Python runs once at build time (`make artifacts`); after that the Rust
+//! binary is self-contained — `artifacts/*.hlo.txt` is parsed by XLA's text
+//! parser, compiled by the PJRT CPU client, and executed with the live GP
+//! state padded into the nearest size bucket.
+//!
+//! * [`artifacts`] — the bucket manifest (`manifest.json`) and path
+//!   resolution.
+//! * [`pjrt`] — the thin wrapper over the `xla` crate: HLO text →
+//!   `HloModuleProto` → compile → execute.
+//! * [`scorer`] — [`scorer::GpScorer`]: pad-and-mask the lazy GP posterior
+//!   into a bucket, execute `gp_score`, unpack `(μ, σ², EI)` per candidate,
+//!   with a bit-compatible native fallback ([`scorer::score_native`]) used
+//!   for parity tests and for states larger than every bucket.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod scorer;
+
+pub use artifacts::{ArtifactManifest, Bucket};
+pub use pjrt::PjrtRuntime;
+pub use scorer::{score_native, GpScorer, Score};

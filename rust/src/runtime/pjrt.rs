@@ -1,0 +1,142 @@
+//! Thin wrapper over the `xla` crate's PJRT client.
+//!
+//! HLO *text* is the interchange format (see DESIGN.md and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` parses and
+//! re-ids the module, the CPU PJRT client compiles it once, and the
+//! compiled executable is cached per bucket for the lifetime of the
+//! process.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::artifacts::{ArtifactManifest, Bucket};
+
+/// A PJRT CPU client plus the per-bucket executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    cache: Mutex<HashMap<(usize, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Create from an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Create from `$LAZYGP_ARTIFACTS` / `./artifacts`.
+    pub fn new_default() -> anyhow::Result<Self> {
+        let manifest = ArtifactManifest::load_default()?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Bucket lookup for a live state size.
+    pub fn bucket_for(&self, n: usize, d: usize) -> Option<&Bucket> {
+        self.manifest.bucket_for(n, d)
+    }
+
+    /// Compile (or fetch from cache) the executable for a bucket.
+    pub fn executable(
+        &self,
+        bucket: &Bucket,
+    ) -> anyhow::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = (bucket.n, bucket.d);
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(std::sync::Arc::clone(exe));
+        }
+        let path = self.manifest.path_of(bucket);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute a compiled `gp_score` bucket with f64 inputs, returning the
+    /// `(mu, var, ei)` vectors (length `bucket.m`). The artifacts are
+    /// lowered in f64 (see aot.py) so the XLA path matches the native
+    /// Rust posterior to f64 round-off even on ill-conditioned states.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_gp_score(
+        &self,
+        bucket: &Bucket,
+        x_train: &[f64],  // n*d row-major
+        l_factor: &[f64], // n*n row-major
+        alpha: &[f64],    // n
+        mask: &[f64],     // n
+        cand: &[f64],     // m*d row-major
+        best_f: f64,
+        xi: f64,
+        mean_offset: f64,
+    ) -> anyhow::Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        let (n, d, m) = (bucket.n as i64, bucket.d as i64, bucket.m as i64);
+        assert_eq!(x_train.len(), (n * d) as usize);
+        assert_eq!(l_factor.len(), (n * n) as usize);
+        assert_eq!(alpha.len(), n as usize);
+        assert_eq!(mask.len(), n as usize);
+        assert_eq!(cand.len(), (m * d) as usize);
+        let exe = self.executable(bucket)?;
+        let lit = |data: &[f64], dims: &[i64]| -> anyhow::Result<xla::Literal> {
+            xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))
+        };
+        let inputs = [
+            lit(x_train, &[n, d])?,
+            lit(l_factor, &[n, n])?,
+            lit(alpha, &[n])?,
+            lit(mask, &[n])?,
+            lit(cand, &[m, d])?,
+            xla::Literal::scalar(best_f),
+            xla::Literal::scalar(xi),
+            xla::Literal::scalar(mean_offset),
+        ];
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+        let (mu, var, ei) =
+            result.to_tuple3().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        Ok((
+            mu.to_vec::<f64>().map_err(|e| anyhow::anyhow!("mu: {e:?}"))?,
+            var.to_vec::<f64>().map_err(|e| anyhow::anyhow!("var: {e:?}"))?,
+            ei.to_vec::<f64>().map_err(|e| anyhow::anyhow!("ei: {e:?}"))?,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed tests live in rust/tests/runtime_integration.rs (they
+    // need the artifacts directory built by `make artifacts`); unit tests
+    // here cover only construction failure paths.
+    use super::*;
+
+    #[test]
+    fn missing_artifacts_dir_errors() {
+        let e = PjrtRuntime::new("/definitely/not/a/dir");
+        assert!(e.is_err());
+    }
+}

@@ -1,0 +1,340 @@
+//! A small declarative command-line parser (the offline crate set has no
+//! `clap`). Supports subcommands, `--flag`, `--key value` / `--key=value`
+//! options with defaults, typed accessors and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of a single option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Specification of a subcommand: name, help and its options.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// The top-level application spec.
+#[derive(Debug, Clone)]
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+    pub global_opts: Vec<OptSpec>,
+}
+
+/// Result of parsing: subcommand name plus resolved option map.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    /// positional arguments after the subcommand
+    pub positional: Vec<String>,
+}
+
+/// Parse errors carry a rendered message ready for the terminal.
+#[derive(Debug, thiserror::Error)]
+#[error("{0}")]
+pub struct CliError(pub String);
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, commands: Vec::new(), global_opts: Vec::new() }
+    }
+
+    pub fn global_opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&str>,
+    ) -> Self {
+        self.global_opts.push(OptSpec {
+            name,
+            help,
+            default: default.map(str::to_string),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn global_flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.global_opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn command(mut self, cmd: CommandSpec) -> Self {
+        self.commands.push(cmd);
+        self
+    }
+
+    /// Render the `--help` text.
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "USAGE:\n    {} <COMMAND> [OPTIONS]\n", self.name);
+        let _ = writeln!(s, "COMMANDS:");
+        for c in &self.commands {
+            let _ = writeln!(s, "    {:<16} {}", c.name, c.help);
+        }
+        if !self.global_opts.is_empty() {
+            let _ = writeln!(s, "\nGLOBAL OPTIONS:");
+            for o in &self.global_opts {
+                let _ = writeln!(s, "    --{:<20} {}{}", o.name, o.help, fmt_default(o));
+            }
+        }
+        let _ = writeln!(s, "\nRun `{} <COMMAND> --help` for command options.", self.name);
+        s
+    }
+
+    fn command_help(&self, cmd: &CommandSpec) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} {} — {}\n", self.name, cmd.name, cmd.help);
+        let _ = writeln!(s, "OPTIONS:");
+        for o in cmd.opts.iter().chain(self.global_opts.iter()) {
+            let kind = if o.is_flag { " (flag)" } else { "" };
+            let _ = writeln!(s, "    --{:<20} {}{}{}", o.name, o.help, fmt_default(o), kind);
+        }
+        s
+    }
+
+    /// Parse `argv[1..]`. Returns `Err` with a rendered help/usage message
+    /// when parsing fails or help is requested.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        if args.is_empty() || args[0] == "--help" || args[0] == "-h" || args[0] == "help" {
+            return Err(CliError(self.help()));
+        }
+        let cmd_name = &args[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name.as_str())
+            .ok_or_else(|| {
+                CliError(format!("unknown command `{cmd_name}`\n\n{}", self.help()))
+            })?;
+
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        // seed defaults
+        for o in cmd.opts.iter().chain(self.global_opts.iter()) {
+            if let Some(d) = &o.default {
+                values.insert(o.name.to_string(), d.clone());
+            }
+            if o.is_flag {
+                flags.insert(o.name.to_string(), false);
+            }
+        }
+
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.command_help(cmd)));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .chain(self.global_opts.iter())
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| {
+                        CliError(format!(
+                            "unknown option `--{key}` for `{}`\n\n{}",
+                            cmd.name,
+                            self.command_help(cmd)
+                        ))
+                    })?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("flag `--{key}` takes no value")));
+                    }
+                    flags.insert(key, true);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("`--{key}` needs a value")))?
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+
+        Ok(Parsed { command: cmd.name.to_string(), values, flags, positional })
+    }
+}
+
+fn fmt_default(o: &OptSpec) -> String {
+    match &o.default {
+        Some(d) => format!(" [default: {d}]"),
+        None => String::new(),
+    }
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&str>) -> Self {
+        self.opts.push(OptSpec { name, help, default: default.map(str::to_string), is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+}
+
+impl Parsed {
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.values.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.get(key).copied().unwrap_or(false)
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize, CliError> {
+        self.parse_num(key)
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64, CliError> {
+        self.parse_num(key)
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64, CliError> {
+        self.parse_num(key)
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, key: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .values
+            .get(key)
+            .ok_or_else(|| CliError(format!("missing required option `--{key}`")))?;
+        raw.parse::<T>()
+            .map_err(|e| CliError(format!("invalid value `{raw}` for `--{key}`: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_app() -> App {
+        App::new("demo", "test app")
+            .global_opt("seed", "rng seed", Some("42"))
+            .global_flag("verbose", "chatty output")
+            .command(
+                CommandSpec::new("run", "run an experiment")
+                    .opt("iters", "iteration count", Some("100"))
+                    .opt("objective", "objective name", None)
+                    .flag("fast", "quick mode"),
+            )
+            .command(CommandSpec::new("list", "list things"))
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults() {
+        let p = demo_app().parse(&argv(&["run"])).unwrap();
+        assert_eq!(p.command, "run");
+        assert_eq!(p.usize("iters").unwrap(), 100);
+        assert_eq!(p.u64("seed").unwrap(), 42);
+        assert!(!p.flag("fast"));
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let p = demo_app()
+            .parse(&argv(&["run", "--iters", "7", "--fast", "--objective=levy5", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.usize("iters").unwrap(), 7);
+        assert_eq!(p.str("objective"), Some("levy5"));
+        assert!(p.flag("fast"));
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn inline_equals_value() {
+        let p = demo_app().parse(&argv(&["run", "--iters=256"])).unwrap();
+        assert_eq!(p.usize("iters").unwrap(), 256);
+    }
+
+    #[test]
+    fn positional_args_kept() {
+        let p = demo_app().parse(&argv(&["run", "foo", "bar"])).unwrap();
+        assert_eq!(p.positional, vec!["foo", "bar"]);
+    }
+
+    #[test]
+    fn unknown_command_errors_with_help() {
+        let e = demo_app().parse(&argv(&["nope"])).unwrap_err();
+        assert!(e.0.contains("unknown command"));
+        assert!(e.0.contains("USAGE"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = demo_app().parse(&argv(&["run", "--bogus", "1"])).unwrap_err();
+        assert!(e.0.contains("unknown option"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = demo_app().parse(&argv(&["run", "--iters"])).unwrap_err();
+        assert!(e.0.contains("needs a value"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let p = demo_app().parse(&argv(&["run", "--iters", "abc"])).unwrap();
+        assert!(p.usize("iters").is_err());
+    }
+
+    #[test]
+    fn help_requested() {
+        let e = demo_app().parse(&argv(&["--help"])).unwrap_err();
+        assert!(e.0.contains("COMMANDS"));
+        let e = demo_app().parse(&argv(&["run", "--help"])).unwrap_err();
+        assert!(e.0.contains("--iters"));
+    }
+
+    #[test]
+    fn flag_rejects_value() {
+        let e = demo_app().parse(&argv(&["run", "--fast=1"])).unwrap_err();
+        assert!(e.0.contains("takes no value"));
+    }
+}

@@ -1,0 +1,21 @@
+//! Offline substrates: everything a normal project would pull from crates.io
+//! but that is unavailable in this build environment, implemented from
+//! scratch.
+//!
+//! * [`rng`] — PCG64 pseudo-random generator plus distribution helpers
+//!   (no `rand` crate offline).
+//! * [`stats`] — special functions (erf, normal pdf/cdf/quantile) and
+//!   summary statistics used by Expected Improvement and the metrics layer.
+//! * [`cli`] — a small declarative command-line parser (no `clap`).
+//! * [`bench`] — a measurement harness for `cargo bench` targets
+//!   (no `criterion`); see `rust/benches/`.
+//! * [`proptest`] — a miniature property-based testing framework with
+//!   deterministic replay and input shrinking (no `proptest` crate).
+//! * [`timer`] — scoped wall-clock timers feeding the metrics layer.
+
+pub mod bench;
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;

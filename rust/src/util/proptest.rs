@@ -1,0 +1,236 @@
+//! Miniature property-based testing framework (the offline crate set has no
+//! `proptest`/`quickcheck`). Provides:
+//!
+//! * deterministic case generation from a seeded [`Pcg64`],
+//! * configurable case counts (`LAZYGP_PROPTEST_CASES` env var),
+//! * greedy input shrinking for failing cases (halving toward a canonical
+//!   "small" value), and
+//! * replay information in the panic message.
+//!
+//! Used throughout `linalg`, `gp` and `coordinator` tests to check the
+//! paper's invariants (e.g. *incremental Cholesky extension equals full
+//! re-factorization* for arbitrary SPD matrices).
+
+use super::rng::Pcg64;
+
+/// Number of cases to run per property (override with env var).
+pub fn default_cases() -> usize {
+    std::env::var("LAZYGP_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A generator for values of type `T` with an attached shrinker.
+pub struct Gen<T> {
+    generate: Box<dyn Fn(&mut Pcg64) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        generate: impl Fn(&mut Pcg64) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Self { generate: Box::new(generate), shrink: Box::new(shrink) }
+    }
+
+    /// Generator with no shrinking.
+    pub fn no_shrink(generate: impl Fn(&mut Pcg64) -> T + 'static) -> Self {
+        Self::new(generate, |_| Vec::new())
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> T {
+        (self.generate)(rng)
+    }
+
+    /// Map the generated value (shrinks map through too — note the mapped
+    /// shrinker re-generates candidates from the original type only when a
+    /// paired inverse is unavailable, so `map` drops shrinking).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        let g = self.generate;
+        Gen::no_shrink(move |rng| f(g(rng)))
+    }
+}
+
+/// Uniform `f64` in `[lo, hi]`, shrinking toward the midpoint-of-zero /
+/// boundary-simplified values.
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    assert!(lo < hi);
+    Gen::new(
+        move |rng| rng.uniform(lo, hi),
+        move |&x| {
+            let mut cands = Vec::new();
+            let anchor = if lo <= 0.0 && hi >= 0.0 { 0.0 } else { lo };
+            if x != anchor {
+                cands.push(anchor);
+                cands.push(anchor + (x - anchor) / 2.0);
+            }
+            cands
+        },
+    )
+}
+
+/// Uniform integer size in `[lo, hi]`, shrinking toward `lo`.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    assert!(lo <= hi);
+    Gen::new(
+        move |rng| lo + rng.below((hi - lo + 1) as u64) as usize,
+        move |&n| {
+            let mut cands = Vec::new();
+            if n > lo {
+                cands.push(lo);
+                cands.push(lo + (n - lo) / 2);
+            }
+            cands
+        },
+    )
+}
+
+/// Vector of `n` draws from an element generator; shrinks by halving the
+/// tail and element-wise shrinking of a single position.
+pub fn vec_of(n: usize, elem: Gen<f64>) -> Gen<Vec<f64>> {
+    let elem = std::rc::Rc::new(elem);
+    let e2 = elem.clone();
+    Gen::new(
+        move |rng| (0..n).map(|_| elem.sample(rng)).collect(),
+        move |v: &Vec<f64>| {
+            let mut cands = Vec::new();
+            // shrink each element independently (first few positions only,
+            // to bound the search)
+            for i in 0..v.len().min(4) {
+                for s in (e2.shrink)(&v[i]) {
+                    let mut w = v.clone();
+                    w[i] = s;
+                    cands.push(w);
+                }
+            }
+            cands
+        },
+    )
+}
+
+/// Run a property over `cases` generated inputs. On failure, greedily
+/// shrink and panic with the smallest failing input and the seed to replay.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    check_seeded(name, gen, prop, 0x5eed_cafe)
+}
+
+/// Like [`check`] but with an explicit base seed.
+pub fn check_seeded<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> bool,
+    seed: u64,
+) {
+    let cases = default_cases();
+    for case in 0..cases {
+        let mut rng = Pcg64::with_stream(seed, case as u64);
+        let input = gen.sample(&mut rng);
+        if !run_guarded(&prop, &input) {
+            // shrink
+            let mut smallest = input.clone();
+            let mut improved = true;
+            let mut steps = 0;
+            while improved && steps < 200 {
+                improved = false;
+                for cand in (gen.shrink)(&smallest) {
+                    steps += 1;
+                    if !run_guarded(&prop, &cand) {
+                        smallest = cand;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property `{name}` failed at case {case} (seed {seed:#x}).\n\
+                 original input: {input:?}\n\
+                 shrunk input:   {smallest:?}"
+            );
+        }
+    }
+}
+
+/// Evaluate the property, treating a panic inside it as a failure (so
+/// shrinking also works for assert-style properties).
+fn run_guarded<T>(prop: &impl Fn(&T) -> bool, input: &T) -> bool {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(input))).unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let g = f64_in(-5.0, 5.0);
+        check("abs_nonneg", &g, |&x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let g = f64_in(0.0, 100.0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check("always_lt_1", &g, |&x| x < 1.0);
+        }));
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("shrunk input"));
+        // shrinker halves toward 0; the shrunk counterexample must still
+        // violate the property but be <= the original
+        let shrunk: f64 = msg
+            .split("shrunk input:")
+            .nth(1)
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!(shrunk >= 1.0, "shrunk {shrunk} should still fail");
+    }
+
+    #[test]
+    fn usize_gen_in_range() {
+        let g = usize_in(2, 9);
+        let mut rng = Pcg64::new(1);
+        for _ in 0..100 {
+            let v = g.sample(&mut rng);
+            assert!((2..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn vec_gen_has_len() {
+        let g = vec_of(7, f64_in(-1.0, 1.0));
+        let mut rng = Pcg64::new(2);
+        let v = g.sample(&mut rng);
+        assert_eq!(v.len(), 7);
+        assert!(v.iter().all(|x| (-1.0..=1.0).contains(x)));
+    }
+
+    #[test]
+    fn panicking_property_is_failure() {
+        let g = usize_in(0, 10);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check("no_panics", &g, |&n| {
+                assert!(n < 100, "boom");
+                n < 5 // will fail for n >= 5
+            });
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn map_transforms() {
+        let g = usize_in(1, 3).map(|n| n * 10);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..20 {
+            let v = g.sample(&mut rng);
+            assert!(v == 10 || v == 20 || v == 30);
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! PCG64-based pseudo-random number generation.
+//!
+//! The offline crate set ships `rand_core` but not `rand`, so the library
+//! carries its own generator. We use the PCG XSL-RR 128/64 variant
+//! (O'Neill 2014): a 128-bit LCG state with an xor-shift + random-rotate
+//! output function. It is fast, has a period of 2^128 and passes BigCrush —
+//! more than adequate for seeding Bayesian-optimization experiments
+//! reproducibly.
+
+/// PCG XSL-RR 128/64 generator.
+///
+/// Deterministic for a given seed/stream; every experiment in the repo
+/// threads one of these through so that all tables and figures are exactly
+/// reproducible.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream 0).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Create a generator from a seed and an explicit stream id. Different
+    /// streams with the same seed are statistically independent — used to
+    /// give each coordinator worker its own generator.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Self { state: 0, inc };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        rng
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's multiply-shift rejection.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= (u64::MAX - n + 1) % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Standard normal via Marsaglia polar method.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// A point drawn uniformly from the axis-aligned box `bounds`
+    /// (`bounds[i] = (lo_i, hi_i)`).
+    pub fn point_in(&mut self, bounds: &[(f64, f64)]) -> Vec<f64> {
+        bounds.iter().map(|&(lo, hi)| self.uniform(lo, hi)).collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fork an independent child generator (used by the coordinator to give
+    /// each worker its own stream deterministically).
+    pub fn fork(&mut self, stream: u64) -> Pcg64 {
+        Pcg64::with_stream(self.next_u64(), stream)
+    }
+}
+
+/// Latin-hypercube sample of `n` points in the box `bounds`.
+///
+/// Each dimension is split into `n` equal strata; each stratum is hit
+/// exactly once, with an independent random permutation per dimension.
+/// Used for the "100 random seeds" initializations of paper Table 1 and the
+/// multi-start seeding of the acquisition optimizer.
+pub fn latin_hypercube(rng: &mut Pcg64, n: usize, bounds: &[(f64, f64)]) -> Vec<Vec<f64>> {
+    let d = bounds.len();
+    // perms[j] = a shuffled assignment of strata for dimension j
+    let mut perms: Vec<Vec<usize>> = Vec::with_capacity(d);
+    for _ in 0..d {
+        let mut p: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut p);
+        perms.push(p);
+    }
+    (0..n)
+        .map(|i| {
+            (0..d)
+                .map(|j| {
+                    let (lo, hi) = bounds[j];
+                    let stratum = perms[j][i] as f64;
+                    let u = rng.next_f64();
+                    lo + (hi - lo) * (stratum + u) / n as f64
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same <= 1);
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = Pcg64::with_stream(7, 1);
+        let mut b = Pcg64::with_stream(7, 2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_hold() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let x = rng.uniform(-10.0, 10.0);
+            assert!((-10.0..10.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_centered() {
+        let mut rng = Pcg64::new(5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Pcg64::new(11);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = rng.below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(13);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn latin_hypercube_stratifies() {
+        let mut rng = Pcg64::new(17);
+        let n = 50;
+        let bounds = [(0.0, 1.0), (-5.0, 5.0)];
+        let pts = latin_hypercube(&mut rng, n, &bounds);
+        assert_eq!(pts.len(), n);
+        // every stratum of dimension 0 hit exactly once
+        let mut hit = vec![0usize; n];
+        for p in &pts {
+            assert!((0.0..1.0).contains(&p[0]));
+            assert!((-5.0..5.0).contains(&p[1]));
+            hit[(p[0] * n as f64) as usize] += 1;
+        }
+        assert!(hit.iter().all(|&h| h == 1), "{hit:?}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(19);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut root = Pcg64::new(23);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,106 @@
+//! Lightweight wall-clock timing used across the metrics layer, the bench
+//! harness and the experiment drivers.
+
+use std::time::{Duration, Instant};
+
+/// A resettable stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since construction or the last [`Stopwatch::reset`].
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Reset and return the elapsed seconds up to the reset (lap time).
+    pub fn lap_s(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Human-friendly duration formatting for CLI/report output
+/// (`1.2µs`, `3.4ms`, `5.6s`, `2m03s`).
+pub fn fmt_duration_s(secs: f64) -> String {
+    if secs < 0.0 {
+        return format!("-{}", fmt_duration_s(-secs));
+    }
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2}s")
+    } else {
+        let m = (secs / 60.0).floor();
+        format!("{}m{:04.1}s", m as u64, secs - m * 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_s() >= 0.004);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(3));
+        let lap = sw.lap_s();
+        assert!(lap >= 0.002);
+        assert!(sw.elapsed_s() < lap);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, s) = timed(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration_s(0.5e-9 * 2.0), "1.0ns");
+        assert_eq!(fmt_duration_s(2.5e-6), "2.5µs");
+        assert_eq!(fmt_duration_s(0.0125), "12.50ms");
+        assert_eq!(fmt_duration_s(3.25), "3.25s");
+        assert_eq!(fmt_duration_s(125.0), "2m05.0s");
+    }
+}

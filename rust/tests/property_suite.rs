@@ -1,0 +1,184 @@
+//! Cross-module property suite: randomized invariants that tie the layers
+//! together, driven by the in-repo mini-proptest framework.
+
+use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
+use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign};
+use lazygp::config::json::Json;
+use lazygp::gp::lazy::LazyGp;
+use lazygp::gp::Surrogate;
+use lazygp::kernels::{cov_matrix, Kernel, KernelKind, KernelParams};
+use lazygp::linalg::GrowingCholesky;
+use lazygp::objectives::levy::Levy;
+use lazygp::util::proptest as pt;
+use lazygp::util::rng::Pcg64;
+use lazygp::util::stats::{norm_cdf, norm_pdf};
+
+/// JSON: serialize∘parse is the identity on randomly generated values.
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen_value(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.uniform(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let len = rng.below(12) as usize;
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.below(128) as u8;
+                        if c.is_ascii_graphic() || c == b' ' {
+                            c as char
+                        } else {
+                            '\\'
+                        }
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let seeds = pt::usize_in(0, 10_000);
+    pt::check("json_roundtrip", &seeds, |&seed| {
+        let mut rng = Pcg64::new(seed as u64);
+        let v = gen_value(&mut rng, 3);
+        Json::parse(&v.to_string()) == Ok(v.clone())
+            && Json::parse(&v.to_string_pretty()) == Ok(v)
+    });
+}
+
+/// GP: posterior variance never exceeds the prior variance (in normalized
+/// units, i.e. raw variance ≤ y_scale² · σ²), for any observation stream.
+#[test]
+fn prop_posterior_variance_bounded_by_prior() {
+    let sizes = pt::usize_in(1, 40);
+    pt::check("variance_bounded", &sizes, |&n| {
+        let mut rng = Pcg64::new(n as u64 + 9000);
+        let mut gp = LazyGp::paper_default();
+        for _ in 0..n {
+            let x = vec![rng.uniform(-5.0, 5.0), rng.uniform(-5.0, 5.0)];
+            gp.observe(&x, rng.uniform(-10.0, 10.0));
+        }
+        let prior = {
+            let p = gp.posterior();
+            p.y_scale * p.y_scale * p.kernel.self_cov()
+        };
+        (0..20).all(|_| {
+            let q = vec![rng.uniform(-5.0, 5.0), rng.uniform(-5.0, 5.0)];
+            let (_, v) = gp.predict(&q);
+            v <= prior + 1e-9 && v >= 0.0
+        })
+    });
+}
+
+/// GP: batched prediction ≡ per-point prediction (the §Perf multi-RHS path
+/// must be a pure optimization).
+#[test]
+fn prop_predict_batch_equals_predict() {
+    let sizes = pt::usize_in(1, 30);
+    pt::check("batch_equals_single", &sizes, |&n| {
+        let mut rng = Pcg64::new(n as u64 + 9100);
+        let mut gp = LazyGp::paper_default();
+        for _ in 0..n {
+            let x: Vec<f64> = (0..3).map(|_| rng.uniform(-4.0, 4.0)).collect();
+            gp.observe(&x, x.iter().sum::<f64>().cos());
+        }
+        let cands: Vec<Vec<f64>> =
+            (0..17).map(|_| (0..3).map(|_| rng.uniform(-4.0, 4.0)).collect()).collect();
+        let batched = gp.predict_batch(&cands);
+        cands.iter().zip(&batched).all(|(c, &(bm, bv))| {
+            let (m, v) = gp.predict(c);
+            (m - bm).abs() < 1e-10 && (v - bv).abs() < 1e-10
+        })
+    });
+}
+
+/// EI: monotone in the mean, and equal to the closed form at hand-checked
+/// points, for random incumbents.
+#[test]
+fn prop_ei_closed_form() {
+    let g = pt::f64_in(-5.0, 5.0);
+    pt::check("ei_closed_form", &g, |&best| {
+        let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.0 }, best);
+        let sigma: f64 = 1.7;
+        (0..40).all(|i| {
+            let mu = -6.0 + i as f64 * 0.3;
+            let gamma = mu - best;
+            let z = gamma / sigma;
+            let want = (gamma * norm_cdf(z) + sigma * norm_pdf(z)).max(0.0);
+            (acq.score(mu, sigma * sigma) - want).abs() < 1e-12
+        })
+    });
+}
+
+/// BO: the incumbent trajectory is monotone and history length is exact,
+/// for random seeds and iteration budgets.
+#[test]
+fn prop_bo_incumbent_monotone() {
+    let g = pt::usize_in(1, 15);
+    pt::check("bo_monotone", &g, |&iters| {
+        let cfg = BoConfig::lazy()
+            .with_seed(iters as u64)
+            .with_init(InitDesign::Random(2))
+            .with_optim(lazygp::acquisition::optim::OptimConfig {
+                candidates: 48,
+                restarts: 2,
+                nm_iters: 8,
+                nm_scale: 0.1,
+            });
+        let mut d = BoDriver::new(cfg, Box::new(Levy::new(2)));
+        d.run(iters);
+        d.history().len() == iters + 2
+            && d.history().windows(2).all(|w| w[1].best >= w[0].best)
+    });
+}
+
+/// Cholesky: every kernel family produces an SPD covariance on random
+/// (distinct) point sets — the precondition of the whole paper.
+#[test]
+fn prop_all_kernels_give_spd_covariance() {
+    let g = pt::usize_in(2, 30);
+    pt::check("kernels_spd", &g, |&n| {
+        let mut rng = Pcg64::new(n as u64 + 9200);
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..4).map(|_| rng.uniform(-8.0, 8.0)).collect()).collect();
+        [KernelKind::Matern52, KernelKind::Matern32, KernelKind::Rbf, KernelKind::Exponential]
+            .into_iter()
+            .all(|kind| {
+                let k = Kernel::new(kind, KernelParams::paper_default().with_noise(1e-8));
+                GrowingCholesky::from_spd(&cov_matrix(&k, &xs)).is_ok()
+            })
+    });
+}
+
+/// Incremental extension after an arbitrary interleaving of batch and
+/// single extensions still reconstructs the full covariance.
+#[test]
+fn prop_interleaved_extension_reconstructs() {
+    let g = pt::usize_in(4, 24);
+    pt::check("interleaved_extend", &g, |&n| {
+        let mut rng = Pcg64::new(n as u64 + 9300);
+        let kernel = Kernel::paper_default();
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..3).map(|_| rng.uniform(-5.0, 5.0)).collect()).collect();
+        let k = cov_matrix(&kernel, &xs);
+        let mut g2 = GrowingCholesky::new();
+        let mut i = 0;
+        while i < n {
+            // random run length of sequential extends
+            let run = 1 + (rng.below(3) as usize).min(n - i - 1).min(n - i);
+            for m in i..i + run {
+                let p: Vec<f64> = (0..m).map(|j| k[(m, j)]).collect();
+                g2.extend(&p, k[(m, m)]);
+            }
+            i += run;
+        }
+        let rel = g2.reconstruct().max_abs_diff(&k) / k.fro_norm();
+        rel < 1e-10
+    });
+}

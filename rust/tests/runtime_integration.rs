@@ -1,0 +1,154 @@
+//! Integration tests for the PJRT runtime: artifact load, execute, and
+//! numerical parity between the compiled XLA path and the native
+//! Rust path (f64).
+//!
+//! These tests need `artifacts/` built by `make artifacts`; they skip
+//! (with a note) when it is absent so `cargo test` works in a fresh
+//! checkout.
+
+use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
+use lazygp::gp::lazy::LazyGp;
+use lazygp::gp::Surrogate;
+use lazygp::runtime::{score_native, GpScorer, PjrtRuntime};
+use lazygp::util::rng::Pcg64;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime integration test: run `make artifacts` first");
+        None
+    }
+}
+
+fn trained_gp(rng: &mut Pcg64, n: usize, d: usize) -> LazyGp {
+    let mut gp = LazyGp::paper_default();
+    for _ in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let y = x.iter().map(|v| (v * 0.7).sin()).sum::<f64>();
+        gp.observe(&x, y);
+    }
+    gp
+}
+
+#[test]
+fn artifact_loads_and_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::new(dir).unwrap();
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    let bucket = rt.bucket_for(10, 2).expect("bucket for (10, 2)").clone();
+    let n = bucket.n;
+    let m = bucket.m;
+    // trivial state: one observation at the origin, identity-padded L
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        l[i * n + i] = 1.0;
+    }
+    // first row is the real factor: L00 = sqrt(1 + noise) ≈ 1
+    let mut mask = vec![0.0f64; n];
+    mask[0] = 1.0;
+    let mut alpha = vec![0.0f64; n];
+    alpha[0] = 0.5;
+    let x_train = vec![0.0f64; n * 2];
+    let cand = vec![0.1f64; m * 2];
+    let (mu, var, ei) = rt
+        .run_gp_score(&bucket, &x_train, &l, &alpha, &mask, &cand, 0.0, 0.01, 0.0)
+        .unwrap();
+    assert_eq!(mu.len(), m);
+    assert_eq!(var.len(), m);
+    assert_eq!(ei.len(), m);
+    assert!(mu.iter().all(|v| v.is_finite()));
+    assert!(var.iter().all(|v| (0.0..=1.01).contains(v)));
+    assert!(ei.iter().all(|v| *v >= 0.0));
+}
+
+#[test]
+fn xla_scores_match_native_f64() {
+    let Some(dir) = artifacts_dir() else { return };
+    let scorer = GpScorer::new(PjrtRuntime::new(dir).unwrap());
+    let mut rng = Pcg64::new(161);
+    for (n, d) in [(5usize, 2usize), (40, 3), (90, 5), (130, 2)] {
+        let gp = trained_gp(&mut rng, n, d);
+        let best = gp.incumbent().unwrap().1;
+        let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, best);
+        let cands: Vec<Vec<f64>> =
+            (0..100).map(|_| (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect()).collect();
+        let xla = scorer.score_batch(&gp, &acq, 0.01, &cands).unwrap();
+        let native = score_native(&gp, &acq, &cands);
+        for (i, (a, b)) in xla.iter().zip(&native).enumerate() {
+            assert!(
+                (a.mean - b.mean).abs() < 1e-8,
+                "(n={n},d={d}) cand {i}: mean {} vs {}",
+                a.mean,
+                b.mean
+            );
+            assert!(
+                (a.variance - b.variance).abs() < 1e-8,
+                "(n={n},d={d}) cand {i}: var {} vs {}",
+                a.variance,
+                b.variance
+            );
+            // EI tolerance is looser than mean/var: the Pallas kernel uses
+            // the Abramowitz–Stegun erf expansion (|err| < 1.5e-7; the erf
+            // opcode is unparseable by xla_extension 0.5.1)
+            assert!(
+                (a.ei - b.ei).abs() < 1e-5,
+                "(n={n},d={d}) cand {i}: ei {} vs {}",
+                a.ei,
+                b.ei
+            );
+        }
+    }
+    let (xla_calls, native_calls) = scorer.call_counts();
+    assert!(xla_calls >= 4, "xla path must have served these: {xla_calls}");
+    assert_eq!(native_calls, 0);
+}
+
+#[test]
+fn oversized_state_falls_back_to_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let scorer = GpScorer::new(PjrtRuntime::new(dir).unwrap());
+    let mut rng = Pcg64::new(163);
+    // d=7 has no bucket
+    let gp = trained_gp(&mut rng, 12, 7);
+    let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, gp.incumbent().unwrap().1);
+    let cands: Vec<Vec<f64>> =
+        (0..10).map(|_| (0..7).map(|_| rng.uniform(-3.0, 3.0)).collect()).collect();
+    let scores = scorer.score_batch(&gp, &acq, 0.01, &cands).unwrap();
+    assert_eq!(scores.len(), 10);
+    let (_, native_calls) = scorer.call_counts();
+    assert_eq!(native_calls, 1);
+}
+
+#[test]
+fn chunking_covers_large_candidate_sets() {
+    let Some(dir) = artifacts_dir() else { return };
+    let scorer = GpScorer::new(PjrtRuntime::new(dir).unwrap());
+    let mut rng = Pcg64::new(167);
+    let gp = trained_gp(&mut rng, 20, 2);
+    let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, gp.incumbent().unwrap().1);
+    // 300 candidates > M=128 ⇒ 3 chunks
+    let cands: Vec<Vec<f64>> =
+        (0..300).map(|_| vec![rng.uniform(-3.0, 3.0), rng.uniform(-3.0, 3.0)]).collect();
+    let xla = scorer.score_batch(&gp, &acq, 0.01, &cands).unwrap();
+    assert_eq!(xla.len(), 300);
+    let native = score_native(&gp, &acq, &cands);
+    for (a, b) in xla.iter().zip(&native) {
+        assert!((a.ei - b.ei).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn executable_cache_is_reused() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::new(dir).unwrap();
+    let bucket = rt.bucket_for(10, 3).unwrap().clone();
+    let t0 = std::time::Instant::now();
+    let _e1 = rt.executable(&bucket).unwrap();
+    let cold = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _e2 = rt.executable(&bucket).unwrap();
+    let warm = t1.elapsed();
+    assert!(warm < cold / 5, "cache miss? cold={cold:?} warm={warm:?}");
+}
