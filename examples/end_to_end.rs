@@ -38,7 +38,7 @@ use lazygp::util::timer::{fmt_duration_s, Stopwatch};
 
 const TARGET_ACC: f64 = 0.79; // Table 3's naive-baseline endpoint
 
-fn main() -> anyhow::Result<()> {
+fn main() -> lazygp::Result<()> {
     let evals: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
     println!("=== lazygp end-to-end driver: simulated ResNet32/CIFAR10 HPO, {evals} evaluations/arm ===\n");
 

@@ -21,6 +21,43 @@ pub enum SurrogateChoice {
     Exact,
 }
 
+/// How to impute values for in-flight (pending) evaluations when suggesting
+/// asynchronously — the fantasy-observation strategies of Snoek et al. 2012
+/// (*Practical Bayesian Optimization of Machine Learning Algorithms*) and
+/// Ginsbourger et al.'s constant liar / kriging believer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PendingStrategy {
+    /// Impute the worst (minimum) observed value at every pending point —
+    /// the pessimistic constant liar: strongest repulsion away from
+    /// in-flight points, cheapest to compute.
+    ConstantLiarMin,
+    /// Impute the posterior mean of the *real-data* posterior at each
+    /// pending point (all means computed before any fantasy is inserted).
+    PosteriorMean,
+    /// Impute posterior means sequentially, each fantasy conditioning the
+    /// next (the kriging believer).
+    KrigingBeliever,
+}
+
+impl PendingStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PendingStrategy::ConstantLiarMin => "cl-min",
+            PendingStrategy::PosteriorMean => "posterior-mean",
+            PendingStrategy::KrigingBeliever => "kriging-believer",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "cl-min" | "constant-liar-min" => Some(PendingStrategy::ConstantLiarMin),
+            "posterior-mean" => Some(PendingStrategy::PosteriorMean),
+            "kriging-believer" => Some(PendingStrategy::KrigingBeliever),
+            _ => None,
+        }
+    }
+}
+
 /// Initial design for seeding the surrogate before the loop starts.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum InitDesign {
@@ -280,11 +317,57 @@ impl BoDriver {
     }
 
     /// Feed back an externally evaluated observation (used by the parallel
-    /// coordinator, which owns the objective evaluations).
+    /// coordinators, which own the objective evaluations).
     pub fn observe_external(&mut self, x: Vec<f64>, eval: Evaluation) {
         self.ensure_seeded();
         self.iter += 1;
         self.record(x, eval, 0.0);
+    }
+
+    /// Augment the surrogate with fantasy observations for the `pending`
+    /// in-flight points (async coordination, §3.4 extended). The fantasies
+    /// do *not* enter [`history`](BoDriver::history) or the incumbent
+    /// tracking — they only shape the acquisition surface until
+    /// [`retract_fantasies`](BoDriver::retract_fantasies). Returns the
+    /// number of fantasies issued.
+    pub fn fantasize(&mut self, pending: &[Vec<f64>], strategy: PendingStrategy) -> usize {
+        if pending.is_empty() {
+            return 0;
+        }
+        match strategy {
+            PendingStrategy::ConstantLiarMin => {
+                let lie = self.history.iter().map(|r| r.y).fold(f64::INFINITY, f64::min);
+                let lie = if lie.is_finite() { lie } else { 0.0 };
+                for x in pending {
+                    self.surrogate.observe_fantasy(x, lie);
+                }
+            }
+            PendingStrategy::PosteriorMean => {
+                let means: Vec<f64> =
+                    pending.iter().map(|x| self.surrogate.predict(x).0).collect();
+                for (x, m) in pending.iter().zip(means) {
+                    self.surrogate.observe_fantasy(x, m);
+                }
+            }
+            PendingStrategy::KrigingBeliever => {
+                for x in pending {
+                    let m = self.surrogate.predict(x).0;
+                    self.surrogate.observe_fantasy(x, m);
+                }
+            }
+        }
+        pending.len()
+    }
+
+    /// Remove every active fantasy, restoring the exact real-data
+    /// posterior. Returns how many were retracted.
+    pub fn retract_fantasies(&mut self) -> usize {
+        self.surrogate.retract_fantasies()
+    }
+
+    /// Number of fantasy observations currently shaping the posterior.
+    pub fn fantasies_active(&self) -> usize {
+        self.surrogate.fantasies_active()
     }
 
     /// One sequential BO iteration: suggest → evaluate → observe.
@@ -414,6 +497,55 @@ mod tests {
         assert_eq!(d.surrogate().len(), n0 + 1);
         assert!((d.sim_cost_total() - 1.5).abs() < 1e-12);
         assert_eq!(d.best().unwrap().value, -0.02);
+    }
+
+    #[test]
+    fn fantasize_shapes_acquisition_but_not_history() {
+        let cfg = fast(BoConfig::lazy().with_seed(37).with_init(InitDesign::Lhs(6)));
+        let mut d = BoDriver::new(cfg, Box::new(Sphere::new(2)));
+        d.ensure_seeded();
+        let hist_before = d.history().len();
+        let best_before = d.best().unwrap().value;
+        let pending = vec![vec![0.5, 0.5], vec![-0.5, 0.25]];
+        for strategy in [
+            PendingStrategy::ConstantLiarMin,
+            PendingStrategy::PosteriorMean,
+            PendingStrategy::KrigingBeliever,
+        ] {
+            let issued = d.fantasize(&pending, strategy);
+            assert_eq!(issued, 2);
+            assert_eq!(d.fantasies_active(), 2);
+            assert_eq!(d.surrogate().len(), hist_before + 2);
+            // history and incumbent see only real data
+            assert_eq!(d.history().len(), hist_before);
+            assert_eq!(d.best().unwrap().value, best_before);
+            // suggestions still work with fantasies active
+            let batch = d.suggest_batch(2);
+            assert_eq!(batch.len(), 2);
+            assert_eq!(d.retract_fantasies(), 2);
+            assert_eq!(d.surrogate().len(), hist_before);
+            assert_eq!(d.fantasies_active(), 0);
+        }
+    }
+
+    #[test]
+    fn constant_liar_repels_pending_points() {
+        // with a low lie planted at a pending point, the next suggestion
+        // should not collapse onto that point
+        let cfg = fast(BoConfig::lazy().with_seed(41).with_init(InitDesign::Lhs(8)));
+        let mut d = BoDriver::new(cfg, Box::new(Sphere::new(2)));
+        d.ensure_seeded();
+        let pending = vec![d.suggest()];
+        d.fantasize(&pending, PendingStrategy::ConstantLiarMin);
+        let next = d.suggest();
+        let dist: f64 = next
+            .iter()
+            .zip(&pending[0])
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        d.retract_fantasies();
+        assert!(dist > 1e-3, "suggestion collapsed onto the pending point: {dist}");
     }
 
     #[test]

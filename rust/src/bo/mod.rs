@@ -8,4 +8,6 @@
 
 pub mod driver;
 
-pub use driver::{BoConfig, BoDriver, Best, InitDesign, IterationRecord, SurrogateChoice};
+pub use driver::{
+    BoConfig, BoDriver, Best, InitDesign, IterationRecord, PendingStrategy, SurrogateChoice,
+};

@@ -5,7 +5,6 @@
 //! `null`. Object key order is preserved so serialized configs diff
 //! cleanly. Errors carry byte offsets.
 
-use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// A JSON value.
@@ -21,12 +20,26 @@ pub enum Json {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("json parse error at byte {offset}: {message}")]
+#[derive(Debug, PartialEq)]
 pub struct JsonError {
     pub offset: usize,
     pub message: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+/// Largest integer an `f64` represents unambiguously: 2^53 − 1 (the
+/// JavaScript `Number.MAX_SAFE_INTEGER` convention). At 2^53 itself the
+/// value is already ambiguous — `2^53 + 1` parses to the same float — so
+/// the integer accessors refuse everything from 2^53 up rather than
+/// silently returning a truncated neighbor.
+const MAX_SAFE_INTEGER: f64 = 9_007_199_254_740_991.0;
 
 impl Json {
     // ---------- accessors ----------
@@ -39,15 +52,20 @@ impl Json {
     }
 
     pub fn as_usize(&self) -> Option<usize> {
+        // beyond 2^53 the `as` cast saturates silently; reject instead
         match self {
-            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 => Some(*v as usize),
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v <= MAX_SAFE_INTEGER => {
+                Some(*v as usize)
+            }
             _ => None,
         }
     }
 
     pub fn as_u64(&self) -> Option<u64> {
         match self {
-            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 => Some(*v as u64),
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v <= MAX_SAFE_INTEGER => {
+                Some(*v as u64)
+            }
             _ => None,
         }
     }
@@ -84,14 +102,6 @@ impl Json {
     /// Build an object from pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
-    }
-
-    /// Convert an object to a map (tests/diffing).
-    pub fn to_map(&self) -> Option<BTreeMap<String, Json>> {
-        match self {
-            Json::Obj(kv) => Some(kv.iter().cloned().collect()),
-            _ => None,
-        }
     }
 
     // ---------- parsing ----------
@@ -273,7 +283,14 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             self.expect(b':')?;
             let v = self.value()?;
-            kv.push((key, v));
+            // duplicate keys: last occurrence wins (the common
+            // interoperability choice of RFC 8259 §4), replacing in place so
+            // key order still reflects first appearance
+            if let Some(slot) = kv.iter_mut().find(|e| e.0 == key) {
+                slot.1 = v;
+            } else {
+                kv.push((key, v));
+            }
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
@@ -498,6 +515,41 @@ mod tests {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.25).to_string(), "3.25");
         assert_eq!(Json::Num(-0.5).to_string(), "-0.5");
+    }
+
+    #[test]
+    fn integer_accessors_reject_unsafe_magnitudes() {
+        // 2^53 − 1 is the last unambiguous integer: accept it, reject 2^53
+        // and above (2^53 + 1 parses to the same float as 2^53, so `Some`
+        // there would silently return a truncated neighbor — the old `as`
+        // casts even saturated at huge magnitudes)
+        let safe = Json::Num(9_007_199_254_740_991.0); // 2^53 − 1
+        assert_eq!(safe.as_u64(), Some(9_007_199_254_740_991));
+        assert_eq!(safe.as_usize(), Some(9_007_199_254_740_991));
+        let boundary = Json::parse("9007199254740992").unwrap(); // 2^53
+        assert_eq!(boundary.as_u64(), None);
+        let collapsed = Json::parse("9007199254740993").unwrap(); // 2^53 + 1
+        assert_eq!(collapsed.as_u64(), None, "must not return a truncated neighbor");
+        let too_big = Json::parse("1e300").unwrap();
+        assert_eq!(too_big.as_u64(), None);
+        assert_eq!(too_big.as_usize(), None);
+        // negatives and fractions still rejected
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins() {
+        let j = Json::parse(r#"{"a": 1, "b": 2, "a": 3}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("b").unwrap().as_f64(), Some(2.0));
+        // the duplicate collapses to a single entry, order of first appearance
+        if let Json::Obj(kv) = &j {
+            let keys: Vec<&str> = kv.iter().map(|(k, _)| k.as_str()).collect();
+            assert_eq!(keys, vec!["a", "b"]);
+        } else {
+            panic!()
+        }
     }
 
     #[test]

@@ -1,0 +1,507 @@
+//! The asynchronous coordinator: no round barrier, fantasy-augmented
+//! suggestions.
+//!
+//! [`super::leader::ParallelBo`] is a faithful transcription of the paper's
+//! §3.4 scatter/gather scheme — and inherits its weakness: every worker
+//! idles until the slowest trial of the round finishes, so utilization is
+//! capped by the cost spread of a batch (and collapses further when a
+//! failed trial retries *sequentially* inside its round).
+//!
+//! [`AsyncBo`] removes the barrier. The leader keeps every worker busy at
+//! all times: the moment an outcome arrives it
+//!
+//! 1. retracts the active fantasy observations (`O(1)` on the lazy GP —
+//!    the packed [`crate::linalg::GrowingCholesky`] buffer only ever
+//!    *appends*, so speculation rolls back by truncation),
+//! 2. folds the real result into the surrogate (one `O(n²)` incremental
+//!    extension),
+//! 3. re-fantasizes the still-pending trials under the configured
+//!    [`PendingStrategy`] (constant liar / posterior mean / kriging
+//!    believer — Snoek et al. 2012), and
+//! 4. suggests the next point against the augmented posterior and
+//!    dispatches it to the freed worker.
+//!
+//! Virtual wall-clock is tracked per worker slot (a discrete-event model of
+//! the paper's testbed): each attempt occupies its worker from
+//! `max(slot free, submit time)` for its simulated training cost, failed
+//! attempts included. Utilization and the fantasy counters are exported
+//! through [`crate::metrics::AsyncTrace`].
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::leader::SharedObjective;
+use super::messages::Trial;
+use super::worker::{WorkerConfig, WorkerPool};
+use crate::bo::driver::{Best, BoConfig, BoDriver, PendingStrategy};
+use crate::metrics::{AsyncTrace, AsyncTracePoint};
+use crate::objectives::{Evaluation, Objective};
+use crate::util::timer::Stopwatch;
+
+/// Configuration of the asynchronous coordinator.
+#[derive(Debug, Clone)]
+pub struct AsyncCoordinatorConfig {
+    /// worker threads (= concurrent trials; there is no separate batch size:
+    /// the pending set *is* the worker pool)
+    pub workers: usize,
+    /// fantasy-imputation strategy for in-flight trials
+    pub pending: PendingStrategy,
+    /// real seconds slept per simulated objective second
+    pub sleep_scale: f64,
+    /// failure-injection probability per attempt
+    pub fail_prob: f64,
+    /// maximum resubmissions of a failed trial before it is dropped
+    pub max_retries: u32,
+    pub seed: u64,
+}
+
+impl Default for AsyncCoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            pending: PendingStrategy::ConstantLiarMin,
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+            max_retries: 2,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-completion telemetry (the async analogue of
+/// [`super::leader::RoundRecord`]).
+#[derive(Debug, Clone)]
+pub struct AsyncEvent {
+    /// monotone event counter (one per worker outcome)
+    pub event: u64,
+    pub trial_id: u64,
+    /// *virtual* testbed slot the attempt ran on (a simulation entity —
+    /// decoupled from whichever OS thread happened to evaluate the trial,
+    /// so the accounting is robust to host scheduling)
+    pub worker: usize,
+    /// virtual testbed time at which this attempt finished
+    pub virtual_done_s: f64,
+    /// a real observation entered the surrogate
+    pub observed: bool,
+    /// the attempt failed and was resubmitted
+    pub retried: bool,
+    /// the attempt failed terminally and its trial was dropped
+    pub dropped: bool,
+    /// incumbent after the event (real observations only)
+    pub best: f64,
+    /// fantasies shaping the posterior after the event
+    pub fantasies_active: usize,
+    /// leader seconds choosing the replacement suggestion
+    pub suggest_seconds: f64,
+    /// leader seconds retracting/observing/re-fantasizing
+    pub sync_seconds: f64,
+}
+
+/// Aggregate async-run counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AsyncStats {
+    pub completed: u64,
+    pub dropped: u64,
+    pub retries: u64,
+    /// fantasy observations inserted over the whole run
+    pub fantasies_issued: u64,
+    /// fantasy observations retracted over the whole run
+    pub fantasy_rollbacks: u64,
+    /// Σ simulated busy seconds across workers (failed attempts included)
+    pub busy_s: f64,
+    pub suggest_s: f64,
+    pub sync_s: f64,
+}
+
+struct Dispatched {
+    suggest_seconds: f64,
+    sync_seconds: f64,
+}
+
+/// Asynchronous fantasy-augmented parallel BO.
+pub struct AsyncBo {
+    driver: BoDriver,
+    pool: WorkerPool,
+    config: AsyncCoordinatorConfig,
+    events: Vec<AsyncEvent>,
+    stats: AsyncStats,
+    next_trial_id: u64,
+    /// virtual availability clocks, one per simulated testbed slot
+    avail: Vec<f64>,
+    /// `(virtual submit time, virtual slot)` per in-flight trial id; the
+    /// slot is chosen at dispatch time (the slot whose completion freed
+    /// it), so virtual accounting does not depend on which OS thread
+    /// physically evaluates the trial
+    submit_v: HashMap<u64, (f64, usize)>,
+    /// in-flight `(trial id, point)` — the set that gets fantasized
+    pending: Vec<(u64, Vec<f64>)>,
+}
+
+impl AsyncBo {
+    pub fn new(
+        bo_config: BoConfig,
+        objective: Arc<dyn Objective>,
+        config: AsyncCoordinatorConfig,
+    ) -> Self {
+        assert!(config.workers > 0);
+        let driver =
+            BoDriver::new(bo_config, Box::new(SharedObjective(Arc::clone(&objective))));
+        let pool = WorkerPool::spawn(
+            objective,
+            WorkerConfig {
+                workers: config.workers,
+                sleep_scale: config.sleep_scale,
+                fail_prob: config.fail_prob,
+                queue_cap: (config.workers * 2).max(8),
+                seed: config.seed ^ 0x9e37_79b9_7f4a_7c15,
+            },
+        );
+        let avail = vec![0.0; config.workers];
+        Self {
+            driver,
+            pool,
+            config,
+            events: Vec::new(),
+            stats: AsyncStats::default(),
+            next_trial_id: 0,
+            avail,
+            submit_v: HashMap::new(),
+            pending: Vec::new(),
+        }
+    }
+
+    pub fn driver(&self) -> &BoDriver {
+        &self.driver
+    }
+
+    pub fn events(&self) -> &[AsyncEvent] {
+        &self.events
+    }
+
+    pub fn stats(&self) -> AsyncStats {
+        self.stats
+    }
+
+    /// Virtual testbed wall-clock consumed so far: the latest per-slot
+    /// completion time.
+    pub fn virtual_seconds(&self) -> f64 {
+        self.avail.iter().fold(0.0f64, |a, &b| a.max(b))
+    }
+
+    /// Fraction of `workers × wall` the slots spent training (failed
+    /// attempts count as busy — they burned their slot).
+    pub fn utilization(&self) -> f64 {
+        let wall = self.virtual_seconds();
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        self.stats.busy_s / (self.config.workers as f64 * wall)
+    }
+
+    /// Run until the driver has observed `total_evals` evaluations
+    /// (seed evaluations included, matching [`super::ParallelBo`]).
+    pub fn run_until_evals(&mut self, total_evals: usize) -> Best {
+        self.driver.ensure_seeded();
+        // prime: one suggestion per virtual slot (each dispatched point
+        // joins the pending set fantasized for the next suggestion)
+        for slot in 0..self.config.workers {
+            if self.driver.history().len() + self.pending.len() >= total_evals {
+                break;
+            }
+            self.dispatch_new(0.0, slot);
+        }
+        while self.driver.history().len() < total_evals && !self.pending.is_empty() {
+            self.step_event(total_evals);
+        }
+        // leave the surrogate in its real-data state
+        self.stats.fantasy_rollbacks += self.driver.retract_fantasies() as u64;
+        self.driver.best().cloned().expect("no observations")
+    }
+
+    /// Suggest against the fantasy-augmented posterior and dispatch to the
+    /// pool, binding the trial to virtual slot `slot` from virtual time
+    /// `now_v` (the completion that freed the slot).
+    fn dispatch_new(&mut self, now_v: f64, slot: usize) -> Dispatched {
+        let mut sw = Stopwatch::new();
+        // refresh the fantasy set: retract whatever is stale, re-impute the
+        // full pending set under the configured strategy
+        self.stats.fantasy_rollbacks += self.driver.retract_fantasies() as u64;
+        let xs: Vec<Vec<f64>> = self.pending.iter().map(|(_, x)| x.clone()).collect();
+        self.stats.fantasies_issued +=
+            self.driver.fantasize(&xs, self.config.pending) as u64;
+        let sync_seconds = sw.lap_s();
+        let x = self.driver.suggest_batch(1).pop().expect("suggest_batch(1) empty");
+        let suggest_seconds = sw.lap_s();
+        let id = self.next_trial_id;
+        self.next_trial_id += 1;
+        self.submit_v.insert(id, (now_v + suggest_seconds + sync_seconds, slot));
+        self.pending.push((id, x.clone()));
+        self.pool.submit(Trial { id, round: self.events.len() as u64, x, attempt: 0 });
+        self.stats.suggest_s += suggest_seconds;
+        self.stats.sync_s += sync_seconds;
+        Dispatched { suggest_seconds, sync_seconds }
+    }
+
+    /// Remove a finished trial from the pending set (unwinding the active
+    /// fantasies), fold its result in when it succeeded, and refill the
+    /// freed virtual slot while budget remains. Returns leader
+    /// `(suggest, sync)` seconds.
+    fn settle(
+        &mut self,
+        trial_id: u64,
+        outcome: Option<(Vec<f64>, Evaluation)>,
+        slot: usize,
+        done_v: f64,
+        total_evals: usize,
+    ) -> (f64, f64) {
+        let sw = Stopwatch::new();
+        self.stats.fantasy_rollbacks += self.driver.retract_fantasies() as u64;
+        self.pending.retain(|(id, _)| *id != trial_id);
+        if let Some((x, eval)) = outcome {
+            self.driver.observe_external(x, eval);
+            self.stats.completed += 1;
+        }
+        let mut sync_seconds = sw.elapsed_s();
+        let mut suggest_seconds = 0.0;
+        if self.driver.history().len() + self.pending.len() < total_evals {
+            let d = self.dispatch_new(done_v, slot);
+            suggest_seconds += d.suggest_seconds;
+            sync_seconds += d.sync_seconds;
+        }
+        (suggest_seconds, sync_seconds)
+    }
+
+    /// Receive one outcome and react: observe/retry/drop, then refill the
+    /// freed slot.
+    fn step_event(&mut self, total_evals: usize) {
+        let o = self.pool.recv();
+        // discrete-event accounting on the simulated testbed: the attempt
+        // occupies the virtual slot it was bound to at dispatch time
+        let (submitted, slot) = self.submit_v.remove(&o.trial.id).unwrap_or((0.0, 0));
+        let start_v = self.avail[slot].max(submitted);
+        let done_v = start_v + o.sim_cost_s;
+        self.avail[slot] = done_v;
+        self.stats.busy_s += o.sim_cost_s;
+
+        let mut observed = false;
+        let mut retried = false;
+        let mut dropped = false;
+        let mut suggest_seconds = 0.0;
+        let mut sync_seconds = 0.0;
+
+        match o.result {
+            Ok(eval) => {
+                // real result: unwind speculation, fold the truth in
+                let (sg, sy) =
+                    self.settle(o.trial.id, Some((o.trial.x.clone(), eval)), slot, done_v, total_evals);
+                suggest_seconds += sg;
+                sync_seconds += sy;
+                observed = true;
+            }
+            Err(_) if o.trial.attempt < self.config.max_retries => {
+                // same point, same slot, fresh id; the pending entry (and
+                // its fantasy) stays valid, so no surrogate work is needed
+                let mut retry = o.trial.clone();
+                retry.attempt += 1;
+                retry.id = self.next_trial_id;
+                self.next_trial_id += 1;
+                if let Some(entry) =
+                    self.pending.iter_mut().find(|(id, _)| *id == o.trial.id)
+                {
+                    entry.0 = retry.id;
+                }
+                self.submit_v.insert(retry.id, (done_v, slot));
+                self.stats.retries += 1;
+                self.pool.submit(retry);
+                retried = true;
+            }
+            Err(_) => {
+                // terminal failure: the fantasy for this point is stale
+                let (sg, sy) = self.settle(o.trial.id, None, slot, done_v, total_evals);
+                suggest_seconds += sg;
+                sync_seconds += sy;
+                self.stats.dropped += 1;
+                dropped = true;
+            }
+        }
+
+        let best = self.driver.best().map_or(f64::NEG_INFINITY, |b| b.value);
+        self.events.push(AsyncEvent {
+            event: self.events.len() as u64,
+            trial_id: o.trial.id,
+            worker: slot,
+            virtual_done_s: done_v,
+            observed,
+            retried,
+            dropped,
+            best,
+            fantasies_active: self.driver.fantasies_active(),
+            suggest_seconds,
+            sync_seconds,
+        });
+    }
+
+    /// Export the run as a metrics trace (per-event rows + run aggregates).
+    pub fn trace(&self, name: impl Into<String>) -> AsyncTrace {
+        AsyncTrace {
+            name: name.into(),
+            points: self
+                .events
+                .iter()
+                .map(|e| AsyncTracePoint {
+                    event: e.event,
+                    trial_id: e.trial_id,
+                    worker: e.worker,
+                    virtual_done_s: e.virtual_done_s,
+                    best: e.best,
+                    fantasies_active: e.fantasies_active,
+                    observed: e.observed,
+                    retried: e.retried,
+                    dropped: e.dropped,
+                })
+                .collect(),
+            utilization: self.utilization(),
+            fantasies_issued: self.stats.fantasies_issued,
+            fantasy_rollbacks: self.stats.fantasy_rollbacks,
+            virtual_wall_s: self.virtual_seconds(),
+        }
+    }
+
+    /// Shut the pool down and return the driver for post-analysis.
+    pub fn finish(self) -> BoDriver {
+        self.pool.shutdown();
+        self.driver
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acquisition::optim::OptimConfig;
+    use crate::bo::driver::InitDesign;
+    use crate::objectives::suite::Sphere;
+    use crate::objectives::trainer::ResNetCifarSim;
+
+    fn fast_bo(seed: u64) -> BoConfig {
+        BoConfig::lazy()
+            .with_seed(seed)
+            .with_init(InitDesign::Lhs(5))
+            .with_optim(OptimConfig { candidates: 96, restarts: 3, nm_iters: 20, nm_scale: 0.08 })
+    }
+
+    #[test]
+    fn async_bo_optimizes_sphere() {
+        let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
+        let mut abo = AsyncBo::new(
+            fast_bo(201),
+            obj,
+            AsyncCoordinatorConfig { workers: 3, ..Default::default() },
+        );
+        let best = abo.run_until_evals(25);
+        assert!(best.value > -1.0, "best={}", best.value);
+        assert_eq!(abo.driver().history().len(), 25);
+        // surrogate holds exactly the real observations afterwards
+        assert_eq!(abo.driver().surrogate().len(), 25);
+        assert_eq!(abo.driver().fantasies_active(), 0);
+    }
+
+    #[test]
+    fn fantasy_counters_balance() {
+        let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
+        let mut abo = AsyncBo::new(
+            fast_bo(203),
+            obj,
+            AsyncCoordinatorConfig { workers: 4, ..Default::default() },
+        );
+        abo.run_until_evals(21);
+        let s = abo.stats();
+        assert!(s.fantasies_issued > 0, "async run must have fantasized");
+        assert_eq!(
+            s.fantasies_issued, s.fantasy_rollbacks,
+            "every fantasy must be retracted by the end"
+        );
+        assert_eq!(s.completed, 21 - 5); // 5 LHS seeds
+    }
+
+    #[test]
+    fn workers_accumulate_virtual_cost() {
+        let obj: Arc<dyn Objective> = Arc::new(ResNetCifarSim::new());
+        // virtual slots are simulation entities bound at dispatch time, so
+        // the accounting is independent of which OS thread evaluates what —
+        // utilization is structurally near 1 with no failures
+        let mut abo = AsyncBo::new(
+            fast_bo(207),
+            obj,
+            AsyncCoordinatorConfig { workers: 4, ..Default::default() },
+        );
+        abo.run_until_evals(17); // 5 seeds + 12 trainings
+        let virt = abo.virtual_seconds();
+        let busy = abo.stats().busy_s;
+        // 12 trainings ≈ 190 s each across 4 slots
+        assert!(virt > 300.0, "virt={virt}");
+        assert!(busy > 1500.0, "busy={busy}");
+        assert!(abo.utilization() > 0.8 && abo.utilization() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn failure_storm_retries_and_completes() {
+        let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
+        let mut abo = AsyncBo::new(
+            fast_bo(209),
+            obj,
+            AsyncCoordinatorConfig {
+                workers: 2,
+                fail_prob: 0.4,
+                max_retries: 20,
+                ..Default::default()
+            },
+        );
+        let best = abo.run_until_evals(15);
+        assert!(best.value.is_finite());
+        assert_eq!(abo.driver().history().len(), 15);
+        assert!(abo.stats().retries > 0, "40% failure rate must have retried");
+        assert_eq!(abo.stats().dropped, 0);
+    }
+
+    #[test]
+    fn pending_strategies_all_run() {
+        for strategy in [
+            PendingStrategy::ConstantLiarMin,
+            PendingStrategy::PosteriorMean,
+            PendingStrategy::KrigingBeliever,
+        ] {
+            let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
+            let mut abo = AsyncBo::new(
+                fast_bo(211),
+                obj,
+                AsyncCoordinatorConfig { workers: 3, pending: strategy, ..Default::default() },
+            );
+            let best = abo.run_until_evals(14);
+            assert!(best.value.is_finite(), "{strategy:?}");
+            assert_eq!(abo.driver().history().len(), 14, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn trace_exports_telemetry() {
+        let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
+        let mut abo = AsyncBo::new(
+            fast_bo(213),
+            obj,
+            AsyncCoordinatorConfig { workers: 2, ..Default::default() },
+        );
+        abo.run_until_evals(12);
+        let t = abo.trace("async");
+        assert_eq!(t.points.len(), abo.events().len());
+        assert!(t.utilization > 0.0);
+        assert_eq!(t.fantasies_issued, abo.stats().fantasies_issued);
+        let path = std::env::temp_dir()
+            .join(format!("lazygp_async_trace_{}.csv", std::process::id()));
+        t.write_csv(path.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("event,"));
+        assert_eq!(body.lines().count(), t.points.len() + 1);
+        std::fs::remove_file(path).unwrap();
+        let _driver = abo.finish();
+    }
+}

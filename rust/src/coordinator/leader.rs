@@ -75,9 +75,10 @@ pub struct ParallelBo {
     virtual_seconds: f64,
 }
 
-/// Adapter sharing one objective between the leader's driver (suggestion
-/// bookkeeping only) and the workers (actual evaluation).
-struct SharedObjective(Arc<dyn Objective>);
+/// Adapter sharing one objective between a leader's driver (suggestion
+/// bookkeeping only) and the workers (actual evaluation). Shared with the
+/// async coordinator.
+pub(crate) struct SharedObjective(pub(crate) Arc<dyn Objective>);
 
 impl Objective for SharedObjective {
     fn name(&self) -> &str {
@@ -147,23 +148,36 @@ impl ParallelBo {
             in_flight += 1;
         }
 
-        // gather (+ retry failed trials)
+        // gather (+ retry failed trials). A retried trial runs *after* its
+        // failed attempt, so its virtual cost is the whole chain: the
+        // failed attempts' simulated seconds accumulate into the retry
+        // (keyed by the fresh trial id), and the round's wall-clock is the
+        // max over completed *chains*, not over single attempts.
         let mut outcomes: Vec<TrialOutcome> = Vec::with_capacity(in_flight);
         let mut dropped = 0usize;
+        let mut max_cost = 0.0f64;
+        let mut carried: std::collections::HashMap<u64, f64> = std::collections::HashMap::new();
         while in_flight > 0 {
             let o = self.pool.recv();
             in_flight -= 1;
+            let chain_cost = carried.remove(&o.trial.id).unwrap_or(0.0) + o.sim_cost_s;
             match &o.result {
-                Ok(_) => outcomes.push(o),
+                Ok(_) => {
+                    max_cost = max_cost.max(chain_cost);
+                    outcomes.push(o);
+                }
                 Err(_) => {
                     if o.trial.attempt < self.config.max_retries {
                         let mut retry = o.trial.clone();
                         retry.attempt += 1;
                         retry.id = self.next_trial_id;
                         self.next_trial_id += 1;
+                        carried.insert(retry.id, chain_cost);
                         self.pool.submit(retry);
                         in_flight += 1;
                     } else {
+                        // a dropped chain still occupied its worker
+                        max_cost = max_cost.max(chain_cost);
                         dropped += 1;
                     }
                 }
@@ -172,11 +186,9 @@ impl ParallelBo {
 
         // synchronize: t successive incremental extensions (t·O(n²))
         let sw = Stopwatch::new();
-        let mut max_cost = 0.0f64;
         let completed = outcomes.len();
         for o in outcomes {
             let eval = o.result.expect("only Ok outcomes reach sync");
-            max_cost = max_cost.max(eval.sim_cost_s);
             self.driver.observe_external(o.trial.x, eval);
         }
         let sync_seconds = sw.elapsed_s();
@@ -316,6 +328,45 @@ mod tests {
         let rec = pbo.round().clone();
         assert_eq!(rec.completed, 0);
         assert_eq!(rec.dropped, 8);
+    }
+
+    #[test]
+    fn retried_trials_accumulate_virtual_cost() {
+        /// Fixed-cost deterministic objective so chain costs are exact.
+        struct FixedCost;
+        impl Objective for FixedCost {
+            fn name(&self) -> &str {
+                "fixed_cost"
+            }
+            fn bounds(&self) -> &[(f64, f64)] {
+                &[(0.0, 1.0)]
+            }
+            fn eval(&self, _x: &[f64], _rng: &mut Pcg64) -> Evaluation {
+                Evaluation { value: 0.5, sim_cost_s: 10.0 }
+            }
+        }
+        let obj: Arc<dyn Objective> = Arc::new(FixedCost);
+        let mut pbo = ParallelBo::new(
+            fast_bo(67),
+            obj,
+            CoordinatorConfig {
+                workers: 1,
+                batch_size: 1,
+                fail_prob: 1.0, // every attempt crashes
+                max_retries: 2, // 3 attempts total, then dropped
+                ..Default::default()
+            },
+        );
+        let rec = pbo.round().clone();
+        assert_eq!(rec.completed, 0);
+        assert_eq!(rec.dropped, 1);
+        // the chain burned 3 × 10 simulated seconds sequentially — the old
+        // max-over-attempts accounting would have reported only ~10
+        assert!(
+            rec.virtual_wall_s >= 30.0,
+            "retry chain cost must accumulate: {}",
+            rec.virtual_wall_s
+        );
     }
 
     #[test]

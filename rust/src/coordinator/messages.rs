@@ -15,15 +15,24 @@ pub struct Trial {
 }
 
 /// Why a trial failed.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum TrialError {
     /// Injected / simulated crash of the training process.
-    #[error("simulated worker crash")]
     SimulatedCrash,
     /// The evaluation produced a non-finite value.
-    #[error("objective returned non-finite value {0}")]
     NonFinite(f64),
 }
+
+impl std::fmt::Display for TrialError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrialError::SimulatedCrash => write!(f, "simulated worker crash"),
+            TrialError::NonFinite(v) => write!(f, "objective returned non-finite value {v}"),
+        }
+    }
+}
+
+impl std::error::Error for TrialError {}
 
 /// Result of one trial, successful or not.
 #[derive(Debug, Clone)]
@@ -33,6 +42,10 @@ pub struct TrialOutcome {
     pub result: Result<Evaluation, TrialError>,
     /// real seconds the worker spent on this trial (scaled sleep + eval)
     pub worker_seconds: f64,
+    /// *simulated* testbed seconds this attempt consumed — reported even
+    /// when the attempt failed (a crashed training run still burned its
+    /// slot until the crash), so retry chains can be costed honestly
+    pub sim_cost_s: f64,
 }
 
 impl TrialOutcome {
@@ -53,6 +66,7 @@ mod tests {
             worker_id: 0,
             result: Ok(Evaluation { value: 1.0, sim_cost_s: 2.0 }),
             worker_seconds: 0.0,
+            sim_cost_s: 2.0,
         };
         assert!(ok.is_ok());
         let bad = TrialOutcome {
@@ -60,6 +74,7 @@ mod tests {
             worker_id: 0,
             result: Err(TrialError::SimulatedCrash),
             worker_seconds: 0.0,
+            sim_cost_s: 1.5,
         };
         assert!(!bad.is_ok());
     }

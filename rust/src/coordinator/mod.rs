@@ -17,17 +17,24 @@
 //!   evaluates the shared objective with its own deterministic RNG stream,
 //!   and reports a [`messages::TrialOutcome`]. Failure injection simulates
 //!   crashed training runs.
-//! * [`leader`] — the coordinator: per round it asks the BO driver for a
-//!   batch of `t` suggestions, scatters them, gathers the outcomes, retries
-//!   failures, and synchronizes the surrogate with `t` incremental
-//!   Cholesky extensions. Wall-clock is tracked both *real* (this process)
-//!   and *virtual* (what the paper's testbed would have spent, driven by
-//!   the objectives' simulated training costs).
+//! * [`leader`] — the synchronous coordinator: per round it asks the BO
+//!   driver for a batch of `t` suggestions, scatters them, gathers the
+//!   outcomes, retries failures, and synchronizes the surrogate with `t`
+//!   incremental Cholesky extensions. Wall-clock is tracked both *real*
+//!   (this process) and *virtual* (what the paper's testbed would have
+//!   spent, driven by the objectives' simulated training costs).
+//! * [`async_leader`] — the asynchronous coordinator: no round barrier.
+//!   Freed workers are refilled immediately with suggestions made against a
+//!   surrogate augmented by *fantasy observations* for all in-flight
+//!   trials (constant liar / posterior mean / kriging believer), retracted
+//!   in `O(1)` via the packed factor's truncation when real results land.
 
+pub mod async_leader;
 pub mod leader;
 pub mod messages;
 pub mod worker;
 
+pub use async_leader::{AsyncBo, AsyncCoordinatorConfig, AsyncEvent, AsyncStats};
 pub use leader::{CoordinatorConfig, ParallelBo, RoundRecord};
 pub use messages::{Trial, TrialError, TrialOutcome};
 pub use worker::WorkerPool;

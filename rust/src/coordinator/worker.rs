@@ -123,24 +123,33 @@ fn worker_loop(
             Err(_) => return, // leader closed the queue
         };
         let sw = Stopwatch::new();
-        // failure injection: crash *before* producing a result
-        let result = if cfg.fail_prob > 0.0 && rng.next_f64() < cfg.fail_prob {
+        // failure injection: the crash decision is drawn first (preserving
+        // the deterministic stream for crash-free runs), but the objective
+        // is evaluated regardless so the attempt's *simulated* cost is known
+        // — a crashed training run still burned its slot until the crash
+        // (modelled as the full run: results are lost at the end)
+        let crashed = cfg.fail_prob > 0.0 && rng.next_f64() < cfg.fail_prob;
+        let eval = objective.eval(&trial.x, &mut rng);
+        let sim_cost_s = eval.sim_cost_s;
+        if cfg.sleep_scale > 0.0 && sim_cost_s > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(
+                (sim_cost_s * cfg.sleep_scale).min(5.0),
+            ));
+        }
+        let result = if crashed {
             Err(TrialError::SimulatedCrash)
+        } else if eval.value.is_finite() {
+            Ok(eval)
         } else {
-            let eval = objective.eval(&trial.x, &mut rng);
-            if cfg.sleep_scale > 0.0 && eval.sim_cost_s > 0.0 {
-                std::thread::sleep(Duration::from_secs_f64(
-                    (eval.sim_cost_s * cfg.sleep_scale).min(5.0),
-                ));
-            }
-            if eval.value.is_finite() {
-                Ok(eval)
-            } else {
-                Err(TrialError::NonFinite(eval.value))
-            }
+            Err(TrialError::NonFinite(eval.value))
         };
-        let outcome =
-            TrialOutcome { trial, worker_id: wid, result, worker_seconds: sw.elapsed_s() };
+        let outcome = TrialOutcome {
+            trial,
+            worker_id: wid,
+            result,
+            worker_seconds: sw.elapsed_s(),
+            sim_cost_s,
+        };
         if res_tx.send(outcome).is_err() {
             return; // leader gone
         }

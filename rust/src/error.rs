@@ -1,0 +1,104 @@
+//! Crate-wide error type — the offline stand-in for `anyhow`.
+//!
+//! A single string-backed error is enough for this crate: every fallible
+//! path either bubbles an I/O error, a parse error with its own message, or
+//! a hand-written context string. The [`err!`](crate::err!) and
+//! [`bail!`](crate::bail!) macros mirror the `anyhow!`/`bail!` ergonomics
+//! the launcher and runtime layers use.
+
+use std::fmt;
+
+/// String-backed error carrying a rendered message.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    /// Build from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error(e.to_string())
+    }
+}
+
+impl From<crate::config::json::JsonError> for Error {
+    fn from(e: crate::config::json::JsonError) -> Self {
+        Error(e.to_string())
+    }
+}
+
+impl From<crate::util::cli::CliError> for Error {
+    fn from(e: crate::util::cli::CliError) -> Self {
+        Error(e.0)
+    }
+}
+
+/// Build a [`Error`] from a format string (the `anyhow!` shape).
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => {
+        $crate::Error::msg(format!($($t)*))
+    };
+}
+
+/// Early-return an [`Error`] from a format string (the `bail!` shape).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::Error::msg(format!($($t)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_message() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+        assert_eq!(format!("{e:#}"), "boom"); // alternate form used by main
+    }
+
+    #[test]
+    fn converts_from_io_and_strings() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        let e: Error = String::from("x").into();
+        assert_eq!(e.to_string(), "x");
+    }
+
+    #[test]
+    fn macros_format() {
+        fn fails() -> crate::Result<()> {
+            bail!("bad {}", 7)
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "bad 7");
+        assert_eq!(err!("v={}", 1.5).to_string(), "v=1.5");
+    }
+}

@@ -49,6 +49,9 @@ pub struct ExactGp {
     y_scale: f64,
     update_seconds: f64,
     best_idx: Option<usize>,
+    /// `(real observation count, best_idx at checkpoint)` while fantasy
+    /// observations are stacked on top of the real data
+    fantasy_base: Option<(usize, Option<usize>)>,
 }
 
 impl ExactGp {
@@ -65,6 +68,7 @@ impl ExactGp {
             y_scale: 1.0,
             update_seconds: 0.0,
             best_idx: None,
+            fantasy_base: None,
         }
     }
 
@@ -84,23 +88,52 @@ impl ExactGp {
     }
 
     fn refactorize(&mut self) {
-        let k = cov_matrix(&self.kernel, &self.xs);
-        let mut l = k;
-        // the faithful baseline uses the paper's unblocked Alg. 2
-        let res = if self.config.unblocked_cholesky {
-            cholesky_unblocked(&mut l)
-        } else {
-            crate::linalg::cholesky::cholesky_in_place(&mut l)
-        };
-        if res.is_err() {
-            // retry with boosted noise — mirrors standard GP-library
-            // behaviour on numerically non-PD covariances
-            self.kernel.params.noise = (self.kernel.params.noise * 10.0).max(1e-8);
-            let k2 = cov_matrix(&self.kernel, &self.xs);
-            l = k2;
-            cholesky_unblocked(&mut l).expect("covariance not PD even with boosted noise");
+        // a numerically non-PD covariance is retried under an escalating
+        // *transient* jitter — the configured noise is never mutated, so a
+        // fantasy observe/retract cycle restores the exact prior posterior
+        // (same discipline as `LazyGp::full_refactorize`)
+        let configured_noise = self.kernel.params.noise;
+        let mut jitter = 0.0f64;
+        let mut factored = None;
+        for _ in 0..7 {
+            self.kernel.params.noise = configured_noise + jitter;
+            let mut l = cov_matrix(&self.kernel, &self.xs);
+            // the faithful baseline uses the paper's unblocked Alg. 2
+            let res = if self.config.unblocked_cholesky {
+                cholesky_unblocked(&mut l)
+            } else {
+                crate::linalg::cholesky::cholesky_in_place(&mut l)
+            };
+            self.kernel.params.noise = configured_noise;
+            if res.is_ok() {
+                factored = Some(l);
+                break;
+            }
+            jitter = if jitter == 0.0 {
+                (configured_noise * 10.0).max(1e-8)
+            } else {
+                jitter * 100.0
+            };
         }
-        self.factor = GrowingCholesky::from_factor(&l);
+        match factored {
+            Some(l) => self.factor = GrowingCholesky::from_factor(&l),
+            None => {
+                // every jitter level failed: degrade to bordering the
+                // previous factor instead of panicking. Truncation first
+                // keeps the dimensions consistent (the leading block of a
+                // Cholesky factor is the factor of the leading block).
+                let n = self.xs.len();
+                if self.factor.dim() > n {
+                    self.factor.truncate(n);
+                }
+                while self.factor.dim() < n {
+                    let m = self.factor.dim();
+                    let p = cov_vector(&self.kernel, &self.xs[..m], &self.xs[m]);
+                    let c = self.kernel.self_cov() + self.kernel.params.noise;
+                    self.factor.extend(&p, c);
+                }
+            }
+        }
         let (offset, scale) = standardize(&self.y);
         self.mean_offset = offset;
         self.y_scale = scale;
@@ -110,6 +143,10 @@ impl ExactGp {
 
 impl Surrogate for ExactGp {
     fn observe(&mut self, x: &[f64], y: f64) {
+        assert!(
+            self.fantasy_base.is_none(),
+            "real observe while fantasies are active; retract_fantasies first"
+        );
         let sw = Stopwatch::new();
         self.xs.push(x.to_vec());
         self.y.push(y);
@@ -155,6 +192,43 @@ impl Surrogate for ExactGp {
 
     fn update_seconds(&self) -> f64 {
         self.update_seconds
+    }
+
+    fn observe_fantasy(&mut self, x: &[f64], y: f64) {
+        let sw = Stopwatch::new();
+        if self.fantasy_base.is_none() {
+            self.fantasy_base = Some((self.y.len(), self.best_idx));
+        }
+        self.xs.push(x.to_vec());
+        self.y.push(y);
+        if self.best_idx.map_or(true, |i| y > self.y[i]) {
+            self.best_idx = Some(self.y.len() - 1);
+        }
+        // no hyper-refit on fantasies: retraction must restore the exact
+        // pre-speculation posterior, so the kernel stays fixed
+        self.refactorize();
+        self.update_seconds += sw.elapsed_s();
+    }
+
+    fn retract_fantasies(&mut self) -> usize {
+        let Some((n, best_idx)) = self.fantasy_base.take() else {
+            return 0;
+        };
+        let removed = self.y.len() - n;
+        if removed > 0 {
+            self.xs.truncate(n);
+            self.y.truncate(n);
+            self.best_idx = best_idx;
+            // unlike the lazy GP's O(1) truncate, the dense baseline pays a
+            // full O(n³) re-factorization to unwind speculation — the cost
+            // asymmetry §3.4 leans on
+            self.refactorize();
+        }
+        removed
+    }
+
+    fn fantasies_active(&self) -> usize {
+        self.fantasy_base.map_or(0, |(n, _)| self.y.len() - n)
     }
 }
 
@@ -230,17 +304,39 @@ mod tests {
     }
 
     #[test]
-    fn duplicate_points_survive_via_noise_boost() {
+    fn duplicate_points_survive_via_transient_jitter() {
         let mut gp = ExactGp::new(ExactGpConfig {
             kernel: Kernel::paper_default().clone(),
             refit_each_step: false,
             fit_space: FitSpace::default(),
             unblocked_cholesky: true,
         });
+        let noise_before = gp.kernel().params.noise;
         gp.observe(&[1.0, 1.0], 0.5);
         gp.observe(&[1.0, 1.0], 0.5); // exact duplicate
         let (m, v) = gp.predict(&[1.0, 1.0]);
         assert!(m.is_finite() && v.is_finite());
+        // any jitter used to survive the duplicate must have been transient
+        assert_eq!(gp.kernel().params.noise, noise_before);
+    }
+
+    #[test]
+    fn fantasy_retract_restores_posterior_even_after_duplicate_fantasy() {
+        let mut gp = ExactGp::new(no_refit());
+        gp.observe(&[0.0], 1.0);
+        gp.observe(&[1.5], -0.5);
+        let before = gp.predict(&[0.7]);
+        let noise_before = gp.kernel().params.noise;
+        // a fantasy duplicating a training point makes the speculative
+        // covariance (nearly) singular — the old code mutated the noise
+        // permanently here, so retraction could not restore the posterior
+        gp.observe_fantasy(&[0.0], 1.0);
+        assert_eq!(gp.fantasies_active(), 1);
+        assert_eq!(gp.retract_fantasies(), 1);
+        assert_eq!(gp.kernel().params.noise, noise_before);
+        let after = gp.predict(&[0.7]);
+        assert_eq!(before.0.to_bits(), after.0.to_bits());
+        assert_eq!(before.1.to_bits(), after.1.to_bits());
     }
 
     #[test]

@@ -70,6 +70,35 @@ impl LazyGpConfig {
     }
 }
 
+/// Telemetry of lag-boundary refactorizations (the `ExtendStats` analogue
+/// for the full `O(n³)` path).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RefitStats {
+    /// full refactorizations performed
+    pub refactorizations: u64,
+    /// refactorizations whose covariance was numerically non-PD and needed
+    /// a *transient* diagonal jitter boost (the configured noise is
+    /// restored afterwards)
+    pub jitter_boosts: u64,
+    /// refactorizations abandoned even under the maximum jitter; the model
+    /// fell back to an `O(n²)` incremental extension of the previous factor
+    pub fallback_extends: u64,
+}
+
+/// Snapshot of everything [`LazyGp::rollback`] needs to restore the exact
+/// pre-speculation posterior. The factor itself is *not* copied: extends
+/// only append to the packed buffer, so remembering the dimension is enough
+/// for a bitwise rollback.
+#[derive(Debug, Clone)]
+struct Checkpoint {
+    n: usize,
+    stats: ExtendStats,
+    alpha: Vec<f64>,
+    mean_offset: f64,
+    y_scale: f64,
+    best_idx: Option<usize>,
+}
+
 /// The lazy GP. `observe` is `O(n²)` except at lag boundaries.
 pub struct LazyGp {
     config: LazyGpConfig,
@@ -82,7 +111,9 @@ pub struct LazyGp {
     y_scale: f64,
     update_seconds: f64,
     best_idx: Option<usize>,
-    full_refactorizations: u64,
+    refit_stats: RefitStats,
+    /// set while fantasy observations are stacked on top of the real data
+    fantasy_base: Option<Checkpoint>,
 }
 
 impl LazyGp {
@@ -99,7 +130,8 @@ impl LazyGp {
             y_scale: 1.0,
             update_seconds: 0.0,
             best_idx: None,
-            full_refactorizations: 0,
+            refit_stats: RefitStats::default(),
+            fantasy_base: None,
         }
     }
 
@@ -130,7 +162,12 @@ impl LazyGp {
     /// Number of full `O(n³)` factorizations paid (1 per lag boundary; 0
     /// for the fully lazy configuration after warm-up).
     pub fn full_refactorizations(&self) -> u64 {
-        self.full_refactorizations
+        self.refit_stats.refactorizations
+    }
+
+    /// Lag-boundary refactorization telemetry (jitter boosts, fallbacks).
+    pub fn refit_stats(&self) -> RefitStats {
+        self.refit_stats
     }
 
     /// The training inputs observed so far.
@@ -143,6 +180,45 @@ impl LazyGp {
         &self.y
     }
 
+    /// Open a speculation window: remember the state needed to restore the
+    /// current posterior exactly. Idempotent — only the first call in a
+    /// window takes the snapshot, so stacked fantasies share one base.
+    ///
+    /// The packed [`GrowingCholesky`] layout is what makes this `O(n)`
+    /// (one `alpha` clone) instead of `O(n²)`: speculative extends only
+    /// append, so [`rollback`](LazyGp::rollback) is a buffer truncation.
+    pub fn checkpoint(&mut self) {
+        if self.fantasy_base.is_none() {
+            self.fantasy_base = Some(Checkpoint {
+                n: self.y.len(),
+                stats: self.factor.stats(),
+                alpha: self.alpha.clone(),
+                mean_offset: self.mean_offset,
+                y_scale: self.y_scale,
+                best_idx: self.best_idx,
+            });
+        }
+    }
+
+    /// Close the speculation window, restoring the exact (bitwise)
+    /// pre-checkpoint posterior. Returns the number of observations rolled
+    /// back; no-op returning 0 when no checkpoint is open.
+    pub fn rollback(&mut self) -> usize {
+        let Some(cp) = self.fantasy_base.take() else {
+            return 0;
+        };
+        let removed = self.y.len() - cp.n;
+        self.y.truncate(cp.n);
+        self.cov.truncate(cp.n);
+        self.factor.truncate(cp.n);
+        self.factor.carry_stats(cp.stats);
+        self.alpha = cp.alpha;
+        self.mean_offset = cp.mean_offset;
+        self.y_scale = cp.y_scale;
+        self.best_idx = cp.best_idx;
+        removed
+    }
+
     fn refresh_alpha(&mut self) {
         // O(n²): two triangular solves — this, not the factor extension,
         // would dominate if we recomputed the offset-centered alpha naively
@@ -153,30 +229,62 @@ impl LazyGp {
         self.alpha = compute_alpha(&self.factor, &self.y, offset, scale);
     }
 
-    fn full_refactorize(&mut self) {
+    /// Full refit + refactorization over all current points. Returns `false`
+    /// when the covariance stayed numerically non-PD under every jitter
+    /// level, in which case the caller degrades to an incremental extension
+    /// of the previous factor. The configured noise is never mutated: a
+    /// non-PD refit is retried with an escalating *transient* jitter that is
+    /// dropped once the factorization succeeds.
+    fn full_refactorize(&mut self) -> bool {
+        let prior_params = self.kernel.params;
         if self.config.refit_at_lag && self.y.len() >= 3 {
             self.kernel.params =
                 fit_params(&self.kernel, self.cov.points(), &self.y, &self.config.fit_space);
         }
         let prior_stats = self.factor.stats();
-        let k = self.cov.full_cov(&self.kernel);
-        match GrowingCholesky::from_spd(&k) {
-            Ok(f) => self.factor = f,
-            Err(_) => {
-                self.kernel.params.noise = (self.kernel.params.noise * 10.0).max(1e-8);
-                let k2 = self.cov.full_cov(&self.kernel);
-                self.factor =
-                    GrowingCholesky::from_spd(&k2).expect("covariance not PD with boosted noise");
+        let configured_noise = self.kernel.params.noise;
+        // jitter ladder: 0 (plain), then 10× the configured noise escalating
+        // by 100× per attempt up to ~1e2 absolute
+        let mut jitter = 0.0f64;
+        for attempt in 0..7 {
+            self.kernel.params.noise = configured_noise + jitter;
+            let k = self.cov.full_cov(&self.kernel);
+            let factored = GrowingCholesky::from_spd(&k);
+            self.kernel.params.noise = configured_noise;
+            match factored {
+                Ok(f) => {
+                    if attempt > 0 {
+                        self.refit_stats.jitter_boosts += 1;
+                    }
+                    self.factor = f;
+                    // cumulative telemetry survives the factor swap
+                    self.factor.carry_stats(prior_stats);
+                    self.refit_stats.refactorizations += 1;
+                    return true;
+                }
+                Err(_) => {
+                    jitter = if jitter == 0.0 {
+                        (configured_noise * 10.0).max(1e-8)
+                    } else {
+                        jitter * 100.0
+                    };
+                }
             }
         }
-        // cumulative telemetry survives the factor swap
-        self.factor.carry_stats(prior_stats);
-        self.full_refactorizations += 1;
+        // every jitter level failed: the caller will extend the *previous*
+        // factor, which was built under the pre-fit parameters — restore
+        // them so borders, factor, and alpha stay mutually consistent
+        self.kernel.params = prior_params;
+        false
     }
 }
 
 impl Surrogate for LazyGp {
     fn observe(&mut self, x: &[f64], y: f64) {
+        assert!(
+            self.fantasy_base.is_none(),
+            "real observe while fantasies are active; retract_fantasies first"
+        );
         let sw = Stopwatch::new();
         // Alg. 3 line 8: border vector p against existing samples
         let p = self.cov.push_with_border(&self.kernel, x);
@@ -186,8 +294,13 @@ impl Surrogate for LazyGp {
             self.best_idx = Some(self.y.len() - 1);
         }
         if self.config.lag.due(self.y.len()) {
-            // lag boundary: full refit + refactorization (Fig. 6's jumps)
-            self.full_refactorize();
+            // lag boundary: full refit + refactorization (Fig. 6's jumps);
+            // if the refit covariance stays non-PD under every transient
+            // jitter, keep the previous factor and extend it incrementally
+            if !self.full_refactorize() {
+                self.refit_stats.fallback_extends += 1;
+                self.factor.extend(&p, c);
+            }
         } else {
             // Alg. 3 lines 11–13: O(n²) incremental extension
             self.factor.extend(&p, c);
@@ -245,6 +358,30 @@ impl Surrogate for LazyGp {
 
     fn update_seconds(&self) -> f64 {
         self.update_seconds
+    }
+
+    fn observe_fantasy(&mut self, x: &[f64], y: f64) {
+        let sw = Stopwatch::new();
+        self.checkpoint();
+        let p = self.cov.push_with_border(&self.kernel, x);
+        let c = self.kernel.self_cov() + self.kernel.params.noise;
+        self.y.push(y);
+        if self.best_idx.map_or(true, |i| y > self.y[i]) {
+            self.best_idx = Some(self.y.len() - 1);
+        }
+        // fantasies never trigger lag-boundary refits: rollback must stay a
+        // pure truncation of the packed factor
+        self.factor.extend(&p, c);
+        self.refresh_alpha();
+        self.update_seconds += sw.elapsed_s();
+    }
+
+    fn retract_fantasies(&mut self) -> usize {
+        self.rollback()
+    }
+
+    fn fantasies_active(&self) -> usize {
+        self.fantasy_base.as_ref().map_or(0, |cp| self.y.len() - cp.n)
     }
 }
 
@@ -329,6 +466,25 @@ mod tests {
         let (me, ve) = exact.predict(&q);
         assert!((ml - me).abs() < 1e-9);
         assert!((vl - ve).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_pd_refit_uses_transient_jitter_and_keeps_noise() {
+        // zero configured noise + duplicate points ⇒ the lag-boundary
+        // covariance is exactly singular; the refit must succeed via a
+        // transient jitter, leave the configured noise untouched, and
+        // report the event in telemetry instead of panicking
+        let mut cfg = LazyGpConfig { refit_at_lag: false, ..LazyGpConfig::default().with_lag(2) };
+        cfg.kernel.params.noise = 0.0;
+        let mut gp = LazyGp::new(cfg);
+        gp.observe(&[1.0, 2.0], 0.5);
+        gp.observe(&[1.0, 2.0], 0.6); // lag boundary, singular K
+        assert_eq!(gp.kernel().params.noise, 0.0, "configured noise must not be mutated");
+        let stats = gp.refit_stats();
+        assert_eq!(stats.refactorizations, 1);
+        assert!(stats.jitter_boosts >= 1, "singular refit must have needed jitter: {stats:?}");
+        let (m, v) = gp.predict(&[1.0, 2.0]);
+        assert!(m.is_finite() && v.is_finite());
     }
 
     #[test]

@@ -57,4 +57,21 @@ pub trait Surrogate: Send {
     /// Cumulative seconds spent inside GP updates (factorizations +
     /// solves); this is the quantity Fig. 1/Fig. 5 plot.
     fn update_seconds(&self) -> f64;
+
+    /// Record a *fantasy* observation: a speculative `(x, ŷ)` standing in
+    /// for an in-flight evaluation (the constant-liar / posterior-mean
+    /// imputation of Snoek et al. 2012). Fantasies stack strictly on top of
+    /// the real observations and are removed wholesale by
+    /// [`retract_fantasies`](Surrogate::retract_fantasies); implementations
+    /// reject real `observe` calls while fantasies are active.
+    fn observe_fantasy(&mut self, x: &[f64], y: f64);
+
+    /// Remove every active fantasy, restoring the surrogate to the exact
+    /// posterior it had before the first `observe_fantasy` (for [`LazyGp`]
+    /// this is a bitwise `O(1)` truncation of the packed factor). Returns
+    /// how many fantasies were retracted.
+    fn retract_fantasies(&mut self) -> usize;
+
+    /// Number of currently active fantasy observations.
+    fn fantasies_active(&self) -> usize;
 }

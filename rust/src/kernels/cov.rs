@@ -100,6 +100,14 @@ impl CovCache {
     pub fn full_cov(&self, kernel: &Kernel) -> Matrix {
         cov_matrix(kernel, &self.xs)
     }
+
+    /// Drop every point after the first `n` (exact rollback of appended
+    /// points — used by the lazy GP's fantasy-observation checkpointing).
+    pub fn truncate(&mut self, n: usize) {
+        assert!(n <= self.xs.len(), "truncate({n}) beyond {} points", self.xs.len());
+        self.xs.truncate(n);
+        self.norms.truncate(n);
+    }
 }
 
 #[cfg(test)]

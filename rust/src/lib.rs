@@ -51,6 +51,7 @@ pub mod acquisition;
 pub mod bo;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod gp;
 pub mod kernels;
 pub mod linalg;
@@ -59,8 +60,10 @@ pub mod objectives;
 pub mod runtime;
 pub mod util;
 
+pub use error::Error;
+
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = std::result::Result<T, Error>;
 
 /// Version string reported by the CLI and embedded in experiment metadata.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

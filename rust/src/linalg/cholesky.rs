@@ -15,16 +15,27 @@
 use super::matrix::{dot, Matrix};
 
 /// Failure modes of the factorization.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum CholeskyError {
     /// A diagonal pivot was ≤ 0: the matrix is not positive definite
     /// (within floating-point). Carries the failing pivot index.
-    #[error("matrix not positive definite at pivot {0}")]
     NotPositiveDefinite(usize),
     /// The input was not square.
-    #[error("matrix is not square: {0}x{1}")]
     NotSquare(usize, usize),
 }
+
+impl std::fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholeskyError::NotPositiveDefinite(i) => {
+                write!(f, "matrix not positive definite at pivot {i}")
+            }
+            CholeskyError::NotSquare(r, c) => write!(f, "matrix is not square: {r}x{c}"),
+        }
+    }
+}
+
+impl std::error::Error for CholeskyError {}
 
 /// Paper **Alg. 2**: unblocked, in-place lower Cholesky.
 ///

@@ -182,6 +182,27 @@ impl GrowingCholesky {
         }
     }
 
+    /// Truncate the factor back to its leading `n × n` block.
+    ///
+    /// Because the storage is packed row-major and [`extend`] only
+    /// *appends*, the leading block's bytes are untouched by any number of
+    /// later extensions — so truncation is an exact, `O(1)` rollback of
+    /// speculative extends (no recomputation, no round-off). This is what
+    /// makes fantasy observations cheap for the async coordinator: dense
+    /// square layouts would have to re-copy or re-factorize.
+    ///
+    /// Telemetry counters are *not* rewound (extensions that happened,
+    /// happened); callers that snapshot-and-restore stats around a
+    /// speculation window can pair this with [`carry_stats`].
+    ///
+    /// [`extend`]: GrowingCholesky::extend
+    /// [`carry_stats`]: GrowingCholesky::carry_stats
+    pub fn truncate(&mut self, n: usize) {
+        assert!(n <= self.n, "truncate({n}) beyond current dimension {}", self.n);
+        self.data.truncate(n * (n + 1) / 2);
+        self.n = n;
+    }
+
     /// Forward substitution `L x = b` against the packed factor.
     pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
         assert_eq!(b.len(), self.n);
@@ -410,6 +431,59 @@ mod tests {
         let g = GrowingCholesky::from_spd(&k).unwrap();
         let rel = g.reconstruct().max_abs_diff(&k) / k.fro_norm();
         assert!(rel < 1e-12);
+    }
+
+    #[test]
+    fn truncate_rolls_back_extends_bitwise() {
+        let mut rng = Pcg64::new(53);
+        let n0 = 12;
+        let add = 6;
+        let k = random_spd(&mut rng, n0 + add);
+        let k0 = Matrix::from_fn(n0, n0, |i, j| k[(i, j)]);
+        let mut g = GrowingCholesky::from_spd(&k0).unwrap();
+        let before_data: Vec<f64> = (0..n0).flat_map(|i| g.row(i).to_vec()).collect();
+        let before_stats = g.stats();
+        for m in n0..n0 + add {
+            let p: Vec<f64> = (0..m).map(|i| k[(m, i)]).collect();
+            g.extend(&p, k[(m, m)]);
+        }
+        assert_eq!(g.dim(), n0 + add);
+        g.truncate(n0);
+        g.carry_stats(before_stats);
+        assert_eq!(g.dim(), n0);
+        let after_data: Vec<f64> = (0..n0).flat_map(|i| g.row(i).to_vec()).collect();
+        // bitwise identity, not approximate equality
+        for (a, b) in before_data.iter().zip(&after_data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(g.stats(), before_stats);
+        // the factor is fully usable afterwards: extend again and match a
+        // from-scratch factorization
+        for m in n0..n0 + add {
+            let p: Vec<f64> = (0..m).map(|i| k[(m, i)]).collect();
+            g.extend(&p, k[(m, m)]);
+        }
+        let l_full = cholesky(&k).unwrap();
+        assert!(g.to_dense().max_abs_diff(&l_full) < 1e-9);
+    }
+
+    #[test]
+    fn truncate_to_zero_and_regrow() {
+        let mut g = GrowingCholesky::new();
+        g.extend(&[], 4.0);
+        g.extend(&[1.0], 5.0);
+        g.truncate(0);
+        assert!(g.is_empty());
+        g.extend(&[], 9.0);
+        assert_eq!(g.diag(0), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "truncate")]
+    fn truncate_beyond_dim_panics() {
+        let mut g = GrowingCholesky::new();
+        g.extend(&[], 1.0);
+        g.truncate(2);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! ```text
 //! lazygp run     --preset table1 | --objective levy5 [--surrogate lazy|exact]
 //! lazygp parallel --objective resnet_cifar10 --workers 20 --batch 20
+//!                 [--mode sync|async] [--pending cl-min|posterior-mean|kriging-believer]
 //! lazygp list
 //! lazygp info    # PJRT platform + artifact buckets
 //! lazygp score   # XLA-vs-native scoring parity + throughput check
@@ -10,9 +11,9 @@
 
 use std::sync::Arc;
 
-use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign, SurrogateChoice};
+use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign, PendingStrategy, SurrogateChoice};
 use lazygp::config::experiment::{ExperimentConfig, Preset};
-use lazygp::coordinator::{CoordinatorConfig, ParallelBo};
+use lazygp::coordinator::{AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo};
 use lazygp::gp::Surrogate;
 use lazygp::metrics::Trace;
 use lazygp::objectives;
@@ -39,8 +40,14 @@ fn app() -> App {
         .command(
             CommandSpec::new("parallel", "run parallel BO (paper §3.4 / Table 4)")
                 .opt("objective", "objective name", Some("resnet_cifar10"))
+                .opt("mode", "sync (round barrier) | async (fantasy-augmented)", Some("sync"))
+                .opt(
+                    "pending",
+                    "async fantasy strategy: cl-min | posterior-mean | kriging-believer",
+                    Some("cl-min"),
+                )
                 .opt("workers", "worker threads", Some("20"))
-                .opt("batch", "suggestions per round t", Some("20"))
+                .opt("batch", "suggestions per round t (sync mode only)", Some("20"))
                 .opt("evals", "total objective evaluations", Some("300"))
                 .opt("sleep-scale", "real s slept per simulated s", Some("0"))
                 .opt("fail-prob", "failure injection probability", Some("0"))
@@ -79,43 +86,43 @@ fn main() {
     }
 }
 
-fn experiment_from_args(p: &lazygp::util::cli::Parsed) -> anyhow::Result<ExperimentConfig> {
+fn experiment_from_args(p: &lazygp::util::cli::Parsed) -> lazygp::Result<ExperimentConfig> {
     if let Some(path) = p.str("config") {
         let text = std::fs::read_to_string(path)?;
-        return ExperimentConfig::from_json_str(&text).map_err(|e| anyhow::anyhow!(e));
+        return Ok(ExperimentConfig::from_json_str(&text)?);
     }
     if let Some(name) = p.str("preset") {
         let preset = Preset::from_name(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown preset `{name}` (try: {:?})", Preset::names()))?;
+            .ok_or_else(|| lazygp::err!("unknown preset `{name}` (try: {:?})", Preset::names()))?;
         let mut cfg = preset.config();
-        cfg.seed = p.u64("seed").map_err(|e| anyhow::anyhow!(e.0))?;
+        cfg.seed = p.u64("seed")?;
         return Ok(cfg);
     }
     let mut cfg = ExperimentConfig {
         objective: p.str_or("objective", "levy5"),
-        iters: p.usize("iters").map_err(|e| anyhow::anyhow!(e.0))?,
-        seed: p.u64("seed").map_err(|e| anyhow::anyhow!(e.0))?,
+        iters: p.usize("iters")?,
+        seed: p.u64("seed")?,
         ..Default::default()
     };
-    let seeds = p.usize("seeds").map_err(|e| anyhow::anyhow!(e.0))?;
+    let seeds = p.usize("seeds")?;
     cfg.init = match p.str_or("init", "random").as_str() {
         "random" => InitDesign::Random(seeds),
         "lhs" => InitDesign::Lhs(seeds),
-        other => anyhow::bail!("bad --init `{other}`"),
+        other => lazygp::bail!("bad --init `{other}`"),
     };
-    let lag = p.usize("lag").map_err(|e| anyhow::anyhow!(e.0))?;
+    let lag = p.usize("lag")?;
     cfg.surrogate = match p.str_or("surrogate", "lazy").as_str() {
         "lazy" => SurrogateChoice::Lazy { lag },
         "exact" => SurrogateChoice::Exact,
-        other => anyhow::bail!("bad --surrogate `{other}`"),
+        other => lazygp::bail!("bad --surrogate `{other}`"),
     };
     Ok(cfg)
 }
 
-fn cmd_run(p: &lazygp::util::cli::Parsed) -> anyhow::Result<()> {
+fn cmd_run(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     let cfg = experiment_from_args(p)?;
     let obj = objectives::by_name(&cfg.objective)
-        .ok_or_else(|| anyhow::anyhow!("unknown objective `{}`", cfg.objective))?;
+        .ok_or_else(|| lazygp::err!("unknown objective `{}`", cfg.objective))?;
     println!(
         "## lazygp run — objective={} surrogate={:?} iters={} seed={}",
         cfg.objective, cfg.surrogate, cfg.iters, cfg.seed
@@ -146,52 +153,98 @@ fn cmd_run(p: &lazygp::util::cli::Parsed) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> anyhow::Result<()> {
+fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     let name = p.str_or("objective", "resnet_cifar10");
     let obj = objectives::by_name(&name)
-        .ok_or_else(|| anyhow::anyhow!("unknown objective `{name}`"))?;
+        .ok_or_else(|| lazygp::err!("unknown objective `{name}`"))?;
     let obj: Arc<dyn objectives::Objective> = Arc::from(obj);
-    let seed = p.u64("seed").map_err(|e| anyhow::anyhow!(e.0))?;
-    let coord = CoordinatorConfig {
-        workers: p.usize("workers").map_err(|e| anyhow::anyhow!(e.0))?,
-        batch_size: p.usize("batch").map_err(|e| anyhow::anyhow!(e.0))?,
-        sleep_scale: p.f64("sleep-scale").map_err(|e| anyhow::anyhow!(e.0))?,
-        fail_prob: p.f64("fail-prob").map_err(|e| anyhow::anyhow!(e.0))?,
-        max_retries: 3,
-        seed,
-    };
-    let evals = p.usize("evals").map_err(|e| anyhow::anyhow!(e.0))?;
-    println!(
-        "## lazygp parallel — objective={name} workers={} t={} evals={evals}",
-        coord.workers, coord.batch_size
-    );
+    let seed = p.u64("seed")?;
+    let evals = p.usize("evals")?;
+    let workers = p.usize("workers")?;
     let bo = BoConfig::lazy().with_seed(seed).with_init(InitDesign::Random(1));
-    let mut pbo = ParallelBo::new(bo, obj, coord);
-    let best = pbo.run_until_evals(evals);
-    println!(
-        "best {:.6} after {} evaluations in {} rounds | virtual wall {} | sync total {}",
-        best.value,
-        pbo.driver().history().len(),
-        pbo.rounds().len(),
-        fmt_duration_s(pbo.virtual_seconds()),
-        fmt_duration_s(pbo.rounds().iter().map(|r| r.sync_seconds).sum()),
-    );
-    let rows: Vec<Vec<String>> = pbo
-        .driver()
+    match p.str_or("mode", "sync").as_str() {
+        "sync" => {
+            let coord = CoordinatorConfig {
+                workers,
+                batch_size: p.usize("batch")?,
+                sleep_scale: p.f64("sleep-scale")?,
+                fail_prob: p.f64("fail-prob")?,
+                max_retries: 3,
+                seed,
+            };
+            println!(
+                "## lazygp parallel (sync) — objective={name} workers={} t={} evals={evals}",
+                coord.workers, coord.batch_size
+            );
+            let mut pbo = ParallelBo::new(bo, obj, coord);
+            let best = pbo.run_until_evals(evals);
+            println!(
+                "best {:.6} after {} evaluations in {} rounds | virtual wall {} | sync total {}",
+                best.value,
+                pbo.driver().history().len(),
+                pbo.rounds().len(),
+                fmt_duration_s(pbo.virtual_seconds()),
+                fmt_duration_s(pbo.rounds().iter().map(|r| r.sync_seconds).sum()),
+            );
+            print_milestones(pbo.driver());
+            if let Some(out) = p.str("out") {
+                Trace::from_history(&name, pbo.driver().history()).write_csv(out)?;
+                println!("trace written to {out}");
+            }
+            pbo.finish();
+        }
+        "async" => {
+            let pending_name = p.str_or("pending", "cl-min");
+            let pending = PendingStrategy::from_name(&pending_name)
+                .ok_or_else(|| lazygp::err!("bad --pending `{pending_name}`"))?;
+            let coord = AsyncCoordinatorConfig {
+                workers,
+                pending,
+                sleep_scale: p.f64("sleep-scale")?,
+                fail_prob: p.f64("fail-prob")?,
+                max_retries: 3,
+                seed,
+            };
+            println!(
+                "## lazygp parallel (async, {}) — objective={name} workers={workers} evals={evals}",
+                pending.name()
+            );
+            let mut abo = AsyncBo::new(bo, obj, coord);
+            let best = abo.run_until_evals(evals);
+            let stats = abo.stats();
+            println!(
+                "best {:.6} after {} evaluations | virtual wall {} | utilization {:.1}% | fantasies {} issued / {} rolled back | retries {} dropped {}",
+                best.value,
+                abo.driver().history().len(),
+                fmt_duration_s(abo.virtual_seconds()),
+                abo.utilization() * 100.0,
+                stats.fantasies_issued,
+                stats.fantasy_rollbacks,
+                stats.retries,
+                stats.dropped,
+            );
+            print_milestones(abo.driver());
+            if let Some(out) = p.str("out") {
+                Trace::from_history(&name, abo.driver().history()).write_csv(out)?;
+                println!("trace written to {out}");
+            }
+            abo.finish();
+        }
+        other => lazygp::bail!("bad --mode `{other}` (sync | async)"),
+    }
+    Ok(())
+}
+
+fn print_milestones(driver: &BoDriver) {
+    let rows: Vec<Vec<String>> = driver
         .milestones()
         .into_iter()
         .map(|(it, v)| vec![it.to_string(), format!("{v:.4}")])
         .collect();
     println!("{}", render_table("improvement milestones", &["Evaluation", "Best"], &rows));
-    if let Some(out) = p.str("out") {
-        Trace::from_history(&name, pbo.driver().history()).write_csv(out)?;
-        println!("trace written to {out}");
-    }
-    pbo.finish();
-    Ok(())
 }
 
-fn cmd_list() -> anyhow::Result<()> {
+fn cmd_list() -> lazygp::Result<()> {
     println!("objectives:");
     for name in objectives::registry_names() {
         let obj = objectives::by_name(name).unwrap();
@@ -201,7 +254,7 @@ fn cmd_list() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> anyhow::Result<()> {
+fn cmd_info() -> lazygp::Result<()> {
     match PjrtRuntime::new_default() {
         Ok(rt) => {
             println!("PJRT platform: {}", rt.platform());
@@ -217,18 +270,18 @@ fn cmd_info() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_score(p: &lazygp::util::cli::Parsed) -> anyhow::Result<()> {
+fn cmd_score(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
     use lazygp::gp::lazy::LazyGp;
     use lazygp::runtime::score_native;
     use lazygp::util::rng::Pcg64;
 
-    let n = p.usize("n").map_err(|e| anyhow::anyhow!(e.0))?;
-    let d = p.usize("d").map_err(|e| anyhow::anyhow!(e.0))?;
-    let m = p.usize("candidates").map_err(|e| anyhow::anyhow!(e.0))?;
+    let n = p.usize("n")?;
+    let d = p.usize("d")?;
+    let m = p.usize("candidates")?;
     let scorer = GpScorer::new(PjrtRuntime::new_default()?);
 
-    let mut rng = Pcg64::new(p.u64("seed").map_err(|e| anyhow::anyhow!(e.0))?);
+    let mut rng = Pcg64::new(p.u64("seed")?);
     let mut gp = LazyGp::paper_default();
     for _ in 0..n {
         let x: Vec<f64> = (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect();

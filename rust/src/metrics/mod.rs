@@ -5,7 +5,9 @@
 //! paper figure can be re-plotted from machine-readable output.
 
 pub mod csv;
+pub mod parallel;
 pub mod trace;
 
 pub use csv::CsvWriter;
+pub use parallel::{AsyncTrace, AsyncTracePoint};
 pub use trace::{RunSummary, Trace, TracePoint};

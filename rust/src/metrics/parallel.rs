@@ -1,0 +1,140 @@
+//! Telemetry for the parallel coordinators.
+//!
+//! The synchronous leader's per-round numbers live on
+//! [`crate::coordinator::RoundRecord`]; the asynchronous coordinator emits
+//! one event per worker outcome and summarizes utilization and the fantasy
+//! bookkeeping here, CSV-writable next to the per-iteration [`super::Trace`].
+
+use super::csv::CsvWriter;
+
+/// One async-coordinator event, flattened for CSV.
+#[derive(Debug, Clone)]
+pub struct AsyncTracePoint {
+    pub event: u64,
+    pub trial_id: u64,
+    pub worker: usize,
+    /// virtual testbed time at which the attempt finished
+    pub virtual_done_s: f64,
+    /// incumbent after the event (real observations only)
+    pub best: f64,
+    /// fantasies shaping the posterior after the event
+    pub fantasies_active: usize,
+    pub observed: bool,
+    pub retried: bool,
+    pub dropped: bool,
+}
+
+/// A named async run: per-event rows plus the run-level aggregates the
+/// Table-4 comparison reports.
+#[derive(Debug, Clone, Default)]
+pub struct AsyncTrace {
+    pub name: String,
+    pub points: Vec<AsyncTracePoint>,
+    /// Σ busy / (workers × wall) on the simulated testbed
+    pub utilization: f64,
+    pub fantasies_issued: u64,
+    pub fantasy_rollbacks: u64,
+    pub virtual_wall_s: f64,
+}
+
+impl AsyncTrace {
+    /// Final incumbent, if any event observed a result.
+    pub fn final_best(&self) -> Option<f64> {
+        self.points.iter().rev().find(|p| p.best.is_finite()).map(|p| p.best)
+    }
+
+    /// Write per-event rows to CSV.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "event",
+                "trial_id",
+                "worker",
+                "virtual_done_s",
+                "best",
+                "fantasies_active",
+                "observed",
+                "retried",
+                "dropped",
+            ],
+        )?;
+        for p in &self.points {
+            w.write_row_f64(&[
+                p.event as f64,
+                p.trial_id as f64,
+                p.worker as f64,
+                p.virtual_done_s,
+                p.best,
+                p.fantasies_active as f64,
+                if p.observed { 1.0 } else { 0.0 },
+                if p.retried { 1.0 } else { 0.0 },
+                if p.dropped { 1.0 } else { 0.0 },
+            ])?;
+        }
+        w.flush()
+    }
+
+    /// One human-readable summary line.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<24} events {:>5}  best {:>10.4}  virtual {:>10.1}s  util {:>5.1}%  fantasies {} issued / {} rolled back",
+            self.name,
+            self.points.len(),
+            self.final_best().unwrap_or(f64::NEG_INFINITY),
+            self.virtual_wall_s,
+            self.utilization * 100.0,
+            self.fantasies_issued,
+            self.fantasy_rollbacks,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> AsyncTrace {
+        AsyncTrace {
+            name: "demo".into(),
+            points: (0..4)
+                .map(|i| AsyncTracePoint {
+                    event: i,
+                    trial_id: i,
+                    worker: (i % 2) as usize,
+                    virtual_done_s: 10.0 * (i + 1) as f64,
+                    best: -5.0 + i as f64,
+                    fantasies_active: 1,
+                    observed: true,
+                    retried: false,
+                    dropped: false,
+                })
+                .collect(),
+            utilization: 0.9,
+            fantasies_issued: 6,
+            fantasy_rollbacks: 6,
+            virtual_wall_s: 40.0,
+        }
+    }
+
+    #[test]
+    fn summary_and_final_best() {
+        let t = demo();
+        assert_eq!(t.final_best(), Some(-2.0));
+        let line = t.render();
+        assert!(line.contains("util"));
+        assert!(line.contains("6 issued"));
+    }
+
+    #[test]
+    fn csv_has_event_rows() {
+        let t = demo();
+        let path = std::env::temp_dir()
+            .join(format!("lazygp_async_csv_{}.csv", std::process::id()));
+        t.write_csv(path.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("event,trial_id,worker"));
+        assert_eq!(body.lines().count(), 5);
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -25,38 +25,38 @@ pub struct ArtifactManifest {
 
 impl ArtifactManifest {
     /// Load from an artifacts directory.
-    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let text = std::fs::read_to_string(dir.join("manifest.json"))?;
         Self::parse(&text, dir)
     }
 
     /// Default location: `$LAZYGP_ARTIFACTS` or `./artifacts`.
-    pub fn load_default() -> anyhow::Result<Self> {
+    pub fn load_default() -> crate::Result<Self> {
         let dir = std::env::var("LAZYGP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
         Self::load(dir)
     }
 
-    fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Self> {
-        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+    fn parse(text: &str, dir: PathBuf) -> crate::Result<Self> {
+        let j = Json::parse(text).map_err(|e| crate::err!("manifest: {e}"))?;
         let m = j
             .get("m")
             .and_then(|v| v.as_usize())
-            .ok_or_else(|| anyhow::anyhow!("manifest: missing m"))?;
+            .ok_or_else(|| crate::err!("manifest: missing m"))?;
         let mut buckets = Vec::new();
         for b in j
             .get("buckets")
             .and_then(|v| v.as_arr())
-            .ok_or_else(|| anyhow::anyhow!("manifest: missing buckets"))?
+            .ok_or_else(|| crate::err!("manifest: missing buckets"))?
         {
             buckets.push(Bucket {
-                n: b.get("n").and_then(|v| v.as_usize()).ok_or_else(|| anyhow::anyhow!("bucket n"))?,
-                d: b.get("d").and_then(|v| v.as_usize()).ok_or_else(|| anyhow::anyhow!("bucket d"))?,
+                n: b.get("n").and_then(|v| v.as_usize()).ok_or_else(|| crate::err!("bucket n"))?,
+                d: b.get("d").and_then(|v| v.as_usize()).ok_or_else(|| crate::err!("bucket d"))?,
                 m: b.get("m").and_then(|v| v.as_usize()).unwrap_or(m),
                 file: b
                     .get("file")
                     .and_then(|v| v.as_str())
-                    .ok_or_else(|| anyhow::anyhow!("bucket file"))?
+                    .ok_or_else(|| crate::err!("bucket file"))?
                     .to_string(),
             });
         }

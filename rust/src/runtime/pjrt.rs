@@ -1,39 +1,58 @@
-//! Thin wrapper over the `xla` crate's PJRT client.
+//! Thin wrapper over the `xla` crate's PJRT client — compiled only when the
+//! `xla` feature is enabled (the offline build environment does not ship
+//! the `xla` crate, so the default build substitutes a stub that always
+//! routes scoring to the native f64 path).
 //!
-//! HLO *text* is the interchange format (see DESIGN.md and
-//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` parses and
-//! re-ids the module, the CPU PJRT client compiles it once, and the
+//! With the feature on, HLO *text* is the interchange format (see DESIGN.md
+//! and /opt/xla-example/README.md): `HloModuleProto::from_text_file` parses
+//! and re-ids the module, the CPU PJRT client compiles it once, and the
 //! compiled executable is cached per bucket for the lifetime of the
 //! process.
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::Path;
+#[cfg(feature = "xla")]
 use std::sync::Mutex;
 
 use super::artifacts::{ArtifactManifest, Bucket};
 
-/// A PJRT CPU client plus the per-bucket executable cache.
+/// A PJRT CPU client plus the per-bucket executable cache. Without the
+/// `xla` feature this is a manifest-only shell whose [`bucket_for`] always
+/// returns `None`, so [`super::GpScorer`] falls back to native scoring.
+///
+/// [`bucket_for`]: PjrtRuntime::bucket_for
 pub struct PjrtRuntime {
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
     manifest: ArtifactManifest,
+    #[cfg(feature = "xla")]
     cache: Mutex<HashMap<(usize, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl PjrtRuntime {
     /// Create from an artifacts directory.
-    pub fn new(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> crate::Result<Self> {
         let manifest = ArtifactManifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+        Self::from_manifest(manifest)
     }
 
     /// Create from `$LAZYGP_ARTIFACTS` / `./artifacts`.
-    pub fn new_default() -> anyhow::Result<Self> {
+    pub fn new_default() -> crate::Result<Self> {
         let manifest = ArtifactManifest::load_default()?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Self::from_manifest(manifest)
+    }
+
+    #[cfg(feature = "xla")]
+    fn from_manifest(manifest: ArtifactManifest) -> crate::Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| crate::err!("PJRT CPU client: {e:?}"))?;
         Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn from_manifest(manifest: ArtifactManifest) -> crate::Result<Self> {
+        Ok(Self { manifest })
     }
 
     pub fn manifest(&self) -> &ArtifactManifest {
@@ -41,33 +60,51 @@ impl PjrtRuntime {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "xla")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            "native fallback (built without the `xla` feature)".to_string()
+        }
     }
 
-    /// Bucket lookup for a live state size.
+    /// Bucket lookup for a live state size. Without the `xla` feature no
+    /// bucket is ever offered, which routes every request to the native
+    /// scorer.
     pub fn bucket_for(&self, n: usize, d: usize) -> Option<&Bucket> {
-        self.manifest.bucket_for(n, d)
+        #[cfg(feature = "xla")]
+        {
+            self.manifest.bucket_for(n, d)
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            let _ = (n, d);
+            None
+        }
     }
 
     /// Compile (or fetch from cache) the executable for a bucket.
+    #[cfg(feature = "xla")]
     pub fn executable(
         &self,
         bucket: &Bucket,
-    ) -> anyhow::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+    ) -> crate::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         let key = (bucket.n, bucket.d);
         if let Some(exe) = self.cache.lock().unwrap().get(&key) {
             return Ok(std::sync::Arc::clone(exe));
         }
         let path = self.manifest.path_of(bucket);
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            path.to_str().ok_or_else(|| crate::err!("non-utf8 path"))?,
         )
-        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        .map_err(|e| crate::err!("parse {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+            .map_err(|e| crate::err!("compile {}: {e:?}", path.display()))?;
         let exe = std::sync::Arc::new(exe);
         self.cache.lock().unwrap().insert(key, std::sync::Arc::clone(&exe));
         Ok(exe)
@@ -77,6 +114,7 @@ impl PjrtRuntime {
     /// `(mu, var, ei)` vectors (length `bucket.m`). The artifacts are
     /// lowered in f64 (see aot.py) so the XLA path matches the native
     /// Rust posterior to f64 round-off even on ill-conditioned states.
+    #[cfg(feature = "xla")]
     #[allow(clippy::too_many_arguments)]
     pub fn run_gp_score(
         &self,
@@ -89,7 +127,7 @@ impl PjrtRuntime {
         best_f: f64,
         xi: f64,
         mean_offset: f64,
-    ) -> anyhow::Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+    ) -> crate::Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
         let (n, d, m) = (bucket.n as i64, bucket.d as i64, bucket.m as i64);
         assert_eq!(x_train.len(), (n * d) as usize);
         assert_eq!(l_factor.len(), (n * n) as usize);
@@ -97,10 +135,10 @@ impl PjrtRuntime {
         assert_eq!(mask.len(), n as usize);
         assert_eq!(cand.len(), (m * d) as usize);
         let exe = self.executable(bucket)?;
-        let lit = |data: &[f64], dims: &[i64]| -> anyhow::Result<xla::Literal> {
+        let lit = |data: &[f64], dims: &[i64]| -> crate::Result<xla::Literal> {
             xla::Literal::vec1(data)
                 .reshape(dims)
-                .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))
+                .map_err(|e| crate::err!("reshape {dims:?}: {e:?}"))
         };
         let inputs = [
             lit(x_train, &[n, d])?,
@@ -114,16 +152,35 @@ impl PjrtRuntime {
         ];
         let result = exe
             .execute::<xla::Literal>(&inputs)
-            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .map_err(|e| crate::err!("execute: {e:?}"))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
-        let (mu, var, ei) =
-            result.to_tuple3().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+            .map_err(|e| crate::err!("fetch: {e:?}"))?;
+        let (mu, var, ei) = result.to_tuple3().map_err(|e| crate::err!("untuple: {e:?}"))?;
         Ok((
-            mu.to_vec::<f64>().map_err(|e| anyhow::anyhow!("mu: {e:?}"))?,
-            var.to_vec::<f64>().map_err(|e| anyhow::anyhow!("var: {e:?}"))?,
-            ei.to_vec::<f64>().map_err(|e| anyhow::anyhow!("ei: {e:?}"))?,
+            mu.to_vec::<f64>().map_err(|e| crate::err!("mu: {e:?}"))?,
+            var.to_vec::<f64>().map_err(|e| crate::err!("var: {e:?}"))?,
+            ei.to_vec::<f64>().map_err(|e| crate::err!("ei: {e:?}"))?,
         ))
+    }
+
+    /// Stub of the execute path: the default (feature-less) build never
+    /// offers a bucket, so this is unreachable from [`super::GpScorer`]; it
+    /// exists so callers compile identically either way.
+    #[cfg(not(feature = "xla"))]
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_gp_score(
+        &self,
+        _bucket: &Bucket,
+        _x_train: &[f64],
+        _l_factor: &[f64],
+        _alpha: &[f64],
+        _mask: &[f64],
+        _cand: &[f64],
+        _best_f: f64,
+        _xi: f64,
+        _mean_offset: f64,
+    ) -> crate::Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        Err(crate::err!("PJRT execution requires the `xla` feature"))
     }
 }
 
@@ -138,5 +195,29 @@ mod tests {
     fn missing_artifacts_dir_errors() {
         let e = PjrtRuntime::new("/definitely/not/a/dir");
         assert!(e.is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_offers_no_buckets_and_refuses_execution() {
+        use std::io::Write as _;
+        let dir = std::env::temp_dir().join(format!("lazygp_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        write!(
+            f,
+            r#"{{"m": 8, "buckets": [{{"n": 16, "d": 2, "m": 8, "file": "a.hlo.txt"}}]}}"#
+        )
+        .unwrap();
+        drop(f);
+        let rt = PjrtRuntime::new(&dir).unwrap();
+        assert!(rt.bucket_for(4, 2).is_none(), "stub must force the native path");
+        assert_eq!(rt.manifest().buckets.len(), 1);
+        assert!(rt.platform().contains("native"));
+        let b = rt.manifest().buckets[0].clone();
+        assert!(rt
+            .run_gp_score(&b, &[0.0; 32], &[0.0; 256], &[0.0; 16], &[0.0; 16], &[0.0; 16], 0.0, 0.0, 0.0)
+            .is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

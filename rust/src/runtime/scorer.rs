@@ -55,7 +55,7 @@ impl GpScorer {
         acq: &Acquisition,
         xi: f64,
         cands: &[Vec<f64>],
-    ) -> anyhow::Result<Vec<Score>> {
+    ) -> crate::Result<Vec<Score>> {
         let n = gp.len();
         let d = gp.points().first().map_or(0, |p| p.len());
         if n == 0 || d == 0 {

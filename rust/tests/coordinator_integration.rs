@@ -5,8 +5,8 @@
 use std::sync::Arc;
 
 use lazygp::acquisition::optim::OptimConfig;
-use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign};
-use lazygp::coordinator::{CoordinatorConfig, ParallelBo};
+use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign, PendingStrategy};
+use lazygp::coordinator::{AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo};
 use lazygp::gp::Surrogate;
 use lazygp::objectives::trainer::ResNetCifarSim;
 use lazygp::objectives::{levy::Levy, suite::Sphere, Objective};
@@ -119,6 +119,84 @@ fn failure_storm_still_makes_progress() {
     let completed: usize = pbo.rounds().iter().map(|r| r.completed).sum();
     assert_eq!(completed, 20, "all trials should complete after retries");
     assert!(pbo.driver().best().unwrap().value.is_finite());
+}
+
+#[test]
+fn async_coordinator_matches_observation_semantics() {
+    // same contract as the sync leader: after a run the surrogate holds
+    // exactly the evaluated points, fantasies fully unwound
+    let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
+    let mut abo = AsyncBo::new(
+        fast_bo(211),
+        obj,
+        AsyncCoordinatorConfig { workers: 4, ..Default::default() },
+    );
+    abo.run_until_evals(30);
+    assert_eq!(abo.driver().history().len(), 30);
+    assert_eq!(abo.driver().surrogate().len(), 30);
+    assert_eq!(abo.driver().fantasies_active(), 0);
+    let (m, v) = abo.driver().surrogate().predict(&[0.1, -0.2]);
+    assert!(m.is_finite() && v.is_finite() && v >= 0.0);
+    let s = abo.stats();
+    assert_eq!(s.fantasies_issued, s.fantasy_rollbacks);
+}
+
+#[test]
+fn async_beats_sync_virtual_wall_clock_under_heterogeneous_costs() {
+    // The ISSUE-1 acceptance setup: 4 workers, equal evaluation budget,
+    // ResNet cost jitter + failure injection (a crashed training retries
+    // *sequentially* inside a sync round, while the async leader refills
+    // the freed slot immediately). The bench asserts ≥ 1.2×; here we use a
+    // slightly looser 1.1× bound to stay robust to OS scheduling noise.
+    let evals = 45;
+    let workers = 4;
+    let fail_prob = 0.25;
+    // virtual-slot accounting is scheduling-independent; a small real sleep
+    // just keeps completion order resembling virtual order (information
+    // realism), it is not needed for the cost bookkeeping
+    let sleep_scale = 1e-5;
+
+    let obj: Arc<dyn Objective> = Arc::new(ResNetCifarSim::new());
+    let mut sync = ParallelBo::new(
+        fast_bo(127),
+        obj,
+        CoordinatorConfig {
+            workers,
+            batch_size: workers,
+            fail_prob,
+            max_retries: 3,
+            sleep_scale,
+            ..Default::default()
+        },
+    );
+    sync.run_until_evals(evals);
+    let sync_v = sync.virtual_seconds();
+
+    let obj: Arc<dyn Objective> = Arc::new(ResNetCifarSim::new());
+    let mut asy = AsyncBo::new(
+        fast_bo(127),
+        obj,
+        AsyncCoordinatorConfig {
+            workers,
+            pending: PendingStrategy::ConstantLiarMin,
+            fail_prob,
+            max_retries: 3,
+            sleep_scale,
+            ..Default::default()
+        },
+    );
+    asy.run_until_evals(evals);
+    let async_v = asy.virtual_seconds();
+
+    assert!(sync.driver().history().len() >= evals);
+    assert_eq!(asy.driver().history().len(), evals);
+    assert!(
+        sync_v / async_v > 1.1,
+        "async should beat the round barrier: sync {sync_v:.0}s vs async {async_v:.0}s \
+         (utilization {:.2})",
+        asy.utilization()
+    );
+    assert!(asy.utilization() > 0.5, "workers should stay busy: {}", asy.utilization());
 }
 
 #[test]

@@ -2,12 +2,12 @@
 //! together, driven by the in-repo mini-proptest framework.
 
 use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
-use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign};
+use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign, PendingStrategy};
 use lazygp::config::json::Json;
 use lazygp::gp::lazy::LazyGp;
 use lazygp::gp::Surrogate;
 use lazygp::kernels::{cov_matrix, Kernel, KernelKind, KernelParams};
-use lazygp::linalg::GrowingCholesky;
+use lazygp::linalg::{GrowingCholesky, Matrix};
 use lazygp::objectives::levy::Levy;
 use lazygp::util::proptest as pt;
 use lazygp::util::rng::Pcg64;
@@ -153,6 +153,131 @@ fn prop_all_kernels_give_spd_covariance() {
                 let k = Kernel::new(kind, KernelParams::paper_default().with_noise(1e-8));
                 GrowingCholesky::from_spd(&cov_matrix(&k, &xs)).is_ok()
             })
+    });
+}
+
+/// Packed bits of a factor's leading `n × n` block.
+fn factor_bits(g: &GrowingCholesky, n: usize) -> Vec<u64> {
+    (0..n).flat_map(|i| g.row(i).iter().map(|v| v.to_bits()).collect::<Vec<_>>()).collect()
+}
+
+/// `GrowingCholesky::truncate` after `k` speculative extends restores the
+/// untouched factor **bitwise** (0 ulp — the packed layout only appends),
+/// with telemetry carried across the speculation window.
+#[test]
+fn prop_truncate_is_bitwise_rollback_of_extends() {
+    let g = pt::usize_in(1, 30);
+    pt::check("truncate_bitwise", &g, |&n| {
+        let mut rng = Pcg64::new(n as u64 + 9400);
+        let kernel = Kernel::paper_default();
+        let extra = 1 + n % 5;
+        let xs: Vec<Vec<f64>> = (0..n + extra)
+            .map(|_| (0..3).map(|_| rng.uniform(-5.0, 5.0)).collect())
+            .collect();
+        let k = cov_matrix(&kernel, &xs);
+        let k0 = Matrix::from_fn(n, n, |i, j| k[(i, j)]);
+        let mut factor = match GrowingCholesky::from_spd(&k0) {
+            Ok(f) => f,
+            Err(_) => return false,
+        };
+        let bits_before = factor_bits(&factor, n);
+        let stats_before = factor.stats();
+        for m in n..n + extra {
+            let p: Vec<f64> = (0..m).map(|i| k[(m, i)]).collect();
+            factor.extend(&p, k[(m, m)]);
+        }
+        factor.truncate(n);
+        factor.carry_stats(stats_before);
+        factor.dim() == n
+            && factor_bits(&factor, n) == bits_before
+            && factor.stats() == stats_before
+    });
+}
+
+/// Fantasy observe → rollback leaves the `LazyGp` posterior **bit-identical**
+/// (packed factor bits, weights, normalization, length, predictions), for
+/// every pending-imputation strategy.
+#[test]
+fn prop_lazy_fantasy_rollback_is_bitwise() {
+    let g = pt::usize_in(1, 25);
+    pt::check("fantasy_rollback_bitwise", &g, |&n| {
+        let mut rng = Pcg64::new(n as u64 + 9500);
+        let mut gp = LazyGp::paper_default();
+        for _ in 0..n {
+            let x = vec![rng.uniform(-4.0, 4.0), rng.uniform(-4.0, 4.0)];
+            gp.observe(&x, x.iter().sum::<f64>().sin());
+        }
+        let probe = vec![rng.uniform(-4.0, 4.0), rng.uniform(-4.0, 4.0)];
+        let snapshot = |gp: &LazyGp| {
+            let p = gp.posterior();
+            let (m, v) = gp.predict(&probe);
+            (
+                factor_bits(p.factor, p.factor.dim()),
+                p.alpha.iter().map(|a| a.to_bits()).collect::<Vec<u64>>(),
+                p.mean_offset.to_bits(),
+                p.y_scale.to_bits(),
+                gp.len(),
+                m.to_bits(),
+                v.to_bits(),
+            )
+        };
+        let before = snapshot(&gp);
+        let fantasies = 1 + n % 4;
+        for _ in 0..fantasies {
+            let x = vec![rng.uniform(-4.0, 4.0), rng.uniform(-4.0, 4.0)];
+            gp.observe_fantasy(&x, rng.uniform(-2.0, 2.0));
+        }
+        if gp.len() != n + fantasies || gp.fantasies_active() != fantasies {
+            return false;
+        }
+        let removed = gp.retract_fantasies();
+        removed == fantasies && snapshot(&gp) == before && gp.fantasies_active() == 0
+    });
+}
+
+/// The same bitwise-restore invariant holds when the fantasies are driven
+/// through the BO driver's pending-strategy layer (the async coordinator's
+/// actual code path).
+#[test]
+fn prop_driver_fantasize_retract_is_lossless() {
+    let g = pt::usize_in(2, 12);
+    pt::check("driver_fantasize_lossless", &g, |&n| {
+        let cfg = BoConfig::lazy()
+            .with_seed(n as u64)
+            .with_init(InitDesign::Random(n))
+            .with_optim(lazygp::acquisition::optim::OptimConfig {
+                candidates: 32,
+                restarts: 2,
+                nm_iters: 5,
+                nm_scale: 0.1,
+            });
+        let mut d = BoDriver::new(cfg, Box::new(Levy::new(2)));
+        d.ensure_seeded();
+        let mut rng = Pcg64::new(n as u64 + 9600);
+        let pending: Vec<Vec<f64>> = (0..1 + n % 3)
+            .map(|_| vec![rng.uniform(-10.0, 10.0), rng.uniform(-10.0, 10.0)])
+            .collect();
+        let probe = vec![rng.uniform(-10.0, 10.0), rng.uniform(-10.0, 10.0)];
+        let before = {
+            let (m, v) = d.surrogate().predict(&probe);
+            (d.surrogate().len(), m.to_bits(), v.to_bits())
+        };
+        [
+            PendingStrategy::ConstantLiarMin,
+            PendingStrategy::PosteriorMean,
+            PendingStrategy::KrigingBeliever,
+        ]
+        .into_iter()
+        .all(|s| {
+            let issued = d.fantasize(&pending, s);
+            let grew = d.surrogate().len() == before.0 + pending.len();
+            let retracted = d.retract_fantasies();
+            let (m, v) = d.surrogate().predict(&probe);
+            issued == pending.len()
+                && grew
+                && retracted == pending.len()
+                && (d.surrogate().len(), m.to_bits(), v.to_bits()) == before
+        })
     });
 }
 

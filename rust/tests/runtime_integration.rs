@@ -32,6 +32,12 @@ fn trained_gp(rng: &mut Pcg64, n: usize, d: usize) -> LazyGp {
     gp
 }
 
+// Without the `xla` feature the runtime stub never offers a bucket (every
+// request routes to the native scorer), so the execute and parity tests
+// below would either panic on `bucket_for(..).expect(..)` or degenerate to
+// comparing the native path with itself — they only mean something with
+// the real PJRT client compiled in.
+#[cfg(feature = "xla")]
 #[test]
 fn artifact_loads_and_runs() {
     let Some(dir) = artifacts_dir() else { return };
@@ -63,6 +69,7 @@ fn artifact_loads_and_runs() {
     assert!(ei.iter().all(|v| *v >= 0.0));
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn xla_scores_match_native_f64() {
     let Some(dir) = artifacts_dir() else { return };
@@ -139,6 +146,7 @@ fn chunking_covers_large_candidate_sets() {
     }
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn executable_cache_is_reused() {
     let Some(dir) = artifacts_dir() else { return };
