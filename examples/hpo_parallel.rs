@@ -3,13 +3,22 @@
 //! asynchronous fantasy-augmented coordinator at the same budget.
 //!
 //! ```bash
-//! cargo run --release --example hpo_parallel [evals] [workers]
+//! cargo run --release --example hpo_parallel [evals] [workers] [tcp]
 //! ```
+//!
+//! Pass `tcp` as the third argument to run the async arm over the
+//! loopback-TCP transport (a `SocketPool` leader plus in-process
+//! `run_worker` daemons — the same wire `lazygp worker --connect` speaks)
+//! instead of the in-process thread pool.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use lazygp::bo::{BoConfig, InitDesign, PendingStrategy};
-use lazygp::coordinator::{AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo};
+use lazygp::coordinator::transport::run_worker;
+use lazygp::coordinator::{
+    AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo, RemoteEvalConfig, SocketPool,
+};
 use lazygp::objectives::trainer::ResNetCifarSim;
 use lazygp::objectives::Objective;
 use lazygp::util::bench::render_table;
@@ -18,13 +27,15 @@ use lazygp::util::timer::fmt_duration_s;
 fn main() {
     let evals: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
     let workers: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let use_tcp = std::env::args().nth(3).map(|s| s == "tcp").unwrap_or(false);
     // compress the simulated 190 s trainings into ~2 ms real sleeps so the
     // example runs in seconds while still exercising the scheduler, and
     // inject the occasional crashed training run
     let sleep_scale = 1e-5;
     let fail_prob = 0.1;
     println!(
-        "## parallel ResNet32/CIFAR10 HPO (simulated): {workers} workers, {evals} evaluations, fail_prob {fail_prob}\n"
+        "## parallel ResNet32/CIFAR10 HPO (simulated): {workers} workers, {evals} evaluations, fail_prob {fail_prob}, async transport: {}\n",
+        if use_tcp { "loopback tcp" } else { "threads" }
     );
 
     // ---- synchronous rounds (paper §3.4): the barrier arm ----
@@ -46,19 +57,41 @@ fn main() {
     let sync_total: f64 = pbo.rounds().iter().map(|r| r.sync_seconds).sum();
 
     // ---- asynchronous, fantasy-augmented: no barrier ----
+    // optionally over the TCP transport: same engine, real wire
+    let mut tcp_workers = Vec::new();
     let obj: Arc<dyn Objective> = Arc::new(ResNetCifarSim::new());
-    let mut abo = AsyncBo::new(
-        BoConfig::lazy().with_seed(4).with_init(InitDesign::Random(1)),
-        obj,
-        AsyncCoordinatorConfig {
-            workers,
-            pending: PendingStrategy::ConstantLiarMin,
-            sleep_scale,
-            fail_prob,
-            max_retries: 3,
-            seed: 4,
-        },
-    );
+    let async_config = AsyncCoordinatorConfig {
+        workers,
+        pending: PendingStrategy::ConstantLiarMin,
+        sleep_scale,
+        fail_prob,
+        max_retries: 3,
+        seed: 4,
+    };
+    let bo = BoConfig::lazy().with_seed(4).with_init(InitDesign::Random(1));
+    let mut abo = if use_tcp {
+        let pool = SocketPool::listen(
+            "127.0.0.1:0",
+            RemoteEvalConfig {
+                objective: "resnet_cifar10".into(),
+                sleep_scale,
+                fail_prob,
+                seed: 4,
+            },
+        )
+        .expect("bind loopback");
+        let addr = pool.local_addr().to_string();
+        println!("async arm listening on {addr}; spawning {workers} loopback workers\n");
+        for _ in 0..workers {
+            let addr = addr.clone();
+            tcp_workers
+                .push(std::thread::spawn(move || run_worker(&addr, 1).expect("loopback worker")));
+        }
+        pool.wait_for_capacity(workers, Duration::from_secs(30)).expect("workers connect");
+        AsyncBo::with_transport(bo, obj, Box::new(pool), async_config)
+    } else {
+        AsyncBo::new(bo, obj, async_config)
+    };
     let async_best = abo.run_until_evals(evals);
     let async_virtual = abo.virtual_seconds();
 
@@ -96,6 +129,12 @@ fn main() {
         fmt_duration_s(seq),
     );
     println!("posterior sync stays negligible vs training, as §3.4 claims — now without idle workers");
+    if use_tcp {
+        println!("{}", abo.transport_stats().render_links());
+    }
     pbo.finish();
     abo.finish();
+    for h in tcp_workers {
+        let _ = h.join();
+    }
 }

@@ -8,17 +8,26 @@
 //!      retry chains, costed honestly since the retry-accounting fix)
 //!   3. asynchronous `AsyncBo` — no barrier: freed workers are refilled
 //!      immediately against a fantasy-augmented posterior
+//!   4. the same async workload over the **loopback-TCP transport**
+//!      (`SocketPool` + in-process `run_worker` daemons): virtual times
+//!      must agree with arm 3 within noise, showing the wire adds
+//!      bookkeeping but no simulated-testbed cost
 //!
 //! Arms 2 and 3 run the ISSUE-1 acceptance setup: 4 workers, heterogeneous
 //! trial costs (ResNet cost jitter) plus failure injection, identical
 //! conditions. The async arm should show ≥ 1.2× lower virtual wall-clock.
 //!
-//! Output: target/experiments/table4.csv (+ table4_async.csv).
+//! Output: target/experiments/table4.csv (+ table4_async.csv,
+//! table4_async_tcp.csv, table4_transport.csv).
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use lazygp::bo::{BoConfig, BoDriver, InitDesign, PendingStrategy};
-use lazygp::coordinator::{AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo};
+use lazygp::coordinator::transport::run_worker;
+use lazygp::coordinator::{
+    AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo, RemoteEvalConfig, SocketPool,
+};
 use lazygp::metrics::Trace;
 use lazygp::objectives::trainer::ResNetCifarSim;
 use lazygp::objectives::Objective;
@@ -81,6 +90,44 @@ fn main() {
     let asy_trace = asy.trace("parallel_async");
     asy_trace.write_csv("target/experiments/table4_async.csv").unwrap();
 
+    // ---- arm 4: the same async workload over loopback TCP ----
+    let pool = SocketPool::listen(
+        "127.0.0.1:0",
+        RemoteEvalConfig {
+            objective: "resnet_cifar10".into(),
+            sleep_scale: 2e-5,
+            fail_prob,
+            seed: 14,
+        },
+    )
+    .expect("bind loopback");
+    let addr = pool.local_addr().to_string();
+    let worker_threads: Vec<_> = (0..workers)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_worker(&addr, 1).expect("loopback worker"))
+        })
+        .collect();
+    pool.wait_for_capacity(workers, Duration::from_secs(30)).expect("workers connect");
+    let obj: Arc<dyn Objective> = Arc::new(ResNetCifarSim::new());
+    let mut tcp = AsyncBo::with_transport(
+        BoConfig::lazy().with_seed(14).with_init(InitDesign::Random(1)),
+        obj,
+        Box::new(pool),
+        AsyncCoordinatorConfig {
+            workers,
+            pending: PendingStrategy::ConstantLiarMin,
+            fail_prob,
+            max_retries: 3,
+            sleep_scale: 2e-5,
+            seed: 14,
+        },
+    );
+    tcp.run_until_evals(evals);
+    let tcp_trace = tcp.trace("parallel_async_tcp");
+    tcp_trace.write_csv("target/experiments/table4_async_tcp.csv").unwrap();
+    tcp_trace.write_transport_csv("target/experiments/table4_transport.csv").unwrap();
+
     let rows: Vec<Vec<String>> = par
         .driver()
         .milestones()
@@ -123,15 +170,43 @@ fn main() {
         asy.stats().fantasy_rollbacks,
     );
     println!("{}", asy_trace.render());
+
+    // thread-vs-TCP backend comparison: same async engine, real wire
+    let tcp_v = tcp.virtual_seconds();
+    let ratio = async_v / tcp_v.max(1e-9);
+    println!("{}", tcp_trace.render());
+    // the two backends run different RNG streams, so virtual times differ
+    // stochastically; at this budget the per-slot cost sums concentrate to
+    // within a few percent — a band tight enough to catch real accounting
+    // regressions (e.g. mis-costed requeues), loose enough for noise
     println!(
-        "final accuracy: sync {:.3} | async {:.3} | sequential {:.3}",
+        "transport comparison (async engine): threads {} | loopback tcp {} | ratio {:.2} ({})",
+        fmt_duration_s(async_v),
+        fmt_duration_s(tcp_v),
+        ratio,
+        if (0.75..=1.33).contains(&ratio) {
+            "agree within noise ✓"
+        } else {
+            "DIVERGED — investigate"
+        },
+    );
+    println!("{}", tcp.transport_stats().render_links());
+    println!(
+        "final accuracy: sync {:.3} | async {:.3} | async-tcp {:.3} | sequential {:.3}",
         par.driver().best().unwrap().value,
         asy.driver().best().unwrap().value,
+        tcp.driver().best().unwrap().value,
         seq.best().unwrap().value
     );
     let sync_s: f64 = par.rounds().iter().map(|r| r.sync_seconds).sum();
     println!("sync-arm posterior sync (t·O(n²) extensions): {}", fmt_duration_s(sync_s));
     par.finish();
     asy.finish();
-    println!("csv: target/experiments/table4.csv, target/experiments/table4_async.csv");
+    tcp.finish(); // sends Shutdown to the loopback workers
+    for h in worker_threads {
+        let _ = h.join();
+    }
+    println!(
+        "csv: target/experiments/table4.csv, table4_async.csv, table4_async_tcp.csv, table4_transport.csv"
+    );
 }

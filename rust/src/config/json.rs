@@ -4,6 +4,15 @@
 //! all escapes incl. `\uXXXX` (+ surrogate pairs), numbers, `true`/`false`/
 //! `null`. Object key order is preserved so serialized configs diff
 //! cleanly. Errors carry byte offsets.
+//!
+//! Since this layer doubles as the coordinator's **wire format** (the TCP
+//! transport serializes [`crate::coordinator::Trial`] /
+//! [`crate::coordinator::TrialOutcome`] through it), serialization of
+//! finite numbers is guaranteed to round-trip *bitwise*: floats print via
+//! Rust's shortest-round-trip `Display`, and negative zero is emitted as
+//! `-0` rather than collapsing to `0`. Non-finite floats must never reach
+//! [`Json::Num`] (they would not be valid JSON); the one message field that
+//! can legally carry them encodes the value as a string instead.
 
 use std::fmt::Write as _;
 
@@ -139,7 +148,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(v) => {
-                if v.fract() == 0.0 && v.abs() < 1e15 {
+                if *v == 0.0 && v.is_sign_negative() {
+                    // the i64 cast below would collapse -0.0 to "0" and
+                    // break the bitwise wire round-trip
+                    out.push_str("-0");
+                } else if v.fract() == 0.0 && v.abs() < 1e15 {
                     let _ = write!(out, "{}", *v as i64);
                 } else {
                     let _ = write!(out, "{v}");
@@ -515,6 +528,34 @@ mod tests {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.25).to_string(), "3.25");
         assert_eq!(Json::Num(-0.5).to_string(), "-0.5");
+    }
+
+    #[test]
+    fn finite_floats_roundtrip_bitwise() {
+        // the wire format (coordinator::transport) relies on this guarantee
+        for v in [
+            0.0,
+            -0.0,
+            1.0 / 3.0,
+            0.1,
+            -1.5e-300,
+            f64::MIN_POSITIVE,      // smallest normal
+            5e-324,                 // smallest subnormal
+            f64::MAX,
+            f64::MIN,
+            9_007_199_254_740_992.0, // 2^53 — beyond as_u64 but exact as a float
+            1e15,
+            -1e15 + 1.0,
+        ] {
+            let text = Json::Num(v).to_string();
+            let back = Json::parse(&text).unwrap();
+            let Json::Num(w) = back else { panic!("not a number: {text}") };
+            assert_eq!(
+                v.to_bits(),
+                w.to_bits(),
+                "{v:?} serialized as {text} parsed back as {w:?}"
+            );
+        }
     }
 
     #[test]

@@ -32,6 +32,7 @@ use std::sync::Arc;
 
 use super::leader::SharedObjective;
 use super::messages::Trial;
+use super::transport::{Transport, TransportStats};
 use super::worker::{WorkerConfig, WorkerPool};
 use crate::bo::driver::{Best, BoConfig, BoDriver, PendingStrategy};
 use crate::metrics::{AsyncTrace, AsyncTracePoint};
@@ -121,7 +122,7 @@ struct Dispatched {
 /// Asynchronous fantasy-augmented parallel BO.
 pub struct AsyncBo {
     driver: BoDriver,
-    pool: WorkerPool,
+    pool: Box<dyn Transport>,
     config: AsyncCoordinatorConfig,
     events: Vec<AsyncEvent>,
     stats: AsyncStats,
@@ -144,10 +145,8 @@ impl AsyncBo {
         config: AsyncCoordinatorConfig,
     ) -> Self {
         assert!(config.workers > 0);
-        let driver =
-            BoDriver::new(bo_config, Box::new(SharedObjective(Arc::clone(&objective))));
         let pool = WorkerPool::spawn(
-            objective,
+            Arc::clone(&objective),
             WorkerConfig {
                 workers: config.workers,
                 sleep_scale: config.sleep_scale,
@@ -156,10 +155,30 @@ impl AsyncBo {
                 seed: config.seed ^ 0x9e37_79b9_7f4a_7c15,
             },
         );
-        let avail = vec![0.0; config.workers];
+        Self::with_transport(bo_config, objective, Box::new(pool), config)
+    }
+
+    /// Run against an explicit [`Transport`] backend — e.g. a
+    /// [`super::transport::SocketPool`] serving remote `lazygp worker`
+    /// daemons. The number of virtual testbed slots is taken from the
+    /// backend's current [`Transport::capacity`] (wait for workers first:
+    /// [`super::transport::SocketPool::wait_for_capacity`]); the
+    /// `workers`/`sleep_scale`/`fail_prob` fields of `config` are ignored,
+    /// the backend already embodies them.
+    pub fn with_transport(
+        bo_config: BoConfig,
+        objective: Arc<dyn Objective>,
+        transport: Box<dyn Transport>,
+        mut config: AsyncCoordinatorConfig,
+    ) -> Self {
+        let slots = transport.capacity();
+        assert!(slots > 0, "transport has no worker slots (wait_for_capacity first?)");
+        config.workers = slots;
+        let driver = BoDriver::new(bo_config, Box::new(SharedObjective(objective)));
+        let avail = vec![0.0; slots];
         Self {
             driver,
-            pool,
+            pool: transport,
             config,
             events: Vec::new(),
             stats: AsyncStats::default(),
@@ -172,6 +191,11 @@ impl AsyncBo {
 
     pub fn driver(&self) -> &BoDriver {
         &self.driver
+    }
+
+    /// Per-link counters of the transport backend in use.
+    pub fn transport_stats(&self) -> TransportStats {
+        self.pool.stats()
     }
 
     pub fn events(&self) -> &[AsyncEvent] {
@@ -236,7 +260,7 @@ impl AsyncBo {
         self.next_trial_id += 1;
         self.submit_v.insert(id, (now_v + suggest_seconds + sync_seconds, slot));
         self.pending.push((id, x.clone()));
-        self.pool.submit(Trial { id, round: self.events.len() as u64, x, attempt: 0 });
+        self.pool.dispatch(Trial { id, round: self.events.len() as u64, x, attempt: 0 });
         self.stats.suggest_s += suggest_seconds;
         self.stats.sync_s += sync_seconds;
         Dispatched { suggest_seconds, sync_seconds }
@@ -312,7 +336,7 @@ impl AsyncBo {
                 }
                 self.submit_v.insert(retry.id, (done_v, slot));
                 self.stats.retries += 1;
-                self.pool.submit(retry);
+                self.pool.dispatch(retry);
                 retried = true;
             }
             Err(_) => {
@@ -364,13 +388,15 @@ impl AsyncBo {
             fantasies_issued: self.stats.fantasies_issued,
             fantasy_rollbacks: self.stats.fantasy_rollbacks,
             virtual_wall_s: self.virtual_seconds(),
+            transport: self.pool.stats().links,
         }
     }
 
     /// Shut the pool down and return the driver for post-analysis.
     pub fn finish(self) -> BoDriver {
-        self.pool.shutdown();
-        self.driver
+        let AsyncBo { driver, pool, .. } = self;
+        pool.shutdown();
+        driver
     }
 }
 

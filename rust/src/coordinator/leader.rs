@@ -4,6 +4,7 @@
 use std::sync::Arc;
 
 use super::messages::{Trial, TrialOutcome};
+use super::transport::{Transport, TransportStats};
 use super::worker::{WorkerConfig, WorkerPool};
 use crate::bo::driver::{Best, BoConfig, BoDriver};
 use crate::objectives::{Evaluation, Objective};
@@ -65,10 +66,12 @@ pub struct RoundRecord {
     pub best: f64,
 }
 
-/// Parallel BO: a [`BoDriver`] whose evaluations run on a [`WorkerPool`].
+/// Parallel BO: a [`BoDriver`] whose evaluations run on a [`Transport`]
+/// backend (in-process threads by default; remote TCP workers via
+/// [`with_transport`](ParallelBo::with_transport)).
 pub struct ParallelBo {
     driver: BoDriver,
-    pool: WorkerPool,
+    pool: Box<dyn Transport>,
     config: CoordinatorConfig,
     rounds: Vec<RoundRecord>,
     next_trial_id: u64,
@@ -101,10 +104,8 @@ impl ParallelBo {
         objective: Arc<dyn Objective>,
         config: CoordinatorConfig,
     ) -> Self {
-        let driver =
-            BoDriver::new(bo_config, Box::new(SharedObjective(Arc::clone(&objective))));
         let pool = WorkerPool::spawn(
-            objective,
+            Arc::clone(&objective),
             WorkerConfig {
                 workers: config.workers,
                 sleep_scale: config.sleep_scale,
@@ -113,11 +114,43 @@ impl ParallelBo {
                 seed: config.seed ^ 0x9e37_79b9_7f4a_7c15,
             },
         );
-        Self { driver, pool, config, rounds: Vec::new(), next_trial_id: 0, virtual_seconds: 0.0 }
+        Self::with_transport(bo_config, objective, Box::new(pool), config)
+    }
+
+    /// Run against an explicit [`Transport`] backend — e.g. a
+    /// [`super::transport::SocketPool`] serving remote `lazygp worker`
+    /// daemons (wait for workers first:
+    /// [`super::transport::SocketPool::wait_for_capacity`]). The
+    /// `workers`/`sleep_scale`/`fail_prob` fields of `config` are ignored
+    /// here: the backend already embodies them.
+    pub fn with_transport(
+        bo_config: BoConfig,
+        objective: Arc<dyn Objective>,
+        transport: Box<dyn Transport>,
+        config: CoordinatorConfig,
+    ) -> Self {
+        assert!(
+            transport.capacity() > 0,
+            "transport has no worker slots (wait_for_capacity first?)"
+        );
+        let driver = BoDriver::new(bo_config, Box::new(SharedObjective(objective)));
+        Self {
+            driver,
+            pool: transport,
+            config,
+            rounds: Vec::new(),
+            next_trial_id: 0,
+            virtual_seconds: 0.0,
+        }
     }
 
     pub fn driver(&self) -> &BoDriver {
         &self.driver
+    }
+
+    /// Per-link counters of the transport backend in use.
+    pub fn transport_stats(&self) -> TransportStats {
+        self.pool.stats()
     }
 
     pub fn rounds(&self) -> &[RoundRecord] {
@@ -143,7 +176,7 @@ impl ParallelBo {
         // scatter
         let mut in_flight = 0usize;
         for x in batch {
-            self.pool.submit(Trial { id: self.next_trial_id, round: round_no, x, attempt: 0 });
+            self.pool.dispatch(Trial { id: self.next_trial_id, round: round_no, x, attempt: 0 });
             self.next_trial_id += 1;
             in_flight += 1;
         }
@@ -173,7 +206,7 @@ impl ParallelBo {
                         retry.id = self.next_trial_id;
                         self.next_trial_id += 1;
                         carried.insert(retry.id, chain_cost);
-                        self.pool.submit(retry);
+                        self.pool.dispatch(retry);
                         in_flight += 1;
                     } else {
                         // a dropped chain still occupied its worker
@@ -228,8 +261,9 @@ impl ParallelBo {
 
     /// Shut the pool down and return the driver for post-analysis.
     pub fn finish(self) -> BoDriver {
-        self.pool.shutdown();
-        self.driver
+        let ParallelBo { driver, pool, .. } = self;
+        pool.shutdown();
+        driver
     }
 }
 

@@ -1,6 +1,44 @@
-//! Message types exchanged between the leader and the worker pool.
+//! Message types exchanged between the leader and the worker pool, with
+//! their JSON wire encoding.
+//!
+//! The in-process thread backend passes these structs over channels; the
+//! TCP backend ([`crate::coordinator::transport`]) serializes them through
+//! the [`crate::config::json`] layer. The encoding is lossless for every
+//! field the coordinators rely on:
+//!
+//! * floats round-trip **bitwise** (shortest-round-trip `Display`, negative
+//!   zero preserved) as long as they are finite;
+//! * the one field that can carry a non-finite float —
+//!   [`TrialError::NonFinite`] — encodes it as a *string* (`"NaN"`,
+//!   `"inf"`, `"-inf"`), since JSON has no non-finite numbers. NaN payload
+//!   bits are canonicalized by this path; the sign of infinities survives;
+//! * integers are decoded through the checked accessors of
+//!   [`crate::config::json::Json`], so ids ≥ 2^53 (which would silently
+//!   collapse onto a neighboring float) are **rejected** at decode time
+//!   rather than truncated.
 
+use crate::config::json::Json;
 use crate::objectives::Evaluation;
+
+/// Decode-side error for the wire encoding: what was malformed and where.
+fn wire_err(what: &str) -> crate::Error {
+    crate::Error::msg(format!("wire decode: {what}"))
+}
+
+/// Checked `u64` field access (rejects ≥ 2^53, fractions, negatives).
+fn field_u64(j: &Json, key: &str) -> crate::Result<u64> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| wire_err(&format!("missing or invalid u64 field `{key}`")))
+}
+
+/// Finite-`f64` field access (non-finite numbers are not valid JSON and
+/// must never appear; see [`TrialError::NonFinite`] for the string path).
+fn field_f64(j: &Json, key: &str) -> crate::Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| wire_err(&format!("missing or invalid f64 field `{key}`")))
+}
 
 /// A unit of work: evaluate the objective at `x`.
 #[derive(Debug, Clone, PartialEq)]
@@ -54,6 +92,118 @@ impl TrialOutcome {
     }
 }
 
+// ---------- JSON wire encoding ----------
+
+impl Trial {
+    /// Encode for the TCP transport.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("round", Json::Num(self.round as f64)),
+            ("x", Json::Arr(self.x.iter().map(|&v| Json::Num(v)).collect())),
+            ("attempt", Json::Num(f64::from(self.attempt))),
+        ])
+    }
+
+    /// Decode from the TCP transport. Rejects ids/rounds ≥ 2^53 and
+    /// attempts beyond `u32`.
+    pub fn from_json(j: &Json) -> crate::Result<Trial> {
+        let attempt = field_u64(j, "attempt")?;
+        let attempt =
+            u32::try_from(attempt).map_err(|_| wire_err("attempt exceeds u32"))?;
+        let x = j
+            .get("x")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| wire_err("missing or invalid array field `x`"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| wire_err("non-numeric entry in `x`")))
+            .collect::<crate::Result<Vec<f64>>>()?;
+        Ok(Trial { id: field_u64(j, "id")?, round: field_u64(j, "round")?, x, attempt })
+    }
+}
+
+impl TrialError {
+    pub fn to_json(&self) -> Json {
+        match self {
+            TrialError::SimulatedCrash => {
+                Json::obj(vec![("kind", Json::Str("simulated_crash".into()))])
+            }
+            // the payload may be NaN/±inf, which JSON numbers cannot carry:
+            // go through the string form `f64` itself can parse back
+            TrialError::NonFinite(v) => Json::obj(vec![
+                ("kind", Json::Str("non_finite".into())),
+                ("value", Json::Str(format!("{v}"))),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<TrialError> {
+        match j.get("kind").and_then(Json::as_str) {
+            Some("simulated_crash") => Ok(TrialError::SimulatedCrash),
+            Some("non_finite") => {
+                let raw = j
+                    .get("value")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| wire_err("non_finite without `value`"))?;
+                let v: f64 =
+                    raw.parse().map_err(|_| wire_err("unparseable non_finite value"))?;
+                Ok(TrialError::NonFinite(v))
+            }
+            _ => Err(wire_err("unknown trial error kind")),
+        }
+    }
+}
+
+impl TrialOutcome {
+    pub fn to_json(&self) -> Json {
+        let result = match &self.result {
+            Ok(eval) => Json::obj(vec![(
+                "ok",
+                Json::obj(vec![
+                    ("value", Json::Num(eval.value)),
+                    ("sim_cost_s", Json::Num(eval.sim_cost_s)),
+                ]),
+            )]),
+            Err(e) => Json::obj(vec![("err", e.to_json())]),
+        };
+        Json::obj(vec![
+            ("trial", self.trial.to_json()),
+            ("worker_id", Json::Num(self.worker_id as f64)),
+            ("result", result),
+            ("worker_seconds", Json::Num(self.worker_seconds)),
+            ("sim_cost_s", Json::Num(self.sim_cost_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<TrialOutcome> {
+        let trial = Trial::from_json(
+            j.get("trial").ok_or_else(|| wire_err("missing `trial`"))?,
+        )?;
+        let worker_id = j
+            .get("worker_id")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| wire_err("missing or invalid `worker_id`"))?;
+        let rj = j.get("result").ok_or_else(|| wire_err("missing `result`"))?;
+        let result = if let Some(ok) = rj.get("ok") {
+            Ok(Evaluation {
+                value: field_f64(ok, "value")?,
+                sim_cost_s: field_f64(ok, "sim_cost_s")?,
+            })
+        } else if let Some(err) = rj.get("err") {
+            Err(TrialError::from_json(err)?)
+        } else {
+            return Err(wire_err("result is neither `ok` nor `err`"));
+        };
+        Ok(TrialOutcome {
+            trial,
+            worker_id,
+            result,
+            worker_seconds: field_f64(j, "worker_seconds")?,
+            sim_cost_s: field_f64(j, "sim_cost_s")?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,5 +233,79 @@ mod tests {
     fn error_messages_render() {
         assert_eq!(TrialError::SimulatedCrash.to_string(), "simulated worker crash");
         assert!(TrialError::NonFinite(f64::NAN).to_string().contains("non-finite"));
+    }
+
+    #[test]
+    fn trial_wire_roundtrip() {
+        let t = Trial { id: 42, round: 7, x: vec![0.5, -0.0, 1.0 / 3.0], attempt: 3 };
+        let back = Trial::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.id, 42);
+        assert_eq!(back.round, 7);
+        assert_eq!(back.attempt, 3);
+        for (a, b) in t.x.iter().zip(&back.x) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn outcome_wire_roundtrip_ok_and_err() {
+        let t = Trial { id: 1, round: 0, x: vec![0.25], attempt: 0 };
+        let ok = TrialOutcome {
+            trial: t.clone(),
+            worker_id: 3,
+            result: Ok(Evaluation { value: -0.125, sim_cost_s: 190.5 }),
+            worker_seconds: 0.002,
+            sim_cost_s: 190.5,
+        };
+        let back =
+            TrialOutcome::from_json(&Json::parse(&ok.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.worker_id, 3);
+        assert_eq!(back.result.as_ref().unwrap().value, -0.125);
+        assert_eq!(back.sim_cost_s, 190.5);
+
+        for e in [
+            TrialError::SimulatedCrash,
+            TrialError::NonFinite(f64::NAN),
+            TrialError::NonFinite(f64::INFINITY),
+            TrialError::NonFinite(f64::NEG_INFINITY),
+        ] {
+            let bad = TrialOutcome {
+                trial: t.clone(),
+                worker_id: 0,
+                result: Err(e.clone()),
+                worker_seconds: 0.0,
+                sim_cost_s: 1.0,
+            };
+            let back = TrialOutcome::from_json(
+                &Json::parse(&bad.to_json().to_string()).unwrap(),
+            )
+            .unwrap();
+            match (e, back.result.unwrap_err()) {
+                (TrialError::SimulatedCrash, TrialError::SimulatedCrash) => {}
+                (TrialError::NonFinite(a), TrialError::NonFinite(b)) => {
+                    // NaN payload bits canonicalize; sign of infinities survives
+                    assert_eq!(a.is_nan(), b.is_nan());
+                    if !a.is_nan() {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
+                (a, b) => panic!("variant changed in flight: {a:?} → {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversize_trial_ids_rejected() {
+        // 2^53 collapses onto a neighboring float — refuse, don't truncate
+        let j = Json::parse(
+            r#"{"id": 9007199254740992, "round": 0, "x": [0.0], "attempt": 0}"#,
+        )
+        .unwrap();
+        assert!(Trial::from_json(&j).is_err());
+        let j = Json::parse(
+            r#"{"id": 1, "round": 0, "x": [0.0], "attempt": 4294967296}"#,
+        )
+        .unwrap();
+        assert!(Trial::from_json(&j).is_err(), "attempt beyond u32 must be rejected");
     }
 }

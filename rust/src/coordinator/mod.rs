@@ -11,12 +11,18 @@
 //!
 //! Topology:
 //!
+//! * [`transport`] — **where trials run**: the [`Transport`] trait both
+//!   coordinators dispatch through, implemented by the in-process thread
+//!   pool and by a std-only TCP backend ([`transport::SocketPool`] +
+//!   the `lazygp worker --connect` daemon). Worker disconnects re-queue
+//!   the in-flight trial instead of wedging the leader.
 //! * [`worker`] — a pool of OS threads (the paper used 20 GPUs on 10
 //!   nodes; our substitution is documented in DESIGN.md §4). Each worker
 //!   pulls [`messages::Trial`]s from a bounded queue (backpressure),
 //!   evaluates the shared objective with its own deterministic RNG stream,
 //!   and reports a [`messages::TrialOutcome`]. Failure injection simulates
-//!   crashed training runs.
+//!   crashed training runs; simulated-cost sleeps are interruptible so
+//!   teardown is prompt.
 //! * [`leader`] — the synchronous coordinator: per round it asks the BO
 //!   driver for a batch of `t` suggestions, scatters them, gathers the
 //!   outcomes, retries failures, and synchronizes the surrogate with `t`
@@ -28,13 +34,19 @@
 //!   surrogate augmented by *fantasy observations* for all in-flight
 //!   trials (constant liar / posterior mean / kriging believer), retracted
 //!   in `O(1)` via the packed factor's truncation when real results land.
+//!
+//! Both coordinators are backend-agnostic: construct with `new` for
+//! threads, or [`ParallelBo::with_transport`] /
+//! [`AsyncBo::with_transport`] for anything implementing [`Transport`].
 
 pub mod async_leader;
 pub mod leader;
 pub mod messages;
+pub mod transport;
 pub mod worker;
 
 pub use async_leader::{AsyncBo, AsyncCoordinatorConfig, AsyncEvent, AsyncStats};
 pub use leader::{CoordinatorConfig, ParallelBo, RoundRecord};
 pub use messages::{Trial, TrialError, TrialOutcome};
-pub use worker::WorkerPool;
+pub use transport::{RemoteEvalConfig, SocketPool, Transport, TransportStats};
+pub use worker::{ShutdownToken, WorkerPool};

@@ -1,0 +1,1067 @@
+//! Trial transport: the seam between a BO leader and wherever its trials
+//! actually run.
+//!
+//! Paper §3.4 assumes real evaluators elsewhere (20 GPUs on 10 nodes); up
+//! to PR 1 this repo substituted in-process OS threads hard-wired into the
+//! coordinators. This module generalizes dispatch behind the [`Transport`]
+//! trait so [`super::ParallelBo`] and [`super::AsyncBo`] run unchanged
+//! against either backend:
+//!
+//! * [`WorkerPool`](super::worker::WorkerPool) — the in-process thread pool
+//!   (default; zero serialization cost);
+//! * [`SocketPool`] — a dependency-free TCP leader built on [`std::net`],
+//!   paired with the `lazygp worker --connect <addr>` daemon
+//!   ([`run_worker`]). Messages are length-prefixed JSON frames through the
+//!   [`crate::config::json`] layer, so the wire format is the same
+//!   human-readable encoding configs use (and it round-trips floats
+//!   bitwise — see [`super::messages`]).
+//!
+//! A future MPI/cluster backend implements the same four operations —
+//! dispatch, poll, capacity, shutdown — and plugs into the identical seam.
+//!
+//! ## Fault model
+//!
+//! A worker disconnect must never wedge the leader: the leader-side
+//! [`SocketPool`] tracks every in-flight trial per connection and, when a
+//! connection drops, **re-queues** those trials (same trial id) for the
+//! next free worker. Because the trial id and point are preserved, the
+//! async coordinator's pending-set entry — and therefore its fantasy
+//! observation for that point — stays valid; nothing needs to be retracted
+//! until the re-run completes on another worker. Requeues are counted
+//! per-link and surface in [`TransportStats`] /
+//! [`crate::metrics::AsyncTrace`].
+//!
+//! ## Example: two in-process workers behind the trait
+//!
+//! ```
+//! use std::sync::Arc;
+//! use lazygp::coordinator::transport::Transport;
+//! use lazygp::coordinator::worker::{WorkerConfig, WorkerPool};
+//! use lazygp::coordinator::Trial;
+//! use lazygp::objectives::{suite::Sphere, Objective};
+//!
+//! let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
+//! let pool: Box<dyn Transport> =
+//!     Box::new(WorkerPool::spawn(obj, WorkerConfig { workers: 2, ..Default::default() }));
+//! assert_eq!(pool.capacity(), 2);
+//! for id in 0..4 {
+//!     pool.dispatch(Trial { id, round: 0, x: vec![0.5, -0.5], attempt: 0 });
+//! }
+//! let outcomes: Vec<_> = (0..4).map(|_| pool.recv()).collect();
+//! assert!(outcomes.iter().all(|o| o.is_ok()));
+//! assert_eq!(pool.dispatched(), 4);
+//! pool.shutdown();
+//! ```
+
+use std::collections::{HashMap, VecDeque};
+use std::io;
+use std::net::{Shutdown as NetShutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::messages::{Trial, TrialOutcome};
+use super::worker::{WorkerConfig, WorkerPool};
+use crate::config::json::Json;
+use crate::metrics::TransportCounter;
+
+/// Wire protocol version; bumped on any frame/message change. A leader
+/// rejects workers advertising a different version.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Upper bound on a single frame (a trial or outcome is ~hundreds of
+/// bytes; anything near this is corruption, fail fast).
+const MAX_FRAME_BYTES: usize = 16 << 20;
+
+// ---------------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------------
+
+/// Where trials run: the leader-facing surface of an evaluator pool.
+///
+/// Implementations are in-process threads ([`WorkerPool`]) or remote TCP
+/// workers ([`SocketPool`]); both coordinators drive the trait only, so a
+/// backend swap is a constructor swap.
+pub trait Transport: Send {
+    /// Hand a trial to the pool. May block for backpressure; delivery is
+    /// at-least-queued (a disconnect after dispatch re-queues internally).
+    fn dispatch(&self, trial: Trial);
+
+    /// Wait up to `timeout` for the next outcome.
+    fn poll_outcome(&self, timeout: Duration) -> Option<TrialOutcome>;
+
+    /// Blocking receive of the next outcome.
+    fn recv(&self) -> TrialOutcome {
+        loop {
+            if let Some(o) = self.poll_outcome(Duration::from_millis(100)) {
+                return o;
+            }
+        }
+    }
+
+    /// Concurrent trial slots currently available (workers × their
+    /// advertised capacity). May change over time for remote backends.
+    fn capacity(&self) -> usize;
+
+    /// Trials dispatched so far.
+    fn dispatched(&self) -> u64;
+
+    /// Per-link transport/latency counters.
+    fn stats(&self) -> TransportStats;
+
+    /// Graceful shutdown: stop accepting work, tear the backend down,
+    /// return once every worker/thread exited.
+    fn shutdown(self: Box<Self>);
+}
+
+/// Snapshot of a backend's per-link counters.
+#[derive(Debug, Clone, Default)]
+pub struct TransportStats {
+    /// backend name (`"thread"` / `"tcp"`)
+    pub backend: &'static str,
+    /// one entry per worker link (dead TCP connections included)
+    pub links: Vec<TransportCounter>,
+    /// total in-flight trials rescued from disconnected workers
+    pub requeued: u64,
+}
+
+impl TransportStats {
+    /// Human-readable per-link counter table (one row per link, plus the
+    /// requeue total) — shared by the CLI, benches and examples.
+    pub fn render_links(&self) -> String {
+        let mut s = String::new();
+        for l in &self.links {
+            s.push_str(&format!(
+                "  link {:>3} cap {:>2} | dispatched {:>5} completed {:>5} requeued {:>3} | tx {:>8} B rx {:>8} B | rtt {:.3} ms\n",
+                l.worker,
+                l.capacity,
+                l.dispatched,
+                l.completed,
+                l.requeued,
+                l.bytes_tx,
+                l.bytes_rx,
+                l.rtt_mean_s * 1e3,
+            ));
+        }
+        s.push_str(&format!("  requeued after disconnects: {}", self.requeued));
+        s
+    }
+}
+
+impl Transport for WorkerPool {
+    fn dispatch(&self, trial: Trial) {
+        self.submit(trial);
+    }
+
+    fn poll_outcome(&self, timeout: Duration) -> Option<TrialOutcome> {
+        self.recv_timeout(timeout)
+    }
+
+    fn recv(&self) -> TrialOutcome {
+        WorkerPool::recv(self)
+    }
+
+    fn capacity(&self) -> usize {
+        self.worker_count()
+    }
+
+    fn dispatched(&self) -> u64 {
+        WorkerPool::dispatched(self)
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats { backend: "thread", links: self.link_counters(), requeued: 0 }
+    }
+
+    fn shutdown(self: Box<Self>) {
+        WorkerPool::shutdown(*self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Write one length-prefixed JSON frame (4-byte big-endian length, then
+/// the compact serialization). Returns total bytes written.
+pub fn write_frame(w: &mut impl io::Write, msg: &Json) -> io::Result<u64> {
+    let body = msg.to_string();
+    let bytes = body.as_bytes();
+    if bytes.len() > MAX_FRAME_BYTES {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame too large"));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(4 + bytes.len() as u64)
+}
+
+/// Read one length-prefixed JSON frame. Returns the value and total bytes
+/// consumed.
+pub fn read_frame(r: &mut impl io::Read) -> io::Result<(Json, u64)> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_be_bytes(len) as usize;
+    if n > MAX_FRAME_BYTES {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame length too large"));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    let text = std::str::from_utf8(&buf)
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "frame is not utf-8"))?;
+    let json = Json::parse(text)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+    Ok((json, 4 + n as u64))
+}
+
+// ---------------------------------------------------------------------------
+// Protocol messages
+// ---------------------------------------------------------------------------
+
+/// Worker → leader messages.
+#[derive(Debug, Clone)]
+pub enum WorkerMsg {
+    /// First frame after connect: protocol version + trial slots offered.
+    Hello { protocol: u64, capacity: usize },
+    /// A finished trial (ok or failed).
+    Outcome(TrialOutcome),
+}
+
+/// Leader → worker messages.
+#[derive(Debug, Clone)]
+pub enum LeaderMsg {
+    /// Handshake reply: the worker's assigned id plus everything needed to
+    /// evaluate trials (objective by registry name, simulation knobs, base
+    /// seed). The seed travels as a decimal string so the full `u64` range
+    /// survives the JSON number type's 2^53 limit.
+    Welcome { worker_id: u64, objective: String, sleep_scale: f64, fail_prob: f64, seed: u64 },
+    /// Evaluate this trial.
+    Dispatch(Trial),
+    /// Stop immediately, abandoning in-flight trials (the leader only
+    /// sends this at its own teardown, where results are discarded).
+    Shutdown,
+}
+
+impl WorkerMsg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            WorkerMsg::Hello { protocol, capacity } => Json::obj(vec![
+                ("type", Json::Str("hello".into())),
+                ("protocol", Json::Num(*protocol as f64)),
+                ("capacity", Json::Num(*capacity as f64)),
+            ]),
+            WorkerMsg::Outcome(o) => {
+                Json::obj(vec![("type", Json::Str("outcome".into())), ("outcome", o.to_json())])
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<WorkerMsg> {
+        match j.get("type").and_then(Json::as_str) {
+            Some("hello") => Ok(WorkerMsg::Hello {
+                protocol: j
+                    .get("protocol")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| crate::err!("hello without protocol version"))?,
+                capacity: j
+                    .get("capacity")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| crate::err!("hello without capacity"))?,
+            }),
+            Some("outcome") => Ok(WorkerMsg::Outcome(TrialOutcome::from_json(
+                j.get("outcome").ok_or_else(|| crate::err!("outcome message without body"))?,
+            )?)),
+            other => Err(crate::err!("unknown worker message type {other:?}")),
+        }
+    }
+}
+
+impl LeaderMsg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed } => {
+                Json::obj(vec![
+                    ("type", Json::Str("welcome".into())),
+                    ("worker_id", Json::Num(*worker_id as f64)),
+                    ("objective", Json::Str(objective.clone())),
+                    ("sleep_scale", Json::Num(*sleep_scale)),
+                    ("fail_prob", Json::Num(*fail_prob)),
+                    ("seed", Json::Str(seed.to_string())),
+                ])
+            }
+            LeaderMsg::Dispatch(t) => {
+                Json::obj(vec![("type", Json::Str("trial".into())), ("trial", t.to_json())])
+            }
+            LeaderMsg::Shutdown => Json::obj(vec![("type", Json::Str("shutdown".into()))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<LeaderMsg> {
+        match j.get("type").and_then(Json::as_str) {
+            Some("welcome") => Ok(LeaderMsg::Welcome {
+                worker_id: j
+                    .get("worker_id")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| crate::err!("welcome without worker_id"))?,
+                objective: j
+                    .get("objective")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| crate::err!("welcome without objective"))?
+                    .to_string(),
+                sleep_scale: j
+                    .get("sleep_scale")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| crate::err!("welcome without sleep_scale"))?,
+                fail_prob: j
+                    .get("fail_prob")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| crate::err!("welcome without fail_prob"))?,
+                seed: j
+                    .get("seed")
+                    .and_then(Json::as_str)
+                    .and_then(|s| s.parse::<u64>().ok())
+                    .ok_or_else(|| crate::err!("welcome without parseable seed"))?,
+            }),
+            Some("trial") => Ok(LeaderMsg::Dispatch(Trial::from_json(
+                j.get("trial").ok_or_else(|| crate::err!("trial message without body"))?,
+            )?)),
+            Some("shutdown") => Ok(LeaderMsg::Shutdown),
+            other => Err(crate::err!("unknown leader message type {other:?}")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Leader side: SocketPool
+// ---------------------------------------------------------------------------
+
+/// What remote workers need to evaluate trials, sent in the handshake so
+/// `lazygp worker` only needs an address.
+#[derive(Debug, Clone)]
+pub struct RemoteEvalConfig {
+    /// objective registry name ([`crate::objectives::by_name`])
+    pub objective: String,
+    /// real seconds slept per simulated objective second
+    pub sleep_scale: f64,
+    /// failure-injection probability per attempt
+    pub fail_prob: f64,
+    /// base RNG seed; each worker derives its own stream from its id
+    pub seed: u64,
+}
+
+/// Per-connection counters (atomics: touched by reader + dispatcher).
+#[derive(Default)]
+struct ConnStats {
+    dispatched: AtomicU64,
+    completed: AtomicU64,
+    requeued: AtomicU64,
+    bytes_tx: AtomicU64,
+    bytes_rx: AtomicU64,
+    rtt_ns: AtomicU64,
+}
+
+/// One connected worker.
+struct Conn {
+    id: usize,
+    capacity: usize,
+    alive: AtomicBool,
+    writer: Mutex<TcpStream>,
+    /// trial id → (trial, dispatch instant); drained on disconnect
+    in_flight: Mutex<HashMap<u64, (Trial, Instant)>>,
+    stats: ConnStats,
+}
+
+impl Conn {
+    fn counter(&self) -> TransportCounter {
+        let completed = self.stats.completed.load(Ordering::Relaxed);
+        let rtt_ns = self.stats.rtt_ns.load(Ordering::Relaxed);
+        TransportCounter {
+            worker: self.id,
+            capacity: self.capacity,
+            dispatched: self.stats.dispatched.load(Ordering::Relaxed),
+            completed,
+            requeued: self.stats.requeued.load(Ordering::Relaxed),
+            bytes_tx: self.stats.bytes_tx.load(Ordering::Relaxed),
+            bytes_rx: self.stats.bytes_rx.load(Ordering::Relaxed),
+            rtt_mean_s: if completed > 0 { rtt_ns as f64 / completed as f64 / 1e9 } else { 0.0 },
+        }
+    }
+}
+
+/// State shared between the leader thread, acceptor, dispatcher and the
+/// per-connection readers.
+struct Shared {
+    eval: RemoteEvalConfig,
+    stop: AtomicBool,
+    /// trials waiting for a free slot; requeued trials go to the front
+    queue: Mutex<VecDeque<Trial>>,
+    /// paired with `queue`: signaled on new trial / freed slot / new
+    /// worker / disconnect / stop
+    cv: Condvar,
+    /// every connection ever accepted; `alive` gates dispatch
+    conns: Mutex<Vec<Arc<Conn>>>,
+    next_conn_id: AtomicUsize,
+    requeued: AtomicU64,
+    reader_handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Leader-side TCP transport: accepts `lazygp worker` connections and
+/// scatters trials over them. See the [module docs](self) for the fault
+/// model.
+pub struct SocketPool {
+    shared: Arc<Shared>,
+    results: Receiver<TrialOutcome>,
+    dispatched: AtomicU64,
+    local_addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
+    closed: bool,
+}
+
+impl SocketPool {
+    /// Bind `addr` (e.g. `127.0.0.1:7077`, or port `0` for an ephemeral
+    /// port — see [`local_addr`](SocketPool::local_addr)) and start
+    /// accepting workers in the background.
+    pub fn listen(addr: &str, eval: RemoteEvalConfig) -> crate::Result<SocketPool> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        // nonblocking accept so the acceptor can observe the stop flag
+        listener.set_nonblocking(true)?;
+        let (res_tx, res_rx) = channel::<TrialOutcome>();
+        let shared = Arc::new(Shared {
+            eval,
+            stop: AtomicBool::new(false),
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            conns: Mutex::new(Vec::new()),
+            next_conn_id: AtomicUsize::new(0),
+            requeued: AtomicU64::new(0),
+            reader_handles: Mutex::new(Vec::new()),
+        });
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("lazygp-acceptor".into())
+                .spawn(move || accept_loop(listener, &shared, &res_tx))
+                .expect("spawn acceptor")
+        };
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("lazygp-dispatcher".into())
+                .spawn(move || dispatch_loop(&shared))
+                .expect("spawn dispatcher")
+        };
+        Ok(SocketPool {
+            shared,
+            results: res_rx,
+            dispatched: AtomicU64::new(0),
+            local_addr,
+            acceptor: Some(acceptor),
+            dispatcher: Some(dispatcher),
+            closed: false,
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Sum of trial slots over live connections.
+    pub fn capacity_now(&self) -> usize {
+        self.shared
+            .conns
+            .lock()
+            .expect("conns poisoned")
+            .iter()
+            .filter(|c| c.alive.load(Ordering::SeqCst))
+            .map(|c| c.capacity)
+            .sum()
+    }
+
+    /// Block until at least `min_slots` worker slots are connected (or
+    /// error after `timeout`). Call before handing the pool to a
+    /// coordinator so its slot accounting starts from real capacity.
+    pub fn wait_for_capacity(&self, min_slots: usize, timeout: Duration) -> crate::Result<usize> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let cap = self.capacity_now();
+            if cap >= min_slots {
+                return Ok(cap);
+            }
+            if Instant::now() >= deadline {
+                crate::bail!(
+                    "timed out waiting for {min_slots} remote worker slot(s); have {cap} — \
+                     start workers with `lazygp worker --connect {}`",
+                    self.local_addr
+                );
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Idempotent teardown shared by [`Transport::shutdown`] and `Drop`.
+    fn shutdown_inner(&mut self) {
+        if self.closed {
+            return;
+        }
+        self.closed = true;
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        // join the acceptor *first* so the connection set is final — a
+        // worker admitted concurrently with shutdown would otherwise miss
+        // the stream close below and wedge its reader join
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        let conns: Vec<Arc<Conn>> = self.shared.conns.lock().expect("conns poisoned").clone();
+        for c in &conns {
+            let mut w = c.writer.lock().expect("writer poisoned");
+            // best-effort: tell the worker to exit, then close both
+            // directions so its (and our) blocked reads unblock
+            let _ = write_frame(&mut *w, &LeaderMsg::Shutdown.to_json());
+            let _ = w.shutdown(NetShutdown::Both);
+        }
+        let handles: Vec<JoinHandle<()>> =
+            self.shared.reader_handles.lock().expect("handles poisoned").drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SocketPool {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+impl Transport for SocketPool {
+    /// Queue the trial; the dispatcher forwards it to the first worker
+    /// with a free slot (never blocks the leader).
+    fn dispatch(&self, trial: Trial) {
+        self.dispatched.fetch_add(1, Ordering::Relaxed);
+        self.shared.queue.lock().expect("queue poisoned").push_back(trial);
+        self.shared.cv.notify_all();
+    }
+
+    fn poll_outcome(&self, timeout: Duration) -> Option<TrialOutcome> {
+        self.results.recv_timeout(timeout).ok()
+    }
+
+    /// Blocking receive that surfaces starvation: when work is queued but
+    /// every worker has disconnected, it keeps waiting (a reconnecting
+    /// worker picks the rescued trials up) but tells the operator every
+    /// ~10 s instead of wedging silently.
+    fn recv(&self) -> TrialOutcome {
+        let mut polls: u64 = 0;
+        loop {
+            if let Some(o) = self.poll_outcome(Duration::from_millis(100)) {
+                return o;
+            }
+            polls += 1;
+            if polls % 100 == 0 && self.capacity_now() == 0 {
+                let queued = self.shared.queue.lock().expect("queue poisoned").len();
+                if queued > 0 {
+                    eprintln!(
+                        "socket pool: {queued} trial(s) queued but no workers connected; \
+                         start one with `lazygp worker --connect {}`",
+                        self.local_addr
+                    );
+                }
+            }
+        }
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity_now()
+    }
+
+    fn dispatched(&self) -> u64 {
+        self.dispatched.load(Ordering::Relaxed)
+    }
+
+    fn stats(&self) -> TransportStats {
+        let links = self
+            .shared
+            .conns
+            .lock()
+            .expect("conns poisoned")
+            .iter()
+            .map(|c| c.counter())
+            .collect();
+        TransportStats {
+            backend: "tcp",
+            links,
+            requeued: self.shared.requeued.load(Ordering::Relaxed),
+        }
+    }
+
+    fn shutdown(mut self: Box<Self>) {
+        self.shutdown_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: &Arc<Shared>, res_tx: &Sender<TrialOutcome>) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // a failed handshake only drops this candidate worker
+                if admit_worker(stream, shared, res_tx).is_ok() {
+                    shared.cv.notify_all(); // new capacity
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+/// Handshake a new connection: Hello in, Welcome out, reader spawned.
+fn admit_worker(
+    stream: TcpStream,
+    shared: &Arc<Shared>,
+    res_tx: &Sender<TrialOutcome>,
+) -> io::Result<()> {
+    stream.set_nodelay(true)?;
+    // bound the handshake; cleared below for the blocking reader loop
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let mut reader = stream.try_clone()?;
+    let (hello, hello_bytes) = read_frame(&mut reader)?;
+    let msg = WorkerMsg::from_json(&hello)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+    let WorkerMsg::Hello { protocol, capacity } = msg else {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "expected hello"));
+    };
+    if protocol != PROTOCOL_VERSION {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("protocol mismatch: worker {protocol}, leader {PROTOCOL_VERSION}"),
+        ));
+    }
+    if capacity == 0 {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "zero-capacity worker"));
+    }
+    stream.set_read_timeout(None)?;
+    let id = shared.next_conn_id.fetch_add(1, Ordering::SeqCst);
+    let welcome = LeaderMsg::Welcome {
+        worker_id: id as u64,
+        objective: shared.eval.objective.clone(),
+        sleep_scale: shared.eval.sleep_scale,
+        fail_prob: shared.eval.fail_prob,
+        seed: shared.eval.seed,
+    };
+    let mut writer = stream;
+    let welcome_bytes = write_frame(&mut writer, &welcome.to_json())?;
+    let conn = Arc::new(Conn {
+        id,
+        capacity,
+        alive: AtomicBool::new(true),
+        writer: Mutex::new(writer),
+        in_flight: Mutex::new(HashMap::new()),
+        stats: ConnStats::default(),
+    });
+    conn.stats.bytes_rx.store(hello_bytes, Ordering::Relaxed);
+    conn.stats.bytes_tx.store(welcome_bytes, Ordering::Relaxed);
+    shared.conns.lock().expect("conns poisoned").push(Arc::clone(&conn));
+    let handle = {
+        let shared = Arc::clone(shared);
+        let res_tx = res_tx.clone();
+        std::thread::Builder::new()
+            .name(format!("lazygp-conn-{id}"))
+            .spawn(move || reader_loop(&conn, &shared, &res_tx, reader))
+            .expect("spawn conn reader")
+    };
+    shared.reader_handles.lock().expect("handles poisoned").push(handle);
+    Ok(())
+}
+
+/// Per-connection reader: outcomes in, slot bookkeeping, disconnect
+/// rescue.
+fn reader_loop(
+    conn: &Arc<Conn>,
+    shared: &Arc<Shared>,
+    res_tx: &Sender<TrialOutcome>,
+    mut reader: TcpStream,
+) {
+    loop {
+        let (json, nbytes) = match read_frame(&mut reader) {
+            Ok(v) => v,
+            Err(_) => break, // EOF, reset, or garbage: treat as disconnect
+        };
+        conn.stats.bytes_rx.fetch_add(nbytes, Ordering::Relaxed);
+        let mut outcome = match WorkerMsg::from_json(&json) {
+            Ok(WorkerMsg::Outcome(o)) => o,
+            _ => break, // protocol violation
+        };
+        let entry =
+            conn.in_flight.lock().expect("in_flight poisoned").remove(&outcome.trial.id);
+        if let Some((_, dispatched_at)) = entry {
+            conn.stats.completed.fetch_add(1, Ordering::Relaxed);
+            conn.stats
+                .rtt_ns
+                .fetch_add(dispatched_at.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            // remap to the connection id so leader-side telemetry is
+            // per-link, not per-remote-thread
+            outcome.worker_id = conn.id;
+            if res_tx.send(outcome).is_err() {
+                break; // leader dropped the receiver
+            }
+            shared.cv.notify_all(); // slot freed
+        }
+        // unknown trial id: stale after a racing disconnect — drop it
+    }
+    disconnect(conn, shared);
+}
+
+/// Mark the connection dead and rescue its in-flight trials. The trial ids
+/// are preserved, so leader-side maps (and async fantasies) stay valid.
+fn disconnect(conn: &Conn, shared: &Shared) {
+    conn.alive.store(false, Ordering::SeqCst);
+    let orphans: Vec<Trial> = conn
+        .in_flight
+        .lock()
+        .expect("in_flight poisoned")
+        .drain()
+        .map(|(_, (t, _))| t)
+        .collect();
+    if !orphans.is_empty() && !shared.stop.load(Ordering::SeqCst) {
+        conn.stats.requeued.fetch_add(orphans.len() as u64, Ordering::Relaxed);
+        shared.requeued.fetch_add(orphans.len() as u64, Ordering::Relaxed);
+        let mut q = shared.queue.lock().expect("queue poisoned");
+        for t in orphans {
+            q.push_front(t);
+        }
+    }
+    shared.cv.notify_all();
+}
+
+/// Move queued trials onto free worker slots; park on the condvar
+/// otherwise.
+fn dispatch_loop(shared: &Arc<Shared>) {
+    let mut guard = shared.queue.lock().expect("queue poisoned");
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let target = if guard.is_empty() { None } else { pick_target(shared) };
+        match target {
+            Some(conn) => {
+                let trial = guard.pop_front().expect("queue emptied under lock");
+                drop(guard); // network IO outside the queue lock
+                send_trial(shared, &conn, trial);
+                guard = shared.queue.lock().expect("queue poisoned");
+            }
+            None => {
+                // timeout bounds stop-flag latency; spurious wakes are fine
+                let (g, _timed_out) = shared
+                    .cv
+                    .wait_timeout(guard, Duration::from_millis(100))
+                    .expect("queue poisoned");
+                guard = g;
+            }
+        }
+    }
+}
+
+/// Least-loaded live connection with a free slot.
+fn pick_target(shared: &Shared) -> Option<Arc<Conn>> {
+    let conns = shared.conns.lock().expect("conns poisoned");
+    conns
+        .iter()
+        .filter(|c| c.alive.load(Ordering::SeqCst))
+        .map(|c| (c.in_flight.lock().expect("in_flight poisoned").len(), c))
+        .filter(|(load, c)| *load < c.capacity)
+        .min_by_key(|(load, _)| *load)
+        .map(|(_, c)| Arc::clone(c))
+}
+
+/// Frame a trial out to a worker, registering it in-flight first so the
+/// disconnect path can rescue it whatever happens mid-write.
+fn send_trial(shared: &Shared, conn: &Arc<Conn>, trial: Trial) {
+    {
+        let mut in_flight = conn.in_flight.lock().expect("in_flight poisoned");
+        // the alive check happens under the in_flight lock: the disconnect
+        // drain clears `alive` before taking this lock, so either we see
+        // the flag and requeue, or our insert lands before the drain runs
+        if !conn.alive.load(Ordering::SeqCst) {
+            drop(in_flight);
+            shared.queue.lock().expect("queue poisoned").push_front(trial);
+            shared.cv.notify_all();
+            return;
+        }
+        in_flight.insert(trial.id, (trial.clone(), Instant::now()));
+    }
+    conn.stats.dispatched.fetch_add(1, Ordering::Relaxed);
+    let msg = LeaderMsg::Dispatch(trial.clone()).to_json();
+    let written = {
+        let mut w = conn.writer.lock().expect("writer poisoned");
+        write_frame(&mut *w, &msg)
+    };
+    match written {
+        Ok(n) => {
+            conn.stats.bytes_tx.fetch_add(n, Ordering::Relaxed);
+        }
+        Err(_) => {
+            // the reader will also notice the dead socket; removing the
+            // entry here makes the rescue idempotent (whoever removes it
+            // first requeues it, exactly once)
+            conn.alive.store(false, Ordering::SeqCst);
+            let removed =
+                conn.in_flight.lock().expect("in_flight poisoned").remove(&trial.id);
+            if removed.is_some() && !shared.stop.load(Ordering::SeqCst) {
+                conn.stats.requeued.fetch_add(1, Ordering::Relaxed);
+                shared.requeued.fetch_add(1, Ordering::Relaxed);
+                shared.queue.lock().expect("queue poisoned").push_front(trial);
+                shared.cv.notify_all();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side: the `lazygp worker` daemon
+// ---------------------------------------------------------------------------
+
+/// What a finished worker daemon reports.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerSummary {
+    /// id the leader assigned in the handshake
+    pub worker_id: u64,
+    /// outcomes successfully reported back
+    pub evaluated: u64,
+}
+
+/// Connect to a leader and evaluate trials until it says stop (or the
+/// connection drops). `threads` is the advertised capacity: that many
+/// trials run concurrently on an in-process [`WorkerPool`].
+///
+/// The objective and simulation knobs come from the leader's Welcome, so
+/// callers only need an address — this is what `lazygp worker --connect`
+/// runs, and what tests/benches spawn in-process over loopback.
+pub fn run_worker(addr: &str, threads: usize) -> crate::Result<WorkerSummary> {
+    let threads = threads.max(1);
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = stream;
+    write_frame(
+        &mut writer,
+        &WorkerMsg::Hello { protocol: PROTOCOL_VERSION, capacity: threads }.to_json(),
+    )?;
+    let (welcome, _) = read_frame(&mut reader)?;
+    let LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed } =
+        LeaderMsg::from_json(&welcome)?
+    else {
+        crate::bail!("leader did not start with a welcome message");
+    };
+    let obj = crate::objectives::by_name(&objective)
+        .ok_or_else(|| crate::err!("leader requested unknown objective `{objective}`"))?;
+    let pool = WorkerPool::spawn(
+        Arc::from(obj),
+        WorkerConfig {
+            workers: threads,
+            sleep_scale,
+            fail_prob,
+            queue_cap: (threads * 2).max(8),
+            // distinct stream per connection; threads substream via wid
+            seed: seed ^ worker_id.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        },
+    );
+
+    // socket reader feeds trials through a channel; `None` means stop
+    let (trial_tx, trial_rx) = channel::<Option<Trial>>();
+    let reader_handle = std::thread::spawn(move || loop {
+        let msg = match read_frame(&mut reader) {
+            Ok((json, _)) => LeaderMsg::from_json(&json),
+            Err(_) => {
+                let _ = trial_tx.send(None);
+                return;
+            }
+        };
+        match msg {
+            Ok(LeaderMsg::Dispatch(t)) => {
+                if trial_tx.send(Some(t)).is_err() {
+                    return;
+                }
+            }
+            Ok(LeaderMsg::Shutdown) | Ok(LeaderMsg::Welcome { .. }) | Err(_) => {
+                let _ = trial_tx.send(None);
+                return;
+            }
+        }
+    });
+
+    // pump: submissions in, outcomes out, until told to stop. A leader
+    // Shutdown (or a dead socket) ends the loop immediately — in-flight
+    // trials are abandoned, and `pool.shutdown()` below interrupts their
+    // simulated-cost sleeps so the daemon exits promptly.
+    let mut evaluated: u64 = 0;
+    'pump: loop {
+        loop {
+            match trial_rx.try_recv() {
+                Ok(Some(t)) => {
+                    // the leader never over-fills a slot, so this submit
+                    // cannot block longer than the queue bound
+                    pool.submit(t);
+                }
+                Ok(None) | Err(TryRecvError::Disconnected) => break 'pump,
+                Err(TryRecvError::Empty) => break,
+            }
+        }
+        if let Some(outcome) = pool.recv_timeout(Duration::from_millis(20)) {
+            if write_frame(&mut writer, &WorkerMsg::Outcome(outcome).to_json()).is_err() {
+                break 'pump; // leader gone: nothing left to report to
+            }
+            evaluated += 1;
+        }
+    }
+    pool.shutdown(); // interrupts any remaining simulated-cost sleeps
+    let _ = writer.shutdown(NetShutdown::Both);
+    let _ = reader_handle.join();
+    Ok(WorkerSummary { worker_id, evaluated })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::TrialError;
+
+    #[test]
+    fn frames_roundtrip_over_a_buffer() {
+        let msg = LeaderMsg::Dispatch(Trial {
+            id: 9,
+            round: 2,
+            x: vec![-0.0, 1.0 / 3.0, 5e-324],
+            attempt: 1,
+        })
+        .to_json();
+        let mut buf = Vec::new();
+        let wrote = write_frame(&mut buf, &msg).unwrap();
+        assert_eq!(wrote as usize, buf.len());
+        let mut cursor = io::Cursor::new(buf);
+        let (back, read) = read_frame(&mut cursor).unwrap();
+        assert_eq!(read, wrote);
+        let LeaderMsg::Dispatch(t) = LeaderMsg::from_json(&back).unwrap() else {
+            panic!("wrong message type");
+        };
+        assert_eq!(t.id, 9);
+        assert_eq!(t.x[0].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(t.x[2].to_bits(), 5e-324f64.to_bits());
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_error() {
+        let mut short = io::Cursor::new(vec![0u8, 0, 0, 10, b'{']);
+        assert!(read_frame(&mut short).is_err());
+        let mut huge = io::Cursor::new(vec![0xffu8, 0xff, 0xff, 0xff]);
+        assert!(read_frame(&mut huge).is_err());
+        let mut not_json = Vec::new();
+        write_frame(&mut not_json, &Json::Str("plain string, not an object".into())).unwrap();
+        let mut cursor = io::Cursor::new(not_json);
+        let (json, _) = read_frame(&mut cursor).unwrap();
+        assert!(WorkerMsg::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn protocol_messages_roundtrip() {
+        let hello = WorkerMsg::Hello { protocol: PROTOCOL_VERSION, capacity: 3 };
+        let WorkerMsg::Hello { protocol, capacity } =
+            WorkerMsg::from_json(&Json::parse(&hello.to_json().to_string()).unwrap()).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        assert_eq!((protocol, capacity), (PROTOCOL_VERSION, 3));
+
+        let welcome = LeaderMsg::Welcome {
+            worker_id: 4,
+            objective: "sphere5".into(),
+            sleep_scale: 1e-5,
+            fail_prob: 0.25,
+            seed: u64::MAX, // full range must survive the string encoding
+        };
+        let LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed } =
+            LeaderMsg::from_json(&Json::parse(&welcome.to_json().to_string()).unwrap()).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        assert_eq!(worker_id, 4);
+        assert_eq!(objective, "sphere5");
+        assert_eq!(sleep_scale, 1e-5);
+        assert_eq!(fail_prob, 0.25);
+        assert_eq!(seed, u64::MAX);
+
+        let shutdown =
+            LeaderMsg::from_json(&Json::parse(&LeaderMsg::Shutdown.to_json().to_string()).unwrap())
+                .unwrap();
+        assert!(matches!(shutdown, LeaderMsg::Shutdown));
+
+        let outcome = WorkerMsg::Outcome(TrialOutcome {
+            trial: Trial { id: 1, round: 0, x: vec![0.5], attempt: 0 },
+            worker_id: 0,
+            result: Err(TrialError::SimulatedCrash),
+            worker_seconds: 0.001,
+            sim_cost_s: 3.5,
+        });
+        let WorkerMsg::Outcome(o) =
+            WorkerMsg::from_json(&Json::parse(&outcome.to_json().to_string()).unwrap()).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        assert!(!o.is_ok());
+        assert_eq!(o.sim_cost_s, 3.5);
+    }
+
+    #[test]
+    fn transport_stats_render_links() {
+        let stats = TransportStats {
+            backend: "tcp",
+            links: vec![TransportCounter {
+                worker: 0,
+                capacity: 1,
+                dispatched: 3,
+                completed: 3,
+                requeued: 1,
+                bytes_tx: 100,
+                bytes_rx: 200,
+                rtt_mean_s: 0.001,
+            }],
+            requeued: 1,
+        };
+        let s = stats.render_links();
+        assert!(s.contains("link   0"), "{s}");
+        assert!(s.contains("requeued   1"), "{s}");
+        assert!(s.ends_with("requeued after disconnects: 1"), "{s}");
+    }
+
+    #[test]
+    fn hello_with_wrong_protocol_is_rejected_by_pool() {
+        let pool = SocketPool::listen(
+            "127.0.0.1:0",
+            RemoteEvalConfig {
+                objective: "sphere5".into(),
+                sleep_scale: 0.0,
+                fail_prob: 0.0,
+                seed: 0,
+            },
+        )
+        .unwrap();
+        let addr = pool.local_addr();
+        let mut bad = TcpStream::connect(addr).unwrap();
+        write_frame(&mut bad, &WorkerMsg::Hello { protocol: 999, capacity: 1 }.to_json())
+            .unwrap();
+        // the leader drops the connection without welcoming it
+        std::thread::sleep(Duration::from_millis(200));
+        assert_eq!(pool.capacity_now(), 0);
+        drop(bad);
+        Box::new(pool).shutdown();
+    }
+}

@@ -1,15 +1,71 @@
 //! The worker pool: OS threads evaluating trials from a bounded queue.
+//!
+//! This is the in-process backend of the
+//! [`Transport`](super::transport::Transport) abstraction (the remote TCP
+//! workers of [`super::transport`] reuse the same pool on their side of the
+//! wire). Simulated training time is slept through a [`ShutdownToken`] so
+//! pool teardown — and `lazygp worker` daemons — exit promptly instead of
+//! sleeping out the remaining simulated seconds.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::messages::{Trial, TrialError, TrialOutcome};
+use crate::metrics::TransportCounter;
 use crate::objectives::Objective;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
+
+/// Cooperative shutdown signal shared by a pool and its workers.
+///
+/// Workers sleeping out simulated training time block on a condvar instead
+/// of `thread::sleep`, so [`trigger`](ShutdownToken::trigger) wakes them
+/// immediately — teardown latency is bounded by one trial *evaluation*
+/// (microseconds), not by the remaining simulated cost (seconds).
+#[derive(Clone, Default)]
+pub struct ShutdownToken {
+    inner: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl ShutdownToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Signal shutdown and wake every sleeper.
+    pub fn trigger(&self) {
+        let (lock, cv) = &*self.inner;
+        *lock.lock().expect("shutdown token poisoned") = true;
+        cv.notify_all();
+    }
+
+    pub fn is_triggered(&self) -> bool {
+        *self.inner.0.lock().expect("shutdown token poisoned")
+    }
+
+    /// Sleep up to `dur`, returning early when triggered. Returns `true`
+    /// when the full duration elapsed, `false` when interrupted.
+    pub fn sleep(&self, dur: Duration) -> bool {
+        let (lock, cv) = &*self.inner;
+        let deadline = Instant::now() + dur;
+        let mut triggered = lock.lock().expect("shutdown token poisoned");
+        while !*triggered {
+            let now = Instant::now();
+            let Some(remaining) = deadline.checked_duration_since(now).filter(|d| !d.is_zero())
+            else {
+                return true;
+            };
+            let (guard, _timeout) =
+                cv.wait_timeout(triggered, remaining).expect("shutdown token poisoned");
+            triggered = guard;
+        }
+        false
+    }
+}
 
 /// Worker-pool configuration.
 #[derive(Debug, Clone)]
@@ -33,12 +89,23 @@ impl Default for WorkerConfig {
     }
 }
 
+/// Per-worker completion counters (transport telemetry).
+struct LinkCounters {
+    completed: AtomicU64,
+    rtt_ns: AtomicU64,
+}
+
 /// A pool of worker threads sharing a trial queue.
 pub struct WorkerPool {
     tx: Option<SyncSender<Trial>>,
     results: Receiver<TrialOutcome>,
     handles: Vec<JoinHandle<()>>,
     dispatched: AtomicU64,
+    workers: usize,
+    shutdown: ShutdownToken,
+    links: Vec<LinkCounters>,
+    /// real submit time per in-flight trial id, for round-trip latency
+    submit_times: Mutex<HashMap<u64, Instant>>,
 }
 
 impl WorkerPool {
@@ -49,25 +116,43 @@ impl WorkerPool {
         let (tx, rx) = sync_channel::<Trial>(config.queue_cap);
         let rx = Arc::new(Mutex::new(rx));
         let (res_tx, res_rx) = std::sync::mpsc::channel::<TrialOutcome>();
+        let shutdown = ShutdownToken::new();
         let mut handles = Vec::with_capacity(config.workers);
         for wid in 0..config.workers {
             let rx = Arc::clone(&rx);
             let res_tx: Sender<TrialOutcome> = res_tx.clone();
             let obj = Arc::clone(&objective);
             let cfg = config.clone();
+            let token = shutdown.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("lazygp-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, obj, rx, res_tx, cfg))
+                    .spawn(move || worker_loop(wid, obj, rx, res_tx, cfg, token))
                     .expect("spawn worker"),
             );
         }
-        Self { tx: Some(tx), results: res_rx, handles, dispatched: AtomicU64::new(0) }
+        let links = (0..config.workers)
+            .map(|_| LinkCounters { completed: AtomicU64::new(0), rtt_ns: AtomicU64::new(0) })
+            .collect();
+        Self {
+            tx: Some(tx),
+            results: res_rx,
+            handles,
+            dispatched: AtomicU64::new(0),
+            workers: config.workers,
+            shutdown,
+            links,
+            submit_times: Mutex::new(HashMap::new()),
+        }
     }
 
     /// Enqueue a trial (blocks when the queue is full — backpressure).
     pub fn submit(&self, trial: Trial) {
         self.dispatched.fetch_add(1, Ordering::Relaxed);
+        self.submit_times
+            .lock()
+            .expect("submit_times poisoned")
+            .insert(trial.id, Instant::now());
         self.tx
             .as_ref()
             .expect("pool already shut down")
@@ -77,12 +162,27 @@ impl WorkerPool {
 
     /// Blocking receive of the next outcome.
     pub fn recv(&self) -> TrialOutcome {
-        self.results.recv().expect("all workers exited")
+        let o = self.results.recv().expect("all workers exited");
+        self.note_outcome(&o);
+        o
     }
 
     /// Receive with a timeout (used by tests to assert liveness).
     pub fn recv_timeout(&self, timeout: Duration) -> Option<TrialOutcome> {
-        self.results.recv_timeout(timeout).ok()
+        let o = self.results.recv_timeout(timeout).ok()?;
+        self.note_outcome(&o);
+        Some(o)
+    }
+
+    /// Attribute a completed outcome to its worker's counters.
+    fn note_outcome(&self, o: &TrialOutcome) {
+        let started = self.submit_times.lock().expect("submit_times poisoned").remove(&o.trial.id);
+        if let Some(link) = self.links.get(o.worker_id) {
+            link.completed.fetch_add(1, Ordering::Relaxed);
+            if let Some(t0) = started {
+                link.rtt_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+        }
     }
 
     /// Trials submitted so far.
@@ -90,8 +190,46 @@ impl WorkerPool {
         self.dispatched.load(Ordering::Relaxed)
     }
 
-    /// Graceful shutdown: close the queue and join every worker.
+    /// Worker threads in the pool (= concurrent trial slots).
+    pub fn worker_count(&self) -> usize {
+        self.workers
+    }
+
+    /// Per-worker transport counters. The shared queue means a trial's
+    /// worker is only known at completion, so `dispatched` is attributed
+    /// there too (`dispatched == completed` for this backend); queue-level
+    /// totals live in [`dispatched`](WorkerPool::dispatched). Bytes are 0 —
+    /// nothing crosses a wire in-process.
+    pub fn link_counters(&self) -> Vec<TransportCounter> {
+        self.links
+            .iter()
+            .enumerate()
+            .map(|(wid, l)| {
+                let completed = l.completed.load(Ordering::Relaxed);
+                let rtt_ns = l.rtt_ns.load(Ordering::Relaxed);
+                TransportCounter {
+                    worker: wid,
+                    capacity: 1,
+                    dispatched: completed,
+                    completed,
+                    requeued: 0,
+                    bytes_tx: 0,
+                    bytes_rx: 0,
+                    rtt_mean_s: if completed > 0 {
+                        rtt_ns as f64 / completed as f64 / 1e9
+                    } else {
+                        0.0
+                    },
+                }
+            })
+            .collect()
+    }
+
+    /// Graceful shutdown: interrupt simulated-cost sleeps, close the queue
+    /// and join every worker. Returns once all threads exited — promptly,
+    /// because in-progress sleeps are woken by the [`ShutdownToken`].
     pub fn shutdown(mut self) {
+        self.shutdown.trigger();
         self.tx.take(); // close channel ⇒ workers drain and exit
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -101,6 +239,7 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
+        self.shutdown.trigger();
         self.tx.take();
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -114,6 +253,7 @@ fn worker_loop(
     rx: Arc<Mutex<Receiver<Trial>>>,
     res_tx: Sender<TrialOutcome>,
     cfg: WorkerConfig,
+    token: ShutdownToken,
 ) {
     let mut rng = Pcg64::with_stream(cfg.seed, wid as u64 + 1);
     loop {
@@ -122,38 +262,48 @@ fn worker_loop(
             Ok(t) => t,
             Err(_) => return, // leader closed the queue
         };
-        let sw = Stopwatch::new();
-        // failure injection: the crash decision is drawn first (preserving
-        // the deterministic stream for crash-free runs), but the objective
-        // is evaluated regardless so the attempt's *simulated* cost is known
-        // — a crashed training run still burned its slot until the crash
-        // (modelled as the full run: results are lost at the end)
-        let crashed = cfg.fail_prob > 0.0 && rng.next_f64() < cfg.fail_prob;
-        let eval = objective.eval(&trial.x, &mut rng);
-        let sim_cost_s = eval.sim_cost_s;
-        if cfg.sleep_scale > 0.0 && sim_cost_s > 0.0 {
-            std::thread::sleep(Duration::from_secs_f64(
-                (sim_cost_s * cfg.sleep_scale).min(5.0),
-            ));
+        // teardown in progress: the leader no longer wants results
+        if token.is_triggered() {
+            return;
         }
-        let result = if crashed {
-            Err(TrialError::SimulatedCrash)
-        } else if eval.value.is_finite() {
-            Ok(eval)
-        } else {
-            Err(TrialError::NonFinite(eval.value))
-        };
-        let outcome = TrialOutcome {
-            trial,
-            worker_id: wid,
-            result,
-            worker_seconds: sw.elapsed_s(),
-            sim_cost_s,
-        };
+        let outcome = evaluate_trial(wid, objective.as_ref(), &mut rng, trial, &cfg, &token);
         if res_tx.send(outcome).is_err() {
             return; // leader gone
         }
     }
+}
+
+/// Evaluate one trial: failure injection, objective call, scaled
+/// (interruptible) sleep standing in for training time. Shared by the
+/// in-process pool and the remote `lazygp worker` daemon.
+pub(super) fn evaluate_trial(
+    wid: usize,
+    objective: &dyn Objective,
+    rng: &mut Pcg64,
+    trial: Trial,
+    cfg: &WorkerConfig,
+    token: &ShutdownToken,
+) -> TrialOutcome {
+    let sw = Stopwatch::new();
+    // failure injection: the crash decision is drawn first (preserving
+    // the deterministic stream for crash-free runs), but the objective
+    // is evaluated regardless so the attempt's *simulated* cost is known
+    // — a crashed training run still burned its slot until the crash
+    // (modelled as the full run: results are lost at the end)
+    let crashed = cfg.fail_prob > 0.0 && rng.next_f64() < cfg.fail_prob;
+    let eval = objective.eval(&trial.x, rng);
+    let sim_cost_s = eval.sim_cost_s;
+    if cfg.sleep_scale > 0.0 && sim_cost_s > 0.0 {
+        token.sleep(Duration::from_secs_f64((sim_cost_s * cfg.sleep_scale).min(5.0)));
+    }
+    let result = if crashed {
+        Err(TrialError::SimulatedCrash)
+    } else if eval.value.is_finite() {
+        Ok(eval)
+    } else {
+        Err(TrialError::NonFinite(eval.value))
+    };
+    TrialOutcome { trial, worker_id: wid, result, worker_seconds: sw.elapsed_s(), sim_cost_s }
 }
 
 #[cfg(test)]
@@ -264,5 +414,69 @@ mod tests {
             o.result.unwrap().value
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn shutdown_interrupts_simulated_sleep() {
+        use crate::objectives::trainer::ResNetCifarSim;
+        // ~190 s simulated at scale 1.0 hits the 5 s sleep cap — without the
+        // interruptible sleep, teardown would block those full 5 s
+        let obj: Arc<dyn Objective> = Arc::new(ResNetCifarSim::new());
+        let p = WorkerPool::spawn(
+            obj,
+            WorkerConfig { workers: 1, sleep_scale: 1.0, seed: 5, ..Default::default() },
+        );
+        p.submit(Trial { id: 0, round: 0, x: vec![0.05, 5e-4, 0.9], attempt: 0 });
+        // let the worker pick the trial up and enter its sleep
+        std::thread::sleep(Duration::from_millis(100));
+        let sw = crate::util::timer::Stopwatch::new();
+        p.shutdown();
+        let teardown_s = sw.elapsed_s();
+        assert!(
+            teardown_s < 1.0,
+            "teardown took {teardown_s:.3}s — simulated-cost sleep was not interrupted"
+        );
+    }
+
+    #[test]
+    fn shutdown_token_sleep_semantics() {
+        let t = ShutdownToken::new();
+        // full sleep when not triggered
+        let sw = crate::util::timer::Stopwatch::new();
+        assert!(t.sleep(Duration::from_millis(30)));
+        assert!(sw.elapsed_s() >= 0.025);
+        // triggered from another thread: wakes early
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            t2.trigger();
+        });
+        let sw = crate::util::timer::Stopwatch::new();
+        assert!(!t.sleep(Duration::from_secs(10)), "must be interrupted");
+        assert!(sw.elapsed_s() < 5.0);
+        h.join().unwrap();
+        // once triggered, sleeps return immediately
+        assert!(!t.sleep(Duration::from_secs(10)));
+        assert!(t.is_triggered());
+    }
+
+    #[test]
+    fn link_counters_attribute_completions() {
+        let p = pool(2, 0.0);
+        for i in 0..10 {
+            p.submit(trial(i));
+        }
+        for _ in 0..10 {
+            let _ = p.recv();
+        }
+        let links = p.link_counters();
+        assert_eq!(links.len(), 2);
+        assert_eq!(links.iter().map(|l| l.completed).sum::<u64>(), 10);
+        for l in &links {
+            assert_eq!(l.dispatched, l.completed);
+            assert_eq!(l.bytes_tx + l.bytes_rx, 0);
+            assert!(l.rtt_mean_s >= 0.0);
+        }
+        p.shutdown();
     }
 }

@@ -100,6 +100,23 @@ struct Checkpoint {
 }
 
 /// The lazy GP. `observe` is `O(n²)` except at lag boundaries.
+///
+/// # Example: fit and predict
+///
+/// ```
+/// use lazygp::gp::{LazyGp, Surrogate};
+///
+/// let mut gp = LazyGp::paper_default();
+/// for i in 0..9 {
+///     let x = i as f64 / 8.0;
+///     gp.observe(&[x], (2.0 * x).sin()); // every observe is one O(n²) extension
+/// }
+/// let (mean, var) = gp.predict(&[0.3]);
+/// assert!((mean - (2.0f64 * 0.3).sin()).abs() < 0.1, "mean {mean}");
+/// assert!(var >= 0.0);
+/// // with frozen hyper-parameters, nothing was ever re-factorized
+/// assert_eq!(gp.full_refactorizations(), 0);
+/// ```
 pub struct LazyGp {
     config: LazyGpConfig,
     kernel: Kernel,

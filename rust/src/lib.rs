@@ -25,12 +25,20 @@
 //! * [`bo`] — sequential/batch Bayesian-optimization drivers.
 //! * [`objectives`] — Levy functions (paper Eq. 7/19), a synthetic suite and
 //!   the simulated LeNet/MNIST + ResNet32/CIFAR10 trainers (§4.2–4.4).
-//! * [`coordinator`] — leader/worker parallel runtime (§3.4, Table 4).
+//! * [`coordinator`] — leader/worker parallel runtime (§3.4, Table 4):
+//!   synchronous rounds ([`coordinator::ParallelBo`]) and the asynchronous
+//!   fantasy-augmented engine ([`coordinator::AsyncBo`]), both dispatching
+//!   through the [`coordinator::Transport`] seam — in-process threads or
+//!   remote TCP workers (`lazygp worker --connect`).
 //! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas scoring
 //!   artifacts (layers 1+2), with a native fallback.
 //! * [`config`], [`metrics`], [`util`] — experiment configs (hand-rolled
-//!   JSON), traces/CSV, and the offline substrates (RNG, CLI, bench,
-//!   property testing).
+//!   JSON, doubling as the TCP wire format), traces/CSV, and the offline
+//!   substrates (RNG, CLI, bench, property testing).
+//!
+//! Start with the `README.md` for the quickstart and bench matrix, and
+//! `docs/ARCHITECTURE.md` for the paper-section → module map and the
+//! async-leader ↔ transport ↔ worker dataflow.
 //!
 //! ## Quickstart
 //!

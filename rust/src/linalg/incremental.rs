@@ -191,6 +191,19 @@ impl GrowingCholesky {
     /// makes fantasy observations cheap for the async coordinator: dense
     /// square layouts would have to re-copy or re-factorize.
     ///
+    /// ```
+    /// use lazygp::linalg::GrowingCholesky;
+    ///
+    /// let mut f = GrowingCholesky::new();
+    /// f.extend(&[], 4.0);       // 1×1 factor: L = [2]
+    /// f.extend(&[2.0], 5.0);    // bordered to 2×2
+    /// let before = f.to_dense();
+    /// f.extend(&[1.0, 1.0], 6.0); // speculative third row…
+    /// f.truncate(2);              // …rolled back bitwise in O(1)
+    /// assert_eq!(f.dim(), 2);
+    /// assert_eq!(f.to_dense().as_slice(), before.as_slice());
+    /// ```
+    ///
     /// Telemetry counters are *not* rewound (extensions that happened,
     /// happened); callers that snapshot-and-restore stats around a
     /// speculation window can pair this with [`carry_stats`].

@@ -4,16 +4,23 @@
 //! lazygp run     --preset table1 | --objective levy5 [--surrogate lazy|exact]
 //! lazygp parallel --objective resnet_cifar10 --workers 20 --batch 20
 //!                 [--mode sync|async] [--pending cl-min|posterior-mean|kriging-believer]
+//!                 [--transport thread|tcp] [--listen 127.0.0.1:7077]
+//! lazygp worker  --connect 127.0.0.1:7077 [--threads 4]   # remote evaluator
 //! lazygp list
 //! lazygp info    # PJRT platform + artifact buckets
 //! lazygp score   # XLA-vs-native scoring parity + throughput check
 //! ```
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign, PendingStrategy, SurrogateChoice};
 use lazygp::config::experiment::{ExperimentConfig, Preset};
-use lazygp::coordinator::{AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo};
+use lazygp::coordinator::transport::run_worker;
+use lazygp::coordinator::{
+    AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo, RemoteEvalConfig, SocketPool,
+    Transport,
+};
 use lazygp::gp::Surrogate;
 use lazygp::metrics::Trace;
 use lazygp::objectives;
@@ -46,12 +53,19 @@ fn app() -> App {
                     "async fantasy strategy: cl-min | posterior-mean | kriging-believer",
                     Some("cl-min"),
                 )
-                .opt("workers", "worker threads", Some("20"))
+                .opt("workers", "worker threads (thread) / slots to wait for (tcp)", Some("20"))
                 .opt("batch", "suggestions per round t (sync mode only)", Some("20"))
                 .opt("evals", "total objective evaluations", Some("300"))
                 .opt("sleep-scale", "real s slept per simulated s", Some("0"))
                 .opt("fail-prob", "failure injection probability", Some("0"))
+                .opt("transport", "thread | tcp (remote `lazygp worker`s)", Some("thread"))
+                .opt("listen", "tcp bind address (port 0 = ephemeral)", Some("127.0.0.1:7077"))
                 .opt("out", "write per-iteration trace CSV here", None),
+        )
+        .command(
+            CommandSpec::new("worker", "evaluate trials for a tcp leader (daemon mode)")
+                .opt("connect", "leader address, e.g. 127.0.0.1:7077", None)
+                .opt("threads", "concurrent evaluation threads", Some("1")),
         )
         .command(CommandSpec::new("list", "list objectives and presets"))
         .command(CommandSpec::new("info", "PJRT platform and artifact buckets"))
@@ -75,6 +89,7 @@ fn main() {
     let result = match parsed.command.as_str() {
         "run" => cmd_run(&parsed),
         "parallel" => cmd_parallel(&parsed),
+        "worker" => cmd_worker(&parsed),
         "list" => cmd_list(),
         "info" => cmd_info(),
         "score" => cmd_score(&parsed),
@@ -153,6 +168,38 @@ fn cmd_run(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     Ok(())
 }
 
+/// Build the `--transport tcp` backend: bind, announce, wait for workers.
+fn tcp_transport(
+    p: &lazygp::util::cli::Parsed,
+    objective: &str,
+    min_slots: usize,
+    seed: u64,
+) -> lazygp::Result<Box<dyn Transport>> {
+    let listen = p.str_or("listen", "127.0.0.1:7077");
+    let pool = SocketPool::listen(
+        &listen,
+        RemoteEvalConfig {
+            objective: objective.to_string(),
+            sleep_scale: p.f64("sleep-scale")?,
+            fail_prob: p.f64("fail-prob")?,
+            seed,
+        },
+    )?;
+    let addr = pool.local_addr();
+    println!(
+        "tcp transport: listening on {addr} — start evaluators with `lazygp worker --connect {addr}`"
+    );
+    let cap = pool.wait_for_capacity(min_slots, Duration::from_secs(600))?;
+    println!("tcp transport: {cap} worker slot(s) connected");
+    Ok(Box::new(pool))
+}
+
+fn print_transport_stats(stats: &lazygp::coordinator::TransportStats) {
+    if stats.backend == "tcp" {
+        println!("{}", stats.render_links());
+    }
+}
+
 fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     let name = p.str_or("objective", "resnet_cifar10");
     let obj = objectives::by_name(&name)
@@ -161,6 +208,10 @@ fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     let seed = p.u64("seed")?;
     let evals = p.usize("evals")?;
     let workers = p.usize("workers")?;
+    let transport_kind = p.str_or("transport", "thread");
+    if !matches!(transport_kind.as_str(), "thread" | "tcp") {
+        lazygp::bail!("bad --transport `{transport_kind}` (thread | tcp)");
+    }
     let bo = BoConfig::lazy().with_seed(seed).with_init(InitDesign::Random(1));
     match p.str_or("mode", "sync").as_str() {
         "sync" => {
@@ -173,10 +224,15 @@ fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
                 seed,
             };
             println!(
-                "## lazygp parallel (sync) — objective={name} workers={} t={} evals={evals}",
+                "## lazygp parallel (sync, {transport_kind}) — objective={name} workers={} t={} evals={evals}",
                 coord.workers, coord.batch_size
             );
-            let mut pbo = ParallelBo::new(bo, obj, coord);
+            let mut pbo = if transport_kind == "tcp" {
+                let t = tcp_transport(p, &name, workers, seed)?;
+                ParallelBo::with_transport(bo, obj, t, coord)
+            } else {
+                ParallelBo::new(bo, obj, coord)
+            };
             let best = pbo.run_until_evals(evals);
             println!(
                 "best {:.6} after {} evaluations in {} rounds | virtual wall {} | sync total {}",
@@ -187,6 +243,7 @@ fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
                 fmt_duration_s(pbo.rounds().iter().map(|r| r.sync_seconds).sum()),
             );
             print_milestones(pbo.driver());
+            print_transport_stats(&pbo.transport_stats());
             if let Some(out) = p.str("out") {
                 Trace::from_history(&name, pbo.driver().history()).write_csv(out)?;
                 println!("trace written to {out}");
@@ -206,10 +263,15 @@ fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
                 seed,
             };
             println!(
-                "## lazygp parallel (async, {}) — objective={name} workers={workers} evals={evals}",
+                "## lazygp parallel (async, {}, {transport_kind}) — objective={name} workers={workers} evals={evals}",
                 pending.name()
             );
-            let mut abo = AsyncBo::new(bo, obj, coord);
+            let mut abo = if transport_kind == "tcp" {
+                let t = tcp_transport(p, &name, workers, seed)?;
+                AsyncBo::with_transport(bo, obj, t, coord)
+            } else {
+                AsyncBo::new(bo, obj, coord)
+            };
             let best = abo.run_until_evals(evals);
             let stats = abo.stats();
             println!(
@@ -224,6 +286,7 @@ fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
                 stats.dropped,
             );
             print_milestones(abo.driver());
+            print_transport_stats(&abo.transport_stats());
             if let Some(out) = p.str("out") {
                 Trace::from_history(&name, abo.driver().history()).write_csv(out)?;
                 println!("trace written to {out}");
@@ -232,6 +295,20 @@ fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
         }
         other => lazygp::bail!("bad --mode `{other}` (sync | async)"),
     }
+    Ok(())
+}
+
+fn cmd_worker(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
+    let addr = p
+        .str("connect")
+        .ok_or_else(|| lazygp::err!("`lazygp worker` needs --connect <host:port>"))?;
+    let threads = p.usize("threads")?;
+    println!("## lazygp worker — connecting to {addr} ({threads} thread(s))");
+    let summary = run_worker(addr, threads)?;
+    println!(
+        "worker {} done: {} trial(s) evaluated and reported",
+        summary.worker_id, summary.evaluated
+    );
     Ok(())
 }
 

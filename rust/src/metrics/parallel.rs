@@ -7,6 +7,33 @@
 
 use super::csv::CsvWriter;
 
+/// Per-worker counters of a [`Transport`](crate::coordinator::Transport)
+/// backend: how much work each link carried and what it cost on the wire.
+///
+/// The thread backend attributes `dispatched` at completion (its shared
+/// queue doesn't pre-assign trials to workers) and reports zero bytes; the
+/// TCP backend counts framed bytes in both directions and `requeued` — the
+/// in-flight trials rescued from a disconnected worker.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TransportCounter {
+    /// worker/link id (thread index, or TCP connection id)
+    pub worker: usize,
+    /// concurrent trial slots this link advertises
+    pub capacity: usize,
+    /// trials handed to this link
+    pub dispatched: u64,
+    /// outcomes this link delivered
+    pub completed: u64,
+    /// in-flight trials re-queued off this link after a disconnect
+    pub requeued: u64,
+    /// framed bytes written to this link
+    pub bytes_tx: u64,
+    /// framed bytes read from this link
+    pub bytes_rx: u64,
+    /// mean real dispatch→outcome latency, seconds
+    pub rtt_mean_s: f64,
+}
+
 /// One async-coordinator event, flattened for CSV.
 #[derive(Debug, Clone)]
 pub struct AsyncTracePoint {
@@ -35,6 +62,8 @@ pub struct AsyncTrace {
     pub fantasies_issued: u64,
     pub fantasy_rollbacks: u64,
     pub virtual_wall_s: f64,
+    /// per-worker transport/latency counters of the backend the run used
+    pub transport: Vec<TransportCounter>,
 }
 
 impl AsyncTrace {
@@ -75,9 +104,44 @@ impl AsyncTrace {
         w.flush()
     }
 
+    /// Trials rescued from disconnected workers, summed over links.
+    pub fn requeued_total(&self) -> u64 {
+        self.transport.iter().map(|t| t.requeued).sum()
+    }
+
+    /// Write the per-worker transport counters to CSV.
+    pub fn write_transport_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "worker",
+                "capacity",
+                "dispatched",
+                "completed",
+                "requeued",
+                "bytes_tx",
+                "bytes_rx",
+                "rtt_mean_s",
+            ],
+        )?;
+        for t in &self.transport {
+            w.write_row_f64(&[
+                t.worker as f64,
+                t.capacity as f64,
+                t.dispatched as f64,
+                t.completed as f64,
+                t.requeued as f64,
+                t.bytes_tx as f64,
+                t.bytes_rx as f64,
+                t.rtt_mean_s,
+            ])?;
+        }
+        w.flush()
+    }
+
     /// One human-readable summary line.
     pub fn render(&self) -> String {
-        format!(
+        let mut line = format!(
             "{:<24} events {:>5}  best {:>10.4}  virtual {:>10.1}s  util {:>5.1}%  fantasies {} issued / {} rolled back",
             self.name,
             self.points.len(),
@@ -86,7 +150,17 @@ impl AsyncTrace {
             self.utilization * 100.0,
             self.fantasies_issued,
             self.fantasy_rollbacks,
-        )
+        );
+        if !self.transport.is_empty() {
+            let bytes: u64 = self.transport.iter().map(|t| t.bytes_tx + t.bytes_rx).sum();
+            line.push_str(&format!(
+                "  links {}  requeued {}  wire {} B",
+                self.transport.len(),
+                self.requeued_total(),
+                bytes,
+            ));
+        }
+        line
     }
 }
 
@@ -114,6 +188,28 @@ mod tests {
             fantasies_issued: 6,
             fantasy_rollbacks: 6,
             virtual_wall_s: 40.0,
+            transport: vec![
+                TransportCounter {
+                    worker: 0,
+                    capacity: 1,
+                    dispatched: 2,
+                    completed: 2,
+                    requeued: 0,
+                    bytes_tx: 512,
+                    bytes_rx: 640,
+                    rtt_mean_s: 0.003,
+                },
+                TransportCounter {
+                    worker: 1,
+                    capacity: 1,
+                    dispatched: 2,
+                    completed: 2,
+                    requeued: 1,
+                    bytes_tx: 480,
+                    bytes_rx: 600,
+                    rtt_mean_s: 0.004,
+                },
+            ],
         }
     }
 
@@ -124,6 +220,20 @@ mod tests {
         let line = t.render();
         assert!(line.contains("util"));
         assert!(line.contains("6 issued"));
+        assert!(line.contains("requeued 1"), "transport summary missing: {line}");
+        assert_eq!(t.requeued_total(), 1);
+    }
+
+    #[test]
+    fn transport_csv_has_link_rows() {
+        let t = demo();
+        let path = std::env::temp_dir()
+            .join(format!("lazygp_transport_csv_{}.csv", std::process::id()));
+        t.write_transport_csv(path.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("worker,capacity,dispatched"));
+        assert_eq!(body.lines().count(), 3);
+        std::fs::remove_file(path).unwrap();
     }
 
     #[test]

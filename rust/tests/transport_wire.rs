@@ -1,0 +1,303 @@
+//! Wire-protocol and TCP-transport integration tests: bitwise JSON
+//! round-trips for the coordinator messages (property-tested), frame
+//! robustness, and the loopback leader/worker flows — including the
+//! requeue-on-disconnect fault path and prompt teardown.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lazygp::bo::driver::{BoConfig, InitDesign, PendingStrategy};
+use lazygp::config::json::Json;
+use lazygp::coordinator::transport::{
+    read_frame, run_worker, write_frame, LeaderMsg, Transport, WorkerMsg, PROTOCOL_VERSION,
+};
+use lazygp::coordinator::{
+    AsyncBo, AsyncCoordinatorConfig, RemoteEvalConfig, SocketPool, Trial, TrialError,
+    TrialOutcome,
+};
+use lazygp::gp::Surrogate;
+use lazygp::objectives::Evaluation;
+use lazygp::util::proptest as pt;
+use lazygp::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// property tests: the wire encoding round-trips bitwise
+// ---------------------------------------------------------------------------
+
+/// Floats that historically break naive encoders: negative zero,
+/// subnormals, extreme magnitudes, non-terminating binary fractions.
+fn tricky_f64(rng: &mut Pcg64) -> f64 {
+    match rng.below(8) {
+        0 => -0.0,
+        1 => 5e-324,              // smallest subnormal
+        2 => f64::MIN_POSITIVE,   // smallest normal
+        3 => f64::MAX,
+        4 => -f64::MAX,
+        5 => 1.0 / 3.0,
+        6 => rng.uniform(-1e15, 1e15),
+        _ => rng.uniform(-10.0, 10.0),
+    }
+}
+
+fn random_trial(rng: &mut Pcg64) -> Trial {
+    let dim = 1 + rng.below(6) as usize;
+    Trial {
+        // ids anywhere in the safe-integer range the decoder accepts
+        id: rng.below(9_007_199_254_740_992),
+        round: rng.below(1 << 30),
+        x: (0..dim).map(|_| tricky_f64(rng)).collect(),
+        attempt: rng.below(u64::from(u32::MAX) + 1) as u32,
+    }
+}
+
+fn bits_equal(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn prop_trial_json_roundtrip_bitwise() {
+    let seeds = pt::usize_in(0, 1_000_000);
+    pt::check("trial_wire_roundtrip", &seeds, |&seed| {
+        let mut rng = Pcg64::new(seed as u64);
+        let t = random_trial(&mut rng);
+        let back = Trial::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        back.id == t.id
+            && back.round == t.round
+            && back.attempt == t.attempt
+            && bits_equal(&t.x, &back.x)
+    });
+}
+
+#[test]
+fn prop_outcome_json_roundtrip_bitwise() {
+    let seeds = pt::usize_in(0, 1_000_000);
+    pt::check("outcome_wire_roundtrip", &seeds, |&seed| {
+        let mut rng = Pcg64::new(seed as u64);
+        let trial = random_trial(&mut rng);
+        let result = match rng.below(3) {
+            0 => Ok(Evaluation { value: tricky_f64(&mut rng), sim_cost_s: rng.uniform(0.0, 500.0) }),
+            1 => Err(TrialError::SimulatedCrash),
+            _ => Err(TrialError::NonFinite(if rng.below(2) == 0 {
+                f64::INFINITY
+            } else {
+                f64::NEG_INFINITY
+            })),
+        };
+        let o = TrialOutcome {
+            trial,
+            worker_id: rng.below(64) as usize,
+            result,
+            worker_seconds: rng.uniform(0.0, 1.0),
+            sim_cost_s: tricky_f64(&mut rng).abs(),
+        };
+        let back =
+            TrialOutcome::from_json(&Json::parse(&o.to_json().to_string()).unwrap()).unwrap();
+        let result_matches = match (&o.result, &back.result) {
+            (Ok(a), Ok(b)) => {
+                a.value.to_bits() == b.value.to_bits()
+                    && a.sim_cost_s.to_bits() == b.sim_cost_s.to_bits()
+            }
+            (Err(TrialError::SimulatedCrash), Err(TrialError::SimulatedCrash)) => true,
+            (Err(TrialError::NonFinite(a)), Err(TrialError::NonFinite(b))) => {
+                a.to_bits() == b.to_bits()
+            }
+            _ => false,
+        };
+        result_matches
+            && back.trial.id == o.trial.id
+            && bits_equal(&o.trial.x, &back.trial.x)
+            && back.worker_id == o.worker_id
+            && back.worker_seconds.to_bits() == o.worker_seconds.to_bits()
+            && back.sim_cost_s.to_bits() == o.sim_cost_s.to_bits()
+    });
+}
+
+#[test]
+fn unsafe_integers_are_rejected_not_truncated() {
+    // 2^53 is the first integer that collapses onto a float neighbor —
+    // the PR-1 accessors refuse it, and the wire decoder inherits that
+    for bad in ["9007199254740992", "9007199254740993", "1e300"] {
+        let text = format!(r#"{{"id": {bad}, "round": 0, "x": [0.5], "attempt": 0}}"#);
+        let j = Json::parse(&text).unwrap();
+        assert!(Trial::from_json(&j).is_err(), "id {bad} must be rejected");
+    }
+    // 2^53 − 1 is the last safe id and must decode fine
+    let j = Json::parse(r#"{"id": 9007199254740991, "round": 0, "x": [0.5], "attempt": 0}"#)
+        .unwrap();
+    assert_eq!(Trial::from_json(&j).unwrap().id, 9_007_199_254_740_991);
+}
+
+// ---------------------------------------------------------------------------
+// loopback TCP integration
+// ---------------------------------------------------------------------------
+
+fn sphere_pool(seed: u64) -> SocketPool {
+    SocketPool::listen(
+        "127.0.0.1:0",
+        RemoteEvalConfig {
+            objective: "sphere5".into(),
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+            seed,
+        },
+    )
+    .expect("bind loopback")
+}
+
+#[test]
+fn loopback_workers_evaluate_trials() {
+    let pool = sphere_pool(3);
+    let addr = pool.local_addr().to_string();
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_worker(&addr, 1).expect("worker run"))
+        })
+        .collect();
+    pool.wait_for_capacity(2, Duration::from_secs(10)).unwrap();
+
+    for id in 0..8 {
+        pool.dispatch(Trial { id, round: 0, x: vec![0.5, -0.5, 0.0, 0.25, -0.25], attempt: 0 });
+    }
+    let mut ids = Vec::new();
+    for _ in 0..8 {
+        let o = pool.poll_outcome(Duration::from_secs(10)).expect("outcome before timeout");
+        assert!(o.is_ok());
+        // sphere5(0.5,-0.5,0,0.25,-0.25) = -(0.25+0.25+0+0.0625+0.0625)
+        let v = o.result.unwrap().value;
+        assert!((v + 0.625).abs() < 1e-12, "got {v}");
+        ids.push(o.trial.id);
+    }
+    ids.sort_unstable();
+    assert_eq!(ids, (0..8).collect::<Vec<_>>());
+
+    let stats = pool.stats();
+    assert_eq!(stats.backend, "tcp");
+    assert_eq!(stats.links.len(), 2);
+    assert_eq!(stats.links.iter().map(|l| l.completed).sum::<u64>(), 8);
+    assert_eq!(stats.requeued, 0);
+    for l in &stats.links {
+        assert!(l.bytes_tx > 0 && l.bytes_rx > 0, "wire bytes must be counted: {l:?}");
+    }
+
+    Box::new(pool).shutdown(); // sends Shutdown; workers exit
+    for (i, h) in workers.into_iter().enumerate() {
+        let summary = h.join().expect("worker thread");
+        assert!(summary.evaluated <= 8, "worker {i} over-reported");
+    }
+}
+
+#[test]
+fn worker_disconnect_mid_trial_requeues_and_completes() {
+    let pool = sphere_pool(5);
+    let addr = pool.local_addr().to_string();
+
+    // a hand-rolled worker that accepts one trial and then dies
+    let mut fake = TcpStream::connect(&addr).unwrap();
+    write_frame(&mut fake, &WorkerMsg::Hello { protocol: PROTOCOL_VERSION, capacity: 1 }.to_json())
+        .unwrap();
+    let (welcome, _) = read_frame(&mut fake).unwrap();
+    assert!(matches!(LeaderMsg::from_json(&welcome).unwrap(), LeaderMsg::Welcome { .. }));
+    pool.wait_for_capacity(1, Duration::from_secs(10)).unwrap();
+
+    pool.dispatch(Trial { id: 7, round: 0, x: vec![0.1, 0.2, 0.3, 0.4, 0.5], attempt: 0 });
+    let (msg, _) = read_frame(&mut fake).unwrap();
+    assert!(matches!(LeaderMsg::from_json(&msg).unwrap(), LeaderMsg::Dispatch(_)));
+    drop(fake); // crash mid-trial: the outcome will never come from here
+
+    // a healthy worker joins and must pick the requeued trial up
+    let addr2 = addr.clone();
+    let rescuer = std::thread::spawn(move || run_worker(&addr2, 1).expect("rescuer run"));
+    let o = pool.poll_outcome(Duration::from_secs(20)).expect("requeued trial must complete");
+    assert_eq!(o.trial.id, 7, "the exact in-flight trial must be rescued");
+    assert!(o.is_ok());
+
+    let stats = pool.stats();
+    assert_eq!(stats.requeued, 1, "one in-flight trial was rescued: {stats:?}");
+
+    Box::new(pool).shutdown();
+    let summary = rescuer.join().unwrap();
+    assert_eq!(summary.evaluated, 1);
+}
+
+#[test]
+fn async_bo_runs_unchanged_over_loopback_tcp() {
+    // the acceptance contract of the Transport refactor: AsyncBo against a
+    // SocketPool behaves exactly like AsyncBo against threads — same
+    // observation semantics, fantasies fully unwound at the end
+    let pool = SocketPool::listen(
+        "127.0.0.1:0",
+        RemoteEvalConfig { objective: "levy2".into(), sleep_scale: 0.0, fail_prob: 0.0, seed: 9 },
+    )
+    .unwrap();
+    let addr = pool.local_addr().to_string();
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_worker(&addr, 1).expect("worker run"))
+        })
+        .collect();
+    pool.wait_for_capacity(2, Duration::from_secs(10)).unwrap();
+
+    let bo = BoConfig::lazy().with_seed(17).with_init(InitDesign::Lhs(4));
+    let obj: Arc<dyn lazygp::objectives::Objective> =
+        Arc::from(lazygp::objectives::by_name("levy2").unwrap());
+    let mut abo = AsyncBo::with_transport(
+        bo,
+        obj,
+        Box::new(pool),
+        AsyncCoordinatorConfig {
+            pending: PendingStrategy::ConstantLiarMin,
+            ..Default::default()
+        },
+    );
+    let best = abo.run_until_evals(16);
+    assert!(best.value.is_finite());
+    assert_eq!(abo.driver().history().len(), 16);
+    assert_eq!(abo.driver().surrogate().len(), 16);
+    assert_eq!(abo.driver().fantasies_active(), 0);
+    let s = abo.stats();
+    assert_eq!(s.fantasies_issued, s.fantasy_rollbacks);
+    let transport = abo.transport_stats();
+    assert_eq!(transport.backend, "tcp");
+    assert_eq!(transport.links.iter().map(|l| l.completed).sum::<u64>(), 12); // 16 − 4 seeds
+    abo.finish();
+    for h in workers {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn socket_pool_teardown_is_prompt() {
+    // a worker sleeping out simulated cost must not delay pool shutdown:
+    // run_worker's pool interrupts its sleep on Shutdown/EOF
+    let pool = SocketPool::listen(
+        "127.0.0.1:0",
+        RemoteEvalConfig {
+            objective: "resnet_cifar10".into(),
+            sleep_scale: 1.0, // ~190 s simulated ⇒ capped 5 s real sleep
+            fail_prob: 0.0,
+            seed: 11,
+        },
+    )
+    .unwrap();
+    let addr = pool.local_addr().to_string();
+    let worker = {
+        let addr = addr.clone();
+        std::thread::spawn(move || run_worker(&addr, 1))
+    };
+    pool.wait_for_capacity(1, Duration::from_secs(10)).unwrap();
+    pool.dispatch(Trial { id: 0, round: 0, x: vec![0.05, 5e-4, 0.9], attempt: 0 });
+    // give the worker time to start the trial and enter its sleep
+    std::thread::sleep(Duration::from_millis(300));
+
+    let t0 = Instant::now();
+    Box::new(pool).shutdown();
+    let teardown = t0.elapsed();
+    assert!(
+        teardown < Duration::from_secs(3),
+        "leader teardown took {teardown:?} — worker sleep not interrupted"
+    );
+    let _ = worker.join().unwrap(); // worker exits promptly too (Err is fine: leader vanished)
+}
