@@ -1,20 +1,33 @@
 //! **§Perf** — microbenchmarks of every hot path, feeding the
 //! EXPERIMENTS.md §Perf table: incremental extension, full factorizations
 //! (blocked vs unblocked), triangular solves, border-vector assembly,
-//! batched candidate scoring (native vs XLA artifact), and one full
-//! suggest() call at realistic state sizes.
+//! batched candidate scoring (native vs XLA artifact), one full suggest()
+//! call at realistic state sizes — and the tiled/multi-threaded
+//! covariance-assembly + batched-posterior scaling sweep that backs the CI
+//! `bench-smoke` gate.
 //!
-//! Output: target/experiments/perf_hotpath.csv.
+//! Output: target/experiments/perf_hotpath.csv and
+//! target/experiments/BENCH_hotpath.json (serial vs tiled ×{1,2,4}
+//! threads + speedups). With `LAZYGP_BENCH_BASELINE=<path>` set, the run
+//! compares its tiled-4-thread speedups against the committed baseline
+//! JSON and exits non-zero on a >10% regression — the CI perf gate.
+//! `LAZYGP_BENCH_QUICK=1` selects the short smoke sizes.
 
 use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
 use lazygp::gp::lazy::LazyGp;
+use lazygp::gp::posterior::{compute_alpha, Posterior};
 use lazygp::gp::Surrogate;
-use lazygp::kernels::{cov_matrix, CovCache, Kernel};
+use lazygp::kernels::cov::{cov_matrix_tiled, COV_TILE_ROWS};
+use lazygp::kernels::{cov_matrix, cov_matrix_with, CovCache, Kernel};
 use lazygp::linalg::cholesky::{cholesky_in_place, cholesky_unblocked};
 use lazygp::linalg::{GrowingCholesky, Matrix};
 use lazygp::runtime::{score_native, GpScorer, PjrtRuntime};
 use lazygp::util::bench::{black_box, BenchConfig, Bencher};
+use lazygp::util::parallel::Parallelism;
 use lazygp::util::rng::Pcg64;
+
+/// One gate entry: (stable name, serial min_s, [(threads, min_s)]).
+type SweepEntry = (String, f64, Vec<(usize, f64)>);
 
 fn spd(rng: &mut Pcg64, kernel: &Kernel, n: usize, d: usize) -> (Vec<Vec<f64>>, Matrix) {
     let xs: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.uniform(-5.0, 5.0)).collect()).collect();
@@ -23,6 +36,7 @@ fn spd(rng: &mut Pcg64, kernel: &Kernel, n: usize, d: usize) -> (Vec<Vec<f64>>, 
 }
 
 fn main() {
+    let quick = std::env::var("LAZYGP_BENCH_QUICK").is_ok();
     let mut b = Bencher::with_config(BenchConfig::default());
     let kernel = Kernel::paper_default();
     let mut rng = Pcg64::new(99);
@@ -83,6 +97,97 @@ fn main() {
         });
     }
 
+    // ---- the tiled/threaded scaling sweep backing the CI gate ----
+    // names below are the stable identifiers the baseline JSON keys on
+    let sweep_ns: &[usize] = if quick { &[1024] } else { &[1024, 4096] };
+    let thread_counts = [1usize, 2, 4];
+    let mut sweep: Vec<SweepEntry> = Vec::new();
+    // the gate compares min-of-samples speedup ratios: keep enough samples
+    // even in smoke mode that a noisy neighbor on a shared runner can't
+    // flake the 10% tolerance (sizes are already reduced by `quick`)
+    let prior_config = b.config.clone();
+    b.config.samples = b.config.samples.max(9);
+
+    b.group("cov assembly (tiled, d=5)");
+    for &n in sweep_ns {
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..5).map(|_| rng.uniform(-5.0, 5.0)).collect()).collect();
+        // bitwise-identity spot check before timing anything
+        let serial_k = cov_matrix_tiled(&kernel, &xs, 1, COV_TILE_ROWS);
+        let tiled_k = cov_matrix_tiled(&kernel, &xs, 4, COV_TILE_ROWS);
+        assert!(
+            serial_k
+                .as_slice()
+                .iter()
+                .zip(tiled_k.as_slice())
+                .all(|(a, c)| a.to_bits() == c.to_bits()),
+            "tiled cov assembly diverged from serial at n={n}"
+        );
+        drop((serial_k, tiled_k));
+        let serial =
+            b.bench(&format!("n={n} serial"), || {
+                black_box(cov_matrix_tiled(&kernel, &xs, 1, COV_TILE_ROWS));
+            })
+            .min_s();
+        let mut per_t = Vec::new();
+        for &t in &thread_counts {
+            let r = b.bench(&format!("n={n} tiled t={t}"), || {
+                black_box(cov_matrix_tiled(&kernel, &xs, t, COV_TILE_ROWS));
+            });
+            per_t.push((t, r.min_s()));
+        }
+        sweep.push((format!("cov_assembly/n={n}"), serial, per_t));
+    }
+
+    b.group("batched posterior scoring (m=256, d=5)");
+    for &n in sweep_ns {
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..5).map(|_| rng.uniform(-5.0, 5.0)).collect()).collect();
+        let k = cov_matrix_with(&kernel, &xs, Parallelism::Auto);
+        let factor = GrowingCholesky::from_spd(&k).expect("posterior sweep covariance SPD");
+        let y: Vec<f64> = xs.iter().map(|x| x.iter().sum::<f64>().sin()).collect();
+        let alpha = compute_alpha(&factor, &y, 0.0, 1.0);
+        let post = Posterior {
+            factor: &factor,
+            alpha: &alpha,
+            mean_offset: 0.0,
+            y_scale: 1.0,
+            kernel,
+        };
+        let mut cache = CovCache::new();
+        for x in &xs {
+            cache.push(x);
+        }
+        let cands: Vec<Vec<f64>> =
+            (0..256).map(|_| (0..5).map(|_| rng.uniform(-5.0, 5.0)).collect()).collect();
+        let kstar = cache.borders_batch(&kernel, &cands, Parallelism::Auto);
+        // bitwise-identity spot check: serial vs 4-thread scoring
+        let a = post.predict_batch_from_borders_with(&kstar, Parallelism::Serial);
+        let c = post.predict_batch_from_borders_with(&kstar, Parallelism::Threads(4));
+        assert!(
+            a.iter().zip(&c).all(|((ma, va), (mc, vc))| {
+                ma.to_bits() == mc.to_bits() && va.to_bits() == vc.to_bits()
+            }),
+            "tiled posterior scoring diverged from serial at n={n}"
+        );
+        let serial = b
+            .bench(&format!("n={n} serial"), || {
+                black_box(post.predict_batch_from_borders_with(&kstar, Parallelism::Serial));
+            })
+            .min_s();
+        let mut per_t = Vec::new();
+        for &t in &thread_counts {
+            let r = b.bench(&format!("n={n} tiled t={t}"), || {
+                black_box(
+                    post.predict_batch_from_borders_with(&kstar, Parallelism::Threads(t)),
+                );
+            });
+            per_t.push((t, r.min_s()));
+        }
+        sweep.push((format!("posterior_scoring/n={n}"), serial, per_t));
+    }
+    b.config = prior_config;
+
     b.group("candidate scoring (256 cands)");
     let mut gp = LazyGp::paper_default();
     for _ in 0..500 {
@@ -125,4 +230,131 @@ fn main() {
 
     b.write_csv("target/experiments/perf_hotpath.csv").unwrap();
     println!("\ncsv: target/experiments/perf_hotpath.csv");
+
+    // ---- BENCH trajectory + CI gate ----
+    let json = sweep_json(quick, &sweep);
+    std::fs::create_dir_all("target/experiments").unwrap();
+    std::fs::write("target/experiments/BENCH_hotpath.json", json.to_string_pretty())
+        .unwrap();
+    println!("bench trajectory: target/experiments/BENCH_hotpath.json");
+    print_speedups(&sweep);
+    if let Ok(baseline_path) = std::env::var("LAZYGP_BENCH_BASELINE") {
+        if !gate_against_baseline(&baseline_path, &sweep) {
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Serialize the sweep as the committed-baseline JSON schema.
+fn sweep_json(quick: bool, sweep: &[SweepEntry]) -> lazygp::config::json::Json {
+    use lazygp::config::json::Json;
+    let entries: Vec<Json> = sweep
+        .iter()
+        .map(|(name, serial, per_t)| {
+            let threads: Vec<Json> = per_t
+                .iter()
+                .map(|(t, s)| {
+                    Json::obj(vec![("threads", Json::Num(*t as f64)), ("min_s", Json::Num(*s))])
+                })
+                .collect();
+            let t4 = per_t.iter().find(|(t, _)| *t == 4).map(|(_, s)| *s).unwrap_or(*serial);
+            Json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("serial_min_s", Json::Num(*serial)),
+                ("tiled", Json::Arr(threads)),
+                ("speedup_t4", Json::Num(serial / t4.max(1e-12))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("quick", Json::Bool(quick)),
+        ("entries", Json::Arr(entries)),
+    ])
+}
+
+fn print_speedups(sweep: &[SweepEntry]) {
+    println!("\n== thread scaling (speedup over serial, min-of-samples) ==");
+    for (name, serial, per_t) in sweep {
+        let cols: Vec<String> = per_t
+            .iter()
+            .map(|(t, s)| format!("t={t}: {:.2}×", serial / s.max(1e-12)))
+            .collect();
+        println!("{name:<28} {}", cols.join("  "));
+    }
+}
+
+/// Compare this run's tiled-4-thread speedups against the committed
+/// baseline. Returns false (⇒ exit 1) on a >10% regression of any entry
+/// present in both. An empty baseline is the bootstrap state: it passes
+/// and prints how to arm the gate.
+fn gate_against_baseline(path: &str, sweep: &[SweepEntry]) -> bool {
+    use lazygp::config::json::Json;
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bench gate: cannot read baseline {path}: {e}");
+            return false;
+        }
+    };
+    let baseline = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bench gate: baseline {path} is not valid JSON: {e:?}");
+            return false;
+        }
+    };
+    let this_quick = std::env::var("LAZYGP_BENCH_QUICK").is_ok();
+    if let Some(base_quick) = baseline.get("quick").and_then(|q| q.as_bool()) {
+        if base_quick != this_quick {
+            println!(
+                "bench gate WARNING: baseline was recorded in {} mode but this run is {} mode — \
+                 speedup ratios may not be comparable; re-arm the baseline from a run in the \
+                 same mode on comparable hardware (e.g. the CI bench-trajectory artifact)",
+                if base_quick { "quick" } else { "full" },
+                if this_quick { "quick" } else { "full" },
+            );
+        }
+    }
+    let entries = baseline.get("entries").and_then(|e| e.as_arr()).unwrap_or(&[]);
+    if entries.is_empty() {
+        println!(
+            "bench gate: baseline {path} has no entries (bootstrap) — gate passes; \
+             commit target/experiments/BENCH_hotpath.json as {path} to arm it"
+        );
+        return true;
+    }
+    let mut ok = true;
+    let mut compared = 0usize;
+    for e in entries {
+        let (Some(name), Some(base_speedup)) = (
+            e.get("name").and_then(|v| v.as_str()),
+            e.get("speedup_t4").and_then(|v| v.as_f64()),
+        ) else {
+            continue;
+        };
+        let Some((_, serial, per_t)) = sweep.iter().find(|(n, _, _)| n == name) else {
+            println!("bench gate: baseline entry `{name}` not measured in this run, skipping");
+            continue;
+        };
+        let t4 = per_t.iter().find(|(t, _)| *t == 4).map(|(_, s)| *s).unwrap_or(*serial);
+        let speedup = serial / t4.max(1e-12);
+        compared += 1;
+        let floor = base_speedup * 0.9;
+        if speedup < floor {
+            eprintln!(
+                "bench gate FAIL: {name} tiled-4-thread speedup {speedup:.2}× \
+                 < 90% of baseline {base_speedup:.2}× (floor {floor:.2}×)"
+            );
+            ok = false;
+        } else {
+            println!(
+                "bench gate ok: {name} {speedup:.2}× (baseline {base_speedup:.2}×, floor {floor:.2}×)"
+            );
+        }
+    }
+    if compared == 0 {
+        println!("bench gate: no comparable entries between run and baseline — passing");
+    }
+    ok
 }

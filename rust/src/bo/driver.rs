@@ -8,6 +8,7 @@ use crate::gp::lazy::{LazyGp, LazyGpConfig};
 use crate::gp::Surrogate;
 use crate::kernels::Kernel;
 use crate::objectives::{Evaluation, Objective};
+use crate::util::parallel::Parallelism;
 use crate::util::rng::{latin_hypercube, Pcg64};
 use crate::util::timer::Stopwatch;
 
@@ -87,6 +88,9 @@ pub struct BoConfig {
     pub seed: u64,
     /// min normalized distance between batch suggestions (§3.4 dedup)
     pub batch_min_dist: f64,
+    /// worker threads for the surrogate's tiled covariance/posterior hot
+    /// paths (CLI `--threads`; results are bitwise identical regardless)
+    pub parallelism: Parallelism,
 }
 
 impl BoConfig {
@@ -100,6 +104,7 @@ impl BoConfig {
             init: InitDesign::Random(1),
             seed: 0,
             batch_min_dist: 0.05,
+            parallelism: Parallelism::default(),
         }
     }
 
@@ -133,13 +138,24 @@ impl BoConfig {
         self
     }
 
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.parallelism = par;
+        self
+    }
+
     fn build_surrogate(&self) -> Box<dyn Surrogate> {
         match self.surrogate {
             SurrogateChoice::Lazy { lag } => Box::new(LazyGp::new(
-                LazyGpConfig { kernel: self.kernel, ..LazyGpConfig::default() }.with_lag(lag),
+                LazyGpConfig {
+                    kernel: self.kernel,
+                    parallelism: self.parallelism,
+                    ..LazyGpConfig::default()
+                }
+                .with_lag(lag),
             )),
             SurrogateChoice::Exact => Box::new(ExactGp::new(ExactGpConfig {
                 kernel: self.kernel,
+                parallelism: self.parallelism,
                 ..Default::default()
             })),
         }
@@ -336,20 +352,25 @@ impl BoDriver {
         }
         match strategy {
             PendingStrategy::ConstantLiarMin => {
-                let lie = self.history.iter().map(|r| r.y).fold(f64::INFINITY, f64::min);
-                let lie = if lie.is_finite() { lie } else { 0.0 };
-                for x in pending {
-                    self.surrogate.observe_fantasy(x, lie);
-                }
+                // one grouped refresh: borders assembled in a single tiled
+                // pass, α recomputed once (Surrogate::observe_fantasies)
+                let lie = self.constant_lie();
+                let batch: Vec<(Vec<f64>, f64)> =
+                    pending.iter().map(|x| (x.clone(), lie)).collect();
+                self.surrogate.observe_fantasies(&batch);
             }
             PendingStrategy::PosteriorMean => {
-                let means: Vec<f64> =
-                    pending.iter().map(|x| self.surrogate.predict(x).0).collect();
-                for (x, m) in pending.iter().zip(means) {
-                    self.surrogate.observe_fantasy(x, m);
-                }
+                // all means from the pre-fantasy posterior in one batched
+                // scoring pass, then one grouped insert
+                let batch: Vec<(Vec<f64>, f64)> = pending
+                    .iter()
+                    .cloned()
+                    .zip(self.surrogate.predict_batch(pending).into_iter().map(|(m, _)| m))
+                    .collect();
+                self.surrogate.observe_fantasies(&batch);
             }
             PendingStrategy::KrigingBeliever => {
+                // inherently sequential: each fantasy conditions the next
                 for x in pending {
                     let m = self.surrogate.predict(x).0;
                     self.surrogate.observe_fantasy(x, m);
@@ -357,6 +378,35 @@ impl BoDriver {
             }
         }
         pending.len()
+    }
+
+    /// The constant-liar value: the worst (minimum) *real* observation.
+    fn constant_lie(&self) -> f64 {
+        let lie = self.history.iter().map(|r| r.y).fold(f64::INFINITY, f64::min);
+        if lie.is_finite() {
+            lie
+        } else {
+            0.0
+        }
+    }
+
+    /// Append a single fantasy for a just-dispatched point on top of the
+    /// current (possibly already fantasy-augmented) posterior — the cheap
+    /// per-dispatch increment of the async coordinator; the full pending
+    /// set is re-imputed only once per completion wave via
+    /// [`fantasize`](BoDriver::fantasize). For the mean-based strategies the
+    /// imputation is the *augmented* posterior mean (a kriging-believer
+    /// style increment); `cl-min` uses the same lie the grouped refresh
+    /// would. Returns the number of fantasies issued (always 1).
+    pub fn fantasize_one(&mut self, x: &[f64], strategy: PendingStrategy) -> usize {
+        let y = match strategy {
+            PendingStrategy::ConstantLiarMin => self.constant_lie(),
+            PendingStrategy::PosteriorMean | PendingStrategy::KrigingBeliever => {
+                self.surrogate.predict(x).0
+            }
+        };
+        self.surrogate.observe_fantasy(x, y);
+        1
     }
 
     /// Remove every active fantasy, restoring the exact real-data

@@ -56,6 +56,7 @@ impl ExperimentConfig {
             init: self.init,
             seed: self.seed,
             batch_min_dist: 0.05,
+            parallelism: crate::util::parallel::Parallelism::default(),
         }
     }
 

@@ -17,9 +17,17 @@
 //!    extension),
 //! 3. re-fantasizes the still-pending trials under the configured
 //!    [`PendingStrategy`] (constant liar / posterior mean / kriging
-//!    believer — Snoek et al. 2012), and
-//! 4. suggests the next point against the augmented posterior and
-//!    dispatches it to the freed worker.
+//!    believer — Snoek et al. 2012) in **one grouped batched refresh**
+//!    (`Surrogate::observe_fantasies`: all base borders in a single tiled
+//!    pass, `α` recomputed once — not once per pending trial), and
+//! 4. suggests the next point against the augmented posterior, appends a
+//!    single incremental fantasy for it, and dispatches it to the freed
+//!    worker.
+//!
+//! The grouped refresh happens once per completion *wave* (step 3); each
+//! refill within the wave only appends its own fantasy (step 4). The old
+//! scheme re-retracted and re-imputed the whole pending set on every
+//! dispatch, costing `O(pending·n²)` twice over per refill.
 //!
 //! Virtual wall-clock is tracked per worker slot (a discrete-event model of
 //! the paper's testbed): each attempt occupies its worker from
@@ -245,17 +253,19 @@ impl AsyncBo {
     /// Suggest against the fantasy-augmented posterior and dispatch to the
     /// pool, binding the trial to virtual slot `slot` from virtual time
     /// `now_v` (the completion that freed the slot).
+    ///
+    /// The pending set's fantasies are already in place (grouped refresh in
+    /// [`settle`](AsyncBo::settle), or the appends of earlier primes); this
+    /// only appends one incremental fantasy for the new point.
     fn dispatch_new(&mut self, now_v: f64, slot: usize) -> Dispatched {
         let mut sw = Stopwatch::new();
-        // refresh the fantasy set: retract whatever is stale, re-impute the
-        // full pending set under the configured strategy
-        self.stats.fantasy_rollbacks += self.driver.retract_fantasies() as u64;
-        let xs: Vec<Vec<f64>> = self.pending.iter().map(|(_, x)| x.clone()).collect();
-        self.stats.fantasies_issued +=
-            self.driver.fantasize(&xs, self.config.pending) as u64;
-        let sync_seconds = sw.lap_s();
         let x = self.driver.suggest_batch(1).pop().expect("suggest_batch(1) empty");
         let suggest_seconds = sw.lap_s();
+        // speculate on the new in-flight point: one O(n²) extension on top
+        // of the current augmented posterior
+        self.stats.fantasies_issued +=
+            self.driver.fantasize_one(&x, self.config.pending) as u64;
+        let sync_seconds = sw.lap_s();
         let id = self.next_trial_id;
         self.next_trial_id += 1;
         self.submit_v.insert(id, (now_v + suggest_seconds + sync_seconds, slot));
@@ -267,8 +277,9 @@ impl AsyncBo {
     }
 
     /// Remove a finished trial from the pending set (unwinding the active
-    /// fantasies), fold its result in when it succeeded, and refill the
-    /// freed virtual slot while budget remains. Returns leader
+    /// fantasies), fold its result in when it succeeded, re-impute the
+    /// remaining pending set in **one grouped batched refresh**, and refill
+    /// the freed virtual slot while budget remains. Returns leader
     /// `(suggest, sync)` seconds.
     fn settle(
         &mut self,
@@ -285,10 +296,26 @@ impl AsyncBo {
             self.driver.observe_external(x, eval);
             self.stats.completed += 1;
         }
-        let mut sync_seconds = sw.elapsed_s();
+        let will_refill = self.driver.history().len() + self.pending.len() < total_evals;
+        if will_refill {
+            // grouped refresh: re-fantasize the whole remaining pending set
+            // in one batched pass (one α recompute), once per completion
+            // wave — skipped when the budget is exhausted and no suggestion
+            // will consume the augmented posterior (run_until_evals retracts
+            // at the end either way)
+            let xs: Vec<Vec<f64>> = self.pending.iter().map(|(_, x)| x.clone()).collect();
+            self.stats.fantasies_issued +=
+                self.driver.fantasize(&xs, self.config.pending) as u64;
+        }
+        // the wave's leader work (retract + observe + grouped refresh) is
+        // charged to sync time and delays the refill's virtual submit, just
+        // as the per-dispatch re-imputation used to
+        let wave_sync = sw.elapsed_s();
+        self.stats.sync_s += wave_sync;
+        let mut sync_seconds = wave_sync;
         let mut suggest_seconds = 0.0;
-        if self.driver.history().len() + self.pending.len() < total_evals {
-            let d = self.dispatch_new(done_v, slot);
+        if will_refill {
+            let d = self.dispatch_new(done_v + wave_sync, slot);
             suggest_seconds += d.suggest_seconds;
             sync_seconds += d.sync_seconds;
         }

@@ -8,9 +8,10 @@
 use super::hyperfit::{fit_params, FitSpace};
 use super::posterior::{compute_alpha, standardize, Posterior};
 use super::Surrogate;
-use crate::kernels::{cov_matrix, cov_vector, Kernel};
+use crate::kernels::{cov_matrix_with, cov_vector, Kernel};
 use crate::linalg::cholesky::cholesky_unblocked;
 use crate::linalg::GrowingCholesky;
+use crate::util::parallel::Parallelism;
 use crate::util::timer::Stopwatch;
 
 /// Configuration of the exact (naive) GP.
@@ -23,6 +24,9 @@ pub struct ExactGpConfig {
     /// use the textbook unblocked Alg. 2 (true ⇒ faithful to the paper's
     /// baseline; false ⇒ cache-blocked factorization)
     pub unblocked_cholesky: bool,
+    /// worker threads for the tiled covariance assembly (the factorization
+    /// itself stays as configured above). Bitwise identical results.
+    pub parallelism: Parallelism,
 }
 
 impl Default for ExactGpConfig {
@@ -32,6 +36,7 @@ impl Default for ExactGpConfig {
             refit_each_step: true,
             fit_space: FitSpace::default(),
             unblocked_cholesky: true,
+            parallelism: Parallelism::default(),
         }
     }
 }
@@ -97,7 +102,7 @@ impl ExactGp {
         let mut factored = None;
         for _ in 0..7 {
             self.kernel.params.noise = configured_noise + jitter;
-            let mut l = cov_matrix(&self.kernel, &self.xs);
+            let mut l = cov_matrix_with(&self.kernel, &self.xs, self.config.parallelism);
             // the faithful baseline uses the paper's unblocked Alg. 2
             let res = if self.config.unblocked_cholesky {
                 cholesky_unblocked(&mut l)
@@ -308,8 +313,8 @@ mod tests {
         let mut gp = ExactGp::new(ExactGpConfig {
             kernel: Kernel::paper_default().clone(),
             refit_each_step: false,
-            fit_space: FitSpace::default(),
             unblocked_cholesky: true,
+            ..Default::default()
         });
         let noise_before = gp.kernel().params.noise;
         gp.observe(&[1.0, 1.0], 0.5);

@@ -13,6 +13,7 @@ use super::Surrogate;
 use crate::kernels::{CovCache, Kernel};
 use crate::linalg::incremental::ExtendStats;
 use crate::linalg::GrowingCholesky;
+use crate::util::parallel::Parallelism;
 use crate::util::timer::Stopwatch;
 
 /// When to pay a full re-fit + re-factorization.
@@ -50,6 +51,10 @@ pub struct LazyGpConfig {
     /// re-factorize); Fig. 6 uses re-fit = true
     pub refit_at_lag: bool,
     pub fit_space: FitSpace,
+    /// worker threads for the tiled covariance-assembly / batched-posterior
+    /// hot paths. Results are bitwise identical for every setting; small
+    /// problems stay serial regardless (see `util::parallel`).
+    pub parallelism: Parallelism,
 }
 
 impl Default for LazyGpConfig {
@@ -59,6 +64,7 @@ impl Default for LazyGpConfig {
             lag: LagSchedule::Never,
             refit_at_lag: true,
             fit_space: FitSpace::default(),
+            parallelism: Parallelism::default(),
         }
     }
 }
@@ -265,7 +271,7 @@ impl LazyGp {
         let mut jitter = 0.0f64;
         for attempt in 0..7 {
             self.kernel.params.noise = configured_noise + jitter;
-            let k = self.cov.full_cov(&self.kernel);
+            let k = self.cov.full_cov_with(&self.kernel, self.config.parallelism);
             let factored = GrowingCholesky::from_spd(&k);
             self.kernel.params.noise = configured_noise;
             match factored {
@@ -338,18 +344,12 @@ impl Surrogate for LazyGp {
         if self.cov.is_empty() || xs.is_empty() {
             return xs.iter().map(|x| self.predict(x)).collect();
         }
-        // assemble K* column-per-candidate, then one multi-RHS solve
-        // (§Perf: replaces m independent O(n²) solves)
-        let n = self.y.len();
-        let m = xs.len();
-        let mut kstar = crate::linalg::Matrix::zeros(n, m);
-        for (c, x) in xs.iter().enumerate() {
-            let col = self.cov.border(&self.kernel, x);
-            for i in 0..n {
-                kstar[(i, c)] = col[i];
-            }
-        }
-        self.posterior().predict_batch_from_borders(&kstar)
+        // assemble K* column-per-candidate in one tiled pass, then the
+        // blocked multi-RHS solve (§Perf: replaces m independent O(n²)
+        // solves; both stages run on the worker pool, bitwise-identically)
+        let par = self.config.parallelism;
+        let kstar = self.cov.borders_batch(&self.kernel, xs, par);
+        self.posterior().predict_batch_from_borders_with(&kstar, par)
     }
 
     fn len(&self) -> usize {
@@ -389,6 +389,56 @@ impl Surrogate for LazyGp {
         // fantasies never trigger lag-boundary refits: rollback must stay a
         // pure truncation of the packed factor
         self.factor.extend(&p, c);
+        self.refresh_alpha();
+        self.update_seconds += sw.elapsed_s();
+    }
+
+    /// Grouped fantasy refresh: all base borders against the existing
+    /// sample set are assembled in **one tiled batched pass**, the factor is
+    /// extended once per fantasy (inherent — each extension conditions the
+    /// next), and `α` is recomputed **once** at the end instead of per
+    /// fantasy. Final state is bitwise identical to a loop of
+    /// [`observe_fantasy`](Surrogate::observe_fantasy) calls; the cost drops
+    /// from `t·(extend + α-refresh) ≈ 2t·O(n²)` to `t·extend + 1·α-refresh`.
+    fn observe_fantasies(&mut self, batch: &[(Vec<f64>, f64)]) {
+        if batch.is_empty() {
+            return;
+        }
+        let sw = Stopwatch::new();
+        self.checkpoint();
+        let par = self.config.parallelism;
+        let n0 = self.cov.len();
+        let points: Vec<Vec<f64>> = batch.iter().map(|(x, _)| x.clone()).collect();
+        // borders of every fantasy against the *existing* points, one pass
+        let base = self.cov.borders_batch(&self.kernel, &points, par);
+        let qnorms: Vec<f64> =
+            points.iter().map(|x| crate::linalg::matrix::norm2_sq(x)).collect();
+        let c = self.kernel.self_cov() + self.kernel.params.noise;
+        for (k, (x, y)) in batch.iter().enumerate() {
+            // border = base column k ++ covariances against the k fantasies
+            // appended before this one (same expanded-distance entries the
+            // sequential push_with_border path computes)
+            let mut p = Vec::with_capacity(n0 + k);
+            for i in 0..n0 {
+                p.push(base[(i, k)]);
+            }
+            for j in 0..k {
+                let r2 = crate::kernels::functions::sq_dist_expanded(
+                    &points[j],
+                    x,
+                    qnorms[j],
+                    qnorms[k],
+                );
+                p.push(self.kernel.from_sq_dist(r2));
+            }
+            self.cov.push(x);
+            self.y.push(*y);
+            if self.best_idx.map_or(true, |i| *y > self.y[i]) {
+                self.best_idx = Some(self.y.len() - 1);
+            }
+            // fantasies never trigger lag-boundary refits (see observe_fantasy)
+            self.factor.extend(&p, c);
+        }
         self.refresh_alpha();
         self.update_seconds += sw.elapsed_s();
     }
@@ -525,6 +575,51 @@ mod tests {
         let (m, v) = gp.predict(&[1.0, 2.0]);
         assert!(m.is_finite() && v.is_finite());
         assert!(gp.extend_stats().clamped <= 1);
+    }
+
+    #[test]
+    fn batched_fantasies_bitwise_match_sequential() {
+        let mut rng = Pcg64::new(105);
+        let build = || {
+            let mut gp = LazyGp::paper_default();
+            let mut r = Pcg64::new(105);
+            for _ in 0..12 {
+                let x = vec![r.uniform(-3.0, 3.0), r.uniform(-3.0, 3.0)];
+                gp.observe(&x, (x[0] * x[1]).sin());
+            }
+            gp
+        };
+        let batch: Vec<(Vec<f64>, f64)> = (0..4)
+            .map(|_| {
+                (vec![rng.uniform(-3.0, 3.0), rng.uniform(-3.0, 3.0)], rng.uniform(-1.0, 1.0))
+            })
+            .collect();
+        let mut seq = build();
+        for (x, y) in &batch {
+            seq.observe_fantasy(x, *y);
+        }
+        let mut grouped = build();
+        grouped.observe_fantasies(&batch);
+        assert_eq!(seq.len(), grouped.len());
+        assert_eq!(seq.fantasies_active(), grouped.fantasies_active());
+        let (pa, pb) = (seq.posterior(), grouped.posterior());
+        assert_eq!(pa.mean_offset.to_bits(), pb.mean_offset.to_bits());
+        assert_eq!(pa.y_scale.to_bits(), pb.y_scale.to_bits());
+        for (a, b) in pa.alpha.iter().zip(pb.alpha) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for i in 0..pa.factor.dim() {
+            for (a, b) in pa.factor.row(i).iter().zip(pb.factor.row(i)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "factor row {i}");
+            }
+        }
+        // and the rollback restores the same base posterior in both
+        assert_eq!(seq.retract_fantasies(), grouped.retract_fantasies());
+        let probe = vec![0.4, -1.1];
+        let (ma, va) = seq.predict(&probe);
+        let (mb, vb) = grouped.predict(&probe);
+        assert_eq!(ma.to_bits(), mb.to_bits());
+        assert_eq!(va.to_bits(), vb.to_bits());
     }
 
     #[test]

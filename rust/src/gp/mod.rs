@@ -66,6 +66,18 @@ pub trait Surrogate: Send {
     /// reject real `observe` calls while fantasies are active.
     fn observe_fantasy(&mut self, x: &[f64], y: f64);
 
+    /// Record a whole batch of fantasy observations in one grouped refresh.
+    /// The default loops [`observe_fantasy`](Surrogate::observe_fantasy);
+    /// [`LazyGp`] overrides it to assemble all base borders in one tiled
+    /// batched pass and recompute `α` once at the end (bitwise identical to
+    /// the loop, but `t·O(n²)` instead of `2t·O(n²)`), which is what makes
+    /// the async coordinator's per-wave re-fantasizing cheap.
+    fn observe_fantasies(&mut self, batch: &[(Vec<f64>, f64)]) {
+        for (x, y) in batch {
+            self.observe_fantasy(x, *y);
+        }
+    }
+
     /// Remove every active fantasy, restoring the surrogate to the exact
     /// posterior it had before the first `observe_fantasy` (for [`LazyGp`]
     /// this is a bitwise `O(1)` truncation of the packed factor). Returns

@@ -50,29 +50,100 @@ impl<'a> Posterior<'a> {
     /// Batched posterior from a border *matrix* `K* ∈ R^{n×m}` (column per
     /// candidate). One multi-RHS forward substitution replaces `m`
     /// independent `O(n²)` solves, streaming each factor row once — the
-    /// §Perf optimization behind fast candidate scoring.
+    /// §Perf optimization behind fast candidate scoring. Serial reference
+    /// path; see [`predict_batch_from_borders_with`] for the tiled,
+    /// multi-threaded variant (bitwise identical).
+    ///
+    /// [`predict_batch_from_borders_with`]: Posterior::predict_batch_from_borders_with
     pub fn predict_batch_from_borders(&self, kstar: &crate::linalg::Matrix) -> Vec<(f64, f64)> {
+        self.predict_batch_from_borders_with(
+            kstar,
+            crate::util::parallel::Parallelism::Serial,
+        )
+    }
+
+    /// Tiled batched posterior: `K*`'s columns are split into blocks of
+    /// [`crate::linalg::triangular::SOLVE_BLOCK_COLS`]; each block fuses the
+    /// mean dot products `K*ᵀα`, the blocked forward substitution
+    /// `V = L⁻¹K*` and the per-column variance norms `‖V_c‖²` on one
+    /// contiguous scratch buffer, and blocks run on the scoped worker pool.
+    /// Per-column operation order matches the serial path exactly, so the
+    /// output is **bitwise identical** for every `par`.
+    pub fn predict_batch_from_borders_with(
+        &self,
+        kstar: &crate::linalg::Matrix,
+        par: crate::util::parallel::Parallelism,
+    ) -> Vec<(f64, f64)> {
         let n = self.factor.dim();
         debug_assert_eq!(kstar.rows(), n);
         let m = kstar.cols();
-        // means: K*ᵀ α in one pass
-        let dots = kstar.matvec_t(self.alpha);
-        // variances: column norms of V = L⁻¹ K*
-        let v = self.factor.solve_lower_multi(kstar);
-        let mut out = Vec::with_capacity(m);
+        let block_cols = crate::linalg::triangular::SOLVE_BLOCK_COLS;
+        let threads = par.workers_for(n * n * m / 2);
         let s2 = self.y_scale * self.y_scale;
         let prior = self.kernel.self_cov();
-        let mut col_norms = vec![0.0f64; m];
-        for i in 0..n {
-            let row = v.row(i);
-            for c in 0..m {
-                col_norms[c] += row[c] * row[c];
-            }
+        if m == 0 {
+            return Vec::new();
         }
-        for c in 0..m {
-            let mean = self.mean_offset + self.y_scale * dots[c];
-            let var = s2 * (prior - col_norms[c]).max(0.0);
-            out.push((mean, var));
+        if n == 0 {
+            return vec![(self.mean_offset, s2 * prior.max(0.0)); m];
+        }
+        let nblocks = m.div_ceil(block_cols);
+        // per block: (K*ᵀα, column norms of L⁻¹K*) for its columns
+        let mut blocks: Vec<(Vec<f64>, Vec<f64>)> = vec![(Vec::new(), Vec::new()); nblocks];
+        crate::util::parallel::for_each_chunk_mut(&mut blocks, 1, threads, |bi, slot| {
+            let c0 = bi * block_cols;
+            let bw = block_cols.min(m - c0);
+            let mut x = vec![0.0; n * bw];
+            for i in 0..n {
+                x[i * bw..(i + 1) * bw].copy_from_slice(&kstar.row(i)[c0..c0 + bw]);
+            }
+            // means: K*ᵀ α, accumulated over rows in ascending order (the
+            // matvec_t order of the serial path, including its zero skip)
+            let mut dots = vec![0.0f64; bw];
+            for i in 0..n {
+                let ai = self.alpha[i];
+                if ai != 0.0 {
+                    let row = &x[i * bw..(i + 1) * bw];
+                    for c in 0..bw {
+                        dots[c] += ai * row[c];
+                    }
+                }
+            }
+            // in-place blocked forward substitution V = L⁻¹ K*
+            for i in 0..n {
+                let lrow = self.factor.row(i);
+                let (solved, rest) = x.split_at_mut(i * bw);
+                let xi = &mut rest[..bw];
+                for (k, &lik) in lrow[..i].iter().enumerate() {
+                    if lik != 0.0 {
+                        let xk = &solved[k * bw..(k + 1) * bw];
+                        for c in 0..bw {
+                            xi[c] -= lik * xk[c];
+                        }
+                    }
+                }
+                let inv = 1.0 / lrow[i];
+                for v in xi.iter_mut() {
+                    *v *= inv;
+                }
+            }
+            // variances: per-column norms, rows ascending (serial order)
+            let mut norms = vec![0.0f64; bw];
+            for i in 0..n {
+                let row = &x[i * bw..(i + 1) * bw];
+                for c in 0..bw {
+                    norms[c] += row[c] * row[c];
+                }
+            }
+            slot[0] = (dots, norms);
+        });
+        let mut out = Vec::with_capacity(m);
+        for (dots, norms) in &blocks {
+            for (d, nv) in dots.iter().zip(norms) {
+                let mean = self.mean_offset + self.y_scale * d;
+                let var = s2 * (prior - nv).max(0.0);
+                out.push((mean, var));
+            }
         }
         out
     }

@@ -1,42 +1,196 @@
 //! Covariance-matrix assembly: `K_y`, border vectors `p`, cross-covariance
-//! `k*` — plus a norm cache so assembly shares work with the expanded
-//! distance form the XLA path uses.
+//! `k*` — all routed through **one shared tile kernel** so the full-matrix,
+//! border and cross paths cannot drift numerically, with optional
+//! multi-threaded tiling for the large-`n` hot path.
+//!
+//! Every entry is computed via the expanded distance
+//! `‖a−b‖² = ‖a‖² + ‖b‖² − 2aᵀb` (the same algebra as the XLA/Pallas
+//! path), using cached squared norms where available. Tiles partition the
+//! *output rows*, and each entry is produced by the identical sequence of
+//! floating-point operations regardless of thread count or tile width — so
+//! tiled/parallel assembly is **bitwise identical** to the serial
+//! reference (`rust/tests/property_suite.rs` pins this down).
 
-use super::functions::{sq_dist, Kernel};
+use super::functions::{sq_dist_expanded, Kernel};
+use crate::linalg::matrix::norm2_sq;
 use crate::linalg::Matrix;
+use crate::util::parallel::{for_each_chunk_mut, Parallelism};
 
-/// Full training covariance `K_y = κ(X, X) + noise·I` (paper Eq. 5).
-pub fn cov_matrix(kernel: &Kernel, xs: &[Vec<f64>]) -> Matrix {
-    let n = xs.len();
-    let mut k = Matrix::zeros(n, n);
-    for i in 0..n {
-        k[(i, i)] = kernel.self_cov() + kernel.params.noise;
+/// Rows per assembly tile. 32 rows of ≤ 4096 f64 columns keep a tile's
+/// output (≤ 1 MiB) plus the row points inside L2 while leaving enough
+/// tiles for dynamic balancing of the triangular row costs; see
+/// `docs/ARCHITECTURE.md` §Performance for the rationale and measurements.
+pub const COV_TILE_ROWS: usize = 32;
+
+/// The shared per-entry kernel: covariance of `a` against `b` from cached
+/// squared norms. *Every* assembly path below goes through this.
+#[inline]
+fn cov_entry(kernel: &Kernel, a: &[f64], b: &[f64], na: f64, nb: f64) -> f64 {
+    kernel.from_sq_dist(sq_dist_expanded(a, b, na, nb))
+}
+
+/// Fill rows `[r0, r0 + out.len()/n)` of the symmetric `K_y` (strict lower
+/// triangle + diagonal `diag`; the upper triangle is mirrored afterwards).
+fn fill_sym_tile(
+    kernel: &Kernel,
+    xs: &[Vec<f64>],
+    norms: &[f64],
+    diag: f64,
+    r0: usize,
+    out: &mut [f64],
+    n: usize,
+) {
+    for (local, row) in out.chunks_mut(n).enumerate() {
+        let i = r0 + local;
+        let (xi, ni) = (&xs[i], norms[i]);
         for j in 0..i {
-            let v = kernel.from_sq_dist(sq_dist(&xs[i], &xs[j]));
-            k[(i, j)] = v;
-            k[(j, i)] = v;
+            row[j] = cov_entry(kernel, xi, &xs[j], ni, norms[j]);
+        }
+        row[i] = diag;
+    }
+}
+
+/// Fill rows `[r0, r0 + out.len()/m)` of the rectangular `K* ∈ R^{n×m}`
+/// (training rows × candidate columns).
+#[allow(clippy::too_many_arguments)]
+fn fill_cross_tile(
+    kernel: &Kernel,
+    xs: &[Vec<f64>],
+    xnorms: &[f64],
+    cands: &[Vec<f64>],
+    cnorms: &[f64],
+    r0: usize,
+    out: &mut [f64],
+    m: usize,
+) {
+    for (local, row) in out.chunks_mut(m).enumerate() {
+        let i = r0 + local;
+        let (xi, ni) = (&xs[i], xnorms[i]);
+        for j in 0..m {
+            row[j] = cov_entry(kernel, xi, &cands[j], ni, cnorms[j]);
+        }
+    }
+}
+
+fn sym_from_norms(
+    kernel: &Kernel,
+    xs: &[Vec<f64>],
+    norms: &[f64],
+    threads: usize,
+    tile_rows: usize,
+) -> Matrix {
+    let n = xs.len();
+    let diag = kernel.self_cov() + kernel.params.noise;
+    let mut k = Matrix::zeros(n, n);
+    let tile_rows = tile_rows.max(1);
+    for_each_chunk_mut(k.as_mut_slice(), tile_rows * n.max(1), threads, |tile, out| {
+        fill_sym_tile(kernel, xs, norms, diag, tile * tile_rows, out, n);
+    });
+    // mirror the strict lower triangle (cheap relative to the kernel
+    // evaluations: pure copies, no arithmetic, so no reduction reordering)
+    for i in 0..n {
+        for j in (i + 1)..n {
+            k[(i, j)] = k[(j, i)];
         }
     }
     k
 }
 
+fn cross_from_norms(
+    kernel: &Kernel,
+    xs: &[Vec<f64>],
+    xnorms: &[f64],
+    cands: &[Vec<f64>],
+    cnorms: &[f64],
+    threads: usize,
+    tile_rows: usize,
+) -> Matrix {
+    let n = xs.len();
+    let m = cands.len();
+    let mut k = Matrix::zeros(n, m);
+    if m == 0 {
+        return k;
+    }
+    let tile_rows = tile_rows.max(1);
+    for_each_chunk_mut(k.as_mut_slice(), tile_rows * m, threads, |tile, out| {
+        fill_cross_tile(kernel, xs, xnorms, cands, cnorms, tile * tile_rows, out, m);
+    });
+    k
+}
+
+/// Full training covariance `K_y = κ(X, X) + noise·I` (paper Eq. 5) —
+/// serial reference path.
+pub fn cov_matrix(kernel: &Kernel, xs: &[Vec<f64>]) -> Matrix {
+    cov_matrix_with(kernel, xs, Parallelism::Serial)
+}
+
+/// Tiled, optionally multi-threaded `K_y` assembly. Bitwise identical to
+/// [`cov_matrix`] for every `par`.
+pub fn cov_matrix_with(kernel: &Kernel, xs: &[Vec<f64>], par: Parallelism) -> Matrix {
+    let n = xs.len();
+    let d = xs.first().map_or(1, |x| x.len().max(1));
+    let threads = par.workers_for(n * n * d / 2);
+    cov_matrix_tiled(kernel, xs, threads, COV_TILE_ROWS)
+}
+
+/// Explicit-knob variant (thread count + tile width) used by the property
+/// suite and benches to sweep configurations.
+pub fn cov_matrix_tiled(
+    kernel: &Kernel,
+    xs: &[Vec<f64>],
+    threads: usize,
+    tile_rows: usize,
+) -> Matrix {
+    let norms: Vec<f64> = xs.iter().map(|x| norm2_sq(x)).collect();
+    sym_from_norms(kernel, xs, &norms, threads, tile_rows)
+}
+
 /// Border vector `p` of paper Eq. 13: covariances of a new point against
 /// the existing sample set (no noise — noise only sits on the diagonal).
+/// Same expanded-distance entry as every other path.
 pub fn cov_vector(kernel: &Kernel, xs: &[Vec<f64>], x_new: &[f64]) -> Vec<f64> {
-    xs.iter().map(|x| kernel.from_sq_dist(sq_dist(x, x_new))).collect()
+    let xn = norm2_sq(x_new);
+    xs.iter().map(|x| cov_entry(kernel, x, x_new, norm2_sq(x), xn)).collect()
 }
 
 /// Cross-covariance matrix `K* ∈ R^{N×M}` between training points and `M`
-/// candidates (columns are candidates), used by batched posterior scoring.
+/// candidates (columns are candidates), used by batched posterior scoring —
+/// serial reference path.
 pub fn cov_cross(kernel: &Kernel, xs: &[Vec<f64>], cands: &[Vec<f64>]) -> Matrix {
-    let n = xs.len();
-    let m = cands.len();
-    Matrix::from_fn(n, m, |i, j| kernel.from_sq_dist(sq_dist(&xs[i], &cands[j])))
+    cov_cross_with(kernel, xs, cands, Parallelism::Serial)
+}
+
+/// Tiled, optionally multi-threaded `K*` assembly. Bitwise identical to
+/// [`cov_cross`] for every `par`.
+pub fn cov_cross_with(
+    kernel: &Kernel,
+    xs: &[Vec<f64>],
+    cands: &[Vec<f64>],
+    par: Parallelism,
+) -> Matrix {
+    let d = xs.first().map_or(1, |x| x.len().max(1));
+    let threads = par.workers_for(xs.len() * cands.len() * d);
+    cov_cross_tiled(kernel, xs, cands, threads, COV_TILE_ROWS)
+}
+
+/// Explicit-knob variant of [`cov_cross_with`] for tests/benches.
+pub fn cov_cross_tiled(
+    kernel: &Kernel,
+    xs: &[Vec<f64>],
+    cands: &[Vec<f64>],
+    threads: usize,
+    tile_rows: usize,
+) -> Matrix {
+    let xnorms: Vec<f64> = xs.iter().map(|x| norm2_sq(x)).collect();
+    let cnorms: Vec<f64> = cands.iter().map(|x| norm2_sq(x)).collect();
+    cross_from_norms(kernel, xs, &xnorms, cands, &cnorms, threads, tile_rows)
 }
 
 /// Incrementally maintained covariance state: the sample list plus cached
 /// squared norms (shared sub-expression of the expanded distance), so each
 /// border vector costs one pass over the data with no re-allocation of K.
+/// Full-matrix rebuilds ([`CovCache::full_cov`]) reuse the same cached
+/// norms through the same tile kernel as [`cov_matrix`].
 #[derive(Debug, Clone, Default)]
 pub struct CovCache {
     xs: Vec<Vec<f64>>,
@@ -64,41 +218,61 @@ impl CovCache {
         &self.xs[i]
     }
 
+    /// Append a point without computing a border (used by the batched
+    /// fantasy path, which assembles all borders in one tiled pass first).
+    pub fn push(&mut self, x: &[f64]) {
+        self.norms.push(norm2_sq(x));
+        self.xs.push(x.to_vec());
+    }
+
     /// Append a point, returning its border vector `p` against the points
     /// already present (Alg. 3 line 8) computed via the expanded form.
     pub fn push_with_border(&mut self, kernel: &Kernel, x: &[f64]) -> Vec<f64> {
-        let xn = crate::linalg::matrix::norm2_sq(x);
-        let p: Vec<f64> = self
-            .xs
-            .iter()
-            .zip(&self.norms)
-            .map(|(xi, &ni)| {
-                let r2 = super::functions::sq_dist_expanded(xi, x, ni, xn);
-                kernel.from_sq_dist(r2)
-            })
-            .collect();
-        self.xs.push(x.to_vec());
-        self.norms.push(xn);
+        let p = self.border(kernel, x);
+        self.push(x);
         p
     }
 
     /// Border vector without inserting (used for candidate scoring).
     pub fn border(&self, kernel: &Kernel, x: &[f64]) -> Vec<f64> {
-        let xn = crate::linalg::matrix::norm2_sq(x);
+        let xn = norm2_sq(x);
         self.xs
             .iter()
             .zip(&self.norms)
-            .map(|(xi, &ni)| {
-                let r2 = super::functions::sq_dist_expanded(xi, x, ni, xn);
-                kernel.from_sq_dist(r2)
-            })
+            .map(|(xi, &ni)| cov_entry(kernel, xi, x, ni, xn))
             .collect()
     }
 
+    /// Border *matrix* `K* ∈ R^{n×m}` for `m` query points in one tiled,
+    /// optionally multi-threaded pass (column `j` = [`border`](Self::border)
+    /// of `queries[j]`, bitwise). This is the batched-border machinery
+    /// behind `LazyGp::predict_batch` and the grouped fantasy refresh.
+    pub fn borders_batch(
+        &self,
+        kernel: &Kernel,
+        queries: &[Vec<f64>],
+        par: Parallelism,
+    ) -> Matrix {
+        let d = self.xs.first().map_or(1, |x| x.len().max(1));
+        let threads = par.workers_for(self.xs.len() * queries.len() * d);
+        let qnorms: Vec<f64> = queries.iter().map(|x| norm2_sq(x)).collect();
+        cross_from_norms(kernel, &self.xs, &self.norms, queries, &qnorms, threads, COV_TILE_ROWS)
+    }
+
     /// Rebuild the full `K_y` (needed at lag boundaries when the exact GP
-    /// re-fits kernel parameters).
+    /// re-fits kernel parameters) — serial reference path.
     pub fn full_cov(&self, kernel: &Kernel) -> Matrix {
-        cov_matrix(kernel, &self.xs)
+        self.full_cov_with(kernel, Parallelism::Serial)
+    }
+
+    /// Tiled, optionally multi-threaded `K_y` rebuild reusing the cached
+    /// squared norms. Bitwise identical to [`cov_matrix`] on the same
+    /// points (the cached norms are the same `norm2_sq` values).
+    pub fn full_cov_with(&self, kernel: &Kernel, par: Parallelism) -> Matrix {
+        let n = self.xs.len();
+        let d = self.xs.first().map_or(1, |x| x.len().max(1));
+        let threads = par.workers_for(n * n * d / 2);
+        sym_from_norms(kernel, &self.xs, &self.norms, threads, COV_TILE_ROWS)
     }
 
     /// Drop every point after the first `n` (exact rollback of appended
@@ -147,12 +321,13 @@ mod tests {
         let mut xs = points(&mut rng, 10, 3);
         let x_new = xs.pop().unwrap();
         let p = cov_vector(&k, &xs, &x_new);
-        // compare against the last column of the full matrix
+        // compare against the last column of the full matrix — both go
+        // through the shared expanded-distance tile kernel, so this is exact
         let mut all = xs.clone();
         all.push(x_new.clone());
         let full = cov_matrix(&k, &all);
         for i in 0..xs.len() {
-            assert!((p[i] - full[(9, i)]).abs() < 1e-14);
+            assert_eq!(p[i].to_bits(), full[(9, i)].to_bits(), "i={i}");
         }
     }
 
@@ -169,7 +344,7 @@ mod tests {
         let via_cache = cache.border(&k, &probe);
         let direct = cov_vector(&k, &xs, &probe);
         for (a, b) in via_cache.iter().zip(&direct) {
-            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
         }
     }
 
@@ -200,7 +375,9 @@ mod tests {
         let cs = points(&mut rng, 4, 3);
         let kc = cov_cross(&k, &xs, &cs);
         assert_eq!((kc.rows(), kc.cols()), (6, 4));
-        assert!((kc[(2, 3)] - k.eval(&xs[2], &cs[3])).abs() < 1e-15);
+        // eval() uses the direct squared distance; the assembly paths use
+        // the expanded form — equal up to cancellation round-off
+        assert!((kc[(2, 3)] - k.eval(&xs[2], &cs[3])).abs() < 1e-12);
     }
 
     #[test]
@@ -212,6 +389,81 @@ mod tests {
         for x in &xs {
             cache.push_with_border(&k, x);
         }
-        assert!(cache.full_cov(&k).max_abs_diff(&cov_matrix(&k, &xs)) < 1e-12);
+        assert_eq!(cache.full_cov(&k).max_abs_diff(&cov_matrix(&k, &xs)), 0.0);
+    }
+
+    #[test]
+    fn tiled_matrix_bitwise_equals_serial() {
+        let mut rng = Pcg64::new(73);
+        let k = Kernel::paper_default();
+        for &(n, d) in &[(1usize, 2usize), (7, 3), (40, 5), (65, 2)] {
+            let xs = points(&mut rng, n, d);
+            let serial = cov_matrix_tiled(&k, &xs, 1, COV_TILE_ROWS);
+            for threads in [2, 3, 4] {
+                for tile in [1, 5, 32] {
+                    let tiled = cov_matrix_tiled(&k, &xs, threads, tile);
+                    let same = serial
+                        .as_slice()
+                        .iter()
+                        .zip(tiled.as_slice())
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same, "n={n} d={d} threads={threads} tile={tile}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_cross_bitwise_equals_serial() {
+        let mut rng = Pcg64::new(75);
+        let k = Kernel::paper_default();
+        let xs = points(&mut rng, 33, 4);
+        let cs = points(&mut rng, 19, 4);
+        let serial = cov_cross_tiled(&k, &xs, &cs, 1, COV_TILE_ROWS);
+        for threads in [2, 4] {
+            for tile in [1, 7, 64] {
+                let tiled = cov_cross_tiled(&k, &xs, &cs, threads, tile);
+                let same = serial
+                    .as_slice()
+                    .iter()
+                    .zip(tiled.as_slice())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "threads={threads} tile={tile}");
+            }
+        }
+    }
+
+    #[test]
+    fn borders_batch_bitwise_equals_border_columns() {
+        let mut rng = Pcg64::new(77);
+        let k = Kernel::paper_default();
+        let xs = points(&mut rng, 21, 3);
+        let mut cache = CovCache::new();
+        for x in &xs {
+            cache.push_with_border(&k, x);
+        }
+        let queries = points(&mut rng, 9, 3);
+        for par in [Parallelism::Serial, Parallelism::Threads(3)] {
+            let kb = cache.borders_batch(&k, &queries, par);
+            assert_eq!((kb.rows(), kb.cols()), (21, 9));
+            for (j, q) in queries.iter().enumerate() {
+                let col = cache.border(&k, q);
+                for i in 0..21 {
+                    assert_eq!(kb[(i, j)].to_bits(), col[i].to_bits(), "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn borders_batch_empty_edges() {
+        let k = Kernel::paper_default();
+        let cache = CovCache::new();
+        let kb = cache.borders_batch(&k, &[vec![1.0]], Parallelism::Serial);
+        assert_eq!((kb.rows(), kb.cols()), (0, 1));
+        let mut cache = CovCache::new();
+        cache.push(&[0.5]);
+        let kb = cache.borders_batch(&k, &[], Parallelism::Threads(4));
+        assert_eq!((kb.rows(), kb.cols()), (1, 0));
     }
 }

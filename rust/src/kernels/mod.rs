@@ -14,5 +14,5 @@
 pub mod cov;
 pub mod functions;
 
-pub use cov::{cov_cross, cov_matrix, cov_vector, CovCache};
+pub use cov::{cov_cross, cov_cross_with, cov_matrix, cov_matrix_with, cov_vector, CovCache};
 pub use functions::{Kernel, KernelKind, KernelParams};

@@ -34,7 +34,9 @@
 //!   artifacts (layers 1+2), with a native fallback.
 //! * [`config`], [`metrics`], [`util`] — experiment configs (hand-rolled
 //!   JSON, doubling as the TCP wire format), traces/CSV, and the offline
-//!   substrates (RNG, CLI, bench, property testing).
+//!   substrates (RNG, CLI, bench, property testing, and the scoped
+//!   worker pool behind the tiled covariance/posterior hot paths —
+//!   `util::parallel`, bitwise-identical to serial at any thread count).
 //!
 //! Start with the `README.md` for the quickstart and bench matrix, and
 //! `docs/ARCHITECTURE.md` for the paper-section → module map and the

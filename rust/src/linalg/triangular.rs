@@ -3,8 +3,24 @@
 //! Forward substitution `L q = p` is the inner loop of the paper's Alg. 3
 //! (the `O(n²)` step that replaces the `O(n³)` refactorization), and the
 //! pair of solves `L α' = y`, `Lᵀ α = α'` implements Alg. 1 line 3.
+//!
+//! The multi-RHS variants additionally come in *column-blocked* forms
+//! ([`solve_lower_multi_blocked`], [`solve_lower_transpose_multi_blocked`]):
+//! the RHS columns are split into tiles of [`SOLVE_BLOCK_COLS`], each tile
+//! is solved on a contiguous scratch buffer (so every `L` row streams once
+//! per tile instead of once per column), and tiles run on the scoped
+//! worker pool. RHS columns are independent systems and each column's
+//! per-element operation order is unchanged, so the blocked/threaded
+//! results are **bitwise identical** to the serial reference for every
+//! thread count and block width.
 
 use super::matrix::{dot, Matrix};
+use crate::util::parallel::{for_each_chunk_mut, Parallelism};
+
+/// RHS columns per solve tile: 64 columns of f64 keep a scratch row (512 B)
+/// within one cache line burst and the whole tile (n × 64 doubles) inside
+/// L2 for the state sizes the acquisition path batches at.
+pub const SOLVE_BLOCK_COLS: usize = 64;
 
 /// Solve `L x = b` for lower-triangular `L` (forward substitution).
 /// `O(n²)`. Panics on shape mismatch; division by a zero diagonal yields
@@ -85,6 +101,155 @@ pub fn solve_lower_multi(l: &Matrix, b: &Matrix) -> Matrix {
         }
     }
     x
+}
+
+/// Column-blocked, optionally multi-threaded multi-RHS forward
+/// substitution. Splits `B`'s columns into tiles of `block_cols`, solves
+/// each tile on a contiguous `n × bw` scratch buffer, and distributes the
+/// tiles over `threads` scoped workers. Bitwise identical to
+/// [`solve_lower_multi`] for every `threads`/`block_cols`.
+pub fn solve_lower_multi_blocked(
+    l: &Matrix,
+    b: &Matrix,
+    threads: usize,
+    block_cols: usize,
+) -> Matrix {
+    assert!(l.is_square());
+    let n = l.rows();
+    assert_eq!(b.rows(), n, "solve_lower_multi shape");
+    assert!(block_cols > 0, "solve_lower_multi_blocked: block_cols must be > 0");
+    let m = b.cols();
+    if n == 0 || m == 0 {
+        return b.clone();
+    }
+    let nblocks = m.div_ceil(block_cols);
+    let mut blocks: Vec<Vec<f64>> = vec![Vec::new(); nblocks];
+    for_each_chunk_mut(&mut blocks, 1, threads, |bi, slot| {
+        let c0 = bi * block_cols;
+        let bw = block_cols.min(m - c0);
+        let mut x = vec![0.0; n * bw];
+        for i in 0..n {
+            x[i * bw..(i + 1) * bw].copy_from_slice(&b.row(i)[c0..c0 + bw]);
+        }
+        for i in 0..n {
+            let lrow = l.row(i);
+            let (solved, rest) = x.split_at_mut(i * bw);
+            let xi = &mut rest[..bw];
+            for (k, &lik) in lrow[..i].iter().enumerate() {
+                if lik != 0.0 {
+                    let xk = &solved[k * bw..(k + 1) * bw];
+                    for c in 0..bw {
+                        xi[c] -= lik * xk[c];
+                    }
+                }
+            }
+            let diag = lrow[i];
+            for v in xi.iter_mut() {
+                *v /= diag;
+            }
+        }
+        slot[0] = x;
+    });
+    assemble_blocks(n, m, block_cols, &blocks)
+}
+
+/// Multi-RHS backward substitution `Lᵀ X = B` over the non-transposed
+/// factor (serial reference; column `k` of `B` an independent RHS).
+pub fn solve_lower_transpose_multi(l: &Matrix, b: &Matrix) -> Matrix {
+    assert!(l.is_square());
+    let n = l.rows();
+    assert_eq!(b.rows(), n, "solve_lower_transpose_multi shape");
+    let m = b.cols();
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        let lrow = l.row(i).to_vec(); // copy to sidestep aliasing on x rows
+        let diag = lrow[i];
+        {
+            let xi = x.row_mut(i);
+            for c in 0..m {
+                xi[c] /= diag;
+            }
+        }
+        for (j, &lij) in lrow[..i].iter().enumerate() {
+            if lij != 0.0 {
+                let (xj, xi) = x.two_rows_mut(j, i);
+                for c in 0..m {
+                    xj[c] -= lij * xi[c];
+                }
+            }
+        }
+    }
+    x
+}
+
+/// Column-blocked, optionally multi-threaded multi-RHS backward
+/// substitution. Bitwise identical to [`solve_lower_transpose_multi`] for
+/// every `threads`/`block_cols`.
+pub fn solve_lower_transpose_multi_blocked(
+    l: &Matrix,
+    b: &Matrix,
+    threads: usize,
+    block_cols: usize,
+) -> Matrix {
+    assert!(l.is_square());
+    let n = l.rows();
+    assert_eq!(b.rows(), n, "solve_lower_transpose_multi shape");
+    assert!(block_cols > 0, "solve_lower_transpose_multi_blocked: block_cols must be > 0");
+    let m = b.cols();
+    if n == 0 || m == 0 {
+        return b.clone();
+    }
+    let nblocks = m.div_ceil(block_cols);
+    let mut blocks: Vec<Vec<f64>> = vec![Vec::new(); nblocks];
+    for_each_chunk_mut(&mut blocks, 1, threads, |bi, slot| {
+        let c0 = bi * block_cols;
+        let bw = block_cols.min(m - c0);
+        let mut x = vec![0.0; n * bw];
+        for i in 0..n {
+            x[i * bw..(i + 1) * bw].copy_from_slice(&b.row(i)[c0..c0 + bw]);
+        }
+        for i in (0..n).rev() {
+            let lrow = l.row(i);
+            let diag = lrow[i];
+            let (head, rest) = x.split_at_mut(i * bw);
+            let xi = &mut rest[..bw];
+            for v in xi.iter_mut() {
+                *v /= diag;
+            }
+            for (j, &lij) in lrow[..i].iter().enumerate() {
+                if lij != 0.0 {
+                    let xj = &mut head[j * bw..(j + 1) * bw];
+                    for c in 0..bw {
+                        xj[c] -= lij * xi[c];
+                    }
+                }
+            }
+        }
+        slot[0] = x;
+    });
+    assemble_blocks(n, m, block_cols, &blocks)
+}
+
+/// Gather per-tile `n × bw` scratch buffers back into an `n × m` matrix.
+fn assemble_blocks(n: usize, m: usize, block_cols: usize, blocks: &[Vec<f64>]) -> Matrix {
+    let mut out = Matrix::zeros(n, m);
+    for (bi, x) in blocks.iter().enumerate() {
+        let c0 = bi * block_cols;
+        let bw = block_cols.min(m - c0);
+        for i in 0..n {
+            out.row_mut(i)[c0..c0 + bw].copy_from_slice(&x[i * bw..(i + 1) * bw]);
+        }
+    }
+    out
+}
+
+/// [`solve_lower_multi`] with the [`Parallelism`] knob: picks the worker
+/// count from the `O(n² m)` solve work and the default block width.
+pub fn solve_lower_multi_with(l: &Matrix, b: &Matrix, par: Parallelism) -> Matrix {
+    let n = l.rows();
+    let m = b.cols();
+    let threads = par.workers_for(n * n * m / 2);
+    solve_lower_multi_blocked(l, b, threads, SOLVE_BLOCK_COLS)
 }
 
 /// Invert a lower-triangular matrix (used only by small verification code
@@ -190,6 +355,58 @@ mod tests {
             let xc = solve_lower(&l, &bc);
             for i in 0..n {
                 assert!((x[(i, col)] - xc[i]).abs() < 1e-11, "col {col} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_multi_rhs_bitwise_matches_serial() {
+        let mut rng = Pcg64::new(33);
+        for &(n, m) in &[(1usize, 1usize), (13, 7), (40, 130), (25, 64)] {
+            let l = random_lower(&mut rng, n);
+            let b = Matrix::from_fn(n, m, |_, _| rng.uniform(-2.0, 2.0));
+            let serial = solve_lower_multi(&l, &b);
+            for threads in [1, 2, 4] {
+                for block in [1, 3, 64, 200] {
+                    let blocked = solve_lower_multi_blocked(&l, &b, threads, block);
+                    let same = serial
+                        .as_slice()
+                        .iter()
+                        .zip(blocked.as_slice())
+                        .all(|(a, c)| a.to_bits() == c.to_bits());
+                    assert!(same, "n={n} m={m} threads={threads} block={block}");
+                }
+            }
+            let with = solve_lower_multi_with(&l, &b, crate::util::parallel::Parallelism::Threads(3));
+            assert_eq!(with.as_slice(), serial.as_slice());
+        }
+    }
+
+    #[test]
+    fn transpose_multi_rhs_matches_single_columns() {
+        let mut rng = Pcg64::new(35);
+        let n = 30;
+        let m = 11;
+        let l = random_lower(&mut rng, n);
+        let b = Matrix::from_fn(n, m, |_, _| rng.uniform(-2.0, 2.0));
+        let x = solve_lower_transpose_multi(&l, &b);
+        for col in 0..m {
+            let bc: Vec<f64> = (0..n).map(|i| b[(i, col)]).collect();
+            let xc = solve_lower_transpose(&l, &bc);
+            for i in 0..n {
+                assert!((x[(i, col)] - xc[i]).abs() < 1e-11, "col {col} row {i}");
+            }
+        }
+        // blocked/threaded is bitwise vs the serial multi reference
+        for threads in [2, 4] {
+            for block in [2, 5, 64] {
+                let blocked = solve_lower_transpose_multi_blocked(&l, &b, threads, block);
+                let same = x
+                    .as_slice()
+                    .iter()
+                    .zip(blocked.as_slice())
+                    .all(|(a, c)| a.to_bits() == c.to_bits());
+                assert!(same, "threads={threads} block={block}");
             }
         }
     }

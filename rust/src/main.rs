@@ -42,6 +42,7 @@ fn app() -> App {
                 .opt("iters", "optimization iterations", Some("100"))
                 .opt("seeds", "initial design size", Some("1"))
                 .opt("init", "random | lhs", Some("random"))
+                .opt("threads", "GP hot-path worker threads (0 = auto, 1 = serial)", Some("0"))
                 .opt("out", "write per-iteration trace CSV here", None),
         )
         .command(
@@ -60,6 +61,11 @@ fn app() -> App {
                 .opt("fail-prob", "failure injection probability", Some("0"))
                 .opt("transport", "thread | tcp (remote `lazygp worker`s)", Some("thread"))
                 .opt("listen", "tcp bind address (port 0 = ephemeral)", Some("127.0.0.1:7077"))
+                .opt(
+                    "gp-threads",
+                    "leader GP hot-path worker threads (0 = auto, 1 = serial)",
+                    Some("0"),
+                )
                 .opt("out", "write per-iteration trace CSV here", None),
         )
         .command(
@@ -138,11 +144,16 @@ fn cmd_run(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     let cfg = experiment_from_args(p)?;
     let obj = objectives::by_name(&cfg.objective)
         .ok_or_else(|| lazygp::err!("unknown objective `{}`", cfg.objective))?;
+    let par = lazygp::util::parallel::Parallelism::from_threads_flag(p.usize("threads")?);
     println!(
-        "## lazygp run — objective={} surrogate={:?} iters={} seed={}",
-        cfg.objective, cfg.surrogate, cfg.iters, cfg.seed
+        "## lazygp run — objective={} surrogate={:?} iters={} seed={} gp-threads={}",
+        cfg.objective,
+        cfg.surrogate,
+        cfg.iters,
+        cfg.seed,
+        par.resolve()
     );
-    let mut driver = BoDriver::new(cfg.bo_config(), obj);
+    let mut driver = BoDriver::new(cfg.bo_config().with_parallelism(par), obj);
     let sw = lazygp::util::timer::Stopwatch::new();
     let best = driver.run(cfg.iters);
     let wall = sw.elapsed_s();
@@ -212,7 +223,12 @@ fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     if !matches!(transport_kind.as_str(), "thread" | "tcp") {
         lazygp::bail!("bad --transport `{transport_kind}` (thread | tcp)");
     }
-    let bo = BoConfig::lazy().with_seed(seed).with_init(InitDesign::Random(1));
+    let par =
+        lazygp::util::parallel::Parallelism::from_threads_flag(p.usize("gp-threads")?);
+    let bo = BoConfig::lazy()
+        .with_seed(seed)
+        .with_init(InitDesign::Random(1))
+        .with_parallelism(par);
     match p.str_or("mode", "sync").as_str() {
         "sync" => {
             let coord = CoordinatorConfig {

@@ -7,6 +7,8 @@
 //! * [`stats`] — special functions (erf, normal pdf/cdf/quantile) and
 //!   summary statistics used by Expected Improvement and the metrics layer.
 //! * [`cli`] — a small declarative command-line parser (no `clap`).
+//! * [`parallel`] — a std-only scoped worker pool + the [`parallel::Parallelism`]
+//!   knob used by the tiled covariance/posterior hot paths (no `rayon`).
 //! * [`bench`] — a measurement harness for `cargo bench` targets
 //!   (no `criterion`); see `rust/benches/`.
 //! * [`proptest`] — a miniature property-based testing framework with
@@ -15,6 +17,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod parallel;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,193 @@
+//! A std-only scoped worker pool for the covariance/posterior hot paths.
+//!
+//! The crate is dependency-free, so instead of `rayon` this module provides
+//! the two primitives the tiled kernels need:
+//!
+//! * [`Parallelism`] — the user-facing knob (`serial` / `auto` /
+//!   `threads(k)`), threaded through `LazyGpConfig`, `ExactGpConfig`,
+//!   `BoConfig` and the CLI's `--threads`.
+//! * [`for_each_job`] / [`for_each_chunk_mut`] — run a fixed job list on a
+//!   `std::thread::scope` pool with dynamic (work-stealing) assignment, so
+//!   triangular tiles of very different sizes still balance.
+//!
+//! **Determinism contract:** parallel execution here never changes *what* is
+//! computed, only *who* computes it. Every tile kernel in `kernels::cov`,
+//! `linalg::triangular` and `gp::posterior` performs the exact same
+//! per-element floating-point operations in the exact same order as its
+//! serial reference, and tiles write disjoint outputs — so results are
+//! **bitwise identical** for every thread count and tile width. The
+//! property suite (`rust/tests/property_suite.rs`) pins this down.
+
+use std::sync::Mutex;
+
+/// How many worker threads the tiled hot paths may use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Parallelism {
+    /// Single-threaded: the serial reference path (also the fallback when
+    /// the problem is too small to amortize thread spawn).
+    Serial,
+    /// Use [`std::thread::available_parallelism`] (what `--threads 0`
+    /// resolves to). The default — safe because parallel results are
+    /// bitwise identical to serial.
+    #[default]
+    Auto,
+    /// Exactly `k` worker threads (clamped to ≥ 1).
+    Threads(usize),
+}
+
+impl Parallelism {
+    /// Resolve to a concrete worker count (≥ 1).
+    pub fn resolve(&self) -> usize {
+        match *self {
+            Parallelism::Serial => 1,
+            Parallelism::Auto => {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            }
+            Parallelism::Threads(k) => k.max(1),
+        }
+    }
+
+    /// CLI mapping: `0` = auto, `1` = serial, `k` = k threads.
+    pub fn from_threads_flag(n: usize) -> Self {
+        match n {
+            0 => Parallelism::Auto,
+            1 => Parallelism::Serial,
+            k => Parallelism::Threads(k),
+        }
+    }
+
+    /// Worker count for a task of `work` scalar operations: stays serial
+    /// below [`MIN_PAR_WORK`] so tiny problems (unit tests, warm-up
+    /// iterations) never pay thread-spawn latency.
+    pub fn workers_for(&self, work: usize) -> usize {
+        if work < MIN_PAR_WORK {
+            1
+        } else {
+            self.resolve()
+        }
+    }
+}
+
+/// Minimum number of scalar operations before the pool is engaged; below
+/// this, spawn + join latency (~tens of µs) dominates any speedup.
+pub const MIN_PAR_WORK: usize = 64 * 1024;
+
+/// Run every job in `jobs` exactly once across `threads` scoped workers.
+///
+/// Jobs are handed out dynamically (a shared iterator behind a mutex), so
+/// heterogeneous job costs — e.g. lower-triangle row tiles — balance
+/// without static partitioning. With `threads <= 1` or a single job the
+/// calling thread runs everything in order, no spawn.
+pub fn for_each_job<J, F>(jobs: Vec<J>, threads: usize, f: F)
+where
+    J: Send,
+    F: Fn(J) + Sync,
+{
+    if threads <= 1 || jobs.len() <= 1 {
+        for job in jobs {
+            f(job);
+        }
+        return;
+    }
+    let workers = threads.min(jobs.len());
+    let queue = Mutex::new(jobs.into_iter());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                // hold the lock only for the pop, not the work
+                let job = queue.lock().unwrap().next();
+                match job {
+                    Some(job) => f(job),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// Split `data` into consecutive chunks of `chunk_len` elements (the last
+/// may be shorter) and run `f(chunk_index, chunk)` for each, distributed
+/// over `threads` workers. Chunks are disjoint `&mut` slices, so workers
+/// can write results in place without synchronization.
+pub fn for_each_chunk_mut<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "for_each_chunk_mut: chunk_len must be > 0");
+    if threads <= 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let jobs: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_len).enumerate().collect();
+    for_each_job(jobs, threads, |(i, chunk)| f(i, chunk));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn resolve_is_at_least_one() {
+        assert_eq!(Parallelism::Serial.resolve(), 1);
+        assert!(Parallelism::Auto.resolve() >= 1);
+        assert_eq!(Parallelism::Threads(0).resolve(), 1);
+        assert_eq!(Parallelism::Threads(3).resolve(), 3);
+    }
+
+    #[test]
+    fn threads_flag_mapping() {
+        assert_eq!(Parallelism::from_threads_flag(0), Parallelism::Auto);
+        assert_eq!(Parallelism::from_threads_flag(1), Parallelism::Serial);
+        assert_eq!(Parallelism::from_threads_flag(4), Parallelism::Threads(4));
+    }
+
+    #[test]
+    fn small_work_stays_serial() {
+        assert_eq!(Parallelism::Threads(8).workers_for(10), 1);
+        assert_eq!(Parallelism::Threads(8).workers_for(MIN_PAR_WORK), 8);
+    }
+
+    #[test]
+    fn for_each_job_runs_every_job_once() {
+        for threads in [1, 2, 4, 7] {
+            let hits = AtomicUsize::new(0);
+            for_each_job((0..57usize).collect(), threads, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 57, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn chunks_cover_data_exactly_for_all_thread_counts() {
+        for threads in [1, 2, 3, 8] {
+            for chunk_len in [1, 3, 16, 100] {
+                let mut data = vec![0u32; 83];
+                for_each_chunk_mut(&mut data, chunk_len, threads, |idx, chunk| {
+                    for (off, v) in chunk.iter_mut().enumerate() {
+                        *v = (idx * chunk_len + off) as u32 + 1;
+                    }
+                });
+                for (i, v) in data.iter().enumerate() {
+                    assert_eq!(*v, i as u32 + 1, "threads={threads} chunk_len={chunk_len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_job_lists_work() {
+        for_each_job(Vec::<usize>::new(), 4, |_| panic!("no jobs expected"));
+        let hits = AtomicUsize::new(0);
+        for_each_job(vec![1], 4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        let mut empty: Vec<f64> = Vec::new();
+        for_each_chunk_mut(&mut empty, 4, 4, |_, _| panic!("no chunks expected"));
+    }
+}

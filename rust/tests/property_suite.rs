@@ -5,13 +5,21 @@ use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
 use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign, PendingStrategy};
 use lazygp::config::json::Json;
 use lazygp::gp::lazy::LazyGp;
+use lazygp::gp::posterior::{compute_alpha, Posterior};
 use lazygp::gp::Surrogate;
-use lazygp::kernels::{cov_matrix, Kernel, KernelKind, KernelParams};
+use lazygp::kernels::cov::cov_matrix_tiled;
+use lazygp::kernels::{cov_matrix, CovCache, Kernel, KernelKind, KernelParams};
+use lazygp::linalg::triangular::{solve_lower_multi, solve_lower_multi_blocked};
 use lazygp::linalg::{GrowingCholesky, Matrix};
 use lazygp::objectives::levy::Levy;
+use lazygp::util::parallel::Parallelism;
 use lazygp::util::proptest as pt;
 use lazygp::util::rng::Pcg64;
 use lazygp::util::stats::{norm_cdf, norm_pdf};
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
 
 /// JSON: serialize∘parse is the identity on randomly generated values.
 #[test]
@@ -278,6 +286,186 @@ fn prop_driver_fantasize_retract_is_lossless() {
                 && retracted == pending.len()
                 && (d.surrogate().len(), m.to_bits(), v.to_bits()) == before
         })
+    });
+}
+
+/// Tiled/multi-threaded covariance assembly is **bitwise identical** to the
+/// serial reference for random sizes, dimensions, thread counts and tile
+/// widths — parallelism only changes who computes, never what.
+#[test]
+fn prop_tiled_cov_assembly_bitwise() {
+    let g = pt::usize_in(1, 60);
+    pt::check("tiled_cov_bitwise", &g, |&n| {
+        let mut rng = Pcg64::new(n as u64 + 9700);
+        let d = 1 + n % 5;
+        let kernel = Kernel::paper_default();
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.uniform(-6.0, 6.0)).collect()).collect();
+        let serial = cov_matrix(&kernel, &xs);
+        let threads = 1 + (n % 4);
+        let tile = 1 + (n % 37);
+        let tiled = cov_matrix_tiled(&kernel, &xs, threads, tile);
+        // the CovCache rebuild shares the same tile kernel + cached norms
+        let mut cache = CovCache::new();
+        for x in &xs {
+            cache.push(x);
+        }
+        let via_cache = cache.full_cov_with(&kernel, Parallelism::Threads(threads));
+        bits_eq(serial.as_slice(), tiled.as_slice())
+            && bits_eq(serial.as_slice(), via_cache.as_slice())
+    });
+}
+
+/// The batched border matrix is column-for-column bitwise identical to
+/// per-point border vectors, for every thread count.
+#[test]
+fn prop_borders_batch_bitwise() {
+    let g = pt::usize_in(1, 40);
+    pt::check("borders_batch_bitwise", &g, |&n| {
+        let mut rng = Pcg64::new(n as u64 + 9750);
+        let d = 1 + n % 4;
+        let kernel = Kernel::paper_default();
+        let mut cache = CovCache::new();
+        for _ in 0..n {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            cache.push(&x);
+        }
+        let m = 1 + n % 7;
+        let queries: Vec<Vec<f64>> =
+            (0..m).map(|_| (0..d).map(|_| rng.uniform(-5.0, 5.0)).collect()).collect();
+        let threads = 1 + n % 4;
+        let kb = cache.borders_batch(&kernel, &queries, Parallelism::Threads(threads));
+        queries.iter().enumerate().all(|(j, q)| {
+            let col = cache.border(&kernel, q);
+            (0..n).all(|i| kb[(i, j)].to_bits() == col[i].to_bits())
+        })
+    });
+}
+
+/// Blocked / multi-threaded multi-RHS forward substitution is bitwise
+/// identical to the serial reference, over both the dense and the packed
+/// factor, for random sizes, thread counts and block widths.
+#[test]
+fn prop_blocked_solves_bitwise() {
+    let g = pt::usize_in(1, 45);
+    pt::check("blocked_solves_bitwise", &g, |&n| {
+        let mut rng = Pcg64::new(n as u64 + 9800);
+        let kernel = Kernel::paper_default();
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..3).map(|_| rng.uniform(-5.0, 5.0)).collect()).collect();
+        let k = cov_matrix(&kernel, &xs);
+        let Ok(packed) = GrowingCholesky::from_spd(&k) else {
+            return false;
+        };
+        let dense = packed.to_dense();
+        let m = 1 + n % 9;
+        let b = Matrix::from_fn(n, m, |_, _| rng.uniform(-2.0, 2.0));
+        let threads = 1 + n % 4;
+        let block = 1 + n % 13;
+        let free_serial = solve_lower_multi(&dense, &b);
+        let free_blocked = solve_lower_multi_blocked(&dense, &b, threads, block);
+        let packed_serial = packed.solve_lower_multi(&b);
+        let packed_blocked = packed.solve_lower_multi_blocked(&b, threads, block);
+        bits_eq(free_serial.as_slice(), free_blocked.as_slice())
+            && bits_eq(packed_serial.as_slice(), packed_blocked.as_slice())
+    });
+}
+
+/// Tiled batched posterior scoring (means + variances) is bitwise identical
+/// to the serial path for every thread count.
+#[test]
+fn prop_batched_posterior_scoring_bitwise() {
+    let g = pt::usize_in(1, 35);
+    pt::check("batched_posterior_bitwise", &g, |&n| {
+        let mut rng = Pcg64::new(n as u64 + 9850);
+        let kernel = Kernel::paper_default();
+        let mut cache = CovCache::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let x: Vec<f64> = (0..3).map(|_| rng.uniform(-4.0, 4.0)).collect();
+            ys.push(x.iter().sum::<f64>().cos());
+            cache.push(&x);
+        }
+        let k = cache.full_cov(&kernel);
+        let Ok(factor) = GrowingCholesky::from_spd(&k) else {
+            return false;
+        };
+        let alpha = compute_alpha(&factor, &ys, 0.0, 1.0);
+        let post =
+            Posterior { factor: &factor, alpha: &alpha, mean_offset: 0.0, y_scale: 1.0, kernel };
+        let m = 1 + n % 11;
+        let cands: Vec<Vec<f64>> =
+            (0..m).map(|_| (0..3).map(|_| rng.uniform(-4.0, 4.0)).collect()).collect();
+        let kstar = cache.borders_batch(&kernel, &cands, Parallelism::Serial);
+        let serial = post.predict_batch_from_borders_with(&kstar, Parallelism::Serial);
+        let threads = 2 + n % 3;
+        let tiled = post.predict_batch_from_borders_with(&kstar, Parallelism::Threads(threads));
+        serial.len() == tiled.len()
+            && serial.iter().zip(&tiled).all(|((ma, va), (mb, vb))| {
+                ma.to_bits() == mb.to_bits() && va.to_bits() == vb.to_bits()
+            })
+    });
+}
+
+/// The grouped batched fantasy refresh (`Surrogate::observe_fantasies`) is
+/// bitwise identical to a loop of single fantasy inserts, and the rollback
+/// restores the pre-speculation posterior bitwise in both cases.
+#[test]
+fn prop_batched_fantasy_refresh_bitwise_rollback() {
+    let g = pt::usize_in(1, 20);
+    pt::check("batched_fantasy_bitwise", &g, |&n| {
+        let build = |seed: u64| {
+            let mut gp = LazyGp::paper_default();
+            let mut r = Pcg64::new(seed);
+            for _ in 0..n {
+                let x = vec![r.uniform(-4.0, 4.0), r.uniform(-4.0, 4.0)];
+                gp.observe(&x, x.iter().sum::<f64>().tanh());
+            }
+            gp
+        };
+        let mut rng = Pcg64::new(n as u64 + 9900);
+        let batch: Vec<(Vec<f64>, f64)> = (0..1 + n % 5)
+            .map(|_| {
+                (vec![rng.uniform(-4.0, 4.0), rng.uniform(-4.0, 4.0)], rng.uniform(-1.0, 1.0))
+            })
+            .collect();
+        let probe = vec![rng.uniform(-4.0, 4.0), rng.uniform(-4.0, 4.0)];
+        let mut seq = build(n as u64);
+        let mut grouped = build(n as u64);
+        let before = {
+            let (m, v) = seq.predict(&probe);
+            (m.to_bits(), v.to_bits())
+        };
+        for (x, y) in &batch {
+            seq.observe_fantasy(x, *y);
+        }
+        grouped.observe_fantasies(&batch);
+        // identical augmented posterior...
+        let same_augmented = {
+            let (pa, pb) = (seq.posterior(), grouped.posterior());
+            bits_eq(pa.alpha, pb.alpha)
+                && pa.mean_offset.to_bits() == pb.mean_offset.to_bits()
+                && pa.y_scale.to_bits() == pb.y_scale.to_bits()
+                && (0..pa.factor.dim()).all(|i| bits_eq(pa.factor.row(i), pb.factor.row(i)))
+        };
+        // ...and identical bitwise restore on rollback
+        let removed_seq = seq.retract_fantasies();
+        let removed_grp = grouped.retract_fantasies();
+        let after_seq = {
+            let (m, v) = seq.predict(&probe);
+            (m.to_bits(), v.to_bits())
+        };
+        let after_grp = {
+            let (m, v) = grouped.predict(&probe);
+            (m.to_bits(), v.to_bits())
+        };
+        same_augmented
+            && removed_seq == batch.len()
+            && removed_grp == batch.len()
+            && after_seq == before
+            && after_grp == before
+            && seq.fantasies_active() == 0
+            && grouped.fantasies_active() == 0
     });
 }
 
