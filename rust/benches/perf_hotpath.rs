@@ -14,8 +14,10 @@
 //! `LAZYGP_BENCH_QUICK=1` selects the short smoke sizes.
 
 use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
+use lazygp::gp::hyperfit::{fit_params_reference, FitSpace};
 use lazygp::gp::lazy::LazyGp;
 use lazygp::gp::posterior::{compute_alpha, Posterior};
+use lazygp::gp::refit::RefitEngine;
 use lazygp::gp::Surrogate;
 use lazygp::kernels::cov::{cov_matrix_tiled, COV_TILE_ROWS};
 use lazygp::kernels::{cov_matrix, cov_matrix_with, CovCache, Kernel};
@@ -185,6 +187,58 @@ fn main() {
             per_t.push((t, r.min_s()));
         }
         sweep.push((format!("posterior_scoring/n={n}"), serial, per_t));
+    }
+
+    // ---- hyper-fit refit: naive loop vs the gp::refit engine ----
+    // serial baseline = fit_params_reference (the pre-engine loop: fresh
+    // distances + fresh factorization per candidate); tiled = the
+    // distance-caching engine at t threads. Bitwise-identical fitted
+    // params are asserted before anything is timed.
+    b.group("hyperparameter refit (grid=5 + refinement, d=5)");
+    let refit_ns: &[usize] = if quick { &[256] } else { &[1024] };
+    for &n in refit_ns {
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..5).map(|_| rng.uniform(-5.0, 5.0)).collect()).collect();
+        let y: Vec<f64> = xs.iter().map(|x| x.iter().sum::<f64>().sin()).collect();
+        let space = FitSpace::default();
+        let base = Kernel::paper_default();
+        let want = fit_params_reference(&base, &xs, &y, &space);
+        for t in [1usize, 2, 4] {
+            let got = RefitEngine::one_shot(Parallelism::Threads(t)).fit(&base, &xs, &y, &space);
+            assert!(
+                got.length_scale.to_bits() == want.length_scale.to_bits()
+                    && got.variance.to_bits() == want.variance.to_bits(),
+                "refit engine diverged from the naive loop at n={n} t={t}"
+            );
+        }
+        let serial = b
+            .bench(&format!("n={n} naive"), || {
+                black_box(fit_params_reference(&base, &xs, &y, &space));
+            })
+            .min_s();
+        let mut per_t = Vec::new();
+        for &t in &thread_counts {
+            let r = b.bench(&format!("n={n} engine t={t}"), || {
+                black_box(
+                    RefitEngine::one_shot(Parallelism::Threads(t)).fit(&base, &xs, &y, &space),
+                );
+            });
+            per_t.push((t, r.min_s()));
+        }
+        sweep.push((format!("hyperfit_refit/n={n}"), serial, per_t));
+        // warm-started persistent engine: refit #2 onward searches an
+        // adaptive window around the previous optimum (what a lag-boundary
+        // actually pays); same naive loop as the baseline
+        let mut per_t_warm = Vec::new();
+        for &t in &thread_counts {
+            let mut engine = RefitEngine::new(Parallelism::Threads(t));
+            engine.fit(&base, &xs, &y, &space); // seed the warm window
+            let r = b.bench(&format!("n={n} engine warm t={t}"), || {
+                black_box(engine.fit(&base, &xs, &y, &space));
+            });
+            per_t_warm.push((t, r.min_s()));
+        }
+        sweep.push((format!("hyperfit_refit_warm/n={n}"), serial, per_t_warm));
     }
     b.config = prior_config;
 

@@ -89,8 +89,12 @@ pub struct BoConfig {
     /// min normalized distance between batch suggestions (§3.4 dedup)
     pub batch_min_dist: f64,
     /// worker threads for the surrogate's tiled covariance/posterior hot
-    /// paths (CLI `--threads`; results are bitwise identical regardless)
+    /// paths and the refit engine (CLI `--threads`; results are bitwise
+    /// identical regardless)
     pub parallelism: Parallelism,
+    /// hyper-fit grid resolution per axis (CLI `run --fit-grid`); applies
+    /// to `ExactGp` per-step refits and `LazyGp` lag-boundary refits
+    pub fit_grid: usize,
 }
 
 impl BoConfig {
@@ -105,6 +109,7 @@ impl BoConfig {
             seed: 0,
             batch_min_dist: 0.05,
             parallelism: Parallelism::default(),
+            fit_grid: crate::gp::hyperfit::FitSpace::default().grid,
         }
     }
 
@@ -143,12 +148,20 @@ impl BoConfig {
         self
     }
 
+    /// Hyper-fit grid resolution per axis (CLI `run --fit-grid`).
+    pub fn with_fit_grid(mut self, grid: usize) -> Self {
+        self.fit_grid = grid;
+        self
+    }
+
     fn build_surrogate(&self) -> Box<dyn Surrogate> {
+        let fit_space = crate::gp::hyperfit::FitSpace::default().with_grid(self.fit_grid);
         match self.surrogate {
             SurrogateChoice::Lazy { lag } => Box::new(LazyGp::new(
                 LazyGpConfig {
                     kernel: self.kernel,
                     parallelism: self.parallelism,
+                    fit_space,
                     ..LazyGpConfig::default()
                 }
                 .with_lag(lag),
@@ -156,6 +169,7 @@ impl BoConfig {
             SurrogateChoice::Exact => Box::new(ExactGp::new(ExactGpConfig {
                 kernel: self.kernel,
                 parallelism: self.parallelism,
+                fit_space,
                 ..Default::default()
             })),
         }

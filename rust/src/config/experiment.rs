@@ -57,6 +57,7 @@ impl ExperimentConfig {
             seed: self.seed,
             batch_min_dist: 0.05,
             parallelism: crate::util::parallel::Parallelism::default(),
+            fit_grid: crate::gp::hyperfit::FitSpace::default().grid,
         }
     }
 

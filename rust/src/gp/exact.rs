@@ -5,8 +5,9 @@
 //! iteration, so the covariance matrix changes entirely and must be
 //! re-factorized with the `O(n³)` Cholesky (paper Alg. 2).
 
-use super::hyperfit::{fit_params, FitSpace};
+use super::hyperfit::FitSpace;
 use super::posterior::{compute_alpha, standardize, Posterior};
+use super::refit::{RefitEngine, RefitEngineStats};
 use super::Surrogate;
 use crate::kernels::{cov_matrix_with, cov_vector, Kernel};
 use crate::linalg::cholesky::cholesky_unblocked;
@@ -18,7 +19,12 @@ use crate::util::timer::Stopwatch;
 #[derive(Debug, Clone)]
 pub struct ExactGpConfig {
     pub kernel: Kernel,
-    /// re-fit kernel parameters each step (the paper's baseline behaviour)
+    /// re-fit kernel parameters each step (the paper's baseline *cadence*).
+    /// The search itself runs on the warm-started `gp::refit` engine: full
+    /// grid on the first step, an adaptive window around the previous
+    /// optimum afterwards (with window-edge fallback + periodic full-grid
+    /// refresh) — so per-step fits are much cheaper than, and can differ
+    /// from, an exhaustive full-grid search at every step.
     pub refit_each_step: bool,
     pub fit_space: FitSpace,
     /// use the textbook unblocked Alg. 2 (true ⇒ faithful to the paper's
@@ -57,11 +63,16 @@ pub struct ExactGp {
     /// `(real observation count, best_idx at checkpoint)` while fantasy
     /// observations are stacked on top of the real data
     fantasy_base: Option<(usize, Option<usize>)>,
+    /// persistent refit engine for the per-step hyper-fit: the pairwise
+    /// distance matrix is built once per step and each step warm-starts
+    /// from the previous step's optimum
+    refit: RefitEngine,
 }
 
 impl ExactGp {
     pub fn new(config: ExactGpConfig) -> Self {
         let kernel = config.kernel;
+        let refit = RefitEngine::new(config.parallelism);
         Self {
             config,
             kernel,
@@ -74,12 +85,18 @@ impl ExactGp {
             update_seconds: 0.0,
             best_idx: None,
             fantasy_base: None,
+            refit,
         }
     }
 
     /// Current kernel (after any re-fit).
     pub fn kernel(&self) -> &Kernel {
         &self.kernel
+    }
+
+    /// Refit-engine telemetry of the per-step hyper-fits.
+    pub fn refit_engine_stats(&self) -> RefitEngineStats {
+        self.refit.stats()
     }
 
     pub fn posterior(&self) -> Posterior<'_> {
@@ -159,7 +176,7 @@ impl Surrogate for ExactGp {
             self.best_idx = Some(self.y.len() - 1);
         }
         if self.config.refit_each_step && self.xs.len() >= 3 {
-            let fitted = fit_params(&self.kernel, &self.xs, &self.y, &self.config.fit_space);
+            let fitted = self.refit.fit(&self.kernel, &self.xs, &self.y, &self.config.fit_space);
             self.kernel.params = fitted;
         }
         self.refactorize();
@@ -306,6 +323,12 @@ mod tests {
         // either ls or variance should have moved (LML-improving)
         let p = gp.kernel().params;
         assert!(p.length_scale != 1.0 || p.variance != 1.0);
+        // every per-step hyper-fit ran on the engine: one distance build
+        // each, and all steps after the first warm-started
+        let stats = gp.refit_engine_stats();
+        assert_eq!(stats.refits, 10); // steps 3..=12
+        assert_eq!(stats.distance_builds, stats.refits);
+        assert_eq!(stats.warm_start_refits, stats.refits - 1);
     }
 
     #[test]

@@ -2,14 +2,24 @@
 //!
 //! The standard BO loop (the paper's baseline) re-learns `(σ², ρ)` from the
 //! data at every iteration; the lazy GP does it never (or only at lag
-//! boundaries). We fit over a log-scale grid followed by two rounds of
-//! golden-section refinement per axis — derivative-free, robust, and cheap
-//! relative to the `O(n³)` factorization each candidate set requires
-//! (which is exactly the cost the paper is attacking).
+//! boundaries). We fit over a log-scale grid followed by golden-section
+//! refinement per axis — derivative-free, robust, and cheap relative to the
+//! `O(n³)` factorization each candidate set requires (which is exactly the
+//! cost the paper is attacking).
+//!
+//! The production search runs on the [`crate::gp::refit`] engine: the
+//! pairwise distance matrix is computed **once per refit**, candidates fan
+//! out over the worker pool with per-worker scratch arenas, and successive
+//! refits warm-start from the previous optimum. This module keeps the
+//! one-shot [`fit_params`] entry point (now engine-backed) plus
+//! [`fit_params_reference`], the naive serial loop the engine is
+//! property-tested (bitwise) against and that the `perf_hotpath` refit
+//! sweep uses as its baseline.
 
 use crate::kernels::{cov_matrix, Kernel, KernelParams};
 use crate::linalg::matrix::dot;
 use crate::linalg::GrowingCholesky;
+use crate::util::parallel::Parallelism;
 
 /// Search space for the fit (log-uniform in both axes).
 #[derive(Debug, Clone, Copy)]
@@ -26,41 +36,79 @@ impl Default for FitSpace {
     }
 }
 
+impl FitSpace {
+    /// Override the per-axis grid resolution (CLI `run --fit-grid`).
+    pub fn with_grid(mut self, grid: usize) -> Self {
+        self.grid = grid;
+        self
+    }
+}
+
+/// Log-uniform grid of `n` points over `(lo, hi)` — shared by the naive
+/// loop and the refit engine so their candidate sets are bitwise equal.
+pub(crate) fn log_grid((lo, hi): (f64, f64), n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            let t = i as f64 / (n - 1).max(1) as f64;
+            (lo.ln() + t * (hi.ln() - lo.ln())).exp()
+        })
+        .collect()
+}
+
 /// Log marginal likelihood of `(xs, y)` under `kernel`, or `-inf` if the
 /// covariance is numerically non-PD for these parameters.
 pub fn lml(kernel: &Kernel, xs: &[Vec<f64>], y: &[f64]) -> f64 {
+    let mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+    let centered: Vec<f64> = y.iter().map(|v| v - mean).collect();
+    lml_centered(kernel, xs, &centered)
+}
+
+/// [`lml`] with the target centering hoisted out: `y_centered` must already
+/// be `y − mean(y)`. The per-candidate fit loops center **once per refit**
+/// and call this, instead of recomputing the mean for every candidate.
+pub fn lml_centered(kernel: &Kernel, xs: &[Vec<f64>], y_centered: &[f64]) -> f64 {
     let k = cov_matrix(kernel, xs);
     let factor = match GrowingCholesky::from_spd(&k) {
         Ok(f) => f,
         Err(_) => return f64::NEG_INFINITY,
     };
-    let mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
-    let centered: Vec<f64> = y.iter().map(|v| v - mean).collect();
-    let alpha = factor.solve_spd(&centered);
-    -0.5 * dot(&centered, &alpha)
+    let alpha = factor.solve_spd(y_centered);
+    -0.5 * dot(y_centered, &alpha)
         - factor.sum_log_diag()
-        - 0.5 * y.len() as f64 * (2.0 * std::f64::consts::PI).ln()
+        - 0.5 * y_centered.len() as f64 * (2.0 * std::f64::consts::PI).ln()
 }
 
 /// Fit `(length_scale, variance)` by LML maximization; noise is kept from
 /// `base`. Returns the best parameters found (≥ as good as `base` itself,
-/// which is always included in the candidate set).
+/// which is always candidate 0).
+///
+/// One-shot entry point: runs a full-grid search on a fresh
+/// [`crate::gp::refit::RefitEngine`] (serial; the surrogates hold
+/// persistent, parallel, warm-starting engines instead). The result is
+/// bitwise identical to [`fit_params_reference`].
 pub fn fit_params(base: &Kernel, xs: &[Vec<f64>], y: &[f64], space: &FitSpace) -> KernelParams {
+    crate::gp::refit::RefitEngine::one_shot(Parallelism::Serial).fit(base, xs, y, space)
+}
+
+/// The naive serial loop: every candidate re-assembles the covariance from
+/// scratch (recomputing every pairwise distance) and re-factorizes. Kept as
+/// the bitwise reference for the engine's property suite and as the
+/// baseline the `perf_hotpath` refit sweep measures the engine against.
+pub fn fit_params_reference(
+    base: &Kernel,
+    xs: &[Vec<f64>],
+    y: &[f64],
+    space: &FitSpace,
+) -> KernelParams {
     if xs.len() < 3 {
         // not enough data to say anything; keep the prior parameters
         return base.params;
     }
-    let log_grid = |(lo, hi): (f64, f64), n: usize| -> Vec<f64> {
-        (0..n)
-            .map(|i| {
-                let t = i as f64 / (n - 1).max(1) as f64;
-                (lo.ln() + t * (hi.ln() - lo.ln())).exp()
-            })
-            .collect()
-    };
+    let mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+    let centered: Vec<f64> = y.iter().map(|v| v - mean).collect();
 
     let mut best = base.params;
-    let mut best_lml = lml(base, xs, y);
+    let mut best_lml = lml_centered(base, xs, &centered);
 
     for &ls in &log_grid(space.length_scale, space.grid) {
         for &var in &log_grid(space.variance, space.grid) {
@@ -68,7 +116,7 @@ pub fn fit_params(base: &Kernel, xs: &[Vec<f64>], y: &[f64], space: &FitSpace) -
                 base.kind,
                 KernelParams { length_scale: ls, variance: var, noise: base.params.noise },
             );
-            let v = lml(&cand, xs, y);
+            let v = lml_centered(&cand, xs, &centered);
             if v > best_lml {
                 best_lml = v;
                 best = cand.params;
@@ -76,32 +124,42 @@ pub fn fit_params(base: &Kernel, xs: &[Vec<f64>], y: &[f64], space: &FitSpace) -
         }
     }
 
-    // golden-section refinement, one pass per axis
-    best = refine_axis(base, xs, y, best, Axis::LengthScale, space.length_scale);
-    best = refine_axis(base, xs, y, best, Axis::Variance, space.variance);
+    // golden-section refinement, one pass per axis, carrying the best-seen
+    // LML through (no re-factorization just to re-derive a known value)
+    let (best, best_lml) =
+        refine_axis(base, xs, &centered, best, best_lml, Axis::LengthScale, space.length_scale);
+    let (best, _) =
+        refine_axis(base, xs, &centered, best, best_lml, Axis::Variance, space.variance);
     best
 }
 
-enum Axis {
+/// Which hyper-parameter a refinement pass moves.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Axis {
     LengthScale,
     Variance,
+}
+
+/// `params` with the given axis replaced by `v` (noise untouched).
+pub(crate) fn with_axis(params: KernelParams, axis: Axis, v: f64) -> KernelParams {
+    match axis {
+        Axis::LengthScale => KernelParams { length_scale: v, ..params },
+        Axis::Variance => KernelParams { variance: v, ..params },
+    }
 }
 
 fn refine_axis(
     base: &Kernel,
     xs: &[Vec<f64>],
-    y: &[f64],
+    y_centered: &[f64],
     params: KernelParams,
+    best_lml: f64,
     axis: Axis,
     (lo, hi): (f64, f64),
-) -> KernelParams {
+) -> (KernelParams, f64) {
     const PHI: f64 = 0.618_033_988_749_894_8;
     let eval = |v: f64| -> f64 {
-        let p = match axis {
-            Axis::LengthScale => KernelParams { length_scale: v, ..params },
-            Axis::Variance => KernelParams { variance: v, ..params },
-        };
-        lml(&Kernel::new(base.kind, p), xs, y)
+        lml_centered(&Kernel::new(base.kind, with_axis(params, axis, v)), xs, y_centered)
     };
     let (mut a, mut b) = (lo.ln(), hi.ln());
     let mut c = b - PHI * (b - a);
@@ -123,20 +181,21 @@ fn refine_axis(
         }
     }
     let v_star = ((a + b) / 2.0).exp();
-    let cand = match axis {
-        Axis::LengthScale => KernelParams { length_scale: v_star, ..params },
-        Axis::Variance => KernelParams { variance: v_star, ..params },
-    };
-    if lml(&Kernel::new(base.kind, cand), xs, y) > lml(&Kernel::new(base.kind, params), xs, y) {
-        cand
+    let cand = with_axis(params, axis, v_star);
+    // carry the incumbent's LML instead of re-deriving it from scratch —
+    // the pre-engine code paid two extra full factorizations right here
+    let v_cand = eval(v_star);
+    if v_cand > best_lml {
+        (cand, v_cand)
     } else {
-        params
+        (params, best_lml)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gp::refit::RefitEngine;
     use crate::kernels::KernelKind;
     use crate::util::rng::Pcg64;
 
@@ -211,5 +270,37 @@ mod tests {
         );
         let bad = lml(&bad_kernel, &xs, &y);
         assert!(good > bad, "good {good} bad {bad}");
+    }
+
+    #[test]
+    fn engine_backed_fit_params_bitwise_matches_reference() {
+        let mut rng = Pcg64::new(87);
+        let xs: Vec<Vec<f64>> =
+            (0..15).map(|_| vec![rng.uniform(-4.0, 4.0), rng.uniform(-4.0, 4.0)]).collect();
+        let y: Vec<f64> = xs.iter().map(|x| (x[0] * 0.5 + x[1]).cos()).collect();
+        let base = Kernel::paper_default();
+        for grid in [2usize, 3, 5] {
+            let space = FitSpace::default().with_grid(grid);
+            let want = fit_params_reference(&base, &xs, &y, &space);
+            let got = fit_params(&base, &xs, &y, &space);
+            assert_eq!(got.length_scale.to_bits(), want.length_scale.to_bits(), "grid={grid}");
+            assert_eq!(got.variance.to_bits(), want.variance.to_bits(), "grid={grid}");
+            assert_eq!(got.noise.to_bits(), want.noise.to_bits(), "grid={grid}");
+            // and the parallel engine agrees with both
+            let par = RefitEngine::one_shot(Parallelism::Threads(4)).fit(&base, &xs, &y, &space);
+            assert_eq!(par.length_scale.to_bits(), want.length_scale.to_bits());
+            assert_eq!(par.variance.to_bits(), want.variance.to_bits());
+        }
+    }
+
+    #[test]
+    fn lml_centered_matches_lml() {
+        let mut rng = Pcg64::new(89);
+        let k = Kernel::paper_default();
+        let xs: Vec<Vec<f64>> = (0..12).map(|_| vec![rng.uniform(-2.0, 2.0)]).collect();
+        let y: Vec<f64> = (0..12).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let mean = y.iter().sum::<f64>() / y.len() as f64;
+        let centered: Vec<f64> = y.iter().map(|v| v - mean).collect();
+        assert_eq!(lml(&k, &xs, &y).to_bits(), lml_centered(&k, &xs, &centered).to_bits());
     }
 }

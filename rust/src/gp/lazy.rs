@@ -7,8 +7,9 @@
 //! each lag boundary — `l = 1` degenerates to the exact baseline,
 //! `l = ∞` is the fully lazy GP the headline speedups use.
 
-use super::hyperfit::{fit_params, FitSpace};
+use super::hyperfit::FitSpace;
 use super::posterior::{compute_alpha, standardize, Posterior};
+use super::refit::{RefitEngine, RefitEngineStats};
 use super::Surrogate;
 use crate::kernels::{CovCache, Kernel};
 use crate::linalg::incremental::ExtendStats;
@@ -89,6 +90,9 @@ pub struct RefitStats {
     /// refactorizations abandoned even under the maximum jitter; the model
     /// fell back to an `O(n²)` incremental extension of the previous factor
     pub fallback_extends: u64,
+    /// refit-engine telemetry: candidates evaluated, distance-cache and
+    /// memo behavior, warm-start windows and full-grid fallbacks
+    pub engine: RefitEngineStats,
 }
 
 /// Snapshot of everything [`LazyGp::rollback`] needs to restore the exact
@@ -135,6 +139,9 @@ pub struct LazyGp {
     update_seconds: f64,
     best_idx: Option<usize>,
     refit_stats: RefitStats,
+    /// persistent refit engine: distance caching, parallel candidates,
+    /// warm-started windows across successive lag boundaries
+    refit: RefitEngine,
     /// set while fantasy observations are stacked on top of the real data
     fantasy_base: Option<Checkpoint>,
 }
@@ -142,6 +149,7 @@ pub struct LazyGp {
 impl LazyGp {
     pub fn new(config: LazyGpConfig) -> Self {
         let kernel = config.kernel;
+        let refit = RefitEngine::new(config.parallelism);
         Self {
             config,
             kernel,
@@ -154,6 +162,7 @@ impl LazyGp {
             update_seconds: 0.0,
             best_idx: None,
             refit_stats: RefitStats::default(),
+            refit,
             fantasy_base: None,
         }
     }
@@ -188,9 +197,10 @@ impl LazyGp {
         self.refit_stats.refactorizations
     }
 
-    /// Lag-boundary refactorization telemetry (jitter boosts, fallbacks).
+    /// Lag-boundary refactorization telemetry (jitter boosts, fallbacks,
+    /// refit-engine counters).
     pub fn refit_stats(&self) -> RefitStats {
-        self.refit_stats
+        RefitStats { engine: self.refit.stats(), ..self.refit_stats }
     }
 
     /// The training inputs observed so far.
@@ -258,11 +268,15 @@ impl LazyGp {
     /// of the previous factor. The configured noise is never mutated: a
     /// non-PD refit is retried with an escalating *transient* jitter that is
     /// dropped once the factorization succeeds.
-    fn full_refactorize(&mut self) -> bool {
+    fn full_refactorize(&mut self, refit: bool) -> bool {
         let prior_params = self.kernel.params;
-        if self.config.refit_at_lag && self.y.len() >= 3 {
-            self.kernel.params =
-                fit_params(&self.kernel, self.cov.points(), &self.y, &self.config.fit_space);
+        if refit && self.y.len() >= 3 {
+            // the refit engine computes the pairwise distances once, fans
+            // the candidate grid out over the worker pool, and warm-starts
+            // from the previous boundary's optimum
+            let fitted =
+                self.refit.fit(&self.kernel, self.cov.points(), &self.y, &self.config.fit_space);
+            self.kernel.params = fitted;
         }
         let prior_stats = self.factor.stats();
         let configured_noise = self.kernel.params.noise;
@@ -272,7 +286,7 @@ impl LazyGp {
         for attempt in 0..7 {
             self.kernel.params.noise = configured_noise + jitter;
             let k = self.cov.full_cov_with(&self.kernel, self.config.parallelism);
-            let factored = GrowingCholesky::from_spd(&k);
+            let factored = GrowingCholesky::from_spd_with(&k, self.config.parallelism);
             self.kernel.params.noise = configured_noise;
             match factored {
                 Ok(f) => {
@@ -300,6 +314,30 @@ impl LazyGp {
         self.kernel.params = prior_params;
         false
     }
+
+    /// Force a full hyper-parameter refit + refactorization *now*, outside
+    /// the lag schedule (e.g. before handing the posterior to a consumer
+    /// that wants the freshest kernel). The fit always runs — even when
+    /// `refit_at_lag` is false — on the same warm-started refit engine as
+    /// the lag boundaries. Returns `false` — leaving the previous factor
+    /// and parameters untouched — when the refit covariance stayed
+    /// numerically non-PD under every transient jitter.
+    pub fn refit_all(&mut self) -> bool {
+        if self.y.is_empty() {
+            return false;
+        }
+        assert!(
+            self.fantasy_base.is_none(),
+            "refit_all while fantasies are active; retract_fantasies first"
+        );
+        let sw = Stopwatch::new();
+        let ok = self.full_refactorize(true);
+        if ok {
+            self.refresh_alpha();
+        }
+        self.update_seconds += sw.elapsed_s();
+        ok
+    }
 }
 
 impl Surrogate for LazyGp {
@@ -320,7 +358,7 @@ impl Surrogate for LazyGp {
             // lag boundary: full refit + refactorization (Fig. 6's jumps);
             // if the refit covariance stays non-PD under every transient
             // jitter, keep the previous factor and extend it incrementally
-            if !self.full_refactorize() {
+            if !self.full_refactorize(self.config.refit_at_lag) {
                 self.refit_stats.fallback_extends += 1;
                 self.factor.extend(&p, c);
             }
@@ -552,6 +590,53 @@ mod tests {
         assert!(stats.jitter_boosts >= 1, "singular refit must have needed jitter: {stats:?}");
         let (m, v) = gp.predict(&[1.0, 2.0]);
         assert!(m.is_finite() && v.is_finite());
+    }
+
+    #[test]
+    fn refit_all_forces_engine_refit_and_stays_consistent() {
+        let mut rng = Pcg64::new(107);
+        let mut gp = LazyGp::paper_default(); // lag = Never
+        for _ in 0..12 {
+            let x = vec![rng.uniform(-3.0, 3.0)];
+            gp.observe(&x, (x[0] * 0.6).sin());
+        }
+        assert_eq!(gp.full_refactorizations(), 0);
+        assert!(gp.refit_all());
+        let stats = gp.refit_stats();
+        assert_eq!(stats.refactorizations, 1);
+        // one engine refit, exactly one distance build
+        assert_eq!(stats.engine.refits, 1);
+        assert_eq!(stats.engine.distance_builds, 1);
+        assert!(stats.engine.candidates_evaluated > 0);
+        let (m, v) = gp.predict(&[0.4]);
+        assert!(m.is_finite() && v >= 0.0);
+        // a second forced refit warm-starts from the first one's optimum
+        assert!(gp.refit_all());
+        assert_eq!(gp.refit_stats().engine.warm_start_refits, 1);
+        assert_eq!(gp.refit_stats().engine.distance_builds, 2);
+        // refit_all always fits, even when lag boundaries don't
+        let mut frozen = LazyGp::new(LazyGpConfig { refit_at_lag: false, ..Default::default() });
+        for i in 0..6 {
+            frozen.observe(&[i as f64 * 0.5], (i as f64 * 0.4).cos());
+        }
+        assert!(frozen.refit_all());
+        assert_eq!(frozen.refit_stats().engine.refits, 1);
+    }
+
+    #[test]
+    fn lag_boundary_refits_route_through_the_engine() {
+        let mut rng = Pcg64::new(109);
+        let mut gp = LazyGp::new(LazyGpConfig::default().with_lag(4));
+        for _ in 0..12 {
+            let x = vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)];
+            gp.observe(&x, (x[0] + x[1]).cos());
+        }
+        let stats = gp.refit_stats();
+        assert_eq!(stats.refactorizations, 3); // n = 4, 8, 12
+        // n=4 boundary: full grid; n=8 and n=12: warm-started windows
+        assert_eq!(stats.engine.refits, 3);
+        assert_eq!(stats.engine.distance_builds, 3);
+        assert_eq!(stats.engine.warm_start_refits, 2);
     }
 
     #[test]

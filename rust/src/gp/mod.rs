@@ -13,15 +13,22 @@
 //! * [`hyperfit`] — kernel-parameter fitting by log-marginal-likelihood
 //!   maximization (log-scale grid + local refinement), used by `ExactGp`
 //!   each step and by `LazyGp` at lag boundaries.
+//! * [`refit`] — the distance-caching, buffer-reusing parallel engine that
+//!   runs the hyper-fit search: one pairwise-distance build per refit,
+//!   candidates fanned out over the worker pool with per-worker scratch
+//!   arenas, warm-started windows across successive lag boundaries —
+//!   bitwise identical to the naive serial loop at any thread count.
 
 pub mod exact;
 pub mod hyperfit;
 pub mod lazy;
 pub mod posterior;
+pub mod refit;
 
 pub use exact::ExactGp;
 pub use lazy::{LagSchedule, LazyGp};
 pub use posterior::Posterior;
+pub use refit::{RefitEngine, RefitEngineStats};
 
 /// Common interface of both surrogates, used by the BO drivers and the
 /// coordinator so experiments can swap models by config.

@@ -1,0 +1,621 @@
+//! The distance-caching, buffer-reusing parallel refit engine.
+//!
+//! `gp::hyperfit`'s naive loop pays a fresh `O(n²·d)` covariance assembly
+//! plus a fresh `O(n³)` Cholesky for *every* candidate `(ρ, σ²)` setting —
+//! the Fig. 6 lag-boundary spike. This engine restructures the search
+//! around three observations:
+//!
+//! 1. **Distance caching** — for stationary kernels the pairwise squared
+//!    distances do not depend on the hyper-parameters, so the `n × n`
+//!    distance matrix is computed **once per refit**
+//!    ([`crate::kernels::sq_dist_matrix_with`], the PR-3 shared
+//!    expanded-distance tile kernel) and every candidate only pays the
+//!    cheap elementwise kernel map `κ(D_ij)`.
+//! 2. **Parallel candidates, deterministic argmax** — grid candidates are
+//!    embarrassingly parallel: they fan out over the
+//!    [`crate::util::parallel`] pool with per-worker scratch arenas (one
+//!    reusable `n × n` matrix + factorization + solve buffers per worker —
+//!    zero per-candidate allocations after the first candidates of a
+//!    refit warm the arenas up; the `O(n²)` buffers are released again
+//!    between refits). The winner is picked
+//!    by an index-ordered scan (lowest candidate index wins ties), so the
+//!    fitted parameters are **bitwise identical** to the serial naive loop
+//!    at every thread count. The sequential golden-section refinement
+//!    instead parallelizes *inside* each factorization
+//!    ([`crate::linalg::cholesky::cholesky_in_place_with`], also bitwise).
+//! 3. **Warm starts** — successive lag boundaries move θ* slowly, so a
+//!    persistent engine re-centers the search on the previous optimum
+//!    (an adaptive [`FitSpace`] window of half the log-range at roughly
+//!    half the grid resolution), falling back to the full grid on the
+//!    first refit or whenever the shrunken window's argmax lands on its
+//!    boundary. An LML memo guarantees no candidate is ever evaluated
+//!    twice within a refit, and every
+//!    [`WARM_REFRESH_EVERY`]-th consecutive warm refit widens back to the
+//!    full grid unconditionally, so a warm window can never lock onto a
+//!    stale interior optimum indefinitely.
+//!
+//! [`RefitEngineStats`] reports all of it: candidates evaluated, memo/dedup
+//! hits, distance builds (exactly one per refit — asserted in tests), warm
+//! starts and full-grid fallbacks.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::hyperfit::{log_grid, with_axis, Axis, FitSpace};
+use crate::kernels::cov::sq_dist_matrix_with;
+use crate::kernels::{Kernel, KernelKind, KernelParams};
+use crate::linalg::cholesky::{cholesky_in_place_with_scratch, CholeskyScratch};
+use crate::linalg::matrix::dot;
+use crate::linalg::Matrix;
+use crate::util::parallel::{for_each_chunk_mut, Parallelism};
+
+/// Telemetry of the refit engine, exposed through
+/// `LazyGp::refit_stats().engine` and `ExactGp::refit_engine_stats()`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RefitEngineStats {
+    /// refit calls that ran a search (`n ≥ 3`)
+    pub refits: u64,
+    /// pairwise-distance matrix builds — exactly one per refit
+    pub distance_builds: u64,
+    /// LML evaluations actually performed (grid + refinement)
+    pub candidates_evaluated: u64,
+    /// LML evaluations avoided by the memo (duplicate grid points,
+    /// refinement probes revisiting known candidates)
+    pub lml_cache_hits: u64,
+    /// refits that searched a warm-start window around the previous optimum
+    pub warm_start_refits: u64,
+    /// warm refits whose window argmax hit the shrunken boundary and fell
+    /// back to the full grid (within the same refit, same distance matrix)
+    pub full_grid_fallbacks: u64,
+}
+
+/// Per-worker scratch arena: one reusable covariance/factor matrix plus the
+/// solve and factorization buffers. Workers check these out of a shared
+/// pool per candidate, so within a refit only the first candidate each
+/// worker touches allocates; every later candidate reuses the arena.
+struct EvalScratch {
+    k: Matrix,
+    q: Vec<f64>,
+    alpha: Vec<f64>,
+    chol: CholeskyScratch,
+}
+
+impl Default for EvalScratch {
+    fn default() -> Self {
+        Self {
+            k: Matrix::zeros(0, 0),
+            q: Vec::new(),
+            alpha: Vec::new(),
+            chol: CholeskyScratch::new(),
+        }
+    }
+}
+
+/// LML of the centered targets under `kernel`, evaluated from the cached
+/// distance matrix on a scratch arena. Bitwise identical to
+/// [`crate::gp::hyperfit::lml_centered`] (same covariance entries, same
+/// blocked factorization, same solve and reduction order) for every
+/// `threads`; returns `-inf` when the covariance is numerically non-PD.
+fn eval_lml_cached(
+    kernel: &Kernel,
+    dist: &Matrix,
+    centered: &[f64],
+    scratch: &mut EvalScratch,
+    threads: usize,
+) -> f64 {
+    let n = dist.rows();
+    if scratch.k.rows() != n || scratch.k.cols() != n {
+        scratch.k = Matrix::zeros(n, n);
+    }
+    let diag = kernel.self_cov() + kernel.params.noise;
+    {
+        // elementwise kernel map over the cached distances — row tiles are
+        // disjoint outputs, per-entry ops identical at any thread count
+        let out = scratch.k.as_mut_slice();
+        let tile_rows = crate::kernels::cov::COV_TILE_ROWS;
+        for_each_chunk_mut(out, tile_rows * n.max(1), threads, |tile, rows| {
+            for (local, row) in rows.chunks_mut(n).enumerate() {
+                let i = tile * tile_rows + local;
+                let drow = dist.row(i);
+                for j in 0..n {
+                    row[j] = if j == i { diag } else { kernel.from_sq_dist(drow[j]) };
+                }
+            }
+        });
+    }
+    if cholesky_in_place_with_scratch(&mut scratch.k, threads, &mut scratch.chol).is_err() {
+        return f64::NEG_INFINITY;
+    }
+    // forward substitution L q = y_centered (GrowingCholesky::solve_lower
+    // operation order, on the reusable buffer)
+    scratch.q.clear();
+    scratch.q.resize(n, 0.0);
+    for i in 0..n {
+        let row = scratch.k.row(i);
+        let s = centered[i] - dot(&row[..i], &scratch.q[..i]);
+        scratch.q[i] = s / row[i];
+    }
+    // backward substitution Lᵀ α = q (solve_lower_transpose order)
+    scratch.alpha.clear();
+    scratch.alpha.extend_from_slice(&scratch.q);
+    for i in (0..n).rev() {
+        let row = scratch.k.row(i);
+        let xi = scratch.alpha[i] / row[i];
+        scratch.alpha[i] = xi;
+        if xi != 0.0 {
+            for j in 0..i {
+                scratch.alpha[j] -= row[j] * xi;
+            }
+        }
+    }
+    let mut sum_log_diag = 0.0;
+    for i in 0..n {
+        sum_log_diag += scratch.k.row(i)[i].ln();
+    }
+    -0.5 * dot(centered, &scratch.alpha)
+        - sum_log_diag
+        - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
+}
+
+/// After this many *consecutive* warm-window refits, the next refit
+/// searches the full grid unconditionally. The window-edge fallback only
+/// fires when the shrunken argmax sits on the window boundary, so an
+/// interior local optimum could otherwise pin the window forever while the
+/// global optimum drifts out of reach; this periodic refresh bounds that
+/// staleness at a ~1/16 amortized cost.
+pub const WARM_REFRESH_EVERY: u32 = 16;
+
+/// Warm-window grid resolution: roughly half the full resolution, never
+/// below 2 (a 1-point or empty full grid stays as-is).
+fn warm_grid(grid: usize) -> usize {
+    if grid <= 1 {
+        grid
+    } else {
+        grid.div_ceil(2).max(2)
+    }
+}
+
+/// Log-space window of half the full range, centered on (and clamped
+/// around) the previous optimum.
+fn shrink_window((lo, hi): (f64, f64), center: f64) -> (f64, f64) {
+    let (llo, lhi) = (lo.ln(), hi.ln());
+    let h = 0.25 * (lhi - llo);
+    let c = center.ln().clamp(llo, lhi);
+    ((c - h).max(llo).exp(), (c + h).min(lhi).exp())
+}
+
+fn push_grid(cands: &mut Vec<(f64, f64)>, ls_grid: &[f64], var_grid: &[f64]) {
+    for &ls in ls_grid {
+        for &var in var_grid {
+            cands.push((ls, var));
+        }
+    }
+}
+
+/// The engine. A one-shot instance searches the full grid; persistent
+/// engines (held by `LazyGp` / `ExactGp`) additionally warm-start
+/// successive refits. Scratch arenas are shared by all candidates *within*
+/// a refit and released between refits (by the next lag boundary `n` has
+/// grown anyway, and idle `n × n` buffers per surrogate would dwarf the
+/// factor at large `n`).
+pub struct RefitEngine {
+    par: Parallelism,
+    warm_start: bool,
+    prev_opt: Option<(f64, f64)>,
+    /// consecutive warm-window refits since the last full-grid search
+    /// (periodic refresh, see [`WARM_REFRESH_EVERY`])
+    warm_since_full: u32,
+    stats: RefitEngineStats,
+    /// cached pairwise squared distances of the current refit
+    dist: Matrix,
+    /// centered targets of the current refit (computed once)
+    centered: Vec<f64>,
+    /// per-worker scratch arenas, checked out per candidate
+    arena: Mutex<Vec<EvalScratch>>,
+    /// `(ls, σ²) → LML` memo of the current refit
+    memo: HashMap<(u64, u64), f64>,
+}
+
+impl RefitEngine {
+    /// Persistent engine: parallel candidate evaluation + warm starts.
+    pub fn new(par: Parallelism) -> Self {
+        Self {
+            par,
+            warm_start: true,
+            prev_opt: None,
+            warm_since_full: 0,
+            stats: RefitEngineStats::default(),
+            dist: Matrix::zeros(0, 0),
+            centered: Vec::new(),
+            arena: Mutex::new(Vec::new()),
+            memo: HashMap::new(),
+        }
+    }
+
+    /// One-shot engine: full-grid search, no warm-start state — the
+    /// configuration whose result is bitwise identical to
+    /// [`crate::gp::hyperfit::fit_params_reference`].
+    pub fn one_shot(par: Parallelism) -> Self {
+        Self { warm_start: false, ..Self::new(par) }
+    }
+
+    pub fn stats(&self) -> RefitEngineStats {
+        self.stats
+    }
+
+    /// Seed the warm-start center explicitly (tests; resuming a run whose
+    /// previous optimum is known).
+    pub fn seed_warm_start(&mut self, length_scale: f64, variance: f64) {
+        self.prev_opt = Some((length_scale, variance));
+    }
+
+    /// Fit `(length_scale, variance)` by LML maximization over `space`;
+    /// noise and kind are kept from `base`. Exactly **one** pairwise
+    /// distance computation per call; candidate evaluations are memoized
+    /// and fan out over the worker pool.
+    pub fn fit(
+        &mut self,
+        base: &Kernel,
+        xs: &[Vec<f64>],
+        y: &[f64],
+        space: &FitSpace,
+    ) -> KernelParams {
+        if xs.len() < 3 {
+            // not enough data to say anything; keep the prior parameters
+            return base.params;
+        }
+        self.stats.refits += 1;
+        // (1) the single distance build of this refit
+        self.dist = sq_dist_matrix_with(xs, self.par);
+        self.stats.distance_builds += 1;
+        // (2) centering hoisted out of the per-candidate loop
+        let mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+        self.centered.clear();
+        self.centered.extend(y.iter().map(|v| v - mean));
+        self.memo.clear();
+
+        let kind = base.kind;
+        let noise = base.params.noise;
+
+        // (3) candidate set: the base parameters, then the grid — a warm
+        // window around the previous optimum when available, else full
+        // (periodically forced back to full so the window can't pin a
+        // stale interior optimum forever)
+        let window = if self.warm_start && self.warm_since_full < WARM_REFRESH_EVERY {
+            self.prev_opt.map(|(pls, pvar)| {
+                (
+                    shrink_window(space.length_scale, pls),
+                    shrink_window(space.variance, pvar),
+                    warm_grid(space.grid),
+                )
+            })
+        } else {
+            None
+        };
+        let mut cands: Vec<(f64, f64)> = vec![(base.params.length_scale, base.params.variance)];
+        let (mut refine_ls, mut refine_var) = (space.length_scale, space.variance);
+        match window {
+            Some((wls, wvar, wg)) => {
+                self.stats.warm_start_refits += 1;
+                self.warm_since_full += 1;
+                push_grid(&mut cands, &log_grid(wls, wg), &log_grid(wvar, wg));
+                refine_ls = wls;
+                refine_var = wvar;
+            }
+            None => {
+                self.warm_since_full = 0;
+                push_grid(
+                    &mut cands,
+                    &log_grid(space.length_scale, space.grid),
+                    &log_grid(space.variance, space.grid),
+                );
+            }
+        }
+        self.eval_candidates(&cands, kind, noise);
+        let (mut best_i, mut best_v) = self.best_of(&cands);
+
+        // warm-window argmax on the shrunken boundary ⇒ the optimum moved
+        // further than the window assumed: fall back to the full grid
+        // (reusing the distance matrix and every memoized LML)
+        if let Some((_, _, wg)) = window {
+            let on_edge = best_i > 0 && wg > 0 && {
+                let gi = best_i - 1;
+                let (i_ls, i_var) = (gi / wg, gi % wg);
+                i_ls == 0 || i_ls + 1 == wg || i_var == 0 || i_var + 1 == wg
+            };
+            if on_edge {
+                self.stats.full_grid_fallbacks += 1;
+                self.warm_since_full = 0;
+                let already = cands.len();
+                push_grid(
+                    &mut cands,
+                    &log_grid(space.length_scale, space.grid),
+                    &log_grid(space.variance, space.grid),
+                );
+                self.eval_candidates(&cands[already..], kind, noise);
+                let (bi, bv) = self.best_of(&cands);
+                best_i = bi;
+                best_v = bv;
+                refine_ls = space.length_scale;
+                refine_var = space.variance;
+            }
+        }
+
+        let (best_ls, best_var) = cands[best_i];
+        let best = KernelParams { length_scale: best_ls, variance: best_var, noise };
+        // golden-section refinement per axis: the cached distance matrix is
+        // reused, probes are memoized, and the incumbent's LML is carried
+        let (best, best_v) = self.refine_axis(kind, best, best_v, Axis::LengthScale, refine_ls);
+        let (best, _) = self.refine_axis(kind, best, best_v, Axis::Variance, refine_var);
+        self.prev_opt = Some((best.length_scale, best.variance));
+        // release the O(n²) buffers between refits: the distance matrix and
+        // the arena matrices are only meaningful during this call, `n` has
+        // grown by the next lag boundary anyway (the matrices would be
+        // rebuilt regardless), and for n ≫ 10⁴ holding them idle inside
+        // every surrogate would dwarf the factor itself. The per-*candidate*
+        // reuse within a refit — the actual hot path — is untouched.
+        self.dist = Matrix::zeros(0, 0);
+        self.arena.lock().unwrap().clear();
+        self.memo.clear();
+        best
+    }
+
+    /// Evaluate every not-yet-memoized candidate, in parallel, writing
+    /// results into the memo. Duplicates count as cache hits.
+    fn eval_candidates(&mut self, cands: &[(f64, f64)], kind: KernelKind, noise: f64) {
+        let mut fresh: Vec<(f64, f64)> = Vec::new();
+        for &(ls, var) in cands {
+            let key = (ls.to_bits(), var.to_bits());
+            if self.memo.contains_key(&key) {
+                self.stats.lml_cache_hits += 1;
+            } else {
+                // placeholder so in-batch duplicates dedup too
+                self.memo.insert(key, f64::NEG_INFINITY);
+                fresh.push((ls, var));
+            }
+        }
+        if fresh.is_empty() {
+            return;
+        }
+        let n = self.dist.rows();
+        let per_cand = (n * n * n) / 3 + n * n;
+        let threads = self.par.workers_for(fresh.len().saturating_mul(per_cand));
+        let mut results = vec![f64::NEG_INFINITY; fresh.len()];
+        {
+            let dist = &self.dist;
+            let centered = &self.centered[..];
+            let arena = &self.arena;
+            let fresh_ref = &fresh;
+            for_each_chunk_mut(&mut results, 1, threads, |idx, slot| {
+                let (ls, var) = fresh_ref[idx];
+                let cand =
+                    Kernel::new(kind, KernelParams { length_scale: ls, variance: var, noise });
+                let mut scratch = arena.lock().unwrap().pop().unwrap_or_default();
+                // candidate-level parallelism: each eval stays serial inside
+                slot[0] = eval_lml_cached(&cand, dist, centered, &mut scratch, 1);
+                arena.lock().unwrap().push(scratch);
+            });
+        }
+        for (&(ls, var), &v) in fresh.iter().zip(&results) {
+            self.memo.insert((ls.to_bits(), var.to_bits()), v);
+        }
+        self.stats.candidates_evaluated += fresh.len() as u64;
+    }
+
+    /// Single memoized evaluation (refinement path). The factorization
+    /// itself runs on the pool here — refinement probes are sequentially
+    /// dependent, so this is where the threads go.
+    fn eval_one(&mut self, kernel: Kernel) -> f64 {
+        let key = (kernel.params.length_scale.to_bits(), kernel.params.variance.to_bits());
+        if let Some(&v) = self.memo.get(&key) {
+            self.stats.lml_cache_hits += 1;
+            return v;
+        }
+        let n = self.dist.rows();
+        let threads = self.par.workers_for((n * n * n) / 3);
+        let mut scratch = self.arena.lock().unwrap().pop().unwrap_or_default();
+        let v = eval_lml_cached(&kernel, &self.dist, &self.centered, &mut scratch, threads);
+        self.arena.lock().unwrap().push(scratch);
+        self.memo.insert(key, v);
+        self.stats.candidates_evaluated += 1;
+        v
+    }
+
+    /// Index-ordered argmax over memoized candidates — lowest index wins
+    /// ties, matching the naive loop's first-maximum semantics at every
+    /// thread count.
+    fn best_of(&self, cands: &[(f64, f64)]) -> (usize, f64) {
+        let mut best_i = 0usize;
+        let mut best_v = self.lookup(cands[0]);
+        for (i, &c) in cands.iter().enumerate().skip(1) {
+            let v = self.lookup(c);
+            if v > best_v {
+                best_v = v;
+                best_i = i;
+            }
+        }
+        (best_i, best_v)
+    }
+
+    fn lookup(&self, (ls, var): (f64, f64)) -> f64 {
+        *self
+            .memo
+            .get(&(ls.to_bits(), var.to_bits()))
+            .expect("refit engine: candidate was not evaluated")
+    }
+
+    /// Golden-section refinement along one axis, identical probe sequence
+    /// to the naive reference; carries the incumbent LML through.
+    fn refine_axis(
+        &mut self,
+        kind: KernelKind,
+        params: KernelParams,
+        best_v: f64,
+        axis: Axis,
+        (lo, hi): (f64, f64),
+    ) -> (KernelParams, f64) {
+        const PHI: f64 = 0.618_033_988_749_894_8;
+        let (mut a, mut b) = (lo.ln(), hi.ln());
+        let mut c = b - PHI * (b - a);
+        let mut d = a + PHI * (b - a);
+        let mut fc = self.eval_one(Kernel::new(kind, with_axis(params, axis, c.exp())));
+        let mut fd = self.eval_one(Kernel::new(kind, with_axis(params, axis, d.exp())));
+        for _ in 0..12 {
+            if fc >= fd {
+                b = d;
+                d = c;
+                fd = fc;
+                c = b - PHI * (b - a);
+                fc = self.eval_one(Kernel::new(kind, with_axis(params, axis, c.exp())));
+            } else {
+                a = c;
+                c = d;
+                fc = fd;
+                d = a + PHI * (b - a);
+                fd = self.eval_one(Kernel::new(kind, with_axis(params, axis, d.exp())));
+            }
+        }
+        let v_star = ((a + b) / 2.0).exp();
+        let cand = with_axis(params, axis, v_star);
+        let v_cand = self.eval_one(Kernel::new(kind, cand));
+        if v_cand > best_v {
+            (cand, v_cand)
+        } else {
+            (params, best_v)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::hyperfit::{fit_params_reference, lml};
+    use crate::kernels::KernelKind;
+    use crate::util::rng::Pcg64;
+
+    fn smooth_data(seed: u64, n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let gen = Kernel::new(
+            KernelKind::Matern52,
+            KernelParams { variance: 1.0, length_scale: 2.5, noise: 1e-6 },
+        );
+        let anchors = [vec![-3.0], vec![1.0], vec![4.0]];
+        let xs: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.uniform(-5.0, 5.0)]).collect();
+        let y: Vec<f64> = xs
+            .iter()
+            .map(|x| anchors.iter().map(|a| gen.eval(x, a)).sum::<f64>())
+            .collect();
+        (xs, y)
+    }
+
+    #[test]
+    fn one_distance_build_per_refit() {
+        let (xs, y) = smooth_data(301, 14);
+        let base = Kernel::paper_default();
+        let space = FitSpace::default();
+        let mut engine = RefitEngine::new(Parallelism::Serial);
+        engine.fit(&base, &xs, &y, &space);
+        assert_eq!(engine.stats().refits, 1);
+        assert_eq!(engine.stats().distance_builds, 1);
+        assert!(engine.stats().candidates_evaluated > 0);
+        // a second refit on grown data: still exactly one build per refit,
+        // even if the warm window falls back to the full grid
+        let (xs2, y2) = smooth_data(302, 20);
+        engine.fit(&base, &xs2, &y2, &space);
+        assert_eq!(engine.stats().refits, 2);
+        assert_eq!(engine.stats().distance_builds, 2);
+    }
+
+    #[test]
+    fn base_on_grid_point_dedups_via_memo() {
+        // pin the base parameters to an exact grid point (same bits the
+        // engine's candidate list will contain): it must not be evaluated
+        // twice
+        let (xs, y) = smooth_data(303, 12);
+        let space = FitSpace::default();
+        let ls = log_grid(space.length_scale, space.grid)[2];
+        let var = log_grid(space.variance, space.grid)[2];
+        let base = Kernel::new(
+            KernelKind::Matern52,
+            KernelParams { length_scale: ls, variance: var, noise: 1e-6 },
+        );
+        let mut engine = RefitEngine::one_shot(Parallelism::Serial);
+        engine.fit(&base, &xs, &y, &space);
+        assert!(
+            engine.stats().lml_cache_hits >= 1,
+            "duplicate base/grid candidate should hit the memo: {:?}",
+            engine.stats()
+        );
+    }
+
+    #[test]
+    fn warm_window_falls_back_when_optimum_sits_on_boundary() {
+        // previous optimum pinned to the space corner, but the data wants a
+        // much larger length scale: the shrunken window's argmax lands on
+        // its boundary and the engine must widen to the full grid
+        let (xs, y) = smooth_data(305, 22);
+        let base = Kernel::new(
+            KernelKind::Matern52,
+            KernelParams { variance: 0.1, length_scale: 0.1, noise: 1e-6 },
+        );
+        let space = FitSpace::default();
+        let mut engine = RefitEngine::new(Parallelism::Serial);
+        engine.seed_warm_start(0.1, 0.1);
+        let fitted = engine.fit(&base, &xs, &y, &space);
+        let stats = engine.stats();
+        assert_eq!(stats.warm_start_refits, 1, "{stats:?}");
+        assert_eq!(stats.full_grid_fallbacks, 1, "{stats:?}");
+        assert_eq!(stats.distance_builds, 1, "{stats:?}");
+        // after widening, the fit escapes the corner window entirely
+        assert!(
+            fitted.length_scale > 0.4,
+            "fallback should reach the smooth optimum: {fitted:?}"
+        );
+    }
+
+    #[test]
+    fn warm_refit_never_regresses_below_previous_optimum() {
+        let (xs, y) = smooth_data(307, 20);
+        let base = Kernel::paper_default();
+        let space = FitSpace::default();
+        // reference optimum of this data set (interior of the space)
+        let opt = fit_params_reference(&base, &xs, &y, &space);
+        let mut engine = RefitEngine::new(Parallelism::Serial);
+        engine.seed_warm_start(opt.length_scale, opt.variance);
+        let warm_base = Kernel::new(KernelKind::Matern52, opt);
+        let fitted = engine.fit(&warm_base, &xs, &y, &space);
+        assert_eq!(engine.stats().warm_start_refits, 1);
+        assert_eq!(engine.stats().distance_builds, 1);
+        // the warm fit must not regress below the previous optimum's LML —
+        // the base parameters are always candidate 0, so the warm window
+        // (with or without a fallback) can only improve on them
+        let v_prev = lml(&warm_base, &xs, &y);
+        let v_warm = lml(&Kernel::new(KernelKind::Matern52, fitted), &xs, &y);
+        assert!(v_warm >= v_prev - 1e-9, "warm {v_warm} vs prev {v_prev}");
+    }
+
+    #[test]
+    fn parallel_engine_bitwise_matches_serial_engine_on_warm_path() {
+        let (xs, y) = smooth_data(309, 40);
+        let base = Kernel::paper_default();
+        let space = FitSpace::default();
+        let mut serial = RefitEngine::new(Parallelism::Serial);
+        let mut threaded = RefitEngine::new(Parallelism::Threads(4));
+        for step in 0..3 {
+            let a = serial.fit(&base, &xs, &y, &space);
+            let b = threaded.fit(&base, &xs, &y, &space);
+            assert_eq!(a.length_scale.to_bits(), b.length_scale.to_bits(), "step {step}");
+            assert_eq!(a.variance.to_bits(), b.variance.to_bits(), "step {step}");
+        }
+        assert_eq!(serial.stats(), threaded.stats());
+    }
+
+    #[test]
+    fn too_few_points_keeps_prior_and_counts_nothing() {
+        let base = Kernel::paper_default();
+        let mut engine = RefitEngine::new(Parallelism::Serial);
+        let fitted = engine.fit(&base, &[vec![0.0], vec![1.0]], &[0.0, 1.0], &FitSpace::default());
+        assert_eq!(fitted, base.params);
+        assert_eq!(engine.stats(), RefitEngineStats::default());
+    }
+}

@@ -29,25 +29,35 @@ fn cov_entry(kernel: &Kernel, a: &[f64], b: &[f64], na: f64, nb: f64) -> f64 {
     kernel.from_sq_dist(sq_dist_expanded(a, b, na, nb))
 }
 
-/// Fill rows `[r0, r0 + out.len()/n)` of the symmetric `K_y` (strict lower
-/// triangle + diagonal `diag`; the upper triangle is mirrored afterwards).
-fn fill_sym_tile(
-    kernel: &Kernel,
-    xs: &[Vec<f64>],
-    norms: &[f64],
-    diag: f64,
-    r0: usize,
-    out: &mut [f64],
-    n: usize,
-) {
-    for (local, row) in out.chunks_mut(n).enumerate() {
-        let i = r0 + local;
-        let (xi, ni) = (&xs[i], norms[i]);
-        for j in 0..i {
-            row[j] = cov_entry(kernel, xi, &xs[j], ni, norms[j]);
+/// Shared symmetric-assembly scaffold: fills the strict lower triangle
+/// (`entry(i, j)`, `j < i`) plus the diagonal (`diag(i)`) in row tiles over
+/// the worker pool, then mirrors the upper triangle. Both the covariance
+/// path ([`sym_from_norms`]) and the squared-distance path
+/// ([`sq_dist_matrix_with`]) route through this one routine, so the tiling,
+/// index math and mirror pass cannot drift between them. The mirror is pure
+/// copies — no arithmetic, so no reduction reordering.
+fn sym_tiled<E, D>(n: usize, threads: usize, tile_rows: usize, entry: E, diag: D) -> Matrix
+where
+    E: Fn(usize, usize) -> f64 + Sync,
+    D: Fn(usize) -> f64 + Sync,
+{
+    let mut k = Matrix::zeros(n, n);
+    let tile_rows = tile_rows.max(1);
+    for_each_chunk_mut(k.as_mut_slice(), tile_rows * n.max(1), threads, |tile, out| {
+        for (local, row) in out.chunks_mut(n).enumerate() {
+            let i = tile * tile_rows + local;
+            for j in 0..i {
+                row[j] = entry(i, j);
+            }
+            row[i] = diag(i);
         }
-        row[i] = diag;
+    });
+    for i in 0..n {
+        for j in (i + 1)..n {
+            k[(i, j)] = k[(j, i)];
+        }
     }
+    k
 }
 
 /// Fill rows `[r0, r0 + out.len()/m)` of the rectangular `K* ∈ R^{n×m}`
@@ -79,21 +89,14 @@ fn sym_from_norms(
     threads: usize,
     tile_rows: usize,
 ) -> Matrix {
-    let n = xs.len();
     let diag = kernel.self_cov() + kernel.params.noise;
-    let mut k = Matrix::zeros(n, n);
-    let tile_rows = tile_rows.max(1);
-    for_each_chunk_mut(k.as_mut_slice(), tile_rows * n.max(1), threads, |tile, out| {
-        fill_sym_tile(kernel, xs, norms, diag, tile * tile_rows, out, n);
-    });
-    // mirror the strict lower triangle (cheap relative to the kernel
-    // evaluations: pure copies, no arithmetic, so no reduction reordering)
-    for i in 0..n {
-        for j in (i + 1)..n {
-            k[(i, j)] = k[(j, i)];
-        }
-    }
-    k
+    sym_tiled(
+        xs.len(),
+        threads,
+        tile_rows,
+        |i, j| cov_entry(kernel, &xs[i], &xs[j], norms[i], norms[j]),
+        |_| diag,
+    )
 }
 
 fn cross_from_norms(
@@ -143,6 +146,29 @@ pub fn cov_matrix_tiled(
 ) -> Matrix {
     let norms: Vec<f64> = xs.iter().map(|x| norm2_sq(x)).collect();
     sym_from_norms(kernel, xs, &norms, threads, tile_rows)
+}
+
+/// Pairwise squared-distance matrix `D_ij = ‖x_i − x_j‖²`, assembled
+/// through the same expanded-distance algebra and the same `sym_tiled`
+/// scaffold as every covariance path (cached norms, row tiles, lower
+/// triangle + mirror). For stationary kernels `D` does
+/// **not** depend on the hyper-parameters, so the refit engine
+/// (`gp::refit`) computes it once per refit and re-evaluates only the
+/// cheap elementwise kernel map per candidate:
+/// `kernel.from_sq_dist(D_ij)` is bitwise identical to the corresponding
+/// [`cov_matrix`] off-diagonal entry.
+pub fn sq_dist_matrix_with(xs: &[Vec<f64>], par: Parallelism) -> Matrix {
+    let n = xs.len();
+    let d = xs.first().map_or(1, |x| x.len().max(1));
+    let threads = par.workers_for(n * n * d / 2);
+    let norms: Vec<f64> = xs.iter().map(|x| norm2_sq(x)).collect();
+    sym_tiled(
+        n,
+        threads,
+        COV_TILE_ROWS,
+        |i, j| sq_dist_expanded(&xs[i], &xs[j], norms[i], norms[j]),
+        |_| 0.0,
+    )
 }
 
 /// Border vector `p` of paper Eq. 13: covariances of a new point against
@@ -452,6 +478,39 @@ mod tests {
                     assert_eq!(kb[(i, j)].to_bits(), col[i].to_bits(), "({i},{j})");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn sq_dist_matrix_matches_cov_entries_bitwise() {
+        let mut rng = Pcg64::new(79);
+        let k = Kernel::paper_default();
+        let xs = points(&mut rng, 23, 4);
+        let full = cov_matrix(&k, &xs);
+        let serial = sq_dist_matrix_with(&xs, Parallelism::Serial);
+        assert!(serial.is_symmetric(0.0));
+        for i in 0..23 {
+            assert_eq!(serial[(i, i)], 0.0);
+            for j in 0..23 {
+                if i != j {
+                    // the kernel map over the cached distances reproduces
+                    // the covariance assembly path exactly
+                    assert_eq!(
+                        k.from_sq_dist(serial[(i, j)]).to_bits(),
+                        full[(i, j)].to_bits(),
+                        "({i},{j})"
+                    );
+                }
+            }
+        }
+        for threads in [2usize, 4] {
+            let tiled = sq_dist_matrix_with(&xs, Parallelism::Threads(threads));
+            let same = serial
+                .as_slice()
+                .iter()
+                .zip(tiled.as_slice())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "threads={threads}");
         }
     }
 

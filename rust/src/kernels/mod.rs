@@ -14,5 +14,8 @@
 pub mod cov;
 pub mod functions;
 
-pub use cov::{cov_cross, cov_cross_with, cov_matrix, cov_matrix_with, cov_vector, CovCache};
+pub use cov::{
+    cov_cross, cov_cross_with, cov_matrix, cov_matrix_with, cov_vector, sq_dist_matrix_with,
+    CovCache,
+};
 pub use functions::{Kernel, KernelKind, KernelParams};

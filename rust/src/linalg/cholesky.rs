@@ -135,6 +135,147 @@ pub fn cholesky_in_place(a: &mut Matrix) -> Result<(), CholeskyError> {
     Ok(())
 }
 
+/// Reusable scratch for [`cholesky_in_place_with_scratch`]: the factored
+/// diagonal panel plus the post-solve sub-panel snapshot the parallel
+/// trailing update reads from. Holding one of these per worker lets a hot
+/// caller (the hyper-fit refit engine) factor repeatedly with **zero
+/// allocations after warm-up**.
+#[derive(Debug, Default)]
+pub struct CholeskyScratch {
+    /// factored diagonal panel, row-major `kb × kb`
+    panel: Vec<f64>,
+    /// sub-panel columns `k..k+kb` of the trailing rows, row-major
+    pcols: Vec<f64>,
+}
+
+impl CholeskyScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Minimum dimension before [`cholesky_in_place_with`] engages the worker
+/// pool; below two blocks the parallel bookkeeping outweighs the win.
+const PAR_MIN_DIM: usize = 2 * BLOCK;
+
+/// Trailing-update rows per job handed to the pool. Rows have heterogeneous
+/// cost (row `i` updates `i − k − kb + 1` entries), so jobs stay small
+/// enough for the work-stealing queue to balance them.
+const PAR_ROWS_PER_JOB: usize = 8;
+
+/// Multi-threaded variant of [`cholesky_in_place`]: the sub-panel solve and
+/// the rank-`kb` trailing update distribute their (independent) rows over
+/// `threads` scoped workers. Each element is produced by the serial path's
+/// exact operation sequence — cross-row reads go through snapshots of
+/// values that are final before the parallel step starts — so the result is
+/// **bitwise identical** to [`cholesky_in_place`] for every `threads`.
+/// `threads <= 1` (or a small matrix) falls through to the serial path.
+pub fn cholesky_in_place_with(a: &mut Matrix, threads: usize) -> Result<(), CholeskyError> {
+    let mut scratch = CholeskyScratch::new();
+    cholesky_in_place_with_scratch(a, threads, &mut scratch)
+}
+
+/// [`cholesky_in_place_with`] with caller-owned scratch (no allocations
+/// beyond the scratch's own warm-up growth).
+pub fn cholesky_in_place_with_scratch(
+    a: &mut Matrix,
+    threads: usize,
+    scratch: &mut CholeskyScratch,
+) -> Result<(), CholeskyError> {
+    if threads <= 1 || a.rows() < PAR_MIN_DIM {
+        return cholesky_in_place(a);
+    }
+    if !a.is_square() {
+        return Err(CholeskyError::NotSquare(a.rows(), a.cols()));
+    }
+    let n = a.rows();
+    let mut k = 0;
+    while k < n {
+        let kb = BLOCK.min(n - k);
+        // 1) factor the diagonal panel — serial, identical to the blocked
+        //    reference (the panel is 48×48: no parallel win available)
+        for i in k..k + kb {
+            for j in k..i {
+                let (rj, ri) = a.two_rows_mut(j, i);
+                let s = ri[j] - dot(&ri[k..j], &rj[k..j]);
+                ri[j] = s / rj[j];
+            }
+            let ri = a.row_mut(i);
+            let d = ri[i] - dot(&ri[k..i], &ri[k..i]);
+            if d <= 0.0 || !d.is_finite() {
+                return Err(CholeskyError::NotPositiveDefinite(i));
+            }
+            ri[i] = d.sqrt();
+        }
+        let rest = n - k - kb;
+        if rest > 0 {
+            // snapshot the factored panel: cross-row reads in step 2 come
+            // from here, so workers only write their own rows
+            scratch.panel.resize(kb * kb, 0.0);
+            for li in 0..kb {
+                scratch.panel[li * kb..(li + 1) * kb].copy_from_slice(&a.row(k + li)[k..k + kb]);
+            }
+            // 2) sub-panel solve: rows are independent systems
+            {
+                let panel = &scratch.panel;
+                let tail = &mut a.as_mut_slice()[(k + kb) * n..];
+                crate::util::parallel::for_each_chunk_mut(
+                    tail,
+                    PAR_ROWS_PER_JOB * n,
+                    threads,
+                    |_, chunk| {
+                        for row in chunk.chunks_mut(n) {
+                            for j in k..k + kb {
+                                let lj = j - k;
+                                let prow = &panel[lj * kb..lj * kb + lj + 1];
+                                let s = row[j] - dot(&row[k..j], &prow[..lj]);
+                                row[j] = s / prow[lj];
+                            }
+                        }
+                    },
+                );
+            }
+            // snapshot P = the solved sub-panel columns: the trailing update
+            // of row i reads rows j ≤ i, whose panel columns are final now
+            scratch.pcols.resize(rest * kb, 0.0);
+            for li in 0..rest {
+                scratch.pcols[li * kb..(li + 1) * kb]
+                    .copy_from_slice(&a.row(k + kb + li)[k..k + kb]);
+            }
+            // 3) trailing update A[k+kb.., k+kb..] -= P Pᵀ (lower part),
+            //    rows independent via the P snapshot
+            {
+                let pcols = &scratch.pcols;
+                let tail = &mut a.as_mut_slice()[(k + kb) * n..];
+                crate::util::parallel::for_each_chunk_mut(
+                    tail,
+                    PAR_ROWS_PER_JOB * n,
+                    threads,
+                    |ci, chunk| {
+                        for (local, row) in chunk.chunks_mut(n).enumerate() {
+                            let li = ci * PAR_ROWS_PER_JOB + local;
+                            let own = &pcols[li * kb..(li + 1) * kb];
+                            for j in k + kb..=(k + kb + li) {
+                                let lj = j - (k + kb);
+                                row[j] -= dot(own, &pcols[lj * kb..(lj + 1) * kb]);
+                            }
+                        }
+                    },
+                );
+            }
+        }
+        k += kb;
+    }
+    // zero the upper triangle (paper Alg. 2 lines 13–17)
+    for i in 0..n {
+        let row = a.row_mut(i);
+        for v in row[i + 1..].iter_mut() {
+            *v = 0.0;
+        }
+    }
+    Ok(())
+}
+
 /// Convenience: factor a copy, returning `L`.
 pub fn cholesky(a: &Matrix) -> Result<Matrix, CholeskyError> {
     let mut l = a.clone();
@@ -231,6 +372,41 @@ mod tests {
         let a = Matrix::from_vec(2, 2, vec![3.0, 1.0, 1.0, 2.0]); // det = 5
         let l = cholesky(&a).unwrap();
         assert!((logdet_from_factor(&l) - 5f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_bitwise_equals_serial() {
+        let mut rng = Pcg64::new(13);
+        // sizes straddling PAR_MIN_DIM and the 48-wide block boundaries
+        for &n in &[5usize, 95, 96, 97, 131, 144, 200] {
+            let a = random_spd(&mut rng, n);
+            let mut serial = a.clone();
+            cholesky_in_place(&mut serial).unwrap();
+            let mut scratch = CholeskyScratch::new();
+            for threads in [2usize, 3, 4] {
+                let mut par = a.clone();
+                cholesky_in_place_with_scratch(&mut par, threads, &mut scratch).unwrap();
+                let same = serial
+                    .as_slice()
+                    .iter()
+                    .zip(par.as_slice())
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_rejects_non_spd_like_serial() {
+        let mut rng = Pcg64::new(15);
+        let mut a = random_spd(&mut rng, 120);
+        // poison a late pivot: make the trailing 2×2 block indefinite
+        a[(119, 119)] = -1.0e6;
+        let mut s = a.clone();
+        let serial_err = cholesky_in_place(&mut s).unwrap_err();
+        let mut p = a.clone();
+        let par_err = cholesky_in_place_with(&mut p, 4).unwrap_err();
+        assert_eq!(serial_err, par_err);
     }
 
     #[test]

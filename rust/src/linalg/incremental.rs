@@ -74,6 +74,22 @@ impl GrowingCholesky {
         Ok(Self::from_factor(&l))
     }
 
+    /// [`from_spd`](Self::from_spd) with the factorization's sub-panel solve
+    /// and trailing update distributed over the worker pool
+    /// ([`crate::linalg::cholesky::cholesky_in_place_with`]). Bitwise
+    /// identical to the serial build for every `par`; small matrices stay
+    /// serial regardless.
+    pub fn from_spd_with(
+        k: &Matrix,
+        par: crate::util::parallel::Parallelism,
+    ) -> Result<Self, CholeskyError> {
+        let n = k.rows();
+        let threads = par.workers_for(n.saturating_mul(n).saturating_mul(n) / 3);
+        let mut l = k.clone();
+        crate::linalg::cholesky::cholesky_in_place_with(&mut l, threads)?;
+        Ok(Self::from_factor(&l))
+    }
+
     /// Adopt an existing dense lower-triangular factor.
     pub fn from_factor(l: &Matrix) -> Self {
         assert!(l.is_square());
@@ -217,6 +233,13 @@ impl GrowingCholesky {
     }
 
     /// Forward substitution `L x = b` against the packed factor.
+    ///
+    /// The per-element operation order here is a **contract**: the refit
+    /// engine's scratch-buffer solve (`gp::refit::eval_lml_cached`) and
+    /// `linalg::triangular::solve_lower` mirror it exactly so their LML
+    /// values stay bitwise equal to `gp::hyperfit::lml_centered`'s; the
+    /// property suite pins the equality, so changing the reduction order
+    /// here requires changing it there too.
     pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
         assert_eq!(b.len(), self.n);
         let mut x = vec![0.0; self.n];
@@ -229,6 +252,9 @@ impl GrowingCholesky {
     }
 
     /// Backward substitution `Lᵀ x = b`.
+    ///
+    /// Same op-order contract as [`solve_lower`](Self::solve_lower): the
+    /// refit engine mirrors this loop on its scratch buffers.
     pub fn solve_lower_transpose(&self, b: &[f64]) -> Vec<f64> {
         assert_eq!(b.len(), self.n);
         let mut x = b.to_vec();
@@ -491,6 +517,27 @@ mod tests {
                         .zip(blocked.as_slice())
                         .all(|(a, c)| a.to_bits() == c.to_bits());
                     assert!(same, "n={n} m={m} threads={threads} block={block}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_spd_with_bitwise_matches_serial_build() {
+        let mut rng = Pcg64::new(57);
+        for &n in &[10usize, 97, 150] {
+            let k = random_spd(&mut rng, n);
+            let serial = GrowingCholesky::from_spd(&k).unwrap();
+            for par in [
+                crate::util::parallel::Parallelism::Serial,
+                crate::util::parallel::Parallelism::Threads(4),
+            ] {
+                let g = GrowingCholesky::from_spd_with(&k, par).unwrap();
+                assert_eq!(g.dim(), serial.dim());
+                for i in 0..n {
+                    for (a, b) in g.row(i).iter().zip(serial.row(i)) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "n={n} row {i}");
+                    }
                 }
             }
         }

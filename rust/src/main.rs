@@ -43,6 +43,11 @@ fn app() -> App {
                 .opt("seeds", "initial design size", Some("1"))
                 .opt("init", "random | lhs", Some("random"))
                 .opt("threads", "GP hot-path worker threads (0 = auto, 1 = serial)", Some("0"))
+                .opt(
+                    "fit-grid",
+                    "hyper-fit grid resolution per axis at refit boundaries",
+                    Some("5"),
+                )
                 .opt("out", "write per-iteration trace CSV here", None),
         )
         .command(
@@ -145,15 +150,18 @@ fn cmd_run(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     let obj = objectives::by_name(&cfg.objective)
         .ok_or_else(|| lazygp::err!("unknown objective `{}`", cfg.objective))?;
     let par = lazygp::util::parallel::Parallelism::from_threads_flag(p.usize("threads")?);
+    let fit_grid = p.usize("fit-grid")?;
     println!(
-        "## lazygp run — objective={} surrogate={:?} iters={} seed={} gp-threads={}",
+        "## lazygp run — objective={} surrogate={:?} iters={} seed={} gp-threads={} fit-grid={}",
         cfg.objective,
         cfg.surrogate,
         cfg.iters,
         cfg.seed,
-        par.resolve()
+        par.resolve(),
+        fit_grid
     );
-    let mut driver = BoDriver::new(cfg.bo_config().with_parallelism(par), obj);
+    let mut driver =
+        BoDriver::new(cfg.bo_config().with_parallelism(par).with_fit_grid(fit_grid), obj);
     let sw = lazygp::util::timer::Stopwatch::new();
     let best = driver.run(cfg.iters);
     let wall = sw.elapsed_s();

@@ -4,8 +4,10 @@
 use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
 use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign, PendingStrategy};
 use lazygp::config::json::Json;
+use lazygp::gp::hyperfit::{fit_params_reference, FitSpace};
 use lazygp::gp::lazy::LazyGp;
 use lazygp::gp::posterior::{compute_alpha, Posterior};
+use lazygp::gp::refit::RefitEngine;
 use lazygp::gp::Surrogate;
 use lazygp::kernels::cov::cov_matrix_tiled;
 use lazygp::kernels::{cov_matrix, CovCache, Kernel, KernelKind, KernelParams};
@@ -313,6 +315,64 @@ fn prop_tiled_cov_assembly_bitwise() {
         let via_cache = cache.full_cov_with(&kernel, Parallelism::Threads(threads));
         bits_eq(serial.as_slice(), tiled.as_slice())
             && bits_eq(serial.as_slice(), via_cache.as_slice())
+    });
+}
+
+/// The parallel, distance-caching refit engine returns **bitwise
+/// identical** fitted parameters to the naive serial hyper-fit loop,
+/// across random data, thread counts ∈ {1, 2, 4} and grid sizes.
+#[test]
+fn prop_refit_engine_bitwise_matches_naive_loop() {
+    let g = pt::usize_in(6, 22);
+    pt::check("refit_engine_vs_naive", &g, |&n| {
+        let mut rng = Pcg64::new(n as u64 + 9850);
+        let d = 1 + n % 3;
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.uniform(-4.0, 4.0)).collect()).collect();
+        let y: Vec<f64> = xs.iter().map(|x| (x.iter().sum::<f64>() * 0.7).sin()).collect();
+        let grid = 2 + n % 4; // 2..=5
+        let space = FitSpace::default().with_grid(grid);
+        let base = Kernel::paper_default();
+        let want = fit_params_reference(&base, &xs, &y, &space);
+        [1usize, 2, 4].iter().all(|&t| {
+            let got = RefitEngine::one_shot(Parallelism::Threads(t)).fit(&base, &xs, &y, &space);
+            got.length_scale.to_bits() == want.length_scale.to_bits()
+                && got.variance.to_bits() == want.variance.to_bits()
+                && got.noise.to_bits() == want.noise.to_bits()
+        })
+    });
+}
+
+/// A persistent (warm-starting) engine is thread-count deterministic: the
+/// whole refit *sequence* — windows, fallbacks, refined optima — is
+/// bitwise identical between serial and 4-thread engines.
+#[test]
+fn prop_warm_refit_sequence_thread_deterministic() {
+    let g = pt::usize_in(8, 40);
+    pt::check("warm_refit_thread_determinism", &g, |&n| {
+        let mut rng = Pcg64::new(n as u64 + 9900);
+        let base = Kernel::paper_default();
+        let space = FitSpace::default();
+        let mut serial = RefitEngine::new(Parallelism::Serial);
+        let mut threaded = RefitEngine::new(Parallelism::Threads(4));
+        let mut xs: Vec<Vec<f64>> = Vec::new();
+        let mut y: Vec<f64> = Vec::new();
+        for _ in 0..3 {
+            // grow the data between refits, like successive lag boundaries
+            for _ in 0..n {
+                let x = vec![rng.uniform(-4.0, 4.0), rng.uniform(-4.0, 4.0)];
+                y.push((x[0] - 0.3 * x[1]).cos());
+                xs.push(x);
+            }
+            let a = serial.fit(&base, &xs, &y, &space);
+            let b = threaded.fit(&base, &xs, &y, &space);
+            if a.length_scale.to_bits() != b.length_scale.to_bits()
+                || a.variance.to_bits() != b.variance.to_bits()
+            {
+                return false;
+            }
+        }
+        serial.stats() == threaded.stats()
     });
 }
 
