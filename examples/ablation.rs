@@ -91,7 +91,7 @@ fn main() {
             obj,
             CoordinatorConfig { workers: t, batch_size: t, seed: 5, ..Default::default() },
         );
-        let best = pbo.run_until_evals(iters.max(40));
+        let best = pbo.run_until_evals(iters.max(40)).expect("parallel arm lost its workers");
         let rounds = pbo.rounds().len();
         let virt = pbo.virtual_seconds();
         rows.push(vec![

@@ -77,7 +77,7 @@ fn main() -> lazygp::Result<()> {
             seed: 9,
         },
     );
-    let par_best = par.run_until_evals(evals);
+    let par_best = par.run_until_evals(evals).expect("parallel arm lost its workers");
     let par_rounds = par.rounds().len();
     let par_virtual = par.virtual_seconds();
 

@@ -52,7 +52,7 @@ fn main() {
             seed: 4,
         },
     );
-    let sync_best = pbo.run_until_evals(evals);
+    let sync_best = pbo.run_until_evals(evals).expect("sync arm lost its workers");
     let sync_virtual = pbo.virtual_seconds();
     let sync_total: f64 = pbo.rounds().iter().map(|r| r.sync_seconds).sum();
 
@@ -92,7 +92,7 @@ fn main() {
     } else {
         AsyncBo::new(bo, obj, async_config)
     };
-    let async_best = abo.run_until_evals(evals);
+    let async_best = abo.run_until_evals(evals).expect("async arm lost its workers");
     let async_virtual = abo.virtual_seconds();
 
     let rows: Vec<Vec<String>> = abo

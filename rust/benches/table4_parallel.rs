@@ -67,7 +67,7 @@ fn main() {
             seed: 14,
         },
     );
-    par.run_until_evals(evals);
+    par.run_until_evals(evals).expect("sync arm lost its workers");
     Trace::from_history("parallel_sync", par.driver().history())
         .write_csv("target/experiments/table4.csv")
         .unwrap();
@@ -86,7 +86,7 @@ fn main() {
             seed: 14,
         },
     );
-    asy.run_until_evals(evals);
+    asy.run_until_evals(evals).expect("async arm lost its workers");
     let asy_trace = asy.trace("parallel_async");
     asy_trace.write_csv("target/experiments/table4_async.csv").unwrap();
 
@@ -123,7 +123,7 @@ fn main() {
             seed: 14,
         },
     );
-    tcp.run_until_evals(evals);
+    tcp.run_until_evals(evals).expect("tcp arm lost its workers");
     let tcp_trace = tcp.trace("parallel_async_tcp");
     tcp_trace.write_csv("target/experiments/table4_async_tcp.csv").unwrap();
     tcp_trace.write_transport_csv("target/experiments/table4_transport.csv").unwrap();

@@ -232,7 +232,13 @@ impl AsyncBo {
 
     /// Run until the driver has observed `total_evals` evaluations
     /// (seed evaluations included, matching [`super::ParallelBo`]).
-    pub fn run_until_evals(&mut self, total_evals: usize) -> Best {
+    ///
+    /// Fails with [`crate::Error::AllWorkersLost`] when a remote transport
+    /// loses every worker link past its configured deadline. The surrogate
+    /// is left in its real-data state either way (all fantasies retracted);
+    /// rescued trials remain queued inside the transport, so after workers
+    /// reconnect a fresh call can resume the budget.
+    pub fn run_until_evals(&mut self, total_evals: usize) -> crate::Result<Best> {
         self.driver.ensure_seeded();
         // prime: one suggestion per virtual slot (each dispatched point
         // joins the pending set fantasized for the next suggestion)
@@ -242,12 +248,19 @@ impl AsyncBo {
             }
             self.dispatch_new(0.0, slot);
         }
+        let mut failure = None;
         while self.driver.history().len() < total_evals && !self.pending.is_empty() {
-            self.step_event(total_evals);
+            if let Err(e) = self.step_event(total_evals) {
+                failure = Some(e);
+                break;
+            }
         }
         // leave the surrogate in its real-data state
         self.stats.fantasy_rollbacks += self.driver.retract_fantasies() as u64;
-        self.driver.best().cloned().expect("no observations")
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(self.driver.best().cloned().expect("no observations")),
+        }
     }
 
     /// Suggest against the fantasy-augmented posterior and dispatch to the
@@ -323,9 +336,9 @@ impl AsyncBo {
     }
 
     /// Receive one outcome and react: observe/retry/drop, then refill the
-    /// freed slot.
-    fn step_event(&mut self, total_evals: usize) {
-        let o = self.pool.recv();
+    /// freed slot. Fails only when the transport reports all workers lost.
+    fn step_event(&mut self, total_evals: usize) -> crate::Result<()> {
+        let o = self.pool.recv()?;
         // discrete-event accounting on the simulated testbed: the attempt
         // occupies the virtual slot it was bound to at dispatch time
         let (submitted, slot) = self.submit_v.remove(&o.trial.id).unwrap_or((0.0, 0));
@@ -390,10 +403,12 @@ impl AsyncBo {
             suggest_seconds,
             sync_seconds,
         });
+        Ok(())
     }
 
     /// Export the run as a metrics trace (per-event rows + run aggregates).
     pub fn trace(&self, name: impl Into<String>) -> AsyncTrace {
+        let transport = self.pool.stats();
         AsyncTrace {
             name: name.into(),
             points: self
@@ -415,7 +430,8 @@ impl AsyncBo {
             fantasies_issued: self.stats.fantasies_issued,
             fantasy_rollbacks: self.stats.fantasy_rollbacks,
             virtual_wall_s: self.virtual_seconds(),
-            transport: self.pool.stats().links,
+            transport: transport.links,
+            faults: transport.faults,
         }
     }
 
@@ -450,7 +466,7 @@ mod tests {
             obj,
             AsyncCoordinatorConfig { workers: 3, ..Default::default() },
         );
-        let best = abo.run_until_evals(25);
+        let best = abo.run_until_evals(25).unwrap();
         assert!(best.value > -1.0, "best={}", best.value);
         assert_eq!(abo.driver().history().len(), 25);
         // surrogate holds exactly the real observations afterwards
@@ -466,7 +482,7 @@ mod tests {
             obj,
             AsyncCoordinatorConfig { workers: 4, ..Default::default() },
         );
-        abo.run_until_evals(21);
+        abo.run_until_evals(21).unwrap();
         let s = abo.stats();
         assert!(s.fantasies_issued > 0, "async run must have fantasized");
         assert_eq!(
@@ -487,7 +503,7 @@ mod tests {
             obj,
             AsyncCoordinatorConfig { workers: 4, ..Default::default() },
         );
-        abo.run_until_evals(17); // 5 seeds + 12 trainings
+        abo.run_until_evals(17).unwrap(); // 5 seeds + 12 trainings
         let virt = abo.virtual_seconds();
         let busy = abo.stats().busy_s;
         // 12 trainings ≈ 190 s each across 4 slots
@@ -509,7 +525,7 @@ mod tests {
                 ..Default::default()
             },
         );
-        let best = abo.run_until_evals(15);
+        let best = abo.run_until_evals(15).unwrap();
         assert!(best.value.is_finite());
         assert_eq!(abo.driver().history().len(), 15);
         assert!(abo.stats().retries > 0, "40% failure rate must have retried");
@@ -529,7 +545,7 @@ mod tests {
                 obj,
                 AsyncCoordinatorConfig { workers: 3, pending: strategy, ..Default::default() },
             );
-            let best = abo.run_until_evals(14);
+            let best = abo.run_until_evals(14).unwrap();
             assert!(best.value.is_finite(), "{strategy:?}");
             assert_eq!(abo.driver().history().len(), 14, "{strategy:?}");
         }
@@ -543,7 +559,7 @@ mod tests {
             obj,
             AsyncCoordinatorConfig { workers: 2, ..Default::default() },
         );
-        abo.run_until_evals(12);
+        abo.run_until_evals(12).unwrap();
         let t = abo.trace("async");
         assert_eq!(t.points.len(), abo.events().len());
         assert!(t.utilization > 0.0);

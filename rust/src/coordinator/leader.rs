@@ -165,7 +165,12 @@ impl ParallelBo {
 
     /// Run one round: suggest `t`, scatter, gather (with retries), sync.
     /// Returns the round record.
-    pub fn round(&mut self) -> &RoundRecord {
+    ///
+    /// Fails with [`crate::Error::AllWorkersLost`] when a remote transport
+    /// loses every worker link past its configured deadline mid-gather;
+    /// trials still outstanding remain queued inside the transport, so a
+    /// later worker reconnect lets a fresh `round` call make progress.
+    pub fn round(&mut self) -> crate::Result<&RoundRecord> {
         let round_no = self.rounds.len() as u64;
         let t = self.config.batch_size;
 
@@ -191,7 +196,7 @@ impl ParallelBo {
         let mut max_cost = 0.0f64;
         let mut carried: std::collections::HashMap<u64, f64> = std::collections::HashMap::new();
         while in_flight > 0 {
-            let o = self.pool.recv();
+            let o = self.pool.recv()?;
             in_flight -= 1;
             let chain_cost = carried.remove(&o.trial.id).unwrap_or(0.0) + o.sim_cost_s;
             match &o.result {
@@ -238,25 +243,25 @@ impl ParallelBo {
             virtual_wall_s,
             best,
         });
-        self.rounds.last().unwrap()
+        Ok(self.rounds.last().unwrap())
     }
 
     /// Run until `total_evals` objective evaluations have been *observed*
     /// (matching the paper's iteration counting, which counts trainings).
-    pub fn run_until_evals(&mut self, total_evals: usize) -> Best {
+    pub fn run_until_evals(&mut self, total_evals: usize) -> crate::Result<Best> {
         self.driver.ensure_seeded();
         while self.driver.history().len() < total_evals {
-            self.round();
+            self.round()?;
         }
-        self.driver.best().cloned().expect("no observations")
+        Ok(self.driver.best().cloned().expect("no observations"))
     }
 
     /// Run a fixed number of rounds.
-    pub fn run_rounds(&mut self, rounds: usize) -> Best {
+    pub fn run_rounds(&mut self, rounds: usize) -> crate::Result<Best> {
         for _ in 0..rounds {
-            self.round();
+            self.round()?;
         }
-        self.driver.best().cloned().expect("no observations")
+        Ok(self.driver.best().cloned().expect("no observations"))
     }
 
     /// Shut the pool down and return the driver for post-analysis.
@@ -290,7 +295,7 @@ mod tests {
             obj,
             CoordinatorConfig { workers: 3, batch_size: 3, ..Default::default() },
         );
-        let best = pbo.run_rounds(8);
+        let best = pbo.run_rounds(8).unwrap();
         assert!(best.value > -1.0, "best={}", best.value);
         assert_eq!(pbo.rounds().len(), 8);
         // 5 seeds + 8 rounds × 3 trials
@@ -305,7 +310,7 @@ mod tests {
             obj,
             CoordinatorConfig { workers: 4, batch_size: 4, ..Default::default() },
         );
-        pbo.run_until_evals(20);
+        pbo.run_until_evals(20).unwrap();
         assert!(pbo.driver().history().len() >= 20);
     }
 
@@ -318,7 +323,7 @@ mod tests {
             obj,
             CoordinatorConfig { workers: 4, batch_size: 4, ..Default::default() },
         );
-        pbo.run_rounds(3);
+        pbo.run_rounds(3).unwrap();
         // 3 rounds × 4 trials ⇒ 12 trainings ≈ 190 s each sequentially,
         // but virtually only ~3 × 190 s in parallel
         let virt = pbo.virtual_seconds();
@@ -340,7 +345,7 @@ mod tests {
                 ..Default::default()
             },
         );
-        let rec = pbo.round().clone();
+        let rec = pbo.round().unwrap().clone();
         assert_eq!(rec.completed, 4, "all trials should eventually succeed");
         assert_eq!(rec.dropped, 0);
     }
@@ -359,7 +364,7 @@ mod tests {
                 ..Default::default()
             },
         );
-        let rec = pbo.round().clone();
+        let rec = pbo.round().unwrap().clone();
         assert_eq!(rec.completed, 0);
         assert_eq!(rec.dropped, 8);
     }
@@ -391,7 +396,7 @@ mod tests {
                 ..Default::default()
             },
         );
-        let rec = pbo.round().clone();
+        let rec = pbo.round().unwrap().clone();
         assert_eq!(rec.completed, 0);
         assert_eq!(rec.dropped, 1);
         // the chain burned 3 × 10 simulated seconds sequentially — the old
@@ -411,7 +416,7 @@ mod tests {
             obj,
             CoordinatorConfig { workers: 2, batch_size: 2, ..Default::default() },
         );
-        pbo.run_rounds(4);
+        pbo.run_rounds(4).unwrap();
         for (i, r) in pbo.rounds().iter().enumerate() {
             assert_eq!(r.round, i as u64);
             assert!(r.sync_seconds >= 0.0);

@@ -16,6 +16,15 @@
 //!   [`crate::config::json::Json`], so ids ≥ 2^53 (which would silently
 //!   collapse onto a neighboring float) are **rejected** at decode time
 //!   rather than truncated.
+//!
+//! Trial ids are globally unique and monotone (assigned by the leader,
+//! fresh ids for retries), which is what makes the TCP backend's
+//! exactly-once delivery gate possible: after a disconnect/requeue race
+//! the same id may legitimately be *evaluated* twice, but the id lets
+//! [`crate::coordinator::SocketPool`] guarantee its outcome reaches the
+//! coordinator once. The protocol-v2 control frames around these payloads
+//! (Hello/Welcome with reconnect + link policy, Ping/Pong heartbeats)
+//! live in [`crate::coordinator::transport`].
 
 use crate::config::json::Json;
 use crate::objectives::Evaluation;

@@ -13,9 +13,13 @@
 //!
 //! * [`transport`] — **where trials run**: the [`Transport`] trait both
 //!   coordinators dispatch through, implemented by the in-process thread
-//!   pool and by a std-only TCP backend ([`transport::SocketPool`] +
-//!   the `lazygp worker --connect` daemon). Worker disconnects re-queue
-//!   the in-flight trial instead of wedging the leader.
+//!   pool and by a fault-tolerant std-only TCP backend
+//!   ([`transport::SocketPool`] + the `lazygp worker --connect` daemon):
+//!   requeue-on-disconnect with an exactly-once delivery gate, worker
+//!   reconnect with capped exponential backoff, heartbeats that reap
+//!   half-open links, leader re-listen, and length-capped (optionally
+//!   CRC32-checksummed) frames. Total worker loss surfaces as the typed
+//!   [`crate::Error::AllWorkersLost`] instead of wedging the leader.
 //! * [`worker`] — a pool of OS threads (the paper used 20 GPUs on 10
 //!   nodes; our substitution is documented in DESIGN.md §4). Each worker
 //!   pulls [`messages::Trial`]s from a bounded queue (backpressure),
@@ -48,5 +52,8 @@ pub mod worker;
 pub use async_leader::{AsyncBo, AsyncCoordinatorConfig, AsyncEvent, AsyncStats};
 pub use leader::{CoordinatorConfig, ParallelBo, RoundRecord};
 pub use messages::{Trial, TrialError, TrialOutcome};
-pub use transport::{RemoteEvalConfig, SocketPool, Transport, TransportStats};
+pub use transport::{
+    ReconnectConfig, RemoteEvalConfig, SocketPool, SocketPoolOptions, Transport, TransportStats,
+    WorkerOptions,
+};
 pub use worker::{ShutdownToken, WorkerPool};

@@ -21,15 +21,38 @@
 //!
 //! ## Fault model
 //!
-//! A worker disconnect must never wedge the leader: the leader-side
-//! [`SocketPool`] tracks every in-flight trial per connection and, when a
-//! connection drops, **re-queues** those trials (same trial id) for the
-//! next free worker. Because the trial id and point are preserved, the
-//! async coordinator's pending-set entry — and therefore its fantasy
-//! observation for that point — stays valid; nothing needs to be retracted
-//! until the re-run completes on another worker. Requeues are counted
-//! per-link and surface in [`TransportStats`] /
-//! [`crate::metrics::AsyncTrace`].
+//! The TCP backend is built for real networks, not just loopback. Every
+//! failure mode has a detection path, a recovery path and a counter
+//! (surfaced through [`TransportStats`] / [`crate::metrics::FaultCounters`];
+//! the failure-mode table in `docs/ARCHITECTURE.md` summarizes them):
+//!
+//! * **Worker crash / disconnect** — the leader tracks every in-flight
+//!   trial per connection and, when a connection drops, **re-queues** those
+//!   trials (same trial id, front of the queue) for the next free worker.
+//!   Because the trial id and point are preserved, the async coordinator's
+//!   pending-set entry — and therefore its fantasy observation for that
+//!   point — stays valid until the re-run completes elsewhere.
+//! * **Leader crash / restart** — `lazygp worker` reconnects with capped
+//!   exponential backoff plus jitter, re-handshakes (its Hello carries a
+//!   `resume` id so the leader can count returning workers), and
+//!   re-delivers any finished results it could not report while the link
+//!   was down.
+//! * **Half-open / frozen peers** — application-level heartbeats
+//!   ([`WorkerMsg::Ping`] / [`LeaderMsg::Pong`]). A link silent past the
+//!   configured deadline (default 2× the ping interval) is reaped in
+//!   seconds instead of waiting out TCP keepalive.
+//! * **Corrupted frames** — the length prefix is capped *before* any
+//!   allocation, and frames optionally carry a CRC32 of the body
+//!   ([`FrameConfig`]); a bad frame is a protocol error that drops the
+//!   link, never an OOM or a hang.
+//! * **Listener loss** — the acceptor rebinds the same address with
+//!   backoff, so workers can keep (re)connecting.
+//! * **Crossed outcome/requeue races** — outcomes pass a pool-wide
+//!   delivered-id gate: the same trial id can never reach the coordinator
+//!   twice, and a late outcome cancels the pending requeue of its trial.
+//! * **Total worker loss** — [`SocketPool`]'s blocking receive returns a
+//!   typed [`crate::Error::AllWorkersLost`] after the configured deadline
+//!   with zero live links, instead of wedging the leader forever.
 //!
 //! ## Example: two in-process workers behind the trait
 //!
@@ -47,33 +70,44 @@
 //! for id in 0..4 {
 //!     pool.dispatch(Trial { id, round: 0, x: vec![0.5, -0.5], attempt: 0 });
 //! }
-//! let outcomes: Vec<_> = (0..4).map(|_| pool.recv()).collect();
-//! assert!(outcomes.iter().all(|o| o.is_ok()));
+//! for _ in 0..4 {
+//!     let outcome = pool.recv().expect("thread workers cannot be lost");
+//!     assert!(outcome.is_ok());
+//! }
 //! assert_eq!(pool.dispatched(), 4);
 //! pool.shutdown();
 //! ```
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io;
-use std::net::{Shutdown as NetShutdown, SocketAddr, TcpListener, TcpStream};
+use std::net::{
+    Shutdown as NetShutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs,
+};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::messages::{Trial, TrialOutcome};
 use super::worker::{WorkerConfig, WorkerPool};
 use crate::config::json::Json;
-use crate::metrics::TransportCounter;
+use crate::metrics::{FaultCounters, TransportCounter};
+use crate::util::rng::Pcg64;
 
 /// Wire protocol version; bumped on any frame/message change. A leader
-/// rejects workers advertising a different version.
-pub const PROTOCOL_VERSION: u64 = 1;
+/// rejects workers advertising a different version. Version 2 added
+/// reconnect handshakes (`Hello.resume`), heartbeats (`Ping`/`Pong`) and
+/// the negotiated frame policy in `Welcome`.
+pub const PROTOCOL_VERSION: u64 = 2;
 
-/// Upper bound on a single frame (a trial or outcome is ~hundreds of
-/// bytes; anything near this is corruption, fail fast).
-const MAX_FRAME_BYTES: usize = 16 << 20;
+/// Default upper bound on a single frame (a trial or outcome is ~hundreds
+/// of bytes; anything near this is corruption, fail fast). Configurable
+/// per pool via [`SocketPoolOptions::max_frame_bytes`].
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 16 << 20;
+
+/// Handshake frames must complete within this or the peer is dropped.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
 // ---------------------------------------------------------------------------
 // The trait
@@ -93,10 +127,15 @@ pub trait Transport: Send {
     fn poll_outcome(&self, timeout: Duration) -> Option<TrialOutcome>;
 
     /// Blocking receive of the next outcome.
-    fn recv(&self) -> TrialOutcome {
+    ///
+    /// Fallible: a remote backend surfaces
+    /// [`crate::Error::AllWorkersLost`] once every worker link has been
+    /// gone for its configured deadline, instead of blocking forever. The
+    /// in-process backend never fails.
+    fn recv(&self) -> crate::Result<TrialOutcome> {
         loop {
             if let Some(o) = self.poll_outcome(Duration::from_millis(100)) {
-                return o;
+                return Ok(o);
             }
         }
     }
@@ -123,13 +162,14 @@ pub struct TransportStats {
     pub backend: &'static str,
     /// one entry per worker link (dead TCP connections included)
     pub links: Vec<TransportCounter>,
-    /// total in-flight trials rescued from disconnected workers
-    pub requeued: u64,
+    /// pool-level fault/recovery counters (requeues, reconnects,
+    /// heartbeat reaps, rejected frames, relistens, deduped outcomes)
+    pub faults: FaultCounters,
 }
 
 impl TransportStats {
     /// Human-readable per-link counter table (one row per link, plus the
-    /// requeue total) — shared by the CLI, benches and examples.
+    /// requeue/fault totals) — shared by the CLI, benches and examples.
     pub fn render_links(&self) -> String {
         let mut s = String::new();
         for l in &self.links {
@@ -145,7 +185,10 @@ impl TransportStats {
                 l.rtt_mean_s * 1e3,
             ));
         }
-        s.push_str(&format!("  requeued after disconnects: {}", self.requeued));
+        s.push_str(&format!("  requeued after disconnects: {}", self.faults.requeued));
+        if self.faults.any() {
+            s.push_str(&format!("\n  link faults: {}", self.faults.render()));
+        }
         s
     }
 }
@@ -159,8 +202,8 @@ impl Transport for WorkerPool {
         self.recv_timeout(timeout)
     }
 
-    fn recv(&self) -> TrialOutcome {
-        WorkerPool::recv(self)
+    fn recv(&self) -> crate::Result<TrialOutcome> {
+        Ok(WorkerPool::recv(self))
     }
 
     fn capacity(&self) -> usize {
@@ -172,7 +215,11 @@ impl Transport for WorkerPool {
     }
 
     fn stats(&self) -> TransportStats {
-        TransportStats { backend: "thread", links: self.link_counters(), requeued: 0 }
+        TransportStats {
+            backend: "thread",
+            links: self.link_counters(),
+            faults: FaultCounters::default(),
+        }
     }
 
     fn shutdown(self: Box<Self>) {
@@ -184,49 +231,212 @@ impl Transport for WorkerPool {
 // Framing
 // ---------------------------------------------------------------------------
 
-/// Write one length-prefixed JSON frame (4-byte big-endian length, then
-/// the compact serialization). Returns total bytes written.
-pub fn write_frame(w: &mut impl io::Write, msg: &Json) -> io::Result<u64> {
-    let body = msg.to_string();
-    let bytes = body.as_bytes();
-    if bytes.len() > MAX_FRAME_BYTES {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame too large"));
+/// CRC32 (IEEE 802.3, the zlib/PNG polynomial), bitwise — small frames
+/// make a lookup table unnecessary.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= u32::from(b);
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
     }
-    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
-    w.write_all(bytes)?;
-    w.flush()?;
-    Ok(4 + bytes.len() as u64)
+    !crc
 }
 
-/// Read one length-prefixed JSON frame. Returns the value and total bytes
-/// consumed.
-pub fn read_frame(r: &mut impl io::Read) -> io::Result<(Json, u64)> {
+/// Per-link framing policy: the allocation cap enforced *before* reading a
+/// body, and whether frames carry a CRC32 of the body.
+///
+/// The Hello/Welcome handshake always uses plain (un-checksummed) frames —
+/// the worker cannot know the leader's policy yet; the leader's `Welcome`
+/// then carries the [`NetPolicy`] both sides apply to every later frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameConfig {
+    /// reject frames whose length prefix exceeds this, without allocating
+    pub max_frame_bytes: usize,
+    /// append/verify a CRC32 of the body (the header grows from 4 to
+    /// 8 bytes: big-endian length, then big-endian CRC32)
+    pub checksum: bool,
+}
+
+impl Default for FrameConfig {
+    fn default() -> Self {
+        Self { max_frame_bytes: DEFAULT_MAX_FRAME_BYTES, checksum: false }
+    }
+}
+
+impl FrameConfig {
+    /// The fixed pre-negotiation config handshake frames use.
+    pub fn handshake() -> Self {
+        Self::default()
+    }
+}
+
+fn protocol_violation(msg: impl std::fmt::Display) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Did this I/O error come from a read timeout (heartbeat deadline)?
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Write one length-prefixed JSON frame (4-byte big-endian length, then —
+/// under a checksummed [`FrameConfig`] — a 4-byte big-endian CRC32 of the
+/// body, then the compact serialization). Returns total bytes written.
+pub fn write_frame_with(w: &mut impl io::Write, msg: &Json, cfg: &FrameConfig) -> io::Result<u64> {
+    let body = msg.to_string();
+    let bytes = body.as_bytes();
+    if bytes.len() > cfg.max_frame_bytes {
+        return Err(protocol_violation(format!(
+            "frame too large: {} B exceeds the {} B cap",
+            bytes.len(),
+            cfg.max_frame_bytes
+        )));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    let mut header = 4u64;
+    if cfg.checksum {
+        w.write_all(&crc32(bytes).to_be_bytes())?;
+        header = 8;
+    }
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(header + bytes.len() as u64)
+}
+
+/// Read one length-prefixed JSON frame under `cfg`. Returns the value and
+/// total bytes consumed.
+///
+/// A corrupted length prefix is rejected **before** any allocation (an
+/// adversarial or garbage 4-GiB length must produce a protocol error, not
+/// an OOM attempt), and under a checksummed config a body whose CRC32 does
+/// not match its header is rejected before parsing.
+pub fn read_frame_with(r: &mut impl io::Read, cfg: &FrameConfig) -> io::Result<(Json, u64)> {
     let mut len = [0u8; 4];
     r.read_exact(&mut len)?;
     let n = u32::from_be_bytes(len) as usize;
-    if n > MAX_FRAME_BYTES {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame length too large"));
+    if n > cfg.max_frame_bytes {
+        return Err(protocol_violation(format!(
+            "frame length prefix {} B exceeds the {} B cap",
+            n, cfg.max_frame_bytes
+        )));
+    }
+    let mut header = 4u64;
+    let mut expected_crc = None;
+    if cfg.checksum {
+        let mut crc = [0u8; 4];
+        r.read_exact(&mut crc)?;
+        expected_crc = Some(u32::from_be_bytes(crc));
+        header = 8;
     }
     let mut buf = vec![0u8; n];
     r.read_exact(&mut buf)?;
-    let text = std::str::from_utf8(&buf)
-        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "frame is not utf-8"))?;
-    let json = Json::parse(text)
-        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
-    Ok((json, 4 + n as u64))
+    if let Some(expected) = expected_crc {
+        let got = crc32(&buf);
+        if got != expected {
+            return Err(protocol_violation(format!(
+                "frame checksum mismatch: header {expected:#010x}, body {got:#010x}"
+            )));
+        }
+    }
+    let text = std::str::from_utf8(&buf).map_err(|_| protocol_violation("frame is not utf-8"))?;
+    let json = Json::parse(text).map_err(|e| protocol_violation(e.to_string()))?;
+    Ok((json, header + n as u64))
+}
+
+/// [`write_frame_with`] under the default (plain, 16 MiB-capped) config.
+pub fn write_frame(w: &mut impl io::Write, msg: &Json) -> io::Result<u64> {
+    write_frame_with(w, msg, &FrameConfig::default())
+}
+
+/// [`read_frame_with`] under the default (plain, 16 MiB-capped) config.
+pub fn read_frame(r: &mut impl io::Read) -> io::Result<(Json, u64)> {
+    read_frame_with(r, &FrameConfig::default())
 }
 
 // ---------------------------------------------------------------------------
 // Protocol messages
 // ---------------------------------------------------------------------------
 
+/// Link-management policy, decided by the leader and pushed to every
+/// worker inside the `Welcome` — only the leader needs CLI flags.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetPolicy {
+    /// worker → leader Ping cadence, seconds; `0` disables heartbeats
+    pub heartbeat_interval_s: f64,
+    /// silence on a link after which it is declared dead; `0` resolves to
+    /// 2× the interval (the reap-within-two-intervals contract)
+    pub heartbeat_deadline_s: f64,
+    /// frame allocation cap, bytes
+    pub max_frame_bytes: usize,
+    /// CRC32-checksummed frames after the handshake
+    pub checksum: bool,
+}
+
+impl Default for NetPolicy {
+    fn default() -> Self {
+        Self {
+            heartbeat_interval_s: 2.0,
+            heartbeat_deadline_s: 0.0,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            checksum: false,
+        }
+    }
+}
+
+impl NetPolicy {
+    /// Heartbeats enabled at all?
+    pub fn heartbeats_on(&self) -> bool {
+        self.heartbeat_interval_s > 0.0
+    }
+
+    /// Ping cadence.
+    pub fn interval(&self) -> Duration {
+        Duration::from_secs_f64(self.heartbeat_interval_s.max(0.0))
+    }
+
+    /// Resolved silence deadline (2× interval unless set explicitly). An
+    /// explicit deadline is clamped to at least 1.25× the interval: a
+    /// deadline at or below the ping cadence would reap every link before
+    /// (or exactly as) its first Ping lands, putting the whole pool into a
+    /// silent connect/reap livelock; the 25% margin absorbs scheduling
+    /// jitter on the ping sender.
+    pub fn deadline(&self) -> Duration {
+        let interval = self.heartbeat_interval_s.max(0.0);
+        let d = if self.heartbeat_deadline_s > 0.0 {
+            self.heartbeat_deadline_s.max(1.25 * interval)
+        } else {
+            2.0 * interval
+        };
+        Duration::from_secs_f64(d.max(0.0))
+    }
+
+    /// Framing for post-handshake frames.
+    pub fn frame_config(&self) -> FrameConfig {
+        FrameConfig { max_frame_bytes: self.max_frame_bytes, checksum: self.checksum }
+    }
+
+    /// Framing for the Hello/Welcome exchange: same cap, never checksummed
+    /// (the worker has not learned the policy yet).
+    fn handshake_config(&self) -> FrameConfig {
+        FrameConfig { max_frame_bytes: self.max_frame_bytes, checksum: false }
+    }
+}
+
 /// Worker → leader messages.
 #[derive(Debug, Clone)]
 pub enum WorkerMsg {
     /// First frame after connect: protocol version + trial slots offered.
-    Hello { protocol: u64, capacity: usize },
+    /// A reconnecting worker echoes its previous id in `resume` so the
+    /// leader can count re-admissions.
+    Hello { protocol: u64, capacity: usize, resume: Option<u64> },
     /// A finished trial (ok or failed).
     Outcome(TrialOutcome),
+    /// Heartbeat. The leader answers with [`LeaderMsg::Pong`]; either
+    /// direction going silent past the deadline reaps the link.
+    Ping { seq: u64 },
 }
 
 /// Leader → worker messages.
@@ -234,11 +444,21 @@ pub enum WorkerMsg {
 pub enum LeaderMsg {
     /// Handshake reply: the worker's assigned id plus everything needed to
     /// evaluate trials (objective by registry name, simulation knobs, base
-    /// seed). The seed travels as a decimal string so the full `u64` range
-    /// survives the JSON number type's 2^53 limit.
-    Welcome { worker_id: u64, objective: String, sleep_scale: f64, fail_prob: f64, seed: u64 },
+    /// seed) and the link policy (`net`) both sides apply from the next
+    /// frame on. The seed travels as a decimal string so the full `u64`
+    /// range survives the JSON number type's 2^53 limit.
+    Welcome {
+        worker_id: u64,
+        objective: String,
+        sleep_scale: f64,
+        fail_prob: f64,
+        seed: u64,
+        net: NetPolicy,
+    },
     /// Evaluate this trial.
     Dispatch(Trial),
+    /// Heartbeat reply, echoing the Ping's sequence number.
+    Pong { seq: u64 },
     /// Stop immediately, abandoning in-flight trials (the leader only
     /// sends this at its own teardown, where results are discarded).
     Shutdown,
@@ -247,33 +467,59 @@ pub enum LeaderMsg {
 impl WorkerMsg {
     pub fn to_json(&self) -> Json {
         match self {
-            WorkerMsg::Hello { protocol, capacity } => Json::obj(vec![
-                ("type", Json::Str("hello".into())),
-                ("protocol", Json::Num(*protocol as f64)),
-                ("capacity", Json::Num(*capacity as f64)),
-            ]),
+            WorkerMsg::Hello { protocol, capacity, resume } => {
+                let mut fields = vec![
+                    ("type", Json::Str("hello".into())),
+                    ("protocol", Json::Num(*protocol as f64)),
+                    ("capacity", Json::Num(*capacity as f64)),
+                ];
+                if let Some(prev) = resume {
+                    fields.push(("resume", Json::Num(*prev as f64)));
+                }
+                Json::obj(fields)
+            }
             WorkerMsg::Outcome(o) => {
                 Json::obj(vec![("type", Json::Str("outcome".into())), ("outcome", o.to_json())])
+            }
+            WorkerMsg::Ping { seq } => {
+                Json::obj(vec![("type", Json::Str("ping".into())), ("seq", Json::Num(*seq as f64))])
             }
         }
     }
 
     pub fn from_json(j: &Json) -> crate::Result<WorkerMsg> {
         match j.get("type").and_then(Json::as_str) {
-            Some("hello") => Ok(WorkerMsg::Hello {
-                protocol: j
-                    .get("protocol")
-                    .and_then(Json::as_u64)
-                    .ok_or_else(|| crate::err!("hello without protocol version"))?,
-                capacity: j
-                    .get("capacity")
-                    .and_then(Json::as_usize)
-                    .ok_or_else(|| crate::err!("hello without capacity"))?,
-            }),
+            Some("hello") => {
+                let resume = match j.get("resume") {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_u64()
+                            .ok_or_else(|| crate::Error::protocol("hello with invalid resume id"))?,
+                    ),
+                };
+                Ok(WorkerMsg::Hello {
+                    protocol: j
+                        .get("protocol")
+                        .and_then(Json::as_u64)
+                        .ok_or_else(|| crate::Error::protocol("hello without protocol version"))?,
+                    capacity: j
+                        .get("capacity")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| crate::Error::protocol("hello without capacity"))?,
+                    resume,
+                })
+            }
             Some("outcome") => Ok(WorkerMsg::Outcome(TrialOutcome::from_json(
-                j.get("outcome").ok_or_else(|| crate::err!("outcome message without body"))?,
+                j.get("outcome")
+                    .ok_or_else(|| crate::Error::protocol("outcome message without body"))?,
             )?)),
-            other => Err(crate::err!("unknown worker message type {other:?}")),
+            Some("ping") => Ok(WorkerMsg::Ping {
+                seq: j
+                    .get("seq")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| crate::Error::protocol("ping without seq"))?,
+            }),
+            other => Err(crate::Error::protocol(format!("unknown worker message type {other:?}"))),
         }
     }
 }
@@ -281,7 +527,7 @@ impl WorkerMsg {
 impl LeaderMsg {
     pub fn to_json(&self) -> Json {
         match self {
-            LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed } => {
+            LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed, net } => {
                 Json::obj(vec![
                     ("type", Json::Str("welcome".into())),
                     ("worker_id", Json::Num(*worker_id as f64)),
@@ -289,10 +535,17 @@ impl LeaderMsg {
                     ("sleep_scale", Json::Num(*sleep_scale)),
                     ("fail_prob", Json::Num(*fail_prob)),
                     ("seed", Json::Str(seed.to_string())),
+                    ("heartbeat_interval_s", Json::Num(net.heartbeat_interval_s)),
+                    ("heartbeat_deadline_s", Json::Num(net.heartbeat_deadline_s)),
+                    ("max_frame", Json::Num(net.max_frame_bytes as f64)),
+                    ("checksum", Json::Bool(net.checksum)),
                 ])
             }
             LeaderMsg::Dispatch(t) => {
                 Json::obj(vec![("type", Json::Str("trial".into())), ("trial", t.to_json())])
+            }
+            LeaderMsg::Pong { seq } => {
+                Json::obj(vec![("type", Json::Str("pong".into())), ("seq", Json::Num(*seq as f64))])
             }
             LeaderMsg::Shutdown => Json::obj(vec![("type", Json::Str("shutdown".into()))]),
         }
@@ -304,31 +557,55 @@ impl LeaderMsg {
                 worker_id: j
                     .get("worker_id")
                     .and_then(Json::as_u64)
-                    .ok_or_else(|| crate::err!("welcome without worker_id"))?,
+                    .ok_or_else(|| crate::Error::protocol("welcome without worker_id"))?,
                 objective: j
                     .get("objective")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| crate::err!("welcome without objective"))?
+                    .ok_or_else(|| crate::Error::protocol("welcome without objective"))?
                     .to_string(),
                 sleep_scale: j
                     .get("sleep_scale")
                     .and_then(Json::as_f64)
-                    .ok_or_else(|| crate::err!("welcome without sleep_scale"))?,
+                    .ok_or_else(|| crate::Error::protocol("welcome without sleep_scale"))?,
                 fail_prob: j
                     .get("fail_prob")
                     .and_then(Json::as_f64)
-                    .ok_or_else(|| crate::err!("welcome without fail_prob"))?,
+                    .ok_or_else(|| crate::Error::protocol("welcome without fail_prob"))?,
                 seed: j
                     .get("seed")
                     .and_then(Json::as_str)
                     .and_then(|s| s.parse::<u64>().ok())
-                    .ok_or_else(|| crate::err!("welcome without parseable seed"))?,
+                    .ok_or_else(|| crate::Error::protocol("welcome without parseable seed"))?,
+                net: NetPolicy {
+                    heartbeat_interval_s: j
+                        .get("heartbeat_interval_s")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| crate::Error::protocol("welcome without hb interval"))?,
+                    heartbeat_deadline_s: j
+                        .get("heartbeat_deadline_s")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| crate::Error::protocol("welcome without hb deadline"))?,
+                    max_frame_bytes: j
+                        .get("max_frame")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| crate::Error::protocol("welcome without max_frame"))?,
+                    checksum: j
+                        .get("checksum")
+                        .and_then(Json::as_bool)
+                        .ok_or_else(|| crate::Error::protocol("welcome without checksum flag"))?,
+                },
             }),
             Some("trial") => Ok(LeaderMsg::Dispatch(Trial::from_json(
-                j.get("trial").ok_or_else(|| crate::err!("trial message without body"))?,
+                j.get("trial").ok_or_else(|| crate::Error::protocol("trial message without body"))?,
             )?)),
+            Some("pong") => Ok(LeaderMsg::Pong {
+                seq: j
+                    .get("seq")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| crate::Error::protocol("pong without seq"))?,
+            }),
             Some("shutdown") => Ok(LeaderMsg::Shutdown),
-            other => Err(crate::err!("unknown leader message type {other:?}")),
+            other => Err(crate::Error::protocol(format!("unknown leader message type {other:?}"))),
         }
     }
 }
@@ -349,6 +626,51 @@ pub struct RemoteEvalConfig {
     pub fail_prob: f64,
     /// base RNG seed; each worker derives its own stream from its id
     pub seed: u64,
+}
+
+/// Tuning of a [`SocketPool`]'s fault handling; see
+/// [`SocketPool::listen_with`]. [`Default`] gives 2 s heartbeats (4 s
+/// reap deadline), plain 16 MiB-capped frames, and a 60 s all-workers-lost
+/// deadline.
+#[derive(Debug, Clone)]
+pub struct SocketPoolOptions {
+    /// worker Ping cadence; [`Duration::ZERO`] disables heartbeats
+    pub heartbeat_interval: Duration,
+    /// link silence after which it is reaped; [`Duration::ZERO`] resolves
+    /// to 2× the interval
+    pub heartbeat_deadline: Duration,
+    /// frame allocation cap, bytes
+    pub max_frame_bytes: usize,
+    /// CRC32-checksum every post-handshake frame
+    pub checksum: bool,
+    /// [`Transport::recv`] returns [`crate::Error::AllWorkersLost`] after
+    /// this long with zero live links; [`Duration::ZERO`] waits forever
+    /// (the pre-hardening behavior)
+    pub worker_loss_deadline: Duration,
+}
+
+impl Default for SocketPoolOptions {
+    fn default() -> Self {
+        Self {
+            heartbeat_interval: Duration::from_secs(2),
+            heartbeat_deadline: Duration::ZERO,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            checksum: false,
+            worker_loss_deadline: Duration::from_secs(60),
+        }
+    }
+}
+
+impl SocketPoolOptions {
+    /// The link policy advertised to workers in the `Welcome`.
+    pub fn net_policy(&self) -> NetPolicy {
+        NetPolicy {
+            heartbeat_interval_s: self.heartbeat_interval.as_secs_f64(),
+            heartbeat_deadline_s: self.heartbeat_deadline.as_secs_f64(),
+            max_frame_bytes: self.max_frame_bytes,
+            checksum: self.checksum,
+        }
+    }
 }
 
 /// Per-connection counters (atomics: touched by reader + dispatcher).
@@ -390,20 +712,50 @@ impl Conn {
     }
 }
 
+/// Pool-level fault counters (see [`FaultCounters`] for field meanings).
+#[derive(Default)]
+struct FaultTotals {
+    requeued: AtomicU64,
+    reconnects: AtomicU64,
+    heartbeats_missed: AtomicU64,
+    frames_rejected: AtomicU64,
+    relistens: AtomicU64,
+    duplicates_dropped: AtomicU64,
+}
+
+impl FaultTotals {
+    fn snapshot(&self) -> FaultCounters {
+        FaultCounters {
+            requeued: self.requeued.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            heartbeats_missed: self.heartbeats_missed.load(Ordering::Relaxed),
+            frames_rejected: self.frames_rejected.load(Ordering::Relaxed),
+            relistens: self.relistens.load(Ordering::Relaxed),
+            duplicates_dropped: self.duplicates_dropped.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// State shared between the leader thread, acceptor, dispatcher and the
 /// per-connection readers.
 struct Shared {
     eval: RemoteEvalConfig,
+    net: NetPolicy,
     stop: AtomicBool,
     /// trials waiting for a free slot; requeued trials go to the front
     queue: Mutex<VecDeque<Trial>>,
     /// paired with `queue`: signaled on new trial / freed slot / new
     /// worker / disconnect / stop
-    cv: Condvar,
+    cv: std::sync::Condvar,
     /// every connection ever accepted; `alive` gates dispatch
     conns: Mutex<Vec<Arc<Conn>>>,
+    /// trial ids whose outcome already reached the coordinator — the
+    /// exactly-once gate every delivery and every requeue consults, so a
+    /// disconnect racing an outcome can never both requeue *and* complete
+    /// the same trial
+    delivered: Mutex<HashSet<u64>>,
     next_conn_id: AtomicUsize,
-    requeued: AtomicU64,
+    faults: FaultTotals,
     reader_handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
@@ -415,16 +767,28 @@ pub struct SocketPool {
     results: Receiver<TrialOutcome>,
     dispatched: AtomicU64,
     local_addr: SocketAddr,
+    worker_loss_deadline: Duration,
+    /// send Shutdown frames on teardown (false simulates a leader crash)
+    notify_workers: bool,
     acceptor: Option<JoinHandle<()>>,
     dispatcher: Option<JoinHandle<()>>,
     closed: bool,
 }
 
 impl SocketPool {
-    /// Bind `addr` (e.g. `127.0.0.1:7077`, or port `0` for an ephemeral
-    /// port — see [`local_addr`](SocketPool::local_addr)) and start
-    /// accepting workers in the background.
+    /// Bind `addr` with default [`SocketPoolOptions`] and start accepting
+    /// workers in the background (port `0` picks an ephemeral port — see
+    /// [`local_addr`](SocketPool::local_addr)).
     pub fn listen(addr: &str, eval: RemoteEvalConfig) -> crate::Result<SocketPool> {
+        Self::listen_with(addr, eval, SocketPoolOptions::default())
+    }
+
+    /// [`listen`](SocketPool::listen) with explicit fault-handling options.
+    pub fn listen_with(
+        addr: &str,
+        eval: RemoteEvalConfig,
+        options: SocketPoolOptions,
+    ) -> crate::Result<SocketPool> {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
         // nonblocking accept so the acceptor can observe the stop flag
@@ -432,19 +796,21 @@ impl SocketPool {
         let (res_tx, res_rx) = channel::<TrialOutcome>();
         let shared = Arc::new(Shared {
             eval,
+            net: options.net_policy(),
             stop: AtomicBool::new(false),
             queue: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
+            cv: std::sync::Condvar::new(),
             conns: Mutex::new(Vec::new()),
+            delivered: Mutex::new(HashSet::new()),
             next_conn_id: AtomicUsize::new(0),
-            requeued: AtomicU64::new(0),
+            faults: FaultTotals::default(),
             reader_handles: Mutex::new(Vec::new()),
         });
         let acceptor = {
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
                 .name("lazygp-acceptor".into())
-                .spawn(move || accept_loop(listener, &shared, &res_tx))
+                .spawn(move || accept_loop(listener, local_addr, &shared, &res_tx))
                 .expect("spawn acceptor")
         };
         let dispatcher = {
@@ -459,6 +825,8 @@ impl SocketPool {
             results: res_rx,
             dispatched: AtomicU64::new(0),
             local_addr,
+            worker_loss_deadline: options.worker_loss_deadline,
+            notify_workers: true,
             acceptor: Some(acceptor),
             dispatcher: Some(dispatcher),
             closed: false,
@@ -485,14 +853,27 @@ impl SocketPool {
     /// Block until at least `min_slots` worker slots are connected (or
     /// error after `timeout`). Call before handing the pool to a
     /// coordinator so its slot accounting starts from real capacity.
+    ///
+    /// Only fully-welcomed workers count, and a candidate count is
+    /// *confirmed* after a short grace so a worker that completed the
+    /// handshake and immediately dropped (its reader marks the link dead
+    /// on the instant EOF) cannot satisfy the wait spuriously.
     pub fn wait_for_capacity(&self, min_slots: usize, timeout: Duration) -> crate::Result<usize> {
+        const GRACE: Duration = Duration::from_millis(20);
         let deadline = Instant::now() + timeout;
         loop {
-            let cap = self.capacity_now();
-            if cap >= min_slots {
-                return Ok(cap);
+            if self.capacity_now() >= min_slots {
+                // re-check after the grace: an admitted-then-dropped worker
+                // is reaped by its reader within microseconds on loopback
+                std::thread::sleep(GRACE);
+                let confirmed = self.capacity_now();
+                if confirmed >= min_slots {
+                    return Ok(confirmed);
+                }
+                continue; // capacity collapsed mid-grace: keep waiting
             }
             if Instant::now() >= deadline {
+                let cap = self.capacity_now();
                 crate::bail!(
                     "timed out waiting for {min_slots} remote worker slot(s); have {cap} — \
                      start workers with `lazygp worker --connect {}`",
@@ -503,7 +884,17 @@ impl SocketPool {
         }
     }
 
-    /// Idempotent teardown shared by [`Transport::shutdown`] and `Drop`.
+    /// Abrupt teardown for fault injection and crash simulation: tear the
+    /// sockets down **without** sending Shutdown frames, exactly as a
+    /// killed leader process would. Reconnect-enabled workers observe a
+    /// lost link (not a shutdown) and begin their backoff loop.
+    pub fn abort(mut self) {
+        self.notify_workers = false;
+        self.shutdown_inner();
+    }
+
+    /// Idempotent teardown shared by [`Transport::shutdown`],
+    /// [`abort`](SocketPool::abort) and `Drop`.
     fn shutdown_inner(&mut self) {
         if self.closed {
             return;
@@ -521,11 +912,15 @@ impl SocketPool {
             let _ = h.join();
         }
         let conns: Vec<Arc<Conn>> = self.shared.conns.lock().expect("conns poisoned").clone();
+        let fc = self.shared.net.frame_config();
         for c in &conns {
             let mut w = c.writer.lock().expect("writer poisoned");
-            // best-effort: tell the worker to exit, then close both
-            // directions so its (and our) blocked reads unblock
-            let _ = write_frame(&mut *w, &LeaderMsg::Shutdown.to_json());
+            // best-effort: tell the worker to exit (unless simulating a
+            // crash), then close both directions so its (and our) blocked
+            // reads unblock
+            if self.notify_workers {
+                let _ = write_frame_with(&mut *w, &LeaderMsg::Shutdown.to_json(), &fc);
+            }
             let _ = w.shutdown(NetShutdown::Both);
         }
         let handles: Vec<JoinHandle<()>> =
@@ -555,15 +950,27 @@ impl Transport for SocketPool {
         self.results.recv_timeout(timeout).ok()
     }
 
-    /// Blocking receive that surfaces starvation: when work is queued but
-    /// every worker has disconnected, it keeps waiting (a reconnecting
-    /// worker picks the rescued trials up) but tells the operator every
-    /// ~10 s instead of wedging silently.
-    fn recv(&self) -> TrialOutcome {
+    /// Blocking receive that surfaces starvation instead of wedging: while
+    /// live workers exist (or reconnect within the deadline) it waits — a
+    /// reconnecting worker picks rescued trials up — and reminds the
+    /// operator every ~10 s; once **zero** live links persist for the
+    /// configured `worker_loss_deadline` it returns the typed
+    /// [`crate::Error::AllWorkersLost`].
+    fn recv(&self) -> crate::Result<TrialOutcome> {
+        let give_up = self.worker_loss_deadline;
+        let mut lost_since: Option<Instant> = None;
         let mut polls: u64 = 0;
         loop {
             if let Some(o) = self.poll_outcome(Duration::from_millis(100)) {
-                return o;
+                return Ok(o);
+            }
+            if self.capacity_now() > 0 {
+                lost_since = None;
+            } else {
+                let since = *lost_since.get_or_insert_with(Instant::now);
+                if !give_up.is_zero() && since.elapsed() >= give_up {
+                    return Err(crate::Error::AllWorkersLost { deadline: give_up });
+                }
             }
             polls += 1;
             if polls % 100 == 0 && self.capacity_now() == 0 {
@@ -596,11 +1003,7 @@ impl Transport for SocketPool {
             .iter()
             .map(|c| c.counter())
             .collect();
-        TransportStats {
-            backend: "tcp",
-            links,
-            requeued: self.shared.requeued.load(Ordering::Relaxed),
-        }
+        TransportStats { backend: "tcp", links, faults: self.shared.faults.snapshot() }
     }
 
     fn shutdown(mut self: Box<Self>) {
@@ -608,21 +1011,68 @@ impl Transport for SocketPool {
     }
 }
 
-fn accept_loop(listener: TcpListener, shared: &Arc<Shared>, res_tx: &Sender<TrialOutcome>) {
+/// Accept workers until stopped. A hard listener failure (fd exhaustion,
+/// interface loss) does not kill the pool: the listener is dropped and
+/// re-bound on the same address with backoff ([`relisten`]), so workers
+/// can keep (re)connecting.
+fn accept_loop(
+    listener: TcpListener,
+    bind_addr: SocketAddr,
+    shared: &Arc<Shared>,
+    res_tx: &Sender<TrialOutcome>,
+) {
+    let mut listener = Some(listener);
     while !shared.stop.load(Ordering::SeqCst) {
-        match listener.accept() {
+        let Some(l) = listener.as_ref() else {
+            listener =
+                relisten(bind_addr, &shared.stop, &shared.faults.relistens).map(|l| {
+                    shared.cv.notify_all();
+                    l
+                });
+            continue;
+        };
+        match l.accept() {
             Ok((stream, _peer)) => {
-                // a failed handshake only drops this candidate worker
-                if admit_worker(stream, shared, res_tx).is_ok() {
-                    shared.cv.notify_all(); // new capacity
-                }
+                // a failed handshake only drops this candidate worker; wake
+                // capacity waiters either way so they re-check the real
+                // connection set instead of trusting a stale observation
+                let _ = admit_worker(stream, shared, res_tx);
+                shared.cv.notify_all();
             }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(20));
             }
-            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::ConnectionAborted | io::ErrorKind::Interrupted
+                ) =>
+            {
+                // transient per-connection accept failure: retry as-is
+            }
+            Err(_) => {
+                // the listener itself is broken — drop it and re-listen
+                listener = None;
+            }
         }
     }
+}
+
+/// Re-bind `addr` with capped backoff until it succeeds or `stop` is set.
+/// Counts successful rebinds into `relistens`.
+fn relisten(addr: SocketAddr, stop: &AtomicBool, relistens: &AtomicU64) -> Option<TcpListener> {
+    let mut backoff = Duration::from_millis(50);
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(backoff);
+        if let Ok(l) = TcpListener::bind(addr) {
+            if l.set_nonblocking(true).is_ok() {
+                relistens.fetch_add(1, Ordering::Relaxed);
+                return Some(l);
+            }
+        }
+        backoff = (backoff * 2).min(Duration::from_secs(2));
+    }
+    None
 }
 
 /// Handshake a new connection: Hello in, Welcome out, reader spawned.
@@ -632,35 +1082,45 @@ fn admit_worker(
     res_tx: &Sender<TrialOutcome>,
 ) -> io::Result<()> {
     stream.set_nodelay(true)?;
-    // bound the handshake; cleared below for the blocking reader loop
-    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    // bound the handshake; replaced below by the heartbeat deadline
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let hs = shared.net.handshake_config();
     let mut reader = stream.try_clone()?;
-    let (hello, hello_bytes) = read_frame(&mut reader)?;
-    let msg = WorkerMsg::from_json(&hello)
-        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
-    let WorkerMsg::Hello { protocol, capacity } = msg else {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "expected hello"));
+    let (hello, hello_bytes) = read_frame_with(&mut reader, &hs)?;
+    let msg =
+        WorkerMsg::from_json(&hello).map_err(|e| protocol_violation(e.to_string()))?;
+    let WorkerMsg::Hello { protocol, capacity, resume } = msg else {
+        return Err(protocol_violation("expected hello"));
     };
     if protocol != PROTOCOL_VERSION {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidData,
-            format!("protocol mismatch: worker {protocol}, leader {PROTOCOL_VERSION}"),
-        ));
+        return Err(protocol_violation(format!(
+            "protocol mismatch: worker {protocol}, leader {PROTOCOL_VERSION}"
+        )));
     }
     if capacity == 0 {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "zero-capacity worker"));
+        return Err(protocol_violation("zero-capacity worker"));
     }
-    stream.set_read_timeout(None)?;
+    // post-handshake reads are bounded by the heartbeat deadline so a
+    // frozen/half-open peer is reaped instead of pinning its reader
+    if shared.net.heartbeats_on() {
+        stream.set_read_timeout(Some(shared.net.deadline()))?;
+    } else {
+        stream.set_read_timeout(None)?;
+    }
     let id = shared.next_conn_id.fetch_add(1, Ordering::SeqCst);
+    if resume.is_some() {
+        shared.faults.reconnects.fetch_add(1, Ordering::Relaxed);
+    }
     let welcome = LeaderMsg::Welcome {
         worker_id: id as u64,
         objective: shared.eval.objective.clone(),
         sleep_scale: shared.eval.sleep_scale,
         fail_prob: shared.eval.fail_prob,
         seed: shared.eval.seed,
+        net: shared.net,
     };
     let mut writer = stream;
-    let welcome_bytes = write_frame(&mut writer, &welcome.to_json())?;
+    let welcome_bytes = write_frame_with(&mut writer, &welcome.to_json(), &hs)?;
     let conn = Arc::new(Conn {
         id,
         capacity,
@@ -684,48 +1144,125 @@ fn admit_worker(
     Ok(())
 }
 
-/// Per-connection reader: outcomes in, slot bookkeeping, disconnect
-/// rescue.
+/// Per-connection reader: outcomes in (through the exactly-once delivery
+/// gate), heartbeat replies out, disconnect rescue at the end. Reads are
+/// bounded by the heartbeat deadline, so a frozen peer is reaped within
+/// two missed intervals instead of pinning this thread forever.
 fn reader_loop(
     conn: &Arc<Conn>,
     shared: &Arc<Shared>,
     res_tx: &Sender<TrialOutcome>,
     mut reader: TcpStream,
 ) {
+    let fc = shared.net.frame_config();
     loop {
-        let (json, nbytes) = match read_frame(&mut reader) {
+        let (json, nbytes) = match read_frame_with(&mut reader, &fc) {
             Ok(v) => v,
-            Err(_) => break, // EOF, reset, or garbage: treat as disconnect
+            Err(e) if is_timeout(&e) => {
+                // heartbeat deadline passed in silence: reap the link
+                shared.faults.heartbeats_missed.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                // oversized/garbage length prefix, checksum mismatch,
+                // non-UTF-8 or unparseable body
+                shared.faults.frames_rejected.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            Err(_) => break, // EOF or reset: plain disconnect
         };
         conn.stats.bytes_rx.fetch_add(nbytes, Ordering::Relaxed);
-        let mut outcome = match WorkerMsg::from_json(&json) {
-            Ok(WorkerMsg::Outcome(o)) => o,
-            _ => break, // protocol violation
-        };
-        let entry =
-            conn.in_flight.lock().expect("in_flight poisoned").remove(&outcome.trial.id);
-        if let Some((_, dispatched_at)) = entry {
-            conn.stats.completed.fetch_add(1, Ordering::Relaxed);
-            conn.stats
-                .rtt_ns
-                .fetch_add(dispatched_at.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            // remap to the connection id so leader-side telemetry is
-            // per-link, not per-remote-thread
-            outcome.worker_id = conn.id;
-            if res_tx.send(outcome).is_err() {
-                break; // leader dropped the receiver
+        match WorkerMsg::from_json(&json) {
+            Ok(WorkerMsg::Outcome(o)) => {
+                if !deliver_outcome(conn, shared, res_tx, o) {
+                    break; // leader dropped the receiver
+                }
             }
-            shared.cv.notify_all(); // slot freed
+            Ok(WorkerMsg::Ping { seq }) => {
+                let pong = LeaderMsg::Pong { seq }.to_json();
+                let written = {
+                    let mut w = conn.writer.lock().expect("writer poisoned");
+                    write_frame_with(&mut *w, &pong, &fc)
+                };
+                match written {
+                    Ok(n) => {
+                        conn.stats.bytes_tx.fetch_add(n, Ordering::Relaxed);
+                    }
+                    Err(_) => break, // write side is dead too
+                }
+            }
+            Ok(WorkerMsg::Hello { .. }) | Err(_) => {
+                // well-framed but semantically invalid: protocol violation
+                shared.faults.frames_rejected.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
         }
-        // unknown trial id: stale after a racing disconnect — drop it
     }
     disconnect(conn, shared);
 }
 
-/// Mark the connection dead and rescue its in-flight trials. The trial ids
-/// are preserved, so leader-side maps (and async fantasies) stay valid.
+/// The exactly-once delivery gate. Claims the trial id in the pool-wide
+/// `delivered` set; a duplicate (a re-delivered result crossing a requeue,
+/// or a second evaluation of a rescued trial) is dropped. A *fresh*
+/// outcome additionally cancels any pending requeue of its trial — queued,
+/// or already re-dispatched onto another link — so the coordinator
+/// observes each trial id at most once, ever. Returns `false` when the
+/// coordinator hung up.
+fn deliver_outcome(
+    conn: &Arc<Conn>,
+    shared: &Arc<Shared>,
+    res_tx: &Sender<TrialOutcome>,
+    mut outcome: TrialOutcome,
+) -> bool {
+    let id = outcome.trial.id;
+    let fresh = shared.delivered.lock().expect("delivered poisoned").insert(id);
+    if !fresh {
+        shared.faults.duplicates_dropped.fetch_add(1, Ordering::Relaxed);
+        // still clear any local in-flight entry so the slot frees up
+        conn.in_flight.lock().expect("in_flight poisoned").remove(&id);
+        shared.cv.notify_all();
+        return true;
+    }
+    let entry = conn.in_flight.lock().expect("in_flight poisoned").remove(&id);
+    conn.stats.completed.fetch_add(1, Ordering::Relaxed);
+    if let Some((_, dispatched_at)) = entry {
+        conn.stats
+            .rtt_ns
+            .fetch_add(dispatched_at.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+    // cancel a pending requeue of the same trial: it may sit in the queue
+    // (rescued from this worker's previous link) or in another connection's
+    // in-flight set (already re-dispatched)
+    shared.queue.lock().expect("queue poisoned").retain(|t| t.id != id);
+    for other in shared.conns.lock().expect("conns poisoned").iter() {
+        if other.id != conn.id {
+            other.in_flight.lock().expect("in_flight poisoned").remove(&id);
+        }
+    }
+    // remap to the connection id so leader-side telemetry is per-link,
+    // not per-remote-thread
+    outcome.worker_id = conn.id;
+    if res_tx.send(outcome).is_err() {
+        return false;
+    }
+    shared.cv.notify_all(); // slot freed
+    true
+}
+
+/// Mark the connection dead and rescue its in-flight trials — except any
+/// whose outcome already passed the delivery gate (a disconnect racing a
+/// delivered outcome must not re-queue it). Trial ids are preserved, so
+/// leader-side maps (and async fantasies) stay valid.
 fn disconnect(conn: &Conn, shared: &Shared) {
     conn.alive.store(false, Ordering::SeqCst);
+    // actively close the socket so the remote end observes EOF promptly: a
+    // link reaped for a protocol violation or heartbeat miss would
+    // otherwise stay open and pin a heartbeat-less worker in a blocking
+    // read forever (best-effort; the fd may already be gone)
+    {
+        let w = conn.writer.lock().expect("writer poisoned");
+        let _ = w.shutdown(NetShutdown::Both);
+    }
     let orphans: Vec<Trial> = conn
         .in_flight
         .lock()
@@ -734,11 +1271,17 @@ fn disconnect(conn: &Conn, shared: &Shared) {
         .map(|(_, (t, _))| t)
         .collect();
     if !orphans.is_empty() && !shared.stop.load(Ordering::SeqCst) {
-        conn.stats.requeued.fetch_add(orphans.len() as u64, Ordering::Relaxed);
-        shared.requeued.fetch_add(orphans.len() as u64, Ordering::Relaxed);
-        let mut q = shared.queue.lock().expect("queue poisoned");
-        for t in orphans {
-            q.push_front(t);
+        let orphans: Vec<Trial> = {
+            let delivered = shared.delivered.lock().expect("delivered poisoned");
+            orphans.into_iter().filter(|t| !delivered.contains(&t.id)).collect()
+        };
+        if !orphans.is_empty() {
+            conn.stats.requeued.fetch_add(orphans.len() as u64, Ordering::Relaxed);
+            shared.faults.requeued.fetch_add(orphans.len() as u64, Ordering::Relaxed);
+            let mut q = shared.queue.lock().expect("queue poisoned");
+            for t in orphans {
+                q.push_front(t);
+            }
         }
     }
     shared.cv.notify_all();
@@ -785,8 +1328,14 @@ fn pick_target(shared: &Shared) -> Option<Arc<Conn>> {
 }
 
 /// Frame a trial out to a worker, registering it in-flight first so the
-/// disconnect path can rescue it whatever happens mid-write.
+/// disconnect path can rescue it whatever happens mid-write. A trial whose
+/// outcome already passed the delivery gate (a stale queue entry that lost
+/// a requeue/redeliver race) is silently discarded instead of re-run.
 fn send_trial(shared: &Shared, conn: &Arc<Conn>, trial: Trial) {
+    if shared.delivered.lock().expect("delivered poisoned").contains(&trial.id) {
+        shared.cv.notify_all();
+        return;
+    }
     {
         let mut in_flight = conn.in_flight.lock().expect("in_flight poisoned");
         // the alive check happens under the in_flight lock: the disconnect
@@ -802,9 +1351,10 @@ fn send_trial(shared: &Shared, conn: &Arc<Conn>, trial: Trial) {
     }
     conn.stats.dispatched.fetch_add(1, Ordering::Relaxed);
     let msg = LeaderMsg::Dispatch(trial.clone()).to_json();
+    let fc = shared.net.frame_config();
     let written = {
         let mut w = conn.writer.lock().expect("writer poisoned");
-        write_frame(&mut *w, &msg)
+        write_frame_with(&mut *w, &msg, &fc)
     };
     match written {
         Ok(n) => {
@@ -813,13 +1363,16 @@ fn send_trial(shared: &Shared, conn: &Arc<Conn>, trial: Trial) {
         Err(_) => {
             // the reader will also notice the dead socket; removing the
             // entry here makes the rescue idempotent (whoever removes it
-            // first requeues it, exactly once)
+            // first requeues it, exactly once) — and the delivery gate is
+            // consulted again in case an outcome crossed mid-write
             conn.alive.store(false, Ordering::SeqCst);
             let removed =
                 conn.in_flight.lock().expect("in_flight poisoned").remove(&trial.id);
-            if removed.is_some() && !shared.stop.load(Ordering::SeqCst) {
+            let already_delivered =
+                shared.delivered.lock().expect("delivered poisoned").contains(&trial.id);
+            if removed.is_some() && !already_delivered && !shared.stop.load(Ordering::SeqCst) {
                 conn.stats.requeued.fetch_add(1, Ordering::Relaxed);
-                shared.requeued.fetch_add(1, Ordering::Relaxed);
+                shared.faults.requeued.fetch_add(1, Ordering::Relaxed);
                 shared.queue.lock().expect("queue poisoned").push_front(trial);
                 shared.cv.notify_all();
             }
@@ -831,103 +1384,379 @@ fn send_trial(shared: &Shared, conn: &Arc<Conn>, trial: Trial) {
 // Worker side: the `lazygp worker` daemon
 // ---------------------------------------------------------------------------
 
+/// Reconnect policy of the worker daemon: capped exponential backoff with
+/// ±25% deterministic jitter between connection attempts.
+#[derive(Debug, Clone)]
+pub struct ReconnectConfig {
+    /// consecutive failed connection attempts before the daemon gives up;
+    /// `0` disables reconnecting entirely (exit on the first lost link)
+    pub max_attempts: u32,
+    /// first backoff delay; doubled per consecutive failure
+    pub base_backoff: Duration,
+    /// backoff cap
+    pub max_backoff: Duration,
+    /// seed of the jitter stream (deterministic per daemon; vary it across
+    /// a fleet so workers do not stampede a restarting leader)
+    pub jitter_seed: u64,
+}
+
+impl Default for ReconnectConfig {
+    fn default() -> Self {
+        Self {
+            max_attempts: 8,
+            base_backoff: Duration::from_millis(50),
+            max_backoff: Duration::from_secs(2),
+            jitter_seed: 0x1a27_90b0,
+        }
+    }
+}
+
+impl ReconnectConfig {
+    /// A policy that never reconnects (the pre-hardening behavior).
+    pub fn disabled() -> Self {
+        Self { max_attempts: 0, ..Default::default() }
+    }
+
+    /// Backoff before attempt `attempt` (0-based among consecutive
+    /// failures): `base · 2^attempt`, capped, then jittered ±25%.
+    fn backoff(&self, attempt: u32, rng: &mut Pcg64) -> Duration {
+        let exp = self.base_backoff.as_secs_f64() * 2f64.powi(attempt.min(16) as i32);
+        let capped = exp.min(self.max_backoff.as_secs_f64());
+        Duration::from_secs_f64(capped * rng.uniform(0.75, 1.25))
+    }
+}
+
+/// Options of [`run_worker_with`].
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// advertised capacity: that many trials run concurrently on the
+    /// in-process [`WorkerPool`]
+    pub threads: usize,
+    pub reconnect: ReconnectConfig,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        Self { threads: 1, reconnect: ReconnectConfig::default() }
+    }
+}
+
 /// What a finished worker daemon reports.
 #[derive(Debug, Clone, Copy)]
 pub struct WorkerSummary {
-    /// id the leader assigned in the handshake
+    /// id the leader assigned in the most recent handshake
     pub worker_id: u64,
-    /// outcomes successfully reported back
+    /// outcomes successfully reported back (re-deliveries included)
     pub evaluated: u64,
+    /// successful re-handshakes after a lost link
+    pub reconnects: u64,
+    /// buffered outcomes delivered after a reconnect
+    pub redelivered: u64,
 }
 
-/// Connect to a leader and evaluate trials until it says stop (or the
-/// connection drops). `threads` is the advertised capacity: that many
-/// trials run concurrently on an in-process [`WorkerPool`].
+/// How a worker session over one connection ended.
+enum SessionEnd {
+    /// the leader sent an explicit Shutdown: exit cleanly, do not reconnect
+    Shutdown,
+    /// the link died (EOF, reset, write failure, heartbeat deadline):
+    /// candidates for reconnection
+    Lost,
+}
+
+/// Connect to a leader and evaluate trials until it says stop. `threads`
+/// is the advertised capacity. Reconnects with the default
+/// [`ReconnectConfig`] when the link (or the leader) dies; use
+/// [`run_worker_with`] to tune or disable that.
 ///
-/// The objective and simulation knobs come from the leader's Welcome, so
-/// callers only need an address — this is what `lazygp worker --connect`
-/// runs, and what tests/benches spawn in-process over loopback.
+/// The objective, simulation knobs and link policy come from the leader's
+/// Welcome, so callers only need an address — this is what
+/// `lazygp worker --connect` runs, and what tests/benches spawn in-process
+/// over loopback.
 pub fn run_worker(addr: &str, threads: usize) -> crate::Result<WorkerSummary> {
-    let threads = threads.max(1);
-    let stream = TcpStream::connect(addr)?;
+    run_worker_with(addr, WorkerOptions { threads, ..Default::default() })
+}
+
+/// [`run_worker`] with explicit reconnect options. The daemon loops over
+/// sessions: connect (with capped exponential backoff + jitter between
+/// consecutive failures), Hello/Welcome re-handshake (advertising the
+/// previous worker id as `resume`), flush results buffered while the link
+/// was down, then pump trials/outcomes/heartbeats until the link ends.
+/// Work accepted before a link died keeps evaluating across the gap; its
+/// results are re-delivered on the next session (the leader de-duplicates
+/// by trial id, so a crossed requeue cannot double-count).
+pub fn run_worker_with(addr: &str, opts: WorkerOptions) -> crate::Result<WorkerSummary> {
+    let threads = opts.threads.max(1);
+    let mut jitter = Pcg64::new(opts.reconnect.jitter_seed);
+    let mut summary =
+        WorkerSummary { worker_id: 0, evaluated: 0, reconnects: 0, redelivered: 0 };
+    let mut pool: Option<WorkerPool> = None;
+    let mut objective_name: Option<String> = None;
+    let mut resume: Option<u64> = None;
+    let mut undelivered: Vec<TrialOutcome> = Vec::new();
+    let mut failures: u32 = 0;
+    let mut fatal: Option<crate::Error> = None;
+    loop {
+        let stream = match connect_leader(addr) {
+            Ok(s) => s,
+            Err(e) => {
+                failures += 1;
+                if failures > opts.reconnect.max_attempts {
+                    if resume.is_none() {
+                        fatal = Some(e); // never reached the leader at all
+                    }
+                    break;
+                }
+                std::thread::sleep(opts.reconnect.backoff(failures - 1, &mut jitter));
+                continue;
+            }
+        };
+        match worker_session(
+            stream,
+            threads,
+            resume,
+            &mut pool,
+            &mut objective_name,
+            &mut undelivered,
+            &mut summary,
+        ) {
+            Ok(SessionEnd::Shutdown) => break,
+            Ok(SessionEnd::Lost) => {
+                failures = 0; // the handshake worked; backoff restarts fresh
+                resume = Some(summary.worker_id);
+                if opts.reconnect.max_attempts == 0 {
+                    break;
+                }
+                // brief pause so a restarting leader can re-bind first
+                std::thread::sleep(opts.reconnect.backoff(0, &mut jitter));
+            }
+            Err(e) => {
+                if e.is_protocol() {
+                    fatal = Some(e); // incompatible peer: retrying cannot help
+                    break;
+                }
+                failures += 1;
+                if failures > opts.reconnect.max_attempts {
+                    if resume.is_none() {
+                        fatal = Some(e);
+                    }
+                    break;
+                }
+                std::thread::sleep(opts.reconnect.backoff(failures - 1, &mut jitter));
+            }
+        }
+    }
+    if let Some(p) = pool.take() {
+        p.shutdown(); // interrupts any remaining simulated-cost sleeps
+    }
+    match fatal {
+        Some(e) => Err(e),
+        None => {
+            if !undelivered.is_empty() {
+                eprintln!(
+                    "worker {}: exiting with {} unreported result(s) — the leader has \
+                     re-queued those trials",
+                    summary.worker_id,
+                    undelivered.len()
+                );
+            }
+            Ok(summary)
+        }
+    }
+}
+
+/// Resolve and connect with a bounded timeout (an unroutable leader must
+/// fail within the backoff cadence, not an OS-default 75 s). Every
+/// resolved address is tried in order — a dual-stack hostname whose first
+/// (say, IPv6) address is unroutable must still reach an IPv4-only leader,
+/// matching `TcpStream::connect`'s fallthrough semantics.
+fn connect_leader(addr: &str) -> crate::Result<TcpStream> {
+    let mut last: Option<io::Error> = None;
+    for sock in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sock, Duration::from_secs(5)) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(match last {
+        Some(e) => crate::err!("could not connect to leader at `{addr}`: {e}"),
+        None => crate::err!("unresolvable leader address `{addr}`"),
+    })
+}
+
+/// One connection's worth of worker life: handshake, redelivery flush,
+/// then the trial/outcome/heartbeat pump. `Ok` means the handshake
+/// succeeded and reports how the session ended; `Err` means the handshake
+/// itself failed.
+fn worker_session(
+    stream: TcpStream,
+    threads: usize,
+    resume: Option<u64>,
+    pool: &mut Option<WorkerPool>,
+    objective_name: &mut Option<String>,
+    undelivered: &mut Vec<TrialOutcome>,
+    summary: &mut WorkerSummary,
+) -> crate::Result<SessionEnd> {
     stream.set_nodelay(true)?;
     let mut writer = stream.try_clone()?;
     let mut reader = stream;
-    write_frame(
+    // the handshake is plain-framed and time-bounded; the negotiated
+    // policy applies from the first post-Welcome frame
+    let hs = FrameConfig::handshake();
+    reader.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    write_frame_with(
         &mut writer,
-        &WorkerMsg::Hello { protocol: PROTOCOL_VERSION, capacity: threads }.to_json(),
+        &WorkerMsg::Hello { protocol: PROTOCOL_VERSION, capacity: threads, resume }.to_json(),
+        &hs,
     )?;
-    let (welcome, _) = read_frame(&mut reader)?;
-    let LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed } =
+    let (welcome, _) = read_frame_with(&mut reader, &hs)?;
+    let LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed, net } =
         LeaderMsg::from_json(&welcome)?
     else {
-        crate::bail!("leader did not start with a welcome message");
+        return Err(crate::Error::protocol("leader did not start with a welcome message"));
     };
-    let obj = crate::objectives::by_name(&objective)
-        .ok_or_else(|| crate::err!("leader requested unknown objective `{objective}`"))?;
-    let pool = WorkerPool::spawn(
-        Arc::from(obj),
-        WorkerConfig {
-            workers: threads,
-            sleep_scale,
-            fail_prob,
-            queue_cap: (threads * 2).max(8),
-            // distinct stream per connection; threads substream via wid
-            seed: seed ^ worker_id.wrapping_mul(0x9e37_79b9_7f4a_7c15),
-        },
-    );
+    if let Some(prev) = objective_name.as_ref() {
+        if *prev != objective {
+            return Err(crate::Error::protocol(format!(
+                "leader changed objective across reconnects: `{prev}` → `{objective}`"
+            )));
+        }
+    }
+    if resume.is_some() {
+        summary.reconnects += 1;
+    }
+    summary.worker_id = worker_id;
+    let fc = net.frame_config();
+    reader.set_read_timeout(if net.heartbeats_on() { Some(net.deadline()) } else { None })?;
+    if pool.is_none() {
+        let obj = crate::objectives::by_name(&objective).ok_or_else(|| {
+            crate::Error::protocol(format!("leader requested unknown objective `{objective}`"))
+        })?;
+        *objective_name = Some(objective);
+        *pool = Some(WorkerPool::spawn(
+            Arc::from(obj),
+            WorkerConfig {
+                workers: threads,
+                sleep_scale,
+                fail_prob,
+                queue_cap: (threads * 2).max(8),
+                // distinct stream per daemon; threads substream via wid
+                seed: seed ^ worker_id.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            },
+        ));
+    }
+    let pool = pool.as_ref().expect("pool just ensured");
 
-    // socket reader feeds trials through a channel; `None` means stop
-    let (trial_tx, trial_rx) = channel::<Option<Trial>>();
-    let reader_handle = std::thread::spawn(move || loop {
-        let msg = match read_frame(&mut reader) {
-            Ok((json, _)) => LeaderMsg::from_json(&json),
-            Err(_) => {
-                let _ = trial_tx.send(None);
-                return;
+    // flush results that finished while the link was down; the leader's
+    // delivery gate drops any that crossed a requeue
+    while let Some(o) = undelivered.last().cloned() {
+        match write_frame_with(&mut writer, &WorkerMsg::Outcome(o).to_json(), &fc) {
+            Ok(_) => {
+                undelivered.pop();
+                summary.evaluated += 1;
+                summary.redelivered += 1;
             }
-        };
-        match msg {
-            Ok(LeaderMsg::Dispatch(t)) => {
-                if trial_tx.send(Some(t)).is_err() {
+            Err(_) => return Ok(SessionEnd::Lost),
+        }
+    }
+
+    // socket reader feeds the pump through a channel
+    enum Inbound {
+        Trial(Trial),
+        Pong,
+        Shutdown,
+        Lost,
+    }
+    let (in_tx, in_rx) = channel::<Inbound>();
+    let reader_handle = std::thread::spawn(move || loop {
+        match read_frame_with(&mut reader, &fc) {
+            Ok((json, _)) => match LeaderMsg::from_json(&json) {
+                Ok(LeaderMsg::Dispatch(t)) => {
+                    if in_tx.send(Inbound::Trial(t)).is_err() {
+                        return;
+                    }
+                }
+                Ok(LeaderMsg::Pong { .. }) => {
+                    if in_tx.send(Inbound::Pong).is_err() {
+                        return;
+                    }
+                }
+                Ok(LeaderMsg::Shutdown) => {
+                    let _ = in_tx.send(Inbound::Shutdown);
                     return;
                 }
-            }
-            Ok(LeaderMsg::Shutdown) | Ok(LeaderMsg::Welcome { .. }) | Err(_) => {
-                let _ = trial_tx.send(None);
+                Ok(LeaderMsg::Welcome { .. }) | Err(_) => {
+                    let _ = in_tx.send(Inbound::Lost);
+                    return;
+                }
+            },
+            // EOF, reset, or the heartbeat deadline passed with no Pong:
+            // either way the leader is unreachable from here
+            Err(_) => {
+                let _ = in_tx.send(Inbound::Lost);
                 return;
             }
         }
     });
 
-    // pump: submissions in, outcomes out, until told to stop. A leader
-    // Shutdown (or a dead socket) ends the loop immediately — in-flight
-    // trials are abandoned, and `pool.shutdown()` below interrupts their
-    // simulated-cost sleeps so the daemon exits promptly.
-    let mut evaluated: u64 = 0;
+    // pump: submissions in, outcomes + heartbeats out, until the session
+    // ends. An explicit Shutdown abandons remaining in-flight work (the
+    // leader discards results at its own teardown); a lost link keeps the
+    // pool evaluating — finished results are buffered for re-delivery.
+    let mut seq: u64 = 0;
+    let mut last_tx = Instant::now();
+    let end;
     'pump: loop {
         loop {
-            match trial_rx.try_recv() {
-                Ok(Some(t)) => {
+            match in_rx.try_recv() {
+                Ok(Inbound::Trial(t)) => {
                     // the leader never over-fills a slot, so this submit
                     // cannot block longer than the queue bound
                     pool.submit(t);
                 }
-                Ok(None) | Err(TryRecvError::Disconnected) => break 'pump,
+                Ok(Inbound::Pong) => {}
+                Ok(Inbound::Shutdown) => {
+                    end = SessionEnd::Shutdown;
+                    break 'pump;
+                }
+                Ok(Inbound::Lost) | Err(TryRecvError::Disconnected) => {
+                    end = SessionEnd::Lost;
+                    break 'pump;
+                }
                 Err(TryRecvError::Empty) => break,
             }
         }
-        if let Some(outcome) = pool.recv_timeout(Duration::from_millis(20)) {
-            if write_frame(&mut writer, &WorkerMsg::Outcome(outcome).to_json()).is_err() {
-                break 'pump; // leader gone: nothing left to report to
+        if net.heartbeats_on() && last_tx.elapsed() >= net.interval() {
+            seq += 1;
+            match write_frame_with(&mut writer, &WorkerMsg::Ping { seq }.to_json(), &fc) {
+                Ok(_) => last_tx = Instant::now(),
+                Err(_) => {
+                    end = SessionEnd::Lost;
+                    break 'pump;
+                }
             }
-            evaluated += 1;
+        }
+        if let Some(outcome) = pool.recv_timeout(Duration::from_millis(20)) {
+            match write_frame_with(
+                &mut writer,
+                &WorkerMsg::Outcome(outcome.clone()).to_json(),
+                &fc,
+            ) {
+                Ok(_) => {
+                    last_tx = Instant::now();
+                    summary.evaluated += 1;
+                }
+                Err(_) => {
+                    undelivered.push(outcome);
+                    end = SessionEnd::Lost;
+                    break 'pump;
+                }
+            }
         }
     }
-    pool.shutdown(); // interrupts any remaining simulated-cost sleeps
+    // closing both directions also unblocks the session reader (same fd)
     let _ = writer.shutdown(NetShutdown::Both);
     let _ = reader_handle.join();
-    Ok(WorkerSummary { worker_id, evaluated })
+    Ok(end)
 }
 
 #[cfg(test)]
@@ -963,7 +1792,8 @@ mod tests {
         let mut short = io::Cursor::new(vec![0u8, 0, 0, 10, b'{']);
         assert!(read_frame(&mut short).is_err());
         let mut huge = io::Cursor::new(vec![0xffu8, 0xff, 0xff, 0xff]);
-        assert!(read_frame(&mut huge).is_err());
+        let err = read_frame(&mut huge).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData, "cap check must precede allocation");
         let mut not_json = Vec::new();
         write_frame(&mut not_json, &Json::Str("plain string, not an object".into())).unwrap();
         let mut cursor = io::Cursor::new(not_json);
@@ -972,23 +1802,99 @@ mod tests {
     }
 
     #[test]
+    fn crc32_matches_known_vectors() {
+        // the canonical IEEE test vector, plus the empty string
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn checksummed_frames_roundtrip_and_reject_corruption() {
+        let cfg = FrameConfig { checksum: true, ..Default::default() };
+        let msg = LeaderMsg::Dispatch(Trial { id: 3, round: 0, x: vec![0.25], attempt: 0 })
+            .to_json();
+        let mut buf = Vec::new();
+        let wrote = write_frame_with(&mut buf, &msg, &cfg).unwrap();
+        assert_eq!(wrote as usize, buf.len());
+        let body_len = buf.len() - 8; // 4 B length + 4 B crc header
+        assert_eq!(u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize, body_len);
+
+        let (back, read) = read_frame_with(&mut io::Cursor::new(buf.clone()), &cfg).unwrap();
+        assert_eq!(read, wrote);
+        assert!(matches!(LeaderMsg::from_json(&back).unwrap(), LeaderMsg::Dispatch(_)));
+
+        // flip one body byte → checksum mismatch, InvalidData
+        let mut corrupt = buf.clone();
+        let last = corrupt.len() - 1;
+        corrupt[last] ^= 0x01;
+        let err = read_frame_with(&mut io::Cursor::new(corrupt), &cfg).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("checksum"), "{err}");
+
+        // flip one header (crc) byte → same rejection
+        let mut corrupt = buf.clone();
+        corrupt[5] ^= 0x80;
+        let err = read_frame_with(&mut io::Cursor::new(corrupt), &cfg).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+
+        // truncated body → UnexpectedEof, not a hang or panic
+        let truncated = buf[..buf.len() - 2].to_vec();
+        assert!(read_frame_with(&mut io::Cursor::new(truncated), &cfg).is_err());
+    }
+
+    #[test]
+    fn frame_cap_is_configurable_and_checked_before_allocation() {
+        let msg = Json::Str("x".repeat(100));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        // a reader with a smaller cap rejects the length prefix outright
+        let tiny = FrameConfig { max_frame_bytes: 50, checksum: false };
+        let err = read_frame_with(&mut io::Cursor::new(buf.clone()), &tiny).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("cap"), "{err}");
+        // a writer with a smaller cap refuses to emit the frame
+        let mut sink: Vec<u8> = Vec::new();
+        let err = write_frame_with(&mut sink, &msg, &tiny).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(sink.is_empty(), "nothing may be written past the cap check");
+        // and the default cap still admits it
+        assert!(read_frame_with(&mut io::Cursor::new(buf), &FrameConfig::default()).is_ok());
+    }
+
+    #[test]
     fn protocol_messages_roundtrip() {
-        let hello = WorkerMsg::Hello { protocol: PROTOCOL_VERSION, capacity: 3 };
-        let WorkerMsg::Hello { protocol, capacity } =
+        let hello = WorkerMsg::Hello { protocol: PROTOCOL_VERSION, capacity: 3, resume: None };
+        let WorkerMsg::Hello { protocol, capacity, resume } =
             WorkerMsg::from_json(&Json::parse(&hello.to_json().to_string()).unwrap()).unwrap()
         else {
             panic!("wrong variant");
         };
-        assert_eq!((protocol, capacity), (PROTOCOL_VERSION, 3));
+        assert_eq!((protocol, capacity, resume), (PROTOCOL_VERSION, 3, None));
 
+        // a reconnecting worker's Hello carries its previous id
+        let hello = WorkerMsg::Hello { protocol: PROTOCOL_VERSION, capacity: 1, resume: Some(7) };
+        let WorkerMsg::Hello { resume, .. } =
+            WorkerMsg::from_json(&Json::parse(&hello.to_json().to_string()).unwrap()).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        assert_eq!(resume, Some(7));
+
+        let net = NetPolicy {
+            heartbeat_interval_s: 0.5,
+            heartbeat_deadline_s: 1.25,
+            max_frame_bytes: 1 << 20,
+            checksum: true,
+        };
         let welcome = LeaderMsg::Welcome {
             worker_id: 4,
             objective: "sphere5".into(),
             sleep_scale: 1e-5,
             fail_prob: 0.25,
             seed: u64::MAX, // full range must survive the string encoding
+            net,
         };
-        let LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed } =
+        let LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed, net: back } =
             LeaderMsg::from_json(&Json::parse(&welcome.to_json().to_string()).unwrap()).unwrap()
         else {
             panic!("wrong variant");
@@ -998,6 +1904,22 @@ mod tests {
         assert_eq!(sleep_scale, 1e-5);
         assert_eq!(fail_prob, 0.25);
         assert_eq!(seed, u64::MAX);
+        assert_eq!(back, net);
+
+        let ping = WorkerMsg::Ping { seq: 42 };
+        let WorkerMsg::Ping { seq } =
+            WorkerMsg::from_json(&Json::parse(&ping.to_json().to_string()).unwrap()).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        assert_eq!(seq, 42);
+        let pong = LeaderMsg::Pong { seq: 42 };
+        let LeaderMsg::Pong { seq } =
+            LeaderMsg::from_json(&Json::parse(&pong.to_json().to_string()).unwrap()).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        assert_eq!(seq, 42);
 
         let shutdown =
             LeaderMsg::from_json(&Json::parse(&LeaderMsg::Shutdown.to_json().to_string()).unwrap())
@@ -1021,6 +1943,66 @@ mod tests {
     }
 
     #[test]
+    fn net_policy_resolves_deadline_and_detects_disabled_heartbeats() {
+        let p = SocketPoolOptions::default().net_policy();
+        assert!(p.heartbeats_on());
+        assert_eq!(p.deadline(), 2 * p.interval(), "default deadline is 2× the interval");
+        let explicit = NetPolicy { heartbeat_deadline_s: 7.0, ..p };
+        assert_eq!(explicit.deadline(), Duration::from_secs(7));
+        // a deadline at/below the ping cadence would reap every link before
+        // its first Ping — it is clamped up to 1.25× the interval
+        let too_tight = NetPolicy { heartbeat_deadline_s: 0.5, ..p };
+        assert_eq!(too_tight.deadline(), Duration::from_secs_f64(2.5));
+        assert!(too_tight.deadline() > too_tight.interval());
+        let off = NetPolicy { heartbeat_interval_s: 0.0, ..p };
+        assert!(!off.heartbeats_on());
+        assert!(!p.frame_config().checksum);
+        assert!(!p.handshake_config().checksum);
+        let sum = NetPolicy { checksum: true, ..p };
+        assert!(sum.frame_config().checksum);
+        assert!(!sum.handshake_config().checksum, "handshake frames are never checksummed");
+    }
+
+    #[test]
+    fn reconnect_backoff_is_capped_and_jittered() {
+        let rc = ReconnectConfig {
+            base_backoff: Duration::from_millis(100),
+            max_backoff: Duration::from_millis(400),
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(13);
+        let d0 = rc.backoff(0, &mut rng);
+        assert!(
+            d0 >= Duration::from_millis(75) && d0 <= Duration::from_millis(125),
+            "first backoff {d0:?} outside base ±25%"
+        );
+        for attempt in 0..40 {
+            let d = rc.backoff(attempt, &mut rng);
+            assert!(d <= Duration::from_millis(500), "attempt {attempt}: {d:?} beyond cap+jitter");
+            assert!(d >= Duration::from_millis(75), "attempt {attempt}: {d:?} below floor");
+        }
+        // large attempt counts must not overflow the exponent
+        let _ = rc.backoff(u32::MAX, &mut rng);
+    }
+
+    #[test]
+    fn relisten_rebinds_a_dropped_listener() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        drop(l);
+        let stop = AtomicBool::new(false);
+        let count = AtomicU64::new(0);
+        let l2 = relisten(addr, &stop, &count).expect("rebind the same port");
+        assert_eq!(l2.local_addr().unwrap(), addr);
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+        drop(l2);
+        // a stopped pool gives up instead of rebinding
+        stop.store(true, Ordering::SeqCst);
+        assert!(relisten(addr, &stop, &count).is_none());
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
     fn transport_stats_render_links() {
         let stats = TransportStats {
             backend: "tcp",
@@ -1034,12 +2016,16 @@ mod tests {
                 bytes_rx: 200,
                 rtt_mean_s: 0.001,
             }],
-            requeued: 1,
+            faults: FaultCounters { requeued: 1, heartbeats_missed: 2, ..Default::default() },
         };
         let s = stats.render_links();
         assert!(s.contains("link   0"), "{s}");
         assert!(s.contains("requeued   1"), "{s}");
-        assert!(s.ends_with("requeued after disconnects: 1"), "{s}");
+        assert!(s.contains("requeued after disconnects: 1"), "{s}");
+        assert!(s.contains("heartbeats missed 2"), "{s}");
+        // a fault-free pool renders no fault line
+        let clean = TransportStats { backend: "tcp", links: vec![], faults: Default::default() };
+        assert!(!clean.render_links().contains("link faults"));
     }
 
     #[test]
@@ -1056,8 +2042,11 @@ mod tests {
         .unwrap();
         let addr = pool.local_addr();
         let mut bad = TcpStream::connect(addr).unwrap();
-        write_frame(&mut bad, &WorkerMsg::Hello { protocol: 999, capacity: 1 }.to_json())
-            .unwrap();
+        write_frame(
+            &mut bad,
+            &WorkerMsg::Hello { protocol: 999, capacity: 1, resume: None }.to_json(),
+        )
+        .unwrap();
         // the leader drops the connection without welcoming it
         std::thread::sleep(Duration::from_millis(200));
         assert_eq!(pool.capacity_now(), 0);

@@ -228,12 +228,29 @@ impl WorkerPool {
     /// Graceful shutdown: interrupt simulated-cost sleeps, close the queue
     /// and join every worker. Returns once all threads exited — promptly,
     /// because in-progress sleeps are woken by the [`ShutdownToken`].
-    pub fn shutdown(mut self) {
+    pub fn shutdown(self) {
+        let _ = self.shutdown_drain();
+    }
+
+    /// [`shutdown`](WorkerPool::shutdown) that returns every outcome still
+    /// buffered when the pool went down — including trials that were
+    /// *accepted from the queue but not yet evaluated* when shutdown
+    /// triggered. Workers drain the queue instead of dropping such trials
+    /// (their simulated-cost sleeps are skipped once the token fires, so
+    /// teardown stays prompt); callers that must account for every
+    /// accepted trial exactly once use this variant.
+    pub fn shutdown_drain(mut self) -> Vec<TrialOutcome> {
         self.shutdown.trigger();
         self.tx.take(); // close channel ⇒ workers drain and exit
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        // all senders are gone: everything left is buffered output
+        let mut leftover = Vec::new();
+        while let Ok(o) = self.results.try_recv() {
+            leftover.push(o);
+        }
+        leftover
     }
 }
 
@@ -260,12 +277,14 @@ fn worker_loop(
         // hold the lock only while receiving so evaluation runs in parallel
         let trial = match rx.lock().expect("queue poisoned").recv() {
             Ok(t) => t,
-            Err(_) => return, // leader closed the queue
+            Err(_) => return, // leader closed the queue: everything drained
         };
-        // teardown in progress: the leader no longer wants results
-        if token.is_triggered() {
-            return;
-        }
+        // NOTE: an accepted trial is evaluated even when shutdown has
+        // already triggered — its simulated-cost sleep returns immediately
+        // (the token is fired), so this costs microseconds and guarantees
+        // a trial handed over by the queue is never silently dropped
+        // between `recv` and the shutdown check. `shutdown_drain` relies
+        // on this to account for every accepted trial exactly once.
         let outcome = evaluate_trial(wid, objective.as_ref(), &mut rng, trial, &cfg, &token);
         if res_tx.send(outcome).is_err() {
             return; // leader gone
@@ -436,6 +455,31 @@ mod tests {
             teardown_s < 1.0,
             "teardown took {teardown_s:.3}s — simulated-cost sleep was not interrupted"
         );
+    }
+
+    #[test]
+    fn shutdown_drain_accounts_for_accepted_trials() {
+        use crate::objectives::trainer::ResNetCifarSim;
+        // worker 0 accepts trial A and enters its (capped 5 s) simulated
+        // sleep; trial B waits in the queue. Shutdown must not silently
+        // drop either: A's sleep is interrupted, B is evaluated with its
+        // sleep skipped (token already fired) — the old code dropped any
+        // trial received after the trigger on the floor.
+        let obj: Arc<dyn Objective> = Arc::new(ResNetCifarSim::new());
+        let p = WorkerPool::spawn(
+            obj,
+            WorkerConfig { workers: 1, sleep_scale: 1.0, seed: 21, ..Default::default() },
+        );
+        p.submit(Trial { id: 0, round: 0, x: vec![0.05, 5e-4, 0.9], attempt: 0 });
+        p.submit(Trial { id: 1, round: 0, x: vec![0.05, 5e-4, 0.9], attempt: 0 });
+        std::thread::sleep(Duration::from_millis(150)); // A is now sleeping
+        let sw = crate::util::timer::Stopwatch::new();
+        let mut ids: Vec<u64> =
+            p.shutdown_drain().into_iter().map(|o| o.trial.id).collect();
+        let teardown_s = sw.elapsed_s();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1], "accepted trials must never be silently dropped");
+        assert!(teardown_s < 1.0, "drain must stay prompt, took {teardown_s:.3}s");
     }
 
     #[test]

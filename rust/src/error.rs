@@ -1,27 +1,75 @@
 //! Crate-wide error type — the offline stand-in for `anyhow`.
 //!
-//! A single string-backed error is enough for this crate: every fallible
-//! path either bubbles an I/O error, a parse error with its own message, or
-//! a hand-written context string. The [`err!`](crate::err!) and
-//! [`bail!`](crate::bail!) macros mirror the `anyhow!`/`bail!` ergonomics
-//! the launcher and runtime layers use.
+//! A string-backed message covers most fallible paths (I/O, parsing,
+//! hand-written context), mirrored by the [`err!`](crate::err!) and
+//! [`bail!`](crate::bail!) macros. Two conditions the distributed
+//! transport must let callers *match on* are typed variants instead of
+//! prose:
+//!
+//! * [`Error::Protocol`] — a wire-protocol violation (corrupted or
+//!   oversized frame, failed checksum, malformed or out-of-order message).
+//!   A peer producing these is broken or hostile; the link is dropped, not
+//!   retried.
+//! * [`Error::AllWorkersLost`] — a remote transport's blocking receive
+//!   observed zero live worker links for the configured deadline while
+//!   outcomes were still expected. Pre-hardening this wedged the leader
+//!   forever; now the coordinator surfaces it and the operator decides.
 
 use std::fmt;
+use std::time::Duration;
 
-/// String-backed error carrying a rendered message.
+/// Crate-wide error: a rendered message, or one of the typed transport
+/// conditions callers dispatch on.
 #[derive(Debug)]
-pub struct Error(String);
+pub enum Error {
+    /// Generic rendered message (the `anyhow` analogue).
+    Msg(String),
+    /// Wire-protocol violation: corrupt/oversized frame, checksum
+    /// mismatch, malformed or out-of-order message.
+    Protocol(String),
+    /// Every worker link of a remote transport is gone: no outcome and no
+    /// live worker for `deadline` while work was still outstanding.
+    AllWorkersLost {
+        /// how long the transport waited with zero live links before
+        /// giving up
+        deadline: Duration,
+    },
+}
 
 impl Error {
-    /// Build from anything displayable.
+    /// Build a generic error from anything displayable.
     pub fn msg(m: impl fmt::Display) -> Self {
-        Error(m.to_string())
+        Error::Msg(m.to_string())
+    }
+
+    /// Build a wire-protocol violation.
+    pub fn protocol(m: impl fmt::Display) -> Self {
+        Error::Protocol(m.to_string())
+    }
+
+    /// Is this a wire-protocol violation?
+    pub fn is_protocol(&self) -> bool {
+        matches!(self, Error::Protocol(_))
+    }
+
+    /// Is this the all-worker-links-lost condition?
+    pub fn is_all_workers_lost(&self) -> bool {
+        matches!(self, Error::AllWorkersLost { .. })
     }
 }
 
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.0)
+        match self {
+            Error::Msg(m) => f.write_str(m),
+            Error::Protocol(m) => write!(f, "wire protocol violation: {m}"),
+            Error::AllWorkersLost { deadline } => write!(
+                f,
+                "all worker links lost: no outcome and zero live workers for {:.1}s \
+                 (workers rejoin with `lazygp worker --connect <leader>`)",
+                deadline.as_secs_f64()
+            ),
+        }
     }
 }
 
@@ -29,31 +77,31 @@ impl std::error::Error for Error {}
 
 impl From<String> for Error {
     fn from(s: String) -> Self {
-        Error(s)
+        Error::Msg(s)
     }
 }
 
 impl From<&str> for Error {
     fn from(s: &str) -> Self {
-        Error(s.to_string())
+        Error::Msg(s.to_string())
     }
 }
 
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Self {
-        Error(e.to_string())
+        Error::Msg(e.to_string())
     }
 }
 
 impl From<crate::config::json::JsonError> for Error {
     fn from(e: crate::config::json::JsonError) -> Self {
-        Error(e.to_string())
+        Error::Msg(e.to_string())
     }
 }
 
 impl From<crate::util::cli::CliError> for Error {
     fn from(e: crate::util::cli::CliError) -> Self {
-        Error(e.0)
+        Error::Msg(e.0)
     }
 }
 
@@ -100,5 +148,19 @@ mod tests {
         }
         assert_eq!(fails().unwrap_err().to_string(), "bad 7");
         assert_eq!(err!("v={}", 1.5).to_string(), "v=1.5");
+    }
+
+    #[test]
+    fn typed_variants_classify_and_render() {
+        let p = Error::protocol("checksum mismatch");
+        assert!(p.is_protocol() && !p.is_all_workers_lost());
+        assert!(p.to_string().contains("wire protocol violation"));
+        assert!(p.to_string().contains("checksum mismatch"));
+
+        let lost = Error::AllWorkersLost { deadline: Duration::from_secs(60) };
+        assert!(lost.is_all_workers_lost() && !lost.is_protocol());
+        assert!(lost.to_string().contains("60.0s"), "{lost}");
+
+        assert!(!Error::msg("plain").is_protocol());
     }
 }

@@ -16,10 +16,10 @@ use std::time::Duration;
 
 use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign, PendingStrategy, SurrogateChoice};
 use lazygp::config::experiment::{ExperimentConfig, Preset};
-use lazygp::coordinator::transport::run_worker;
+use lazygp::coordinator::transport::run_worker_with;
 use lazygp::coordinator::{
-    AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo, RemoteEvalConfig, SocketPool,
-    Transport,
+    AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo, ReconnectConfig,
+    RemoteEvalConfig, SocketPool, SocketPoolOptions, Transport, WorkerOptions,
 };
 use lazygp::gp::Surrogate;
 use lazygp::metrics::Trace;
@@ -66,6 +66,19 @@ fn app() -> App {
                 .opt("fail-prob", "failure injection probability", Some("0"))
                 .opt("transport", "thread | tcp (remote `lazygp worker`s)", Some("thread"))
                 .opt("listen", "tcp bind address (port 0 = ephemeral)", Some("127.0.0.1:7077"))
+                .opt("heartbeat", "tcp heartbeat interval seconds (0 = off)", Some("2"))
+                .opt(
+                    "heartbeat-deadline",
+                    "tcp link silence before reap, seconds (0 = 2x interval)",
+                    Some("0"),
+                )
+                .opt("max-frame", "tcp frame size cap in bytes", Some("16777216"))
+                .flag("checksum", "CRC32-checksum tcp frames after the handshake")
+                .opt(
+                    "worker-loss",
+                    "seconds with zero tcp workers before erroring out (0 = wait forever)",
+                    Some("60"),
+                )
                 .opt(
                     "gp-threads",
                     "leader GP hot-path worker threads (0 = auto, 1 = serial)",
@@ -76,7 +89,14 @@ fn app() -> App {
         .command(
             CommandSpec::new("worker", "evaluate trials for a tcp leader (daemon mode)")
                 .opt("connect", "leader address, e.g. 127.0.0.1:7077", None)
-                .opt("threads", "concurrent evaluation threads", Some("1")),
+                .opt("threads", "concurrent evaluation threads", Some("1"))
+                .opt(
+                    "reconnect-max",
+                    "consecutive failed connects before giving up (0 = never reconnect)",
+                    Some("8"),
+                )
+                .opt("reconnect-base-ms", "first reconnect backoff, milliseconds", Some("50"))
+                .opt("reconnect-cap-ms", "reconnect backoff cap, milliseconds", Some("2000")),
         )
         .command(CommandSpec::new("list", "list objectives and presets"))
         .command(CommandSpec::new("info", "PJRT platform and artifact buckets"))
@@ -187,7 +207,8 @@ fn cmd_run(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     Ok(())
 }
 
-/// Build the `--transport tcp` backend: bind, announce, wait for workers.
+/// Build the `--transport tcp` backend: bind (with the hardening options
+/// from the flags), announce, wait for workers.
 fn tcp_transport(
     p: &lazygp::util::cli::Parsed,
     objective: &str,
@@ -195,7 +216,14 @@ fn tcp_transport(
     seed: u64,
 ) -> lazygp::Result<Box<dyn Transport>> {
     let listen = p.str_or("listen", "127.0.0.1:7077");
-    let pool = SocketPool::listen(
+    let options = SocketPoolOptions {
+        heartbeat_interval: Duration::from_secs_f64(p.f64("heartbeat")?.max(0.0)),
+        heartbeat_deadline: Duration::from_secs_f64(p.f64("heartbeat-deadline")?.max(0.0)),
+        max_frame_bytes: p.usize("max-frame")?,
+        checksum: p.flag("checksum"),
+        worker_loss_deadline: Duration::from_secs_f64(p.f64("worker-loss")?.max(0.0)),
+    };
+    let pool = SocketPool::listen_with(
         &listen,
         RemoteEvalConfig {
             objective: objective.to_string(),
@@ -203,6 +231,7 @@ fn tcp_transport(
             fail_prob: p.f64("fail-prob")?,
             seed,
         },
+        options,
     )?;
     let addr = pool.local_addr();
     println!(
@@ -257,7 +286,7 @@ fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
             } else {
                 ParallelBo::new(bo, obj, coord)
             };
-            let best = pbo.run_until_evals(evals);
+            let best = pbo.run_until_evals(evals)?;
             println!(
                 "best {:.6} after {} evaluations in {} rounds | virtual wall {} | sync total {}",
                 best.value,
@@ -296,7 +325,7 @@ fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
             } else {
                 AsyncBo::new(bo, obj, coord)
             };
-            let best = abo.run_until_evals(evals);
+            let best = abo.run_until_evals(evals)?;
             let stats = abo.stats();
             println!(
                 "best {:.6} after {} evaluations | virtual wall {} | utilization {:.1}% | fantasies {} issued / {} rolled back | retries {} dropped {}",
@@ -327,11 +356,23 @@ fn cmd_worker(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
         .str("connect")
         .ok_or_else(|| lazygp::err!("`lazygp worker` needs --connect <host:port>"))?;
     let threads = p.usize("threads")?;
-    println!("## lazygp worker — connecting to {addr} ({threads} thread(s))");
-    let summary = run_worker(addr, threads)?;
+    let reconnect = ReconnectConfig {
+        max_attempts: p.usize("reconnect-max")? as u32,
+        base_backoff: Duration::from_millis(p.u64("reconnect-base-ms")?),
+        max_backoff: Duration::from_millis(p.u64("reconnect-cap-ms")?),
+        // decorrelate backoff jitter across a fleet of daemons
+        jitter_seed: p.u64("seed")?.wrapping_add(std::process::id() as u64),
+    };
     println!(
-        "worker {} done: {} trial(s) evaluated and reported",
-        summary.worker_id, summary.evaluated
+        "## lazygp worker — connecting to {addr} ({threads} thread(s), \
+         reconnect ≤{} attempts)",
+        reconnect.max_attempts
+    );
+    let summary = run_worker_with(addr, WorkerOptions { threads, reconnect })?;
+    println!(
+        "worker {} done: {} trial(s) evaluated and reported \
+         ({} reconnect(s), {} re-delivered)",
+        summary.worker_id, summary.evaluated, summary.reconnects, summary.redelivered
     );
     Ok(())
 }

@@ -34,6 +34,50 @@ pub struct TransportCounter {
     pub rtt_mean_s: f64,
 }
 
+/// Pool-level fault/recovery counters of a
+/// [`Transport`](crate::coordinator::Transport) backend — the hardening
+/// telemetry: how often links were rescued, reaped, rejected or rebuilt.
+/// All zero for the in-process thread backend (nothing can disconnect).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultCounters {
+    /// in-flight trials rescued (re-queued) off disconnected workers
+    pub requeued: u64,
+    /// re-handshakes by returning workers (Hello carried a `resume` id)
+    pub reconnects: u64,
+    /// links reaped because the heartbeat deadline passed in silence
+    pub heartbeats_missed: u64,
+    /// frames rejected before use: oversized length prefix, checksum
+    /// mismatch, non-UTF-8 or unparseable body, out-of-order message
+    pub frames_rejected: u64,
+    /// times the leader's listener was rebuilt after a hard accept failure
+    pub relistens: u64,
+    /// duplicate outcomes (same trial id) dropped by the delivery gate
+    pub duplicates_dropped: u64,
+}
+
+impl FaultCounters {
+    /// Any fault/recovery activity at all?
+    pub fn any(&self) -> bool {
+        *self != FaultCounters::default()
+    }
+
+    /// One human-readable counter line (rendered only when [`any`]).
+    ///
+    /// [`any`]: FaultCounters::any
+    pub fn render(&self) -> String {
+        format!(
+            "requeued {} | reconnects {} | heartbeats missed {} | frames rejected {} | \
+             relistens {} | duplicate outcomes dropped {}",
+            self.requeued,
+            self.reconnects,
+            self.heartbeats_missed,
+            self.frames_rejected,
+            self.relistens,
+            self.duplicates_dropped,
+        )
+    }
+}
+
 /// One async-coordinator event, flattened for CSV.
 #[derive(Debug, Clone)]
 pub struct AsyncTracePoint {
@@ -64,6 +108,8 @@ pub struct AsyncTrace {
     pub virtual_wall_s: f64,
     /// per-worker transport/latency counters of the backend the run used
     pub transport: Vec<TransportCounter>,
+    /// pool-level fault/recovery counters of the backend the run used
+    pub faults: FaultCounters,
 }
 
 impl AsyncTrace {
@@ -160,6 +206,9 @@ impl AsyncTrace {
                 bytes,
             ));
         }
+        if self.faults.any() {
+            line.push_str(&format!("  faults: {}", self.faults.render()));
+        }
         line
     }
 }
@@ -210,6 +259,7 @@ mod tests {
                     rtt_mean_s: 0.004,
                 },
             ],
+            faults: FaultCounters { requeued: 1, reconnects: 1, ..Default::default() },
         }
     }
 
@@ -221,7 +271,22 @@ mod tests {
         assert!(line.contains("util"));
         assert!(line.contains("6 issued"));
         assert!(line.contains("requeued 1"), "transport summary missing: {line}");
+        assert!(line.contains("reconnects 1"), "fault summary missing: {line}");
         assert_eq!(t.requeued_total(), 1);
+    }
+
+    #[test]
+    fn fault_counters_render_and_any() {
+        assert!(!FaultCounters::default().any());
+        let f = FaultCounters { heartbeats_missed: 3, frames_rejected: 2, ..Default::default() };
+        assert!(f.any());
+        let s = f.render();
+        assert!(s.contains("heartbeats missed 3"), "{s}");
+        assert!(s.contains("frames rejected 2"), "{s}");
+        // a clean run renders nothing extra in the trace summary
+        let mut t = demo();
+        t.faults = FaultCounters::default();
+        assert!(!t.render().contains("faults:"));
     }
 
     #[test]

@@ -28,7 +28,7 @@ fn parallel_matches_sequential_observation_semantics() {
         obj,
         CoordinatorConfig { workers: 4, batch_size: 5, ..Default::default() },
     );
-    pbo.run_rounds(6);
+    pbo.run_rounds(6).unwrap();
     assert_eq!(pbo.driver().history().len(), 5 + 30);
     assert_eq!(pbo.driver().surrogate().len(), 35);
     // posterior must be finite and sane everywhere sampled
@@ -68,7 +68,7 @@ fn parallel_needs_fewer_rounds_than_sequential_iterations() {
     );
     let mut par_rounds = None;
     for r in 1..=40 {
-        par.round();
+        par.round().unwrap();
         if par.driver().best().unwrap().value >= target {
             par_rounds = Some(r);
             break;
@@ -90,7 +90,7 @@ fn sync_cost_stays_negligible_vs_training() {
         obj,
         CoordinatorConfig { workers: 8, batch_size: 8, ..Default::default() },
     );
-    pbo.run_rounds(5);
+    pbo.run_rounds(5).unwrap();
     for r in pbo.rounds() {
         // simulated training is 190 s; leader sync must be ≪ 1 s
         assert!(
@@ -115,7 +115,7 @@ fn failure_storm_still_makes_progress() {
             ..Default::default()
         },
     );
-    pbo.run_rounds(5);
+    pbo.run_rounds(5).unwrap();
     let completed: usize = pbo.rounds().iter().map(|r| r.completed).sum();
     assert_eq!(completed, 20, "all trials should complete after retries");
     assert!(pbo.driver().best().unwrap().value.is_finite());
@@ -131,7 +131,7 @@ fn async_coordinator_matches_observation_semantics() {
         obj,
         AsyncCoordinatorConfig { workers: 4, ..Default::default() },
     );
-    abo.run_until_evals(30);
+    abo.run_until_evals(30).unwrap();
     assert_eq!(abo.driver().history().len(), 30);
     assert_eq!(abo.driver().surrogate().len(), 30);
     assert_eq!(abo.driver().fantasies_active(), 0);
@@ -169,7 +169,7 @@ fn async_beats_sync_virtual_wall_clock_under_heterogeneous_costs() {
             ..Default::default()
         },
     );
-    sync.run_until_evals(evals);
+    sync.run_until_evals(evals).unwrap();
     let sync_v = sync.virtual_seconds();
 
     let obj: Arc<dyn Objective> = Arc::new(ResNetCifarSim::new());
@@ -185,7 +185,7 @@ fn async_beats_sync_virtual_wall_clock_under_heterogeneous_costs() {
             ..Default::default()
         },
     );
-    asy.run_until_evals(evals);
+    asy.run_until_evals(evals).unwrap();
     let async_v = asy.virtual_seconds();
 
     assert!(sync.driver().history().len() >= evals);
@@ -208,7 +208,7 @@ fn worker_count_does_not_change_observation_totals() {
             obj,
             CoordinatorConfig { workers, batch_size: 4, ..Default::default() },
         );
-        pbo.run_rounds(3);
+        pbo.run_rounds(3).unwrap();
         assert_eq!(pbo.driver().history().len(), 5 + 12, "workers={workers}");
     }
 }

@@ -1,0 +1,574 @@
+//! Fault-injection suite for the hardened TCP transport: corrupted and
+//! mid-frame-truncated traffic, frozen (SIGSTOP-style) peers reaped by
+//! heartbeats, leader crash + restart with worker reconnect, crossed
+//! outcome/requeue races de-duplicated by the delivery gate, and a
+//! property test that trial-id delivery to the coordinator is exactly-once
+//! under adversarial interleavings.
+//!
+//! Everything runs over loopback with ephemeral ports. CI runs this file
+//! in its own `net-faults` job with `--test-threads=1` and a hard 120 s
+//! timeout so a reintroduced hang fails fast instead of stalling the
+//! workflow.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lazygp::bo::driver::{BoConfig, InitDesign};
+use lazygp::coordinator::transport::{
+    read_frame, run_worker_with, write_frame, LeaderMsg, ReconnectConfig, Transport, WorkerMsg,
+    WorkerOptions, PROTOCOL_VERSION,
+};
+use lazygp::coordinator::{
+    AsyncBo, AsyncCoordinatorConfig, RemoteEvalConfig, SocketPool, SocketPoolOptions, Trial,
+    TrialOutcome,
+};
+use lazygp::objectives::Evaluation;
+use lazygp::util::proptest as pt;
+use lazygp::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// harness helpers
+// ---------------------------------------------------------------------------
+
+/// Leader options with heartbeats off — used by tests that manage fake
+/// peers explicitly and must not race the reaper.
+fn quiet_options() -> SocketPoolOptions {
+    SocketPoolOptions {
+        heartbeat_interval: Duration::ZERO,
+        worker_loss_deadline: Duration::ZERO,
+        ..Default::default()
+    }
+}
+
+fn sphere_pool(options: SocketPoolOptions) -> SocketPool {
+    SocketPool::listen_with(
+        "127.0.0.1:0",
+        RemoteEvalConfig { objective: "sphere5".into(), sleep_scale: 0.0, fail_prob: 0.0, seed: 3 },
+        options,
+    )
+    .expect("bind loopback")
+}
+
+fn trial(id: u64) -> Trial {
+    Trial { id, round: 0, x: vec![0.1, -0.2, 0.3, 0.0, -0.1], attempt: 0 }
+}
+
+/// Wait until `cond` holds or `timeout` passes; returns the elapsed time
+/// on success.
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> Option<Duration> {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if cond() {
+            return Some(t0.elapsed());
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    None
+}
+
+/// A hand-rolled worker the tests steer into adversarial behavior: it
+/// speaks the real handshake, then reads/writes raw frames exactly when
+/// told to (or goes silent, or vanishes).
+struct FakeWorker {
+    stream: TcpStream,
+    worker_id: u64,
+}
+
+impl FakeWorker {
+    fn connect(addr: SocketAddr, capacity: usize, resume: Option<u64>) -> FakeWorker {
+        let mut stream = TcpStream::connect(addr).expect("connect fake worker");
+        write_frame(
+            &mut stream,
+            &WorkerMsg::Hello { protocol: PROTOCOL_VERSION, capacity, resume }.to_json(),
+        )
+        .expect("send hello");
+        let (welcome, _) = read_frame(&mut stream).expect("read welcome");
+        let LeaderMsg::Welcome { worker_id, .. } = LeaderMsg::from_json(&welcome).unwrap() else {
+            panic!("expected welcome");
+        };
+        FakeWorker { stream, worker_id }
+    }
+
+    /// Drop the link (simulated crash) and come back with a fresh
+    /// connection advertising the previous id.
+    fn reconnect(self, addr: SocketAddr) -> FakeWorker {
+        let resume = Some(self.worker_id);
+        drop(self.stream);
+        FakeWorker::connect(addr, 2, resume)
+    }
+
+    /// Next dispatched trial, if any arrives within `timeout`.
+    fn read_trial(&mut self, timeout: Duration) -> Option<Trial> {
+        self.stream.set_read_timeout(Some(timeout)).unwrap();
+        match read_frame(&mut self.stream) {
+            Ok((json, _)) => match LeaderMsg::from_json(&json).ok()? {
+                LeaderMsg::Dispatch(t) => Some(t),
+                _ => None,
+            },
+            Err(_) => None,
+        }
+    }
+
+    /// Report a (fabricated but well-formed) outcome for `t`. Errors are
+    /// ignored — an adversarial worker does not care whether the leader
+    /// still listens.
+    fn send_outcome(&mut self, t: &Trial) {
+        let outcome = TrialOutcome {
+            trial: t.clone(),
+            worker_id: 0,
+            result: Ok(Evaluation { value: 1.0, sim_cost_s: 1.0 }),
+            worker_seconds: 0.0,
+            sim_cost_s: 1.0,
+        };
+        let _ = write_frame(&mut self.stream, &WorkerMsg::Outcome(outcome).to_json());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// corrupted / truncated traffic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn garbage_length_prefix_is_rejected_and_link_reaped() {
+    let pool = sphere_pool(quiet_options());
+    let addr = pool.local_addr();
+    let mut fake = FakeWorker::connect(addr, 1, None);
+    pool.wait_for_capacity(1, Duration::from_secs(10)).unwrap();
+
+    // an adversarial 4 GiB length prefix: must be a counted protocol
+    // rejection (no allocation, no hang), and the link must die
+    fake.stream.write_all(&[0xff, 0xff, 0xff, 0xff]).unwrap();
+    fake.stream.flush().unwrap();
+    wait_until(Duration::from_secs(5), || pool.capacity_now() == 0)
+        .expect("corrupt link must be reaped");
+    let stats = pool.stats();
+    assert_eq!(stats.faults.frames_rejected, 1, "{stats:?}");
+    drop(fake);
+    Box::new(pool).shutdown();
+}
+
+#[test]
+fn mid_frame_disconnect_requeues_and_rescuer_completes_exactly_once() {
+    let pool = sphere_pool(quiet_options());
+    let addr = pool.local_addr();
+    let mut fake = FakeWorker::connect(addr, 1, None);
+    pool.wait_for_capacity(1, Duration::from_secs(10)).unwrap();
+
+    pool.dispatch(trial(7));
+    let t = fake.read_trial(Duration::from_secs(10)).expect("dispatch arrives");
+    assert_eq!(t.id, 7);
+    // die mid-frame: promise 64 body bytes, deliver 10, vanish
+    fake.stream.write_all(&64u32.to_be_bytes()).unwrap();
+    fake.stream.write_all(&[b'{'; 10]).unwrap();
+    fake.stream.flush().unwrap();
+    drop(fake);
+
+    wait_until(Duration::from_secs(5), || pool.stats().faults.requeued == 1)
+        .expect("mid-frame disconnect must requeue the in-flight trial");
+
+    // a healthy rescuer picks the trial up and completes it exactly once
+    let addr_s = addr.to_string();
+    let rescuer = std::thread::spawn(move || {
+        run_worker_with(
+            &addr_s,
+            WorkerOptions { threads: 1, reconnect: ReconnectConfig::disabled() },
+        )
+        .expect("rescuer run")
+    });
+    let o = pool.poll_outcome(Duration::from_secs(20)).expect("rescued trial completes");
+    assert_eq!(o.trial.id, 7);
+    assert!(o.is_ok());
+    assert!(pool.poll_outcome(Duration::from_millis(300)).is_none(), "no duplicate outcome");
+    Box::new(pool).shutdown();
+    assert_eq!(rescuer.join().unwrap().evaluated, 1);
+}
+
+// ---------------------------------------------------------------------------
+// heartbeats: frozen peers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn frozen_worker_is_reaped_within_two_heartbeat_intervals() {
+    // a SIGSTOP-style peer: completes the handshake, accepts a trial, then
+    // never sends another byte while keeping the socket open — invisible
+    // to TCP, reaped only by the application-level heartbeat deadline
+    let interval = Duration::from_millis(150);
+    let pool = sphere_pool(SocketPoolOptions {
+        heartbeat_interval: interval,
+        heartbeat_deadline: Duration::ZERO, // resolves to 2× interval
+        worker_loss_deadline: Duration::ZERO,
+        ..Default::default()
+    });
+    let addr = pool.local_addr();
+    let mut frozen = FakeWorker::connect(addr, 1, None);
+    pool.wait_for_capacity(1, Duration::from_secs(10)).unwrap();
+    let t0 = Instant::now();
+    pool.dispatch(trial(0));
+    assert_eq!(frozen.read_trial(Duration::from_secs(10)).expect("dispatch").id, 0);
+    // ... and now: total silence.
+
+    wait_until(Duration::from_secs(5), || pool.stats().faults.requeued == 1)
+        .expect("frozen worker must be reaped and its trial rescued");
+    // the mechanism bound is the deadline (2 × interval) from the reader's
+    // last activity; generous slack keeps slow CI machines honest without
+    // letting a keepalive-scale regression (minutes) through
+    assert!(
+        t0.elapsed() <= 2 * interval + Duration::from_secs(2),
+        "reap took {:?}, expected ≈ {:?}",
+        t0.elapsed(),
+        2 * interval
+    );
+    let stats = pool.stats();
+    assert!(stats.faults.heartbeats_missed >= 1, "{stats:?}");
+    assert_eq!(stats.faults.requeued, 1, "trial requeued exactly once: {stats:?}");
+    assert_eq!(pool.capacity_now(), 0);
+
+    // a healthy worker joins (pinging on the negotiated cadence) and picks
+    // the rescued trial up; the frozen socket never produces a duplicate
+    let addr_s = addr.to_string();
+    let healthy = std::thread::spawn(move || {
+        run_worker_with(
+            &addr_s,
+            WorkerOptions { threads: 1, reconnect: ReconnectConfig::disabled() },
+        )
+        .expect("healthy worker")
+    });
+    let o = pool.poll_outcome(Duration::from_secs(20)).expect("rescued trial completes");
+    assert_eq!(o.trial.id, 0);
+    assert!(pool.poll_outcome(Duration::from_millis(300)).is_none(), "no duplicate outcome");
+    drop(frozen);
+    Box::new(pool).shutdown();
+    assert_eq!(healthy.join().unwrap().evaluated, 1);
+}
+
+// ---------------------------------------------------------------------------
+// leader crash + restart, worker reconnect
+// ---------------------------------------------------------------------------
+
+#[test]
+fn leader_restart_worker_reconnects_and_completes() {
+    let pool1 = sphere_pool(quiet_options());
+    let addr = pool1.local_addr();
+    let addr_s = addr.to_string();
+    let worker = std::thread::spawn(move || {
+        run_worker_with(
+            &addr_s,
+            WorkerOptions {
+                threads: 1,
+                reconnect: ReconnectConfig {
+                    max_attempts: 40,
+                    base_backoff: Duration::from_millis(25),
+                    max_backoff: Duration::from_millis(250),
+                    jitter_seed: 7,
+                },
+            },
+        )
+        .expect("worker survives the restart")
+    });
+    pool1.wait_for_capacity(1, Duration::from_secs(10)).unwrap();
+    pool1.dispatch(trial(0));
+    let o = pool1.poll_outcome(Duration::from_secs(20)).expect("first trial completes");
+    assert_eq!(o.trial.id, 0);
+
+    // crash the leader: no Shutdown frames, sockets torn down abruptly
+    pool1.abort();
+
+    // restart on the *same* port (std's TcpListener sets SO_REUSEADDR on
+    // unix; a transient EADDRINUSE from lingering state is retried)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let pool2 = loop {
+        match SocketPool::listen_with(
+            &addr.to_string(),
+            RemoteEvalConfig {
+                objective: "sphere5".into(),
+                sleep_scale: 0.0,
+                fail_prob: 0.0,
+                seed: 3,
+            },
+            quiet_options(),
+        ) {
+            Ok(p) => break p,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "could not rebind {addr}: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    // the worker's backoff loop finds the restarted leader and re-handshakes
+    pool2.wait_for_capacity(1, Duration::from_secs(20)).unwrap();
+    assert_eq!(pool2.stats().faults.reconnects, 1, "hello must carry the resume id");
+
+    pool2.dispatch(trial(1));
+    let o = pool2.poll_outcome(Duration::from_secs(20)).expect("post-restart trial completes");
+    assert_eq!(o.trial.id, 1);
+    Box::new(pool2).shutdown(); // graceful: the worker exits cleanly
+
+    let summary = worker.join().unwrap();
+    assert_eq!(summary.evaluated, 2, "one trial per leader incarnation");
+    assert_eq!(summary.reconnects, 1);
+}
+
+// ---------------------------------------------------------------------------
+// crossed outcome/requeue races: the delivery gate
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stale_outcome_after_reconnect_is_deduped() {
+    let pool = sphere_pool(quiet_options());
+    let addr = pool.local_addr();
+    let mut fake = FakeWorker::connect(addr, 1, None);
+    pool.wait_for_capacity(1, Duration::from_secs(10)).unwrap();
+    pool.dispatch(trial(7));
+    let t = fake.read_trial(Duration::from_secs(10)).expect("dispatch");
+
+    // crash without reporting: the leader requeues trial 7
+    let resume = Some(fake.worker_id);
+    drop(fake);
+    wait_until(Duration::from_secs(5), || pool.stats().faults.requeued == 1).expect("requeue");
+
+    // a healthy worker completes the rescued trial first
+    let addr_s = addr.to_string();
+    let healthy = std::thread::spawn(move || {
+        run_worker_with(
+            &addr_s,
+            WorkerOptions { threads: 1, reconnect: ReconnectConfig::disabled() },
+        )
+        .expect("healthy worker")
+    });
+    let o = pool.poll_outcome(Duration::from_secs(20)).expect("rescued trial completes");
+    assert_eq!(o.trial.id, 7);
+
+    // now the crashed worker comes back and re-delivers its stale result:
+    // the delivery gate must drop it — the coordinator already saw id 7
+    let mut returned = FakeWorker::connect(addr, 1, resume);
+    returned.send_outcome(&t);
+    wait_until(Duration::from_secs(5), || pool.stats().faults.duplicates_dropped == 1)
+        .expect("stale outcome must be counted as a dropped duplicate");
+    assert!(pool.poll_outcome(Duration::from_millis(300)).is_none(), "no duplicate delivery");
+    let stats = pool.stats();
+    assert_eq!(stats.faults.reconnects, 1, "{stats:?}");
+
+    drop(returned);
+    Box::new(pool).shutdown();
+    healthy.join().unwrap();
+}
+
+#[test]
+fn redelivered_outcome_cancels_pending_requeue() {
+    // inverse order of the test above: the worker reconnects and
+    // re-delivers *before* (or while) the leader re-dispatches the rescued
+    // trial — either interleaving must deliver id 3 exactly once
+    let pool = sphere_pool(quiet_options());
+    let addr = pool.local_addr();
+    let mut fake = FakeWorker::connect(addr, 1, None);
+    pool.wait_for_capacity(1, Duration::from_secs(10)).unwrap();
+    pool.dispatch(trial(3));
+    let t = fake.read_trial(Duration::from_secs(10)).expect("dispatch");
+
+    let mut returned = fake.reconnect(addr); // crash + immediate return
+    wait_until(Duration::from_secs(5), || pool.stats().faults.requeued == 1).expect("requeue");
+    returned.send_outcome(&t); // buffered re-delivery
+
+    let o = pool.poll_outcome(Duration::from_secs(10)).expect("re-delivered outcome arrives");
+    assert_eq!(o.trial.id, 3);
+    // the requeued copy must not produce a second delivery, whether it was
+    // still queued (cancelled) or already re-dispatched (deduped); serve
+    // any re-dispatch the leader may have raced out
+    if let Some(redispatched) = returned.read_trial(Duration::from_millis(300)) {
+        returned.send_outcome(&redispatched);
+    }
+    assert!(pool.poll_outcome(Duration::from_millis(500)).is_none(), "exactly-once violated");
+    drop(returned);
+    Box::new(pool).shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// capacity accounting + total worker loss
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wait_for_capacity_is_not_fooled_by_instant_dropper() {
+    let pool = sphere_pool(quiet_options());
+    let addr = pool.local_addr();
+    // the wait runs concurrently with a worker that completes the
+    // handshake and instantly vanishes: the brief alive window must not
+    // satisfy the wait (the confirmation grace re-checks after admission)
+    let dropper = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(50));
+        let d = FakeWorker::connect(addr, 1, None);
+        drop(d);
+    });
+    let res = pool.wait_for_capacity(1, Duration::from_millis(600));
+    assert!(res.is_err(), "an instant-dropper must not satisfy the capacity wait");
+    dropper.join().unwrap();
+
+    // a real worker does
+    let addr_s = addr.to_string();
+    let worker = std::thread::spawn(move || {
+        run_worker_with(
+            &addr_s,
+            WorkerOptions { threads: 1, reconnect: ReconnectConfig::disabled() },
+        )
+        .expect("worker")
+    });
+    assert_eq!(pool.wait_for_capacity(1, Duration::from_secs(10)).unwrap(), 1);
+    Box::new(pool).shutdown();
+    worker.join().unwrap();
+}
+
+#[test]
+fn recv_surfaces_all_workers_lost_instead_of_wedging() {
+    let pool = sphere_pool(SocketPoolOptions {
+        heartbeat_interval: Duration::ZERO,
+        worker_loss_deadline: Duration::from_millis(300),
+        ..Default::default()
+    });
+    pool.dispatch(trial(0)); // queued work, nobody to run it
+    let t0 = Instant::now();
+    let err = pool.recv().expect_err("recv must give up, not wedge");
+    assert!(err.is_all_workers_lost(), "got: {err}");
+    assert!(err.to_string().contains("0.3s"), "{err}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "gave up after {:?}, deadline was 300ms",
+        t0.elapsed()
+    );
+    Box::new(pool).shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end: AsyncBo over a churning transport
+// ---------------------------------------------------------------------------
+
+#[test]
+fn async_bo_survives_worker_churn_exactly_once() {
+    // two honest workers + one that takes a trial and crashes mid-run: the
+    // coordinator must end with exactly the budgeted observations — the
+    // crashed trial requeued (once) and no duplicate id ever observed
+    let pool = SocketPool::listen_with(
+        "127.0.0.1:0",
+        RemoteEvalConfig { objective: "levy2".into(), sleep_scale: 1e-4, fail_prob: 0.0, seed: 9 },
+        SocketPoolOptions {
+            // heartbeats off: the silent saboteur must live long enough to
+            // grab a trial (frozen-peer reaping has its own test above)
+            heartbeat_interval: Duration::ZERO,
+            worker_loss_deadline: Duration::from_secs(30),
+            checksum: true, // exercise checksummed frames end-to-end
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = pool.local_addr();
+    let workers: Vec<_> = (0..2)
+        .map(|i| {
+            let addr_s = addr.to_string();
+            std::thread::spawn(move || {
+                run_worker_with(
+                    &addr_s,
+                    WorkerOptions {
+                        threads: 1,
+                        reconnect: ReconnectConfig { jitter_seed: i, ..Default::default() },
+                    },
+                )
+                .expect("honest worker")
+            })
+        })
+        .collect();
+    // the saboteur advertises a slot, grabs one trial, dies
+    let saboteur = std::thread::spawn(move || {
+        let mut fake = FakeWorker::connect(addr, 1, None);
+        let _ = fake.read_trial(Duration::from_secs(30));
+        // drop: the leader requeues whatever was in flight here
+    });
+    pool.wait_for_capacity(3, Duration::from_secs(10)).unwrap();
+
+    let bo = BoConfig::lazy().with_seed(23).with_init(InitDesign::Lhs(4));
+    let obj: Arc<dyn lazygp::objectives::Objective> =
+        Arc::from(lazygp::objectives::by_name("levy2").unwrap());
+    let mut abo = AsyncBo::with_transport(
+        bo,
+        obj,
+        Box::new(pool),
+        AsyncCoordinatorConfig::default(),
+    );
+    let best = abo.run_until_evals(16).expect("churn must not starve the run");
+    assert!(best.value.is_finite());
+    assert_eq!(abo.driver().history().len(), 16, "exactly the budget, despite churn");
+    assert_eq!(abo.driver().surrogate().len(), 16);
+    assert_eq!(abo.driver().fantasies_active(), 0);
+    let s = abo.stats();
+    assert_eq!(s.fantasies_issued, s.fantasy_rollbacks);
+    let stats = abo.transport_stats();
+    assert!(stats.faults.requeued >= 1, "the saboteur's trial was rescued: {stats:?}");
+    abo.finish();
+    saboteur.join().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// property: exactly-once delivery under adversarial interleavings
+// ---------------------------------------------------------------------------
+
+/// One adversarial episode: N trials against a single fake worker that,
+/// per dispatch, randomly completes, double-reports, vanishes mid-trial,
+/// or reports-then-vanishes-then-re-reports. The coordinator-facing
+/// outcome stream must contain every trial id exactly once.
+fn adversarial_episode(seed: u64) -> bool {
+    const N: usize = 5;
+    let mut rng = Pcg64::new(seed);
+    let pool = sphere_pool(quiet_options());
+    let addr = pool.local_addr();
+    for id in 0..N as u64 {
+        pool.dispatch(trial(id));
+    }
+    let mut fake = FakeWorker::connect(addr, 2, None);
+    let mut received: Vec<u64> = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while received.len() < N && Instant::now() < deadline {
+        while let Some(o) = pool.poll_outcome(Duration::from_millis(1)) {
+            received.push(o.trial.id);
+        }
+        let Some(t) = fake.read_trial(Duration::from_millis(50)) else { continue };
+        match rng.below(4) {
+            0 => fake.send_outcome(&t),
+            1 => {
+                // double-report the same id on one link
+                fake.send_outcome(&t);
+                fake.send_outcome(&t);
+            }
+            2 => {
+                // vanish mid-trial; the leader requeues, we come back
+                fake = fake.reconnect(addr);
+            }
+            _ => {
+                // report, vanish, come back, stale-re-report
+                fake.send_outcome(&t);
+                let stale = t.clone();
+                fake = fake.reconnect(addr);
+                fake.send_outcome(&stale);
+            }
+        }
+    }
+    while received.len() < N {
+        match pool.poll_outcome(Duration::from_millis(200)) {
+            Some(o) => received.push(o.trial.id),
+            None => break,
+        }
+    }
+    drop(fake);
+    Box::new(pool).shutdown();
+    let mut unique = received.clone();
+    unique.sort_unstable();
+    unique.dedup();
+    received.len() == N && unique.len() == N
+}
+
+#[test]
+fn prop_outcome_trial_ids_unique_under_adversarial_requeue_interleavings() {
+    let seeds = pt::usize_in(0, 1_000_000);
+    pt::check("outcome_ids_exactly_once", &seeds, |&seed| adversarial_episode(seed as u64));
+}

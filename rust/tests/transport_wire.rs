@@ -176,7 +176,7 @@ fn loopback_workers_evaluate_trials() {
     assert_eq!(stats.backend, "tcp");
     assert_eq!(stats.links.len(), 2);
     assert_eq!(stats.links.iter().map(|l| l.completed).sum::<u64>(), 8);
-    assert_eq!(stats.requeued, 0);
+    assert_eq!(stats.faults.requeued, 0);
     for l in &stats.links {
         assert!(l.bytes_tx > 0 && l.bytes_rx > 0, "wire bytes must be counted: {l:?}");
     }
@@ -195,8 +195,11 @@ fn worker_disconnect_mid_trial_requeues_and_completes() {
 
     // a hand-rolled worker that accepts one trial and then dies
     let mut fake = TcpStream::connect(&addr).unwrap();
-    write_frame(&mut fake, &WorkerMsg::Hello { protocol: PROTOCOL_VERSION, capacity: 1 }.to_json())
-        .unwrap();
+    write_frame(
+        &mut fake,
+        &WorkerMsg::Hello { protocol: PROTOCOL_VERSION, capacity: 1, resume: None }.to_json(),
+    )
+    .unwrap();
     let (welcome, _) = read_frame(&mut fake).unwrap();
     assert!(matches!(LeaderMsg::from_json(&welcome).unwrap(), LeaderMsg::Welcome { .. }));
     pool.wait_for_capacity(1, Duration::from_secs(10)).unwrap();
@@ -214,7 +217,7 @@ fn worker_disconnect_mid_trial_requeues_and_completes() {
     assert!(o.is_ok());
 
     let stats = pool.stats();
-    assert_eq!(stats.requeued, 1, "one in-flight trial was rescued: {stats:?}");
+    assert_eq!(stats.faults.requeued, 1, "one in-flight trial was rescued: {stats:?}");
 
     Box::new(pool).shutdown();
     let summary = rescuer.join().unwrap();
@@ -252,7 +255,7 @@ fn async_bo_runs_unchanged_over_loopback_tcp() {
             ..Default::default()
         },
     );
-    let best = abo.run_until_evals(16);
+    let best = abo.run_until_evals(16).unwrap();
     assert!(best.value.is_finite());
     assert_eq!(abo.driver().history().len(), 16);
     assert_eq!(abo.driver().surrogate().len(), 16);
