@@ -429,6 +429,15 @@ impl BoDriver {
         self.surrogate.retract_fantasies()
     }
 
+    /// Tell the surrogate how many speculative evaluations are in flight so
+    /// lag-scheduled models can pull refit boundaries forward
+    /// ([`crate::gp::lazy::LagSchedule::due_async`]). The async coordinator
+    /// calls this once per settle wave; synchronous loops never do, so their
+    /// schedule is unchanged.
+    pub fn set_async_pressure(&mut self, in_flight: usize) {
+        self.surrogate.note_async_pressure(in_flight);
+    }
+
     /// Number of fantasy observations currently shaping the posterior.
     pub fn fantasies_active(&self) -> usize {
         self.surrogate.fantasies_active()

@@ -39,7 +39,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use super::leader::SharedObjective;
-use super::messages::Trial;
+use super::messages::{StudyId, Trial};
 use super::transport::{Transport, TransportStats};
 use super::worker::{WorkerConfig, WorkerPool};
 use crate::bo::driver::{Best, BoConfig, BoDriver, PendingStrategy};
@@ -257,6 +257,7 @@ impl AsyncBo {
         }
         // leave the surrogate in its real-data state
         self.stats.fantasy_rollbacks += self.driver.retract_fantasies() as u64;
+        self.driver.set_async_pressure(0);
         match failure {
             Some(e) => Err(e),
             None => Ok(self.driver.best().cloned().expect("no observations")),
@@ -283,7 +284,15 @@ impl AsyncBo {
         self.next_trial_id += 1;
         self.submit_v.insert(id, (now_v + suggest_seconds + sync_seconds, slot));
         self.pending.push((id, x.clone()));
-        self.pool.dispatch(Trial { id, round: self.events.len() as u64, x, attempt: 0 });
+        // a service multiplexing studies re-stamps `study` at its per-study
+        // transport handle; a standalone async leader runs solo
+        self.pool.dispatch(Trial {
+            id,
+            study: StudyId::SOLO,
+            round: self.events.len() as u64,
+            x,
+            attempt: 0,
+        });
         self.stats.suggest_s += suggest_seconds;
         self.stats.sync_s += sync_seconds;
         Dispatched { suggest_seconds, sync_seconds }
@@ -305,6 +314,10 @@ impl AsyncBo {
         let sw = Stopwatch::new();
         self.stats.fantasy_rollbacks += self.driver.retract_fantasies() as u64;
         self.pending.retain(|(id, _)| *id != trial_id);
+        // async-aware lag: let the surrogate's lag schedule see how many
+        // speculative points are in flight before the real observation
+        // decides whether it crosses a refit boundary
+        self.driver.set_async_pressure(self.pending.len());
         if let Some((x, eval)) = outcome {
             self.driver.observe_external(x, eval);
             self.stats.completed += 1;
@@ -432,6 +445,7 @@ impl AsyncBo {
             virtual_wall_s: self.virtual_seconds(),
             transport: transport.links,
             faults: transport.faults,
+            studies: transport.studies,
         }
     }
 

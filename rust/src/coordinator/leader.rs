@@ -3,7 +3,7 @@
 
 use std::sync::Arc;
 
-use super::messages::{Trial, TrialOutcome};
+use super::messages::{StudyId, Trial, TrialOutcome};
 use super::transport::{Transport, TransportStats};
 use super::worker::{WorkerConfig, WorkerPool};
 use crate::bo::driver::{Best, BoConfig, BoDriver};
@@ -178,10 +178,17 @@ impl ParallelBo {
         let batch = self.driver.suggest_batch(t);
         let suggest_seconds = sw.elapsed_s();
 
-        // scatter
+        // scatter (a service multiplexing studies re-stamps `study` at its
+        // per-study transport handle; a standalone leader runs solo)
         let mut in_flight = 0usize;
         for x in batch {
-            self.pool.dispatch(Trial { id: self.next_trial_id, round: round_no, x, attempt: 0 });
+            self.pool.dispatch(Trial {
+                id: self.next_trial_id,
+                study: StudyId::SOLO,
+                round: round_no,
+                x,
+                attempt: 0,
+            });
             self.next_trial_id += 1;
             in_flight += 1;
         }

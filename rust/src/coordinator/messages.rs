@@ -17,14 +17,17 @@
 //!   collapse onto a neighboring float) are **rejected** at decode time
 //!   rather than truncated.
 //!
-//! Trial ids are globally unique and monotone (assigned by the leader,
-//! fresh ids for retries), which is what makes the TCP backend's
-//! exactly-once delivery gate possible: after a disconnect/requeue race
-//! the same id may legitimately be *evaluated* twice, but the id lets
-//! [`crate::coordinator::SocketPool`] guarantee its outcome reaches the
-//! coordinator once. The protocol-v2 control frames around these payloads
-//! (Hello/Welcome with reconnect + link policy, Ping/Pong heartbeats)
-//! live in [`crate::coordinator::transport`].
+//! Trial ids are unique and monotone *within a study* (assigned by that
+//! study's leader, fresh ids for retries); the pair `(study, id)` is what
+//! makes the TCP backend's exactly-once delivery gate possible: after a
+//! disconnect/requeue race the same pair may legitimately be *evaluated*
+//! twice, but it lets [`crate::coordinator::SocketPool`] guarantee its
+//! outcome reaches the coordinator once — per study, so two studies
+//! multiplexed over one fleet can reuse the same bare ids without
+//! colliding in the gate. The protocol-v3 control frames around these
+//! payloads (Hello/Welcome with reconnect + link policy, per-study Study
+//! registration, Ping/Pong heartbeats) live in
+//! [`crate::coordinator::transport`].
 
 use crate::config::json::Json;
 use crate::objectives::Evaluation;
@@ -49,11 +52,32 @@ fn field_f64(j: &Json, key: &str) -> crate::Result<f64> {
         .ok_or_else(|| wire_err(&format!("missing or invalid f64 field `{key}`")))
 }
 
+/// Identifies the study a trial belongs to when several studies share one
+/// worker fleet. Solo (single-study) runs use [`StudyId::SOLO`] — the
+/// wire encoding omits nothing, but *decoding* tolerates a missing field
+/// by defaulting to it, so pre-multi-study frames still parse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct StudyId(pub u64);
+
+impl StudyId {
+    /// The implicit study of a single-study run.
+    pub const SOLO: StudyId = StudyId(0);
+}
+
+impl std::fmt::Display for StudyId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
 /// A unit of work: evaluate the objective at `x`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Trial {
-    /// globally unique trial id (monotone, assigned by the leader)
+    /// trial id, unique and monotone within its study (assigned by that
+    /// study's leader)
     pub id: u64,
+    /// study this trial belongs to ([`StudyId::SOLO`] for solo runs)
+    pub study: StudyId,
     /// round the trial belongs to (one batch of t suggestions per round)
     pub round: u64,
     pub x: Vec<f64>,
@@ -108,18 +132,24 @@ impl Trial {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::Num(self.id as f64)),
+            ("study", Json::Num(self.study.0 as f64)),
             ("round", Json::Num(self.round as f64)),
             ("x", Json::Arr(self.x.iter().map(|&v| Json::Num(v)).collect())),
             ("attempt", Json::Num(f64::from(self.attempt))),
         ])
     }
 
-    /// Decode from the TCP transport. Rejects ids/rounds ≥ 2^53 and
-    /// attempts beyond `u32`.
+    /// Decode from the TCP transport. Rejects ids/rounds/studies ≥ 2^53
+    /// and attempts beyond `u32`. A missing `study` field (pre-multi-study
+    /// frame) defaults to [`StudyId::SOLO`].
     pub fn from_json(j: &Json) -> crate::Result<Trial> {
         let attempt = field_u64(j, "attempt")?;
         let attempt =
             u32::try_from(attempt).map_err(|_| wire_err("attempt exceeds u32"))?;
+        let study = match j.get("study") {
+            Some(v) => StudyId(v.as_u64().ok_or_else(|| wire_err("invalid u64 field `study`"))?),
+            None => StudyId::SOLO,
+        };
         let x = j
             .get("x")
             .and_then(Json::as_arr)
@@ -127,7 +157,7 @@ impl Trial {
             .iter()
             .map(|v| v.as_f64().ok_or_else(|| wire_err("non-numeric entry in `x`")))
             .collect::<crate::Result<Vec<f64>>>()?;
-        Ok(Trial { id: field_u64(j, "id")?, round: field_u64(j, "round")?, x, attempt })
+        Ok(Trial { id: field_u64(j, "id")?, study, round: field_u64(j, "round")?, x, attempt })
     }
 }
 
@@ -219,7 +249,7 @@ mod tests {
 
     #[test]
     fn outcome_ok_flag() {
-        let t = Trial { id: 1, round: 0, x: vec![0.0], attempt: 0 };
+        let t = Trial { id: 1, study: StudyId::SOLO, round: 0, x: vec![0.0], attempt: 0 };
         let ok = TrialOutcome {
             trial: t.clone(),
             worker_id: 0,
@@ -246,9 +276,16 @@ mod tests {
 
     #[test]
     fn trial_wire_roundtrip() {
-        let t = Trial { id: 42, round: 7, x: vec![0.5, -0.0, 1.0 / 3.0], attempt: 3 };
+        let t = Trial {
+            id: 42,
+            study: StudyId(9),
+            round: 7,
+            x: vec![0.5, -0.0, 1.0 / 3.0],
+            attempt: 3,
+        };
         let back = Trial::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.id, 42);
+        assert_eq!(back.study, StudyId(9));
         assert_eq!(back.round, 7);
         assert_eq!(back.attempt, 3);
         for (a, b) in t.x.iter().zip(&back.x) {
@@ -257,8 +294,20 @@ mod tests {
     }
 
     #[test]
+    fn missing_study_field_defaults_to_solo() {
+        // a pre-multi-study frame has no `study` key: decode to SOLO
+        let j = Json::parse(r#"{"id": 5, "round": 1, "x": [0.5], "attempt": 0}"#).unwrap();
+        let t = Trial::from_json(&j).unwrap();
+        assert_eq!(t.study, StudyId::SOLO);
+        // a present-but-invalid study is rejected, not silently defaulted
+        let raw = r#"{"id": 5, "study": -1, "round": 1, "x": [0.5], "attempt": 0}"#;
+        let j = Json::parse(raw).unwrap();
+        assert!(Trial::from_json(&j).is_err());
+    }
+
+    #[test]
     fn outcome_wire_roundtrip_ok_and_err() {
-        let t = Trial { id: 1, round: 0, x: vec![0.25], attempt: 0 };
+        let t = Trial { id: 1, study: StudyId::SOLO, round: 0, x: vec![0.25], attempt: 0 };
         let ok = TrialOutcome {
             trial: t.clone(),
             worker_id: 3,

@@ -38,6 +38,14 @@
 //!   surrogate augmented by *fantasy observations* for all in-flight
 //!   trials (constant liar / posterior mean / kriging believer), retracted
 //!   in `O(1)` via the packed factor's truncation when real results land.
+//! * [`service`] — the multi-study layer: [`service::StudyService`]
+//!   multiplexes many concurrent studies (each its own objective, seed and
+//!   [`AsyncBo`]) over **one** shared fleet, allocating trial slots with a
+//!   weighted fair-share stride scheduler and exposing lifecycle RPCs
+//!   (create/suspend/resume/query-best/stream-trace) over the same framed
+//!   protocol the workers speak. Trials are stamped with a
+//!   [`messages::StudyId`] so the transport's exactly-once gate and
+//!   per-study counters hold per `(study, trial)` pair.
 //!
 //! Both coordinators are backend-agnostic: construct with `new` for
 //! threads, or [`ParallelBo::with_transport`] /
@@ -46,12 +54,17 @@
 pub mod async_leader;
 pub mod leader;
 pub mod messages;
+pub mod service;
 pub mod transport;
 pub mod worker;
 
 pub use async_leader::{AsyncBo, AsyncCoordinatorConfig, AsyncEvent, AsyncStats};
 pub use leader::{CoordinatorConfig, ParallelBo, RoundRecord};
-pub use messages::{Trial, TrialError, TrialOutcome};
+pub use messages::{StudyId, Trial, TrialError, TrialOutcome};
+pub use service::{
+    ControlClient, ControlServer, CreateStudy, StudyResult, StudyService, StudySpec, StudyStatus,
+    TraceRow,
+};
 pub use transport::{
     ReconnectConfig, RemoteEvalConfig, SocketPool, SocketPoolOptions, Transport, TransportStats,
     WorkerOptions,

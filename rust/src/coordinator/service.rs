@@ -1,0 +1,1205 @@
+//! Multi-study service: one worker fleet, many concurrent studies.
+//!
+//! [`StudyService`] owns a single [`Transport`] fleet (thread pool or TCP
+//! socket pool) and multiplexes any number of *studies* over it. Each
+//! study is an independent BO run — its own objective, seed,
+//! [`AsyncBo`] driver and [`crate::metrics::AsyncTrace`] — stamped onto
+//! every [`Trial`] via [`StudyId`] so outcomes route back to the study
+//! that dispatched them (the per-study exactly-once gate lives in the
+//! transport layer, keyed by `(study, trial)`).
+//!
+//! Layers, bottom-up:
+//!
+//! 1. **Scheduler** — a stride (weighted fair-share) allocator over the
+//!    fleet's trial slots. Each study has `weight << priority` tickets;
+//!    the ready study with the lowest pass is admitted next and pays
+//!    `STRIDE_ONE / tickets` per admission, so long-run fleet share is
+//!    proportional to tickets. A ready study passed over because another
+//!    won the slot increments its `starved_skips` counter (surfaced in
+//!    [`crate::coordinator::TransportStats`] study rows).
+//! 2. **[`StudyHandle`]** — the per-study [`Transport`] facade handed to
+//!    that study's [`AsyncBo`]. Dispatches enqueue into the scheduler;
+//!    `poll_outcome` *cooperatively pumps* the shared fleet: whichever
+//!    study's runner thread wins the fleet lock drains outcomes, routes
+//!    them to per-study channels and admits queued trials for everyone.
+//!    No dedicated pump thread exists, so a solo study drives the fleet
+//!    exactly as [`AsyncBo`] would alone.
+//! 3. **Lifecycle** — `create_study` / `suspend` / `resume` / `wait` /
+//!    `status`, plus a JSON-framed control plane ([`serve_control`] /
+//!    [`ControlClient`]) speaking the same length-prefixed frames as the
+//!    worker protocol.
+//!
+//! Determinism: a study's trial stream depends only on its own
+//! `BoConfig` seed and its outcome arrival order. With one slot a study
+//! has at most one trial in flight, so arrival order is its dispatch
+//! order and the run is bitwise identical to the same study run solo on
+//! a one-worker fleet — regardless of what other studies share the
+//! fleet. Memory: a finished or suspended-forever study drops its
+//! `O(n²)` surrogate factor; the per-study `mem_bytes_est` counter
+//! reports the packed-factor estimate while active and the retained
+//! observation vectors after.
+//!
+//! [`serve_control`]: StudyService::serve_control
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::bo::driver::{Best, BoConfig, PendingStrategy};
+use crate::config::json::Json;
+use crate::metrics::{AsyncTrace, StudyCounter};
+use crate::objectives;
+
+use super::async_leader::{AsyncBo, AsyncCoordinatorConfig};
+use super::messages::{StudyId, Trial, TrialOutcome};
+use super::transport::{
+    read_frame_with, write_frame_with, FrameConfig, RemoteEvalConfig, Transport, TransportStats,
+};
+
+/// One stride quantum: pass accumulates `STRIDE_ONE / tickets` per
+/// admitted trial, so relative throughput equals relative tickets.
+const STRIDE_ONE: u64 = 1 << 20;
+
+/// How long a cooperative pump holds the fleet before re-checking its
+/// own channel (keeps lock hold times short under contention).
+const PUMP_SLICE: Duration = Duration::from_millis(20);
+
+/// Everything needed to launch a study on the fleet.
+#[derive(Debug, Clone)]
+pub struct StudySpec {
+    /// human-readable label (trace name, status rows)
+    pub name: String,
+    /// objective key resolved via [`crate::objectives::by_name`]
+    pub objective: String,
+    /// full BO configuration (seed, kernel, lag, init, optimizer)
+    pub bo: BoConfig,
+    /// total evaluations before the study finishes
+    pub evals: usize,
+    /// maximum concurrent trials this study may hold in the fleet;
+    /// `1` gives the bitwise solo-identical schedule
+    pub slots: usize,
+    /// fair-share tickets (relative fleet throughput), min 1
+    pub weight: u64,
+    /// priority level: each level doubles effective tickets
+    pub priority: u32,
+    /// fantasy-imputation strategy for in-flight trials
+    pub pending: PendingStrategy,
+    /// resubmissions of a failed trial before it is dropped
+    pub max_retries: u32,
+    /// per-study simulated-cost sleep scale pushed to workers
+    pub sleep_scale: f64,
+    /// per-study failure-injection probability pushed to workers
+    pub fail_prob: f64,
+}
+
+impl StudySpec {
+    pub fn new(name: impl Into<String>, objective: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            objective: objective.into(),
+            bo: BoConfig::lazy(),
+            evals: 20,
+            slots: 1,
+            weight: 1,
+            priority: 0,
+            pending: PendingStrategy::ConstantLiarMin,
+            max_retries: 2,
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+        }
+    }
+
+    pub fn with_bo(mut self, bo: BoConfig) -> Self {
+        self.bo = bo;
+        self
+    }
+
+    pub fn with_evals(mut self, evals: usize) -> Self {
+        self.evals = evals;
+        self
+    }
+
+    pub fn with_slots(mut self, slots: usize) -> Self {
+        self.slots = slots;
+        self
+    }
+
+    pub fn with_weight(mut self, weight: u64) -> Self {
+        self.weight = weight;
+        self
+    }
+
+    pub fn with_priority(mut self, priority: u32) -> Self {
+        self.priority = priority;
+        self
+    }
+}
+
+/// One settled evaluation of a study, in settle order.
+#[derive(Debug, Clone)]
+pub struct TraceRow {
+    pub trial_id: u64,
+    /// observed objective value (NaN for a failed trial)
+    pub value: f64,
+    /// best-so-far after this settle
+    pub best: f64,
+    pub ok: bool,
+}
+
+/// Final artifact of a finished study.
+#[derive(Debug, Clone)]
+pub struct StudyResult {
+    pub best: Option<Best>,
+    pub trace: AsyncTrace,
+}
+
+/// Point-in-time study summary for the control plane / CLI.
+#[derive(Debug, Clone)]
+pub struct StudyStatus {
+    pub study: StudyId,
+    pub name: String,
+    /// `"running"`, `"suspended"` or `"finished"`
+    pub state: &'static str,
+    pub best: f64,
+    pub completed: u64,
+    pub dispatched: u64,
+}
+
+/// Per-study scheduler bookkeeping.
+struct StudyState {
+    name: String,
+    slots: usize,
+    /// seed-design size, for the memory estimate
+    init: usize,
+    tx: Sender<TrialOutcome>,
+    queue: VecDeque<Trial>,
+    in_fleet: usize,
+    pass: u64,
+    stride: u64,
+    suspended: bool,
+    closed: bool,
+    starved_skips: u64,
+    dispatched: u64,
+    completed: u64,
+    /// successful observations (drives the memory estimate)
+    observed: u64,
+    best: f64,
+    rows: Vec<TraceRow>,
+    finished: Option<StudyResult>,
+}
+
+impl StudyState {
+    /// Estimated surrogate bytes: an active study holds the packed
+    /// `n(n+1)/2` Cholesky factor plus `x`/`y` storage; a finished or
+    /// closed study has dropped the factor (its `AsyncBo` was consumed)
+    /// and retains only the observation vectors.
+    fn mem_bytes_est(&self) -> u64 {
+        let n = self.init as u64 + self.observed;
+        let obs = 16 * n;
+        if self.closed || self.finished.is_some() {
+            obs
+        } else {
+            8 * n * (n + 1) / 2 + obs
+        }
+    }
+
+    fn ready(&self) -> bool {
+        !self.suspended && !self.closed && !self.queue.is_empty() && self.in_fleet < self.slots
+    }
+}
+
+/// Stride scheduler over all registered studies.
+struct Scheduler {
+    studies: BTreeMap<u64, StudyState>,
+    in_fleet_total: usize,
+}
+
+impl Scheduler {
+    fn new() -> Self {
+        Self { studies: BTreeMap::new(), in_fleet_total: 0 }
+    }
+
+    /// Admit queued trials while the fleet has free slots: repeatedly
+    /// pick the ready study with the lowest `(pass, id)` and dispatch
+    /// its queue front; every *other* ready study it beat records a
+    /// starvation skip.
+    fn admit(&mut self, fleet: &dyn Transport) {
+        while self.in_fleet_total < fleet.capacity() {
+            let mut winner: Option<u64> = None;
+            for (&id, st) in &self.studies {
+                if !st.ready() {
+                    continue;
+                }
+                match winner {
+                    None => winner = Some(id),
+                    Some(w) => {
+                        let ws = &self.studies[&w];
+                        if (st.pass, id) < (ws.pass, w) {
+                            winner = Some(id);
+                        }
+                    }
+                }
+            }
+            let Some(w) = winner else { return };
+            for (&id, st) in self.studies.iter_mut() {
+                if id != w && st.ready() {
+                    st.starved_skips += 1;
+                }
+            }
+            let st = self.studies.get_mut(&w).expect("winner exists");
+            let trial = st.queue.pop_front().expect("ready implies non-empty queue");
+            st.in_fleet += 1;
+            st.dispatched += 1;
+            st.pass += st.stride;
+            self.in_fleet_total += 1;
+            fleet.dispatch(trial);
+        }
+    }
+
+    /// Route one settled outcome to its study's channel and accounting.
+    fn route(&mut self, outcome: TrialOutcome) {
+        let Some(st) = self.studies.get_mut(&outcome.trial.study.0) else {
+            return; // study withdrawn; drop silently
+        };
+        st.in_fleet = st.in_fleet.saturating_sub(1);
+        self.in_fleet_total = self.in_fleet_total.saturating_sub(1);
+        st.completed += 1;
+        let (value, ok) = match &outcome.result {
+            Ok(ev) => (ev.value, true),
+            Err(_) => (f64::NAN, false),
+        };
+        if ok {
+            st.observed += 1;
+            if value > st.best {
+                st.best = value;
+            }
+        }
+        st.rows.push(TraceRow { trial_id: outcome.trial.id, value, best: st.best, ok });
+        // a closed study's runner may be gone; dropping the outcome is fine
+        let _ = st.tx.send(outcome);
+    }
+
+    /// Overlay service-level counters onto the fleet's per-study rows
+    /// (and add rows for studies the fleet backend did not track).
+    fn overlay(&self, stats: &mut TransportStats) {
+        for (&id, st) in &self.studies {
+            let row = match stats.studies.iter_mut().find(|r| r.study == id) {
+                Some(r) => r,
+                None => {
+                    stats.studies.push(StudyCounter { study: id, ..StudyCounter::default() });
+                    stats.studies.last_mut().expect("just pushed")
+                }
+            };
+            row.starved_skips = st.starved_skips;
+            row.mem_bytes_est = st.mem_bytes_est();
+        }
+        stats.studies.sort_by_key(|r| r.study);
+    }
+}
+
+/// Shared core: the fleet and the scheduler. Lock order is always
+/// fleet → sched; `dyn Transport` is `Send` but not `Sync`, so every
+/// fleet touch goes through the mutex (cooperative pumping keeps the
+/// critical sections short).
+struct ServiceCore {
+    fleet: Mutex<Option<Box<dyn Transport>>>,
+    sched: Mutex<Scheduler>,
+}
+
+impl ServiceCore {
+    /// Pump the fleet once while holding its lock: wait up to
+    /// `wait` (capped to a short slice) for one outcome, route it plus
+    /// anything else already settled, then admit queued trials.
+    fn pump(&self, fleet: &dyn Transport, wait: Duration) {
+        let first = fleet.poll_outcome(wait.min(PUMP_SLICE));
+        let mut sched = self.sched.lock().expect("scheduler poisoned");
+        if let Some(o) = first {
+            sched.route(o);
+            while let Some(o) = fleet.poll_outcome(Duration::ZERO) {
+                sched.route(o);
+            }
+        }
+        sched.admit(fleet);
+    }
+}
+
+/// Per-study [`Transport`] facade handed to that study's [`AsyncBo`].
+///
+/// `dispatch` re-stamps the trial with the study's id and enqueues it in
+/// the scheduler (admission order is the fair-share scheduler's call,
+/// not the caller's). `poll_outcome` first drains the study's own
+/// channel, then cooperatively pumps the shared fleet if no other
+/// runner currently holds it.
+pub struct StudyHandle {
+    core: Arc<ServiceCore>,
+    study: StudyId,
+    slots: usize,
+    rx: Receiver<TrialOutcome>,
+}
+
+impl Transport for StudyHandle {
+    fn dispatch(&self, mut trial: Trial) {
+        trial.study = self.study;
+        {
+            let fleet = self.core.fleet.lock().expect("fleet poisoned");
+            let mut sched = self.core.sched.lock().expect("scheduler poisoned");
+            if let Some(st) = sched.studies.get_mut(&self.study.0) {
+                st.queue.push_back(trial);
+            }
+            if let Some(f) = fleet.as_deref() {
+                sched.admit(f);
+            }
+        }
+    }
+
+    fn poll_outcome(&self, timeout: Duration) -> Option<TrialOutcome> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Ok(o) = self.rx.try_recv() {
+                return Some(o);
+            }
+            let now = Instant::now();
+            let left = deadline.checked_duration_since(now)?;
+            // cooperative pump: whichever runner wins the fleet lock
+            // drives I/O for every study; losers sleep on their channel.
+            match self.core.fleet.try_lock() {
+                Ok(guard) => {
+                    let fleet = guard.as_deref()?;
+                    self.core.pump(fleet, left);
+                }
+                Err(_) => {
+                    if let Ok(o) = self.rx.recv_timeout(left.min(PUMP_SLICE)) {
+                        return Some(o);
+                    }
+                }
+            }
+        }
+    }
+
+    fn recv(&self) -> crate::Result<TrialOutcome> {
+        loop {
+            if let Some(o) = self.poll_outcome(Duration::from_millis(100)) {
+                return Ok(o);
+            }
+            if self.core.fleet.lock().expect("fleet poisoned").is_none() {
+                return Err(crate::Error::msg(format!(
+                    "study {}: fleet shut down while trials were outstanding",
+                    self.study
+                )));
+            }
+        }
+    }
+
+    fn capacity(&self) -> usize {
+        self.slots
+    }
+
+    fn dispatched(&self) -> u64 {
+        let sched = self.core.sched.lock().expect("scheduler poisoned");
+        sched.studies.get(&self.study.0).map_or(0, |st| st.dispatched)
+    }
+
+    fn stats(&self) -> TransportStats {
+        let fleet = self.core.fleet.lock().expect("fleet poisoned");
+        let mut stats = fleet.as_deref().map(|f| f.stats()).unwrap_or_default();
+        drop(fleet);
+        self.core.sched.lock().expect("scheduler poisoned").overlay(&mut stats);
+        stats
+    }
+
+    /// Marks the study closed in the scheduler (drops any queued trials
+    /// and releases its surrogate-memory estimate). The shared fleet
+    /// outlives every study; [`StudyService::shutdown`] tears it down.
+    fn shutdown(self: Box<Self>) {
+        let mut sched = self.core.sched.lock().expect("scheduler poisoned");
+        if let Some(st) = sched.studies.get_mut(&self.study.0) {
+            st.closed = true;
+            st.queue.clear();
+        }
+    }
+}
+
+/// Body of a study's runner thread: drive an [`AsyncBo`] over the
+/// study's handle to completion, then publish the result.
+fn run_study(core: Arc<ServiceCore>, id: StudyId, spec: StudySpec, handle: StudyHandle) {
+    let objective: Arc<dyn objectives::Objective> = Arc::from(
+        objectives::by_name(&spec.objective).expect("objective validated at create_study"),
+    );
+    let config = AsyncCoordinatorConfig {
+        workers: spec.slots,
+        pending: spec.pending,
+        sleep_scale: 0.0, // workers own the simulated cost; leader never sleeps
+        fail_prob: 0.0,   // failure injection happens worker-side, per study
+        max_retries: spec.max_retries,
+        seed: spec.bo.seed,
+    };
+    let name = spec.name.clone();
+    let evals = spec.evals;
+    let mut bo = AsyncBo::with_transport(spec.bo, objective, Box::new(handle), config);
+    let best = bo.run_until_evals(evals).ok();
+    let trace = bo.trace(name);
+    let _ = bo.finish(); // closes the handle (study marked closed)
+    let mut sched = core.sched.lock().expect("scheduler poisoned");
+    if let Some(st) = sched.studies.get_mut(&id.0) {
+        if let Some(b) = &best {
+            if b.value > st.best {
+                st.best = b.value;
+            }
+        }
+        st.finished = Some(StudyResult { best, trace });
+    }
+}
+
+/// The multi-study coordinator: one fleet, N studies, fair-share
+/// scheduling, lifecycle control. See the module docs for the layer
+/// diagram.
+pub struct StudyService {
+    core: Arc<ServiceCore>,
+    runners: Mutex<HashMap<u64, JoinHandle<()>>>,
+    /// study ids start at 1; 0 is [`StudyId::SOLO`], reserved for
+    /// single-study transports that never register
+    next_id: AtomicU64,
+}
+
+impl StudyService {
+    /// Wrap a fleet (thread pool or connected socket pool). The fleet
+    /// must already have capacity (`wait_for_capacity` for TCP).
+    pub fn new(fleet: Box<dyn Transport>) -> Self {
+        Self {
+            core: Arc::new(ServiceCore {
+                fleet: Mutex::new(Some(fleet)),
+                sched: Mutex::new(Scheduler::new()),
+            }),
+            runners: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Launch a study: validates the spec, registers its evaluation
+    /// config with every worker, and spawns its runner thread.
+    pub fn create_study(&self, spec: StudySpec) -> crate::Result<StudyId> {
+        if objectives::by_name(&spec.objective).is_none() {
+            return Err(crate::Error::msg(format!(
+                "unknown objective `{}` for study `{}`",
+                spec.objective, spec.name
+            )));
+        }
+        if spec.slots == 0 {
+            return Err(crate::Error::msg("study slots must be >= 1"));
+        }
+        if spec.evals == 0 {
+            return Err(crate::Error::msg("study evals must be >= 1"));
+        }
+        let id = StudyId(self.next_id.fetch_add(1, Ordering::SeqCst));
+        {
+            let fleet = self.core.fleet.lock().expect("fleet poisoned");
+            let Some(f) = fleet.as_deref() else {
+                return Err(crate::Error::msg("study service is shut down"));
+            };
+            f.register_study(
+                id,
+                RemoteEvalConfig {
+                    objective: spec.objective.clone(),
+                    sleep_scale: spec.sleep_scale,
+                    fail_prob: spec.fail_prob,
+                    seed: spec.bo.seed,
+                },
+            )?;
+        }
+        let (tx, rx) = channel();
+        {
+            let mut sched = self.core.sched.lock().expect("scheduler poisoned");
+            let min_pass = sched.studies.values().map(|s| s.pass).min().unwrap_or(0);
+            let tickets = spec.weight.max(1) << spec.priority.min(32);
+            sched.studies.insert(
+                id.0,
+                StudyState {
+                    name: spec.name.clone(),
+                    slots: spec.slots,
+                    init: spec.bo.init.count(),
+                    tx,
+                    queue: VecDeque::new(),
+                    in_fleet: 0,
+                    pass: min_pass,
+                    stride: (STRIDE_ONE / tickets).max(1),
+                    suspended: false,
+                    closed: false,
+                    starved_skips: 0,
+                    dispatched: 0,
+                    completed: 0,
+                    observed: 0,
+                    best: f64::NEG_INFINITY,
+                    rows: Vec::new(),
+                    finished: None,
+                },
+            );
+        }
+        let handle = StudyHandle { core: Arc::clone(&self.core), study: id, slots: spec.slots, rx };
+        let core = Arc::clone(&self.core);
+        let thread = std::thread::Builder::new()
+            .name(format!("study-{id}"))
+            .spawn(move || run_study(core, id, spec, handle))
+            .map_err(|e| crate::Error::msg(format!("failed to spawn study runner: {e}")))?;
+        self.runners.lock().expect("runners poisoned").insert(id.0, thread);
+        Ok(id)
+    }
+
+    /// Pause admission for a study. In-fleet trials still settle; the
+    /// study holds no fleet slots once they do.
+    pub fn suspend(&self, id: StudyId) -> crate::Result<()> {
+        self.set_suspended(id, true)
+    }
+
+    /// Resume a suspended study.
+    pub fn resume(&self, id: StudyId) -> crate::Result<()> {
+        self.set_suspended(id, false)
+    }
+
+    fn set_suspended(&self, id: StudyId, suspended: bool) -> crate::Result<()> {
+        let mut sched = self.core.sched.lock().expect("scheduler poisoned");
+        match sched.studies.get_mut(&id.0) {
+            Some(st) => {
+                st.suspended = suspended;
+                Ok(())
+            }
+            None => Err(crate::Error::msg(format!("no such study: {id}"))),
+        }
+    }
+
+    /// Point-in-time summary of one study.
+    pub fn status(&self, id: StudyId) -> Option<StudyStatus> {
+        let sched = self.core.sched.lock().expect("scheduler poisoned");
+        sched.studies.get(&id.0).map(|st| StudyStatus {
+            study: id,
+            name: st.name.clone(),
+            state: if st.finished.is_some() {
+                "finished"
+            } else if st.suspended {
+                "suspended"
+            } else {
+                "running"
+            },
+            best: st.best,
+            completed: st.completed,
+            dispatched: st.dispatched,
+        })
+    }
+
+    /// Settled evaluations of a study so far (settle order), starting
+    /// at row `from` — the paging cursor for [`ControlClient::stream_trace`].
+    pub fn trace_rows(&self, id: StudyId, from: usize) -> Vec<TraceRow> {
+        let sched = self.core.sched.lock().expect("scheduler poisoned");
+        match sched.studies.get(&id.0) {
+            Some(st) => st.rows.iter().skip(from).cloned().collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Block until a study's runner finishes; returns its result.
+    pub fn wait(&self, id: StudyId) -> crate::Result<StudyResult> {
+        let thread = self.runners.lock().expect("runners poisoned").remove(&id.0);
+        if let Some(t) = thread {
+            t.join().map_err(|_| crate::Error::msg(format!("study {id} runner panicked")))?;
+        }
+        let sched = self.core.sched.lock().expect("scheduler poisoned");
+        sched
+            .studies
+            .get(&id.0)
+            .and_then(|st| st.finished.clone())
+            .ok_or_else(|| crate::Error::msg(format!("study {id} produced no result")))
+    }
+
+    /// Block until every launched study finishes.
+    pub fn wait_all(&self) -> crate::Result<Vec<(StudyId, StudyResult)>> {
+        let mut out = Vec::new();
+        loop {
+            let next = {
+                let runners = self.runners.lock().expect("runners poisoned");
+                runners.keys().min().copied()
+            };
+            let Some(id) = next else { break };
+            let result = self.wait(StudyId(id))?;
+            out.push((StudyId(id), result));
+        }
+        Ok(out)
+    }
+
+    /// Fleet counters with the service's per-study rows overlaid
+    /// (starvation skips, surrogate memory estimates).
+    pub fn stats(&self) -> TransportStats {
+        let fleet = self.core.fleet.lock().expect("fleet poisoned");
+        let mut stats = fleet.as_deref().map(|f| f.stats()).unwrap_or_default();
+        drop(fleet);
+        self.core.sched.lock().expect("scheduler poisoned").overlay(&mut stats);
+        stats
+    }
+
+    /// Join every runner, then tear the fleet down.
+    pub fn shutdown(self) -> crate::Result<()> {
+        self.wait_all()?;
+        let fleet = self.core.fleet.lock().expect("fleet poisoned").take();
+        if let Some(f) = fleet {
+            f.shutdown();
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Control plane: JSON-framed lifecycle RPCs over TCP.
+// ---------------------------------------------------------------------------
+
+/// Encode an `f64` for the control wire: JSON numbers for finite
+/// values, the string forms (`"inf"`, `"-inf"`, `"NaN"`) otherwise —
+/// same convention as [`super::messages`] uses for trial errors.
+fn json_f64(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Str(format!("{v}"))
+    }
+}
+
+/// Decode an `f64` written by [`json_f64`].
+fn parse_f64(j: &Json) -> Option<f64> {
+    match j {
+        Json::Num(v) => Some(*v),
+        Json::Str(s) => s.parse().ok(),
+        _ => None,
+    }
+}
+
+/// Parameters of a control-plane `create` request (shared between
+/// [`ControlClient::create`] and the server decoder).
+#[derive(Debug, Clone)]
+pub struct CreateStudy {
+    pub name: String,
+    pub objective: String,
+    pub seed: u64,
+    pub evals: usize,
+    pub slots: usize,
+    pub weight: u64,
+    pub priority: u32,
+}
+
+impl CreateStudy {
+    pub fn new(name: impl Into<String>, objective: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            objective: objective.into(),
+            seed: 0,
+            evals: 20,
+            slots: 1,
+            weight: 1,
+            priority: 0,
+        }
+    }
+
+    fn to_spec(&self) -> StudySpec {
+        StudySpec::new(self.name.clone(), self.objective.clone())
+            .with_bo(BoConfig::lazy().with_seed(self.seed))
+            .with_evals(self.evals)
+            .with_slots(self.slots)
+            .with_weight(self.weight)
+            .with_priority(self.priority)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("op", Json::Str("create".into())),
+            ("name", Json::Str(self.name.clone())),
+            ("objective", Json::Str(self.objective.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("evals", Json::Num(self.evals as f64)),
+            ("slots", Json::Num(self.slots as f64)),
+            ("weight", Json::Num(self.weight as f64)),
+            ("priority", Json::Num(self.priority as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Self> {
+        Some(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            objective: j.get("objective")?.as_str()?.to_string(),
+            seed: j.get("seed")?.as_u64()?,
+            evals: j.get("evals")?.as_usize()?,
+            slots: j.get("slots")?.as_usize()?,
+            weight: j.get("weight")?.as_u64()?,
+            priority: j.get("priority")?.as_u64()?.min(u32::MAX as u64) as u32,
+        })
+    }
+}
+
+/// Running control listener; stops (and joins) on [`stop`](Self::stop)
+/// or drop.
+pub struct ControlServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ControlServer {
+    /// Bound address (useful with a `:0` ephemeral bind).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Signal the accept loop to exit and join it.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ControlServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+impl StudyService {
+    /// Serve lifecycle RPCs (`create` / `suspend` / `resume` / `best` /
+    /// `trace` / `stats` / `bye`) on `addr`, one frame per request,
+    /// one connection handled at a time (the control plane is a
+    /// low-rate administrative channel, not a data path).
+    pub fn serve_control(
+        self: Arc<Self>,
+        addr: impl ToSocketAddrs,
+    ) -> crate::Result<ControlServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let service = self;
+        let thread = std::thread::Builder::new()
+            .name("study-control".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let _ = stream.set_nonblocking(false);
+                            let _ = service.serve_client(stream, &stop2);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+            })
+            .map_err(|e| crate::Error::msg(format!("failed to spawn control thread: {e}")))?;
+        Ok(ControlServer { addr: local, stop, thread: Some(thread) })
+    }
+
+    /// Handle one control connection until `bye`, EOF or stop.
+    fn serve_client(&self, stream: TcpStream, stop: &AtomicBool) -> crate::Result<()> {
+        let cfg = FrameConfig::default();
+        let mut reader = stream.try_clone()?;
+        let mut writer = stream;
+        // bounded read so a wedged client cannot pin the server past stop
+        reader.set_read_timeout(Some(Duration::from_millis(500)))?;
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            let req = match read_frame_with(&mut reader, &cfg) {
+                Ok((j, _)) => j,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue;
+                }
+                Err(_) => return Ok(()), // disconnect / bad frame: drop the client
+            };
+            let op = req.get("op").and_then(Json::as_str).unwrap_or("").to_string();
+            let reply = match op.as_str() {
+                "create" => match CreateStudy::from_json(&req) {
+                    Some(c) => match self.create_study(c.to_spec()) {
+                        Ok(id) => Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("study", Json::Num(id.0 as f64)),
+                        ]),
+                        Err(e) => err_reply(&e.to_string()),
+                    },
+                    None => err_reply("malformed create request"),
+                },
+                "suspend" | "resume" => match req.get("study").and_then(Json::as_u64) {
+                    Some(id) => {
+                        let r = if op == "suspend" {
+                            self.suspend(StudyId(id))
+                        } else {
+                            self.resume(StudyId(id))
+                        };
+                        match r {
+                            Ok(()) => Json::obj(vec![("ok", Json::Bool(true))]),
+                            Err(e) => err_reply(&e.to_string()),
+                        }
+                    }
+                    None => err_reply("missing study id"),
+                },
+                "best" => match req.get("study").and_then(Json::as_u64) {
+                    Some(id) => match self.status(StudyId(id)) {
+                        Some(s) => Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("state", Json::Str(s.state.into())),
+                            ("best", json_f64(s.best)),
+                            ("completed", Json::Num(s.completed as f64)),
+                            ("dispatched", Json::Num(s.dispatched as f64)),
+                        ]),
+                        None => err_reply("no such study"),
+                    },
+                    None => err_reply("missing study id"),
+                },
+                "trace" => match req.get("study").and_then(Json::as_u64) {
+                    Some(id) => {
+                        let rows = self.trace_rows(StudyId(id), 0);
+                        for row in &rows {
+                            let frame = Json::obj(vec![
+                                ("trial", Json::Num(row.trial_id as f64)),
+                                ("value", json_f64(row.value)),
+                                ("best", json_f64(row.best)),
+                                ("ok", Json::Bool(row.ok)),
+                            ]);
+                            write_frame_with(&mut writer, &frame, &cfg)?;
+                        }
+                        Json::obj(vec![("ok", Json::Bool(true)), ("end", Json::Bool(true))])
+                    }
+                    None => err_reply("missing study id"),
+                },
+                "stats" => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("render", Json::Str(self.stats().render_links())),
+                ]),
+                "bye" => {
+                    let bye = Json::obj(vec![("ok", Json::Bool(true))]);
+                    write_frame_with(&mut writer, &bye, &cfg)?;
+                    writer.flush()?;
+                    return Ok(());
+                }
+                other => err_reply(&format!("unknown op `{other}`")),
+            };
+            write_frame_with(&mut writer, &reply, &cfg)?;
+            writer.flush()?;
+        }
+    }
+}
+
+fn err_reply(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
+}
+
+/// Blocking client for the control plane.
+pub struct ControlClient {
+    reader: TcpStream,
+    writer: TcpStream,
+    cfg: FrameConfig,
+}
+
+impl ControlClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = stream.try_clone()?;
+        Ok(Self { reader, writer: stream, cfg: FrameConfig::default() })
+    }
+
+    fn call(&mut self, req: &Json) -> crate::Result<Json> {
+        write_frame_with(&mut self.writer, req, &self.cfg)?;
+        self.writer.flush()?;
+        let (reply, _) = read_frame_with(&mut self.reader, &self.cfg)?;
+        Ok(reply)
+    }
+
+    fn expect_ok(reply: Json) -> crate::Result<Json> {
+        if reply.get("ok").and_then(Json::as_bool) == Some(true) {
+            Ok(reply)
+        } else {
+            let msg = reply
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("control request failed")
+                .to_string();
+            Err(crate::Error::protocol(msg))
+        }
+    }
+
+    /// Create a study; returns its id.
+    pub fn create(&mut self, params: &CreateStudy) -> crate::Result<StudyId> {
+        let reply = Self::expect_ok(self.call(&params.to_json())?)?;
+        let id = reply
+            .get("study")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| crate::Error::protocol("create reply missing study id"))?;
+        Ok(StudyId(id))
+    }
+
+    pub fn suspend(&mut self, id: StudyId) -> crate::Result<()> {
+        self.simple_op("suspend", id)
+    }
+
+    pub fn resume(&mut self, id: StudyId) -> crate::Result<()> {
+        self.simple_op("resume", id)
+    }
+
+    fn simple_op(&mut self, op: &str, id: StudyId) -> crate::Result<()> {
+        let req = Json::obj(vec![("op", Json::Str(op.into())), ("study", Json::Num(id.0 as f64))]);
+        Self::expect_ok(self.call(&req)?).map(|_| ())
+    }
+
+    /// `(state, best, completed, dispatched)` for a study. `best` is
+    /// `-inf` until the study observes its first successful trial.
+    pub fn query_best(&mut self, id: StudyId) -> crate::Result<(String, f64, u64, u64)> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("best".into())),
+            ("study", Json::Num(id.0 as f64)),
+        ]);
+        let reply = Self::expect_ok(self.call(&req)?)?;
+        let state = reply
+            .get("state")
+            .and_then(Json::as_str)
+            .ok_or_else(|| crate::Error::protocol("best reply missing state"))?
+            .to_string();
+        let best = reply
+            .get("best")
+            .and_then(parse_f64)
+            .ok_or_else(|| crate::Error::protocol("best reply missing value"))?;
+        let completed = reply.get("completed").and_then(Json::as_u64).unwrap_or(0);
+        let dispatched = reply.get("dispatched").and_then(Json::as_u64).unwrap_or(0);
+        Ok((state, best, completed, dispatched))
+    }
+
+    /// Stream the study's settled rows (one frame each) until the
+    /// server's end marker.
+    pub fn stream_trace(&mut self, id: StudyId) -> crate::Result<Vec<TraceRow>> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("trace".into())),
+            ("study", Json::Num(id.0 as f64)),
+        ]);
+        write_frame_with(&mut self.writer, &req, &self.cfg)?;
+        self.writer.flush()?;
+        let mut rows = Vec::new();
+        loop {
+            let (frame, _) = read_frame_with(&mut self.reader, &self.cfg)?;
+            // row frames carry a `trial` key; anything else is the end
+            // marker or an error envelope (`ok` on a row frame is the
+            // trial's success flag, not the RPC status)
+            let Some(trial_id) = frame.get("trial").and_then(Json::as_u64) else {
+                Self::expect_ok(frame)?;
+                return Ok(rows);
+            };
+            let value = frame.get("value").and_then(parse_f64).unwrap_or(f64::NAN);
+            let best = frame.get("best").and_then(parse_f64).unwrap_or(f64::NAN);
+            let ok = frame.get("ok").and_then(Json::as_bool).unwrap_or(false);
+            rows.push(TraceRow { trial_id, value, best, ok });
+        }
+    }
+
+    /// Fleet + study counter table rendered server-side.
+    pub fn stats_render(&mut self) -> crate::Result<String> {
+        let req = Json::obj(vec![("op", Json::Str("stats".into()))]);
+        let reply = Self::expect_ok(self.call(&req)?)?;
+        Ok(reply.get("render").and_then(Json::as_str).unwrap_or("").to_string())
+    }
+
+    /// Close the connection gracefully.
+    pub fn bye(mut self) -> crate::Result<()> {
+        let req = Json::obj(vec![("op", Json::Str("bye".into()))]);
+        Self::expect_ok(self.call(&req)?).map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::worker::{WorkerConfig, WorkerPool};
+    use super::*;
+    use crate::acquisition::optim::OptimConfig;
+    use crate::bo::driver::InitDesign;
+    use crate::objectives::Objective;
+
+    fn fast_bo(seed: u64) -> BoConfig {
+        BoConfig::lazy()
+            .with_seed(seed)
+            .with_init(InitDesign::Lhs(5))
+            .with_optim(OptimConfig { candidates: 96, restarts: 3, nm_iters: 20, nm_scale: 0.08 })
+    }
+
+    fn thread_fleet(workers: usize) -> Box<dyn Transport> {
+        let base: Arc<dyn Objective> = Arc::from(objectives::by_name("sphere5").unwrap());
+        Box::new(WorkerPool::spawn(
+            base,
+            WorkerConfig { workers, queue_cap: workers * 2, ..WorkerConfig::default() },
+        ))
+    }
+
+    #[test]
+    fn fair_share_weights_and_starvation() {
+        let service = StudyService::new(thread_fleet(1));
+        // two slots each on a one-slot fleet: both studies keep a queued
+        // trial at every admission, so the loser of each pick records a
+        // starvation skip deterministically
+        let a = service
+            .create_study(
+                StudySpec::new("heavy", "sphere5")
+                    .with_bo(fast_bo(7))
+                    .with_evals(8)
+                    .with_slots(2)
+                    .with_weight(3),
+            )
+            .unwrap();
+        let b = service
+            .create_study(
+                StudySpec::new("light", "levy2")
+                    .with_bo(fast_bo(9))
+                    .with_evals(8)
+                    .with_slots(2)
+                    .with_weight(1),
+            )
+            .unwrap();
+        let results = service.wait_all().unwrap();
+        assert_eq!(results.len(), 2);
+        for (_, r) in &results {
+            assert!(r.best.is_some());
+            assert!(r.trace.points.iter().any(|p| p.best.is_finite()));
+        }
+        let stats = service.stats();
+        assert_eq!(stats.studies.len(), 2, "one counter row per registered study");
+        for id in [a, b] {
+            let row = stats.studies.iter().find(|r| r.study == id.0).expect("study row");
+            assert_eq!(row.dispatched, row.completed, "per-study exactly-once reconciliation");
+            assert_eq!(row.completed, 8, "every eval settled exactly once");
+            // finished studies have released the O(n²) factor: 16 bytes
+            // per observation (5 seed points + 8 evals) remain
+            assert_eq!(row.mem_bytes_est, 16 * (5 + 8));
+        }
+        let skips = |id: StudyId| {
+            stats.studies.iter().find(|r| r.study == id.0).map_or(0, |r| r.starved_skips)
+        };
+        assert!(skips(a) + skips(b) > 0, "contended 1-slot fleet must record skips");
+        assert!(
+            skips(b) >= skips(a),
+            "the lighter study starves at least as often (heavy {} vs light {})",
+            skips(a),
+            skips(b)
+        );
+        assert!(stats.render_links().contains("study"), "study rows render");
+        service.shutdown().unwrap();
+    }
+
+    #[test]
+    fn suspend_and_resume_gate_admission() {
+        let service = StudyService::new(thread_fleet(2));
+        let id = service
+            .create_study(StudySpec::new("pausable", "sphere5").with_bo(fast_bo(21)).with_evals(20))
+            .unwrap();
+        service.suspend(id).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        let s1 = service.status(id).unwrap();
+        assert_eq!(s1.state, "suspended");
+        assert!(
+            s1.completed < 20,
+            "suspended study must not keep completing (saw {})",
+            s1.completed
+        );
+        let frozen = s1.completed;
+        std::thread::sleep(Duration::from_millis(60));
+        let s2 = service.status(id).unwrap();
+        // at most the already-in-fleet trial may settle after suspension
+        assert!(s2.completed <= frozen + 1, "admission continued while suspended");
+        service.resume(id).unwrap();
+        let result = service.wait(id).unwrap();
+        assert!(result.best.is_some());
+        let rows = service.trace_rows(id, 0);
+        assert_eq!(rows.len(), 20);
+        assert!(rows.iter().all(|r| r.ok));
+        service.shutdown().unwrap();
+    }
+
+    /// The headline determinism guarantee: a 1-slot study sharing a
+    /// fleet with another study is bitwise identical to the same study
+    /// run solo on a 1-worker fleet with the same seed.
+    #[test]
+    fn shared_fleet_studies_match_solo_runs_bitwise() {
+        let service = StudyService::new(thread_fleet(2));
+        let a = service
+            .create_study(StudySpec::new("a", "sphere5").with_bo(fast_bo(11)).with_evals(10))
+            .unwrap();
+        let b = service
+            .create_study(StudySpec::new("b", "levy2").with_bo(fast_bo(23)).with_evals(10))
+            .unwrap();
+        let shared_a = service.wait(a).unwrap();
+        let shared_b = service.wait(b).unwrap();
+        service.shutdown().unwrap();
+
+        for (name, seed, shared) in [("sphere5", 11, &shared_a), ("levy2", 23, &shared_b)] {
+            let obj: Arc<dyn Objective> = Arc::from(objectives::by_name(name).unwrap());
+            let pool = WorkerPool::spawn(
+                Arc::clone(&obj),
+                WorkerConfig { workers: 1, queue_cap: 2, ..WorkerConfig::default() },
+            );
+            let mut solo = AsyncBo::with_transport(
+                fast_bo(seed),
+                obj,
+                Box::new(pool),
+                AsyncCoordinatorConfig {
+                    workers: 1,
+                    pending: PendingStrategy::ConstantLiarMin,
+                    sleep_scale: 0.0,
+                    fail_prob: 0.0,
+                    max_retries: 2,
+                    seed,
+                },
+            );
+            let solo_best = solo.run_until_evals(10).unwrap();
+            let solo_trace = solo.trace(name);
+            solo.finish();
+
+            let shared_best = shared.best.as_ref().expect("shared run found a best");
+            assert_eq!(shared_best.value.to_bits(), solo_best.value.to_bits());
+            assert_eq!(shared_best.x.len(), solo_best.x.len());
+            for (sx, ox) in shared_best.x.iter().zip(&solo_best.x) {
+                assert_eq!(sx.to_bits(), ox.to_bits());
+            }
+            assert_eq!(shared.trace.points.len(), solo_trace.points.len());
+            for (sp, op) in shared.trace.points.iter().zip(&solo_trace.points) {
+                assert_eq!(sp.trial_id, op.trial_id);
+                assert_eq!(sp.best.to_bits(), op.best.to_bits());
+                assert_eq!(sp.virtual_done_s.to_bits(), op.virtual_done_s.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn control_plane_round_trip() {
+        let service = Arc::new(StudyService::new(thread_fleet(2)));
+        let server = Arc::clone(&service).serve_control("127.0.0.1:0").unwrap();
+        let mut client = ControlClient::connect(server.addr()).unwrap();
+        let mut params = CreateStudy::new("remote", "sphere5");
+        params.seed = 5;
+        params.evals = 6;
+        let id = client.create(&params).unwrap();
+        let result = service.wait(id).unwrap();
+        assert!(result.best.is_some());
+        let (state, best, completed, dispatched) = client.query_best(id).unwrap();
+        assert_eq!(state, "finished");
+        assert!(best.is_finite());
+        assert_eq!(completed, 6);
+        assert_eq!(dispatched, 6);
+        let rows = client.stream_trace(id).unwrap();
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().all(|r| r.ok && r.value.is_finite()));
+        let render = client.stats_render().unwrap();
+        assert!(render.contains("study"), "stats render lists study rows: {render}");
+        assert!(client.create(&CreateStudy::new("bad", "no-such-objective")).is_err());
+        client.bye().unwrap();
+        drop(server);
+        Arc::try_unwrap(service).ok().expect("sole owner after server drop").shutdown().unwrap();
+    }
+}

@@ -48,11 +48,25 @@
 //! * **Listener loss** — the acceptor rebinds the same address with
 //!   backoff, so workers can keep (re)connecting.
 //! * **Crossed outcome/requeue races** — outcomes pass a pool-wide
-//!   delivered-id gate: the same trial id can never reach the coordinator
-//!   twice, and a late outcome cancels the pending requeue of its trial.
+//!   delivered gate keyed by `(study, trial id)`: the same pair can never
+//!   reach the coordinator twice, and a late outcome cancels the pending
+//!   requeue of its trial.
 //! * **Total worker loss** — [`SocketPool`]'s blocking receive returns a
 //!   typed [`crate::Error::AllWorkersLost`] after the configured deadline
 //!   with zero live links, instead of wedging the leader forever.
+//!
+//! ## Multi-study fleets
+//!
+//! One pool can serve several concurrent studies
+//! ([`super::service::StudyService`]): every [`Trial`] carries a
+//! [`StudyId`], the delivery gate and requeue paths key on
+//! `(study, trial id)` so studies can reuse bare ids without colliding,
+//! per-study dispatch/completion/requeue/dedupe totals are surfaced as
+//! [`TransportStats::studies`], and [`Transport::register_study`] pushes a
+//! per-study [`RemoteEvalConfig`] to every worker (replayed to late
+//! joiners right after their Welcome) so one fleet can evaluate different
+//! objectives per study. Solo runs use [`StudyId::SOLO`] throughout and
+//! behave exactly as before.
 //!
 //! ## Example: two in-process workers behind the trait
 //!
@@ -60,7 +74,7 @@
 //! use std::sync::Arc;
 //! use lazygp::coordinator::transport::Transport;
 //! use lazygp::coordinator::worker::{WorkerConfig, WorkerPool};
-//! use lazygp::coordinator::Trial;
+//! use lazygp::coordinator::{StudyId, Trial};
 //! use lazygp::objectives::{suite::Sphere, Objective};
 //!
 //! let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
@@ -68,7 +82,7 @@
 //!     Box::new(WorkerPool::spawn(obj, WorkerConfig { workers: 2, ..Default::default() }));
 //! assert_eq!(pool.capacity(), 2);
 //! for id in 0..4 {
-//!     pool.dispatch(Trial { id, round: 0, x: vec![0.5, -0.5], attempt: 0 });
+//!     pool.dispatch(Trial { id, study: StudyId::SOLO, round: 0, x: vec![0.5, -0.5], attempt: 0 });
 //! }
 //! for _ in 0..4 {
 //!     let outcome = pool.recv().expect("thread workers cannot be lost");
@@ -78,7 +92,7 @@
 //! pool.shutdown();
 //! ```
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::io;
 use std::net::{
     Shutdown as NetShutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs,
@@ -89,17 +103,19 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::messages::{Trial, TrialOutcome};
+use super::messages::{StudyId, Trial, TrialOutcome};
 use super::worker::{WorkerConfig, WorkerPool};
 use crate::config::json::Json;
-use crate::metrics::{FaultCounters, TransportCounter};
+use crate::metrics::{FaultCounters, StudyCounter, TransportCounter};
 use crate::util::rng::Pcg64;
 
 /// Wire protocol version; bumped on any frame/message change. A leader
 /// rejects workers advertising a different version. Version 2 added
 /// reconnect handshakes (`Hello.resume`), heartbeats (`Ping`/`Pong`) and
-/// the negotiated frame policy in `Welcome`.
-pub const PROTOCOL_VERSION: u64 = 2;
+/// the negotiated frame policy in `Welcome`; version 3 added the `study`
+/// field on trials and the per-study [`LeaderMsg::Study`] registration
+/// frame.
+pub const PROTOCOL_VERSION: u64 = 3;
 
 /// Default upper bound on a single frame (a trial or outcome is ~hundreds
 /// of bytes; anything near this is corruption, fail fast). Configurable
@@ -140,6 +156,16 @@ pub trait Transport: Send {
         }
     }
 
+    /// Register a study's evaluation config so one fleet can evaluate
+    /// different objectives per study: trials are routed to the study's
+    /// objective/knobs by their [`Trial::study`] field, falling back to
+    /// the pool's base config for unregistered studies (solo runs never
+    /// need to call this). Remote backends push the registration to every
+    /// connected worker and replay it to late joiners.
+    fn register_study(&self, _study: StudyId, _eval: RemoteEvalConfig) -> crate::Result<()> {
+        Ok(())
+    }
+
     /// Concurrent trial slots currently available (workers × their
     /// advertised capacity). May change over time for remote backends.
     fn capacity(&self) -> usize;
@@ -165,6 +191,10 @@ pub struct TransportStats {
     /// pool-level fault/recovery counters (requeues, reconnects,
     /// heartbeat reaps, rejected frames, relistens, deduped outcomes)
     pub faults: FaultCounters,
+    /// per-study dispatch/delivery accounting (one row per study
+    /// registered via [`Transport::register_study`]; empty for solo runs,
+    /// which never register)
+    pub studies: Vec<StudyCounter>,
 }
 
 impl TransportStats {
@@ -188,6 +218,17 @@ impl TransportStats {
         s.push_str(&format!("  requeued after disconnects: {}", self.faults.requeued));
         if self.faults.any() {
             s.push_str(&format!("\n  link faults: {}", self.faults.render()));
+        }
+        for st in &self.studies {
+            s.push_str(&format!(
+                "\n  study {:>3} | dispatched {:>5} completed {:>5} requeued {:>3} deduped {:>3} starved {:>4}",
+                st.study,
+                st.dispatched,
+                st.completed,
+                st.requeued,
+                st.duplicates_dropped,
+                st.starved_skips,
+            ));
         }
         s
     }
@@ -214,11 +255,16 @@ impl Transport for WorkerPool {
         WorkerPool::dispatched(self)
     }
 
+    fn register_study(&self, study: StudyId, eval: RemoteEvalConfig) -> crate::Result<()> {
+        self.add_study(study, &eval)
+    }
+
     fn stats(&self) -> TransportStats {
         TransportStats {
             backend: "thread",
             links: self.link_counters(),
             faults: FaultCounters::default(),
+            studies: self.study_counters(),
         }
     }
 
@@ -455,6 +501,13 @@ pub enum LeaderMsg {
         seed: u64,
         net: NetPolicy,
     },
+    /// Register (or update) a study's evaluation config on the worker:
+    /// trials whose [`Trial::study`] matches use this objective and these
+    /// knobs instead of the Welcome's base config. Sent to every live
+    /// worker on [`Transport::register_study`] and replayed to late
+    /// joiners right after their Welcome. The seed travels as a decimal
+    /// string for the same 2^53 reason as the Welcome's.
+    Study { study: u64, eval: RemoteEvalConfig },
     /// Evaluate this trial.
     Dispatch(Trial),
     /// Heartbeat reply, echoing the Ping's sequence number.
@@ -541,6 +594,14 @@ impl LeaderMsg {
                     ("checksum", Json::Bool(net.checksum)),
                 ])
             }
+            LeaderMsg::Study { study, eval } => Json::obj(vec![
+                ("type", Json::Str("study".into())),
+                ("study", Json::Num(*study as f64)),
+                ("objective", Json::Str(eval.objective.clone())),
+                ("sleep_scale", Json::Num(eval.sleep_scale)),
+                ("fail_prob", Json::Num(eval.fail_prob)),
+                ("seed", Json::Str(eval.seed.to_string())),
+            ]),
             LeaderMsg::Dispatch(t) => {
                 Json::obj(vec![("type", Json::Str("trial".into())), ("trial", t.to_json())])
             }
@@ -593,6 +654,34 @@ impl LeaderMsg {
                         .get("checksum")
                         .and_then(Json::as_bool)
                         .ok_or_else(|| crate::Error::protocol("welcome without checksum flag"))?,
+                },
+            }),
+            Some("study") => Ok(LeaderMsg::Study {
+                study: j
+                    .get("study")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| crate::Error::protocol("study frame without study id"))?,
+                eval: RemoteEvalConfig {
+                    objective: j
+                        .get("objective")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| crate::Error::protocol("study frame without objective"))?
+                        .to_string(),
+                    sleep_scale: j
+                        .get("sleep_scale")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| crate::Error::protocol("study frame without sleep_scale"))?,
+                    fail_prob: j
+                        .get("fail_prob")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| crate::Error::protocol("study frame without fail_prob"))?,
+                    seed: j
+                        .get("seed")
+                        .and_then(Json::as_str)
+                        .and_then(|s| s.parse::<u64>().ok())
+                        .ok_or_else(|| {
+                            crate::Error::protocol("study frame without parseable seed")
+                        })?,
                 },
             }),
             Some("trial") => Ok(LeaderMsg::Dispatch(Trial::from_json(
@@ -684,14 +773,23 @@ struct ConnStats {
     rtt_ns: AtomicU64,
 }
 
+/// The exactly-once gate's key: studies multiplexed over one fleet may
+/// reuse bare trial ids, so every delivery/requeue decision is keyed by
+/// the `(study, id)` pair.
+type GateKey = (u64, u64);
+
+fn gate_key(t: &Trial) -> GateKey {
+    (t.study.0, t.id)
+}
+
 /// One connected worker.
 struct Conn {
     id: usize,
     capacity: usize,
     alive: AtomicBool,
     writer: Mutex<TcpStream>,
-    /// trial id → (trial, dispatch instant); drained on disconnect
-    in_flight: Mutex<HashMap<u64, (Trial, Instant)>>,
+    /// (study, trial id) → (trial, dispatch instant); drained on disconnect
+    in_flight: Mutex<HashMap<GateKey, (Trial, Instant)>>,
     stats: ConnStats,
 }
 
@@ -749,14 +847,63 @@ struct Shared {
     cv: std::sync::Condvar,
     /// every connection ever accepted; `alive` gates dispatch
     conns: Mutex<Vec<Arc<Conn>>>,
-    /// trial ids whose outcome already reached the coordinator — the
-    /// exactly-once gate every delivery and every requeue consults, so a
-    /// disconnect racing an outcome can never both requeue *and* complete
-    /// the same trial
-    delivered: Mutex<HashSet<u64>>,
+    /// `(study, trial id)` pairs whose outcome already reached the
+    /// coordinator — the exactly-once gate every delivery and every
+    /// requeue consults, so a disconnect racing an outcome can never both
+    /// requeue *and* complete the same trial, and one study's ids can
+    /// never mask another's
+    delivered: Mutex<HashSet<GateKey>>,
+    /// per-study eval configs; pushed to live workers on registration and
+    /// replayed to every late joiner right after its Welcome. This lock
+    /// also linearizes registration against admission (both take it before
+    /// `conns`), so a new conn can never miss a concurrently registered
+    /// study
+    studies: Mutex<BTreeMap<u64, RemoteEvalConfig>>,
+    /// per-study dispatch/delivery totals (BTreeMap: deterministic order
+    /// in snapshots)
+    study_stats: Mutex<BTreeMap<u64, StudyTotals>>,
     next_conn_id: AtomicUsize,
     faults: FaultTotals,
     reader_handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Per-study accounting; see [`StudyCounter`] for field meanings
+/// (`starved_skips` lives in the service scheduler, not here).
+#[derive(Default, Clone, Copy)]
+struct StudyTotals {
+    dispatched: u64,
+    completed: u64,
+    requeued: u64,
+    duplicates_dropped: u64,
+}
+
+impl Shared {
+    /// Bump a study's counters under the `study_stats` lock. Rows exist
+    /// only for registered studies, so solo traffic ([`StudyId::SOLO`],
+    /// never registered) stays row-free and this is a no-op for it.
+    fn note_study(&self, study: StudyId, f: impl FnOnce(&mut StudyTotals)) {
+        let mut m = self.study_stats.lock().expect("study stats poisoned");
+        if let Some(t) = m.get_mut(&study.0) {
+            f(t);
+        }
+    }
+
+    fn study_snapshot(&self) -> Vec<StudyCounter> {
+        self.study_stats
+            .lock()
+            .expect("study stats poisoned")
+            .iter()
+            .map(|(&study, t)| StudyCounter {
+                study,
+                dispatched: t.dispatched,
+                completed: t.completed,
+                requeued: t.requeued,
+                duplicates_dropped: t.duplicates_dropped,
+                starved_skips: 0,
+                mem_bytes_est: 0,
+            })
+            .collect()
+    }
 }
 
 /// Leader-side TCP transport: accepts `lazygp worker` connections and
@@ -802,6 +949,8 @@ impl SocketPool {
             cv: std::sync::Condvar::new(),
             conns: Mutex::new(Vec::new()),
             delivered: Mutex::new(HashSet::new()),
+            studies: Mutex::new(BTreeMap::new()),
+            study_stats: Mutex::new(BTreeMap::new()),
             next_conn_id: AtomicUsize::new(0),
             faults: FaultTotals::default(),
             reader_handles: Mutex::new(Vec::new()),
@@ -942,6 +1091,7 @@ impl Transport for SocketPool {
     /// with a free slot (never blocks the leader).
     fn dispatch(&self, trial: Trial) {
         self.dispatched.fetch_add(1, Ordering::Relaxed);
+        self.shared.note_study(trial.study, |t| t.dispatched += 1);
         self.shared.queue.lock().expect("queue poisoned").push_back(trial);
         self.shared.cv.notify_all();
     }
@@ -986,6 +1136,42 @@ impl Transport for SocketPool {
         }
     }
 
+    /// Record the study's eval config and push it to every live worker;
+    /// late joiners get it replayed right after their Welcome. The
+    /// `studies` lock is held across the broadcast so a concurrently
+    /// admitted conn sees the study either via the replay or via this
+    /// broadcast — never neither.
+    fn register_study(&self, study: StudyId, eval: RemoteEvalConfig) -> crate::Result<()> {
+        let fc = self.shared.net.frame_config();
+        let msg = LeaderMsg::Study { study: study.0, eval: eval.clone() }.to_json();
+        // a stats row marks the study as tracked from now on
+        self.shared
+            .study_stats
+            .lock()
+            .expect("study stats poisoned")
+            .entry(study.0)
+            .or_default();
+        let mut studies = self.shared.studies.lock().expect("studies poisoned");
+        studies.insert(study.0, eval);
+        let conns = self.shared.conns.lock().expect("conns poisoned");
+        for c in conns.iter().filter(|c| c.alive.load(Ordering::SeqCst)) {
+            let written = {
+                let mut w = c.writer.lock().expect("writer poisoned");
+                write_frame_with(&mut *w, &msg, &fc)
+            };
+            match written {
+                Ok(n) => {
+                    c.stats.bytes_tx.fetch_add(n, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    // the link is dying; its reader will reap it and the
+                    // worker re-learns the registry on reconnect
+                }
+            }
+        }
+        Ok(())
+    }
+
     fn capacity(&self) -> usize {
         self.capacity_now()
     }
@@ -1003,7 +1189,12 @@ impl Transport for SocketPool {
             .iter()
             .map(|c| c.counter())
             .collect();
-        TransportStats { backend: "tcp", links, faults: self.shared.faults.snapshot() }
+        TransportStats {
+            backend: "tcp",
+            links,
+            faults: self.shared.faults.snapshot(),
+            studies: self.shared.study_snapshot(),
+        }
     }
 
     fn shutdown(mut self: Box<Self>) {
@@ -1131,7 +1322,24 @@ fn admit_worker(
     });
     conn.stats.bytes_rx.store(hello_bytes, Ordering::Relaxed);
     conn.stats.bytes_tx.store(welcome_bytes, Ordering::Relaxed);
-    shared.conns.lock().expect("conns poisoned").push(Arc::clone(&conn));
+    // Replay the study registry before the conn becomes dispatchable, and
+    // publish the conn while still holding the `studies` lock: a concurrent
+    // `register_study` (which takes the same lock before broadcasting) then
+    // either sees this conn in `conns` and pushes the new study to it, or
+    // runs first and the study is replayed here — never neither.
+    {
+        let studies = shared.studies.lock().expect("studies poisoned");
+        let fc = shared.net.frame_config();
+        for (&study, eval) in studies.iter() {
+            let msg = LeaderMsg::Study { study, eval: eval.clone() }.to_json();
+            let n = {
+                let mut w = conn.writer.lock().expect("writer poisoned");
+                write_frame_with(&mut *w, &msg, &fc)?
+            };
+            conn.stats.bytes_tx.fetch_add(n, Ordering::Relaxed);
+        }
+        shared.conns.lock().expect("conns poisoned").push(Arc::clone(&conn));
+    }
     let handle = {
         let shared = Arc::clone(shared);
         let res_tx = res_tx.clone();
@@ -1201,30 +1409,32 @@ fn reader_loop(
     disconnect(conn, shared);
 }
 
-/// The exactly-once delivery gate. Claims the trial id in the pool-wide
-/// `delivered` set; a duplicate (a re-delivered result crossing a requeue,
-/// or a second evaluation of a rescued trial) is dropped. A *fresh*
-/// outcome additionally cancels any pending requeue of its trial — queued,
-/// or already re-dispatched onto another link — so the coordinator
-/// observes each trial id at most once, ever. Returns `false` when the
-/// coordinator hung up.
+/// The exactly-once delivery gate. Claims the `(study, trial id)` pair in
+/// the pool-wide `delivered` set; a duplicate (a re-delivered result
+/// crossing a requeue, or a second evaluation of a rescued trial) is
+/// dropped. A *fresh* outcome additionally cancels any pending requeue of
+/// its trial — queued, or already re-dispatched onto another link — so the
+/// coordinator observes each (study, id) pair at most once, ever. Returns
+/// `false` when the coordinator hung up.
 fn deliver_outcome(
     conn: &Arc<Conn>,
     shared: &Arc<Shared>,
     res_tx: &Sender<TrialOutcome>,
     mut outcome: TrialOutcome,
 ) -> bool {
-    let id = outcome.trial.id;
-    let fresh = shared.delivered.lock().expect("delivered poisoned").insert(id);
+    let key = gate_key(&outcome.trial);
+    let fresh = shared.delivered.lock().expect("delivered poisoned").insert(key);
     if !fresh {
         shared.faults.duplicates_dropped.fetch_add(1, Ordering::Relaxed);
+        shared.note_study(outcome.trial.study, |t| t.duplicates_dropped += 1);
         // still clear any local in-flight entry so the slot frees up
-        conn.in_flight.lock().expect("in_flight poisoned").remove(&id);
+        conn.in_flight.lock().expect("in_flight poisoned").remove(&key);
         shared.cv.notify_all();
         return true;
     }
-    let entry = conn.in_flight.lock().expect("in_flight poisoned").remove(&id);
+    let entry = conn.in_flight.lock().expect("in_flight poisoned").remove(&key);
     conn.stats.completed.fetch_add(1, Ordering::Relaxed);
+    shared.note_study(outcome.trial.study, |t| t.completed += 1);
     if let Some((_, dispatched_at)) = entry {
         conn.stats
             .rtt_ns
@@ -1233,10 +1443,10 @@ fn deliver_outcome(
     // cancel a pending requeue of the same trial: it may sit in the queue
     // (rescued from this worker's previous link) or in another connection's
     // in-flight set (already re-dispatched)
-    shared.queue.lock().expect("queue poisoned").retain(|t| t.id != id);
+    shared.queue.lock().expect("queue poisoned").retain(|t| gate_key(t) != key);
     for other in shared.conns.lock().expect("conns poisoned").iter() {
         if other.id != conn.id {
-            other.in_flight.lock().expect("in_flight poisoned").remove(&id);
+            other.in_flight.lock().expect("in_flight poisoned").remove(&key);
         }
     }
     // remap to the connection id so leader-side telemetry is per-link,
@@ -1273,11 +1483,14 @@ fn disconnect(conn: &Conn, shared: &Shared) {
     if !orphans.is_empty() && !shared.stop.load(Ordering::SeqCst) {
         let orphans: Vec<Trial> = {
             let delivered = shared.delivered.lock().expect("delivered poisoned");
-            orphans.into_iter().filter(|t| !delivered.contains(&t.id)).collect()
+            orphans.into_iter().filter(|t| !delivered.contains(&gate_key(t))).collect()
         };
         if !orphans.is_empty() {
             conn.stats.requeued.fetch_add(orphans.len() as u64, Ordering::Relaxed);
             shared.faults.requeued.fetch_add(orphans.len() as u64, Ordering::Relaxed);
+            for t in &orphans {
+                shared.note_study(t.study, |s| s.requeued += 1);
+            }
             let mut q = shared.queue.lock().expect("queue poisoned");
             for t in orphans {
                 q.push_front(t);
@@ -1332,7 +1545,8 @@ fn pick_target(shared: &Shared) -> Option<Arc<Conn>> {
 /// outcome already passed the delivery gate (a stale queue entry that lost
 /// a requeue/redeliver race) is silently discarded instead of re-run.
 fn send_trial(shared: &Shared, conn: &Arc<Conn>, trial: Trial) {
-    if shared.delivered.lock().expect("delivered poisoned").contains(&trial.id) {
+    let key = gate_key(&trial);
+    if shared.delivered.lock().expect("delivered poisoned").contains(&key) {
         shared.cv.notify_all();
         return;
     }
@@ -1347,7 +1561,7 @@ fn send_trial(shared: &Shared, conn: &Arc<Conn>, trial: Trial) {
             shared.cv.notify_all();
             return;
         }
-        in_flight.insert(trial.id, (trial.clone(), Instant::now()));
+        in_flight.insert(key, (trial.clone(), Instant::now()));
     }
     conn.stats.dispatched.fetch_add(1, Ordering::Relaxed);
     let msg = LeaderMsg::Dispatch(trial.clone()).to_json();
@@ -1367,12 +1581,13 @@ fn send_trial(shared: &Shared, conn: &Arc<Conn>, trial: Trial) {
             // consulted again in case an outcome crossed mid-write
             conn.alive.store(false, Ordering::SeqCst);
             let removed =
-                conn.in_flight.lock().expect("in_flight poisoned").remove(&trial.id);
+                conn.in_flight.lock().expect("in_flight poisoned").remove(&key);
             let already_delivered =
-                shared.delivered.lock().expect("delivered poisoned").contains(&trial.id);
+                shared.delivered.lock().expect("delivered poisoned").contains(&key);
             if removed.is_some() && !already_delivered && !shared.stop.load(Ordering::SeqCst) {
                 conn.stats.requeued.fetch_add(1, Ordering::Relaxed);
                 shared.faults.requeued.fetch_add(1, Ordering::Relaxed);
+                shared.note_study(trial.study, |s| s.requeued += 1);
                 shared.queue.lock().expect("queue poisoned").push_front(trial);
                 shared.cv.notify_all();
             }
@@ -1662,6 +1877,7 @@ fn worker_session(
     // socket reader feeds the pump through a channel
     enum Inbound {
         Trial(Trial),
+        Study(StudyId, RemoteEvalConfig),
         Pong,
         Shutdown,
         Lost,
@@ -1672,6 +1888,11 @@ fn worker_session(
             Ok((json, _)) => match LeaderMsg::from_json(&json) {
                 Ok(LeaderMsg::Dispatch(t)) => {
                     if in_tx.send(Inbound::Trial(t)).is_err() {
+                        return;
+                    }
+                }
+                Ok(LeaderMsg::Study { study, eval }) => {
+                    if in_tx.send(Inbound::Study(StudyId(study), eval)).is_err() {
                         return;
                     }
                 }
@@ -1704,6 +1925,7 @@ fn worker_session(
     // pool evaluating — finished results are buffered for re-delivery.
     let mut seq: u64 = 0;
     let mut last_tx = Instant::now();
+    let mut fatal: Option<crate::Error> = None;
     let end;
     'pump: loop {
         loop {
@@ -1712,6 +1934,16 @@ fn worker_session(
                     // the leader never over-fills a slot, so this submit
                     // cannot block longer than the queue bound
                     pool.submit(t);
+                }
+                Ok(Inbound::Study(study, eval)) => {
+                    // an unknown objective is an incompatibility retrying
+                    // cannot fix: surface it as a protocol error so the
+                    // daemon exits instead of reconnect-looping
+                    if let Err(e) = pool.add_study(study, &eval) {
+                        fatal = Some(e);
+                        end = SessionEnd::Lost;
+                        break 'pump;
+                    }
                 }
                 Ok(Inbound::Pong) => {}
                 Ok(Inbound::Shutdown) => {
@@ -1756,7 +1988,10 @@ fn worker_session(
     // closing both directions also unblocks the session reader (same fd)
     let _ = writer.shutdown(NetShutdown::Both);
     let _ = reader_handle.join();
-    Ok(end)
+    match fatal {
+        Some(e) => Err(e),
+        None => Ok(end),
+    }
 }
 
 #[cfg(test)]
@@ -1768,6 +2003,7 @@ mod tests {
     fn frames_roundtrip_over_a_buffer() {
         let msg = LeaderMsg::Dispatch(Trial {
             id: 9,
+            study: StudyId::SOLO,
             round: 2,
             x: vec![-0.0, 1.0 / 3.0, 5e-324],
             attempt: 1,
@@ -1811,8 +2047,14 @@ mod tests {
     #[test]
     fn checksummed_frames_roundtrip_and_reject_corruption() {
         let cfg = FrameConfig { checksum: true, ..Default::default() };
-        let msg = LeaderMsg::Dispatch(Trial { id: 3, round: 0, x: vec![0.25], attempt: 0 })
-            .to_json();
+        let msg = LeaderMsg::Dispatch(Trial {
+            id: 3,
+            study: StudyId::SOLO,
+            round: 0,
+            x: vec![0.25],
+            attempt: 0,
+        })
+        .to_json();
         let mut buf = Vec::new();
         let wrote = write_frame_with(&mut buf, &msg, &cfg).unwrap();
         assert_eq!(wrote as usize, buf.len());
@@ -1927,7 +2169,7 @@ mod tests {
         assert!(matches!(shutdown, LeaderMsg::Shutdown));
 
         let outcome = WorkerMsg::Outcome(TrialOutcome {
-            trial: Trial { id: 1, round: 0, x: vec![0.5], attempt: 0 },
+            trial: Trial { id: 1, study: StudyId::SOLO, round: 0, x: vec![0.5], attempt: 0 },
             worker_id: 0,
             result: Err(TrialError::SimulatedCrash),
             worker_seconds: 0.001,
@@ -1940,6 +2182,27 @@ mod tests {
         };
         assert!(!o.is_ok());
         assert_eq!(o.sim_cost_s, 3.5);
+
+        // the v3 study-registration frame, seed at the full u64 range
+        let reg = LeaderMsg::Study {
+            study: 7,
+            eval: RemoteEvalConfig {
+                objective: "levy2".into(),
+                sleep_scale: 1e-6,
+                fail_prob: 0.125,
+                seed: u64::MAX,
+            },
+        };
+        let LeaderMsg::Study { study, eval } =
+            LeaderMsg::from_json(&Json::parse(&reg.to_json().to_string()).unwrap()).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        assert_eq!(study, 7);
+        assert_eq!(eval.objective, "levy2");
+        assert_eq!(eval.sleep_scale, 1e-6);
+        assert_eq!(eval.fail_prob, 0.125);
+        assert_eq!(eval.seed, u64::MAX);
     }
 
     #[test]
@@ -2017,14 +2280,30 @@ mod tests {
                 rtt_mean_s: 0.001,
             }],
             faults: FaultCounters { requeued: 1, heartbeats_missed: 2, ..Default::default() },
+            studies: vec![StudyCounter {
+                study: 4,
+                dispatched: 9,
+                completed: 8,
+                requeued: 1,
+                duplicates_dropped: 0,
+                starved_skips: 3,
+                mem_bytes_est: 0,
+            }],
         };
         let s = stats.render_links();
         assert!(s.contains("link   0"), "{s}");
         assert!(s.contains("requeued   1"), "{s}");
         assert!(s.contains("requeued after disconnects: 1"), "{s}");
         assert!(s.contains("heartbeats missed 2"), "{s}");
+        assert!(s.contains("study   4"), "{s}");
+        assert!(s.contains("starved    3"), "{s}");
         // a fault-free pool renders no fault line
-        let clean = TransportStats { backend: "tcp", links: vec![], faults: Default::default() };
+        let clean = TransportStats {
+            backend: "tcp",
+            links: vec![],
+            faults: Default::default(),
+            studies: vec![],
+        };
         assert!(!clean.render_links().contains("link faults"));
     }
 

@@ -7,15 +7,16 @@
 //! pool teardown — and `lazygp worker` daemons — exit promptly instead of
 //! sleeping out the remaining simulated seconds.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::messages::{Trial, TrialError, TrialOutcome};
-use crate::metrics::TransportCounter;
+use super::messages::{StudyId, Trial, TrialError, TrialOutcome};
+use super::transport::RemoteEvalConfig;
+use crate::metrics::{StudyCounter, TransportCounter};
 use crate::objectives::Objective;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -95,6 +96,44 @@ struct LinkCounters {
     rtt_ns: AtomicU64,
 }
 
+/// How one study's trials are evaluated: its objective plus the simulation
+/// knobs that override the pool's base [`WorkerConfig`].
+#[derive(Clone)]
+struct StudyEval {
+    objective: Arc<dyn Objective>,
+    sleep_scale: f64,
+    fail_prob: f64,
+}
+
+/// Per-study dispatch/completion tally (rows exist only for studies
+/// registered via [`WorkerPool::add_study`] — solo runs stay tally-free).
+#[derive(Default, Clone, Copy)]
+struct StudyTally {
+    dispatched: u64,
+    completed: u64,
+}
+
+/// The base eval config plus per-study overrides, shared with every worker
+/// thread so routing happens at evaluation time.
+struct StudyTable {
+    base: StudyEval,
+    table: Mutex<BTreeMap<u64, StudyEval>>,
+}
+
+impl StudyTable {
+    /// The eval config a trial of `study` runs under: its registered
+    /// override, or the pool's base config for unregistered studies
+    /// (including every solo run).
+    fn resolve(&self, study: StudyId) -> StudyEval {
+        self.table
+            .lock()
+            .expect("study table poisoned")
+            .get(&study.0)
+            .cloned()
+            .unwrap_or_else(|| self.base.clone())
+    }
+}
+
 /// A pool of worker threads sharing a trial queue.
 pub struct WorkerPool {
     tx: Option<SyncSender<Trial>>,
@@ -104,8 +143,12 @@ pub struct WorkerPool {
     workers: usize,
     shutdown: ShutdownToken,
     links: Vec<LinkCounters>,
-    /// real submit time per in-flight trial id, for round-trip latency
-    submit_times: Mutex<HashMap<u64, Instant>>,
+    studies: Arc<StudyTable>,
+    /// per-registered-study dispatch/completion totals
+    study_tallies: Mutex<BTreeMap<u64, StudyTally>>,
+    /// real submit time per in-flight `(study, trial id)`, for round-trip
+    /// latency (studies may reuse bare ids)
+    submit_times: Mutex<HashMap<(u64, u64), Instant>>,
 }
 
 impl WorkerPool {
@@ -117,17 +160,25 @@ impl WorkerPool {
         let rx = Arc::new(Mutex::new(rx));
         let (res_tx, res_rx) = std::sync::mpsc::channel::<TrialOutcome>();
         let shutdown = ShutdownToken::new();
+        let studies = Arc::new(StudyTable {
+            base: StudyEval {
+                objective: Arc::clone(&objective),
+                sleep_scale: config.sleep_scale,
+                fail_prob: config.fail_prob,
+            },
+            table: Mutex::new(BTreeMap::new()),
+        });
         let mut handles = Vec::with_capacity(config.workers);
         for wid in 0..config.workers {
             let rx = Arc::clone(&rx);
             let res_tx: Sender<TrialOutcome> = res_tx.clone();
-            let obj = Arc::clone(&objective);
+            let table = Arc::clone(&studies);
             let cfg = config.clone();
             let token = shutdown.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("lazygp-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, obj, rx, res_tx, cfg, token))
+                    .spawn(move || worker_loop(wid, table, rx, res_tx, cfg, token))
                     .expect("spawn worker"),
             );
         }
@@ -142,17 +193,72 @@ impl WorkerPool {
             workers: config.workers,
             shutdown,
             links,
+            studies,
+            study_tallies: Mutex::new(BTreeMap::new()),
             submit_times: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Register (or update) a study's eval config: trials whose
+    /// [`Trial::study`] matches are evaluated against this objective and
+    /// these knobs instead of the pool's base config. An unknown objective
+    /// name is a protocol error (retrying cannot resolve it).
+    pub fn add_study(&self, study: StudyId, eval: &RemoteEvalConfig) -> crate::Result<()> {
+        let obj = crate::objectives::by_name(&eval.objective).ok_or_else(|| {
+            crate::Error::protocol(format!(
+                "study {study} requests unknown objective `{}`",
+                eval.objective
+            ))
+        })?;
+        self.studies.table.lock().expect("study table poisoned").insert(
+            study.0,
+            StudyEval {
+                objective: Arc::from(obj),
+                sleep_scale: eval.sleep_scale,
+                fail_prob: eval.fail_prob,
+            },
+        );
+        // a tally row marks the study as tracked from now on
+        self.study_tallies
+            .lock()
+            .expect("study tallies poisoned")
+            .entry(study.0)
+            .or_default();
+        Ok(())
+    }
+
+    /// Per-registered-study dispatch/completion totals (empty when
+    /// [`add_study`](WorkerPool::add_study) was never called — solo runs
+    /// carry no per-study rows).
+    pub fn study_counters(&self) -> Vec<StudyCounter> {
+        self.study_tallies
+            .lock()
+            .expect("study tallies poisoned")
+            .iter()
+            .map(|(&study, t)| StudyCounter {
+                study,
+                dispatched: t.dispatched,
+                completed: t.completed,
+                requeued: 0,
+                duplicates_dropped: 0,
+                starved_skips: 0,
+                mem_bytes_est: 0,
+            })
+            .collect()
     }
 
     /// Enqueue a trial (blocks when the queue is full — backpressure).
     pub fn submit(&self, trial: Trial) {
         self.dispatched.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) =
+            self.study_tallies.lock().expect("study tallies poisoned").get_mut(&trial.study.0)
+        {
+            t.dispatched += 1;
+        }
         self.submit_times
             .lock()
             .expect("submit_times poisoned")
-            .insert(trial.id, Instant::now());
+            .insert((trial.study.0, trial.id), Instant::now());
         self.tx
             .as_ref()
             .expect("pool already shut down")
@@ -176,7 +282,16 @@ impl WorkerPool {
 
     /// Attribute a completed outcome to its worker's counters.
     fn note_outcome(&self, o: &TrialOutcome) {
-        let started = self.submit_times.lock().expect("submit_times poisoned").remove(&o.trial.id);
+        let started = self
+            .submit_times
+            .lock()
+            .expect("submit_times poisoned")
+            .remove(&(o.trial.study.0, o.trial.id));
+        if let Some(t) =
+            self.study_tallies.lock().expect("study tallies poisoned").get_mut(&o.trial.study.0)
+        {
+            t.completed += 1;
+        }
         if let Some(link) = self.links.get(o.worker_id) {
             link.completed.fetch_add(1, Ordering::Relaxed);
             if let Some(t0) = started {
@@ -266,7 +381,7 @@ impl Drop for WorkerPool {
 
 fn worker_loop(
     wid: usize,
-    objective: Arc<dyn Objective>,
+    studies: Arc<StudyTable>,
     rx: Arc<Mutex<Receiver<Trial>>>,
     res_tx: Sender<TrialOutcome>,
     cfg: WorkerConfig,
@@ -285,7 +400,14 @@ fn worker_loop(
         // a trial handed over by the queue is never silently dropped
         // between `recv` and the shutdown check. `shutdown_drain` relies
         // on this to account for every accepted trial exactly once.
-        let outcome = evaluate_trial(wid, objective.as_ref(), &mut rng, trial, &cfg, &token);
+        let eval = studies.resolve(trial.study);
+        let trial_cfg = WorkerConfig {
+            sleep_scale: eval.sleep_scale,
+            fail_prob: eval.fail_prob,
+            ..cfg.clone()
+        };
+        let outcome =
+            evaluate_trial(wid, eval.objective.as_ref(), &mut rng, trial, &trial_cfg, &token);
         if res_tx.send(outcome).is_err() {
             return; // leader gone
         }
@@ -339,7 +461,7 @@ mod tests {
     }
 
     fn trial(id: u64) -> Trial {
-        Trial { id, round: 0, x: vec![0.5, -0.5], attempt: 0 }
+        Trial { id, study: StudyId::SOLO, round: 0, x: vec![0.5, -0.5], attempt: 0 }
     }
 
     #[test]
@@ -374,7 +496,13 @@ mod tests {
             WorkerConfig { workers: 4, sleep_scale: 2e-4, seed: 11, ..Default::default() },
         );
         for i in 0..32 {
-            p.submit(Trial { id: i, round: 0, x: vec![0.7, 0.7, 0.02, 3e-4, 0.7], attempt: 0 });
+            p.submit(Trial {
+                id: i,
+                study: StudyId::SOLO,
+                round: 0,
+                x: vec![0.7, 0.7, 0.02, 3e-4, 0.7],
+                attempt: 0,
+            });
         }
         let mut seen = std::collections::BTreeSet::new();
         for _ in 0..32 {
@@ -416,7 +544,13 @@ mod tests {
             obj,
             WorkerConfig { workers: 1, sleep_scale: 1e-4, seed: 3, ..Default::default() },
         );
-        p.submit(Trial { id: 0, round: 0, x: vec![0.7, 0.7, 0.02, 3e-4, 0.7], attempt: 0 });
+        p.submit(Trial {
+            id: 0,
+            study: StudyId::SOLO,
+            round: 0,
+            x: vec![0.7, 0.7, 0.02, 3e-4, 0.7],
+            attempt: 0,
+        });
         let o = p.recv_timeout(Duration::from_secs(5)).expect("timed out");
         // ~8 s simulated * 1e-4 ⇒ ≈ 0.8 ms of real sleep
         assert!(o.worker_seconds >= 0.0003, "worker_seconds={}", o.worker_seconds);
@@ -445,7 +579,13 @@ mod tests {
             obj,
             WorkerConfig { workers: 1, sleep_scale: 1.0, seed: 5, ..Default::default() },
         );
-        p.submit(Trial { id: 0, round: 0, x: vec![0.05, 5e-4, 0.9], attempt: 0 });
+        p.submit(Trial {
+            id: 0,
+            study: StudyId::SOLO,
+            round: 0,
+            x: vec![0.05, 5e-4, 0.9],
+            attempt: 0,
+        });
         // let the worker pick the trial up and enter its sleep
         std::thread::sleep(Duration::from_millis(100));
         let sw = crate::util::timer::Stopwatch::new();
@@ -470,8 +610,20 @@ mod tests {
             obj,
             WorkerConfig { workers: 1, sleep_scale: 1.0, seed: 21, ..Default::default() },
         );
-        p.submit(Trial { id: 0, round: 0, x: vec![0.05, 5e-4, 0.9], attempt: 0 });
-        p.submit(Trial { id: 1, round: 0, x: vec![0.05, 5e-4, 0.9], attempt: 0 });
+        p.submit(Trial {
+            id: 0,
+            study: StudyId::SOLO,
+            round: 0,
+            x: vec![0.05, 5e-4, 0.9],
+            attempt: 0,
+        });
+        p.submit(Trial {
+            id: 1,
+            study: StudyId::SOLO,
+            round: 0,
+            x: vec![0.05, 5e-4, 0.9],
+            attempt: 0,
+        });
         std::thread::sleep(Duration::from_millis(150)); // A is now sleeping
         let sw = crate::util::timer::Stopwatch::new();
         let mut ids: Vec<u64> =
@@ -502,6 +654,44 @@ mod tests {
         // once triggered, sleeps return immediately
         assert!(!t.sleep(Duration::from_secs(10)));
         assert!(t.is_triggered());
+    }
+
+    #[test]
+    fn study_routing_resolves_objective_and_tallies() {
+        use crate::objectives::levy::Levy;
+        let p = pool(2, 0.0);
+        let eval = RemoteEvalConfig {
+            objective: "levy2".into(),
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+            seed: 0,
+        };
+        p.add_study(StudyId(5), &eval).unwrap();
+        // unknown objectives are protocol errors, not silent fallbacks
+        let bad = RemoteEvalConfig { objective: "no-such-objective".into(), ..eval };
+        assert!(p.add_study(StudyId(6), &bad).is_err());
+
+        // base (solo) trials still run the pool's own objective
+        p.submit(trial(0));
+        let o = p.recv();
+        let v = o.result.unwrap().value;
+        assert!((v + 0.5).abs() < 1e-12, "sphere(0.5,-0.5) = -0.5, got {v}");
+
+        // the registered study's trial — same bare id — runs levy2 instead
+        p.submit(Trial { id: 0, study: StudyId(5), round: 0, x: vec![0.5, -0.5], attempt: 0 });
+        let o = p.recv();
+        assert_eq!(o.trial.study, StudyId(5));
+        let expected =
+            Levy::new(2).eval(&[0.5, -0.5], &mut Pcg64::new(0)).value;
+        let v = o.result.unwrap().value;
+        assert_eq!(v.to_bits(), expected.to_bits(), "study must route to its own objective");
+
+        // tallies cover successfully registered studies only (the solo
+        // trial and the failed registration leave no rows), and reconcile
+        let sc = p.study_counters();
+        assert_eq!(sc.len(), 1, "one row per registered study: {sc:?}");
+        assert_eq!((sc[0].study, sc[0].dispatched, sc[0].completed), (5, 1, 1));
+        p.shutdown();
     }
 
     #[test]

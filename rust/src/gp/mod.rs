@@ -93,4 +93,12 @@ pub trait Surrogate: Send {
 
     /// Number of currently active fantasy observations.
     fn fantasies_active(&self) -> usize;
+
+    /// Hint from an async driver: how many speculative evaluations are in
+    /// flight *right now*. Lag-scheduled models fold this into their refit
+    /// boundary test ([`lazy::LagSchedule::due_async`]) so the `O(n³)`
+    /// boundary is paid when the effective sample size crosses the lag, not
+    /// the settled one. Default is a no-op; synchronous drivers never call
+    /// it, so the classic schedule is unchanged.
+    fn note_async_pressure(&mut self, _in_flight: usize) {}
 }

@@ -6,6 +6,8 @@
 //!                 [--mode sync|async] [--pending cl-min|posterior-mean|kriging-believer]
 //!                 [--transport thread|tcp] [--listen 127.0.0.1:7077]
 //! lazygp worker  --connect 127.0.0.1:7077 [--threads 4]   # remote evaluator
+//! lazygp serve   --studies "objective=levy2,seed=1,evals=30;objective=sphere5,seed=2"
+//!                [--transport thread|tcp] [--control 127.0.0.1:7079]
 //! lazygp list
 //! lazygp info    # PJRT platform + artifact buckets
 //! lazygp score   # XLA-vs-native scoring parity + throughput check
@@ -17,11 +19,14 @@ use std::time::Duration;
 use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign, PendingStrategy, SurrogateChoice};
 use lazygp::config::experiment::{ExperimentConfig, Preset};
 use lazygp::coordinator::transport::run_worker_with;
+use lazygp::coordinator::worker::WorkerConfig;
 use lazygp::coordinator::{
     AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo, ReconnectConfig,
-    RemoteEvalConfig, SocketPool, SocketPoolOptions, Transport, WorkerOptions,
+    RemoteEvalConfig, SocketPool, SocketPoolOptions, StudyService, StudySpec, Transport,
+    WorkerOptions, WorkerPool,
 };
 use lazygp::gp::Surrogate;
+use lazygp::metrics::AsyncTrace;
 use lazygp::metrics::Trace;
 use lazygp::objectives;
 use lazygp::runtime::{GpScorer, PjrtRuntime};
@@ -98,6 +103,50 @@ fn app() -> App {
                 .opt("reconnect-base-ms", "first reconnect backoff, milliseconds", Some("50"))
                 .opt("reconnect-cap-ms", "reconnect backoff cap, milliseconds", Some("2000")),
         )
+        .command(
+            CommandSpec::new("serve", "run many studies concurrently over one worker fleet")
+                .opt(
+                    "studies",
+                    "semicolon-separated clauses of key=value pairs \
+                     (keys: name, objective, seed, evals, slots, weight, priority)",
+                    Some(""),
+                )
+                .opt("control", "bind the lifecycle RPC plane here (port 0 = ephemeral)", None)
+                .opt(
+                    "linger",
+                    "seconds to keep the control plane up after inline studies finish",
+                    Some("0"),
+                )
+                .opt(
+                    "objective",
+                    "fleet base objective (fallback for unregistered trials)",
+                    Some("sphere5"),
+                )
+                .opt("transport", "thread | tcp (remote `lazygp worker`s)", Some("thread"))
+                .opt("workers", "worker threads (thread) / slots to wait for (tcp)", Some("4"))
+                .opt("sleep-scale", "real s slept per simulated s", Some("0"))
+                .opt("fail-prob", "failure injection probability", Some("0"))
+                .opt("listen", "tcp bind address (port 0 = ephemeral)", Some("127.0.0.1:7077"))
+                .opt("heartbeat", "tcp heartbeat interval seconds (0 = off)", Some("2"))
+                .opt(
+                    "heartbeat-deadline",
+                    "tcp link silence before reap, seconds (0 = 2x interval)",
+                    Some("0"),
+                )
+                .opt("max-frame", "tcp frame size cap in bytes", Some("16777216"))
+                .flag("checksum", "CRC32-checksum tcp frames after the handshake")
+                .opt(
+                    "worker-loss",
+                    "seconds with zero tcp workers before erroring out (0 = wait forever)",
+                    Some("60"),
+                )
+                .opt(
+                    "gp-threads",
+                    "per-study GP hot-path worker threads (0 = auto, 1 = serial)",
+                    Some("0"),
+                )
+                .opt("out-dir", "write per-study trace CSVs + a study summary CSV here", None),
+        )
         .command(CommandSpec::new("list", "list objectives and presets"))
         .command(CommandSpec::new("info", "PJRT platform and artifact buckets"))
         .command(
@@ -121,6 +170,7 @@ fn main() {
         "run" => cmd_run(&parsed),
         "parallel" => cmd_parallel(&parsed),
         "worker" => cmd_worker(&parsed),
+        "serve" => cmd_serve(&parsed),
         "list" => cmd_list(),
         "info" => cmd_info(),
         "score" => cmd_score(&parsed),
@@ -374,6 +424,157 @@ fn cmd_worker(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
          ({} reconnect(s), {} re-delivered)",
         summary.worker_id, summary.evaluated, summary.reconnects, summary.redelivered
     );
+    Ok(())
+}
+
+/// Parse the packed `--studies` grammar: semicolon-separated clauses of
+/// comma-separated `key=value` pairs.
+fn parse_studies(
+    spec: &str,
+    base_seed: u64,
+    par: lazygp::util::parallel::Parallelism,
+) -> lazygp::Result<Vec<StudySpec>> {
+    let mut out = Vec::new();
+    for (i, clause) in spec.split(';').filter(|c| !c.trim().is_empty()).enumerate() {
+        let mut name = format!("study-{}", i + 1);
+        let mut objective = None;
+        let mut seed = base_seed.wrapping_add(i as u64);
+        let mut evals = 20usize;
+        let mut slots = 1usize;
+        let mut weight = 1u64;
+        let mut priority = 0u32;
+        for kv in clause.split(',') {
+            let kv = kv.trim();
+            if kv.is_empty() {
+                continue;
+            }
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| lazygp::err!("bad study clause `{kv}` (want key=value)"))?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "name" => name = v.to_string(),
+                "objective" => objective = Some(v.to_string()),
+                "seed" => seed = v.parse().map_err(|_| lazygp::err!("bad study seed `{v}`"))?,
+                "evals" => evals = v.parse().map_err(|_| lazygp::err!("bad study evals `{v}`"))?,
+                "slots" => slots = v.parse().map_err(|_| lazygp::err!("bad study slots `{v}`"))?,
+                "weight" => {
+                    weight = v.parse().map_err(|_| lazygp::err!("bad study weight `{v}`"))?;
+                }
+                "priority" => {
+                    priority = v.parse().map_err(|_| lazygp::err!("bad study priority `{v}`"))?;
+                }
+                other => lazygp::bail!("unknown study key `{other}`"),
+            }
+        }
+        let objective =
+            objective.ok_or_else(|| lazygp::err!("study clause {} missing objective=", i + 1))?;
+        out.push(
+            StudySpec::new(name, objective)
+                .with_bo(BoConfig::lazy().with_seed(seed).with_parallelism(par))
+                .with_evals(evals)
+                .with_slots(slots)
+                .with_weight(weight)
+                .with_priority(priority),
+        );
+    }
+    Ok(out)
+}
+
+fn cmd_serve(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
+    let base = p.str_or("objective", "sphere5");
+    if objectives::by_name(&base).is_none() {
+        lazygp::bail!("unknown objective `{base}`");
+    }
+    let seed = p.u64("seed")?;
+    let workers = p.usize("workers")?;
+    let par = lazygp::util::parallel::Parallelism::from_threads_flag(p.usize("gp-threads")?);
+    let studies = parse_studies(&p.str_or("studies", ""), seed, par)?;
+    let control_addr = p.str("control").map(str::to_string);
+    if studies.is_empty() && control_addr.is_none() {
+        lazygp::bail!("`lazygp serve` needs --studies and/or --control");
+    }
+    let transport_kind = p.str_or("transport", "thread");
+    let fleet: Box<dyn Transport> = match transport_kind.as_str() {
+        "tcp" => tcp_transport(p, &base, workers, seed)?,
+        "thread" => {
+            let obj: Arc<dyn objectives::Objective> =
+                Arc::from(objectives::by_name(&base).unwrap());
+            Box::new(WorkerPool::spawn(
+                obj,
+                WorkerConfig {
+                    workers,
+                    sleep_scale: p.f64("sleep-scale")?,
+                    fail_prob: p.f64("fail-prob")?,
+                    queue_cap: (workers * 2).max(4),
+                    seed,
+                },
+            ))
+        }
+        other => lazygp::bail!("bad --transport `{other}` (thread | tcp)"),
+    };
+    println!(
+        "## lazygp serve ({transport_kind}) — {} inline study(ies), {} fleet slot(s)",
+        studies.len(),
+        workers
+    );
+    let service = Arc::new(StudyService::new(fleet));
+    let control = match &control_addr {
+        Some(addr) => {
+            let server = Arc::clone(&service).serve_control(addr.as_str())?;
+            println!("control plane listening on {}", server.addr());
+            Some(server)
+        }
+        None => None,
+    };
+    let mut launched = Vec::new();
+    for spec in studies {
+        let label = spec.name.clone();
+        let id = service.create_study(spec)?;
+        println!("study {id} `{label}` launched");
+        launched.push((id, label));
+    }
+    let mut results = Vec::new();
+    for (id, label) in launched {
+        let result = service.wait(id)?;
+        match &result.best {
+            Some(b) => println!("study {id} `{label}` done: best {:.6}", b.value),
+            None => println!("study {id} `{label}` done: no successful evaluations"),
+        }
+        results.push((id, label, result));
+    }
+    let linger = p.f64("linger")?;
+    if control.is_some() && linger > 0.0 {
+        println!("lingering {linger}s for control-plane studies…");
+        std::thread::sleep(Duration::from_secs_f64(linger));
+    }
+    // drain anything the control plane created meanwhile
+    for (id, result) in service.wait_all()? {
+        let label = format!("remote-{id}");
+        match &result.best {
+            Some(b) => println!("study {id} `{label}` done: best {:.6}", b.value),
+            None => println!("study {id} `{label}` done: no successful evaluations"),
+        }
+        results.push((id, label, result));
+    }
+    let stats = service.stats();
+    println!("{}", stats.render_links());
+    if let Some(dir) = p.str("out-dir") {
+        std::fs::create_dir_all(dir)?;
+        for (_, label, result) in &results {
+            let path = format!("{dir}/{label}.csv");
+            result.trace.write_csv(&path)?;
+            println!("trace written to {path}");
+        }
+        let summary = AsyncTrace { studies: stats.studies.clone(), ..AsyncTrace::default() };
+        let path = format!("{dir}/studies.csv");
+        summary.write_studies_csv(&path)?;
+        println!("study summary written to {path}");
+    }
+    drop(control);
+    if let Ok(service) = Arc::try_unwrap(service) {
+        service.shutdown()?;
+    }
     Ok(())
 }
 

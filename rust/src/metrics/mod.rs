@@ -9,5 +9,5 @@ pub mod parallel;
 pub mod trace;
 
 pub use csv::CsvWriter;
-pub use parallel::{AsyncTrace, AsyncTracePoint, FaultCounters, TransportCounter};
+pub use parallel::{AsyncTrace, AsyncTracePoint, FaultCounters, StudyCounter, TransportCounter};
 pub use trace::{RunSummary, Trace, TracePoint};

@@ -34,6 +34,38 @@ pub struct TransportCounter {
     pub rtt_mean_s: f64,
 }
 
+/// Per-study counters of a multi-study fleet: how much work each
+/// registered study pushed through the shared transport and what it is
+/// holding in surrogate memory right now.
+///
+/// Rows exist only for studies registered with
+/// [`Transport::register_study`](crate::coordinator::Transport::register_study)
+/// (or scheduled through the
+/// [`StudyService`](crate::coordinator::StudyService)); solo runs never
+/// register and report an empty vector, keeping single-study output
+/// byte-identical to before studies existed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StudyCounter {
+    /// study id (the raw `StudyId.0`)
+    pub study: u64,
+    /// trials dispatched on behalf of this study
+    pub dispatched: u64,
+    /// outcomes delivered for this study
+    pub completed: u64,
+    /// in-flight trials of this study re-queued off disconnected workers
+    pub requeued: u64,
+    /// duplicate outcomes of this study dropped by the per-study
+    /// exactly-once gate
+    pub duplicates_dropped: u64,
+    /// times this study was ready but passed over by the fair-share
+    /// scheduler in favor of a study with lower virtual pass
+    pub starved_skips: u64,
+    /// estimated surrogate memory the study currently pins (packed factor
+    /// + alpha); idle/suspended studies release their `O(n²)` buffers and
+    /// report only the retained observation vectors
+    pub mem_bytes_est: u64,
+}
+
 /// Pool-level fault/recovery counters of a
 /// [`Transport`](crate::coordinator::Transport) backend — the hardening
 /// telemetry: how often links were rescued, reaped, rejected or rebuilt.
@@ -110,6 +142,9 @@ pub struct AsyncTrace {
     pub transport: Vec<TransportCounter>,
     /// pool-level fault/recovery counters of the backend the run used
     pub faults: FaultCounters,
+    /// per-study counters when the backend multiplexed registered studies;
+    /// empty for solo runs (which never register a study)
+    pub studies: Vec<StudyCounter>,
 }
 
 impl AsyncTrace {
@@ -185,6 +220,34 @@ impl AsyncTrace {
         w.flush()
     }
 
+    /// Write the per-study counters to CSV (header only for solo runs).
+    pub fn write_studies_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "study",
+                "dispatched",
+                "completed",
+                "requeued",
+                "duplicates_dropped",
+                "starved_skips",
+                "mem_bytes_est",
+            ],
+        )?;
+        for s in &self.studies {
+            w.write_row_f64(&[
+                s.study as f64,
+                s.dispatched as f64,
+                s.completed as f64,
+                s.requeued as f64,
+                s.duplicates_dropped as f64,
+                s.starved_skips as f64,
+                s.mem_bytes_est as f64,
+            ])?;
+        }
+        w.flush()
+    }
+
     /// One human-readable summary line.
     pub fn render(&self) -> String {
         let mut line = format!(
@@ -208,6 +271,9 @@ impl AsyncTrace {
         }
         if self.faults.any() {
             line.push_str(&format!("  faults: {}", self.faults.render()));
+        }
+        if !self.studies.is_empty() {
+            line.push_str(&format!("  studies {}", self.studies.len()));
         }
         line
     }
@@ -260,6 +326,17 @@ mod tests {
                 },
             ],
             faults: FaultCounters { requeued: 1, reconnects: 1, ..Default::default() },
+            studies: vec![
+                StudyCounter { study: 1, dispatched: 3, completed: 3, ..Default::default() },
+                StudyCounter {
+                    study: 2,
+                    dispatched: 1,
+                    completed: 1,
+                    starved_skips: 2,
+                    mem_bytes_est: 4096,
+                    ..Default::default()
+                },
+            ],
         }
     }
 
@@ -299,6 +376,23 @@ mod tests {
         assert!(body.starts_with("worker,capacity,dispatched"));
         assert_eq!(body.lines().count(), 3);
         std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn studies_csv_and_render() {
+        let t = demo();
+        assert!(t.render().contains("studies 2"));
+        let path = std::env::temp_dir()
+            .join(format!("lazygp_studies_csv_{}.csv", std::process::id()));
+        t.write_studies_csv(path.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("study,dispatched,completed"));
+        assert_eq!(body.lines().count(), 3);
+        std::fs::remove_file(path).unwrap();
+        // solo runs render no study suffix at all
+        let mut solo = demo();
+        solo.studies.clear();
+        assert!(!solo.render().contains("studies"));
     }
 
     #[test]

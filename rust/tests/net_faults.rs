@@ -21,8 +21,8 @@ use lazygp::coordinator::transport::{
     WorkerOptions, PROTOCOL_VERSION,
 };
 use lazygp::coordinator::{
-    AsyncBo, AsyncCoordinatorConfig, RemoteEvalConfig, SocketPool, SocketPoolOptions, Trial,
-    TrialOutcome,
+    AsyncBo, AsyncCoordinatorConfig, RemoteEvalConfig, SocketPool, SocketPoolOptions, StudyId,
+    Trial, TrialOutcome,
 };
 use lazygp::objectives::Evaluation;
 use lazygp::util::proptest as pt;
@@ -52,7 +52,11 @@ fn sphere_pool(options: SocketPoolOptions) -> SocketPool {
 }
 
 fn trial(id: u64) -> Trial {
-    Trial { id, round: 0, x: vec![0.1, -0.2, 0.3, 0.0, -0.1], attempt: 0 }
+    trial_for(StudyId::SOLO, id)
+}
+
+fn trial_for(study: StudyId, id: u64) -> Trial {
+    Trial { id, study, round: 0, x: vec![0.1, -0.2, 0.3, 0.0, -0.1], attempt: 0 }
 }
 
 /// Wait until `cond` holds or `timeout` passes; returns the elapsed time
@@ -571,4 +575,86 @@ fn adversarial_episode(seed: u64) -> bool {
 fn prop_outcome_trial_ids_unique_under_adversarial_requeue_interleavings() {
     let seeds = pt::usize_in(0, 1_000_000);
     pt::check("outcome_ids_exactly_once", &seeds, |&seed| adversarial_episode(seed as u64));
+}
+
+/// Two studies share one fleet and deliberately reuse the same bare trial
+/// ids; the delivery gate is keyed by `(study, trial)`, so under the same
+/// adversarial worker behaviors every *pair* must reach the coordinator
+/// exactly once, and the per-study counters must reconcile.
+fn two_study_adversarial_episode(seed: u64) -> bool {
+    const N: u64 = 4;
+    let mut rng = Pcg64::new(seed);
+    let pool = sphere_pool(quiet_options());
+    let a = StudyId(1);
+    let b = StudyId(2);
+    for (study, objective) in [(a, "sphere5"), (b, "levy2")] {
+        pool.register_study(
+            study,
+            RemoteEvalConfig {
+                objective: objective.into(),
+                sleep_scale: 0.0,
+                fail_prob: 0.0,
+                seed,
+            },
+        )
+        .expect("register study");
+    }
+    for id in 0..N {
+        // identical bare ids on purpose: only (study, id) is unique
+        pool.dispatch(trial_for(a, id));
+        pool.dispatch(trial_for(b, id));
+    }
+    let mut fake = FakeWorker::connect(pool.local_addr(), 2, None);
+    let addr = pool.local_addr();
+    let total = (2 * N) as usize;
+    let mut received: Vec<(u64, u64)> = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while received.len() < total && Instant::now() < deadline {
+        while let Some(o) = pool.poll_outcome(Duration::from_millis(1)) {
+            received.push((o.trial.study.0, o.trial.id));
+        }
+        let Some(t) = fake.read_trial(Duration::from_millis(50)) else { continue };
+        match rng.below(4) {
+            0 => fake.send_outcome(&t),
+            1 => {
+                fake.send_outcome(&t);
+                fake.send_outcome(&t); // duplicate on one link
+            }
+            2 => fake = fake.reconnect(addr), // vanish mid-trial
+            _ => {
+                fake.send_outcome(&t);
+                let stale = t.clone();
+                fake = fake.reconnect(addr);
+                fake.send_outcome(&stale); // stale re-report after requeue
+            }
+        }
+    }
+    while received.len() < total {
+        match pool.poll_outcome(Duration::from_millis(200)) {
+            Some(o) => received.push((o.trial.study.0, o.trial.id)),
+            None => break,
+        }
+    }
+    drop(fake);
+    let stats = pool.stats();
+    Box::new(pool).shutdown();
+    let mut unique = received.clone();
+    unique.sort_unstable();
+    unique.dedup();
+    let per_study_reconciled = [a, b].iter().all(|id| {
+        stats
+            .studies
+            .iter()
+            .find(|r| r.study == id.0)
+            .is_some_and(|r| r.completed == N)
+    });
+    received.len() == total && unique.len() == total && per_study_reconciled
+}
+
+#[test]
+fn prop_two_studies_sharing_a_fleet_deliver_exactly_once_per_study() {
+    let seeds = pt::usize_in(0, 1_000_000);
+    pt::check("two_study_ids_exactly_once", &seeds, |&seed| {
+        two_study_adversarial_episode(seed as u64)
+    });
 }

@@ -1,0 +1,193 @@
+//! Multi-study integration over loopback TCP: two concurrent studies with
+//! different objectives and seeds share ONE `SocketPool` fleet (real
+//! `lazygp worker` daemons), and each study's run must be bitwise
+//! identical to the same study run solo on a one-worker fleet with the
+//! same seed. Also exercises the per-study transport counters and the
+//! lifecycle control plane end-to-end.
+//!
+//! CI runs this file in its own `study-service` job with
+//! `--test-threads=1` and a hard timeout, like `net_faults`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use lazygp::acquisition::optim::OptimConfig;
+use lazygp::bo::driver::{BoConfig, InitDesign, PendingStrategy};
+use lazygp::coordinator::transport::run_worker;
+use lazygp::coordinator::{
+    AsyncBo, AsyncCoordinatorConfig, ControlClient, CreateStudy, RemoteEvalConfig, SocketPool,
+    StudyResult, StudyService, StudySpec,
+};
+use lazygp::metrics::AsyncTrace;
+use lazygp::objectives;
+
+fn fast_bo(seed: u64) -> BoConfig {
+    BoConfig::lazy()
+        .with_seed(seed)
+        .with_init(InitDesign::Lhs(5))
+        .with_optim(OptimConfig { candidates: 96, restarts: 3, nm_iters: 20, nm_scale: 0.08 })
+}
+
+/// Bind a loopback fleet and spawn `n` real worker daemons against it.
+fn tcp_fleet(n: usize, seed: u64) -> (SocketPool, Vec<std::thread::JoinHandle<()>>) {
+    let pool = SocketPool::listen(
+        "127.0.0.1:0",
+        RemoteEvalConfig { objective: "sphere5".into(), sleep_scale: 0.0, fail_prob: 0.0, seed },
+    )
+    .expect("bind loopback");
+    let addr = pool.local_addr().to_string();
+    let workers = (0..n)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                run_worker(&addr, 1).expect("worker run");
+            })
+        })
+        .collect();
+    pool.wait_for_capacity(n, Duration::from_secs(10)).expect("workers connect");
+    (pool, workers)
+}
+
+/// Run one study alone on a fresh one-worker TCP fleet — the reference
+/// the shared-fleet run must match bitwise.
+fn solo_run(objective: &str, seed: u64, evals: usize) -> (lazygp::bo::driver::Best, AsyncTrace) {
+    let (pool, workers) = tcp_fleet(1, seed);
+    let obj: Arc<dyn objectives::Objective> = Arc::from(objectives::by_name(objective).unwrap());
+    let mut abo = AsyncBo::with_transport(
+        fast_bo(seed),
+        obj,
+        Box::new(pool),
+        AsyncCoordinatorConfig {
+            workers: 1,
+            pending: PendingStrategy::ConstantLiarMin,
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+            max_retries: 2,
+            seed,
+        },
+    );
+    let best = abo.run_until_evals(evals).expect("solo run completes");
+    let trace = abo.trace(objective);
+    abo.finish();
+    for w in workers {
+        w.join().unwrap();
+    }
+    (best, trace)
+}
+
+fn assert_bitwise_match(
+    shared: &StudyResult,
+    solo_best: &lazygp::bo::driver::Best,
+    solo: &AsyncTrace,
+) {
+    let shared_best = shared.best.as_ref().expect("shared run found a best");
+    assert_eq!(shared_best.value.to_bits(), solo_best.value.to_bits(), "best value drifted");
+    assert_eq!(shared_best.x.len(), solo_best.x.len());
+    for (s, o) in shared_best.x.iter().zip(&solo_best.x) {
+        assert_eq!(s.to_bits(), o.to_bits(), "best x drifted");
+    }
+    assert_eq!(shared.trace.points.len(), solo.points.len(), "event count drifted");
+    for (sp, op) in shared.trace.points.iter().zip(&solo.points) {
+        assert_eq!(sp.trial_id, op.trial_id, "trial order drifted");
+        assert_eq!(sp.best.to_bits(), op.best.to_bits(), "best-so-far trace drifted");
+        assert_eq!(sp.virtual_done_s.to_bits(), op.virtual_done_s.to_bits());
+    }
+}
+
+#[test]
+fn two_studies_over_one_tcp_fleet_match_solo_runs_bitwise() {
+    const EVALS: usize = 10;
+    let (pool, workers) = tcp_fleet(2, 3);
+    let service = StudyService::new(Box::new(pool));
+    let a = service
+        .create_study(StudySpec::new("tcp-a", "sphere5").with_bo(fast_bo(11)).with_evals(EVALS))
+        .unwrap();
+    let b = service
+        .create_study(StudySpec::new("tcp-b", "levy2").with_bo(fast_bo(23)).with_evals(EVALS))
+        .unwrap();
+    let shared_a = service.wait(a).unwrap();
+    let shared_b = service.wait(b).unwrap();
+
+    // per-study transport accounting reconciles exactly: no failures, no
+    // disconnects ⇒ dispatched == completed == the study's eval budget
+    let stats = service.stats();
+    assert_eq!(stats.backend, "tcp");
+    assert_eq!(stats.studies.len(), 2, "one counter row per registered study");
+    for id in [a, b] {
+        let row = stats.studies.iter().find(|r| r.study == id.0).expect("study row");
+        assert_eq!(row.dispatched, EVALS as u64, "study {id} dispatched");
+        assert_eq!(row.completed, EVALS as u64, "study {id} completed");
+        assert_eq!(row.requeued, 0);
+        assert_eq!(row.duplicates_dropped, 0);
+        // finished studies release the O(n²) factor; observation vectors
+        // (5 LHS seeds + EVALS points, 16 bytes each) remain
+        assert_eq!(row.mem_bytes_est, 16 * (5 + EVALS as u64));
+    }
+    service.shutdown().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    let (solo_best_a, solo_trace_a) = solo_run("sphere5", 11, EVALS);
+    assert_bitwise_match(&shared_a, &solo_best_a, &solo_trace_a);
+    let (solo_best_b, solo_trace_b) = solo_run("levy2", 23, EVALS);
+    assert_bitwise_match(&shared_b, &solo_best_b, &solo_trace_b);
+}
+
+#[test]
+fn control_plane_drives_studies_over_tcp() {
+    let (pool, workers) = tcp_fleet(2, 7);
+    let service = Arc::new(StudyService::new(Box::new(pool)));
+    let server = Arc::clone(&service).serve_control("127.0.0.1:0").unwrap();
+    let mut client = ControlClient::connect(server.addr()).unwrap();
+
+    let mut params = CreateStudy::new("ctl-a", "sphere5");
+    params.seed = 5;
+    params.evals = 6;
+    let a = client.create(&params).unwrap();
+
+    // a second study, suspended right after creation: admission must stop
+    let mut params_b = CreateStudy::new("ctl-b", "levy2");
+    params_b.seed = 9;
+    params_b.evals = 8;
+    let b = client.create(&params_b).unwrap();
+    client.suspend(b).unwrap();
+    std::thread::sleep(Duration::from_millis(80));
+    let (state_b, _, completed_b, _) = client.query_best(b).unwrap();
+    assert_eq!(state_b, "suspended");
+    assert!(completed_b < 8, "suspended study kept completing ({completed_b})");
+
+    let result_a = service.wait(a).unwrap();
+    assert!(result_a.best.is_some());
+    let (state_a, best_a, completed_a, dispatched_a) = client.query_best(a).unwrap();
+    assert_eq!(state_a, "finished");
+    assert!(best_a.is_finite());
+    assert_eq!(completed_a, 6);
+    assert_eq!(dispatched_a, 6);
+
+    let rows = client.stream_trace(a).unwrap();
+    assert_eq!(rows.len(), 6);
+    assert!(rows.iter().all(|r| r.ok && r.value.is_finite()));
+    // best-so-far is monotone non-decreasing along the settle order
+    for pair in rows.windows(2) {
+        assert!(pair[1].best >= pair[0].best);
+    }
+
+    client.resume(b).unwrap();
+    let result_b = service.wait(b).unwrap();
+    assert!(result_b.best.is_some());
+    let (state_b, _, completed_b, _) = client.query_best(b).unwrap();
+    assert_eq!(state_b, "finished");
+    assert_eq!(completed_b, 8);
+
+    let render = client.stats_render().unwrap();
+    assert!(render.contains("study"), "render lists study rows:\n{render}");
+    assert!(client.create(&CreateStudy::new("bad", "no-such-objective")).is_err());
+    client.bye().unwrap();
+    drop(server);
+    let service = Arc::try_unwrap(service).ok().expect("server released its handle");
+    service.shutdown().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+}

@@ -13,7 +13,7 @@ use lazygp::coordinator::transport::{
     read_frame, run_worker, write_frame, LeaderMsg, Transport, WorkerMsg, PROTOCOL_VERSION,
 };
 use lazygp::coordinator::{
-    AsyncBo, AsyncCoordinatorConfig, RemoteEvalConfig, SocketPool, Trial, TrialError,
+    AsyncBo, AsyncCoordinatorConfig, RemoteEvalConfig, SocketPool, StudyId, Trial, TrialError,
     TrialOutcome,
 };
 use lazygp::gp::Surrogate;
@@ -45,6 +45,7 @@ fn random_trial(rng: &mut Pcg64) -> Trial {
     Trial {
         // ids anywhere in the safe-integer range the decoder accepts
         id: rng.below(9_007_199_254_740_992),
+        study: StudyId(rng.below(1 << 20)),
         round: rng.below(1 << 30),
         x: (0..dim).map(|_| tricky_f64(rng)).collect(),
         attempt: rng.below(u64::from(u32::MAX) + 1) as u32,
@@ -63,6 +64,7 @@ fn prop_trial_json_roundtrip_bitwise() {
         let t = random_trial(&mut rng);
         let back = Trial::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
         back.id == t.id
+            && back.study == t.study
             && back.round == t.round
             && back.attempt == t.attempt
             && bits_equal(&t.x, &back.x)
@@ -106,6 +108,7 @@ fn prop_outcome_json_roundtrip_bitwise() {
         };
         result_matches
             && back.trial.id == o.trial.id
+            && back.trial.study == o.trial.study
             && bits_equal(&o.trial.x, &back.trial.x)
             && back.worker_id == o.worker_id
             && back.worker_seconds.to_bits() == o.worker_seconds.to_bits()
@@ -158,7 +161,13 @@ fn loopback_workers_evaluate_trials() {
     pool.wait_for_capacity(2, Duration::from_secs(10)).unwrap();
 
     for id in 0..8 {
-        pool.dispatch(Trial { id, round: 0, x: vec![0.5, -0.5, 0.0, 0.25, -0.25], attempt: 0 });
+        pool.dispatch(Trial {
+            id,
+            study: StudyId::SOLO,
+            round: 0,
+            x: vec![0.5, -0.5, 0.0, 0.25, -0.25],
+            attempt: 0,
+        });
     }
     let mut ids = Vec::new();
     for _ in 0..8 {
@@ -204,7 +213,13 @@ fn worker_disconnect_mid_trial_requeues_and_completes() {
     assert!(matches!(LeaderMsg::from_json(&welcome).unwrap(), LeaderMsg::Welcome { .. }));
     pool.wait_for_capacity(1, Duration::from_secs(10)).unwrap();
 
-    pool.dispatch(Trial { id: 7, round: 0, x: vec![0.1, 0.2, 0.3, 0.4, 0.5], attempt: 0 });
+    pool.dispatch(Trial {
+        id: 7,
+        study: StudyId::SOLO,
+        round: 0,
+        x: vec![0.1, 0.2, 0.3, 0.4, 0.5],
+        attempt: 0,
+    });
     let (msg, _) = read_frame(&mut fake).unwrap();
     assert!(matches!(LeaderMsg::from_json(&msg).unwrap(), LeaderMsg::Dispatch(_)));
     drop(fake); // crash mid-trial: the outcome will never come from here
@@ -291,7 +306,13 @@ fn socket_pool_teardown_is_prompt() {
         std::thread::spawn(move || run_worker(&addr, 1))
     };
     pool.wait_for_capacity(1, Duration::from_secs(10)).unwrap();
-    pool.dispatch(Trial { id: 0, round: 0, x: vec![0.05, 5e-4, 0.9], attempt: 0 });
+    pool.dispatch(Trial {
+        id: 0,
+        study: StudyId::SOLO,
+        round: 0,
+        x: vec![0.05, 5e-4, 0.9],
+        attempt: 0,
+    });
     // give the worker time to start the trial and enter its sleep
     std::thread::sleep(Duration::from_millis(300));
 
