@@ -250,6 +250,13 @@ impl BoDriver {
         &mut self.rng
     }
 
+    /// Read-only view of the driver's RNG — the durability journal records
+    /// [`Pcg64::draws`] per outcome so replay can verify the resumed stream
+    /// is positioned exactly where the original was.
+    pub fn rng(&self) -> &Pcg64 {
+        &self.rng
+    }
+
     /// Evaluate the initial design (idempotent: runs once).
     pub fn ensure_seeded(&mut self) {
         if self.seeded {

@@ -35,11 +35,12 @@
 //! attempts included. Utilization and the fantasy counters are exported
 //! through [`crate::metrics::AsyncTrace`].
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
+use super::journal::{ReplayEntry, StudyJournal};
 use super::leader::SharedObjective;
-use super::messages::{StudyId, Trial};
+use super::messages::{StudyId, Trial, TrialOutcome};
 use super::transport::{Transport, TransportStats};
 use super::worker::{WorkerConfig, WorkerPool};
 use crate::bo::driver::{Best, BoConfig, BoDriver, PendingStrategy};
@@ -144,6 +145,19 @@ pub struct AsyncBo {
     submit_v: HashMap<u64, (f64, usize)>,
     /// in-flight `(trial id, point)` — the set that gets fantasized
     pending: Vec<(u64, Vec<f64>)>,
+    /// durability journal; every outcome is fsynced (and ACKed to its
+    /// worker) before it is settled into the surrogate
+    journal: Option<StudyJournal>,
+    /// journaled outcomes still to re-apply — while non-empty the run is
+    /// *replaying*: outcomes come from here instead of the transport, and
+    /// regenerated dispatches are buffered, not sent
+    replay: VecDeque<ReplayEntry>,
+    /// dispatches regenerated during replay; at go-live the ones whose
+    /// trials are still pending (= in flight at the crash) hit the fleet
+    replay_buffer: Vec<Trial>,
+    /// journal append failure raised inside an infallible dispatch path,
+    /// surfaced by the next [`recv_outcome`](AsyncBo::recv_outcome)
+    journal_fault: Option<crate::Error>,
 }
 
 impl AsyncBo {
@@ -194,7 +208,34 @@ impl AsyncBo {
             avail,
             submit_v: HashMap::new(),
             pending: Vec::new(),
+            journal: None,
+            replay: VecDeque::new(),
+            replay_buffer: Vec::new(),
+            journal_fault: None,
         }
+    }
+
+    /// Attach a durability journal, optionally with the recovered outcome
+    /// tail to replay (empty for a fresh study). Flips the transport into
+    /// ACK mode and preloads its exactly-once gate with every already
+    /// settled `(study, trial)` pair, so outcomes redelivered by workers
+    /// after a leader restart cannot double-apply.
+    ///
+    /// Replay is **re-execution**: the run takes the exact code path of the
+    /// original (same seeding, same suggestions, same RNG stream) but feeds
+    /// journaled outcomes instead of live ones and buffers the regenerated
+    /// dispatches. A resumed run is therefore bitwise-identical to one that
+    /// never crashed — and the journaled per-outcome RNG positions are
+    /// verified at every step as a divergence tripwire.
+    pub fn with_journal(mut self, journal: StudyJournal, replay: Vec<ReplayEntry>) -> Self {
+        let keys: Vec<(u64, u64)> =
+            replay.iter().map(|e| (e.outcome.trial.study.0, e.outcome.trial.id)).collect();
+        // always called, even with no keys: this is what advertises
+        // `Welcome.acks` so workers start retaining until ACKed
+        self.pool.preload_gate(&keys);
+        self.replay = replay.into();
+        self.journal = Some(journal);
+        self
     }
 
     pub fn driver(&self) -> &BoDriver {
@@ -256,8 +297,26 @@ impl AsyncBo {
             }
         }
         // leave the surrogate in its real-data state
-        self.stats.fantasy_rollbacks += self.driver.retract_fantasies() as u64;
+        let rolled = self.driver.retract_fantasies();
+        self.stats.fantasy_rollbacks += rolled as u64;
         self.driver.set_async_pressure(0);
+        if let Some(j) = self.journal.as_mut() {
+            // the retract record lands *before* any error surfaces — on the
+            // all-workers-lost path too — so a journal replayed after this
+            // exit knows the speculative state was unwound, not settled
+            if rolled > 0 {
+                if let Err(e) = j.append_retract(rolled as u64) {
+                    failure.get_or_insert(e);
+                }
+            }
+            // `finish` only when the journaled budget really completed: an
+            // interrupted run must leave a crash-shaped journal behind
+            if failure.is_none() && self.driver.history().len() >= j.open_info().evals {
+                if let Err(e) = j.append_finish() {
+                    failure = Some(e);
+                }
+            }
+        }
         match failure {
             Some(e) => Err(e),
             None => Ok(self.driver.best().cloned().expect("no observations")),
@@ -286,7 +345,7 @@ impl AsyncBo {
         self.pending.push((id, x.clone()));
         // a service multiplexing studies re-stamps `study` at its per-study
         // transport handle; a standalone async leader runs solo
-        self.pool.dispatch(Trial {
+        self.send_trial(Trial {
             id,
             study: StudyId::SOLO,
             round: self.events.len() as u64,
@@ -296,6 +355,74 @@ impl AsyncBo {
         self.stats.suggest_s += suggest_seconds;
         self.stats.sync_s += sync_seconds;
         Dispatched { suggest_seconds, sync_seconds }
+    }
+
+    /// Route one trial towards the fleet: buffered while replaying,
+    /// journaled (`dispatch` record, no fsync — outcomes carry the sync)
+    /// and dispatched when live. A journal failure here is parked in
+    /// `journal_fault`; the next receive surfaces it.
+    fn send_trial(&mut self, trial: Trial) {
+        if !self.replay.is_empty() {
+            self.replay_buffer.push(trial);
+            return;
+        }
+        if let Err(e) = self.dispatch_live(trial) {
+            self.journal_fault.get_or_insert(e);
+        }
+    }
+
+    fn dispatch_live(&mut self, trial: Trial) -> crate::Result<()> {
+        if let Some(j) = self.journal.as_mut() {
+            j.append_dispatch(&trial)?;
+        }
+        self.pool.dispatch(trial);
+        Ok(())
+    }
+
+    /// Go-live transition after the last journaled outcome has been
+    /// re-applied: of the dispatches buffered during replay, exactly those
+    /// whose trials are still pending were in flight when the leader died —
+    /// push them (regenerated bit-for-bit by the re-execution) to the real
+    /// fleet. The rest already settled from the journal and are dropped.
+    fn flush_replayed_dispatches(&mut self) -> crate::Result<()> {
+        let buffered = std::mem::take(&mut self.replay_buffer);
+        for t in buffered {
+            if self.pending.iter().any(|(id, _)| *id == t.id) {
+                self.dispatch_live(t)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// One outcome, replay-aware. While replaying: pop the journal tail and
+    /// verify the driver's RNG is exactly where the journal said it was
+    /// (divergence → typed [`crate::Error::Journal`], never a silent wrong
+    /// posterior). Live: receive from the transport, make the outcome
+    /// durable (append + fsync), and only then ACK it back to its worker —
+    /// the order that makes "ACKed" mean "safe to forget".
+    fn recv_outcome(&mut self) -> crate::Result<TrialOutcome> {
+        if let Some(e) = self.journal_fault.take() {
+            return Err(e);
+        }
+        if let Some(entry) = self.replay.pop_front() {
+            let here = self.driver.rng().draws();
+            if entry.rng_draws != here {
+                return Err(crate::Error::journal(format!(
+                    "replay diverged: trial {} was journaled at rng position {} but the \
+                     re-executed run is at {}",
+                    entry.outcome.trial.id, entry.rng_draws, here
+                )));
+            }
+            return Ok(entry.outcome);
+        }
+        let o = self.pool.recv()?;
+        if let Some(j) = self.journal.as_mut() {
+            let draws = self.driver.rng().draws();
+            j.append_outcome(&o, draws)?;
+            // durable on disk: the worker may drop its retention copy
+            self.pool.ack(&o);
+        }
+        Ok(o)
     }
 
     /// Remove a finished trial from the pending set (unwinding the active
@@ -351,7 +478,7 @@ impl AsyncBo {
     /// Receive one outcome and react: observe/retry/drop, then refill the
     /// freed slot. Fails only when the transport reports all workers lost.
     fn step_event(&mut self, total_evals: usize) -> crate::Result<()> {
-        let o = self.pool.recv()?;
+        let o = self.recv_outcome()?;
         // discrete-event accounting on the simulated testbed: the attempt
         // occupies the virtual slot it was bound to at dispatch time
         let (submitted, slot) = self.submit_v.remove(&o.trial.id).unwrap_or((0.0, 0));
@@ -389,7 +516,7 @@ impl AsyncBo {
                 }
                 self.submit_v.insert(retry.id, (done_v, slot));
                 self.stats.retries += 1;
-                self.pool.dispatch(retry);
+                self.send_trial(retry);
                 retried = true;
             }
             Err(_) => {
@@ -416,6 +543,19 @@ impl AsyncBo {
             suggest_seconds,
             sync_seconds,
         });
+        if self.replay.is_empty() {
+            // crossed go-live on this event: release the in-flight set
+            if !self.replay_buffer.is_empty() {
+                self.flush_replayed_dispatches()?;
+            }
+            // snapshot at the consistent boundary — every settled outcome
+            // observed, every fantasy reconstructible from the pending set
+            if let Some(j) = self.journal.as_mut() {
+                if j.snapshot_due() {
+                    j.write_snapshot(true)?;
+                }
+            }
+        }
         Ok(())
     }
 
@@ -446,6 +586,7 @@ impl AsyncBo {
             transport: transport.links,
             faults: transport.faults,
             studies: transport.studies,
+            journal: self.journal.as_ref().map(|j| j.counters()).unwrap_or_default(),
         }
     }
 
@@ -454,6 +595,15 @@ impl AsyncBo {
         let AsyncBo { driver, pool, .. } = self;
         pool.shutdown();
         driver
+    }
+
+    /// Crash simulation: drop the leader without any teardown courtesy —
+    /// no shutdown frames, no journal finish record, links severed
+    /// mid-flight. What's on disk is exactly what a real crash leaves.
+    pub fn abort(self) {
+        let AsyncBo { pool, journal, .. } = self;
+        drop(journal); // no finish record, no final sync
+        pool.abort();
     }
 }
 

@@ -1,0 +1,823 @@
+//! Per-study durability: an append-only journal plus compacting snapshots,
+//! so a leader crash loses at most the not-yet-fsynced suffix of a study
+//! and a restart resumes **bitwise-identically** to an uninterrupted run.
+//!
+//! # Record grammar
+//!
+//! A journal file is a sequence of framed records, each one JSON through
+//! the [`crate::config::json`] codec inside the transport's checksummed
+//! frame (4-byte big-endian length, 4-byte big-endian CRC32, body — the
+//! same [`FrameConfig`] discipline the TCP links negotiate):
+//!
+//! ```text
+//! journal  := open base? ( dispatch | outcome | retract )* finish?
+//! snapshot := open outcome*          (exactly `base.settled` of them)
+//! ```
+//!
+//! * `open` — study identity and the full replay seed: objective name,
+//!   RNG seed, eval budget, slot count, pending strategy, retry cap. First
+//!   record of every file; anything else first is corruption.
+//! * `dispatch` — a trial left the leader. Advisory (replay regenerates
+//!   dispatches deterministically from the RNG stream); not fsynced.
+//! * `outcome` — a trial result was accepted. Carries a monotone settle
+//!   `index` and the driver RNG's consumed-output count at append time, so
+//!   replay can prove the resumed stream is positioned exactly where the
+//!   original was. Fsynced **before** the worker is ACKed.
+//! * `retract` — fantasies were rolled back (shutdown or error path).
+//! * `finish` — the study completed its full eval budget.
+//! * `base` — the first `settled` outcomes moved into the snapshot file;
+//!   only valid immediately after `open`, written by journal rotation.
+//!
+//! # Torn tails vs. corruption
+//!
+//! Appends are sequential, so a crash can only damage the file's tail: a
+//! truncated length prefix, a short body, or a body whose CRC32 disagrees
+//! with its header. [`recover`] detects any of these, truncates the file
+//! back to the last intact record boundary and reports how many bytes it
+//! discarded — a *repair*, not an error. What is never repaired silently:
+//! a CRC-valid record with a malformed schema, outcome indices that skip
+//! ahead, or a `base` record whose snapshot is missing or disagrees. Those
+//! cannot be produced by a crash mid-append and surface as
+//! [`crate::Error::Journal`].
+//!
+//! # Snapshot boundary invariant
+//!
+//! Snapshots are taken only between settles — the
+//! [`LazyGp::checkpoint()`](crate::gp::LazyGp::checkpoint) consistent
+//! boundary where no fantasies are in flight inside the factor and the
+//! posterior is a pure function of the settled outcome prefix. A snapshot
+//! is therefore just that prefix (replay *input*, not model state): restore
+//! re-executes the deciding code path against it, which is what makes the
+//! resumed posterior bitwise-equal rather than approximately-equal. The
+//! snapshot is durably renamed into place **before** rotation truncates the
+//! journal's coverage, so every outcome is on disk in at least one file at
+//! every instant.
+
+use std::fs::{self, File, OpenOptions};
+use std::path::{Path, PathBuf};
+
+use super::messages::{Trial, TrialOutcome};
+use super::transport::{read_frame_with, write_frame_with, FrameConfig};
+use crate::config::json::Json;
+use crate::metrics::JournalCounters;
+
+/// On-disk format version, stamped into every `open` record. Bumped on any
+/// record-grammar change; [`recover`] refuses other versions rather than
+/// misreading them.
+pub const JOURNAL_FORMAT: u64 = 1;
+
+/// Default settle-count interval between compacting snapshots.
+pub const DEFAULT_SNAPSHOT_EVERY: u64 = 16;
+
+/// The framing policy journals use: always checksummed, default size cap.
+fn frame_config() -> FrameConfig {
+    FrameConfig { checksum: true, ..FrameConfig::default() }
+}
+
+fn bad(m: impl std::fmt::Display) -> crate::Error {
+    crate::Error::journal(m)
+}
+
+/// Keep journal filenames shell- and filesystem-safe whatever the study
+/// was named.
+fn sanitize(name: &str) -> String {
+    let s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') { c } else { '_' })
+        .collect();
+    if s.is_empty() {
+        "study".into()
+    } else {
+        s
+    }
+}
+
+/// Path of a study's journal file under `dir`.
+pub fn journal_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{}.journal", sanitize(name)))
+}
+
+/// Path of a study's snapshot file under `dir`.
+pub fn snapshot_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{}.snapshot", sanitize(name)))
+}
+
+/// Durability barrier for directory-level operations (file creation,
+/// atomic renames). Best-effort: opening a directory for fsync is a
+/// unix-ism, and a failure here only weakens crash-durability of the
+/// *name*, never consistency.
+fn sync_dir(dir: &Path) {
+    let _ = File::open(dir).and_then(|d| d.sync_all());
+}
+
+// ---------------------------------------------------------------------------
+// Records
+// ---------------------------------------------------------------------------
+
+/// The `open` record: everything replay needs to rebuild the run besides
+/// the outcomes themselves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpenInfo {
+    /// on-disk format version ([`JOURNAL_FORMAT`])
+    pub format: u64,
+    /// raw study id (`StudyId.0`) the trials carry
+    pub study: u64,
+    /// study name (also the journal's file stem)
+    pub name: String,
+    /// objective name, resolvable via the objective registry
+    pub objective: String,
+    /// BO driver seed — with the journaled outcomes this pins the entire
+    /// decision stream
+    pub seed: u64,
+    /// total evaluation budget of the study
+    pub evals: usize,
+    /// concurrent trial slots the study runs with
+    pub slots: usize,
+    /// pending-trial strategy name (`PendingStrategy::name`)
+    pub pending: String,
+    /// per-trial retry cap
+    pub max_retries: u32,
+}
+
+/// How one settled outcome replays: the outcome itself plus the driver
+/// RNG's consumed-output count at the moment it was journaled — a
+/// divergence tripwire checked before the replayed outcome is applied.
+#[derive(Debug, Clone)]
+pub struct ReplayEntry {
+    pub outcome: TrialOutcome,
+    pub rng_draws: u64,
+}
+
+/// One framed journal record. See the module docs for the grammar.
+#[derive(Debug, Clone)]
+pub enum JournalRecord {
+    Open(OpenInfo),
+    Dispatch(Trial),
+    Outcome { index: u64, outcome: TrialOutcome, rng_draws: u64 },
+    Retract { count: u64 },
+    Finish,
+    Base { settled: u64 },
+}
+
+impl JournalRecord {
+    fn kind(&self) -> &'static str {
+        match self {
+            JournalRecord::Open(_) => "open",
+            JournalRecord::Dispatch(_) => "dispatch",
+            JournalRecord::Outcome { .. } => "outcome",
+            JournalRecord::Retract { .. } => "retract",
+            JournalRecord::Finish => "finish",
+            JournalRecord::Base { .. } => "base",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            JournalRecord::Open(o) => Json::obj(vec![
+                ("type", Json::Str("open".into())),
+                ("format", Json::Num(o.format as f64)),
+                ("study", Json::Num(o.study as f64)),
+                ("name", Json::Str(o.name.clone())),
+                ("objective", Json::Str(o.objective.clone())),
+                // seeds may exceed 2^53 — travel as a decimal string, like
+                // the transport's Welcome frame does
+                ("seed", Json::Str(o.seed.to_string())),
+                ("evals", Json::Num(o.evals as f64)),
+                ("slots", Json::Num(o.slots as f64)),
+                ("pending", Json::Str(o.pending.clone())),
+                ("max_retries", Json::Num(f64::from(o.max_retries))),
+            ]),
+            JournalRecord::Dispatch(t) => Json::obj(vec![
+                ("type", Json::Str("dispatch".into())),
+                ("trial", t.to_json()),
+            ]),
+            JournalRecord::Outcome { index, outcome, rng_draws } => Json::obj(vec![
+                ("type", Json::Str("outcome".into())),
+                ("index", Json::Num(*index as f64)),
+                // full stream positions can exceed 2^53 in principle
+                ("rng_draws", Json::Str(rng_draws.to_string())),
+                ("outcome", outcome.to_json()),
+            ]),
+            JournalRecord::Retract { count } => Json::obj(vec![
+                ("type", Json::Str("retract".into())),
+                ("count", Json::Num(*count as f64)),
+            ]),
+            JournalRecord::Finish => Json::obj(vec![("type", Json::Str("finish".into()))]),
+            JournalRecord::Base { settled } => Json::obj(vec![
+                ("type", Json::Str("base".into())),
+                ("settled", Json::Num(*settled as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<JournalRecord> {
+        let num = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| bad(format!("missing or invalid u64 field `{key}`")))
+        };
+        let text = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| bad(format!("missing or invalid string field `{key}`")))
+        };
+        let big = |key: &str| -> crate::Result<u64> {
+            text(key)?.parse().map_err(|_| bad(format!("unparseable u64 string `{key}`")))
+        };
+        match j.get("type").and_then(Json::as_str) {
+            Some("open") => {
+                let max_retries = u32::try_from(num("max_retries")?)
+                    .map_err(|_| bad("max_retries exceeds u32"))?;
+                Ok(JournalRecord::Open(OpenInfo {
+                    format: num("format")?,
+                    study: num("study")?,
+                    name: text("name")?,
+                    objective: text("objective")?,
+                    seed: big("seed")?,
+                    evals: num("evals")? as usize,
+                    slots: num("slots")? as usize,
+                    pending: text("pending")?,
+                    max_retries,
+                }))
+            }
+            Some("dispatch") => {
+                let t = j.get("trial").ok_or_else(|| bad("dispatch without `trial`"))?;
+                Ok(JournalRecord::Dispatch(Trial::from_json(t)?))
+            }
+            Some("outcome") => {
+                let o = j.get("outcome").ok_or_else(|| bad("outcome record without body"))?;
+                Ok(JournalRecord::Outcome {
+                    index: num("index")?,
+                    outcome: TrialOutcome::from_json(o)?,
+                    rng_draws: big("rng_draws")?,
+                })
+            }
+            Some("retract") => Ok(JournalRecord::Retract { count: num("count")? }),
+            Some("finish") => Ok(JournalRecord::Finish),
+            Some("base") => Ok(JournalRecord::Base { settled: num("settled")? }),
+            Some(other) => Err(bad(format!("unknown record type `{other}`"))),
+            None => Err(bad("record without a `type` field")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reading / recovery
+// ---------------------------------------------------------------------------
+
+/// Parse framed records from `bytes` until a clean end or a frame-level
+/// failure. Returns `(records, intact_bytes, torn_bytes)`. Frame-level
+/// failures (short read, oversized prefix, CRC mismatch) end the scan —
+/// they are what a crash mid-append leaves behind. A frame that *passed*
+/// its CRC but decodes to garbage is not a torn tail and errors out.
+fn read_records(bytes: &[u8], cfg: &FrameConfig) -> crate::Result<(Vec<JournalRecord>, u64, u64)> {
+    let mut slice = bytes;
+    let mut records = Vec::new();
+    let mut good: u64 = 0;
+    while !slice.is_empty() {
+        match read_frame_with(&mut slice, cfg) {
+            Ok((j, n)) => {
+                records.push(JournalRecord::from_json(&j)?);
+                good += n;
+            }
+            Err(_) => break,
+        }
+    }
+    Ok((records, good, bytes.len() as u64 - good))
+}
+
+/// Everything [`recover`] learned from disk: the study identity, the
+/// settled-outcome prefix to replay, and the repair/forensic counters.
+#[derive(Debug, Clone)]
+pub struct Recovery {
+    /// the journal's `open` record
+    pub open: OpenInfo,
+    /// settled outcomes in settle order, snapshot prefix merged with the
+    /// journal tail (deduplicated by settle index)
+    pub entries: Vec<ReplayEntry>,
+    /// how many leading entries came from the snapshot file (0 = none)
+    pub snapshot_settled: u64,
+    /// dispatch records seen in the journal tail (forensic only)
+    pub dispatched: u64,
+    /// fantasies retracted across all `retract` records
+    pub retracted: u64,
+    /// whether a `finish` record was found
+    pub finished: bool,
+    /// bytes of torn tail truncated away during this recovery
+    pub torn_tail_bytes: u64,
+    /// journal-file records parsed (snapshot records not included)
+    pub records_replayed: u64,
+}
+
+impl Recovery {
+    /// Settled `(study, trial_id)` pairs — preloaded into the transport's
+    /// exactly-once gate so a worker redelivering an already-durable
+    /// outcome after restart is dropped, not double-applied.
+    pub fn gate_keys(&self) -> Vec<(u64, u64)> {
+        self.entries
+            .iter()
+            .map(|e| (e.outcome.trial.study.0, e.outcome.trial.id))
+            .collect()
+    }
+
+    /// Successful evaluations among the settled outcomes — the quantity
+    /// the eval budget counts.
+    pub fn completed_ok(&self) -> usize {
+        self.entries.iter().filter(|e| e.outcome.is_ok()).count()
+    }
+
+    /// Has this study already consumed its full eval budget?
+    pub fn is_complete(&self) -> bool {
+        self.finished || self.completed_ok() >= self.open.evals
+    }
+}
+
+/// Load a study's durable state from `dir`, repairing a torn journal tail
+/// in place (the file is truncated back to its last intact record).
+///
+/// Returns `Ok(None)` when no journal exists — or when the file holds no
+/// complete record at all, which a crash between file creation and the
+/// first fsync can leave behind; either way there is nothing to resume.
+pub fn recover(dir: &Path, name: &str) -> crate::Result<Option<Recovery>> {
+    let jpath = journal_path(dir, name);
+    if !jpath.exists() {
+        return Ok(None);
+    }
+    let bytes = fs::read(&jpath)?;
+    let cfg = frame_config();
+    let (records, good, torn) = read_records(&bytes, &cfg)?;
+    if torn > 0 {
+        let f = OpenOptions::new().write(true).open(&jpath)?;
+        f.set_len(good)?;
+        f.sync_all()?;
+    }
+    if records.is_empty() {
+        return Ok(None);
+    }
+    let open = match &records[0] {
+        JournalRecord::Open(o) => o.clone(),
+        r => return Err(bad(format!("journal must begin with `open`, found `{}`", r.kind()))),
+    };
+    if open.format != JOURNAL_FORMAT {
+        return Err(bad(format!(
+            "journal format {} is not the supported format {JOURNAL_FORMAT}",
+            open.format
+        )));
+    }
+    let mut entries: Vec<ReplayEntry> = Vec::new();
+    let mut snapshot_settled = 0u64;
+    let mut dispatched = 0u64;
+    let mut retracted = 0u64;
+    let mut finished = false;
+    for (i, rec) in records.iter().enumerate().skip(1) {
+        match rec {
+            JournalRecord::Open(_) => return Err(bad("duplicate `open` record")),
+            JournalRecord::Base { settled } => {
+                if i != 1 {
+                    return Err(bad("`base` record not immediately after `open`"));
+                }
+                let spath = snapshot_path(dir, name);
+                let sbytes = fs::read(&spath)
+                    .map_err(|e| bad(format!("`base` record but snapshot unreadable: {e}")))?;
+                let (srecs, _, storn) = read_records(&sbytes, &cfg)?;
+                if storn > 0 {
+                    // snapshots are tmp+renamed whole: a torn one was
+                    // never the file this journal's `base` points at
+                    return Err(bad("snapshot has a torn tail; it cannot be the renamed file"));
+                }
+                match srecs.first() {
+                    Some(JournalRecord::Open(so))
+                        if so.study == open.study && so.seed == open.seed => {}
+                    _ => return Err(bad("snapshot `open` missing or disagrees with journal")),
+                }
+                for sr in &srecs[1..] {
+                    let JournalRecord::Outcome { index, outcome, rng_draws } = sr else {
+                        return Err(bad(format!("snapshot holds a `{}` record", sr.kind())));
+                    };
+                    if *index != entries.len() as u64 {
+                        return Err(bad(format!(
+                            "snapshot outcome index {index} where {} expected",
+                            entries.len()
+                        )));
+                    }
+                    entries.push(ReplayEntry { outcome: outcome.clone(), rng_draws: *rng_draws });
+                }
+                if entries.len() as u64 != *settled {
+                    return Err(bad(format!(
+                        "`base` claims {settled} settled outcomes, snapshot holds {}",
+                        entries.len()
+                    )));
+                }
+                snapshot_settled = *settled;
+            }
+            JournalRecord::Dispatch(_) => dispatched += 1,
+            JournalRecord::Outcome { index, outcome, rng_draws } => {
+                let next = entries.len() as u64;
+                if *index < next {
+                    // the snapshot already covers this settle (crash
+                    // between snapshot rename and journal rotation):
+                    // verify it is the same trial, then skip
+                    if entries[*index as usize].outcome.trial.id != outcome.trial.id {
+                        return Err(bad(format!(
+                            "outcome index {index} disagrees between snapshot and journal"
+                        )));
+                    }
+                } else if *index == next {
+                    entries.push(ReplayEntry { outcome: outcome.clone(), rng_draws: *rng_draws });
+                } else {
+                    return Err(bad(format!("outcome index {index} skips ahead of {next}")));
+                }
+            }
+            JournalRecord::Retract { count } => retracted += *count,
+            JournalRecord::Finish => finished = true,
+        }
+    }
+    Ok(Some(Recovery {
+        open,
+        entries,
+        snapshot_settled,
+        dispatched,
+        retracted,
+        finished,
+        torn_tail_bytes: torn,
+        records_replayed: records.len() as u64,
+    }))
+}
+
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
+/// Append handle for one study's journal, with the snapshot/rotation
+/// machinery. One writer per study; the coordinator owns it.
+pub struct StudyJournal {
+    dir: PathBuf,
+    path: PathBuf,
+    snapshot: PathBuf,
+    file: File,
+    cfg: FrameConfig,
+    open: OpenInfo,
+    counters: JournalCounters,
+    /// settle index the next outcome gets
+    settled: u64,
+    /// every settled outcome, retained in order for snapshot compaction
+    settled_outcomes: Vec<ReplayEntry>,
+    snapshot_every: u64,
+    last_snapshot_at: u64,
+}
+
+impl StudyJournal {
+    /// Start a fresh journal for a new study: create (or truncate) the
+    /// file and durably write its `open` record.
+    pub fn create(dir: &Path, open: OpenInfo) -> crate::Result<StudyJournal> {
+        fs::create_dir_all(dir)?;
+        let path = journal_path(dir, &open.name);
+        let snapshot = snapshot_path(dir, &open.name);
+        let file = OpenOptions::new().create(true).write(true).truncate(true).open(&path)?;
+        let mut j = StudyJournal {
+            dir: dir.to_path_buf(),
+            path,
+            snapshot,
+            file,
+            cfg: frame_config(),
+            open: open.clone(),
+            counters: JournalCounters::default(),
+            settled: 0,
+            settled_outcomes: Vec::new(),
+            snapshot_every: DEFAULT_SNAPSHOT_EVERY,
+            last_snapshot_at: 0,
+        };
+        j.append(&JournalRecord::Open(open))?;
+        j.sync()?;
+        sync_dir(&j.dir);
+        Ok(j)
+    }
+
+    /// Reattach to a recovered journal, appending after its intact prefix.
+    pub fn resume(dir: &Path, recovery: &Recovery) -> crate::Result<StudyJournal> {
+        let path = journal_path(dir, &recovery.open.name);
+        let file = OpenOptions::new().append(true).open(&path)?;
+        Ok(StudyJournal {
+            dir: dir.to_path_buf(),
+            path,
+            snapshot: snapshot_path(dir, &recovery.open.name),
+            file,
+            cfg: frame_config(),
+            open: recovery.open.clone(),
+            counters: JournalCounters {
+                records_replayed: recovery.records_replayed,
+                torn_tail_bytes: recovery.torn_tail_bytes,
+                ..JournalCounters::default()
+            },
+            settled: recovery.entries.len() as u64,
+            settled_outcomes: recovery.entries.clone(),
+            snapshot_every: DEFAULT_SNAPSHOT_EVERY,
+            last_snapshot_at: recovery.snapshot_settled,
+        })
+    }
+
+    /// Override the settle-count interval between snapshots (0 = never).
+    pub fn with_snapshot_every(mut self, every: u64) -> Self {
+        self.snapshot_every = every;
+        self
+    }
+
+    /// The `open` record this journal was created with.
+    pub fn open_info(&self) -> &OpenInfo {
+        &self.open
+    }
+
+    /// Outcomes settled so far (recovered prefix included).
+    pub fn settled(&self) -> u64 {
+        self.settled
+    }
+
+    /// Counter snapshot for telemetry.
+    pub fn counters(&self) -> JournalCounters {
+        self.counters
+    }
+
+    fn append(&mut self, rec: &JournalRecord) -> crate::Result<()> {
+        let n = write_frame_with(&mut self.file, &rec.to_json(), &self.cfg)?;
+        self.counters.records_appended += 1;
+        self.counters.bytes_appended += n;
+        Ok(())
+    }
+
+    /// Durability barrier: everything appended so far survives a crash.
+    pub fn sync(&mut self) -> crate::Result<()> {
+        self.file.sync_data()?;
+        self.counters.fsyncs += 1;
+        Ok(())
+    }
+
+    /// Record a dispatched trial. Advisory — not fsynced on its own; the
+    /// next outcome barrier carries it to disk.
+    pub fn append_dispatch(&mut self, trial: &Trial) -> crate::Result<()> {
+        self.append(&JournalRecord::Dispatch(trial.clone()))
+    }
+
+    /// Durably record a settled outcome (assigning it the next settle
+    /// index) together with the driver RNG's consumed-output count.
+    /// Returns the index. This is the write-ahead point: it must complete
+    /// before the worker is ACKed or the outcome is applied.
+    pub fn append_outcome(&mut self, outcome: &TrialOutcome, rng_draws: u64) -> crate::Result<u64> {
+        let index = self.settled;
+        self.append(&JournalRecord::Outcome { index, outcome: outcome.clone(), rng_draws })?;
+        self.sync()?;
+        self.settled += 1;
+        self.settled_outcomes.push(ReplayEntry { outcome: outcome.clone(), rng_draws });
+        Ok(index)
+    }
+
+    /// Durably record a fantasy rollback of `count` fantasies.
+    pub fn append_retract(&mut self, count: u64) -> crate::Result<()> {
+        self.append(&JournalRecord::Retract { count })?;
+        self.sync()
+    }
+
+    /// Durably record study completion.
+    pub fn append_finish(&mut self) -> crate::Result<()> {
+        self.append(&JournalRecord::Finish)?;
+        self.sync()
+    }
+
+    /// Is a snapshot due under the configured cadence?
+    pub fn snapshot_due(&self) -> bool {
+        self.snapshot_every > 0 && self.settled >= self.last_snapshot_at + self.snapshot_every
+    }
+
+    /// Write a compacting snapshot of the settled prefix; with `rotate`,
+    /// also rewrite the journal to `open base` so it no longer re-states
+    /// what the snapshot holds.
+    ///
+    /// Ordering is what makes this crash-safe: the snapshot is fully
+    /// written, fsynced and renamed into place *before* the journal is
+    /// rewritten, and the rewrite itself is a tmp+rename of a fresh file —
+    /// at no instant is any settled outcome absent from durable storage.
+    pub fn write_snapshot(&mut self, rotate: bool) -> crate::Result<()> {
+        let tmp = self.dir.join(format!("{}.tmp", sanitize(&self.open.name)));
+        let mut f = File::create(&tmp)?;
+        write_frame_with(&mut f, &JournalRecord::Open(self.open.clone()).to_json(), &self.cfg)?;
+        for (i, e) in self.settled_outcomes.iter().enumerate() {
+            let rec = JournalRecord::Outcome {
+                index: i as u64,
+                outcome: e.outcome.clone(),
+                rng_draws: e.rng_draws,
+            };
+            write_frame_with(&mut f, &rec.to_json(), &self.cfg)?;
+        }
+        f.sync_all()?;
+        drop(f);
+        fs::rename(&tmp, &self.snapshot)?;
+        sync_dir(&self.dir);
+        self.counters.snapshots_written += 1;
+        self.counters.fsyncs += 1;
+        self.last_snapshot_at = self.settled;
+        if rotate {
+            let jtmp = self.dir.join(format!("{}.jtmp", sanitize(&self.open.name)));
+            let mut jf = File::create(&jtmp)?;
+            let head = JournalRecord::Open(self.open.clone());
+            let base = JournalRecord::Base { settled: self.settled };
+            let mut bytes = write_frame_with(&mut jf, &head.to_json(), &self.cfg)?;
+            bytes += write_frame_with(&mut jf, &base.to_json(), &self.cfg)?;
+            jf.sync_all()?;
+            drop(jf);
+            fs::rename(&jtmp, &self.path)?;
+            sync_dir(&self.dir);
+            // the rename unlinked the inode our append handle points at —
+            // reopen, or every later append would land in the void
+            self.file = OpenOptions::new().append(true).open(&self.path)?;
+            self.counters.records_appended += 2;
+            self.counters.bytes_appended += bytes;
+            self.counters.fsyncs += 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::StudyId;
+    use crate::objectives::Evaluation;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lazygp_journal_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn demo_open(name: &str) -> OpenInfo {
+        OpenInfo {
+            format: JOURNAL_FORMAT,
+            study: 3,
+            name: name.into(),
+            objective: "sphere".into(),
+            seed: u64::MAX - 17, // exercises the >2^53 string path
+            evals: 10,
+            slots: 2,
+            pending: "mean".into(),
+            max_retries: 1,
+        }
+    }
+
+    fn outcome(study: u64, id: u64, value: f64) -> TrialOutcome {
+        TrialOutcome {
+            trial: Trial {
+                id,
+                study: StudyId(study),
+                round: id,
+                x: vec![0.25 * id as f64, -1.0 / 3.0],
+                attempt: 0,
+            },
+            worker_id: 0,
+            result: Ok(Evaluation { value, sim_cost_s: 1.5 }),
+            worker_seconds: 0.001,
+            sim_cost_s: 1.5,
+        }
+    }
+
+    #[test]
+    fn records_roundtrip_through_json() {
+        let recs = vec![
+            JournalRecord::Open(demo_open("rt")),
+            JournalRecord::Dispatch(outcome(3, 7, 0.0).trial),
+            JournalRecord::Outcome {
+                index: 4,
+                outcome: outcome(3, 7, -0.125),
+                rng_draws: u64::MAX - 3,
+            },
+            JournalRecord::Retract { count: 2 },
+            JournalRecord::Finish,
+            JournalRecord::Base { settled: 9 },
+        ];
+        for r in recs {
+            let back =
+                JournalRecord::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(back.kind(), r.kind());
+            match (&r, &back) {
+                (JournalRecord::Open(a), JournalRecord::Open(b)) => assert_eq!(a, b),
+                (
+                    JournalRecord::Outcome { index: ia, outcome: oa, rng_draws: da },
+                    JournalRecord::Outcome { index: ib, outcome: ob, rng_draws: db },
+                ) => {
+                    assert_eq!((ia, da), (ib, db));
+                    assert_eq!(oa.trial, ob.trial);
+                    assert_eq!(
+                        oa.result.as_ref().unwrap().value.to_bits(),
+                        ob.result.as_ref().unwrap().value.to_bits()
+                    );
+                }
+                (JournalRecord::Retract { count: a }, JournalRecord::Retract { count: b }) => {
+                    assert_eq!(a, b)
+                }
+                (JournalRecord::Base { settled: a }, JournalRecord::Base { settled: b }) => {
+                    assert_eq!(a, b)
+                }
+                _ => {}
+            }
+        }
+        assert!(JournalRecord::from_json(&Json::parse(r#"{"type":"wat"}"#).unwrap())
+            .is_err_and(|e| e.is_journal()));
+    }
+
+    #[test]
+    fn append_recover_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let mut j = StudyJournal::create(&dir, demo_open("a")).unwrap().with_snapshot_every(0);
+        for i in 0..5u64 {
+            let o = outcome(3, i, -(i as f64));
+            j.append_dispatch(&o.trial).unwrap();
+            assert_eq!(j.append_outcome(&o, 100 + i).unwrap(), i);
+        }
+        j.append_retract(2).unwrap();
+        assert!(j.counters().records_appended >= 11);
+        drop(j);
+        let r = recover(&dir, "a").unwrap().expect("journal exists");
+        assert_eq!(r.open, demo_open("a"));
+        assert_eq!(r.entries.len(), 5);
+        assert_eq!(r.dispatched, 5);
+        assert_eq!(r.retracted, 2);
+        assert!(!r.finished);
+        assert_eq!(r.torn_tail_bytes, 0);
+        for (i, e) in r.entries.iter().enumerate() {
+            assert_eq!(e.outcome.trial.id, i as u64);
+            assert_eq!(e.rng_draws, 100 + i as u64);
+        }
+        assert_eq!(r.gate_keys(), (0..5).map(|i| (3, i)).collect::<Vec<_>>());
+        assert_eq!(r.completed_ok(), 5);
+        assert!(!r.is_complete(), "5 of 10 evals is not complete");
+        // unknown study → None; empty file → None
+        assert!(recover(&dir, "nope").unwrap().is_none());
+        fs::write(journal_path(&dir, "empty"), b"").unwrap();
+        assert!(recover(&dir, "empty").unwrap().is_none());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_then_clean() {
+        let dir = tmp_dir("torn");
+        let mut j = StudyJournal::create(&dir, demo_open("t")).unwrap().with_snapshot_every(0);
+        for i in 0..4u64 {
+            j.append_outcome(&outcome(3, i, 0.5), i).unwrap();
+        }
+        drop(j);
+        let path = journal_path(&dir, "t");
+        let full = fs::read(&path).unwrap();
+        // chop mid-record: keep all but the last 3 bytes
+        fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let r = recover(&dir, "t").unwrap().unwrap();
+        assert_eq!(r.entries.len(), 3, "the torn fourth outcome is gone");
+        // repaired file length + discarded tail = the damaged file's length
+        assert_eq!(r.torn_tail_bytes as usize + fs::read(&path).unwrap().len(), full.len() - 3);
+        // the repair truncated the file: a second recovery sees no tear
+        let r2 = recover(&dir, "t").unwrap().unwrap();
+        assert_eq!(r2.torn_tail_bytes, 0);
+        assert_eq!(r2.entries.len(), 3);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn snapshot_rotation_preserves_replay_state() {
+        let dir = tmp_dir("rotate");
+        let mut j = StudyJournal::create(&dir, demo_open("s")).unwrap().with_snapshot_every(0);
+        for i in 0..6u64 {
+            j.append_outcome(&outcome(3, i, i as f64), 10 * i).unwrap();
+        }
+        j.write_snapshot(true).unwrap();
+        // the rotated journal keeps accepting appends through the reopened
+        // handle
+        for i in 6..9u64 {
+            j.append_outcome(&outcome(3, i, i as f64), 10 * i).unwrap();
+        }
+        assert_eq!(j.counters().snapshots_written, 1);
+        drop(j);
+        let r = recover(&dir, "s").unwrap().unwrap();
+        assert_eq!(r.snapshot_settled, 6);
+        assert_eq!(r.entries.len(), 9);
+        for (i, e) in r.entries.iter().enumerate() {
+            assert_eq!(e.outcome.trial.id, i as u64);
+            assert_eq!(e.rng_draws, 10 * i as u64);
+        }
+        // a `base` whose snapshot vanished is corruption, not a tear
+        fs::remove_file(snapshot_path(&dir, "s")).unwrap();
+        assert!(recover(&dir, "s").unwrap_err().is_journal());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn snapshot_cadence_counts_settles() {
+        let dir = tmp_dir("cadence");
+        let mut j = StudyJournal::create(&dir, demo_open("c")).unwrap().with_snapshot_every(3);
+        assert!(!j.snapshot_due());
+        for i in 0..3u64 {
+            j.append_outcome(&outcome(3, i, 0.0), i).unwrap();
+        }
+        assert!(j.snapshot_due());
+        j.write_snapshot(false).unwrap();
+        assert!(!j.snapshot_due(), "cadence resets at the snapshot");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

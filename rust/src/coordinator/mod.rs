@@ -38,6 +38,13 @@
 //!   surrogate augmented by *fantasy observations* for all in-flight
 //!   trials (constant liar / posterior mean / kriging believer), retracted
 //!   in `O(1)` via the packed factor's truncation when real results land.
+//! * [`journal`] — the durability layer: a per-study append-only journal
+//!   of dispatch/outcome/retract/lifecycle records (CRC32-framed through
+//!   the same codec the wire uses) plus compacting snapshots at the
+//!   consistent-state boundary, so a crashed leader resumes from disk
+//!   **bitwise-identically** to an uninterrupted run. Outcomes are fsynced
+//!   before the worker is ACKed ([`transport::LeaderMsg::Ack`]), which is
+//!   what lets workers drop their redelivery buffers.
 //! * [`service`] — the multi-study layer: [`service::StudyService`]
 //!   multiplexes many concurrent studies (each its own objective, seed and
 //!   [`AsyncBo`]) over **one** shared fleet, allocating trial slots with a
@@ -52,6 +59,7 @@
 //! [`AsyncBo::with_transport`] for anything implementing [`Transport`].
 
 pub mod async_leader;
+pub mod journal;
 pub mod leader;
 pub mod messages;
 pub mod service;
@@ -59,6 +67,10 @@ pub mod transport;
 pub mod worker;
 
 pub use async_leader::{AsyncBo, AsyncCoordinatorConfig, AsyncEvent, AsyncStats};
+pub use journal::{
+    journal_path, recover, snapshot_path, JournalRecord, OpenInfo, Recovery, ReplayEntry,
+    StudyJournal, JOURNAL_FORMAT,
+};
 pub use leader::{CoordinatorConfig, ParallelBo, RoundRecord};
 pub use messages::{StudyId, Trial, TrialError, TrialOutcome};
 pub use service::{

@@ -56,6 +56,7 @@ use crate::metrics::{AsyncTrace, StudyCounter};
 use crate::objectives;
 
 use super::async_leader::{AsyncBo, AsyncCoordinatorConfig};
+use super::journal::{recover, OpenInfo, ReplayEntry, StudyJournal, JOURNAL_FORMAT};
 use super::messages::{StudyId, Trial, TrialOutcome};
 use super::transport::{
     read_frame_with, write_frame_with, FrameConfig, RemoteEvalConfig, Transport, TransportStats,
@@ -95,6 +96,10 @@ pub struct StudySpec {
     pub sleep_scale: f64,
     /// per-study failure-injection probability pushed to workers
     pub fail_prob: f64,
+    /// directory for the study's durability journal; `None` runs without
+    /// persistence. An existing journal for this study name is resumed
+    /// (replayed bitwise), a missing one is created.
+    pub journal_dir: Option<std::path::PathBuf>,
 }
 
 impl StudySpec {
@@ -111,6 +116,7 @@ impl StudySpec {
             max_retries: 2,
             sleep_scale: 0.0,
             fail_prob: 0.0,
+            journal_dir: None,
         }
     }
 
@@ -136,6 +142,11 @@ impl StudySpec {
 
     pub fn with_priority(mut self, priority: u32) -> Self {
         self.priority = priority;
+        self
+    }
+
+    pub fn with_journal_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.journal_dir = Some(dir.into());
         self
     }
 }
@@ -404,6 +415,24 @@ impl Transport for StudyHandle {
         sched.studies.get(&self.study.0).map_or(0, |st| st.dispatched)
     }
 
+    /// Forward a journaled study's durability ACK to the shared fleet
+    /// (which routes it to the worker that delivered the outcome).
+    fn ack(&self, outcome: &TrialOutcome) {
+        let fleet = self.core.fleet.lock().expect("fleet poisoned");
+        if let Some(f) = fleet.as_deref() {
+            f.ack(outcome);
+        }
+    }
+
+    /// Forward the exactly-once preload (and the ACK-mode flip it
+    /// implies) to the shared fleet.
+    fn preload_gate(&self, keys: &[(u64, u64)]) {
+        let fleet = self.core.fleet.lock().expect("fleet poisoned");
+        if let Some(f) = fleet.as_deref() {
+            f.preload_gate(keys);
+        }
+    }
+
     fn stats(&self) -> TransportStats {
         let fleet = self.core.fleet.lock().expect("fleet poisoned");
         let mut stats = fleet.as_deref().map(|f| f.stats()).unwrap_or_default();
@@ -424,6 +453,37 @@ impl Transport for StudyHandle {
     }
 }
 
+/// Open a study's durability journal: resume (validating that the disk
+/// run and the spec describe the same study) when one exists, create
+/// otherwise.
+fn attach_journal(
+    dir: &std::path::Path,
+    open: OpenInfo,
+) -> crate::Result<(StudyJournal, Vec<ReplayEntry>)> {
+    if let Some(rec) = recover(dir, &open.name)? {
+        if rec.open.objective != open.objective
+            || rec.open.seed != open.seed
+            || rec.open.evals != open.evals
+        {
+            return Err(crate::Error::journal(format!(
+                "journal for `{}` records a different study (objective `{}`, seed {}, evals \
+                 {}; the spec says `{}`, {}, {})",
+                open.name,
+                rec.open.objective,
+                rec.open.seed,
+                rec.open.evals,
+                open.objective,
+                open.seed,
+                open.evals
+            )));
+        }
+        let journal = StudyJournal::resume(dir, &rec)?;
+        Ok((journal, rec.entries))
+    } else {
+        Ok((StudyJournal::create(dir, open)?, Vec::new()))
+    }
+}
+
 /// Body of a study's runner thread: drive an [`AsyncBo`] over the
 /// study's handle to completion, then publish the result.
 fn run_study(core: Arc<ServiceCore>, id: StudyId, spec: StudySpec, handle: StudyHandle) {
@@ -440,7 +500,36 @@ fn run_study(core: Arc<ServiceCore>, id: StudyId, spec: StudySpec, handle: Study
     };
     let name = spec.name.clone();
     let evals = spec.evals;
+    let open = OpenInfo {
+        format: JOURNAL_FORMAT,
+        study: id.0,
+        name: name.clone(),
+        objective: spec.objective.clone(),
+        seed: spec.bo.seed,
+        evals,
+        slots: spec.slots,
+        pending: spec.pending.name().into(),
+        max_retries: spec.max_retries,
+    };
+    let journal_dir = spec.journal_dir.clone();
     let mut bo = AsyncBo::with_transport(spec.bo, objective, Box::new(handle), config);
+    if let Some(dir) = journal_dir {
+        match attach_journal(&dir, open) {
+            Ok((journal, replay)) => bo = bo.with_journal(journal, replay),
+            Err(e) => {
+                // an unusable journal must not silently run unjournaled:
+                // publish an empty result and leave the disk state intact
+                eprintln!("study {id} (`{name}`): journal unusable, not running: {e}");
+                let trace = bo.trace(name);
+                let _ = bo.finish();
+                let mut sched = core.sched.lock().expect("scheduler poisoned");
+                if let Some(st) = sched.studies.get_mut(&id.0) {
+                    st.finished = Some(StudyResult { best: None, trace });
+                }
+                return;
+            }
+        }
+    }
     let best = bo.run_until_evals(evals).ok();
     let trace = bo.trace(name);
     let _ = bo.finish(); // closes the handle (study marked closed)
@@ -464,6 +553,9 @@ pub struct StudyService {
     /// study ids start at 1; 0 is [`StudyId::SOLO`], reserved for
     /// single-study transports that never register
     next_id: AtomicU64,
+    /// default journal directory applied to specs that carry none (how
+    /// `serve --journal-dir` journals control-plane-created studies)
+    journal_dir: Option<std::path::PathBuf>,
 }
 
 impl StudyService {
@@ -477,12 +569,23 @@ impl StudyService {
             }),
             runners: Mutex::new(HashMap::new()),
             next_id: AtomicU64::new(1),
+            journal_dir: None,
         }
+    }
+
+    /// Journal every study (that does not name its own directory) under
+    /// `dir`.
+    pub fn with_journal_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.journal_dir = Some(dir.into());
+        self
     }
 
     /// Launch a study: validates the spec, registers its evaluation
     /// config with every worker, and spawns its runner thread.
-    pub fn create_study(&self, spec: StudySpec) -> crate::Result<StudyId> {
+    pub fn create_study(&self, mut spec: StudySpec) -> crate::Result<StudyId> {
+        if spec.journal_dir.is_none() {
+            spec.journal_dir = self.journal_dir.clone();
+        }
         if objectives::by_name(&spec.objective).is_none() {
             return Err(crate::Error::msg(format!(
                 "unknown objective `{}` for study `{}`",

@@ -114,8 +114,10 @@ use crate::util::rng::Pcg64;
 /// reconnect handshakes (`Hello.resume`), heartbeats (`Ping`/`Pong`) and
 /// the negotiated frame policy in `Welcome`; version 3 added the `study`
 /// field on trials and the per-study [`LeaderMsg::Study`] registration
-/// frame.
-pub const PROTOCOL_VERSION: u64 = 3;
+/// frame; version 4 added durability ACKs — the `Welcome.acks` flag and
+/// the per-outcome [`LeaderMsg::Ack`] that lets workers drop delivered
+/// outcomes from their redelivery buffers once the leader journaled them.
+pub const PROTOCOL_VERSION: u64 = 4;
 
 /// Default upper bound on a single frame (a trial or outcome is ~hundreds
 /// of bytes; anything near this is corruption, fail fast). Configurable
@@ -164,6 +166,32 @@ pub trait Transport: Send {
     /// connected worker and replay it to late joiners.
     fn register_study(&self, _study: StudyId, _eval: RemoteEvalConfig) -> crate::Result<()> {
         Ok(())
+    }
+
+    /// Acknowledge a durably-recorded outcome back to the worker that
+    /// produced it, so it can drop the outcome from its redelivery buffer.
+    /// Called by a journaling coordinator *after* the outcome's journal
+    /// record is fsynced — never before, or a crash between ACK and fsync
+    /// would lose the outcome on both sides. Default is a no-op (the
+    /// in-process backend has no redelivery buffers).
+    fn ack(&self, _outcome: &TrialOutcome) {}
+
+    /// Seed the backend's exactly-once delivery gate with already-settled
+    /// `(study.0, trial_id)` pairs recovered from a journal, and switch the
+    /// backend into ACK mode (workers admitted from now on are told to
+    /// retain outcomes until ACKed). A journaling coordinator calls this
+    /// once at attach time — with an empty slice for a fresh study — so
+    /// redeliveries of pre-crash outcomes are dropped, not double-applied.
+    /// Default is a no-op.
+    fn preload_gate(&self, _keys: &[(u64, u64)]) {}
+
+    /// Tear the backend down *abruptly*, simulating a leader crash: no
+    /// Shutdown frames, no draining — workers are left mid-session exactly
+    /// as a process death would leave them. Defaults to a graceful
+    /// [`shutdown`](Transport::shutdown) for backends with no crash
+    /// semantics to simulate.
+    fn abort(self: Box<Self>) {
+        self.shutdown()
     }
 
     /// Concurrent trial slots currently available (workers × their
@@ -500,6 +528,11 @@ pub enum LeaderMsg {
         fail_prob: f64,
         seed: u64,
         net: NetPolicy,
+        /// the leader journals outcomes and will [`LeaderMsg::Ack`] each
+        /// one once durable; the worker must retain delivered outcomes for
+        /// redelivery until the matching Ack arrives. Decoding tolerates a
+        /// missing flag (pre-durability leaders) as `false`.
+        acks: bool,
     },
     /// Register (or update) a study's evaluation config on the worker:
     /// trials whose [`Trial::study`] matches use this objective and these
@@ -512,6 +545,10 @@ pub enum LeaderMsg {
     Dispatch(Trial),
     /// Heartbeat reply, echoing the Ping's sequence number.
     Pong { seq: u64 },
+    /// The outcome of `(study, trial)` is durable on the leader (journal
+    /// record fsynced): the worker drops it from its redelivery buffer.
+    /// Only sent when the `Welcome` advertised `acks`.
+    Ack { study: u64, trial: u64 },
     /// Stop immediately, abandoning in-flight trials (the leader only
     /// sends this at its own teardown, where results are discarded).
     Shutdown,
@@ -580,7 +617,15 @@ impl WorkerMsg {
 impl LeaderMsg {
     pub fn to_json(&self) -> Json {
         match self {
-            LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed, net } => {
+            LeaderMsg::Welcome {
+                worker_id,
+                objective,
+                sleep_scale,
+                fail_prob,
+                seed,
+                net,
+                acks,
+            } => {
                 Json::obj(vec![
                     ("type", Json::Str("welcome".into())),
                     ("worker_id", Json::Num(*worker_id as f64)),
@@ -592,6 +637,7 @@ impl LeaderMsg {
                     ("heartbeat_deadline_s", Json::Num(net.heartbeat_deadline_s)),
                     ("max_frame", Json::Num(net.max_frame_bytes as f64)),
                     ("checksum", Json::Bool(net.checksum)),
+                    ("acks", Json::Bool(*acks)),
                 ])
             }
             LeaderMsg::Study { study, eval } => Json::obj(vec![
@@ -608,6 +654,11 @@ impl LeaderMsg {
             LeaderMsg::Pong { seq } => {
                 Json::obj(vec![("type", Json::Str("pong".into())), ("seq", Json::Num(*seq as f64))])
             }
+            LeaderMsg::Ack { study, trial } => Json::obj(vec![
+                ("type", Json::Str("ack".into())),
+                ("study", Json::Num(*study as f64)),
+                ("trial", Json::Num(*trial as f64)),
+            ]),
             LeaderMsg::Shutdown => Json::obj(vec![("type", Json::Str("shutdown".into()))]),
         }
     }
@@ -655,6 +706,9 @@ impl LeaderMsg {
                         .and_then(Json::as_bool)
                         .ok_or_else(|| crate::Error::protocol("welcome without checksum flag"))?,
                 },
+                // tolerate a missing flag: a pre-durability leader simply
+                // never ACKs, so the worker must not retain outcomes
+                acks: j.get("acks").and_then(Json::as_bool).unwrap_or(false),
             }),
             Some("study") => Ok(LeaderMsg::Study {
                 study: j
@@ -692,6 +746,16 @@ impl LeaderMsg {
                     .get("seq")
                     .and_then(Json::as_u64)
                     .ok_or_else(|| crate::Error::protocol("pong without seq"))?,
+            }),
+            Some("ack") => Ok(LeaderMsg::Ack {
+                study: j
+                    .get("study")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| crate::Error::protocol("ack without study"))?,
+                trial: j
+                    .get("trial")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| crate::Error::protocol("ack without trial"))?,
             }),
             Some("shutdown") => Ok(LeaderMsg::Shutdown),
             other => Err(crate::Error::protocol(format!("unknown leader message type {other:?}"))),
@@ -865,6 +929,10 @@ struct Shared {
     next_conn_id: AtomicUsize,
     faults: FaultTotals,
     reader_handles: Mutex<Vec<JoinHandle<()>>>,
+    /// ACK mode: a journaling coordinator attached
+    /// ([`Transport::preload_gate`]), so Welcomes advertise `acks` and
+    /// workers retain outcomes until the leader confirms durability
+    acks: AtomicBool,
 }
 
 /// Per-study accounting; see [`StudyCounter`] for field meanings
@@ -954,6 +1022,7 @@ impl SocketPool {
             next_conn_id: AtomicUsize::new(0),
             faults: FaultTotals::default(),
             reader_handles: Mutex::new(Vec::new()),
+            acks: AtomicBool::new(false),
         });
         let acceptor = {
             let shared = Arc::clone(&shared);
@@ -1172,6 +1241,47 @@ impl Transport for SocketPool {
         Ok(())
     }
 
+    /// Confirm a durable outcome to the worker that delivered it. Routed
+    /// by `outcome.worker_id`, which [`deliver_outcome`] re-stamped with
+    /// the connection id. Best-effort: a dead or dying link just means the
+    /// worker redelivers later and the preloaded gate drops the duplicate.
+    fn ack(&self, outcome: &TrialOutcome) {
+        let conns = self.shared.conns.lock().expect("conns poisoned");
+        let Some(c) = conns
+            .iter()
+            .find(|c| c.id == outcome.worker_id && c.alive.load(Ordering::SeqCst))
+        else {
+            return;
+        };
+        let msg = LeaderMsg::Ack { study: outcome.trial.study.0, trial: outcome.trial.id };
+        let fc = self.shared.net.frame_config();
+        let written = {
+            let mut w = c.writer.lock().expect("writer poisoned");
+            write_frame_with(&mut *w, &msg.to_json(), &fc)
+        };
+        if let Ok(n) = written {
+            c.stats.bytes_tx.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Seed the exactly-once gate with journaled `(study, trial)` pairs
+    /// and flip the pool into ACK mode: every worker admitted from here on
+    /// is told (via `Welcome.acks`) to retain outcomes until ACKed.
+    /// Workers welcomed *before* the flip simply never retain — harmless,
+    /// since the gate still drops any duplicate they redeliver.
+    fn preload_gate(&self, keys: &[(u64, u64)]) {
+        {
+            let mut gate = self.shared.delivered.lock().expect("gate poisoned");
+            gate.extend(keys.iter().copied());
+        }
+        self.shared.acks.store(true, Ordering::SeqCst);
+    }
+
+    /// Crash simulation: [`SocketPool::abort`] — no Shutdown frames.
+    fn abort(self: Box<Self>) {
+        SocketPool::abort(*self)
+    }
+
     fn capacity(&self) -> usize {
         self.capacity_now()
     }
@@ -1309,6 +1419,7 @@ fn admit_worker(
         fail_prob: shared.eval.fail_prob,
         seed: shared.eval.seed,
         net: shared.net,
+        acks: shared.acks.load(Ordering::SeqCst),
     };
     let mut writer = stream;
     let welcome_bytes = write_frame_with(&mut writer, &welcome.to_json(), &hs)?;
@@ -1708,6 +1819,9 @@ pub fn run_worker_with(addr: &str, opts: WorkerOptions) -> crate::Result<WorkerS
     let mut objective_name: Option<String> = None;
     let mut resume: Option<u64> = None;
     let mut undelivered: Vec<TrialOutcome> = Vec::new();
+    // outcomes delivered to an ACKing (journaling) leader but not yet
+    // confirmed durable; re-offered on every session until the Ack lands
+    let mut unacked: Vec<TrialOutcome> = Vec::new();
     let mut failures: u32 = 0;
     let mut fatal: Option<crate::Error> = None;
     loop {
@@ -1732,6 +1846,7 @@ pub fn run_worker_with(addr: &str, opts: WorkerOptions) -> crate::Result<WorkerS
             &mut pool,
             &mut objective_name,
             &mut undelivered,
+            &mut unacked,
             &mut summary,
         ) {
             Ok(SessionEnd::Shutdown) => break,
@@ -1809,6 +1924,7 @@ fn worker_session(
     pool: &mut Option<WorkerPool>,
     objective_name: &mut Option<String>,
     undelivered: &mut Vec<TrialOutcome>,
+    unacked: &mut Vec<TrialOutcome>,
     summary: &mut WorkerSummary,
 ) -> crate::Result<SessionEnd> {
     stream.set_nodelay(true)?;
@@ -1824,7 +1940,7 @@ fn worker_session(
         &hs,
     )?;
     let (welcome, _) = read_frame_with(&mut reader, &hs)?;
-    let LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed, net } =
+    let LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed, net, acks } =
         LeaderMsg::from_json(&welcome)?
     else {
         return Err(crate::Error::protocol("leader did not start with a welcome message"));
@@ -1874,10 +1990,28 @@ fn worker_session(
         }
     }
 
+    // re-offer outcomes that were delivered but never ACKed as durable —
+    // the previous leader may have died before journaling them. They were
+    // already counted `evaluated`, so only `redelivered` moves, and they
+    // stay buffered until this leader's Ack lands (the delivery gate, which
+    // a journaling leader preloads from disk, drops any duplicates). A
+    // non-ACKing leader will never confirm them, so the buffer is released
+    // after the flush rather than grown forever.
+    for o in unacked.iter() {
+        match write_frame_with(&mut writer, &WorkerMsg::Outcome(o.clone()).to_json(), &fc) {
+            Ok(_) => summary.redelivered += 1,
+            Err(_) => return Ok(SessionEnd::Lost),
+        }
+    }
+    if !acks {
+        unacked.clear();
+    }
+
     // socket reader feeds the pump through a channel
     enum Inbound {
         Trial(Trial),
         Study(StudyId, RemoteEvalConfig),
+        Ack(u64, u64),
         Pong,
         Shutdown,
         Lost,
@@ -1893,6 +2027,11 @@ fn worker_session(
                 }
                 Ok(LeaderMsg::Study { study, eval }) => {
                     if in_tx.send(Inbound::Study(StudyId(study), eval)).is_err() {
+                        return;
+                    }
+                }
+                Ok(LeaderMsg::Ack { study, trial }) => {
+                    if in_tx.send(Inbound::Ack(study, trial)).is_err() {
                         return;
                     }
                 }
@@ -1945,6 +2084,10 @@ fn worker_session(
                         break 'pump;
                     }
                 }
+                Ok(Inbound::Ack(study, trial)) => {
+                    // durable on the leader's disk: the retention copy can go
+                    unacked.retain(|o| !(o.trial.study.0 == study && o.trial.id == trial));
+                }
                 Ok(Inbound::Pong) => {}
                 Ok(Inbound::Shutdown) => {
                     end = SessionEnd::Shutdown;
@@ -1976,6 +2119,10 @@ fn worker_session(
                 Ok(_) => {
                     last_tx = Instant::now();
                     summary.evaluated += 1;
+                    if acks {
+                        // keep a copy until the leader confirms it journaled
+                        unacked.push(outcome);
+                    }
                 }
                 Err(_) => {
                     undelivered.push(outcome);
@@ -2135,9 +2282,17 @@ mod tests {
             fail_prob: 0.25,
             seed: u64::MAX, // full range must survive the string encoding
             net,
+            acks: true,
         };
-        let LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed, net: back } =
-            LeaderMsg::from_json(&Json::parse(&welcome.to_json().to_string()).unwrap()).unwrap()
+        let LeaderMsg::Welcome {
+            worker_id,
+            objective,
+            sleep_scale,
+            fail_prob,
+            seed,
+            net: back,
+            acks,
+        } = LeaderMsg::from_json(&Json::parse(&welcome.to_json().to_string()).unwrap()).unwrap()
         else {
             panic!("wrong variant");
         };
@@ -2147,6 +2302,25 @@ mod tests {
         assert_eq!(fail_prob, 0.25);
         assert_eq!(seed, u64::MAX);
         assert_eq!(back, net);
+        assert!(acks);
+
+        // a version-3 Welcome (no `acks` key) decodes with acks disabled
+        let mut legacy = welcome.to_json();
+        if let Json::Obj(pairs) = &mut legacy {
+            pairs.retain(|(k, _)| k.as_str() != "acks");
+        }
+        let LeaderMsg::Welcome { acks, .. } = LeaderMsg::from_json(&legacy).unwrap() else {
+            panic!("wrong variant");
+        };
+        assert!(!acks);
+
+        let ack = LeaderMsg::Ack { study: 3, trial: 91 };
+        let LeaderMsg::Ack { study, trial } =
+            LeaderMsg::from_json(&Json::parse(&ack.to_json().to_string()).unwrap()).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        assert_eq!((study, trial), (3, 91));
 
         let ping = WorkerMsg::Ping { seq: 42 };
         let WorkerMsg::Ping { seq } =

@@ -14,6 +14,11 @@
 //!   observed zero live worker links for the configured deadline while
 //!   outcomes were still expected. Pre-hardening this wedged the leader
 //!   forever; now the coordinator surfaces it and the operator decides.
+//! * [`Error::Journal`] — a durability journal is unusable beyond the
+//!   torn-tail repairs recovery performs silently: a CRC-valid record with
+//!   a malformed schema, a replay that contradicts the live RNG stream, or
+//!   a snapshot/journal pair that disagree. Truncation damage never lands
+//!   here — it is healed by design; this variant means the bytes lie.
 
 use std::fmt;
 use std::time::Duration;
@@ -34,6 +39,11 @@ pub enum Error {
         /// giving up
         deadline: Duration,
     },
+    /// A durability journal or snapshot is semantically corrupt — not a
+    /// torn tail (those are truncated away during recovery) but bytes that
+    /// passed the CRC yet cannot be honored: malformed record schema,
+    /// replay/RNG divergence, snapshot–journal disagreement.
+    Journal(String),
 }
 
 impl Error {
@@ -56,6 +66,16 @@ impl Error {
     pub fn is_all_workers_lost(&self) -> bool {
         matches!(self, Error::AllWorkersLost { .. })
     }
+
+    /// Build a journal-corruption error.
+    pub fn journal(m: impl fmt::Display) -> Self {
+        Error::Journal(m.to_string())
+    }
+
+    /// Is this a journal-corruption condition?
+    pub fn is_journal(&self) -> bool {
+        matches!(self, Error::Journal(_))
+    }
 }
 
 impl fmt::Display for Error {
@@ -69,6 +89,7 @@ impl fmt::Display for Error {
                  (workers rejoin with `lazygp worker --connect <leader>`)",
                 deadline.as_secs_f64()
             ),
+            Error::Journal(m) => write!(f, "journal corrupt: {m}"),
         }
     }
 }
@@ -161,6 +182,12 @@ mod tests {
         assert!(lost.is_all_workers_lost() && !lost.is_protocol());
         assert!(lost.to_string().contains("60.0s"), "{lost}");
 
+        let j = Error::journal("rng stream diverged at outcome 3");
+        assert!(j.is_journal() && !j.is_protocol() && !j.is_all_workers_lost());
+        assert!(j.to_string().contains("journal corrupt"));
+        assert!(j.to_string().contains("diverged"));
+
         assert!(!Error::msg("plain").is_protocol());
+        assert!(!Error::msg("plain").is_journal());
     }
 }

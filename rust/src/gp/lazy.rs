@@ -526,6 +526,30 @@ impl Surrogate for LazyGp {
     fn note_async_pressure(&mut self, in_flight: usize) {
         self.async_pressure = in_flight;
     }
+
+    /// Digest every bit the posterior depends on: all retained observations
+    /// (coordinates and targets), the fitted kernel hyper-parameters and
+    /// the normalization constants. Two `LazyGp`s with equal digests built
+    /// by the same code path hold bitwise-identical posteriors — this is
+    /// the quantity the durability suite compares between a crash-resumed
+    /// run and its uninterrupted golden twin.
+    fn state_digest(&self) -> u64 {
+        use crate::gp::digest::{mix_u64, START};
+        let mut h = START;
+        h = mix_u64(h, self.y.len() as u64);
+        for (i, &y) in self.y.iter().enumerate() {
+            for &v in self.cov.point(i) {
+                h = mix_u64(h, v.to_bits());
+            }
+            h = mix_u64(h, y.to_bits());
+        }
+        h = mix_u64(h, self.kernel.params.variance.to_bits());
+        h = mix_u64(h, self.kernel.params.length_scale.to_bits());
+        h = mix_u64(h, self.kernel.params.noise.to_bits());
+        h = mix_u64(h, self.mean_offset.to_bits());
+        h = mix_u64(h, self.y_scale.to_bits());
+        h
+    }
 }
 
 #[cfg(test)]
@@ -559,6 +583,30 @@ mod tests {
         assert!(
             (lazy.log_marginal_likelihood() - exact.log_marginal_likelihood()).abs() < 1e-7
         );
+    }
+
+    #[test]
+    fn state_digest_separates_and_reproduces() {
+        let data: Vec<(Vec<f64>, f64)> =
+            (0..12).map(|i| (vec![i as f64 / 5.0, -(i as f64)], (i as f64).sin())).collect();
+        let build = |data: &[(Vec<f64>, f64)]| {
+            let mut gp = LazyGp::paper_default();
+            for (x, y) in data {
+                gp.observe(x, *y);
+            }
+            gp
+        };
+        let a = build(&data);
+        let b = build(&data);
+        assert_eq!(a.state_digest(), b.state_digest(), "same history, same digest");
+        // one flipped target bit must change the digest
+        let mut tweaked = data.clone();
+        tweaked[7].1 = f64::from_bits(tweaked[7].1.to_bits() ^ 1);
+        assert_ne!(a.state_digest(), build(&tweaked).state_digest());
+        // order matters: the digest is a history of the factor, not a set
+        let mut swapped = data.clone();
+        swapped.swap(2, 9);
+        assert_ne!(a.state_digest(), build(&swapped).state_digest());
     }
 
     #[test]

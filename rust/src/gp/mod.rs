@@ -101,4 +101,41 @@ pub trait Surrogate: Send {
     /// the settled one. Default is a no-op; synchronous drivers never call
     /// it, so the classic schedule is unchanged.
     fn note_async_pressure(&mut self, _in_flight: usize) {}
+
+    /// Order-sensitive FNV-1a digest over the surrogate's observable state,
+    /// used by the durability tests to assert that a crash-resumed run
+    /// reconverged on the *bitwise* posterior of an uninterrupted one. The
+    /// default mixes only what the trait exposes (observation count and
+    /// incumbent bits); [`LazyGp`] overrides it to also fold in every
+    /// retained observation and the fitted kernel hyper-parameters.
+    fn state_digest(&self) -> u64 {
+        let mut h = digest::START;
+        h = digest::mix_u64(h, self.len() as u64);
+        h = digest::mix_u64(h, self.fantasies_active() as u64);
+        if let Some((x, y)) = self.incumbent() {
+            for &v in x {
+                h = digest::mix_u64(h, v.to_bits());
+            }
+            h = digest::mix_u64(h, y.to_bits());
+        }
+        h
+    }
+}
+
+/// FNV-1a mixing helpers shared by [`Surrogate::state_digest`]
+/// implementations — order-sensitive, so permuted observation sets hash
+/// differently.
+pub mod digest {
+    /// FNV-1a 64-bit offset basis.
+    pub const START: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    /// Fold one 64-bit word into the digest, byte by byte.
+    pub fn mix_u64(mut h: u64, v: u64) -> u64 {
+        for b in v.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(PRIME);
+        }
+        h
+    }
 }

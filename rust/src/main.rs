@@ -8,6 +8,8 @@
 //! lazygp worker  --connect 127.0.0.1:7077 [--threads 4]   # remote evaluator
 //! lazygp serve   --studies "objective=levy2,seed=1,evals=30;objective=sphere5,seed=2"
 //!                [--transport thread|tcp] [--control 127.0.0.1:7079]
+//!                [--journal-dir runs/journal]                # durable studies
+//! lazygp resume  --journal-dir runs/journal                  # finish interrupted studies
 //! lazygp list
 //! lazygp info    # PJRT platform + artifact buckets
 //! lazygp score   # XLA-vs-native scoring parity + throughput check
@@ -21,7 +23,7 @@ use lazygp::config::experiment::{ExperimentConfig, Preset};
 use lazygp::coordinator::transport::run_worker_with;
 use lazygp::coordinator::worker::WorkerConfig;
 use lazygp::coordinator::{
-    AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo, ReconnectConfig,
+    recover, AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo, ReconnectConfig,
     RemoteEvalConfig, SocketPool, SocketPoolOptions, StudyService, StudySpec, Transport,
     WorkerOptions, WorkerPool,
 };
@@ -145,7 +147,23 @@ fn app() -> App {
                     "per-study GP hot-path worker threads (0 = auto, 1 = serial)",
                     Some("0"),
                 )
-                .opt("out-dir", "write per-study trace CSVs + a study summary CSV here", None),
+                .opt("out-dir", "write per-study trace CSVs + a study summary CSV here", None)
+                .opt(
+                    "journal-dir",
+                    "append-only study journals + snapshots here (crash-resumable)",
+                    None,
+                ),
+        )
+        .command(
+            CommandSpec::new("resume", "finish interrupted journaled studies, bitwise")
+                .opt("journal-dir", "directory holding the *.journal files", None)
+                .opt("workers", "worker threads for the resumed fleet", Some("4"))
+                .opt(
+                    "gp-threads",
+                    "per-study GP hot-path worker threads (0 = auto, 1 = serial)",
+                    Some("0"),
+                )
+                .opt("out-dir", "write per-study trace CSVs here", None),
         )
         .command(CommandSpec::new("list", "list objectives and presets"))
         .command(CommandSpec::new("info", "PJRT platform and artifact buckets"))
@@ -171,6 +189,7 @@ fn main() {
         "parallel" => cmd_parallel(&parsed),
         "worker" => cmd_worker(&parsed),
         "serve" => cmd_serve(&parsed),
+        "resume" => cmd_resume(&parsed),
         "list" => cmd_list(),
         "info" => cmd_info(),
         "score" => cmd_score(&parsed),
@@ -518,7 +537,13 @@ fn cmd_serve(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
         studies.len(),
         workers
     );
-    let service = Arc::new(StudyService::new(fleet));
+    let mut service = StudyService::new(fleet);
+    if let Some(dir) = p.str("journal-dir") {
+        std::fs::create_dir_all(dir)?;
+        println!("journaling studies under {dir} (resume with `lazygp resume --journal-dir`)");
+        service = service.with_journal_dir(dir);
+    }
+    let service = Arc::new(service);
     let control = match &control_addr {
         Some(addr) => {
             let server = Arc::clone(&service).serve_control(addr.as_str())?;
@@ -572,6 +597,108 @@ fn cmd_serve(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
         println!("study summary written to {path}");
     }
     drop(control);
+    if let Ok(service) = Arc::try_unwrap(service) {
+        service.shutdown()?;
+    }
+    Ok(())
+}
+
+/// Rebuild and finish every incomplete journaled study found under
+/// `--journal-dir`. Each study's spec is reconstructed from its `open`
+/// record, its settled outcomes replay from the journal (snapshot + tail),
+/// and the remaining budget runs live — the finished run is bitwise
+/// identical to one that never crashed.
+fn cmd_resume(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
+    let dir = p
+        .str("journal-dir")
+        .ok_or_else(|| lazygp::err!("`lazygp resume` needs --journal-dir <dir>"))?;
+    let dir_path = std::path::PathBuf::from(dir);
+    let par = lazygp::util::parallel::Parallelism::from_threads_flag(p.usize("gp-threads")?);
+    // deterministic order: sorted journal file stems (study ids are
+    // assigned by creation order, so a re-resume lines up the same way)
+    let mut names: Vec<String> = Vec::new();
+    for entry in std::fs::read_dir(&dir_path)? {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("journal") {
+            if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                names.push(stem.to_string());
+            }
+        }
+    }
+    names.sort();
+    let mut specs = Vec::new();
+    for name in &names {
+        let Some(rec) = recover(&dir_path, name)? else { continue };
+        if rec.is_complete() {
+            println!(
+                "study `{}` already complete ({} evals) — skipping",
+                rec.open.name, rec.open.evals
+            );
+            continue;
+        }
+        println!(
+            "study `{}`: {} of {} eval(s) journaled{} — resuming",
+            rec.open.name,
+            rec.completed_ok(),
+            rec.open.evals,
+            if rec.torn_tail_bytes > 0 {
+                format!(" ({} torn tail byte(s) discarded)", rec.torn_tail_bytes)
+            } else {
+                String::new()
+            }
+        );
+        let pending = PendingStrategy::from_name(&rec.open.pending).ok_or_else(|| {
+            lazygp::err!("journal `{name}`: unknown pending strategy `{}`", rec.open.pending)
+        })?;
+        if objectives::by_name(&rec.open.objective).is_none() {
+            lazygp::bail!("journal `{name}`: unknown objective `{}`", rec.open.objective);
+        }
+        let mut spec = StudySpec::new(rec.open.name.clone(), rec.open.objective.clone())
+            .with_bo(BoConfig::lazy().with_seed(rec.open.seed).with_parallelism(par))
+            .with_evals(rec.open.evals)
+            .with_slots(rec.open.slots)
+            .with_journal_dir(&dir_path);
+        spec.pending = pending;
+        spec.max_retries = rec.open.max_retries;
+        specs.push(spec);
+    }
+    if specs.is_empty() {
+        println!("nothing to resume under {dir}");
+        return Ok(());
+    }
+    let workers = p.usize("workers")?;
+    // every journaled objective is registered per study; the fleet base
+    // objective is only a fallback and never receives trials
+    let base: Arc<dyn objectives::Objective> =
+        Arc::from(objectives::by_name(&specs[0].objective).unwrap());
+    let fleet: Box<dyn Transport> = Box::new(WorkerPool::spawn(
+        base,
+        WorkerConfig { workers, queue_cap: (workers * 2).max(4), ..WorkerConfig::default() },
+    ));
+    let service = Arc::new(StudyService::new(fleet));
+    let mut launched = Vec::new();
+    for spec in specs {
+        let label = spec.name.clone();
+        let id = service.create_study(spec)?;
+        launched.push((id, label));
+    }
+    let mut results = Vec::new();
+    for (id, label) in launched {
+        let result = service.wait(id)?;
+        match &result.best {
+            Some(b) => println!("study {id} `{label}` resumed to completion: best {:.6}", b.value),
+            None => println!("study {id} `{label}` finished: no successful evaluations"),
+        }
+        results.push((label, result));
+    }
+    if let Some(out) = p.str("out-dir") {
+        std::fs::create_dir_all(out)?;
+        for (label, result) in &results {
+            let path = format!("{out}/{label}.csv");
+            result.trace.write_csv(&path)?;
+            println!("trace written to {path}");
+        }
+    }
     if let Ok(service) = Arc::try_unwrap(service) {
         service.shutdown()?;
     }

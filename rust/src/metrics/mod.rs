@@ -9,5 +9,7 @@ pub mod parallel;
 pub mod trace;
 
 pub use csv::CsvWriter;
-pub use parallel::{AsyncTrace, AsyncTracePoint, FaultCounters, StudyCounter, TransportCounter};
+pub use parallel::{
+    AsyncTrace, AsyncTracePoint, FaultCounters, JournalCounters, StudyCounter, TransportCounter,
+};
 pub use trace::{RunSummary, Trace, TracePoint};

@@ -110,6 +110,47 @@ impl FaultCounters {
     }
 }
 
+/// Durability-journal counters of one study's run: append/replay volume,
+/// fsync pressure and the torn-tail repairs recovery performed. All zero
+/// when the study ran without a journal attached.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JournalCounters {
+    /// records appended (dispatch, outcome, retract, lifecycle)
+    pub records_appended: u64,
+    /// framed bytes appended to the journal file
+    pub bytes_appended: u64,
+    /// fsyncs issued (one per durable outcome, plus lifecycle barriers)
+    pub fsyncs: u64,
+    /// compacting snapshots written at the consistent-state boundary
+    pub snapshots_written: u64,
+    /// records re-applied from disk during replay-on-restart
+    pub records_replayed: u64,
+    /// bytes of torn tail truncated away during recovery
+    pub torn_tail_bytes: u64,
+}
+
+impl JournalCounters {
+    /// Any journal activity at all?
+    pub fn any(&self) -> bool {
+        *self != JournalCounters::default()
+    }
+
+    /// One human-readable counter line (rendered only when [`any`]).
+    ///
+    /// [`any`]: JournalCounters::any
+    pub fn render(&self) -> String {
+        format!(
+            "appended {} ({} B) | fsyncs {} | snapshots {} | replayed {} | torn tail {} B",
+            self.records_appended,
+            self.bytes_appended,
+            self.fsyncs,
+            self.snapshots_written,
+            self.records_replayed,
+            self.torn_tail_bytes,
+        )
+    }
+}
+
 /// One async-coordinator event, flattened for CSV.
 #[derive(Debug, Clone)]
 pub struct AsyncTracePoint {
@@ -145,6 +186,8 @@ pub struct AsyncTrace {
     /// per-study counters when the backend multiplexed registered studies;
     /// empty for solo runs (which never register a study)
     pub studies: Vec<StudyCounter>,
+    /// durability-journal counters; all zero when no journal was attached
+    pub journal: JournalCounters,
 }
 
 impl AsyncTrace {
@@ -275,6 +318,9 @@ impl AsyncTrace {
         if !self.studies.is_empty() {
             line.push_str(&format!("  studies {}", self.studies.len()));
         }
+        if self.journal.any() {
+            line.push_str(&format!("  journal: {}", self.journal.render()));
+        }
         line
     }
 }
@@ -337,6 +383,7 @@ mod tests {
                     ..Default::default()
                 },
             ],
+            journal: JournalCounters::default(),
         }
     }
 
@@ -393,6 +440,27 @@ mod tests {
         let mut solo = demo();
         solo.studies.clear();
         assert!(!solo.render().contains("studies"));
+    }
+
+    #[test]
+    fn journal_counters_render_and_any() {
+        assert!(!JournalCounters::default().any());
+        // a journal-less run renders no journal suffix at all
+        assert!(!demo().render().contains("journal:"));
+        let mut t = demo();
+        t.journal = JournalCounters {
+            records_appended: 12,
+            bytes_appended: 2048,
+            fsyncs: 9,
+            snapshots_written: 1,
+            records_replayed: 4,
+            torn_tail_bytes: 17,
+        };
+        assert!(t.journal.any());
+        let line = t.render();
+        assert!(line.contains("appended 12 (2048 B)"), "{line}");
+        assert!(line.contains("snapshots 1"), "{line}");
+        assert!(line.contains("torn tail 17 B"), "{line}");
     }
 
     #[test]

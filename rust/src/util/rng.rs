@@ -16,6 +16,11 @@
 pub struct Pcg64 {
     state: u128,
     inc: u128,
+    /// outputs produced so far — every derived draw (`next_f64`, `below`,
+    /// `normal`, …) funnels through [`Pcg64::next_u64`], so this single
+    /// counter positions the stream exactly. The durability journal
+    /// records it per outcome as a replay-divergence tripwire.
+    draws: u64,
 }
 
 const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
@@ -31,7 +36,7 @@ impl Pcg64 {
     /// give each coordinator worker its own generator.
     pub fn with_stream(seed: u64, stream: u64) -> Self {
         let inc = ((stream as u128) << 1) | 1;
-        let mut rng = Self { state: 0, inc };
+        let mut rng = Self { state: 0, inc, draws: 0 };
         rng.step();
         rng.state = rng.state.wrapping_add(seed as u128);
         rng.step();
@@ -47,9 +52,18 @@ impl Pcg64 {
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.step();
+        self.draws += 1;
         let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
         let rot = (self.state >> 122) as u32;
         xored.rotate_right(rot)
+    }
+
+    /// How many 64-bit outputs this generator has produced (rejection
+    /// retries included — the count is a stream *position*, not a count of
+    /// values handed to callers).
+    #[inline]
+    pub fn draws(&self) -> u64 {
+        self.draws
     }
 
     /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
@@ -238,6 +252,26 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn draw_count_tracks_stream_position() {
+        let mut a = Pcg64::new(29);
+        assert_eq!(a.draws(), 0, "construction consumes no outputs");
+        a.next_u64();
+        assert_eq!(a.draws(), 1);
+        // derived draws may consume several outputs (rejection loops); two
+        // generators that report equal counts must be at identical states
+        let _ = a.normal();
+        let _ = a.below(7);
+        let mut b = Pcg64::new(29);
+        while b.draws() < a.draws() {
+            b.next_u64();
+        }
+        assert_eq!(a.next_u64(), b.next_u64());
+        // a clone carries the position with it
+        let c = a.clone();
+        assert_eq!(c.draws(), a.draws());
     }
 
     #[test]

@@ -1,0 +1,679 @@
+//! Crash-replay durability suite: kill a journaled leader at arbitrary
+//! points — torn-tail truncation of the on-disk journal, or a live
+//! `SocketPool::abort()` mid-study over real loopback workers — restore
+//! from disk, and require the resumed run to be **bitwise identical** to
+//! one that never crashed: same trial ids, same best-so-far trace bits,
+//! same final posterior digest, same RNG position. Plus property tests
+//! that recovery is prefix-robust under any truncation/corruption and
+//! that snapshot+tail replay equals full-journal replay, and a
+//! regression test that fantasy retractions are journaled before
+//! `AllWorkersLost` surfaces.
+//!
+//! `virtual_done_s` embeds real leader seconds and is deliberately never
+//! compared here. CI runs this file in its own `durability` job with
+//! `--test-threads=1` and a hard timeout; `LAZYGP_DURABILITY_DIR` pins
+//! the scratch directory so failed runs can upload their journals.
+
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lazygp::acquisition::optim::OptimConfig;
+use lazygp::bo::driver::{Best, BoConfig, InitDesign, PendingStrategy};
+use lazygp::config::json::Json;
+use lazygp::coordinator::transport::{
+    read_frame, read_frame_with, run_worker, run_worker_with, write_frame, write_frame_with,
+    FrameConfig, LeaderMsg, ReconnectConfig, Transport, WorkerMsg, WorkerOptions, PROTOCOL_VERSION,
+};
+use lazygp::coordinator::worker::{WorkerConfig, WorkerPool};
+use lazygp::coordinator::{
+    journal_path, recover, snapshot_path, AsyncBo, AsyncCoordinatorConfig, OpenInfo,
+    RemoteEvalConfig, ReplayEntry, SocketPool, StudyId, StudyJournal, StudyResult, StudyService,
+    StudySpec, Trial, TrialError, TrialOutcome, JOURNAL_FORMAT,
+};
+use lazygp::gp::Surrogate;
+use lazygp::objectives::{self, Evaluation};
+use lazygp::util::proptest as pt;
+use lazygp::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// harness helpers
+// ---------------------------------------------------------------------------
+
+fn fast_bo(seed: u64) -> BoConfig {
+    BoConfig::lazy()
+        .with_seed(seed)
+        .with_init(InitDesign::Lhs(5))
+        .with_optim(OptimConfig { candidates: 96, restarts: 3, nm_iters: 20, nm_scale: 0.08 })
+}
+
+fn async_cfg(seed: u64) -> AsyncCoordinatorConfig {
+    AsyncCoordinatorConfig {
+        workers: 1,
+        pending: PendingStrategy::ConstantLiarMin,
+        sleep_scale: 0.0,
+        fail_prob: 0.0,
+        max_retries: 2,
+        seed,
+    }
+}
+
+/// Scratch root for journals; CI pins it via `LAZYGP_DURABILITY_DIR` so
+/// the artifacts of a failed run can be uploaded.
+fn scratch_root() -> PathBuf {
+    match std::env::var("LAZYGP_DURABILITY_DIR") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d),
+        _ => std::env::temp_dir().join("lazygp_durability"),
+    }
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = scratch_root().join(format!("{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+fn open_info(name: &str, seed: u64, evals: usize) -> OpenInfo {
+    OpenInfo {
+        format: JOURNAL_FORMAT,
+        study: 0,
+        name: name.into(),
+        objective: "sphere5".into(),
+        seed,
+        evals,
+        slots: 1,
+        pending: "cl-min".into(),
+        max_retries: 2,
+    }
+}
+
+/// Create-or-resume a solo journal exactly the way a restarted leader
+/// would: recover the intact prefix, reattach, keep the replay tail.
+fn open_or_resume(
+    dir: &Path,
+    name: &str,
+    seed: u64,
+    evals: usize,
+    every: u64,
+) -> (StudyJournal, Vec<ReplayEntry>) {
+    match recover(dir, name).expect("recover never fails on a repairable journal") {
+        Some(rec) => {
+            let entries = rec.entries.clone();
+            let j = StudyJournal::resume(dir, &rec).expect("reattach").with_snapshot_every(every);
+            (j, entries)
+        }
+        None => {
+            let j = StudyJournal::create(dir, open_info(name, seed, evals))
+                .expect("create journal")
+                .with_snapshot_every(every);
+            (j, Vec::new())
+        }
+    }
+}
+
+/// Everything a run must reproduce bitwise after a crash (deliberately
+/// excludes `virtual_done_s`, which embeds real leader seconds).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct RunFacts {
+    trial_ids: Vec<u64>,
+    best_trace_bits: Vec<u64>,
+    best_value_bits: u64,
+    best_x_bits: Vec<u64>,
+    posterior_digest: u64,
+    rng_draws: u64,
+}
+
+fn facts(abo: &AsyncBo, best: &Best) -> RunFacts {
+    RunFacts {
+        trial_ids: abo.events().iter().map(|e| e.trial_id).collect(),
+        best_trace_bits: abo.events().iter().map(|e| e.best.to_bits()).collect(),
+        best_value_bits: best.value.to_bits(),
+        best_x_bits: best.x.iter().map(|v| v.to_bits()).collect(),
+        posterior_digest: abo.driver().surrogate().state_digest(),
+        rng_draws: abo.driver().rng().draws(),
+    }
+}
+
+/// Thread-fleet solo leader, journaled iff `journal_dir` is given;
+/// resumes an existing journal in the directory automatically.
+fn solo_run(journal_dir: Option<&Path>, seed: u64, evals: usize, every: u64) -> RunFacts {
+    let obj: Arc<dyn objectives::Objective> = Arc::from(objectives::by_name("sphere5").unwrap());
+    let pool = WorkerPool::spawn(
+        Arc::clone(&obj),
+        WorkerConfig { workers: 1, seed: seed ^ 0x9e37_79b9_7f4a_7c15, ..WorkerConfig::default() },
+    );
+    let mut abo = AsyncBo::with_transport(fast_bo(seed), obj, Box::new(pool), async_cfg(seed));
+    if let Some(dir) = journal_dir {
+        let (journal, replay) = open_or_resume(dir, "solo", seed, evals, every);
+        abo = abo.with_journal(journal, replay);
+    }
+    let best = abo.run_until_evals(evals).expect("run completes");
+    let f = facts(&abo, &best);
+    abo.finish();
+    f
+}
+
+/// Plant a (possibly truncated) journal copy and the golden snapshot in
+/// a fresh directory, as left behind by a crash.
+fn plant(dir: &Path, name: &str, journal: &[u8], snapshot: Option<&[u8]>) {
+    std::fs::write(journal_path(dir, name), journal).expect("plant journal");
+    if let Some(s) = snapshot {
+        std::fs::write(snapshot_path(dir, name), s).expect("plant snapshot");
+    }
+}
+
+/// Offsets of every complete-frame boundary in `bytes` (0 included).
+fn frame_boundaries(bytes: &[u8]) -> Vec<usize> {
+    let cfg = FrameConfig { checksum: true, ..FrameConfig::default() };
+    let mut offsets = vec![0usize];
+    let mut slice: &[u8] = bytes;
+    while !slice.is_empty() {
+        if read_frame_with(&mut slice, &cfg).is_err() {
+            break;
+        }
+        offsets.push(bytes.len() - slice.len());
+    }
+    offsets
+}
+
+// ---------------------------------------------------------------------------
+// tentpole: crash + restore is bitwise-identical (solo, thread fleet)
+// ---------------------------------------------------------------------------
+
+/// Truncate the golden journal at every record boundary and at random
+/// mid-record byte offsets — each prefix is exactly what some crash
+/// instant leaves on disk — then resume and demand bitwise equality
+/// with the uninterrupted run. Also checks that journaling itself does
+/// not perturb the run (journaled golden == unjournaled run).
+#[test]
+fn solo_resume_is_bitwise_identical_after_any_truncation() {
+    const SEED: u64 = 41;
+    const EVALS: usize = 11;
+    let golden_dir = fresh_dir("solo_golden");
+    let golden = solo_run(Some(&golden_dir), SEED, EVALS, 3);
+
+    let plain = solo_run(None, SEED, EVALS, 3);
+    assert_eq!(golden, plain, "journaling must not perturb the decision stream");
+
+    let journal = std::fs::read(journal_path(&golden_dir, "solo")).expect("golden journal");
+    let snapshot = std::fs::read(snapshot_path(&golden_dir, "solo")).ok();
+
+    let mut cuts = frame_boundaries(&journal);
+    let mut rng = Pcg64::new(0xD00D);
+    for _ in 0..5 {
+        cuts.push((rng.next_u64() % journal.len() as u64) as usize); // mid-record tears
+    }
+    for (i, &cut) in cuts.iter().enumerate() {
+        let dir = fresh_dir(&format!("solo_cut_{i}"));
+        plant(&dir, "solo", &journal[..cut], snapshot.as_deref());
+        let resumed = solo_run(Some(&dir), SEED, EVALS, 3);
+        assert_eq!(resumed, golden, "resume after a crash at journal byte {cut} diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tentpole: SocketPool::abort() kill + restore over real TCP workers
+// ---------------------------------------------------------------------------
+
+/// Loopback fleet of one real worker daemon with fast, finite reconnect
+/// (so workers orphaned by an abort exit instead of spinning).
+fn tcp_fleet(seed: u64) -> (SocketPool, std::thread::JoinHandle<()>) {
+    let pool = SocketPool::listen(
+        "127.0.0.1:0",
+        RemoteEvalConfig { objective: "sphere5".into(), sleep_scale: 0.0, fail_prob: 0.0, seed },
+    )
+    .expect("bind loopback");
+    // flip ACK mode before the worker is admitted, so its Welcome already
+    // advertises it and the daemon retains outcomes until ACKed
+    pool.preload_gate(&[]);
+    let addr = pool.local_addr().to_string();
+    let worker = std::thread::spawn(move || {
+        let opts = WorkerOptions {
+            threads: 1,
+            reconnect: ReconnectConfig {
+                max_attempts: 4,
+                base_backoff: Duration::from_millis(25),
+                max_backoff: Duration::from_millis(200),
+                jitter_seed: 7,
+            },
+        };
+        let _ = run_worker_with(&addr, opts); // Err is fine after an abort
+    });
+    pool.wait_for_capacity(1, Duration::from_secs(10)).expect("worker connects");
+    (pool, worker)
+}
+
+/// One journaled leader over a fresh TCP fleet: run to `stop` evals,
+/// then either crash (`abort`) or finish cleanly and report facts.
+fn tcp_run(dir: &Path, seed: u64, evals: usize, stop: usize, crash: bool) -> Option<RunFacts> {
+    let (pool, worker) = tcp_fleet(seed);
+    let obj: Arc<dyn objectives::Objective> = Arc::from(objectives::by_name("sphere5").unwrap());
+    let (journal, replay) = open_or_resume(dir, "tcp", seed, evals, 3);
+    let mut abo = AsyncBo::with_transport(fast_bo(seed), obj, Box::new(pool), async_cfg(seed))
+        .with_journal(journal, replay);
+    let best = abo.run_until_evals(stop).expect("run reaches the stop point");
+    let f = facts(&abo, &best);
+    if crash {
+        abo.abort(); // no teardown courtesy: links die, journal handle drops
+    } else {
+        abo.finish();
+    }
+    worker.join().unwrap();
+    if crash {
+        None
+    } else {
+        Some(f)
+    }
+}
+
+/// Kill the leader with `SocketPool::abort()` at randomized eval counts
+/// mid-study — links die abruptly, the journal handle drops with no
+/// teardown courtesy — then restore onto a brand-new fleet and demand
+/// the completed run match the never-crashed golden bitwise.
+#[test]
+fn tcp_abort_kill_then_resume_matches_uninterrupted_run() {
+    const SEED: u64 = 43;
+    const EVALS: usize = 11;
+    let golden_dir = fresh_dir("abort_golden");
+    let golden = tcp_run(&golden_dir, SEED, EVALS, EVALS, false).unwrap();
+
+    let mut rng = Pcg64::new(0xFEED);
+    for i in 0..3 {
+        let stop = 6 + (rng.next_u64() % (EVALS as u64 - 6)) as usize;
+        let dir = fresh_dir(&format!("abort_{i}"));
+        assert!(tcp_run(&dir, SEED, EVALS, stop, true).is_none());
+        let rec = recover(&dir, "tcp").unwrap().expect("crash left a journal");
+        assert!(!rec.finished, "a killed study must not carry a finish record");
+        assert_eq!(rec.entries.len(), stop, "every settled outcome survived the abort");
+        let resumed = tcp_run(&dir, SEED, EVALS, EVALS, false).unwrap();
+        assert_eq!(resumed, golden, "resume after abort at {stop} evals diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tentpole: two concurrent studies on one fleet, crash + restore
+// ---------------------------------------------------------------------------
+
+fn service_pair(dir: &Path, evals: usize) -> (StudyResult, StudyResult) {
+    let base: Arc<dyn objectives::Objective> = Arc::from(objectives::by_name("sphere5").unwrap());
+    let fleet = WorkerPool::spawn(base, WorkerConfig { workers: 2, ..WorkerConfig::default() });
+    let service = StudyService::new(Box::new(fleet)).with_journal_dir(dir);
+    let a = service
+        .create_study(StudySpec::new("svc-a", "sphere5").with_bo(fast_bo(11)).with_evals(evals))
+        .unwrap();
+    let b = service
+        .create_study(StudySpec::new("svc-b", "levy2").with_bo(fast_bo(23)).with_evals(evals))
+        .unwrap();
+    let ra = service.wait(a).expect("study a completes");
+    let rb = service.wait(b).expect("study b completes");
+    service.shutdown().unwrap();
+    (ra, rb)
+}
+
+fn assert_study_match(resumed: &StudyResult, golden: &StudyResult, tag: &str) {
+    let rb = resumed.best.as_ref().expect("resumed study found a best");
+    let gb = golden.best.as_ref().expect("golden study found a best");
+    assert_eq!(rb.value.to_bits(), gb.value.to_bits(), "{tag}: best value drifted");
+    assert_eq!(rb.x.len(), gb.x.len());
+    for (r, g) in rb.x.iter().zip(&gb.x) {
+        assert_eq!(r.to_bits(), g.to_bits(), "{tag}: best x drifted");
+    }
+    assert_eq!(resumed.trace.points.len(), golden.trace.points.len(), "{tag}: event count");
+    for (rp, gp) in resumed.trace.points.iter().zip(&golden.trace.points) {
+        assert_eq!(rp.trial_id, gp.trial_id, "{tag}: trial order drifted");
+        assert_eq!(rp.best.to_bits(), gp.best.to_bits(), "{tag}: best-so-far trace drifted");
+        // virtual_done_s is NOT compared: it embeds real leader seconds
+    }
+}
+
+/// Two concurrent studies share one fleet and one journal directory;
+/// both journals are truncated at independent random crash points, and
+/// a fresh `StudyService` must restore both to bitwise equality with
+/// the uninterrupted golden pair.
+#[test]
+fn two_study_service_resumes_bitwise_after_truncation() {
+    const EVALS: usize = 10;
+    let golden_dir = fresh_dir("svc_golden");
+    let (ga, gb) = service_pair(&golden_dir, EVALS);
+
+    let ja = std::fs::read(journal_path(&golden_dir, "svc-a")).expect("journal a");
+    let jb = std::fs::read(journal_path(&golden_dir, "svc-b")).expect("journal b");
+    let sa = std::fs::read(snapshot_path(&golden_dir, "svc-a")).ok();
+    let sb = std::fs::read(snapshot_path(&golden_dir, "svc-b")).ok();
+
+    let mut rng = Pcg64::new(0xBEEF);
+    for i in 0..3 {
+        let ca = (rng.next_u64() % (ja.len() as u64 + 1)) as usize;
+        let cb = (rng.next_u64() % (jb.len() as u64 + 1)) as usize;
+        let dir = fresh_dir(&format!("svc_cut_{i}"));
+        plant(&dir, "svc-a", &ja[..ca], sa.as_deref());
+        plant(&dir, "svc-b", &jb[..cb], sb.as_deref());
+        let (ra, rb) = service_pair(&dir, EVALS);
+        assert_study_match(&ra, &ga, &format!("study a, crash at byte {ca}"));
+        assert_study_match(&rb, &gb, &format!("study b, crash at byte {cb}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// property: recovery is prefix-robust under truncation and corruption
+// ---------------------------------------------------------------------------
+
+fn fake_outcome(id: u64, value: f64, ok: bool) -> TrialOutcome {
+    TrialOutcome {
+        trial: Trial { id, study: StudyId::SOLO, round: id, x: vec![value, -value], attempt: 0 },
+        worker_id: 0,
+        result: if ok {
+            Ok(Evaluation { value, sim_cost_s: 0.5 })
+        } else {
+            Err(TrialError::SimulatedCrash)
+        },
+        worker_seconds: 0.0,
+        sim_cost_s: 0.5,
+    }
+}
+
+/// The bits of a replay entry that matter for exactly-once replay.
+fn entry_sig(e: &ReplayEntry) -> (u64, u64, bool, u64) {
+    let vbits = match &e.outcome.result {
+        Ok(ev) => ev.value.to_bits(),
+        Err(_) => u64::MAX,
+    };
+    (e.outcome.trial.id, e.rng_draws, e.outcome.is_ok(), vbits)
+}
+
+/// Write a synthetic 10-outcome journal (with dispatches, two snapshot
+/// rotations, a retract and a finish) and return its bytes + snapshot.
+fn synthetic_journal(dir: &Path, name: &str) -> (Vec<u8>, Vec<u8>) {
+    let mut j = StudyJournal::create(dir, open_info(name, 17, 10))
+        .expect("create")
+        .with_snapshot_every(4);
+    for id in 0..10u64 {
+        let t =
+            Trial { id, study: StudyId::SOLO, round: id, x: vec![0.25 * id as f64], attempt: 0 };
+        j.append_dispatch(&t).unwrap();
+        j.append_outcome(&fake_outcome(id, 0.125 * id as f64 - 3.0, id % 7 != 3), 100 + id)
+            .unwrap();
+        if j.snapshot_due() {
+            j.write_snapshot(true).unwrap();
+        }
+    }
+    j.append_retract(1).unwrap();
+    j.append_finish().unwrap();
+    drop(j);
+    let jb = std::fs::read(journal_path(dir, name)).unwrap();
+    let sb = std::fs::read(snapshot_path(dir, name)).unwrap();
+    (jb, sb)
+}
+
+/// Any truncation — at a record boundary or mid-record — and any
+/// single-byte corruption of the journal must recover to a consistent
+/// prefix of the golden entries or a typed journal error: never a
+/// panic, never a duplicated `(study, trial)` through the gate, and a
+/// second recovery after the self-repair must be clean.
+#[test]
+fn property_recovery_survives_truncation_and_corruption() {
+    let golden_dir = fresh_dir("prop_golden");
+    let (journal, snapshot) = synthetic_journal(&golden_dir, "prop");
+    let full = recover(&golden_dir, "prop").unwrap().expect("golden recovers");
+    assert!(full.finished && full.entries.len() == 10 && full.retracted == 1);
+
+    let len = journal.len() as u64;
+    let gen = pt::Gen::no_shrink(move |rng: &mut Pcg64| {
+        let cut = (rng.next_u64() % (len + 1)) as usize;
+        let flip = rng.next_u64() % 4 == 0 && cut > 0;
+        let pos = if cut > 0 { (rng.next_u64() % cut as u64) as usize } else { 0 };
+        (cut, flip, pos)
+    });
+    pt::check("journal recovery is prefix-consistent", &gen, |&(cut, flip, pos)| {
+        let dir = fresh_dir("prop_case");
+        let mut bytes = journal[..cut].to_vec();
+        if flip {
+            bytes[pos] ^= 0x40;
+        }
+        plant(&dir, "prop", &bytes, Some(snapshot.as_slice()));
+        match recover(&dir, "prop") {
+            Err(e) => e.is_journal(), // typed, never a panic
+            Ok(None) => true,         // nothing intact: a fresh start
+            Ok(Some(rec)) => {
+                let prefix = rec.entries.len() <= full.entries.len()
+                    && rec
+                        .entries
+                        .iter()
+                        .zip(&full.entries)
+                        .all(|(a, b)| entry_sig(a) == entry_sig(b));
+                let mut keys = rec.gate_keys();
+                let n = keys.len();
+                keys.sort_unstable();
+                keys.dedup();
+                // self-repair truncated the torn tail: re-recovery is clean
+                let again = recover(&dir, "prop");
+                prefix && keys.len() == n && again.is_ok()
+            }
+        }
+    });
+}
+
+/// CRC-valid frames with garbage schemas are *not* torn tails: they must
+/// surface as typed `Error::Journal`, not be skipped or panic.
+#[test]
+fn schema_violations_are_typed_errors() {
+    let cfg = FrameConfig { checksum: true, ..FrameConfig::default() };
+
+    // a well-framed record of an unknown type appended to a valid journal
+    let dir = fresh_dir("bad_schema");
+    let (journal, snapshot) = synthetic_journal(&dir, "bad");
+    let mut bytes = journal.clone();
+    write_frame_with(&mut bytes, &Json::obj(vec![("type", Json::Str("mystery".into()))]), &cfg)
+        .unwrap();
+    plant(&dir, "bad", &bytes, Some(snapshot.as_slice()));
+    let err = recover(&dir, "bad").expect_err("unknown record type");
+    assert!(err.is_journal(), "got {err}");
+
+    // a journal whose first record is not `open`
+    let dir = fresh_dir("no_open");
+    let mut bytes = Vec::new();
+    write_frame_with(&mut bytes, &Json::obj(vec![("type", Json::Str("finish".into()))]), &cfg)
+        .unwrap();
+    plant(&dir, "headless", &bytes, None);
+    let err = recover(&dir, "headless").expect_err("journal without open");
+    assert!(err.is_journal(), "got {err}");
+}
+
+// ---------------------------------------------------------------------------
+// property: snapshot + journal-tail replay == full-journal replay
+// ---------------------------------------------------------------------------
+
+/// Two concurrent studies' outcome streams, randomly interleaved onto
+/// one directory, each journaled twice: once plain (never snapshots)
+/// and once with aggressive snapshot rotation. Recovery from the
+/// rotated journal (snapshot + tail) must be bitwise identical to
+/// recovery from the full journal, for every interleaving.
+#[test]
+fn property_snapshot_plus_tail_equals_full_journal() {
+    let gen = pt::Gen::no_shrink(|rng: &mut Pcg64| {
+        let na = 4 + (rng.next_u64() % 8) as usize;
+        let nb = 4 + (rng.next_u64() % 8) as usize;
+        let every = 1 + rng.next_u64() % 4;
+        let mut order = Vec::new();
+        let (mut i, mut k) = (0usize, 0usize);
+        while i < na || k < nb {
+            let pick_a = k >= nb || (i < na && rng.next_u64() % 2 == 0);
+            order.push(pick_a);
+            if pick_a {
+                i += 1;
+            } else {
+                k += 1;
+            }
+        }
+        let values: Vec<f64> =
+            (0..order.len()).map(|_| (rng.next_u64() % 2000) as f64 * 0.125 - 125.0).collect();
+        (order, values, every)
+    });
+    pt::check("snapshot+tail equals full journal", &gen, |(order, values, every)| {
+        let plain = fresh_dir("snap_plain");
+        let rotated = fresh_dir("snap_rot");
+        for (dir, cadence) in [(&plain, 0u64), (&rotated, *every)] {
+            let mut ja = StudyJournal::create(dir, open_info("ia", 5, 64))
+                .unwrap()
+                .with_snapshot_every(cadence);
+            let mut jb = StudyJournal::create(dir, open_info("ib", 9, 64))
+                .unwrap()
+                .with_snapshot_every(cadence);
+            let (mut ida, mut idb) = (0u64, 0u64);
+            for (ev, &a_next) in order.iter().enumerate() {
+                let (j, id) = if a_next {
+                    ida += 1;
+                    (&mut ja, ida)
+                } else {
+                    idb += 1;
+                    (&mut jb, idb)
+                };
+                let o = fake_outcome(id, values[ev], ev % 5 != 4);
+                j.append_dispatch(&o.trial).unwrap();
+                j.append_outcome(&o, ev as u64).unwrap();
+                if j.snapshot_due() {
+                    j.write_snapshot(true).unwrap();
+                }
+            }
+        }
+        ["ia", "ib"].iter().all(|name| {
+            let f = recover(&plain, name).unwrap().expect("plain journal recovers");
+            let r = recover(&rotated, name).unwrap().expect("rotated journal recovers");
+            // rotation really happened (cadence <= stream length here)
+            snapshot_path(&rotated, name).exists()
+                && f.entries.len() == r.entries.len()
+                && f.entries.iter().zip(&r.entries).all(|(x, y)| entry_sig(x) == entry_sig(y))
+        })
+    });
+}
+
+// ---------------------------------------------------------------------------
+// regression: retractions are journaled before AllWorkersLost surfaces
+// ---------------------------------------------------------------------------
+
+fn read_dispatch_skipping_acks(stream: &mut TcpStream, timeout: Duration) -> Option<Trial> {
+    stream.set_read_timeout(Some(timeout)).unwrap();
+    loop {
+        match read_frame(stream) {
+            Ok((json, _)) => match LeaderMsg::from_json(&json).ok()? {
+                LeaderMsg::Dispatch(t) => return Some(t),
+                _ => continue, // Acks and pings are not this script's business
+            },
+            Err(_) => return None,
+        }
+    }
+}
+
+/// A scripted worker serves three outcomes and vanishes with the fourth
+/// trial in flight. The leader must journal the fantasy retraction
+/// *before* surfacing `AllWorkersLost`, so the on-disk study is an
+/// honest crash shape: three settled outcomes, a retract, no finish.
+#[test]
+fn retract_is_journaled_before_all_workers_lost_surfaces() {
+    use lazygp::coordinator::SocketPoolOptions;
+    let dir = fresh_dir("lost");
+    let pool = SocketPool::listen_with(
+        "127.0.0.1:0",
+        RemoteEvalConfig { objective: "sphere5".into(), sleep_scale: 0.0, fail_prob: 0.0, seed: 3 },
+        SocketPoolOptions {
+            heartbeat_interval: Duration::ZERO,
+            worker_loss_deadline: Duration::from_millis(300),
+            ..Default::default()
+        },
+    )
+    .expect("bind loopback");
+    // flip ACK mode before the scripted worker connects: its Welcome must
+    // already advertise it (with_journal re-preloads the gate, a no-op)
+    pool.preload_gate(&[]);
+    let addr = pool.local_addr();
+
+    let script = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let hello = WorkerMsg::Hello { protocol: PROTOCOL_VERSION, capacity: 1, resume: None };
+        write_frame(&mut stream, &hello.to_json()).expect("send hello");
+        let (welcome, _) = read_frame(&mut stream).expect("read welcome");
+        let LeaderMsg::Welcome { acks, .. } = LeaderMsg::from_json(&welcome).unwrap() else {
+            panic!("expected welcome");
+        };
+        assert!(acks, "a journaled leader must advertise ACK mode in its Welcome");
+        for _ in 0..3 {
+            let t = read_dispatch_skipping_acks(&mut stream, Duration::from_secs(5))
+                .expect("dispatch arrives");
+            let outcome = TrialOutcome {
+                worker_id: 0,
+                result: Ok(Evaluation { value: -1.0 - t.id as f64, sim_cost_s: 1.0 }),
+                worker_seconds: 0.0,
+                sim_cost_s: 1.0,
+                trial: t,
+            };
+            write_frame(&mut stream, &WorkerMsg::Outcome(outcome).to_json()).expect("send");
+        }
+        // vanish with the fourth trial in flight
+    });
+
+    pool.wait_for_capacity(1, Duration::from_secs(10)).expect("script connects");
+    let obj: Arc<dyn objectives::Objective> = Arc::from(objectives::by_name("sphere5").unwrap());
+    let (journal, replay) = open_or_resume(&dir, "lost", 3, 8, 0);
+    assert!(replay.is_empty());
+    let mut abo = AsyncBo::with_transport(fast_bo(3), obj, Box::new(pool), async_cfg(3))
+        .with_journal(journal, replay);
+    let err = abo.run_until_evals(8).expect_err("fleet dies mid-study");
+    assert!(err.is_all_workers_lost(), "got {err}");
+
+    let trace = abo.trace("lost");
+    assert!(trace.journal.records_appended > 0 && trace.journal.fsyncs > 0);
+    abo.abort();
+    script.join().unwrap();
+
+    let rec = recover(&dir, "lost").unwrap().expect("journal survives");
+    assert_eq!(rec.entries.len(), 3, "every settled outcome was journaled");
+    assert_eq!(rec.retracted, 1, "the in-flight fantasy's retraction is on disk");
+    assert!(!rec.finished, "a dead study must not read as finished");
+}
+
+// ---------------------------------------------------------------------------
+// smoke: worker-side redelivery buffer drains on ACK
+// ---------------------------------------------------------------------------
+
+/// End-to-end ACK handshake over real daemons: a journaled TCP run
+/// completes exactly-once (the leader's per-outcome ACKs drain the
+/// daemon's retention buffer en route), and a plain non-journaled
+/// leader still interoperates with the same daemon code untouched.
+#[test]
+fn acked_workers_complete_without_redelivery() {
+    const SEED: u64 = 47;
+    const EVALS: usize = 8;
+    let dir = fresh_dir("ack_smoke");
+    let f = tcp_run(&dir, SEED, EVALS, EVALS, false).unwrap();
+    assert_eq!(f.trial_ids.len(), EVALS);
+    let rec = recover(&dir, "tcp").unwrap().expect("journal");
+    assert!(rec.finished && rec.entries.len() == EVALS);
+
+    // a plain (non-journaled) leader still speaks to the same daemons
+    let (pool, worker) = {
+        let pool = SocketPool::listen(
+            "127.0.0.1:0",
+            RemoteEvalConfig {
+                objective: "sphere5".into(),
+                sleep_scale: 0.0,
+                fail_prob: 0.0,
+                seed: SEED,
+            },
+        )
+        .expect("bind loopback");
+        let addr = pool.local_addr().to_string();
+        let worker = std::thread::spawn(move || {
+            run_worker(&addr, 1).expect("worker run");
+        });
+        pool.wait_for_capacity(1, Duration::from_secs(10)).expect("worker connects");
+        (pool, worker)
+    };
+    let obj: Arc<dyn objectives::Objective> = Arc::from(objectives::by_name("sphere5").unwrap());
+    let mut abo = AsyncBo::with_transport(fast_bo(SEED), obj, Box::new(pool), async_cfg(SEED));
+    let best = abo.run_until_evals(EVALS).expect("plain run completes");
+    assert!(best.value.is_finite());
+    abo.finish();
+    worker.join().unwrap();
+}
