@@ -25,7 +25,7 @@
 
 use std::sync::Arc;
 
-use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
+use lazygp::acquisition::functions::Ei;
 use lazygp::bo::{BoConfig, BoDriver, InitDesign};
 use lazygp::coordinator::{CoordinatorConfig, ParallelBo};
 use lazygp::gp::lazy::LazyGp;
@@ -91,16 +91,16 @@ fn main() -> lazygp::Result<()> {
             for rec in par.driver().history().iter().take(100) {
                 gp.observe(&rec.x, rec.y);
             }
-            let acq =
-                Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, gp.incumbent().unwrap().1);
+            let acq = Ei { xi: 0.01 };
+            let best_f = gp.incumbent().unwrap().1;
             let mut rng = Pcg64::new(99);
             let bounds = ResNetCifarSim::new().bounds().to_vec();
             let cands: Vec<Vec<f64>> = (0..256).map(|_| rng.point_in(&bounds)).collect();
             let t = Stopwatch::new();
-            let xla = scorer.score_batch(&gp, &acq, 0.01, &cands)?;
+            let xla = scorer.score_batch(&gp, &acq, best_f, 0.01, &cands)?;
             let t_xla = t.elapsed_s();
             let t = Stopwatch::new();
-            let native = score_native(&gp, &acq, &cands);
+            let native = score_native(&gp, &acq, best_f, &cands);
             let t_nat = t.elapsed_s();
             let max_dev = xla
                 .iter()

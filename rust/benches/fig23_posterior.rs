@@ -6,7 +6,7 @@
 //! Output: target/experiments/fig23_{posterior,suggestions}.csv — the
 //! exact series the paper plots.
 
-use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
+use lazygp::acquisition::functions::{AcquisitionFn, Ei};
 use lazygp::acquisition::optim::{maximize_all, OptimConfig};
 use lazygp::acquisition::topk::top_local_maxima;
 use lazygp::gp::lazy::LazyGp;
@@ -67,16 +67,13 @@ fn main() {
 
     // EI surface + suggestions
     let best_f = gp.incumbent().unwrap().1;
-    let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, best_f);
-    let ei: Vec<f64> = preds.iter().map(|&(m, var)| acq.score(m, var)).collect();
+    let acq = Ei { xi: 0.01 };
+    let ei: Vec<f64> = preds.iter().map(|&(m, var)| acq.score(m, var, best_f)).collect();
 
-    let f = |x: &[f64]| {
-        let (m, var) = gp.predict(x);
-        acq.score(m, var)
-    };
+    let posterior = |x: &[f64]| gp.predict(x);
     let bounds = [(-10.0, 10.0)];
     let cfg = OptimConfig { candidates: 512, restarts: 24, nm_iters: 60, nm_scale: 0.03 };
-    let all = maximize_all(&f, &bounds, &mut rng, &cfg, None);
+    let all = maximize_all(&acq, &posterior, best_f, &bounds, &mut rng, &cfg, None);
     let single_best = all
         .iter()
         .cloned()

@@ -13,9 +13,10 @@
 //! JSON and exits non-zero on a >10% regression — the CI perf gate.
 //! `LAZYGP_BENCH_QUICK=1` selects the short smoke sizes.
 
-use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
+use lazygp::acquisition::functions::Ei;
 use lazygp::gp::hyperfit::{fit_params_reference, FitSpace};
 use lazygp::gp::lazy::LazyGp;
+use lazygp::gp::linear::{DngoConfig, DngoSurrogate};
 use lazygp::gp::posterior::{compute_alpha, Posterior};
 use lazygp::gp::refit::RefitEngine;
 use lazygp::gp::Surrogate;
@@ -249,21 +250,75 @@ fn main() {
         let y = x.iter().sum::<f64>().sin();
         gp.observe(&x, y);
     }
-    let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, gp.incumbent().unwrap().1);
+    let acq = Ei { xi: 0.01 };
+    let best_f = gp.incumbent().unwrap().1;
     let cands: Vec<Vec<f64>> =
         (0..256).map(|_| (0..5).map(|_| rng.uniform(-10.0, 10.0)).collect()).collect();
     b.bench("native n=500", || {
-        black_box(score_native(&gp, &acq, &cands));
+        black_box(score_native(&gp, &acq, best_f, &cands));
     });
     if let Ok(rt) = PjrtRuntime::new_default() {
         let scorer = GpScorer::new(rt);
         // warm the executable cache outside the timed region
-        let _ = scorer.score_batch(&gp, &acq, 0.01, &cands).unwrap();
+        let _ = scorer.score_batch(&gp, &acq, best_f, 0.01, &cands).unwrap();
         b.bench("xla    n=500", || {
-            black_box(scorer.score_batch(&gp, &acq, 0.01, &cands).unwrap());
+            black_box(scorer.score_batch(&gp, &acq, best_f, 0.01, &cands).unwrap());
         });
     } else {
         println!("(xla scoring skipped: artifacts not built)");
+    }
+
+    // ---- surrogate head-to-head: absorb a k=16 batch at state size n ----
+    // Times the per-batch update cost each backend pays mid-run: the GP's
+    // O(k·n²) incremental extension vs DNGO's O(k·d²) rank-1 head update.
+    // Measured through the Surrogate fantasy API (checkpoint → absorb →
+    // rollback) so the state returns to size n between samples. Enters the
+    // sweep with the DNGO time in the t=4 slot, so speedup_t4 = lazy/dngo
+    // and the committed baseline floor of 1.0 gates "DNGO must not lose".
+    b.group("surrogate head-to-head (absorb k=16 at size n, d=5)");
+    let hh_ns: &[usize] = if quick { &[1024] } else { &[1024, 10240] };
+    const HH_BATCH: usize = 16;
+    for &n in hh_ns {
+        let pts: Vec<(Vec<f64>, f64)> = (0..n + HH_BATCH)
+            .map(|_| {
+                let x: Vec<f64> = (0..5).map(|_| rng.uniform(-5.0, 5.0)).collect();
+                let y = x.iter().sum::<f64>().sin();
+                (x, y)
+            })
+            .collect();
+        let (seed_pts, batch) = pts.split_at(n);
+
+        let mut lazy = LazyGp::paper_default();
+        for (x, y) in seed_pts {
+            Surrogate::observe(&mut lazy, x, *y);
+        }
+        let lazy_t = b
+            .bench_timed(&format!("lazy n={n}"), || {
+                Surrogate::checkpoint(&mut lazy);
+                let t = std::time::Instant::now();
+                lazy.observe_fantasies(batch);
+                let e = t.elapsed().as_secs_f64();
+                Surrogate::rollback(&mut lazy);
+                e
+            })
+            .min_s();
+
+        let mut dngo = DngoSurrogate::new(DngoConfig::default());
+        for (x, y) in seed_pts {
+            dngo.observe(x, *y);
+        }
+        let dngo_t = b
+            .bench_timed(&format!("dngo n={n}"), || {
+                dngo.checkpoint();
+                let t = std::time::Instant::now();
+                dngo.observe_fantasies(batch);
+                let e = t.elapsed().as_secs_f64();
+                dngo.rollback();
+                e
+            })
+            .min_s();
+        sweep.push((format!("surrogate_headtohead/n={n}"), lazy_t, vec![(4, dngo_t)]));
+        println!("surrogate_headtohead/n={n}: lazy {lazy_t:.3e}s dngo {dngo_t:.3e}s");
     }
 
     b.group("one BO suggest() at n=500");

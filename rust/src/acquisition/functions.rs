@@ -1,4 +1,13 @@
-//! Acquisition functions over a GP posterior.
+//! Acquisition functions over a surrogate posterior.
+//!
+//! The scoring surface is the object-safe [`AcquisitionFn`] trait: the
+//! incumbent `f'_n` flows through every [`score`](AcquisitionFn::score)
+//! call instead of being frozen into the scorer at construction (the
+//! stale-`best_f` footgun the old `Acquisition` struct had — an optimizer
+//! holding one across observes silently maximized yesterday's
+//! improvement). [`AcquisitionKind`] stays as the serializable factory the
+//! configs and CLI select by, with [`build`](AcquisitionKind::build)
+//! producing the boxed scorer.
 
 use crate::util::stats::{norm_cdf, norm_pdf};
 
@@ -28,47 +37,143 @@ impl AcquisitionKind {
             AcquisitionKind::Ucb { .. } => "ucb",
         }
     }
+
+    /// Construct the scorer this kind selects.
+    pub fn build(&self) -> Box<dyn AcquisitionFn> {
+        match *self {
+            AcquisitionKind::Ei { xi } => Box::new(Ei { xi }),
+            AcquisitionKind::Pi { xi } => Box::new(Pi { xi }),
+            AcquisitionKind::Ucb { beta } => Box::new(Ucb { beta }),
+        }
+    }
 }
 
-/// A configured acquisition: kind + the current incumbent `f'_n` (Eq. 9).
+/// An acquisition scorer: posterior `(mean, variance)` + the *current*
+/// incumbent in, score out. Object-safe so optimizers, drivers and the
+/// scoring runtime can hold `&dyn AcquisitionFn`.
+///
+/// # Example
+///
+/// ```
+/// use lazygp::acquisition::{AcquisitionFn, AcquisitionKind, Ei};
+///
+/// let acq: Box<dyn AcquisitionFn> = AcquisitionKind::paper_default().build();
+/// // the incumbent is an argument, not baked-in state: as the run's best
+/// // improves, the same scorer keeps scoring against the fresh value
+/// let early = acq.score(1.0, 1.0, 0.0);
+/// let late = acq.score(1.0, 1.0, 0.9);
+/// assert!(late < early);
+///
+/// // batch scoring pairs 1:1 with a predict_batch result
+/// let scores = Ei { xi: 0.0 }.score_batch(&[(0.0, 1.0), (0.5, 1.0)], 0.2);
+/// assert_eq!(scores.len(), 2);
+/// assert!(scores[1] > scores[0]);
+/// ```
+pub trait AcquisitionFn: Send + Sync {
+    /// Score one point from its posterior `(mean, variance)` against the
+    /// current incumbent `best_f` (`f'_n = max_m f(x_m)`, Eq. 9).
+    fn score(&self, mean: f64, variance: f64, best_f: f64) -> f64;
+
+    /// Score a whole posterior batch (as returned by
+    /// `Surrogate::predict_batch`) against one incumbent. The default
+    /// loops; implementations may vectorize.
+    fn score_batch(&self, preds: &[(f64, f64)], best_f: f64) -> Vec<f64> {
+        preds.iter().map(|&(m, v)| self.score(m, v, best_f)).collect()
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Expected Improvement (Eq. 11, standard Jones/Mockus form — the paper's
+/// printed case split is garbled, see DESIGN.md §5):
+/// `γ = μ(x) − f'_n − ξ`, `Z = γ/σ`,
+/// `EI = γ Φ(Z) + σ φ(Z)` if `σ > 0` else `0`.
+#[derive(Debug, Clone, Copy)]
+pub struct Ei {
+    pub xi: f64,
+}
+
+impl AcquisitionFn for Ei {
+    #[inline]
+    fn score(&self, mean: f64, variance: f64, best_f: f64) -> f64 {
+        let sigma = variance.max(0.0).sqrt();
+        if sigma <= 1e-12 {
+            return 0.0;
+        }
+        let gamma = mean - best_f - self.xi;
+        let z = gamma / sigma;
+        (gamma * norm_cdf(z) + sigma * norm_pdf(z)).max(0.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "ei"
+    }
+}
+
+/// Probability of Improvement `Φ((μ − f'_n − ξ)/σ)`, degrading to a step
+/// function at zero variance.
+#[derive(Debug, Clone, Copy)]
+pub struct Pi {
+    pub xi: f64,
+}
+
+impl AcquisitionFn for Pi {
+    #[inline]
+    fn score(&self, mean: f64, variance: f64, best_f: f64) -> f64 {
+        let sigma = variance.max(0.0).sqrt();
+        if sigma <= 1e-12 {
+            return if mean > best_f + self.xi { 1.0 } else { 0.0 };
+        }
+        norm_cdf((mean - best_f - self.xi) / sigma)
+    }
+
+    fn name(&self) -> &'static str {
+        "pi"
+    }
+}
+
+/// Upper Confidence Bound `μ + β σ` (maximization form). Ignores the
+/// incumbent entirely.
+#[derive(Debug, Clone, Copy)]
+pub struct Ucb {
+    pub beta: f64,
+}
+
+impl AcquisitionFn for Ucb {
+    #[inline]
+    fn score(&self, mean: f64, variance: f64, _best_f: f64) -> f64 {
+        mean + self.beta * variance.max(0.0).sqrt()
+    }
+
+    fn name(&self) -> &'static str {
+        "ucb"
+    }
+}
+
+/// A configured acquisition: kind + a *snapshot* of the incumbent.
+#[deprecated(
+    note = "use AcquisitionKind::build() and pass the current incumbent to \
+            AcquisitionFn::score — a frozen best_f goes stale as soon as the \
+            surrogate observes"
+)]
 #[derive(Debug, Clone, Copy)]
 pub struct Acquisition {
     pub kind: AcquisitionKind,
-    /// best observed value so far (`f'_n = max_m f(x_m)`)
+    /// best observed value at construction time
     pub best_f: f64,
 }
 
+#[allow(deprecated)]
 impl Acquisition {
     pub fn new(kind: AcquisitionKind, best_f: f64) -> Self {
         Self { kind, best_f }
     }
 
-    /// Score a point from its posterior `(mean, variance)`.
-    ///
-    /// EI (Eq. 11, standard Jones/Mockus form — the paper's printed case
-    /// split is garbled, see DESIGN.md §5):
-    /// `γ = μ(x) − f'_n − ξ`, `Z = γ/σ`,
-    /// `EI = γ Φ(Z) + σ φ(Z)` if `σ > 0` else `0`.
+    /// Score a point from its posterior `(mean, variance)` against the
+    /// snapshot incumbent.
     #[inline]
     pub fn score(&self, mean: f64, variance: f64) -> f64 {
-        let sigma = variance.max(0.0).sqrt();
-        match self.kind {
-            AcquisitionKind::Ei { xi } => {
-                if sigma <= 1e-12 {
-                    return 0.0;
-                }
-                let gamma = mean - self.best_f - xi;
-                let z = gamma / sigma;
-                (gamma * norm_cdf(z) + sigma * norm_pdf(z)).max(0.0)
-            }
-            AcquisitionKind::Pi { xi } => {
-                if sigma <= 1e-12 {
-                    return if mean > self.best_f + xi { 1.0 } else { 0.0 };
-                }
-                norm_cdf((mean - self.best_f - xi) / sigma)
-            }
-            AcquisitionKind::Ucb { beta } => mean + beta * sigma,
-        }
+        self.kind.build().score(mean, variance, self.best_f)
     }
 }
 
@@ -76,47 +181,42 @@ impl Acquisition {
 mod tests {
     use super::*;
 
-    fn ei(best: f64) -> Acquisition {
-        Acquisition::new(AcquisitionKind::Ei { xi: 0.0 }, best)
+    fn ei() -> Ei {
+        Ei { xi: 0.0 }
     }
 
     #[test]
     fn ei_zero_variance_is_zero() {
-        assert_eq!(ei(0.0).score(10.0, 0.0), 0.0);
+        assert_eq!(ei().score(10.0, 0.0, 0.0), 0.0);
     }
 
     #[test]
     fn ei_increases_with_mean() {
-        let a = ei(0.0);
-        let lo = a.score(0.0, 1.0);
-        let hi = a.score(1.0, 1.0);
-        assert!(hi > lo);
+        let a = ei();
+        assert!(a.score(1.0, 1.0, 0.0) > a.score(0.0, 1.0, 0.0));
     }
 
     #[test]
     fn ei_increases_with_variance_below_incumbent() {
         // below the incumbent, only uncertainty creates improvement hope
-        let a = ei(5.0);
-        let small = a.score(0.0, 0.25);
-        let large = a.score(0.0, 4.0);
-        assert!(large > small);
+        let a = ei();
+        assert!(a.score(0.0, 4.0, 5.0) > a.score(0.0, 0.25, 5.0));
     }
 
     #[test]
     fn ei_known_value_at_mean_equal_best() {
         // γ=0 ⇒ EI = σ φ(0) = σ/√(2π)
-        let a = ei(1.0);
         let sigma: f64 = 2.0;
         let want = sigma * (1.0 / (2.0 * std::f64::consts::PI).sqrt());
-        assert!((a.score(1.0, sigma * sigma) - want).abs() < 1e-12);
+        assert!((ei().score(1.0, sigma * sigma, 1.0) - want).abs() < 1e-12);
     }
 
     #[test]
     fn ei_nonnegative_everywhere() {
-        let a = ei(0.5);
+        let a = ei();
         for m in -5..=5 {
             for v in 0..=5 {
-                let s = a.score(m as f64, v as f64 * 0.5);
+                let s = a.score(m as f64, v as f64 * 0.5, 0.5);
                 assert!(s >= 0.0, "EI({m},{v}) = {s}");
             }
         }
@@ -124,34 +224,64 @@ mod tests {
 
     #[test]
     fn xi_reduces_ei() {
-        let plain = Acquisition::new(AcquisitionKind::Ei { xi: 0.0 }, 0.0);
-        let explore = Acquisition::new(AcquisitionKind::Ei { xi: 0.5 }, 0.0);
-        assert!(explore.score(1.0, 1.0) < plain.score(1.0, 1.0));
+        assert!(Ei { xi: 0.5 }.score(1.0, 1.0, 0.0) < Ei { xi: 0.0 }.score(1.0, 1.0, 0.0));
+    }
+
+    #[test]
+    fn fresh_incumbent_changes_score() {
+        // the footgun the trait removes: the same scorer must track a
+        // moving incumbent call-to-call
+        let a = ei();
+        assert!(a.score(1.0, 1.0, 0.9) < a.score(1.0, 1.0, 0.0));
     }
 
     #[test]
     fn pi_is_probability() {
-        let a = Acquisition::new(AcquisitionKind::Pi { xi: 0.0 }, 0.0);
+        let a = Pi { xi: 0.0 };
         for m in -3..=3 {
-            let p = a.score(m as f64, 1.0);
+            let p = a.score(m as f64, 1.0, 0.0);
             assert!((0.0..=1.0).contains(&p));
         }
         // far above the incumbent ⇒ ~1, far below ⇒ ~0
-        assert!(a.score(10.0, 0.01) > 0.999);
-        assert!(a.score(-10.0, 0.01) < 0.001);
+        assert!(a.score(10.0, 0.01, 0.0) > 0.999);
+        assert!(a.score(-10.0, 0.01, 0.0) < 0.001);
     }
 
     #[test]
     fn pi_zero_variance_step_function() {
-        let a = Acquisition::new(AcquisitionKind::Pi { xi: 0.1 }, 1.0);
-        assert_eq!(a.score(2.0, 0.0), 1.0);
-        assert_eq!(a.score(1.0, 0.0), 0.0);
+        let a = Pi { xi: 0.1 };
+        assert_eq!(a.score(2.0, 0.0, 1.0), 1.0);
+        assert_eq!(a.score(1.0, 0.0, 1.0), 0.0);
     }
 
     #[test]
     fn ucb_is_mean_plus_beta_sigma() {
-        let a = Acquisition::new(AcquisitionKind::Ucb { beta: 2.0 }, f64::NEG_INFINITY);
-        assert!((a.score(1.0, 4.0) - (1.0 + 2.0 * 2.0)).abs() < 1e-15);
+        let a = Ucb { beta: 2.0 };
+        assert!((a.score(1.0, 4.0, f64::NEG_INFINITY) - (1.0 + 2.0 * 2.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn build_matches_direct_structs() {
+        let preds = [(0.3, 1.2), (-0.5, 0.4), (2.0, 0.0)];
+        for kind in [
+            AcquisitionKind::Ei { xi: 0.02 },
+            AcquisitionKind::Pi { xi: 0.02 },
+            AcquisitionKind::Ucb { beta: 1.5 },
+        ] {
+            let built = kind.build();
+            assert_eq!(built.name(), kind.name());
+            let batch = built.score_batch(&preds, 0.1);
+            for (i, &(m, v)) in preds.iter().enumerate() {
+                assert_eq!(batch[i].to_bits(), built.score(m, v, 0.1).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_scores_identically() {
+        let shim = Acquisition::new(AcquisitionKind::Ei { xi: 0.0 }, 0.7);
+        assert_eq!(shim.score(1.0, 1.0).to_bits(), Ei { xi: 0.0 }.score(1.0, 1.0, 0.7).to_bits());
     }
 
     #[test]

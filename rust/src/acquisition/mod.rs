@@ -1,8 +1,11 @@
 //! Acquisition functions and their optimizer.
 //!
-//! * [`functions`] — Expected Improvement (paper §3.2.1, Eq. 11, with the
-//!   exploration trade-off ξ), Probability of Improvement, and Upper
-//!   Confidence Bound.
+//! * [`functions`] — the object-safe [`AcquisitionFn`] scoring trait and
+//!   its implementations: Expected Improvement (paper §3.2.1, Eq. 11, with
+//!   the exploration trade-off ξ), Probability of Improvement, and Upper
+//!   Confidence Bound. [`AcquisitionKind`] is the serializable selector
+//!   with a [`build`](AcquisitionKind::build) factory; the incumbent flows
+//!   through every score call instead of being frozen into the scorer.
 //! * [`optim`] — derivative-free maximization of the acquisition surface:
 //!   seeded multi-start (uniform + Latin hypercube + jittered incumbent)
 //!   followed by Nelder–Mead refinement of the best starts, "initialization
@@ -17,6 +20,11 @@ pub mod functions;
 pub mod optim;
 pub mod topk;
 
-pub use functions::{Acquisition, AcquisitionKind};
-pub use optim::{maximize, nelder_mead, OptimConfig};
-pub use topk::top_local_maxima;
+pub use functions::{AcquisitionFn, AcquisitionKind, Ei, Pi, Ucb};
+pub use optim::{
+    maximize, maximize_all, maximize_all_scalar, maximize_scalar, nelder_mead, OptimConfig,
+};
+pub use topk::{normalized_dist, top_local_maxima};
+
+#[allow(deprecated)]
+pub use functions::Acquisition;

@@ -7,6 +7,7 @@
 //! hot path that can run through the XLA artifact), then refine the best
 //! `restarts` of them with bounded Nelder–Mead.
 
+use super::functions::AcquisitionFn;
 use crate::util::rng::{latin_hypercube, Pcg64};
 
 /// Configuration of the multi-start optimizer.
@@ -68,24 +69,63 @@ pub fn seed_candidates(
     cands
 }
 
-/// Maximize `f` over the box. Returns `(argmax, max)`.
+/// Maximize an acquisition surface over the box: the scorer, the posterior
+/// it reads, and the *current* incumbent `best_f` are all passed per call
+/// (nothing is frozen into a scorer object). Returns `(argmax, max)`.
 pub fn maximize(
+    acq: &dyn AcquisitionFn,
+    posterior: &dyn Fn(&[f64]) -> (f64, f64),
+    best_f: f64,
+    bounds: &[(f64, f64)],
+    rng: &mut Pcg64,
+    config: &OptimConfig,
+    incumbent: Option<&[f64]>,
+) -> (Vec<f64>, f64) {
+    let f = |x: &[f64]| {
+        let (m, v) = posterior(x);
+        acq.score(m, v, best_f)
+    };
+    maximize_scalar(&f, bounds, rng, config, incumbent)
+}
+
+/// [`maximize`] returning *all* refined restart results (the raw material
+/// for top-t local-maxima extraction, §3.4).
+pub fn maximize_all(
+    acq: &dyn AcquisitionFn,
+    posterior: &dyn Fn(&[f64]) -> (f64, f64),
+    best_f: f64,
+    bounds: &[(f64, f64)],
+    rng: &mut Pcg64,
+    config: &OptimConfig,
+    incumbent: Option<&[f64]>,
+) -> Vec<(Vec<f64>, f64)> {
+    let f = |x: &[f64]| {
+        let (m, v) = posterior(x);
+        acq.score(m, v, best_f)
+    };
+    maximize_all_scalar(&f, bounds, rng, config, incumbent)
+}
+
+/// Maximize an arbitrary scalar surface `f` over the box. Returns
+/// `(argmax, max)`. The acquisition-aware [`maximize`] composes the
+/// posterior and scorer into such a closure; drivers that already hold a
+/// fused surface (e.g. batched pre-scored candidates) call this directly.
+pub fn maximize_scalar(
     f: &dyn Fn(&[f64]) -> f64,
     bounds: &[(f64, f64)],
     rng: &mut Pcg64,
     config: &OptimConfig,
     incumbent: Option<&[f64]>,
 ) -> (Vec<f64>, f64) {
-    let refined = maximize_all(f, bounds, rng, config, incumbent);
+    let refined = maximize_all_scalar(f, bounds, rng, config, incumbent);
     refined
         .into_iter()
         .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
         .expect("maximize: empty candidate set")
 }
 
-/// Multi-start maximization returning *all* refined restart results
-/// (the raw material for top-t local-maxima extraction, §3.4).
-pub fn maximize_all(
+/// Multi-start scalar maximization returning *all* refined restart results.
+pub fn maximize_all_scalar(
     f: &dyn Fn(&[f64]) -> f64,
     bounds: &[(f64, f64)],
     rng: &mut Pcg64,
@@ -231,7 +271,7 @@ mod tests {
         };
         let bounds = vec![(0.0, 1.0); 2];
         let mut rng = Pcg64::new(111);
-        let (x, v) = maximize(&f, &bounds, &mut rng, &OptimConfig::default(), None);
+        let (x, v) = maximize_scalar(&f, &bounds, &mut rng, &OptimConfig::default(), None);
         assert!(v > 0.95, "v={v} x={x:?}");
     }
 
@@ -246,7 +286,7 @@ mod tests {
         let bounds = vec![(0.0, 1.0); 3];
         let mut rng = Pcg64::new(113);
         let cfg = OptimConfig { candidates: 32, restarts: 2, nm_iters: 80, nm_scale: 0.05 };
-        let (_, v) = maximize(&f, &bounds, &mut rng, &cfg, Some(&peak));
+        let (_, v) = maximize_scalar(&f, &bounds, &mut rng, &cfg, Some(&peak));
         assert!(v > -1e-4, "v={v}");
     }
 
@@ -256,8 +296,30 @@ mod tests {
         let bounds = vec![(-1.0, 1.0)];
         let mut rng = Pcg64::new(115);
         let cfg = OptimConfig { candidates: 64, restarts: 5, nm_iters: 10, nm_scale: 0.1 };
-        let all = maximize_all(&f, &bounds, &mut rng, &cfg, None);
+        let all = maximize_all_scalar(&f, &bounds, &mut rng, &cfg, None);
         assert_eq!(all.len(), 5);
+    }
+
+    #[test]
+    fn acquisition_maximize_tracks_incumbent() {
+        use crate::acquisition::functions::Ei;
+        // synthetic posterior: mean peaks at 0.6, flat unit variance
+        let posterior = |x: &[f64]| (-(x[0] - 0.6) * (x[0] - 0.6), 1.0);
+        let bounds = vec![(0.0, 1.0)];
+        let cfg = OptimConfig::fast();
+        let acq = Ei { xi: 0.0 };
+        let mut r1 = Pcg64::new(9);
+        let mut r2 = Pcg64::new(9);
+        let (x_lo, v_lo) = maximize(&acq, &posterior, -5.0, &bounds, &mut r1, &cfg, None);
+        let (_, v_hi) = maximize(&acq, &posterior, 5.0, &bounds, &mut r2, &cfg, None);
+        assert!((x_lo[0] - 0.6).abs() < 0.05, "{x_lo:?}");
+        // a higher incumbent strictly shrinks expected improvement
+        assert!(v_hi < v_lo, "{v_hi} !< {v_lo}");
+        let mut r3 = Pcg64::new(9);
+        let all = maximize_all(&acq, &posterior, -5.0, &bounds, &mut r3, &cfg, None);
+        assert_eq!(all.len(), cfg.restarts);
+        let best = all.iter().map(|&(_, v)| v).fold(f64::MIN, f64::max);
+        assert_eq!(best.to_bits(), v_lo.to_bits());
     }
 
     #[test]
@@ -278,8 +340,8 @@ mod tests {
         let cfg = OptimConfig::fast();
         let mut r1 = Pcg64::new(7);
         let mut r2 = Pcg64::new(7);
-        let a = maximize(&f, &bounds, &mut r1, &cfg, None);
-        let b = maximize(&f, &bounds, &mut r2, &cfg, None);
+        let a = maximize_scalar(&f, &bounds, &mut r1, &cfg, None);
+        let b = maximize_scalar(&f, &bounds, &mut r2, &cfg, None);
         assert_eq!(a.0, b.0);
         assert_eq!(a.1, b.1);
     }

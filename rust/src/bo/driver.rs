@@ -1,26 +1,18 @@
 //! The sequential BO loop and its batched suggestion API.
 
-use crate::acquisition::functions::{Acquisition, AcquisitionKind};
+use crate::acquisition::functions::AcquisitionKind;
 use crate::acquisition::optim::OptimConfig;
 use crate::acquisition::topk::top_local_maxima;
-use crate::gp::exact::{ExactGp, ExactGpConfig};
-use crate::gp::lazy::{LazyGp, LazyGpConfig};
-use crate::gp::Surrogate;
+use crate::gp::{Surrogate, SurrogateSpec};
 use crate::kernels::Kernel;
 use crate::objectives::{Evaluation, Objective};
 use crate::util::parallel::Parallelism;
 use crate::util::rng::{latin_hypercube, Pcg64};
 use crate::util::timer::Stopwatch;
 
-/// Which surrogate the driver instantiates.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum SurrogateChoice {
-    /// The paper's lazy GP; `lag = 0` means never re-fit (fully lazy),
-    /// `lag = l` re-fits every `l` iterations (Fig. 6).
-    Lazy { lag: usize },
-    /// The naive baseline: re-fit + full re-factorization per step.
-    Exact,
-}
+/// Former name of the backend selector, kept for one release.
+#[deprecated(note = "renamed to gp::SurrogateSpec (same variants plus Dngo)")]
+pub type SurrogateChoice = SurrogateSpec;
 
 /// How to impute values for in-flight (pending) evaluations when suggesting
 /// asynchronously — the fantasy-observation strategies of Snoek et al. 2012
@@ -80,7 +72,7 @@ impl InitDesign {
 /// Full driver configuration.
 #[derive(Debug, Clone)]
 pub struct BoConfig {
-    pub surrogate: SurrogateChoice,
+    pub surrogate: SurrogateSpec,
     pub kernel: Kernel,
     pub acquisition: AcquisitionKind,
     pub optim: OptimConfig,
@@ -95,13 +87,18 @@ pub struct BoConfig {
     /// hyper-fit grid resolution per axis (CLI `run --fit-grid`); applies
     /// to `ExactGp` per-step refits and `LazyGp` lag-boundary refits
     pub fit_grid: usize,
+    /// route multi-point suggestions through the hedged q-EI path
+    /// ([`BoDriver::suggest_batch_hedged`]): each batch slot is picked
+    /// against a posterior carrying fantasy imputations for the slots
+    /// already chosen, instead of taking `t` maxima of one static surface
+    pub batch_hedged: bool,
 }
 
 impl BoConfig {
     /// The paper's lazy configuration (frozen Matérn-5/2, EI).
     pub fn lazy() -> Self {
         Self {
-            surrogate: SurrogateChoice::Lazy { lag: 0 },
+            surrogate: SurrogateSpec::Lazy { lag: 0 },
             kernel: Kernel::paper_default(),
             acquisition: AcquisitionKind::paper_default(),
             optim: OptimConfig::fast(),
@@ -110,17 +107,36 @@ impl BoConfig {
             batch_min_dist: 0.05,
             parallelism: Parallelism::default(),
             fit_grid: crate::gp::hyperfit::FitSpace::default().grid,
+            batch_hedged: false,
         }
     }
 
     /// The lagged variant of Fig. 6.
     pub fn lazy_lagged(lag: usize) -> Self {
-        Self { surrogate: SurrogateChoice::Lazy { lag }, ..Self::lazy() }
+        Self::lazy().with_surrogate(SurrogateSpec::Lazy { lag })
     }
 
     /// The naive baseline of every paper table.
     pub fn exact() -> Self {
-        Self { surrogate: SurrogateChoice::Exact, ..Self::lazy() }
+        Self::lazy().with_surrogate(SurrogateSpec::Exact)
+    }
+
+    /// The DNGO-style linear-time backend (Snoek et al. 2015) with the
+    /// default random-feature dimension.
+    pub fn dngo() -> Self {
+        Self::lazy().with_surrogate(SurrogateSpec::Dngo { rff_dim: crate::gp::DEFAULT_RFF_DIM })
+    }
+
+    /// Select the surrogate backend.
+    pub fn with_surrogate(mut self, spec: SurrogateSpec) -> Self {
+        self.surrogate = spec;
+        self
+    }
+
+    /// Route `suggest_batch(t > 1)` through the hedged q-EI path.
+    pub fn with_hedged_batches(mut self, hedged: bool) -> Self {
+        self.batch_hedged = hedged;
+        self
     }
 
     pub fn with_seed(mut self, seed: u64) -> Self {
@@ -155,24 +171,7 @@ impl BoConfig {
     }
 
     fn build_surrogate(&self) -> Box<dyn Surrogate> {
-        let fit_space = crate::gp::hyperfit::FitSpace::default().with_grid(self.fit_grid);
-        match self.surrogate {
-            SurrogateChoice::Lazy { lag } => Box::new(LazyGp::new(
-                LazyGpConfig {
-                    kernel: self.kernel,
-                    parallelism: self.parallelism,
-                    fit_space,
-                    ..LazyGpConfig::default()
-                }
-                .with_lag(lag),
-            )),
-            SurrogateChoice::Exact => Box::new(ExactGp::new(ExactGpConfig {
-                kernel: self.kernel,
-                parallelism: self.parallelism,
-                fit_space,
-                ..Default::default()
-            })),
-        }
+        self.surrogate.build(self.kernel, self.fit_grid, self.parallelism, self.seed)
     }
 }
 
@@ -300,16 +299,27 @@ impl BoDriver {
     }
 
     /// §3.4: return up to `t` deduplicated local maxima of the acquisition
-    /// surface, best first.
+    /// surface, best first. With
+    /// [`batch_hedged`](BoConfig::batch_hedged) set and no fantasies
+    /// already active, multi-point requests route through
+    /// [`suggest_batch_hedged`](BoDriver::suggest_batch_hedged) instead
+    /// (when fantasies *are* active — the async coordinator's case — the
+    /// surface is already hedged by those imputations, so the static
+    /// top-t extraction is the right move).
     pub fn suggest_batch(&mut self, t: usize) -> Vec<Vec<f64>> {
         self.ensure_seeded();
+        if self.config.batch_hedged && t > 1 && self.surrogate.fantasies_active() == 0 {
+            return self.suggest_batch_hedged(t, PendingStrategy::ConstantLiarMin);
+        }
         let bounds = self.objective.bounds().to_vec();
+        // the incumbent is read HERE, per call — never frozen into a scorer
+        // that would go stale across observes
         let best_f = self.surrogate.incumbent().map_or(f64::NEG_INFINITY, |(_, y)| y);
-        let acq = Acquisition::new(self.config.acquisition, best_f);
+        let acq = self.config.acquisition.build();
         let surrogate = &*self.surrogate;
         let f = |x: &[f64]| {
             let (m, v) = surrogate.predict(x);
-            acq.score(m, v)
+            acq.score(m, v, best_f)
         };
         // widen the multi-start budget for batch suggestions so t distinct
         // basins have a chance to surface
@@ -330,11 +340,9 @@ impl BoDriver {
             incumbent.as_deref(),
         );
         let preds = self.surrogate.predict_batch(&seeds);
-        let mut scored: Vec<(Vec<f64>, f64)> = seeds
-            .into_iter()
-            .zip(preds)
-            .map(|(x, (m, v))| (x, acq.score(m, v)))
-            .collect();
+        let scores = acq.score_batch(&preds, best_f);
+        let mut scored: Vec<(Vec<f64>, f64)> =
+            seeds.into_iter().zip(scores).collect();
         scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         scored.truncate(cfg.restarts.max(1));
         let all: Vec<(Vec<f64>, f64)> = scored
@@ -351,6 +359,39 @@ impl BoDriver {
             picked.push((x, s));
         }
         picked.into_iter().map(|(x, _)| x).collect()
+    }
+
+    /// q-EI-style hedged batch construction (Ginsbourger's sequential
+    /// heuristic for the multi-point EI): pick slot 1 on the real
+    /// posterior, impute its outcome with `strategy` (the same
+    /// [`PendingStrategy`] machinery the async coordinator uses for
+    /// in-flight points), re-maximize for slot 2 on the augmented
+    /// posterior, and so on — each slot's acquisition surface carries
+    /// fantasies for every slot already chosen, so the batch spreads over
+    /// complementary basins instead of re-proposing one maximum. All
+    /// fantasies are retracted before returning; the real posterior is
+    /// untouched (bitwise, per the [`Surrogate`] checkpoint contract).
+    pub fn suggest_batch_hedged(
+        &mut self,
+        t: usize,
+        strategy: PendingStrategy,
+    ) -> Vec<Vec<f64>> {
+        self.ensure_seeded();
+        assert_eq!(
+            self.surrogate.fantasies_active(),
+            0,
+            "suggest_batch_hedged would retract the caller's active fantasies"
+        );
+        let mut picks: Vec<Vec<f64>> = Vec::with_capacity(t);
+        for _ in 0..t {
+            let x = self.suggest_batch(1).pop().expect("suggest_batch(1): empty");
+            if picks.len() + 1 < t {
+                self.fantasize_one(&x, strategy);
+            }
+            picks.push(x);
+        }
+        self.surrogate.retract_fantasies();
+        picks
     }
 
     /// Feed back an externally evaluated observation (used by the parallel
@@ -490,6 +531,12 @@ impl BoDriver {
         self.surrogate.update_seconds()
     }
 
+    /// Estimated resident bytes of the surrogate state (the per-study
+    /// memory figure the multi-study service reports).
+    pub fn surrogate_mem_bytes(&self) -> usize {
+        self.surrogate.mem_bytes_est()
+    }
+
     /// Total simulated objective cost.
     pub fn sim_cost_total(&self) -> f64 {
         self.history.iter().map(|r| r.sim_cost_s).sum()
@@ -530,6 +577,37 @@ mod tests {
         let mut d = BoDriver::new(cfg, Box::new(Sphere::new(2)));
         let best = d.run(15);
         assert!(best.value > -2.0, "best={}", best.value);
+    }
+
+    #[test]
+    fn dngo_surrogate_also_works() {
+        let cfg = fast(BoConfig::dngo().with_seed(43).with_init(InitDesign::Lhs(6)));
+        let mut d = BoDriver::new(cfg, Box::new(Sphere::new(2)));
+        assert_eq!(d.surrogate().name(), "dngo");
+        let best = d.run(20);
+        assert!(best.value > -2.0, "best={}", best.value);
+    }
+
+    #[test]
+    fn hedged_batch_leaves_no_fantasies_and_fills_t() {
+        let cfg = fast(BoConfig::lazy().with_seed(47).with_init(InitDesign::Lhs(6)))
+            .with_hedged_batches(true);
+        let mut d = BoDriver::new(cfg, Box::new(Levy::new(2)));
+        let n_before = {
+            d.ensure_seeded();
+            d.surrogate().len()
+        };
+        let batch = d.suggest_batch(4);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(d.fantasies_active(), 0);
+        assert_eq!(d.surrogate().len(), n_before);
+        // with fantasies already active, the hedged routing must NOT kick
+        // in (it would retract the caller's fantasies)
+        d.fantasize(&[vec![0.0, 0.0]], PendingStrategy::ConstantLiarMin);
+        let batch = d.suggest_batch(3);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(d.fantasies_active(), 1);
+        assert_eq!(d.retract_fantasies(), 1);
     }
 
     #[test]

@@ -4,10 +4,15 @@
 //! surrogate → maximize acquisition → evaluate objective → observe →
 //! repeat. [`BoDriver::suggest_batch`] exposes the §3.4 batched variant
 //! (top-t local maxima of the acquisition surface) consumed by the
-//! [`crate::coordinator`] for parallel trial execution.
+//! [`crate::coordinator`] for parallel trial execution, and
+//! [`BoDriver::suggest_batch_hedged`] the q-EI-style alternative that
+//! fantasizes each pick before choosing the next. The surrogate backend is
+//! selected by [`crate::gp::SurrogateSpec`] via
+//! [`BoConfig::with_surrogate`].
 
 pub mod driver;
 
-pub use driver::{
-    BoConfig, BoDriver, Best, InitDesign, IterationRecord, PendingStrategy, SurrogateChoice,
-};
+pub use driver::{BoConfig, BoDriver, Best, InitDesign, IterationRecord, PendingStrategy};
+
+#[allow(deprecated)]
+pub use driver::SurrogateChoice;

@@ -7,7 +7,8 @@
 use super::json::{Json, JsonError};
 use crate::acquisition::functions::AcquisitionKind;
 use crate::acquisition::optim::OptimConfig;
-use crate::bo::driver::{BoConfig, InitDesign, SurrogateChoice};
+use crate::bo::driver::{BoConfig, InitDesign};
+use crate::gp::SurrogateSpec;
 use crate::kernels::{Kernel, KernelKind, KernelParams};
 
 /// A fully-specified experiment.
@@ -15,7 +16,7 @@ use crate::kernels::{Kernel, KernelKind, KernelParams};
 pub struct ExperimentConfig {
     pub name: String,
     pub objective: String,
-    pub surrogate: SurrogateChoice,
+    pub surrogate: SurrogateSpec,
     pub kernel_kind: KernelKind,
     pub kernel_params: KernelParams,
     pub acquisition: AcquisitionKind,
@@ -32,7 +33,7 @@ impl Default for ExperimentConfig {
         Self {
             name: "adhoc".into(),
             objective: "levy5".into(),
-            surrogate: SurrogateChoice::Lazy { lag: 0 },
+            surrogate: SurrogateSpec::Lazy { lag: 0 },
             kernel_kind: KernelKind::Matern52,
             kernel_params: KernelParams::paper_default(),
             acquisition: AcquisitionKind::paper_default(),
@@ -58,19 +59,14 @@ impl ExperimentConfig {
             batch_min_dist: 0.05,
             parallelism: crate::util::parallel::Parallelism::default(),
             fit_grid: crate::gp::hyperfit::FitSpace::default().grid,
+            batch_hedged: false,
         }
     }
 
     // ---------- JSON ----------
 
     pub fn to_json(&self) -> Json {
-        let surrogate = match self.surrogate {
-            SurrogateChoice::Lazy { lag } => Json::obj(vec![
-                ("kind", Json::Str("lazy".into())),
-                ("lag", Json::Num(lag as f64)),
-            ]),
-            SurrogateChoice::Exact => Json::obj(vec![("kind", Json::Str("exact".into()))]),
-        };
+        let surrogate = self.surrogate.to_json();
         let acquisition = match self.acquisition {
             AcquisitionKind::Ei { xi } => Json::obj(vec![
                 ("kind", Json::Str("ei".into())),
@@ -131,14 +127,7 @@ impl ExperimentConfig {
             cfg.objective = v;
         }
         if let Some(s) = j.get("surrogate") {
-            match s.get("kind").and_then(|v| v.as_str()) {
-                Some("lazy") => {
-                    let lag = s.get("lag").and_then(|v| v.as_usize()).unwrap_or(0);
-                    cfg.surrogate = SurrogateChoice::Lazy { lag };
-                }
-                Some("exact") => cfg.surrogate = SurrogateChoice::Exact,
-                other => return Err(format!("bad surrogate kind {other:?}")),
-            }
+            cfg.surrogate = SurrogateSpec::from_json(s)?;
         }
         if let Some(k) = j.get("kernel") {
             if let Some(kind) = k.get("kind").and_then(|v| v.as_str()) {
@@ -259,7 +248,7 @@ impl Preset {
                 objective: "levy5".into(),
                 iters: 300,
                 init: InitDesign::Lhs(200),
-                surrogate: SurrogateChoice::Lazy { lag: 3 },
+                surrogate: SurrogateSpec::Lazy { lag: 3 },
                 ..Default::default()
             },
             Preset::Table1 => ExperimentConfig {
@@ -317,7 +306,7 @@ mod tests {
         let cfg = ExperimentConfig {
             name: "x".into(),
             objective: "hartmann6".into(),
-            surrogate: SurrogateChoice::Lazy { lag: 7 },
+            surrogate: SurrogateSpec::Lazy { lag: 7 },
             kernel_kind: KernelKind::Rbf,
             kernel_params: KernelParams { variance: 2.0, length_scale: 0.5, noise: 1e-4 },
             acquisition: AcquisitionKind::Ucb { beta: 3.0 },
@@ -329,7 +318,7 @@ mod tests {
         };
         let text = cfg.to_json().to_string_pretty();
         let back = ExperimentConfig::from_json_str(&text).unwrap();
-        assert_eq!(back.surrogate, SurrogateChoice::Lazy { lag: 7 });
+        assert_eq!(back.surrogate, SurrogateSpec::Lazy { lag: 7 });
         assert_eq!(back.kernel_kind, KernelKind::Rbf);
         assert_eq!(back.kernel_params.noise, 1e-4);
         assert_eq!(back.acquisition, AcquisitionKind::Ucb { beta: 3.0 });
@@ -367,7 +356,24 @@ mod tests {
     #[test]
     fn bo_config_reflects_choice() {
         let mut cfg = Preset::Table1.config();
-        cfg.surrogate = SurrogateChoice::Exact;
-        assert_eq!(cfg.bo_config().surrogate, SurrogateChoice::Exact);
+        cfg.surrogate = SurrogateSpec::Exact;
+        assert_eq!(cfg.bo_config().surrogate, SurrogateSpec::Exact);
+    }
+
+    #[test]
+    fn json_roundtrip_dngo() {
+        let cfg = ExperimentConfig {
+            surrogate: SurrogateSpec::Dngo { rff_dim: 96 },
+            ..Default::default()
+        };
+        let text = cfg.to_json().to_string_pretty();
+        let back = ExperimentConfig::from_json_str(&text).unwrap();
+        assert_eq!(back.surrogate, SurrogateSpec::Dngo { rff_dim: 96 });
+    }
+
+    #[test]
+    fn missing_surrogate_defaults_to_lazy() {
+        let back = ExperimentConfig::from_json_str(r#"{"objective":"levy5"}"#).unwrap();
+        assert_eq!(back.surrogate, SurrogateSpec::Lazy { lag: 0 });
     }
 }

@@ -59,6 +59,7 @@ use std::path::{Path, PathBuf};
 use super::messages::{Trial, TrialOutcome};
 use super::transport::{read_frame_with, write_frame_with, FrameConfig};
 use crate::config::json::Json;
+use crate::gp::SurrogateSpec;
 use crate::metrics::JournalCounters;
 
 /// On-disk format version, stamped into every `open` record. Bumped on any
@@ -137,6 +138,9 @@ pub struct OpenInfo {
     pub pending: String,
     /// per-trial retry cap
     pub max_retries: u32,
+    /// surrogate backend the study runs with; journals written before this
+    /// field existed recover as the lazy default
+    pub surrogate: SurrogateSpec,
 }
 
 /// How one settled outcome replays: the outcome itself plus the driver
@@ -186,6 +190,7 @@ impl JournalRecord {
                 ("slots", Json::Num(o.slots as f64)),
                 ("pending", Json::Str(o.pending.clone())),
                 ("max_retries", Json::Num(f64::from(o.max_retries))),
+                ("surrogate", o.surrogate.to_json()),
             ]),
             JournalRecord::Dispatch(t) => Json::obj(vec![
                 ("type", Json::Str("dispatch".into())),
@@ -229,6 +234,10 @@ impl JournalRecord {
             Some("open") => {
                 let max_retries = u32::try_from(num("max_retries")?)
                     .map_err(|_| bad("max_retries exceeds u32"))?;
+                // optional for back-compat: pre-existing journals carry no
+                // surrogate field and recover as the lazy default
+                let surrogate = SurrogateSpec::from_json_opt(j.get("surrogate"))
+                    .map_err(|e| bad(format!("bad surrogate field: {e}")))?;
                 Ok(JournalRecord::Open(OpenInfo {
                     format: num("format")?,
                     study: num("study")?,
@@ -239,6 +248,7 @@ impl JournalRecord {
                     slots: num("slots")? as usize,
                     pending: text("pending")?,
                     max_retries,
+                    surrogate,
                 }))
             }
             Some("dispatch") => {
@@ -660,6 +670,20 @@ mod tests {
             slots: 2,
             pending: "mean".into(),
             max_retries: 1,
+            surrogate: SurrogateSpec::Dngo { rff_dim: 64 },
+        }
+    }
+
+    #[test]
+    fn open_without_surrogate_field_recovers_as_lazy() {
+        // a journal written before the surrogate field existed
+        let old = r#"{"type":"open","format":1,"study":3,"name":"old","objective":"sphere",
+                      "seed":"11","evals":10,"slots":2,"pending":"mean","max_retries":1}"#;
+        match JournalRecord::from_json(&Json::parse(old).unwrap()).unwrap() {
+            JournalRecord::Open(o) => {
+                assert_eq!(o.surrogate, SurrogateSpec::Lazy { lag: 0 });
+            }
+            other => panic!("expected open, got {other:?}"),
         }
     }
 

@@ -52,6 +52,7 @@ use std::time::{Duration, Instant};
 
 use crate::bo::driver::{Best, BoConfig, PendingStrategy};
 use crate::config::json::Json;
+use crate::gp::SurrogateSpec;
 use crate::metrics::{AsyncTrace, StudyCounter};
 use crate::objectives;
 
@@ -464,17 +465,20 @@ fn attach_journal(
         if rec.open.objective != open.objective
             || rec.open.seed != open.seed
             || rec.open.evals != open.evals
+            || rec.open.surrogate != open.surrogate
         {
             return Err(crate::Error::journal(format!(
                 "journal for `{}` records a different study (objective `{}`, seed {}, evals \
-                 {}; the spec says `{}`, {}, {})",
+                 {}, surrogate {:?}; the spec says `{}`, {}, {}, {:?})",
                 open.name,
                 rec.open.objective,
                 rec.open.seed,
                 rec.open.evals,
+                rec.open.surrogate,
                 open.objective,
                 open.seed,
-                open.evals
+                open.evals,
+                open.surrogate
             )));
         }
         let journal = StudyJournal::resume(dir, &rec)?;
@@ -510,6 +514,7 @@ fn run_study(core: Arc<ServiceCore>, id: StudyId, spec: StudySpec, handle: Study
         slots: spec.slots,
         pending: spec.pending.name().into(),
         max_retries: spec.max_retries,
+        surrogate: spec.bo.surrogate,
     };
     let journal_dir = spec.journal_dir.clone();
     let mut bo = AsyncBo::with_transport(spec.bo, objective, Box::new(handle), config);
@@ -788,6 +793,8 @@ pub struct CreateStudy {
     pub slots: usize,
     pub weight: u64,
     pub priority: u32,
+    /// surrogate backend for the study (defaults to lazy, lag 0)
+    pub surrogate: SurrogateSpec,
 }
 
 impl CreateStudy {
@@ -800,12 +807,13 @@ impl CreateStudy {
             slots: 1,
             weight: 1,
             priority: 0,
+            surrogate: SurrogateSpec::default(),
         }
     }
 
     fn to_spec(&self) -> StudySpec {
         StudySpec::new(self.name.clone(), self.objective.clone())
-            .with_bo(BoConfig::lazy().with_seed(self.seed))
+            .with_bo(BoConfig::lazy().with_surrogate(self.surrogate).with_seed(self.seed))
             .with_evals(self.evals)
             .with_slots(self.slots)
             .with_weight(self.weight)
@@ -822,6 +830,7 @@ impl CreateStudy {
             ("slots", Json::Num(self.slots as f64)),
             ("weight", Json::Num(self.weight as f64)),
             ("priority", Json::Num(self.priority as f64)),
+            ("surrogate", self.surrogate.to_json()),
         ])
     }
 
@@ -834,6 +843,8 @@ impl CreateStudy {
             slots: j.get("slots")?.as_usize()?,
             weight: j.get("weight")?.as_u64()?,
             priority: j.get("priority")?.as_u64()?.min(u32::MAX as u64) as u32,
+            // optional for wire back-compat: older clients omit it
+            surrogate: SurrogateSpec::from_json_opt(j.get("surrogate")).ok()?,
         })
     }
 }

@@ -216,6 +216,89 @@ impl Surrogate for ExactGp {
         self.update_seconds
     }
 
+    /// Force a hyper-fit (when ≥3 points) + full re-factorization now —
+    /// the same per-step machinery `refit_each_step` runs, detached from
+    /// the observe cadence.
+    fn fit(&mut self) -> bool {
+        if self.y.is_empty() {
+            return false;
+        }
+        assert!(
+            self.fantasy_base.is_none(),
+            "fit while fantasies are active; retract_fantasies first"
+        );
+        let sw = Stopwatch::new();
+        if self.xs.len() >= 3 {
+            let fitted = self.refit.fit(&self.kernel, &self.xs, &self.y, &self.config.fit_space);
+            self.kernel.params = fitted;
+        }
+        self.refactorize();
+        self.update_seconds += sw.elapsed_s();
+        true
+    }
+
+    fn checkpoint(&mut self) {
+        if self.fantasy_base.is_none() {
+            self.fantasy_base = Some((self.y.len(), self.best_idx));
+        }
+    }
+
+    /// Rewind to the first `n` real observations and re-factorize under the
+    /// *current* kernel parameters (no refit — with frozen parameters the
+    /// rebuilt factor is bitwise the one a prefix-only model holds, which is
+    /// the conformance contract; with per-step refitting the parameters are
+    /// whatever the last full-history fit produced).
+    fn truncate(&mut self, n: usize) {
+        assert!(
+            self.fantasy_base.is_none(),
+            "truncate while fantasies are active; retract_fantasies first"
+        );
+        assert!(n <= self.y.len(), "truncate({n}) beyond {} observations", self.y.len());
+        if n == self.y.len() {
+            return;
+        }
+        let sw = Stopwatch::new();
+        self.xs.truncate(n);
+        self.y.truncate(n);
+        self.best_idx = crate::gp::best_prefix_idx(&self.y);
+        if n == 0 {
+            self.factor = GrowingCholesky::new();
+            self.alpha.clear();
+            self.mean_offset = 0.0;
+            self.y_scale = 1.0;
+        } else {
+            self.refactorize();
+        }
+        self.update_seconds += sw.elapsed_s();
+    }
+
+    fn mem_bytes_est(&self) -> usize {
+        let n = self.y.len();
+        let d = self.xs.first().map_or(0, |x| x.len());
+        // packed factor + alpha/y + retained points
+        8 * (n * (n + 1) / 2 + 2 * n + n * d)
+    }
+
+    /// Digest mirroring [`LazyGp`]'s: every retained observation, the
+    /// (possibly re-fit) kernel parameters and the normalization constants.
+    fn state_digest(&self) -> u64 {
+        use crate::gp::digest::{mix_u64, START};
+        let mut h = START;
+        h = mix_u64(h, self.y.len() as u64);
+        for (x, &y) in self.xs.iter().zip(&self.y) {
+            for &v in x {
+                h = mix_u64(h, v.to_bits());
+            }
+            h = mix_u64(h, y.to_bits());
+        }
+        h = mix_u64(h, self.kernel.params.variance.to_bits());
+        h = mix_u64(h, self.kernel.params.length_scale.to_bits());
+        h = mix_u64(h, self.kernel.params.noise.to_bits());
+        h = mix_u64(h, self.mean_offset.to_bits());
+        h = mix_u64(h, self.y_scale.to_bits());
+        h
+    }
+
     fn observe_fantasy(&mut self, x: &[f64], y: f64) {
         let sw = Stopwatch::new();
         if self.fantasy_base.is_none() {

@@ -449,6 +449,55 @@ impl Surrogate for LazyGp {
         self.update_seconds
     }
 
+    /// Full hyper-fit + refactorization via [`LazyGp::refit_all`] — the
+    /// same warm-started engine the lag boundaries use.
+    fn fit(&mut self) -> bool {
+        self.refit_all()
+    }
+
+    fn checkpoint(&mut self) {
+        LazyGp::checkpoint(self);
+    }
+
+    fn rollback(&mut self) -> usize {
+        LazyGp::rollback(self)
+    }
+
+    /// Rewind to the first `n` real observations. With the kernel frozen
+    /// since observation `n` this is bitwise identical to a model that only
+    /// ever saw the prefix: the packed factor's leading block *is* the
+    /// prefix factor, so truncation plus one `α` refresh restores it.
+    fn truncate(&mut self, n: usize) {
+        assert!(
+            self.fantasy_base.is_none(),
+            "truncate while fantasies are active; retract_fantasies first"
+        );
+        assert!(n <= self.y.len(), "truncate({n}) beyond {} observations", self.y.len());
+        if n == self.y.len() {
+            return;
+        }
+        let sw = Stopwatch::new();
+        self.y.truncate(n);
+        self.cov.truncate(n);
+        self.factor.truncate(n);
+        self.best_idx = crate::gp::best_prefix_idx(&self.y);
+        if n == 0 {
+            self.alpha.clear();
+            self.mean_offset = 0.0;
+            self.y_scale = 1.0;
+        } else {
+            self.refresh_alpha();
+        }
+        self.update_seconds += sw.elapsed_s();
+    }
+
+    fn mem_bytes_est(&self) -> usize {
+        let n = self.y.len();
+        let d = self.cov.points().first().map_or(0, |x| x.len());
+        // packed factor + alpha/y/cached norms + retained points
+        8 * (n * (n + 1) / 2 + 3 * n + n * d)
+    }
+
     fn observe_fantasy(&mut self, x: &[f64], y: f64) {
         let sw = Stopwatch::new();
         self.checkpoint();

@@ -1,0 +1,633 @@
+//! DNGO-style linear-time surrogate: a Bayesian linear head over a random
+//! Fourier feature basis (Snoek et al. 2015, *Scalable Bayesian
+//! Optimization Using Deep Neural Networks*; Rahimi & Recht 2007).
+//!
+//! Where the GP backends pay `O(n²)` ([`crate::gp::LazyGp`]) or `O(n³)`
+//! ([`crate::gp::ExactGp`]) per observation, this backend keeps a fixed
+//! `d`-dimensional feature map `φ(x) = √(2σ²/d)·cos(Wx + b)` whose rows
+//! `W_k` are sampled from the spectral density of the configured kernel,
+//! and a conjugate Gaussian weight posterior
+//!
+//! ```text
+//! A = αI + β ΦᵀΦ,    A m = β Φᵀ y,    f(x) ~ N(φ(x)ᵀm, φ(x)ᵀA⁻¹φ(x))
+//! ```
+//!
+//! maintained through a **rank-1 Cholesky update** of `A`'s factor: each
+//! `observe` costs `O(d²)` — *constant in n* — and a full rebuild (fit /
+//! truncate) costs `O(n·d²)`. Past a few thousand observations this is the
+//! only backend whose update cost does not grow with the trial count,
+//! which is the ≫2k-trial crossover DNGO documents.
+//!
+//! The speculation contract matches the GP backends bitwise: `checkpoint`
+//! snapshots the `O(d²)` factor, `rollback` restores it exactly, and
+//! `truncate` replays the rank-1 updates from the prior in observation
+//! order — reproducing the incrementally-built factor bit for bit, so
+//! async fantasies and crash replay work unchanged.
+
+use super::Surrogate;
+use crate::kernels::{Kernel, KernelKind};
+use crate::linalg::matrix::dot;
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// Dedicated RNG stream for basis sampling, so the feature directions are
+/// decorrelated from the driver's own `Pcg64::new(seed)` stream.
+const BASIS_STREAM: u64 = 0x5eed_0b05_0d9e_0001;
+
+/// Configuration of the DNGO surrogate.
+#[derive(Debug, Clone)]
+pub struct DngoConfig {
+    /// Spectral-density source: the kernel's kind picks the frequency law
+    /// (Matérn-ν ⇒ multivariate-t with 2ν dof, RBF ⇒ Gaussian), its
+    /// length-scale scales the frequencies, its variance sets the feature
+    /// amplitude and its noise sets the observation precision `β = 1/σₙ²`.
+    pub kernel: Kernel,
+    /// Number of random Fourier features `d` (the head dimension).
+    pub rff_dim: usize,
+    /// Weight-prior precision `α`.
+    pub prior_alpha: f64,
+    /// Seed for the (reproducible) basis sample.
+    pub seed: u64,
+}
+
+impl Default for DngoConfig {
+    fn default() -> Self {
+        Self {
+            kernel: Kernel::paper_default(),
+            rff_dim: super::DEFAULT_RFF_DIM,
+            prior_alpha: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// The sampled feature map, fixed for the model's lifetime. Sampled lazily
+/// at the first observation (when the input dimension is known).
+struct RffBasis {
+    /// `rff_dim` frequency rows, each of input dimension.
+    w: Vec<Vec<f64>>,
+    /// Uniform `[0, 2π)` phases.
+    phase: Vec<f64>,
+    /// Amplitude `√(2σ²/d)` making `E[φᵀφ] = σ²` match the kernel prior.
+    amplitude: f64,
+}
+
+impl RffBasis {
+    fn sample(kernel: &Kernel, rff_dim: usize, input_dim: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::with_stream(seed, BASIS_STREAM);
+        let ls = kernel.params.length_scale;
+        // Matérn-ν spectral density = multivariate t with 2ν dof: scale a
+        // Gaussian draw by √(2ν/u), u ~ χ²_{2ν}. RBF is the Gaussian limit.
+        let dof = match kernel.kind {
+            KernelKind::Matern52 => Some(5u32),
+            KernelKind::Matern32 => Some(3u32),
+            KernelKind::Exponential => Some(1u32),
+            KernelKind::Rbf => None,
+        };
+        let mut w = Vec::with_capacity(rff_dim);
+        let mut phase = Vec::with_capacity(rff_dim);
+        for _ in 0..rff_dim {
+            let z: Vec<f64> = (0..input_dim).map(|_| rng.normal()).collect();
+            let scale = match dof {
+                None => 1.0,
+                Some(k) => {
+                    let u: f64 = (0..k)
+                        .map(|_| {
+                            let g = rng.normal();
+                            g * g
+                        })
+                        .sum();
+                    (f64::from(k) / u.max(1e-12)).sqrt()
+                }
+            };
+            w.push(z.into_iter().map(|zi| zi * scale / ls).collect());
+            phase.push(rng.uniform(0.0, 2.0 * std::f64::consts::PI));
+        }
+        let amplitude = (2.0 * kernel.params.variance / rff_dim as f64).sqrt();
+        Self { w, phase, amplitude }
+    }
+
+    fn features(&self, x: &[f64]) -> Vec<f64> {
+        self.w
+            .iter()
+            .zip(&self.phase)
+            .map(|(wk, &bk)| self.amplitude * (dot(wk, x) + bk).cos())
+            .collect()
+    }
+}
+
+/// Snapshot restoring the exact pre-speculation head state. Unlike the GP
+/// backends the factor is dense and mutated in place, so the checkpoint
+/// copies it — still only `O(d²)`, independent of n.
+struct DngoCheckpoint {
+    n: usize,
+    chol: Vec<Vec<f64>>,
+    bvec: Vec<f64>,
+    weights: Vec<f64>,
+    best_idx: Option<usize>,
+}
+
+/// Classical rank-1 Cholesky update: `L Lᵀ += v vᵀ` in place, `O(d²)`.
+/// The same op sequence runs in incremental observes and in `truncate`'s
+/// replay, which is what makes the two bitwise identical.
+fn chol_rank1_update(l: &mut [Vec<f64>], v: &mut [f64]) {
+    let d = v.len();
+    for k in 0..d {
+        let lkk = l[k][k];
+        let r = (lkk * lkk + v[k] * v[k]).sqrt();
+        let c = r / lkk;
+        let s = v[k] / lkk;
+        l[k][k] = r;
+        for i in (k + 1)..d {
+            l[i][k] = (l[i][k] + s * v[i]) / c;
+            v[i] = c * v[i] - s * l[i][k];
+        }
+    }
+}
+
+/// The DNGO surrogate: random-Fourier-feature basis + Bayesian linear head.
+///
+/// # Example
+///
+/// ```
+/// use lazygp::gp::linear::{DngoConfig, DngoSurrogate};
+/// use lazygp::gp::Surrogate;
+///
+/// let mut model = DngoSurrogate::new(DngoConfig { rff_dim: 64, ..Default::default() });
+/// for i in 0..40 {
+///     let x = i as f64 / 39.0;
+///     model.observe(&[x], (4.0 * x).sin()); // every observe is O(d²), not O(n²)
+/// }
+/// let (mean, var) = model.predict(&[0.5]);
+/// assert!((mean - (2.0f64).sin()).abs() < 0.5, "mean {mean}");
+/// assert!(var >= 0.0);
+/// ```
+pub struct DngoSurrogate {
+    config: DngoConfig,
+    basis: Option<RffBasis>,
+    xs: Vec<Vec<f64>>,
+    y: Vec<f64>,
+    /// Lower-triangular Cholesky factor of `A = αI + β ΦᵀΦ`.
+    chol: Vec<Vec<f64>>,
+    /// Accumulated right-hand side `β Φᵀ y`.
+    bvec: Vec<f64>,
+    /// Posterior weight mean `m = A⁻¹ bvec`.
+    weights: Vec<f64>,
+    best_idx: Option<usize>,
+    update_seconds: f64,
+    fantasy_base: Option<DngoCheckpoint>,
+}
+
+impl DngoSurrogate {
+    pub fn new(config: DngoConfig) -> Self {
+        assert!(config.rff_dim > 0, "rff_dim must be positive");
+        assert!(config.prior_alpha > 0.0, "prior_alpha must be positive");
+        let d = config.rff_dim;
+        let mut chol = vec![vec![0.0; d]; d];
+        let root_alpha = config.prior_alpha.sqrt();
+        for (k, row) in chol.iter_mut().enumerate() {
+            row[k] = root_alpha;
+        }
+        Self {
+            config,
+            basis: None,
+            xs: Vec::new(),
+            y: Vec::new(),
+            chol,
+            bvec: vec![0.0; d],
+            weights: vec![0.0; d],
+            best_idx: None,
+            update_seconds: 0.0,
+            fantasy_base: None,
+        }
+    }
+
+    /// Observation precision `β = 1/σₙ²` from the kernel's noise setting.
+    fn beta(&self) -> f64 {
+        1.0 / self.config.kernel.params.noise.max(1e-12)
+    }
+
+    fn ensure_basis(&mut self, input_dim: usize) {
+        if self.basis.is_none() {
+            self.basis = Some(RffBasis::sample(
+                &self.config.kernel,
+                self.config.rff_dim,
+                input_dim,
+                self.config.seed,
+            ));
+        }
+    }
+
+    /// `L z = rhs` (forward substitution).
+    fn forward_solve(&self, rhs: &[f64]) -> Vec<f64> {
+        let d = rhs.len();
+        let mut z = vec![0.0; d];
+        for i in 0..d {
+            let mut s = rhs[i];
+            for j in 0..i {
+                s -= self.chol[i][j] * z[j];
+            }
+            z[i] = s / self.chol[i][i];
+        }
+        z
+    }
+
+    /// `m = A⁻¹ bvec` via the two triangular solves.
+    fn solve_weights(&self) -> Vec<f64> {
+        let d = self.bvec.len();
+        let z = self.forward_solve(&self.bvec);
+        let mut w = vec![0.0; d];
+        for i in (0..d).rev() {
+            let mut s = z[i];
+            for j in (i + 1)..d {
+                s -= self.chol[j][i] * w[j];
+            }
+            w[i] = s / self.chol[i][i];
+        }
+        w
+    }
+
+    /// Fold one `(x, y)` into the head: rank-1 factor update + RHS
+    /// accumulation + weight refresh. `O(d²)`; the identical op sequence is
+    /// replayed by [`truncate`](Surrogate::truncate) / `fit`.
+    fn absorb(&mut self, x: &[f64], y: f64) {
+        let beta = self.beta();
+        let basis = self.basis.as_ref().expect("absorb before basis sample");
+        let phi = basis.features(x);
+        let root_beta = beta.sqrt();
+        let mut v: Vec<f64> = phi.iter().map(|p| p * root_beta).collect();
+        chol_rank1_update(&mut self.chol, &mut v);
+        for (b, p) in self.bvec.iter_mut().zip(&phi) {
+            *b += beta * y * p;
+        }
+        self.weights = self.solve_weights();
+    }
+
+    fn push_point(&mut self, x: &[f64], y: f64) {
+        self.xs.push(x.to_vec());
+        self.y.push(y);
+        if self.best_idx.map_or(true, |i| y > self.y[i]) {
+            self.best_idx = Some(self.y.len() - 1);
+        }
+    }
+
+    /// Reset the head to the prior and replay every retained observation in
+    /// order. Bitwise-identical to the incrementally-built state because the
+    /// factor update sequence, the RHS accumulation order and the final
+    /// weight solve are exactly the ops the incremental path ran.
+    fn rebuild(&mut self) {
+        let d = self.config.rff_dim;
+        let root_alpha = self.config.prior_alpha.sqrt();
+        for (k, row) in self.chol.iter_mut().enumerate() {
+            for v in row.iter_mut() {
+                *v = 0.0;
+            }
+            row[k] = root_alpha;
+        }
+        self.bvec.iter_mut().for_each(|b| *b = 0.0);
+        self.weights = vec![0.0; d];
+        let n = self.xs.len();
+        for i in 0..n {
+            let x = std::mem::take(&mut self.xs[i]);
+            let y = self.y[i];
+            self.absorb(&x, y);
+            self.xs[i] = x;
+        }
+    }
+}
+
+impl Surrogate for DngoSurrogate {
+    fn observe(&mut self, x: &[f64], y: f64) {
+        assert!(
+            self.fantasy_base.is_none(),
+            "real observe while fantasies are active; retract_fantasies first"
+        );
+        let sw = Stopwatch::new();
+        self.ensure_basis(x.len());
+        self.push_point(x, y);
+        self.absorb(x, y);
+        self.update_seconds += sw.elapsed_s();
+    }
+
+    fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let Some(basis) = self.basis.as_ref() else {
+            return (0.0, self.config.kernel.self_cov());
+        };
+        let phi = basis.features(x);
+        let mean = dot(&phi, &self.weights);
+        // latent variance φᵀA⁻¹φ = ‖L⁻¹φ‖² (noise-free, matching the GP
+        // backends' convention of excluding σₙ² from predict)
+        let z = self.forward_solve(&phi);
+        (mean, dot(&z, &z))
+    }
+
+    fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    fn log_marginal_likelihood(&self) -> f64 {
+        if self.y.is_empty() {
+            return 0.0;
+        }
+        let basis = self.basis.as_ref().expect("basis after observe");
+        let beta = self.beta();
+        let alpha = self.config.prior_alpha;
+        let n = self.y.len() as f64;
+        let d = self.config.rff_dim as f64;
+        let sse: f64 = self
+            .xs
+            .iter()
+            .zip(&self.y)
+            .map(|(x, &y)| {
+                let r = y - dot(&basis.features(x), &self.weights);
+                r * r
+            })
+            .sum();
+        let energy = 0.5 * beta * sse + 0.5 * alpha * dot(&self.weights, &self.weights);
+        let half_logdet: f64 = (0..self.config.rff_dim).map(|k| self.chol[k][k].ln()).sum();
+        0.5 * d * alpha.ln() + 0.5 * n * beta.ln()
+            - energy
+            - half_logdet
+            - 0.5 * n * (2.0 * std::f64::consts::PI).ln()
+    }
+
+    fn incumbent(&self) -> Option<(&[f64], f64)> {
+        self.best_idx.map(|i| (self.xs[i].as_slice(), self.y[i]))
+    }
+
+    fn name(&self) -> &'static str {
+        "dngo"
+    }
+
+    fn update_seconds(&self) -> f64 {
+        self.update_seconds
+    }
+
+    fn fit(&mut self) -> bool {
+        if self.y.is_empty() {
+            return false;
+        }
+        assert!(
+            self.fantasy_base.is_none(),
+            "fit while fantasies are active; retract_fantasies first"
+        );
+        let sw = Stopwatch::new();
+        self.rebuild();
+        self.update_seconds += sw.elapsed_s();
+        true
+    }
+
+    fn checkpoint(&mut self) {
+        if self.fantasy_base.is_none() {
+            self.fantasy_base = Some(DngoCheckpoint {
+                n: self.y.len(),
+                chol: self.chol.clone(),
+                bvec: self.bvec.clone(),
+                weights: self.weights.clone(),
+                best_idx: self.best_idx,
+            });
+        }
+    }
+
+    fn truncate(&mut self, n: usize) {
+        assert!(
+            self.fantasy_base.is_none(),
+            "truncate while fantasies are active; retract_fantasies first"
+        );
+        assert!(n <= self.y.len(), "truncate({n}) beyond {} observations", self.y.len());
+        if n == self.y.len() {
+            return;
+        }
+        let sw = Stopwatch::new();
+        self.xs.truncate(n);
+        self.y.truncate(n);
+        self.best_idx = super::best_prefix_idx(&self.y);
+        self.rebuild();
+        self.update_seconds += sw.elapsed_s();
+    }
+
+    fn mem_bytes_est(&self) -> usize {
+        let d = self.config.rff_dim;
+        let input_dim = self.xs.first().map_or(0, |x| x.len());
+        // factor + RHS/weights + basis, plus the retained observations
+        8 * (d * d + 3 * d + d * input_dim) + 8 * self.xs.len() * (input_dim + 1)
+    }
+
+    fn observe_fantasy(&mut self, x: &[f64], y: f64) {
+        let sw = Stopwatch::new();
+        self.ensure_basis(x.len());
+        self.checkpoint();
+        self.push_point(x, y);
+        self.absorb(x, y);
+        self.update_seconds += sw.elapsed_s();
+    }
+
+    fn retract_fantasies(&mut self) -> usize {
+        let Some(cp) = self.fantasy_base.take() else {
+            return 0;
+        };
+        let removed = self.y.len() - cp.n;
+        self.xs.truncate(cp.n);
+        self.y.truncate(cp.n);
+        self.chol = cp.chol;
+        self.bvec = cp.bvec;
+        self.weights = cp.weights;
+        self.best_idx = cp.best_idx;
+        removed
+    }
+
+    fn fantasies_active(&self) -> usize {
+        self.fantasy_base.as_ref().map_or(0, |cp| self.y.len() - cp.n)
+    }
+
+    /// Digest everything the posterior depends on: the observation history
+    /// (order-sensitive), the basis seed and head shape, and the kernel
+    /// parameters the spectral sample / precisions derive from.
+    fn state_digest(&self) -> u64 {
+        use super::digest::{mix_u64, START};
+        let mut h = START;
+        h = mix_u64(h, self.y.len() as u64);
+        for (x, &y) in self.xs.iter().zip(&self.y) {
+            for &v in x {
+                h = mix_u64(h, v.to_bits());
+            }
+            h = mix_u64(h, y.to_bits());
+        }
+        h = mix_u64(h, self.config.seed);
+        h = mix_u64(h, self.config.rff_dim as u64);
+        h = mix_u64(h, self.config.prior_alpha.to_bits());
+        h = mix_u64(h, self.config.kernel.params.variance.to_bits());
+        h = mix_u64(h, self.config.kernel.params.length_scale.to_bits());
+        h = mix_u64(h, self.config.kernel.params.noise.to_bits());
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn small() -> DngoConfig {
+        DngoConfig { rff_dim: 48, seed: 5, ..Default::default() }
+    }
+
+    #[test]
+    fn interpolates_smooth_function() {
+        let mut model = DngoSurrogate::new(small());
+        for i in 0..60 {
+            let x = -2.0 + 4.0 * i as f64 / 59.0;
+            model.observe(&[x], (1.5 * x).sin());
+        }
+        for &q in &[-1.3, -0.2, 0.7, 1.8] {
+            let (m, v) = model.predict(&[q]);
+            assert!((m - (1.5 * q).sin()).abs() < 0.35, "mean {m} at {q}");
+            assert!(v >= 0.0 && v.is_finite());
+        }
+    }
+
+    #[test]
+    fn empty_predicts_prior() {
+        let model = DngoSurrogate::new(small());
+        let (m, v) = model.predict(&[0.3, 0.3]);
+        assert_eq!(m, 0.0);
+        assert_eq!(v, 1.0);
+        assert!(model.is_empty());
+    }
+
+    #[test]
+    fn variance_shrinks_at_observed_points() {
+        let mut model = DngoSurrogate::new(small());
+        let (_, v_prior) = {
+            let mut probe = DngoSurrogate::new(small());
+            probe.observe(&[9.0], 0.0); // force basis sample far away
+            probe.predict(&[0.5])
+        };
+        for _ in 0..3 {
+            model.observe(&[0.5], 0.2);
+        }
+        let (_, v_post) = model.predict(&[0.5]);
+        assert!(v_post < v_prior, "posterior {v_post} vs prior-ish {v_prior}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let build = || {
+            let mut m = DngoSurrogate::new(small());
+            let mut rng = Pcg64::new(77);
+            for _ in 0..15 {
+                let x = vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)];
+                m.observe(&x, (x[0] - x[1]).cos());
+            }
+            m
+        };
+        let (a, b) = (build(), build());
+        assert_eq!(a.state_digest(), b.state_digest());
+        let q = [0.3, -0.4];
+        let (ma, va) = a.predict(&q);
+        let (mb, vb) = b.predict(&q);
+        assert_eq!(ma.to_bits(), mb.to_bits());
+        assert_eq!(va.to_bits(), vb.to_bits());
+        // a different basis seed is a different model
+        let mut other = DngoSurrogate::new(DngoConfig { seed: 6, ..small() });
+        let mut rng = Pcg64::new(77);
+        for _ in 0..15 {
+            let x = vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)];
+            other.observe(&x, (x[0] - x[1]).cos());
+        }
+        assert_ne!(a.state_digest(), other.state_digest());
+        assert_ne!(a.predict(&q).0.to_bits(), other.predict(&q).0.to_bits());
+    }
+
+    #[test]
+    fn checkpoint_rollback_is_bitwise() {
+        let mut model = DngoSurrogate::new(small());
+        let mut rng = Pcg64::new(33);
+        for _ in 0..10 {
+            let x = vec![rng.uniform(-1.0, 1.0)];
+            model.observe(&x, x[0] * x[0]);
+        }
+        let probe = [0.37];
+        let before = model.predict(&probe);
+        let digest = model.state_digest();
+        model.observe_fantasy(&[0.5], -3.0);
+        model.observe_fantasy(&[0.6], -3.0);
+        assert_eq!(model.fantasies_active(), 2);
+        assert_ne!(model.predict(&probe).0.to_bits(), before.0.to_bits());
+        assert_eq!(model.retract_fantasies(), 2);
+        let after = model.predict(&probe);
+        assert_eq!(before.0.to_bits(), after.0.to_bits());
+        assert_eq!(before.1.to_bits(), after.1.to_bits());
+        assert_eq!(model.state_digest(), digest);
+    }
+
+    #[test]
+    fn truncate_replay_matches_incremental_bitwise() {
+        let data: Vec<(Vec<f64>, f64)> = {
+            let mut rng = Pcg64::new(55);
+            (0..14)
+                .map(|_| {
+                    let x = vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)];
+                    let y = (x[0] * x[1]).tanh();
+                    (x, y)
+                })
+                .collect()
+        };
+        let mut full = DngoSurrogate::new(small());
+        for (x, y) in &data {
+            full.observe(x, *y);
+        }
+        let mut prefix = DngoSurrogate::new(small());
+        for (x, y) in &data[..9] {
+            prefix.observe(x, *y);
+        }
+        full.truncate(9);
+        assert_eq!(full.len(), 9);
+        assert_eq!(full.state_digest(), prefix.state_digest());
+        let q = [0.2, -0.8];
+        let (mf, vf) = full.predict(&q);
+        let (mp, vp) = prefix.predict(&q);
+        assert_eq!(mf.to_bits(), mp.to_bits());
+        assert_eq!(vf.to_bits(), vp.to_bits());
+    }
+
+    #[test]
+    fn incumbent_survives_truncate() {
+        let mut model = DngoSurrogate::new(small());
+        model.observe(&[0.0], 1.0);
+        model.observe(&[1.0], 5.0);
+        model.observe(&[2.0], 9.0);
+        model.truncate(2);
+        let (x, y) = model.incumbent().unwrap();
+        assert_eq!(x, &[1.0]);
+        assert_eq!(y, 5.0);
+    }
+
+    #[test]
+    fn lml_finite_and_data_dependent() {
+        let mut model = DngoSurrogate::new(small());
+        model.observe(&[0.0], 0.1);
+        let a = model.log_marginal_likelihood();
+        model.observe(&[1.0], -0.4);
+        let b = model.log_marginal_likelihood();
+        assert!(a.is_finite() && b.is_finite());
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn update_cost_is_independent_of_n() {
+        // structural proxy for the O(d²) claim: the factor never grows
+        let mut model = DngoSurrogate::new(small());
+        for i in 0..50 {
+            model.observe(&[i as f64 * 0.1], 0.0);
+        }
+        assert_eq!(model.chol.len(), model.config.rff_dim);
+        assert!(model.update_seconds() > 0.0);
+        let est_small = model.mem_bytes_est();
+        for i in 0..50 {
+            model.observe(&[5.0 + i as f64 * 0.1], 0.0);
+        }
+        // memory grows only by the retained observation vectors
+        assert_eq!(model.mem_bytes_est() - est_small, 50 * 8 * 2);
+    }
+}

@@ -1,4 +1,4 @@
-//! Gaussian-process surrogate models.
+//! Surrogate models: Gaussian processes and the linear-time DNGO backend.
 //!
 //! * [`posterior`] — the shared prediction math of paper **Alg. 1**
 //!   (mean, variance, log marginal likelihood from a Cholesky factor).
@@ -10,6 +10,11 @@
 //!   frozen (or re-fit only every `l` iterations — the *lagging factor* of
 //!   §4.1/Fig. 6), so `observe` extends the factor incrementally in
 //!   `O(n²)` via [`crate::linalg::GrowingCholesky`].
+//! * [`linear`] — [`DngoSurrogate`]: a DNGO-style Bayesian linear head over
+//!   a random-Fourier-feature basis (Snoek et al. 2015). `observe` is
+//!   `O(d²)` in the feature dimension — *constant* in the number of
+//!   observations — for the ≫2k-trial regime where even the lazy GP's
+//!   `O(n²)` extension dominates.
 //! * [`hyperfit`] — kernel-parameter fitting by log-marginal-likelihood
 //!   maximization (log-scale grid + local refinement), used by `ExactGp`
 //!   each step and by `LazyGp` at lag boundaries.
@@ -18,20 +23,56 @@
 //!   candidates fanned out over the worker pool with per-worker scratch
 //!   arenas, warm-started windows across successive lag boundaries —
 //!   bitwise identical to the naive serial loop at any thread count.
+//!
+//! Backends are selected by the serializable [`SurrogateSpec`], which the
+//! BO drivers, the CLI (`--surrogate lazy|exact|dngo`) and the durability
+//! journal all share.
 
 pub mod exact;
 pub mod hyperfit;
 pub mod lazy;
+pub mod linear;
 pub mod posterior;
 pub mod refit;
 
 pub use exact::ExactGp;
 pub use lazy::{LagSchedule, LazyGp};
+pub use linear::DngoSurrogate;
 pub use posterior::Posterior;
 pub use refit::{RefitEngine, RefitEngineStats};
 
-/// Common interface of both surrogates, used by the BO drivers and the
-/// coordinator so experiments can swap models by config.
+// Deprecated re-export paths kept for one release: backends are selected
+// via `SurrogateSpec` now; the concrete configs remain available (and
+// non-deprecated) at `gp::lazy::LazyGpConfig` / `gp::exact::ExactGpConfig`
+// for code that constructs a backend directly.
+#[deprecated(note = "select backends via gp::SurrogateSpec; for direct \
+                     construction use gp::exact::ExactGpConfig")]
+pub use exact::ExactGpConfig;
+#[deprecated(note = "select backends via gp::SurrogateSpec; for direct \
+                     construction use gp::lazy::LazyGpConfig")]
+pub use lazy::LazyGpConfig;
+
+use crate::config::json::Json;
+use crate::kernels::Kernel;
+use crate::util::parallel::Parallelism;
+
+/// The full surrogate contract the BO drivers and coordinators rely on.
+///
+/// Every backend ([`LazyGp`], [`ExactGp`], [`DngoSurrogate`]) implements
+/// the same lifecycle:
+///
+/// * **observe / predict** — incorporate real data, query the posterior;
+/// * **checkpoint / rollback** — open a speculation window, stack fantasy
+///   observations on top of it, and restore the *bitwise* pre-speculation
+///   posterior (what the async coordinator leans on every settle wave);
+/// * **truncate** — rewind real observations to a prefix (crash replay);
+/// * **fit** — force a hyper-parameter / numerical refresh outside the
+///   backend's own schedule;
+/// * **telemetry** — update time, memory estimate, state digest.
+///
+/// The conformance suite (`rust/tests/surrogate_conformance.rs`) pins these
+/// contracts against every backend, so a new implementation inherits the
+/// tests for free.
 pub trait Surrogate: Send {
     /// Insert an observation `(x, y)` and update the model.
     fn observe(&mut self, x: &[f64], y: f64);
@@ -61,9 +102,51 @@ pub trait Surrogate: Send {
     /// Human-readable model name for logs/metrics.
     fn name(&self) -> &'static str;
 
-    /// Cumulative seconds spent inside GP updates (factorizations +
+    /// Cumulative seconds spent inside model updates (factorizations +
     /// solves); this is the quantity Fig. 1/Fig. 5 plot.
     fn update_seconds(&self) -> f64;
+
+    /// Force a hyper-parameter (or numerical) refresh *now*, outside the
+    /// backend's own schedule. [`LazyGp`] runs a full hyper-fit +
+    /// refactorization, [`ExactGp`] refits on its engine, and
+    /// [`DngoSurrogate`] rebuilds its feature factor by replay. Returns
+    /// `false` when the refresh could not be applied (e.g. no data, or a
+    /// numerically non-PD refit); the previous state is kept in that case.
+    fn fit(&mut self) -> bool {
+        false
+    }
+
+    /// Open a speculation window: snapshot whatever is needed to restore
+    /// the current posterior bitwise. Idempotent — only the first call in a
+    /// window takes the snapshot, so stacked fantasies share one base.
+    /// [`observe_fantasy`](Surrogate::observe_fantasy) calls this
+    /// implicitly; coordinators may also call it directly.
+    fn checkpoint(&mut self);
+
+    /// Close the speculation window, restoring the exact (bitwise)
+    /// pre-checkpoint posterior; returns how many speculative observations
+    /// were rolled back (0 when no window is open). Synonymous with
+    /// [`retract_fantasies`](Surrogate::retract_fantasies) — the two names
+    /// exist because coordinators speak "fantasies" while the durability
+    /// layer speaks "rollback".
+    fn rollback(&mut self) -> usize {
+        self.retract_fantasies()
+    }
+
+    /// Rewind the *real* observation history to its first `n` entries.
+    /// Must not be called while fantasies are active.
+    ///
+    /// Contract (pinned by the conformance suite): provided no
+    /// hyper-parameter refit occurred after observation `n`, the truncated
+    /// model is bitwise identical to one that only ever observed the first
+    /// `n` points. This is what lets crash replay cut a journal at a torn
+    /// tail and resume on the exact posterior of the settled prefix.
+    fn truncate(&mut self, n: usize);
+
+    /// Estimated resident bytes of the model state (factors, features,
+    /// retained observations). Drives the per-study memory rows of the
+    /// multi-study service.
+    fn mem_bytes_est(&self) -> usize;
 
     /// Record a *fantasy* observation: a speculative `(x, ŷ)` standing in
     /// for an in-flight evaluation (the constant-liar / posterior-mean
@@ -122,6 +205,156 @@ pub trait Surrogate: Send {
     }
 }
 
+/// Serializable backend selector — the single knob that picks a surrogate
+/// across `BoConfig`, the CLI, the multi-study service and the durability
+/// journal (where it rides in the `Open` record; journals written before
+/// the field existed default to the lazy backend on replay).
+///
+/// # Example: build a backend and round-trip the spec through JSON
+///
+/// ```
+/// use lazygp::gp::SurrogateSpec;
+/// use lazygp::kernels::Kernel;
+/// use lazygp::util::parallel::Parallelism;
+///
+/// let spec = SurrogateSpec::Dngo { rff_dim: 32 };
+/// let mut model = spec.build(Kernel::paper_default(), 5, Parallelism::Serial, 7);
+/// model.observe(&[0.1, 0.4], 0.3);
+/// let (mean, var) = model.predict(&[0.1, 0.4]);
+/// assert!(mean.is_finite() && var > 0.0);
+/// assert_eq!(model.name(), "dngo");
+///
+/// // JSON round-trip is exact…
+/// let back = SurrogateSpec::from_json(&spec.to_json()).unwrap();
+/// assert_eq!(back, spec);
+/// // …and a record missing the field (an old journal) defaults to lazy
+/// assert_eq!(SurrogateSpec::from_json_opt(None).unwrap(), SurrogateSpec::Lazy { lag: 0 });
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SurrogateSpec {
+    /// The paper's lazy GP; `lag = 0` means never re-fit (fully lazy),
+    /// `lag = l` re-fits every `l` iterations (Fig. 6).
+    Lazy { lag: usize },
+    /// The naive baseline: re-fit + full re-factorization per step.
+    Exact,
+    /// DNGO-style Bayesian linear head over `rff_dim` random Fourier
+    /// features — linear-time in observations (Snoek et al. 2015).
+    Dngo { rff_dim: usize },
+}
+
+/// Default random-feature count for [`SurrogateSpec::Dngo`].
+pub const DEFAULT_RFF_DIM: usize = 128;
+
+impl Default for SurrogateSpec {
+    /// The paper's headline configuration: fully lazy, never re-fit.
+    fn default() -> Self {
+        SurrogateSpec::Lazy { lag: 0 }
+    }
+}
+
+impl SurrogateSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SurrogateSpec::Lazy { .. } => "lazy",
+            SurrogateSpec::Exact => "exact",
+            SurrogateSpec::Dngo { .. } => "dngo",
+        }
+    }
+
+    /// Parse a CLI selector (`--surrogate lazy|exact|dngo`), with `lag` and
+    /// `rff_dim` supplying the variant parameters.
+    pub fn from_cli(name: &str, lag: usize, rff_dim: usize) -> Option<Self> {
+        match name {
+            "lazy" => Some(SurrogateSpec::Lazy { lag }),
+            "exact" => Some(SurrogateSpec::Exact),
+            "dngo" => Some(SurrogateSpec::Dngo { rff_dim }),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            SurrogateSpec::Lazy { lag } => Json::obj(vec![
+                ("kind", Json::Str("lazy".into())),
+                ("lag", Json::Num(lag as f64)),
+            ]),
+            SurrogateSpec::Exact => Json::obj(vec![("kind", Json::Str("exact".into()))]),
+            SurrogateSpec::Dngo { rff_dim } => Json::obj(vec![
+                ("kind", Json::Str("dngo".into())),
+                ("rff_dim", Json::Num(rff_dim as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        match v.get("kind").and_then(|k| k.as_str()) {
+            Some("lazy") => {
+                let lag = v.get("lag").and_then(|l| l.as_usize()).unwrap_or(0);
+                Ok(SurrogateSpec::Lazy { lag })
+            }
+            Some("exact") => Ok(SurrogateSpec::Exact),
+            Some("dngo") => {
+                let rff_dim =
+                    v.get("rff_dim").and_then(|d| d.as_usize()).unwrap_or(DEFAULT_RFF_DIM);
+                Ok(SurrogateSpec::Dngo { rff_dim })
+            }
+            other => Err(format!("bad surrogate kind {other:?}")),
+        }
+    }
+
+    /// [`from_json`](SurrogateSpec::from_json) with back-compat defaulting:
+    /// a record written before the field existed (`None`) selects the lazy
+    /// backend, which is what every pre-spec journal actually ran.
+    pub fn from_json_opt(v: Option<&Json>) -> Result<Self, String> {
+        match v {
+            Some(v) => Self::from_json(v),
+            None => Ok(SurrogateSpec::Lazy { lag: 0 }),
+        }
+    }
+
+    /// Construct the selected backend. `fit_grid` is the hyper-fit grid
+    /// resolution per axis (GP backends), `seed` makes the DNGO
+    /// random-feature basis reproducible (journal replay re-derives the
+    /// identical basis from the journaled seed).
+    pub fn build(
+        &self,
+        kernel: Kernel,
+        fit_grid: usize,
+        parallelism: Parallelism,
+        seed: u64,
+    ) -> Box<dyn Surrogate> {
+        let fit_space = hyperfit::FitSpace::default().with_grid(fit_grid);
+        match *self {
+            SurrogateSpec::Lazy { lag } => Box::new(LazyGp::new(
+                lazy::LazyGpConfig { kernel, parallelism, fit_space, ..Default::default() }
+                    .with_lag(lag),
+            )),
+            SurrogateSpec::Exact => Box::new(ExactGp::new(exact::ExactGpConfig {
+                kernel,
+                parallelism,
+                fit_space,
+                ..Default::default()
+            })),
+            SurrogateSpec::Dngo { rff_dim } => Box::new(DngoSurrogate::new(
+                linear::DngoConfig { kernel, rff_dim, seed, ..Default::default() },
+            )),
+        }
+    }
+}
+
+/// Index of the running maximum over `y`, keeping the *first* occurrence on
+/// ties — the same strict-`>` rule every backend applies incrementally, so
+/// a [`Surrogate::truncate`] recompute lands on the identical incumbent.
+pub(crate) fn best_prefix_idx(y: &[f64]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &v) in y.iter().enumerate() {
+        if best.map_or(true, |b| v > y[b]) {
+            best = Some(i);
+        }
+    }
+    best
+}
+
 /// FNV-1a mixing helpers shared by [`Surrogate::state_digest`]
 /// implementations — order-sensitive, so permuted observation sets hash
 /// differently.
@@ -137,5 +370,65 @@ pub mod digest {
             h = h.wrapping_mul(PRIME);
         }
         h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_json_round_trips_all_variants() {
+        for spec in [
+            SurrogateSpec::Lazy { lag: 0 },
+            SurrogateSpec::Lazy { lag: 5 },
+            SurrogateSpec::Exact,
+            SurrogateSpec::Dngo { rff_dim: 64 },
+        ] {
+            let back = SurrogateSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn spec_missing_field_defaults_to_lazy() {
+        assert_eq!(SurrogateSpec::from_json_opt(None).unwrap(), SurrogateSpec::Lazy { lag: 0 });
+    }
+
+    #[test]
+    fn spec_rejects_unknown_kind() {
+        let bad = Json::obj(vec![("kind", Json::Str("wat".into()))]);
+        let err = SurrogateSpec::from_json(&bad).unwrap_err();
+        assert!(err.contains("bad surrogate kind"), "{err}");
+    }
+
+    #[test]
+    fn spec_cli_round_trip() {
+        assert_eq!(
+            SurrogateSpec::from_cli("lazy", 3, 128),
+            Some(SurrogateSpec::Lazy { lag: 3 })
+        );
+        assert_eq!(SurrogateSpec::from_cli("exact", 3, 128), Some(SurrogateSpec::Exact));
+        assert_eq!(
+            SurrogateSpec::from_cli("dngo", 3, 64),
+            Some(SurrogateSpec::Dngo { rff_dim: 64 })
+        );
+        assert_eq!(SurrogateSpec::from_cli("nope", 0, 0), None);
+    }
+
+    #[test]
+    fn spec_builds_every_backend() {
+        for spec in
+            [SurrogateSpec::default(), SurrogateSpec::Exact, SurrogateSpec::Dngo { rff_dim: 16 }]
+        {
+            let mut model = spec.build(Kernel::paper_default(), 5, Parallelism::Serial, 11);
+            assert_eq!(model.name(), spec.name());
+            model.observe(&[0.2, -0.3], 0.5);
+            model.observe(&[1.0, 0.7], -0.1);
+            let (m, v) = model.predict(&[0.4, 0.1]);
+            assert!(m.is_finite() && v.is_finite() && v >= 0.0, "{spec:?}: ({m}, {v})");
+            assert_eq!(model.len(), 2);
+            assert!(model.mem_bytes_est() > 0);
+        }
     }
 }

@@ -1,7 +1,7 @@
 //! `lazygp` — the command-line launcher.
 //!
 //! ```text
-//! lazygp run     --preset table1 | --objective levy5 [--surrogate lazy|exact]
+//! lazygp run     --preset table1 | --objective levy5 [--surrogate lazy|exact|dngo]
 //! lazygp parallel --objective resnet_cifar10 --workers 20 --batch 20
 //!                 [--mode sync|async] [--pending cl-min|posterior-mean|kriging-believer]
 //!                 [--transport thread|tcp] [--listen 127.0.0.1:7077]
@@ -18,7 +18,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign, PendingStrategy, SurrogateChoice};
+use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign, PendingStrategy};
 use lazygp::config::experiment::{ExperimentConfig, Preset};
 use lazygp::coordinator::transport::run_worker_with;
 use lazygp::coordinator::worker::WorkerConfig;
@@ -27,7 +27,7 @@ use lazygp::coordinator::{
     RemoteEvalConfig, SocketPool, SocketPoolOptions, StudyService, StudySpec, Transport,
     WorkerOptions, WorkerPool,
 };
-use lazygp::gp::Surrogate;
+use lazygp::gp::{Surrogate, SurrogateSpec};
 use lazygp::metrics::AsyncTrace;
 use lazygp::metrics::Trace;
 use lazygp::objectives;
@@ -44,8 +44,9 @@ fn app() -> App {
                 .opt("preset", "named paper experiment (fig5, fig6, table1..table4)", None)
                 .opt("config", "path to a JSON experiment config", None)
                 .opt("objective", "objective name (see `lazygp list`)", Some("levy5"))
-                .opt("surrogate", "lazy | exact", Some("lazy"))
-                .opt("lag", "lagging factor l (0 = never re-fit)", Some("0"))
+                .opt("surrogate", "lazy | exact | dngo", Some("lazy"))
+                .opt("lag", "lagging factor l (0 = never re-fit; lazy only)", Some("0"))
+                .opt("rff-dim", "random-feature dimension (dngo only)", Some("128"))
                 .opt("iters", "optimization iterations", Some("100"))
                 .opt("seeds", "initial design size", Some("1"))
                 .opt("init", "random | lhs", Some("random"))
@@ -60,6 +61,9 @@ fn app() -> App {
         .command(
             CommandSpec::new("parallel", "run parallel BO (paper §3.4 / Table 4)")
                 .opt("objective", "objective name", Some("resnet_cifar10"))
+                .opt("surrogate", "lazy | exact | dngo", Some("lazy"))
+                .opt("lag", "lagging factor l (0 = never re-fit; lazy only)", Some("0"))
+                .opt("rff-dim", "random-feature dimension (dngo only)", Some("128"))
                 .opt("mode", "sync (round barrier) | async (fantasy-augmented)", Some("sync"))
                 .opt(
                     "pending",
@@ -109,8 +113,9 @@ fn app() -> App {
             CommandSpec::new("serve", "run many studies concurrently over one worker fleet")
                 .opt(
                     "studies",
-                    "semicolon-separated clauses of key=value pairs \
-                     (keys: name, objective, seed, evals, slots, weight, priority)",
+                    "semicolon-separated clauses of key=value pairs (keys: name, \
+                     objective, seed, evals, slots, weight, priority, surrogate, \
+                     lag, rff_dim)",
                     Some(""),
                 )
                 .opt("control", "bind the lifecycle RPC plane here (port 0 = ephemeral)", None)
@@ -225,13 +230,15 @@ fn experiment_from_args(p: &lazygp::util::cli::Parsed) -> lazygp::Result<Experim
         "lhs" => InitDesign::Lhs(seeds),
         other => lazygp::bail!("bad --init `{other}`"),
     };
-    let lag = p.usize("lag")?;
-    cfg.surrogate = match p.str_or("surrogate", "lazy").as_str() {
-        "lazy" => SurrogateChoice::Lazy { lag },
-        "exact" => SurrogateChoice::Exact,
-        other => lazygp::bail!("bad --surrogate `{other}`"),
-    };
+    cfg.surrogate = surrogate_from_args(p)?;
     Ok(cfg)
+}
+
+/// Resolve `--surrogate` / `--lag` / `--rff-dim` into a [`SurrogateSpec`].
+fn surrogate_from_args(p: &lazygp::util::cli::Parsed) -> lazygp::Result<SurrogateSpec> {
+    let name = p.str_or("surrogate", "lazy");
+    SurrogateSpec::from_cli(&name, p.usize("lag")?, p.usize("rff-dim")?)
+        .ok_or_else(|| lazygp::err!("bad --surrogate `{name}` (lazy | exact | dngo)"))
 }
 
 fn cmd_run(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
@@ -332,6 +339,7 @@ fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     let par =
         lazygp::util::parallel::Parallelism::from_threads_flag(p.usize("gp-threads")?);
     let bo = BoConfig::lazy()
+        .with_surrogate(surrogate_from_args(p)?)
         .with_seed(seed)
         .with_init(InitDesign::Random(1))
         .with_parallelism(par);
@@ -462,6 +470,9 @@ fn parse_studies(
         let mut slots = 1usize;
         let mut weight = 1u64;
         let mut priority = 0u32;
+        let mut surrogate_name = "lazy".to_string();
+        let mut lag = 0usize;
+        let mut rff_dim = lazygp::gp::DEFAULT_RFF_DIM;
         for kv in clause.split(',') {
             let kv = kv.trim();
             if kv.is_empty() {
@@ -483,14 +494,26 @@ fn parse_studies(
                 "priority" => {
                     priority = v.parse().map_err(|_| lazygp::err!("bad study priority `{v}`"))?;
                 }
+                "surrogate" => surrogate_name = v.to_string(),
+                "lag" => lag = v.parse().map_err(|_| lazygp::err!("bad study lag `{v}`"))?,
+                "rff_dim" => {
+                    rff_dim = v.parse().map_err(|_| lazygp::err!("bad study rff_dim `{v}`"))?;
+                }
                 other => lazygp::bail!("unknown study key `{other}`"),
             }
         }
         let objective =
             objective.ok_or_else(|| lazygp::err!("study clause {} missing objective=", i + 1))?;
+        let surrogate = SurrogateSpec::from_cli(&surrogate_name, lag, rff_dim)
+            .ok_or_else(|| lazygp::err!("bad study surrogate `{surrogate_name}`"))?;
         out.push(
             StudySpec::new(name, objective)
-                .with_bo(BoConfig::lazy().with_seed(seed).with_parallelism(par))
+                .with_bo(
+                    BoConfig::lazy()
+                        .with_surrogate(surrogate)
+                        .with_seed(seed)
+                        .with_parallelism(par),
+                )
                 .with_evals(evals)
                 .with_slots(slots)
                 .with_weight(weight)
@@ -654,7 +677,12 @@ fn cmd_resume(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
             lazygp::bail!("journal `{name}`: unknown objective `{}`", rec.open.objective);
         }
         let mut spec = StudySpec::new(rec.open.name.clone(), rec.open.objective.clone())
-            .with_bo(BoConfig::lazy().with_seed(rec.open.seed).with_parallelism(par))
+            .with_bo(
+                BoConfig::lazy()
+                    .with_surrogate(rec.open.surrogate)
+                    .with_seed(rec.open.seed)
+                    .with_parallelism(par),
+            )
             .with_evals(rec.open.evals)
             .with_slots(rec.open.slots)
             .with_journal_dir(&dir_path);
@@ -741,7 +769,7 @@ fn cmd_info() -> lazygp::Result<()> {
 }
 
 fn cmd_score(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
-    use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
+    use lazygp::acquisition::functions::Ei;
     use lazygp::gp::lazy::LazyGp;
     use lazygp::runtime::score_native;
     use lazygp::util::rng::Pcg64;
@@ -758,13 +786,15 @@ fn cmd_score(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
         let y = x.iter().map(|v| v.sin()).sum::<f64>();
         gp.observe(&x, y);
     }
-    let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, gp.incumbent().unwrap().1);
+    let acq = Ei { xi: 0.01 };
+    let best_f = gp.incumbent().unwrap().1;
     let cands: Vec<Vec<f64>> =
         (0..m).map(|_| (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect()).collect();
 
-    let (xla, t_xla) = lazygp::util::timer::timed(|| scorer.score_batch(&gp, &acq, 0.01, &cands));
+    let (xla, t_xla) =
+        lazygp::util::timer::timed(|| scorer.score_batch(&gp, &acq, best_f, 0.01, &cands));
     let xla = xla?;
-    let (native, t_nat) = lazygp::util::timer::timed(|| score_native(&gp, &acq, &cands));
+    let (native, t_nat) = lazygp::util::timer::timed(|| score_native(&gp, &acq, best_f, &cands));
     let max_dev = xla
         .iter()
         .zip(&native)

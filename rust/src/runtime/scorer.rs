@@ -4,7 +4,7 @@
 use super::pjrt::PjrtRuntime;
 use crate::gp::lazy::LazyGp;
 use crate::gp::Surrogate;
-use crate::acquisition::functions::Acquisition;
+use crate::acquisition::functions::AcquisitionFn;
 
 /// One candidate's scores.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -49,21 +49,25 @@ impl GpScorer {
 
     /// Score a candidate batch against a lazy GP's posterior, using the
     /// compiled artifact when a bucket fits and the native path otherwise.
+    /// `best_f` is the current incumbent (flows per call — the compiled EI
+    /// kernel receives it normalized); `xi` the exploration trade-off the
+    /// artifact was specialized for.
     pub fn score_batch(
         &self,
         gp: &LazyGp,
-        acq: &Acquisition,
+        acq: &dyn AcquisitionFn,
+        best_f: f64,
         xi: f64,
         cands: &[Vec<f64>],
     ) -> crate::Result<Vec<Score>> {
         let n = gp.len();
         let d = gp.points().first().map_or(0, |p| p.len());
         if n == 0 || d == 0 {
-            return Ok(score_native(gp, acq, cands));
+            return Ok(score_native(gp, acq, best_f, cands));
         }
         let Some(bucket) = self.runtime.bucket_for(n, d) else {
             self.native_calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            return Ok(score_native(gp, acq, cands));
+            return Ok(score_native(gp, acq, best_f, cands));
         };
         let bucket = bucket.clone();
         self.xla_calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -96,7 +100,7 @@ impl GpScorer {
         // this is exact, not an approximation.
         let offset = post.mean_offset;
         let scale = post.y_scale;
-        let best_norm = (acq.best_f - offset) / scale;
+        let best_norm = (best_f - offset) / scale;
 
         // --- chunk candidates through the fixed-M executable ---
         let m = bucket.m;
@@ -136,17 +140,22 @@ impl GpScorer {
 
 /// Native f64 scoring — the parity oracle and the fallback path. Uses the
 /// batched multi-RHS posterior (§Perf) rather than per-candidate solves.
-pub fn score_native(gp: &LazyGp, acq: &Acquisition, cands: &[Vec<f64>]) -> Vec<Score> {
+pub fn score_native(
+    gp: &LazyGp,
+    acq: &dyn AcquisitionFn,
+    best_f: f64,
+    cands: &[Vec<f64>],
+) -> Vec<Score> {
     gp.predict_batch(cands)
         .into_iter()
-        .map(|(mean, variance)| Score { mean, variance, ei: acq.score(mean, variance) })
+        .map(|(mean, variance)| Score { mean, variance, ei: acq.score(mean, variance, best_f) })
         .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::acquisition::functions::AcquisitionKind;
+    use crate::acquisition::functions::Ei;
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -159,17 +168,17 @@ mod tests {
             gp.observe(&x, y);
         }
         let best = gp.incumbent().unwrap().1;
-        let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, best);
+        let acq = Ei { xi: 0.01 };
         let cands: Vec<Vec<f64>> =
             (0..5).map(|_| vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)]).collect();
-        let scores = score_native(&gp, &acq, &cands);
+        let scores = score_native(&gp, &acq, best, &cands);
         for (s, c) in scores.iter().zip(&cands) {
             // batched multi-RHS and single solves differ only in summation
             // order — agree to f64 round-off
             let (m, v) = gp.predict(c);
             assert!((s.mean - m).abs() < 1e-12);
             assert!((s.variance - v).abs() < 1e-12);
-            assert!((s.ei - acq.score(m, v)).abs() < 1e-12);
+            assert!((s.ei - acq.score(m, v, best)).abs() < 1e-12);
             assert!(s.ei >= 0.0);
         }
     }

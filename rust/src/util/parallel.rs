@@ -4,8 +4,8 @@
 //! the two primitives the tiled kernels need:
 //!
 //! * [`Parallelism`] — the user-facing knob (`serial` / `auto` /
-//!   `threads(k)`), threaded through `LazyGpConfig`, `ExactGpConfig`,
-//!   `BoConfig` and the CLI's `--threads`.
+//!   `threads(k)`), threaded through the `Surrogate` backends (via
+//!   `SurrogateSpec::build`), `BoConfig` and the CLI's `--threads`.
 //! * [`for_each_job`] / [`for_each_chunk_mut`] — run a fixed job list on a
 //!   `std::thread::scope` pool with dynamic (work-stealing) assignment, so
 //!   triangular tiles of very different sizes still balance.

@@ -86,6 +86,7 @@ fn open_info(name: &str, seed: u64, evals: usize) -> OpenInfo {
         slots: 1,
         pending: "cl-min".into(),
         max_retries: 2,
+        surrogate: lazygp::gp::SurrogateSpec::default(),
     }
 }
 

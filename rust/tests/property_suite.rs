@@ -1,7 +1,7 @@
 //! Cross-module property suite: randomized invariants that tie the layers
 //! together, driven by the in-repo mini-proptest framework.
 
-use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
+use lazygp::acquisition::functions::{AcquisitionFn, Ei};
 use lazygp::bo::driver::{BoConfig, BoDriver, InitDesign, PendingStrategy};
 use lazygp::config::json::Json;
 use lazygp::gp::hyperfit::{fit_params_reference, FitSpace};
@@ -114,14 +114,14 @@ fn prop_predict_batch_equals_predict() {
 fn prop_ei_closed_form() {
     let g = pt::f64_in(-5.0, 5.0);
     pt::check("ei_closed_form", &g, |&best| {
-        let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.0 }, best);
+        let acq = Ei { xi: 0.0 };
         let sigma: f64 = 1.7;
         (0..40).all(|i| {
             let mu = -6.0 + i as f64 * 0.3;
             let gamma = mu - best;
             let z = gamma / sigma;
             let want = (gamma * norm_cdf(z) + sigma * norm_pdf(z)).max(0.0);
-            (acq.score(mu, sigma * sigma) - want).abs() < 1e-12
+            (acq.score(mu, sigma * sigma, best) - want).abs() < 1e-12
         })
     });
 }

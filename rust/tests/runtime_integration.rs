@@ -6,7 +6,7 @@
 //! (with a note) when it is absent so `cargo test` works in a fresh
 //! checkout.
 
-use lazygp::acquisition::functions::{Acquisition, AcquisitionKind};
+use lazygp::acquisition::functions::Ei;
 use lazygp::gp::lazy::LazyGp;
 use lazygp::gp::Surrogate;
 use lazygp::runtime::{score_native, GpScorer, PjrtRuntime};
@@ -78,11 +78,11 @@ fn xla_scores_match_native_f64() {
     for (n, d) in [(5usize, 2usize), (40, 3), (90, 5), (130, 2)] {
         let gp = trained_gp(&mut rng, n, d);
         let best = gp.incumbent().unwrap().1;
-        let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, best);
+        let acq = Ei { xi: 0.01 };
         let cands: Vec<Vec<f64>> =
             (0..100).map(|_| (0..d).map(|_| rng.uniform(-3.0, 3.0)).collect()).collect();
-        let xla = scorer.score_batch(&gp, &acq, 0.01, &cands).unwrap();
-        let native = score_native(&gp, &acq, &cands);
+        let xla = scorer.score_batch(&gp, &acq, best, 0.01, &cands).unwrap();
+        let native = score_native(&gp, &acq, best, &cands);
         for (i, (a, b)) in xla.iter().zip(&native).enumerate() {
             assert!(
                 (a.mean - b.mean).abs() < 1e-8,
@@ -119,10 +119,11 @@ fn oversized_state_falls_back_to_native() {
     let mut rng = Pcg64::new(163);
     // d=7 has no bucket
     let gp = trained_gp(&mut rng, 12, 7);
-    let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, gp.incumbent().unwrap().1);
+    let best = gp.incumbent().unwrap().1;
+    let acq = Ei { xi: 0.01 };
     let cands: Vec<Vec<f64>> =
         (0..10).map(|_| (0..7).map(|_| rng.uniform(-3.0, 3.0)).collect()).collect();
-    let scores = scorer.score_batch(&gp, &acq, 0.01, &cands).unwrap();
+    let scores = scorer.score_batch(&gp, &acq, best, 0.01, &cands).unwrap();
     assert_eq!(scores.len(), 10);
     let (_, native_calls) = scorer.call_counts();
     assert_eq!(native_calls, 1);
@@ -134,13 +135,14 @@ fn chunking_covers_large_candidate_sets() {
     let scorer = GpScorer::new(PjrtRuntime::new(dir).unwrap());
     let mut rng = Pcg64::new(167);
     let gp = trained_gp(&mut rng, 20, 2);
-    let acq = Acquisition::new(AcquisitionKind::Ei { xi: 0.01 }, gp.incumbent().unwrap().1);
+    let best = gp.incumbent().unwrap().1;
+    let acq = Ei { xi: 0.01 };
     // 300 candidates > M=128 ⇒ 3 chunks
     let cands: Vec<Vec<f64>> =
         (0..300).map(|_| vec![rng.uniform(-3.0, 3.0), rng.uniform(-3.0, 3.0)]).collect();
-    let xla = scorer.score_batch(&gp, &acq, 0.01, &cands).unwrap();
+    let xla = scorer.score_batch(&gp, &acq, best, 0.01, &cands).unwrap();
     assert_eq!(xla.len(), 300);
-    let native = score_native(&gp, &acq, &cands);
+    let native = score_native(&gp, &acq, best, &cands);
     for (a, b) in xla.iter().zip(&native) {
         assert!((a.ei - b.ei).abs() < 1e-5);
     }

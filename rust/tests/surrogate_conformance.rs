@@ -1,0 +1,209 @@
+//! Surrogate conformance suite: every backend behind [`Surrogate`] must
+//! honor the same contracts — checkpoint/rollback restores the posterior
+//! *bitwise*, truncate lands on the exact posterior of a fresh prefix run,
+//! fantasies round-trip through `retract_fantasies`, and `predict_batch`
+//! agrees with sequential `predict` to the bit. The suite runs the same
+//! assertions over LazyGp, ExactGp and DngoSurrogate (no-refit configs, so
+//! the hyper-parameters stay frozen and the bitwise contracts are exact),
+//! plus a smoke pass over every [`SurrogateSpec`]-built backend.
+
+use lazygp::gp::exact::{ExactGp, ExactGpConfig};
+use lazygp::gp::lazy::{LazyGp, LazyGpConfig};
+use lazygp::gp::linear::{DngoConfig, DngoSurrogate};
+use lazygp::gp::{Surrogate, SurrogateSpec};
+use lazygp::kernels::Kernel;
+use lazygp::util::parallel::Parallelism;
+use lazygp::util::rng::Pcg64;
+
+const DIM: usize = 2;
+
+/// The three backends under no-refit configs: frozen hyper-parameters are
+/// what make the bitwise checkpoint/truncate contracts testable.
+fn backends() -> Vec<(&'static str, Box<dyn Surrogate>)> {
+    vec![
+        ("lazy", Box::new(LazyGp::new(LazyGpConfig::default())) as Box<dyn Surrogate>),
+        (
+            "exact",
+            Box::new(ExactGp::new(ExactGpConfig { refit_each_step: false, ..Default::default() })),
+        ),
+        ("dngo", Box::new(DngoSurrogate::new(DngoConfig { rff_dim: 64, ..Default::default() }))),
+    ]
+}
+
+fn point(rng: &mut Pcg64) -> Vec<f64> {
+    (0..DIM).map(|_| rng.uniform(-3.0, 3.0)).collect()
+}
+
+fn objective(x: &[f64]) -> f64 {
+    -(x[0] * x[0] + 0.5 * x[1] * x[1]) + (x[0] * 2.0).sin()
+}
+
+fn feed(s: &mut dyn Surrogate, rng: &mut Pcg64, n: usize) -> Vec<(Vec<f64>, f64)> {
+    let mut fed = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = point(rng);
+        let y = objective(&x);
+        s.observe(&x, y);
+        fed.push((x, y));
+    }
+    fed
+}
+
+fn probes() -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::new(0xbeef);
+    (0..7).map(|_| point(&mut rng)).collect()
+}
+
+/// Bitwise fingerprint of the posterior at the probe grid.
+fn posterior_bits(s: &dyn Surrogate, probes: &[Vec<f64>]) -> Vec<(u64, u64)> {
+    probes.iter().map(|p| s.predict(p)).map(|(m, v)| (m.to_bits(), v.to_bits())).collect()
+}
+
+#[test]
+fn checkpoint_rollback_restores_posterior_bitwise() {
+    let probes = probes();
+    for (name, mut s) in backends() {
+        let mut rng = Pcg64::new(11);
+        feed(s.as_mut(), &mut rng, 20);
+        let before_bits = posterior_bits(s.as_ref(), &probes);
+        let before_digest = s.state_digest();
+        let before_len = s.len();
+
+        s.checkpoint();
+        let batch: Vec<(Vec<f64>, f64)> =
+            (0..4).map(|_| (point(&mut rng), -1.0)).collect();
+        s.observe_fantasies(&batch);
+        assert_eq!(s.fantasies_active(), 4, "{name}");
+        assert_ne!(
+            posterior_bits(s.as_ref(), &probes),
+            before_bits,
+            "{name}: fantasies must actually move the posterior"
+        );
+
+        assert_eq!(s.rollback(), 4, "{name}");
+        assert_eq!(s.fantasies_active(), 0, "{name}");
+        assert_eq!(s.len(), before_len, "{name}");
+        assert_eq!(posterior_bits(s.as_ref(), &probes), before_bits, "{name}");
+        assert_eq!(s.state_digest(), before_digest, "{name}");
+        // the window is closed: a second rollback is a no-op
+        assert_eq!(s.rollback(), 0, "{name}");
+    }
+}
+
+#[test]
+fn fantasies_roundtrip_through_retract() {
+    let probes = probes();
+    for (name, mut s) in backends() {
+        let mut rng = Pcg64::new(13);
+        feed(s.as_mut(), &mut rng, 15);
+        let before_bits = posterior_bits(s.as_ref(), &probes);
+        let incumbent_bits = s.incumbent().map(|(_, y)| y.to_bits());
+
+        // observe_fantasy opens the window implicitly — no explicit
+        // checkpoint call
+        for _ in 0..3 {
+            s.observe_fantasy(&point(&mut rng), 100.0);
+        }
+        assert_eq!(s.fantasies_active(), 3, "{name}");
+        assert_eq!(s.retract_fantasies(), 3, "{name}");
+        assert_eq!(s.fantasies_active(), 0, "{name}");
+        assert_eq!(posterior_bits(s.as_ref(), &probes), before_bits, "{name}");
+        // the +100.0 fantasy incumbent must not leak past retraction
+        assert_eq!(s.incumbent().map(|(_, y)| y.to_bits()), incumbent_bits, "{name}");
+    }
+}
+
+#[test]
+fn truncate_matches_fresh_prefix_bitwise() {
+    let probes = probes();
+    for ((name, mut full), (_, mut fresh)) in backends().into_iter().zip(backends()) {
+        let mut rng = Pcg64::new(17);
+        let fed = feed(full.as_mut(), &mut rng, 24);
+        full.truncate(10);
+        assert_eq!(full.len(), 10, "{name}");
+
+        for (x, y) in fed.iter().take(10) {
+            fresh.observe(x, *y);
+        }
+        assert_eq!(
+            posterior_bits(full.as_ref(), &probes),
+            posterior_bits(fresh.as_ref(), &probes),
+            "{name}: truncated posterior must be bitwise the fresh-prefix posterior"
+        );
+        assert_eq!(full.state_digest(), fresh.state_digest(), "{name}");
+        let (fx, fy) = full.incumbent().expect("incumbent after truncate");
+        let (gx, gy) = fresh.incumbent().expect("incumbent fresh");
+        assert_eq!(fy.to_bits(), gy.to_bits(), "{name}");
+        assert_eq!(fx, gx, "{name}");
+    }
+}
+
+#[test]
+fn truncate_to_zero_resets_to_prior() {
+    for (name, mut s) in backends() {
+        let mut rng = Pcg64::new(19);
+        feed(s.as_mut(), &mut rng, 8);
+        s.truncate(0);
+        assert_eq!(s.len(), 0, "{name}");
+        assert!(s.is_empty(), "{name}");
+        assert!(s.incumbent().is_none(), "{name}");
+        let (m, v) = s.predict(&[0.3, -0.4]);
+        assert_eq!(m, 0.0, "{name}: empty model predicts the prior mean");
+        assert!(v > 0.0, "{name}: empty model predicts the prior variance");
+        // the model remains usable after a full reset
+        feed(s.as_mut(), &mut rng, 5);
+        assert_eq!(s.len(), 5, "{name}");
+        assert!(s.predict(&[0.0, 0.0]).0.is_finite(), "{name}");
+    }
+}
+
+#[test]
+fn predict_batch_matches_sequential_bitwise() {
+    for (name, mut s) in backends() {
+        let mut rng = Pcg64::new(23);
+        feed(s.as_mut(), &mut rng, 18);
+        let cands: Vec<Vec<f64>> = (0..33).map(|_| point(&mut rng)).collect();
+        let batched = s.predict_batch(&cands);
+        assert_eq!(batched.len(), cands.len(), "{name}");
+        for (c, &(bm, bv)) in cands.iter().zip(&batched) {
+            let (m, v) = s.predict(c);
+            assert_eq!(m.to_bits(), bm.to_bits(), "{name}: batched mean diverged");
+            assert_eq!(v.to_bits(), bv.to_bits(), "{name}: batched variance diverged");
+        }
+    }
+}
+
+#[test]
+fn spec_built_backends_are_usable() {
+    let specs = [
+        (SurrogateSpec::Lazy { lag: 2 }, "lazy"),
+        (SurrogateSpec::Exact, "exact"),
+        (SurrogateSpec::Dngo { rff_dim: 32 }, "dngo"),
+    ];
+    for (spec, want_name) in specs {
+        let mut s = spec.build(Kernel::paper_default(), 5, Parallelism::Serial, 42);
+        assert_eq!(s.name(), want_name);
+        assert!(s.is_empty());
+        let mut rng = Pcg64::new(29);
+        feed(s.as_mut(), &mut rng, 8);
+        assert_eq!(s.len(), 8);
+        assert!(s.mem_bytes_est() > 0, "{want_name}");
+        let (m, v) = s.predict(&[0.1, 0.2]);
+        assert!(m.is_finite() && v.is_finite() && v >= 0.0, "{want_name}");
+        assert!(s.log_marginal_likelihood().is_finite(), "{want_name}");
+        assert!(s.fit(), "{want_name}: fit on a populated model must apply");
+        assert!(s.predict(&[0.1, 0.2]).0.is_finite(), "{want_name}");
+    }
+}
+
+#[test]
+fn update_seconds_accumulates_everywhere() {
+    for (name, mut s) in backends() {
+        let mut rng = Pcg64::new(31);
+        feed(s.as_mut(), &mut rng, 10);
+        assert!(s.update_seconds() >= 0.0, "{name}");
+        // async pressure is at minimum accepted by every backend
+        s.note_async_pressure(3);
+        s.note_async_pressure(0);
+    }
+}
