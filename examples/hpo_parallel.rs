@@ -18,6 +18,7 @@ use lazygp::bo::{BoConfig, InitDesign, PendingStrategy};
 use lazygp::coordinator::transport::run_worker;
 use lazygp::coordinator::{
     AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo, RemoteEvalConfig, SocketPool,
+    TrialPolicy,
 };
 use lazygp::objectives::trainer::ResNetCifarSim;
 use lazygp::objectives::Objective;
@@ -50,6 +51,7 @@ fn main() {
             fail_prob,
             max_retries: 3,
             seed: 4,
+            ..CoordinatorConfig::default()
         },
     );
     let sync_best = pbo.run_until_evals(evals).expect("sync arm lost its workers");
@@ -67,6 +69,7 @@ fn main() {
         fail_prob,
         max_retries: 3,
         seed: 4,
+        ..AsyncCoordinatorConfig::default()
     };
     let bo = BoConfig::lazy().with_seed(4).with_init(InitDesign::Random(1));
     let mut abo = if use_tcp {
@@ -77,6 +80,7 @@ fn main() {
                 sleep_scale,
                 fail_prob,
                 seed: 4,
+                policy: TrialPolicy::default(),
             },
         )
         .expect("bind loopback");

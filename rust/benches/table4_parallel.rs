@@ -27,6 +27,7 @@ use lazygp::bo::{BoConfig, BoDriver, InitDesign, PendingStrategy};
 use lazygp::coordinator::transport::run_worker;
 use lazygp::coordinator::{
     AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo, RemoteEvalConfig, SocketPool,
+    TrialPolicy,
 };
 use lazygp::metrics::Trace;
 use lazygp::objectives::trainer::ResNetCifarSim;
@@ -65,6 +66,7 @@ fn main() {
             max_retries: 3,
             sleep_scale: 2e-5,
             seed: 14,
+            ..CoordinatorConfig::default()
         },
     );
     par.run_until_evals(evals).expect("sync arm lost its workers");
@@ -84,6 +86,7 @@ fn main() {
             max_retries: 3,
             sleep_scale: 2e-5,
             seed: 14,
+            ..AsyncCoordinatorConfig::default()
         },
     );
     asy.run_until_evals(evals).expect("async arm lost its workers");
@@ -98,6 +101,7 @@ fn main() {
             sleep_scale: 2e-5,
             fail_prob,
             seed: 14,
+            policy: TrialPolicy::default(),
         },
     )
     .expect("bind loopback");
@@ -121,6 +125,7 @@ fn main() {
             max_retries: 3,
             sleep_scale: 2e-5,
             seed: 14,
+            ..AsyncCoordinatorConfig::default()
         },
     );
     tcp.run_until_evals(evals).expect("tcp arm lost its workers");

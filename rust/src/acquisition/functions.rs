@@ -84,6 +84,26 @@ pub trait AcquisitionFn: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
+/// Clamp a posterior to finite values before scoring. A surrogate fed a
+/// poisoned observation (NaN objective, crash-penalty arithmetic on an
+/// empty history, a degenerate kernel) can emit non-finite `(μ, σ²)`; left
+/// alone, one NaN score wins every `partial_cmp`-based argmax and the
+/// optimizer chases it forever. Non-finite mean falls back to the
+/// incumbent (a score of "no expected improvement"), non-finite or
+/// negative variance to the zero-variance floor.
+#[inline]
+fn sanitize(mean: f64, variance: f64, best_f: f64) -> (f64, f64) {
+    let m = if mean.is_finite() {
+        mean
+    } else if best_f.is_finite() {
+        best_f
+    } else {
+        0.0
+    };
+    let v = if variance.is_finite() { variance.max(0.0) } else { 0.0 };
+    (m, v)
+}
+
 /// Expected Improvement (Eq. 11, standard Jones/Mockus form — the paper's
 /// printed case split is garbled, see DESIGN.md §5):
 /// `γ = μ(x) − f'_n − ξ`, `Z = γ/σ`,
@@ -96,7 +116,8 @@ pub struct Ei {
 impl AcquisitionFn for Ei {
     #[inline]
     fn score(&self, mean: f64, variance: f64, best_f: f64) -> f64 {
-        let sigma = variance.max(0.0).sqrt();
+        let (mean, variance) = sanitize(mean, variance, best_f);
+        let sigma = variance.sqrt();
         if sigma <= 1e-12 {
             return 0.0;
         }
@@ -120,7 +141,8 @@ pub struct Pi {
 impl AcquisitionFn for Pi {
     #[inline]
     fn score(&self, mean: f64, variance: f64, best_f: f64) -> f64 {
-        let sigma = variance.max(0.0).sqrt();
+        let (mean, variance) = sanitize(mean, variance, best_f);
+        let sigma = variance.sqrt();
         if sigma <= 1e-12 {
             return if mean > best_f + self.xi { 1.0 } else { 0.0 };
         }
@@ -133,7 +155,7 @@ impl AcquisitionFn for Pi {
 }
 
 /// Upper Confidence Bound `μ + β σ` (maximization form). Ignores the
-/// incumbent entirely.
+/// incumbent except as the non-finite-mean fallback.
 #[derive(Debug, Clone, Copy)]
 pub struct Ucb {
     pub beta: f64,
@@ -141,8 +163,9 @@ pub struct Ucb {
 
 impl AcquisitionFn for Ucb {
     #[inline]
-    fn score(&self, mean: f64, variance: f64, _best_f: f64) -> f64 {
-        mean + self.beta * variance.max(0.0).sqrt()
+    fn score(&self, mean: f64, variance: f64, best_f: f64) -> f64 {
+        let (mean, variance) = sanitize(mean, variance, best_f);
+        mean + self.beta * variance.sqrt()
     }
 
     fn name(&self) -> &'static str {
@@ -282,6 +305,44 @@ mod tests {
     fn deprecated_shim_scores_identically() {
         let shim = Acquisition::new(AcquisitionKind::Ei { xi: 0.0 }, 0.7);
         assert_eq!(shim.score(1.0, 1.0).to_bits(), Ei { xi: 0.0 }.score(1.0, 1.0, 0.7).to_bits());
+    }
+
+    #[test]
+    fn non_finite_posteriors_never_score_nan() {
+        // a poisoned posterior must not hand `maximize_all`'s argmax a NaN
+        // (NaN wins every partial_cmp comparison and wedges the optimizer)
+        let scorers: Vec<Box<dyn AcquisitionFn>> = vec![
+            Box::new(Ei { xi: 0.01 }),
+            Box::new(Pi { xi: 0.01 }),
+            Box::new(Ucb { beta: 2.0 }),
+        ];
+        let bad = [
+            (f64::NAN, 1.0),
+            (0.5, f64::NAN),
+            (f64::INFINITY, 1.0),
+            (0.5, f64::INFINITY),
+            (f64::NAN, f64::NAN),
+            (f64::NEG_INFINITY, -3.0),
+        ];
+        for s in &scorers {
+            for &(m, v) in &bad {
+                let score = s.score(m, v, 0.25);
+                assert!(score.is_finite(), "{}({m},{v}) = {score}", s.name());
+            }
+            // even with no incumbent yet (−∞), the score stays non-NaN
+            let score = s.score(f64::NAN, f64::NAN, f64::NEG_INFINITY);
+            assert!(!score.is_nan(), "{}: {score}", s.name());
+        }
+    }
+
+    #[test]
+    fn non_finite_mean_scores_like_the_incumbent() {
+        // NaN mean degrades to "no expected improvement over best_f",
+        // keeping the point comparable to (and beatable by) honest ones
+        let a = ei();
+        let degraded = a.score(f64::NAN, 1.0, 0.7);
+        assert_eq!(degraded.to_bits(), a.score(0.7, 1.0, 0.7).to_bits());
+        assert!(a.score(1.5, 1.0, 0.7) > degraded);
     }
 
     #[test]

@@ -92,6 +92,15 @@ pub struct BoConfig {
     /// against a posterior carrying fantasy imputations for the slots
     /// already chosen, instead of taking `t` maxima of one static surface
     pub batch_hedged: bool,
+    /// crash-penalty quantile for failure-aware acquisition (CLI
+    /// `--crash-penalty`): a terminally failed trial is imputed into the
+    /// surrogate at this lower-tail quantile of the observed values
+    /// ([`BoDriver::observe_failure`]), so the acquisition steers away
+    /// from crash regions. `0.0` imputes the worst value seen so far;
+    /// values toward `1.0` punish crashes less severely. Negative (the
+    /// default) disables the imputation entirely — failed trials stay
+    /// invisible to the surrogate, matching pre-failure-aware behavior
+    pub crash_penalty_q: f64,
 }
 
 impl BoConfig {
@@ -108,6 +117,7 @@ impl BoConfig {
             parallelism: Parallelism::default(),
             fit_grid: crate::gp::hyperfit::FitSpace::default().grid,
             batch_hedged: false,
+            crash_penalty_q: -1.0,
         }
     }
 
@@ -131,6 +141,18 @@ impl BoConfig {
     pub fn with_surrogate(mut self, spec: SurrogateSpec) -> Self {
         self.surrogate = spec;
         self
+    }
+
+    /// Enable failure-aware acquisition with the given crash-penalty
+    /// quantile (clamped to `[0, 1]`).
+    pub fn with_crash_penalty(mut self, q: f64) -> Self {
+        self.crash_penalty_q = q.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Is crash-penalty imputation on? (Negative quantile = disabled.)
+    pub fn crash_penalty_enabled(&self) -> bool {
+        self.crash_penalty_q >= 0.0
     }
 
     /// Route `suggest_batch(t > 1)` through the hedged q-EI path.
@@ -211,6 +233,8 @@ pub struct BoDriver {
     best: Option<Best>,
     iter: usize,
     seeded: bool,
+    /// terminally failed locations imputed into the surrogate
+    failed: usize,
 }
 
 impl BoDriver {
@@ -226,6 +250,7 @@ impl BoDriver {
             best: None,
             iter: 0,
             seeded: false,
+            failed: 0,
         }
     }
 
@@ -400,6 +425,49 @@ impl BoDriver {
         self.ensure_seeded();
         self.iter += 1;
         self.record(x, eval, 0.0);
+    }
+
+    /// Record a *terminally failed* evaluation at `x`: the surrogate gets a
+    /// pseudo-observation at the crash penalty (the
+    /// [`crash_penalty_q`](BoConfig::crash_penalty_q) lower-tail quantile of
+    /// the values seen so far — a constant-liar pinned at the worst end), so
+    /// EI/PI/UCB stop re-proposing the crash region. Unlike
+    /// [`observe_external`](BoDriver::observe_external) this touches neither
+    /// [`history`](BoDriver::history), the incumbent, nor the iteration
+    /// counter — a failed trial produced no value and consumed no budget
+    /// entry; it only deforms the acquisition surface. The penalty is at or
+    /// below the worst real value, so it can never displace the incumbent.
+    ///
+    /// A no-op returning `false` when failure awareness is disabled
+    /// ([`crash_penalty_enabled`](BoConfig::crash_penalty_enabled)); returns
+    /// `true` when the pseudo-observation was inserted.
+    pub fn observe_failure(&mut self, x: &[f64]) -> bool {
+        if !self.config.crash_penalty_enabled() {
+            return false;
+        }
+        let penalty = self.crash_penalty();
+        self.surrogate.observe(x, penalty);
+        self.failed += 1;
+        true
+    }
+
+    /// The value [`observe_failure`](BoDriver::observe_failure) would impute
+    /// right now: the `crash_penalty_q` lower-tail quantile of the real
+    /// observations (0.0 before any observation exists).
+    pub fn crash_penalty(&self) -> f64 {
+        let mut ys: Vec<f64> = self.history.iter().map(|r| r.y).collect();
+        if ys.is_empty() {
+            return 0.0;
+        }
+        ys.sort_by(f64::total_cmp);
+        let q = self.config.crash_penalty_q.clamp(0.0, 1.0);
+        let idx = ((ys.len() - 1) as f64 * q).floor() as usize;
+        ys[idx]
+    }
+
+    /// How many failed locations have been imputed into the surrogate.
+    pub fn failed_observations(&self) -> usize {
+        self.failed
     }
 
     /// Augment the surrogate with fantasy observations for the `pending`
@@ -655,6 +723,62 @@ mod tests {
         assert_eq!(d.surrogate().len(), n0 + 1);
         assert!((d.sim_cost_total() - 1.5).abs() < 1e-12);
         assert_eq!(d.best().unwrap().value, -0.02);
+    }
+
+    #[test]
+    fn observe_failure_imputes_penalty_without_touching_history() {
+        let cfg = fast(
+            BoConfig::lazy()
+                .with_seed(23)
+                .with_init(InitDesign::Random(4))
+                .with_crash_penalty(0.0),
+        );
+        let mut d = BoDriver::new(cfg, Box::new(Sphere::new(2)));
+        d.ensure_seeded();
+        let hist = d.history().len();
+        let best = d.best().unwrap().value;
+        let n0 = d.surrogate().len();
+        let worst = d.history().iter().map(|r| r.y).fold(f64::INFINITY, f64::min);
+        // quantile 0.0 imputes the worst value seen
+        assert_eq!(d.crash_penalty(), worst);
+        assert!(d.observe_failure(&[0.9, -0.9]));
+        // the pseudo-observation reaches the surrogate but neither history,
+        // incumbent, nor cost accounting
+        assert_eq!(d.surrogate().len(), n0 + 1);
+        assert_eq!(d.history().len(), hist);
+        assert_eq!(d.best().unwrap().value, best);
+        assert_eq!(d.failed_observations(), 1);
+        // the crash region's posterior mean is dragged toward the penalty,
+        // below the incumbent, so the argmax cannot sit on it
+        let (m, _) = d.surrogate().predict(&[0.9, -0.9]);
+        assert!(m < best, "penalized mean {m} should undercut incumbent {best}");
+    }
+
+    #[test]
+    fn crash_penalty_quantile_picks_lower_tail() {
+        let cfg = fast(
+            BoConfig::lazy().with_seed(7).with_init(InitDesign::Random(1)).with_crash_penalty(0.5),
+        );
+        let mut d = BoDriver::new(cfg, Box::new(Sphere::new(2)));
+        assert_eq!(d.crash_penalty(), 0.0, "no observations yet");
+        for (i, y) in [-4.0, -3.0, -2.0, -1.0].into_iter().enumerate() {
+            let x = 0.1 * (i as f64 + 1.0);
+            d.observe_external(vec![x, x], Evaluation { value: y, sim_cost_s: 0.0 });
+        }
+        // 5 values (1 seed + 4 external); the median-ish index floor(4*0.5)=2
+        let mut ys: Vec<f64> = d.history().iter().map(|r| r.y).collect();
+        ys.sort_by(f64::total_cmp);
+        assert_eq!(d.crash_penalty(), ys[2]);
+        // out-of-range quantiles clamp instead of indexing out of bounds
+        let clamped = BoConfig::lazy().with_crash_penalty(7.5);
+        assert_eq!(clamped.crash_penalty_q, 1.0);
+        // and the default config leaves failure awareness off entirely
+        assert!(!BoConfig::lazy().crash_penalty_enabled());
+        let mut off = BoDriver::new(fast(BoConfig::lazy()), Box::new(Sphere::new(2)));
+        off.ensure_seeded();
+        let n = off.surrogate().len();
+        assert!(!off.observe_failure(&[0.2, 0.2]));
+        assert_eq!(off.surrogate().len(), n, "disabled imputation must be a no-op");
     }
 
     #[test]

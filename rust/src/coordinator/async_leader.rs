@@ -40,7 +40,7 @@ use std::sync::Arc;
 
 use super::journal::{ReplayEntry, StudyJournal};
 use super::leader::SharedObjective;
-use super::messages::{StudyId, Trial, TrialOutcome};
+use super::messages::{StudyId, Trial, TrialOutcome, TrialPolicy};
 use super::transport::{Transport, TransportStats};
 use super::worker::{WorkerConfig, WorkerPool};
 use crate::bo::driver::{Best, BoConfig, BoDriver, PendingStrategy};
@@ -63,6 +63,11 @@ pub struct AsyncCoordinatorConfig {
     /// maximum resubmissions of a failed trial before it is dropped
     pub max_retries: u32,
     pub seed: u64,
+    /// evaluation-fault policy: per-attempt deadline (enforced by the
+    /// workers, reaped by a remote transport at 2×), attempt budget
+    /// (non-zero `max_attempts` overrides `max_retries`), and the virtual
+    /// backoff charged between an attempt's failure and its retry
+    pub policy: TrialPolicy,
 }
 
 impl Default for AsyncCoordinatorConfig {
@@ -74,6 +79,7 @@ impl Default for AsyncCoordinatorConfig {
             fail_prob: 0.0,
             max_retries: 2,
             seed: 0,
+            policy: TrialPolicy::default(),
         }
     }
 }
@@ -175,6 +181,8 @@ impl AsyncBo {
                 fail_prob: config.fail_prob,
                 queue_cap: (config.workers * 2).max(8),
                 seed: config.seed ^ 0x9e37_79b9_7f4a_7c15,
+                policy: config.policy,
+                ..WorkerConfig::default()
             },
         );
         Self::with_transport(bo_config, objective, Box::new(pool), config)
@@ -430,10 +438,12 @@ impl AsyncBo {
     /// remaining pending set in **one grouped batched refresh**, and refill
     /// the freed virtual slot while budget remains. Returns leader
     /// `(suggest, sync)` seconds.
+    #[allow(clippy::too_many_arguments)]
     fn settle(
         &mut self,
         trial_id: u64,
         outcome: Option<(Vec<f64>, Evaluation)>,
+        failed_x: Option<Vec<f64>>,
         slot: usize,
         done_v: f64,
         total_evals: usize,
@@ -448,6 +458,14 @@ impl AsyncBo {
         if let Some((x, eval)) = outcome {
             self.driver.observe_external(x, eval);
             self.stats.completed += 1;
+        }
+        if let Some(x) = failed_x {
+            // crash-penalty imputation must land here — after the fantasy
+            // unwind (a pseudo-observation inserted inside a speculation
+            // window would be rolled back with it) and before the grouped
+            // re-fantasize/suggest consume the posterior. A no-op unless
+            // failure-aware acquisition is enabled.
+            self.driver.observe_failure(&x);
         }
         let will_refill = self.driver.history().len() + self.pending.len() < total_evals;
         if will_refill {
@@ -475,6 +493,17 @@ impl AsyncBo {
         (suggest_seconds, sync_seconds)
     }
 
+    /// Retry budget per trial: a non-zero `policy.max_attempts` caps the
+    /// whole chain (attempts = 1 + retries), otherwise the legacy
+    /// `max_retries` knob applies verbatim.
+    fn effective_retries(&self) -> u32 {
+        if self.config.policy.max_attempts > 0 {
+            self.config.policy.max_attempts.saturating_sub(1)
+        } else {
+            self.config.max_retries
+        }
+    }
+
     /// Receive one outcome and react: observe/retry/drop, then refill the
     /// freed slot. Fails only when the transport reports all workers lost.
     fn step_event(&mut self, total_evals: usize) -> crate::Result<()> {
@@ -496,15 +525,23 @@ impl AsyncBo {
         match o.result {
             Ok(eval) => {
                 // real result: unwind speculation, fold the truth in
-                let (sg, sy) =
-                    self.settle(o.trial.id, Some((o.trial.x.clone(), eval)), slot, done_v, total_evals);
+                let (sg, sy) = self.settle(
+                    o.trial.id,
+                    Some((o.trial.x.clone(), eval)),
+                    None,
+                    slot,
+                    done_v,
+                    total_evals,
+                );
                 suggest_seconds += sg;
                 sync_seconds += sy;
                 observed = true;
             }
-            Err(_) if o.trial.attempt < self.config.max_retries => {
+            Err(_) if o.trial.attempt < self.effective_retries() => {
                 // same point, same slot, fresh id; the pending entry (and
-                // its fantasy) stays valid, so no surrogate work is needed
+                // its fantasy) stays valid, so no surrogate work is needed.
+                // The policy's retry backoff is charged to virtual time, so
+                // the schedule stays deterministic without a real sleep.
                 let mut retry = o.trial.clone();
                 retry.attempt += 1;
                 retry.id = self.next_trial_id;
@@ -514,14 +551,33 @@ impl AsyncBo {
                 {
                     entry.0 = retry.id;
                 }
-                self.submit_v.insert(retry.id, (done_v, slot));
+                let backoff = self.config.policy.retry_backoff_s.max(0.0);
+                self.submit_v.insert(retry.id, (done_v + backoff, slot));
                 self.stats.retries += 1;
                 self.send_trial(retry);
                 retried = true;
             }
             Err(_) => {
-                // terminal failure: the fantasy for this point is stale
-                let (sg, sy) = self.settle(o.trial.id, None, slot, done_v, total_evals);
+                // terminal failure: the fantasy for this point is stale.
+                // When failure-aware acquisition is on, record the imputed
+                // penalty in the journal (advisory, like dispatches) before
+                // the settle folds the pseudo-observation into the surrogate.
+                if self.replay.is_empty() && self.driver.config.crash_penalty_enabled() {
+                    let penalty = self.driver.crash_penalty();
+                    if let Some(j) = self.journal.as_mut() {
+                        if let Err(e) = j.append_failed(o.trial.id, penalty) {
+                            self.journal_fault.get_or_insert(e);
+                        }
+                    }
+                }
+                let (sg, sy) = self.settle(
+                    o.trial.id,
+                    None,
+                    Some(o.trial.x.clone()),
+                    slot,
+                    done_v,
+                    total_evals,
+                );
                 suggest_seconds += sg;
                 sync_seconds += sy;
                 self.stats.dropped += 1;

@@ -10,7 +10,7 @@
 //! same [`FrameConfig`] discipline the TCP links negotiate):
 //!
 //! ```text
-//! journal  := open base? ( dispatch | outcome | retract )* finish?
+//! journal  := open base? ( dispatch | outcome | retract | failed )* finish?
 //! snapshot := open outcome*          (exactly `base.settled` of them)
 //! ```
 //!
@@ -24,6 +24,12 @@
 //!   replay can prove the resumed stream is positioned exactly where the
 //!   original was. Fsynced **before** the worker is ACKed.
 //! * `retract` — fantasies were rolled back (shutdown or error path).
+//! * `failed` — a terminally failed trial's location was imputed into the
+//!   surrogate at the crash penalty (failure-aware acquisition). Advisory,
+//!   like `dispatch`: replay re-derives the imputation from the journaled
+//!   `Err` outcome itself, so the record is a human-auditable trace of the
+//!   penalty applied, not replay input. Not fsynced on its own; dropped by
+//!   snapshot compaction.
 //! * `finish` — the study completed its full eval budget.
 //! * `base` — the first `settled` outcomes moved into the snapshot file;
 //!   only valid immediately after `open`, written by journal rotation.
@@ -56,7 +62,7 @@
 use std::fs::{self, File, OpenOptions};
 use std::path::{Path, PathBuf};
 
-use super::messages::{Trial, TrialOutcome};
+use super::messages::{Trial, TrialOutcome, TrialPolicy};
 use super::transport::{read_frame_with, write_frame_with, FrameConfig};
 use crate::config::json::Json;
 use crate::gp::SurrogateSpec;
@@ -141,6 +147,10 @@ pub struct OpenInfo {
     /// surrogate backend the study runs with; journals written before this
     /// field existed recover as the lazy default
     pub surrogate: SurrogateSpec,
+    /// evaluation-fault policy (deadline / attempt budget / retry backoff);
+    /// journals written before this field existed recover as the all-zero
+    /// default, which disables every knob
+    pub policy: TrialPolicy,
 }
 
 /// How one settled outcome replays: the outcome itself plus the driver
@@ -159,6 +169,7 @@ pub enum JournalRecord {
     Dispatch(Trial),
     Outcome { index: u64, outcome: TrialOutcome, rng_draws: u64 },
     Retract { count: u64 },
+    Failed { trial: u64, penalty: f64 },
     Finish,
     Base { settled: u64 },
 }
@@ -170,6 +181,7 @@ impl JournalRecord {
             JournalRecord::Dispatch(_) => "dispatch",
             JournalRecord::Outcome { .. } => "outcome",
             JournalRecord::Retract { .. } => "retract",
+            JournalRecord::Failed { .. } => "failed",
             JournalRecord::Finish => "finish",
             JournalRecord::Base { .. } => "base",
         }
@@ -177,21 +189,27 @@ impl JournalRecord {
 
     pub fn to_json(&self) -> Json {
         match self {
-            JournalRecord::Open(o) => Json::obj(vec![
-                ("type", Json::Str("open".into())),
-                ("format", Json::Num(o.format as f64)),
-                ("study", Json::Num(o.study as f64)),
-                ("name", Json::Str(o.name.clone())),
-                ("objective", Json::Str(o.objective.clone())),
-                // seeds may exceed 2^53 — travel as a decimal string, like
-                // the transport's Welcome frame does
-                ("seed", Json::Str(o.seed.to_string())),
-                ("evals", Json::Num(o.evals as f64)),
-                ("slots", Json::Num(o.slots as f64)),
-                ("pending", Json::Str(o.pending.clone())),
-                ("max_retries", Json::Num(f64::from(o.max_retries))),
-                ("surrogate", o.surrogate.to_json()),
-            ]),
+            JournalRecord::Open(o) => {
+                let mut fields = vec![
+                    ("type", Json::Str("open".into())),
+                    ("format", Json::Num(o.format as f64)),
+                    ("study", Json::Num(o.study as f64)),
+                    ("name", Json::Str(o.name.clone())),
+                    ("objective", Json::Str(o.objective.clone())),
+                    // seeds may exceed 2^53 — travel as a decimal string,
+                    // like the transport's Welcome frame does
+                    ("seed", Json::Str(o.seed.to_string())),
+                    ("evals", Json::Num(o.evals as f64)),
+                    ("slots", Json::Num(o.slots as f64)),
+                    ("pending", Json::Str(o.pending.clone())),
+                    ("max_retries", Json::Num(f64::from(o.max_retries))),
+                    ("surrogate", o.surrogate.to_json()),
+                ];
+                // only non-default knobs, so a policy-free study writes
+                // byte-identical records to the pre-policy format
+                fields.extend(o.policy.to_fields());
+                Json::obj(fields)
+            }
             JournalRecord::Dispatch(t) => Json::obj(vec![
                 ("type", Json::Str("dispatch".into())),
                 ("trial", t.to_json()),
@@ -206,6 +224,11 @@ impl JournalRecord {
             JournalRecord::Retract { count } => Json::obj(vec![
                 ("type", Json::Str("retract".into())),
                 ("count", Json::Num(*count as f64)),
+            ]),
+            JournalRecord::Failed { trial, penalty } => Json::obj(vec![
+                ("type", Json::Str("failed".into())),
+                ("trial", Json::Num(*trial as f64)),
+                ("penalty", Json::Num(*penalty)),
             ]),
             JournalRecord::Finish => Json::obj(vec![("type", Json::Str("finish".into()))]),
             JournalRecord::Base { settled } => Json::obj(vec![
@@ -238,6 +261,10 @@ impl JournalRecord {
                 // surrogate field and recover as the lazy default
                 let surrogate = SurrogateSpec::from_json_opt(j.get("surrogate"))
                     .map_err(|e| bad(format!("bad surrogate field: {e}")))?;
+                // optional too: missing policy fields decode to the
+                // all-disabled default
+                let policy =
+                    TrialPolicy::from_fields(j).map_err(|e| bad(format!("bad policy: {e}")))?;
                 Ok(JournalRecord::Open(OpenInfo {
                     format: num("format")?,
                     study: num("study")?,
@@ -249,6 +276,7 @@ impl JournalRecord {
                     pending: text("pending")?,
                     max_retries,
                     surrogate,
+                    policy,
                 }))
             }
             Some("dispatch") => {
@@ -264,6 +292,13 @@ impl JournalRecord {
                 })
             }
             Some("retract") => Ok(JournalRecord::Retract { count: num("count")? }),
+            Some("failed") => Ok(JournalRecord::Failed {
+                trial: num("trial")?,
+                penalty: j
+                    .get("penalty")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| bad("failed record without `penalty`"))?,
+            }),
             Some("finish") => Ok(JournalRecord::Finish),
             Some("base") => Ok(JournalRecord::Base { settled: num("settled")? }),
             Some(other) => Err(bad(format!("unknown record type `{other}`"))),
@@ -312,6 +347,9 @@ pub struct Recovery {
     pub dispatched: u64,
     /// fantasies retracted across all `retract` records
     pub retracted: u64,
+    /// crash-penalty imputations recorded by `failed` records (forensic
+    /// only — replay re-derives them from the `Err` outcomes)
+    pub failed: u64,
     /// whether a `finish` record was found
     pub finished: bool,
     /// bytes of torn tail truncated away during this recovery
@@ -379,6 +417,7 @@ pub fn recover(dir: &Path, name: &str) -> crate::Result<Option<Recovery>> {
     let mut snapshot_settled = 0u64;
     let mut dispatched = 0u64;
     let mut retracted = 0u64;
+    let mut failed = 0u64;
     let mut finished = false;
     for (i, rec) in records.iter().enumerate().skip(1) {
         match rec {
@@ -440,6 +479,7 @@ pub fn recover(dir: &Path, name: &str) -> crate::Result<Option<Recovery>> {
                 }
             }
             JournalRecord::Retract { count } => retracted += *count,
+            JournalRecord::Failed { .. } => failed += 1,
             JournalRecord::Finish => finished = true,
         }
     }
@@ -449,6 +489,7 @@ pub fn recover(dir: &Path, name: &str) -> crate::Result<Option<Recovery>> {
         snapshot_settled,
         dispatched,
         retracted,
+        failed,
         finished,
         torn_tail_bytes: torn,
         records_replayed: records.len() as u64,
@@ -587,6 +628,15 @@ impl StudyJournal {
         self.sync()
     }
 
+    /// Record a crash-penalty imputation for a terminally failed trial.
+    /// Advisory, like [`append_dispatch`](StudyJournal::append_dispatch):
+    /// replay re-derives the imputation from the journaled `Err` outcome,
+    /// so this is not fsynced on its own — the next outcome barrier
+    /// carries it to disk.
+    pub fn append_failed(&mut self, trial: u64, penalty: f64) -> crate::Result<()> {
+        self.append(&JournalRecord::Failed { trial, penalty })
+    }
+
     /// Durably record study completion.
     pub fn append_finish(&mut self) -> crate::Result<()> {
         self.append(&JournalRecord::Finish)?;
@@ -671,6 +721,7 @@ mod tests {
             pending: "mean".into(),
             max_retries: 1,
             surrogate: SurrogateSpec::Dngo { rff_dim: 64 },
+            policy: TrialPolicy::default(),
         }
     }
 
@@ -682,7 +733,22 @@ mod tests {
         match JournalRecord::from_json(&Json::parse(old).unwrap()).unwrap() {
             JournalRecord::Open(o) => {
                 assert_eq!(o.surrogate, SurrogateSpec::Lazy { lag: 0 });
+                // same era: no policy fields either — all knobs disabled
+                assert_eq!(o.policy, TrialPolicy::default());
             }
+            other => panic!("expected open, got {other:?}"),
+        }
+        // a policy-carrying open survives the roundtrip
+        let with_policy = OpenInfo {
+            policy: TrialPolicy { deadline_s: 2.5, max_attempts: 3, retry_backoff_s: 0.5 },
+            ..demo_open("pol")
+        };
+        match JournalRecord::from_json(
+            &Json::parse(&JournalRecord::Open(with_policy.clone()).to_json().to_string()).unwrap(),
+        )
+        .unwrap()
+        {
+            JournalRecord::Open(o) => assert_eq!(o, with_policy),
             other => panic!("expected open, got {other:?}"),
         }
     }
@@ -714,6 +780,7 @@ mod tests {
                 rng_draws: u64::MAX - 3,
             },
             JournalRecord::Retract { count: 2 },
+            JournalRecord::Failed { trial: 11, penalty: -0.0 },
             JournalRecord::Finish,
             JournalRecord::Base { settled: 9 },
         ];
@@ -736,6 +803,13 @@ mod tests {
                 }
                 (JournalRecord::Retract { count: a }, JournalRecord::Retract { count: b }) => {
                     assert_eq!(a, b)
+                }
+                (
+                    JournalRecord::Failed { trial: ta, penalty: pa },
+                    JournalRecord::Failed { trial: tb, penalty: pb },
+                ) => {
+                    assert_eq!(ta, tb);
+                    assert_eq!(pa.to_bits(), pb.to_bits(), "penalty must survive bitwise");
                 }
                 (JournalRecord::Base { settled: a }, JournalRecord::Base { settled: b }) => {
                     assert_eq!(a, b)

@@ -3,7 +3,7 @@
 
 use std::sync::Arc;
 
-use super::messages::{StudyId, Trial, TrialOutcome};
+use super::messages::{StudyId, Trial, TrialOutcome, TrialPolicy};
 use super::transport::{Transport, TransportStats};
 use super::worker::{WorkerConfig, WorkerPool};
 use crate::bo::driver::{Best, BoConfig, BoDriver};
@@ -25,6 +25,10 @@ pub struct CoordinatorConfig {
     /// maximum resubmissions of a failed trial before it is dropped
     pub max_retries: u32,
     pub seed: u64,
+    /// evaluation-fault policy: per-attempt deadline (enforced worker-side,
+    /// reaped attempts charge the deadline, not the declared cost) and the
+    /// attempt budget (non-zero `max_attempts` overrides `max_retries`)
+    pub policy: TrialPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -36,6 +40,7 @@ impl Default for CoordinatorConfig {
             fail_prob: 0.0,
             max_retries: 2,
             seed: 0,
+            policy: TrialPolicy::default(),
         }
     }
 }
@@ -112,6 +117,8 @@ impl ParallelBo {
                 fail_prob: config.fail_prob,
                 queue_cap: (config.batch_size * 2).max(8),
                 seed: config.seed ^ 0x9e37_79b9_7f4a_7c15,
+                policy: config.policy,
+                ..WorkerConfig::default()
             },
         );
         Self::with_transport(bo_config, objective, Box::new(pool), config)
@@ -163,6 +170,17 @@ impl ParallelBo {
         self.virtual_seconds
     }
 
+    /// Retry budget per trial: a non-zero `policy.max_attempts` caps the
+    /// whole chain (attempts = 1 + retries), otherwise the legacy
+    /// `max_retries` knob applies verbatim.
+    fn effective_retries(&self) -> u32 {
+        if self.config.policy.max_attempts > 0 {
+            self.config.policy.max_attempts.saturating_sub(1)
+        } else {
+            self.config.max_retries
+        }
+    }
+
     /// Run one round: suggest `t`, scatter, gather (with retries), sync.
     /// Returns the round record.
     ///
@@ -212,7 +230,7 @@ impl ParallelBo {
                     outcomes.push(o);
                 }
                 Err(_) => {
-                    if o.trial.attempt < self.config.max_retries {
+                    if o.trial.attempt < self.effective_retries() {
                         let mut retry = o.trial.clone();
                         retry.attempt += 1;
                         retry.id = self.next_trial_id;
@@ -411,6 +429,55 @@ mod tests {
         assert!(
             rec.virtual_wall_s >= 30.0,
             "retry chain cost must accumulate: {}",
+            rec.virtual_wall_s
+        );
+    }
+
+    #[test]
+    fn timed_out_attempts_charge_the_deadline_not_the_full_cost() {
+        use super::super::messages::TrialPolicy;
+        /// Declares a 10-simulated-second training; with `sleep_scale`
+        /// 0.01 the worker wants a 0.1 s nap, which overruns the 0.05 s
+        /// deadline — every attempt is reaped deterministically.
+        struct FixedCost;
+        impl Objective for FixedCost {
+            fn name(&self) -> &str {
+                "fixed_cost"
+            }
+            fn bounds(&self) -> &[(f64, f64)] {
+                &[(0.0, 1.0)]
+            }
+            fn eval(&self, _x: &[f64], _rng: &mut Pcg64) -> Evaluation {
+                Evaluation { value: 0.5, sim_cost_s: 10.0 }
+            }
+        }
+        use super::super::worker::WorkerPool;
+        let deadline = 0.05;
+        let obj: Arc<dyn Objective> = Arc::new(FixedCost);
+        let pool = WorkerPool::spawn(
+            Arc::clone(&obj),
+            WorkerConfig {
+                workers: 1,
+                queue_cap: 4,
+                sleep_scale: 0.01,
+                policy: TrialPolicy { deadline_s: deadline, ..TrialPolicy::default() },
+                ..WorkerConfig::default()
+            },
+        );
+        let mut pbo = ParallelBo::with_transport(
+            fast_bo(73),
+            obj,
+            Box::new(pool),
+            CoordinatorConfig { workers: 1, batch_size: 1, max_retries: 2, ..Default::default() },
+        );
+        let rec = pbo.round().unwrap().clone();
+        assert_eq!(rec.completed, 0);
+        assert_eq!(rec.dropped, 1);
+        // 3 reaped attempts charge 3 × deadline to the chain — not the
+        // 3 × 10 simulated seconds the objective declared
+        assert!(
+            rec.virtual_wall_s >= 3.0 * deadline && rec.virtual_wall_s < 1.0,
+            "deadline-capped chain cost expected: {}",
             rec.virtual_wall_s
         );
     }

@@ -92,6 +92,16 @@ pub enum TrialError {
     SimulatedCrash,
     /// The evaluation produced a non-finite value.
     NonFinite(f64),
+    /// The attempt overran its per-attempt deadline (seconds) and was
+    /// reaped by the worker's deadline enforcement.
+    Timeout(f64),
+    /// The attempt was cancelled (leader reaper or shutdown) before it
+    /// produced a result.
+    Cancelled,
+    /// An error kind this build does not know. Decoding preserves the
+    /// kind string verbatim so a newer peer's frames still parse (and
+    /// re-encode losslessly) instead of being rejected.
+    Other(String),
 }
 
 impl std::fmt::Display for TrialError {
@@ -99,11 +109,82 @@ impl std::fmt::Display for TrialError {
         match self {
             TrialError::SimulatedCrash => write!(f, "simulated worker crash"),
             TrialError::NonFinite(v) => write!(f, "objective returned non-finite value {v}"),
+            TrialError::Timeout(d) => write!(f, "attempt exceeded {d}s deadline"),
+            TrialError::Cancelled => write!(f, "attempt cancelled"),
+            TrialError::Other(kind) => write!(f, "unrecognized trial error `{kind}`"),
         }
     }
 }
 
 impl std::error::Error for TrialError {}
+
+/// Per-study evaluation-fault policy, shipped to workers in the Welcome
+/// and Study frames so deadline enforcement happens where the eval runs.
+///
+/// All-zero (the default) means "no policy": no deadline, inherit the
+/// coordinator's retry budget, no backoff — which is also what an old
+/// peer that has never heard of this struct behaves like, so decoding a
+/// frame with the fields missing yields `TrialPolicy::default()`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TrialPolicy {
+    /// Wall-clock seconds one attempt may run before the worker reaps it
+    /// with [`TrialError::Timeout`]. `0.0` disables deadlines.
+    pub deadline_s: f64,
+    /// Total attempts allowed per trial (so retries = `max_attempts - 1`).
+    /// `0` means "inherit the coordinator's `max_retries`".
+    pub max_attempts: u32,
+    /// Seconds the leader waits before re-dispatching a failed attempt.
+    /// `0.0` retries immediately.
+    pub retry_backoff_s: f64,
+}
+
+impl TrialPolicy {
+    /// True when every knob is at its "disabled / inherit" zero value.
+    pub fn is_default(&self) -> bool {
+        *self == TrialPolicy::default()
+    }
+
+    /// Flatten into `(key, value)` pairs for embedding in a larger frame
+    /// (Welcome / Study). Only non-default knobs are emitted, keeping old
+    /// peers' tolerant decoders byte-compatible when no policy is set.
+    pub fn to_fields(&self) -> Vec<(&'static str, Json)> {
+        let mut fields = Vec::new();
+        if self.deadline_s != 0.0 {
+            fields.push(("deadline_s", Json::Num(self.deadline_s)));
+        }
+        if self.max_attempts != 0 {
+            fields.push(("max_attempts", Json::Num(f64::from(self.max_attempts))));
+        }
+        if self.retry_backoff_s != 0.0 {
+            fields.push(("retry_backoff_s", Json::Num(self.retry_backoff_s)));
+        }
+        fields
+    }
+
+    /// Read the policy fields back out of a frame; every missing field is
+    /// its zero default (old-peer frames decode to `TrialPolicy::default()`).
+    pub fn from_fields(j: &Json) -> crate::Result<TrialPolicy> {
+        let deadline_s = match j.get("deadline_s") {
+            Some(v) => v.as_f64().ok_or_else(|| wire_err("invalid f64 field `deadline_s`"))?,
+            None => 0.0,
+        };
+        let max_attempts = match j.get("max_attempts") {
+            Some(v) => {
+                let raw =
+                    v.as_u64().ok_or_else(|| wire_err("invalid u64 field `max_attempts`"))?;
+                u32::try_from(raw).map_err(|_| wire_err("max_attempts exceeds u32"))?
+            }
+            None => 0,
+        };
+        let retry_backoff_s = match j.get("retry_backoff_s") {
+            Some(v) => {
+                v.as_f64().ok_or_else(|| wire_err("invalid f64 field `retry_backoff_s`"))?
+            }
+            None => 0.0,
+        };
+        Ok(TrialPolicy { deadline_s, max_attempts, retry_backoff_s })
+    }
+}
 
 /// Result of one trial, successful or not.
 #[derive(Debug, Clone)]
@@ -173,6 +254,12 @@ impl TrialError {
                 ("kind", Json::Str("non_finite".into())),
                 ("value", Json::Str(format!("{v}"))),
             ]),
+            TrialError::Timeout(d) => Json::obj(vec![
+                ("kind", Json::Str("timeout".into())),
+                ("deadline_s", Json::Num(*d)),
+            ]),
+            TrialError::Cancelled => Json::obj(vec![("kind", Json::Str("cancelled".into()))]),
+            TrialError::Other(kind) => Json::obj(vec![("kind", Json::Str(kind.clone()))]),
         }
     }
 
@@ -188,7 +275,20 @@ impl TrialError {
                     raw.parse().map_err(|_| wire_err("unparseable non_finite value"))?;
                 Ok(TrialError::NonFinite(v))
             }
-            _ => Err(wire_err("unknown trial error kind")),
+            Some("timeout") => {
+                let d = match j.get("deadline_s") {
+                    Some(v) => v
+                        .as_f64()
+                        .ok_or_else(|| wire_err("invalid f64 field `deadline_s`"))?,
+                    None => 0.0,
+                };
+                Ok(TrialError::Timeout(d))
+            }
+            Some("cancelled") => Ok(TrialError::Cancelled),
+            // a kind from a newer peer: keep it round-trippable instead of
+            // dropping the whole outcome on the floor
+            Some(other) => Ok(TrialError::Other(other.to_string())),
+            None => Err(wire_err("trial error without `kind`")),
         }
     }
 }
@@ -350,6 +450,54 @@ mod tests {
                 (a, b) => panic!("variant changed in flight: {a:?} → {b:?}"),
             }
         }
+    }
+
+    #[test]
+    fn new_trial_error_variants_roundtrip() {
+        for e in [TrialError::Timeout(12.5), TrialError::Cancelled] {
+            let back = TrialError::from_json(
+                &Json::parse(&e.to_json().to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back, e, "variant changed in flight");
+        }
+        match TrialError::from_json(&Json::parse(r#"{"kind": "timeout"}"#).unwrap()).unwrap() {
+            TrialError::Timeout(d) => assert_eq!(d, 0.0, "missing deadline defaults to 0"),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_trial_error_kind_is_preserved_not_rejected() {
+        // a frame from a *newer* peer with a kind this build has never
+        // heard of must still parse — and re-encode with the kind intact
+        let j = Json::parse(r#"{"kind": "oom_killed"}"#).unwrap();
+        let e = TrialError::from_json(&j).unwrap();
+        assert_eq!(e, TrialError::Other("oom_killed".into()));
+        let re = TrialError::from_json(&Json::parse(&e.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(re, e, "unknown kind must survive a re-encode cycle");
+        // but a kind-less error object is still malformed
+        assert!(TrialError::from_json(&Json::parse(r#"{"value": "NaN"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn trial_policy_fields_roundtrip_and_default() {
+        let p = TrialPolicy { deadline_s: 30.0, max_attempts: 4, retry_backoff_s: 0.25 };
+        let j = Json::obj(p.to_fields());
+        let back = TrialPolicy::from_fields(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, p);
+
+        // an old peer's frame carries none of the policy keys: all-default
+        let legacy = Json::parse(r#"{"worker_id": 1, "seed": 7}"#).unwrap();
+        let back = TrialPolicy::from_fields(&legacy).unwrap();
+        assert!(back.is_default());
+
+        // the default policy emits no fields at all (byte-compat with old frames)
+        assert!(TrialPolicy::default().to_fields().is_empty());
+
+        // present-but-invalid knobs are rejected, not defaulted
+        let bad = Json::parse(r#"{"max_attempts": -3}"#).unwrap();
+        assert!(TrialPolicy::from_fields(&bad).is_err());
     }
 
     #[test]

@@ -72,7 +72,7 @@ pub use journal::{
     StudyJournal, JOURNAL_FORMAT,
 };
 pub use leader::{CoordinatorConfig, ParallelBo, RoundRecord};
-pub use messages::{StudyId, Trial, TrialError, TrialOutcome};
+pub use messages::{StudyId, Trial, TrialError, TrialOutcome, TrialPolicy};
 pub use service::{
     ControlClient, ControlServer, CreateStudy, StudyResult, StudyService, StudySpec, StudyStatus,
     TraceRow,
@@ -81,4 +81,4 @@ pub use transport::{
     ReconnectConfig, RemoteEvalConfig, SocketPool, SocketPoolOptions, Transport, TransportStats,
     WorkerOptions,
 };
-pub use worker::{ShutdownToken, WorkerPool};
+pub use worker::{FaultKind, FaultPlan, ShutdownToken, WorkerConfig, WorkerPool};

@@ -58,7 +58,7 @@ use crate::objectives;
 
 use super::async_leader::{AsyncBo, AsyncCoordinatorConfig};
 use super::journal::{recover, OpenInfo, ReplayEntry, StudyJournal, JOURNAL_FORMAT};
-use super::messages::{StudyId, Trial, TrialOutcome};
+use super::messages::{StudyId, Trial, TrialOutcome, TrialPolicy};
 use super::transport::{
     read_frame_with, write_frame_with, FrameConfig, RemoteEvalConfig, Transport, TransportStats,
 };
@@ -101,6 +101,9 @@ pub struct StudySpec {
     /// persistence. An existing journal for this study name is resumed
     /// (replayed bitwise), a missing one is created.
     pub journal_dir: Option<std::path::PathBuf>,
+    /// evaluation-fault policy: per-attempt deadline, attempt budget
+    /// (non-zero `max_attempts` overrides `max_retries`), retry backoff
+    pub policy: TrialPolicy,
 }
 
 impl StudySpec {
@@ -118,6 +121,7 @@ impl StudySpec {
             sleep_scale: 0.0,
             fail_prob: 0.0,
             journal_dir: None,
+            policy: TrialPolicy::default(),
         }
     }
 
@@ -148,6 +152,11 @@ impl StudySpec {
 
     pub fn with_journal_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
         self.journal_dir = Some(dir.into());
+        self
+    }
+
+    pub fn with_policy(mut self, policy: TrialPolicy) -> Self {
+        self.policy = policy;
         self
     }
 }
@@ -501,6 +510,7 @@ fn run_study(core: Arc<ServiceCore>, id: StudyId, spec: StudySpec, handle: Study
         fail_prob: 0.0,   // failure injection happens worker-side, per study
         max_retries: spec.max_retries,
         seed: spec.bo.seed,
+        policy: spec.policy,
     };
     let name = spec.name.clone();
     let evals = spec.evals;
@@ -515,6 +525,7 @@ fn run_study(core: Arc<ServiceCore>, id: StudyId, spec: StudySpec, handle: Study
         pending: spec.pending.name().into(),
         max_retries: spec.max_retries,
         surrogate: spec.bo.surrogate,
+        policy: spec.policy,
     };
     let journal_dir = spec.journal_dir.clone();
     let mut bo = AsyncBo::with_transport(spec.bo, objective, Box::new(handle), config);
@@ -616,6 +627,7 @@ impl StudyService {
                     sleep_scale: spec.sleep_scale,
                     fail_prob: spec.fail_prob,
                     seed: spec.bo.seed,
+                    policy: spec.policy,
                 },
             )?;
         }
@@ -1269,6 +1281,7 @@ mod tests {
                     fail_prob: 0.0,
                     max_retries: 2,
                     seed,
+                    ..AsyncCoordinatorConfig::default()
                 },
             );
             let solo_best = solo.run_until_evals(10).unwrap();

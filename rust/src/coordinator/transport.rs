@@ -103,8 +103,8 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::messages::{StudyId, Trial, TrialOutcome};
-use super::worker::{WorkerConfig, WorkerPool};
+use super::messages::{StudyId, Trial, TrialError, TrialOutcome, TrialPolicy};
+use super::worker::{FaultPlan, WorkerConfig, WorkerPool};
 use crate::config::json::Json;
 use crate::metrics::{FaultCounters, StudyCounter, TransportCounter};
 use crate::util::rng::Pcg64;
@@ -116,8 +116,12 @@ use crate::util::rng::Pcg64;
 /// field on trials and the per-study [`LeaderMsg::Study`] registration
 /// frame; version 4 added durability ACKs — the `Welcome.acks` flag and
 /// the per-outcome [`LeaderMsg::Ack`] that lets workers drop delivered
-/// outcomes from their redelivery buffers once the leader journaled them.
-pub const PROTOCOL_VERSION: u64 = 4;
+/// outcomes from their redelivery buffers once the leader journaled them;
+/// version 5 added evaluation-fault tolerance — the per-study
+/// [`TrialPolicy`] fields on Welcome/Study frames (missing fields decode
+/// to the no-policy default) and the [`LeaderMsg::Cancel`] frame the
+/// leader's reaper uses to free a slot held by an overdue trial.
+pub const PROTOCOL_VERSION: u64 = 5;
 
 /// Default upper bound on a single frame (a trial or outcome is ~hundreds
 /// of bytes; anything near this is corruption, fail fast). Configurable
@@ -291,7 +295,7 @@ impl Transport for WorkerPool {
         TransportStats {
             backend: "thread",
             links: self.link_counters(),
-            faults: FaultCounters::default(),
+            faults: self.fault_counters(),
             studies: self.study_counters(),
         }
     }
@@ -533,6 +537,10 @@ pub enum LeaderMsg {
         /// redelivery until the matching Ack arrives. Decoding tolerates a
         /// missing flag (pre-durability leaders) as `false`.
         acks: bool,
+        /// evaluation-fault policy for the base (solo) study; missing
+        /// fields decode to the all-disabled default, so pre-v5 leaders'
+        /// Welcomes still parse.
+        policy: TrialPolicy,
     },
     /// Register (or update) a study's evaluation config on the worker:
     /// trials whose [`Trial::study`] matches use this objective and these
@@ -549,6 +557,12 @@ pub enum LeaderMsg {
     /// record fsynced): the worker drops it from its redelivery buffer.
     /// Only sent when the `Welcome` advertised `acks`.
     Ack { study: u64, trial: u64 },
+    /// Abandon `(study, trial)`: the leader's reaper has given up on this
+    /// dispatch (the trial overran 2× its deadline and was requeued
+    /// elsewhere). The worker interrupts the evaluation if it is running,
+    /// discards it if still queued, and must *not* transmit an outcome for
+    /// it — the exactly-once gate has already moved on.
+    Cancel { study: u64, trial: u64 },
     /// Stop immediately, abandoning in-flight trials (the leader only
     /// sends this at its own teardown, where results are discarded).
     Shutdown,
@@ -625,8 +639,9 @@ impl LeaderMsg {
                 seed,
                 net,
                 acks,
+                policy,
             } => {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("type", Json::Str("welcome".into())),
                     ("worker_id", Json::Num(*worker_id as f64)),
                     ("objective", Json::Str(objective.clone())),
@@ -638,16 +653,22 @@ impl LeaderMsg {
                     ("max_frame", Json::Num(net.max_frame_bytes as f64)),
                     ("checksum", Json::Bool(net.checksum)),
                     ("acks", Json::Bool(*acks)),
-                ])
+                ];
+                fields.extend(policy.to_fields());
+                Json::obj(fields)
             }
-            LeaderMsg::Study { study, eval } => Json::obj(vec![
-                ("type", Json::Str("study".into())),
-                ("study", Json::Num(*study as f64)),
-                ("objective", Json::Str(eval.objective.clone())),
-                ("sleep_scale", Json::Num(eval.sleep_scale)),
-                ("fail_prob", Json::Num(eval.fail_prob)),
-                ("seed", Json::Str(eval.seed.to_string())),
-            ]),
+            LeaderMsg::Study { study, eval } => {
+                let mut fields = vec![
+                    ("type", Json::Str("study".into())),
+                    ("study", Json::Num(*study as f64)),
+                    ("objective", Json::Str(eval.objective.clone())),
+                    ("sleep_scale", Json::Num(eval.sleep_scale)),
+                    ("fail_prob", Json::Num(eval.fail_prob)),
+                    ("seed", Json::Str(eval.seed.to_string())),
+                ];
+                fields.extend(eval.policy.to_fields());
+                Json::obj(fields)
+            }
             LeaderMsg::Dispatch(t) => {
                 Json::obj(vec![("type", Json::Str("trial".into())), ("trial", t.to_json())])
             }
@@ -656,6 +677,11 @@ impl LeaderMsg {
             }
             LeaderMsg::Ack { study, trial } => Json::obj(vec![
                 ("type", Json::Str("ack".into())),
+                ("study", Json::Num(*study as f64)),
+                ("trial", Json::Num(*trial as f64)),
+            ]),
+            LeaderMsg::Cancel { study, trial } => Json::obj(vec![
+                ("type", Json::Str("cancel".into())),
                 ("study", Json::Num(*study as f64)),
                 ("trial", Json::Num(*trial as f64)),
             ]),
@@ -709,6 +735,8 @@ impl LeaderMsg {
                 // tolerate a missing flag: a pre-durability leader simply
                 // never ACKs, so the worker must not retain outcomes
                 acks: j.get("acks").and_then(Json::as_bool).unwrap_or(false),
+                // missing policy fields (pre-v5 leader) decode to all-off
+                policy: TrialPolicy::from_fields(j)?,
             }),
             Some("study") => Ok(LeaderMsg::Study {
                 study: j
@@ -736,6 +764,7 @@ impl LeaderMsg {
                         .ok_or_else(|| {
                             crate::Error::protocol("study frame without parseable seed")
                         })?,
+                    policy: TrialPolicy::from_fields(j)?,
                 },
             }),
             Some("trial") => Ok(LeaderMsg::Dispatch(Trial::from_json(
@@ -756,6 +785,16 @@ impl LeaderMsg {
                     .get("trial")
                     .and_then(Json::as_u64)
                     .ok_or_else(|| crate::Error::protocol("ack without trial"))?,
+            }),
+            Some("cancel") => Ok(LeaderMsg::Cancel {
+                study: j
+                    .get("study")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| crate::Error::protocol("cancel without study"))?,
+                trial: j
+                    .get("trial")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| crate::Error::protocol("cancel without trial"))?,
             }),
             Some("shutdown") => Ok(LeaderMsg::Shutdown),
             other => Err(crate::Error::protocol(format!("unknown leader message type {other:?}"))),
@@ -779,6 +818,10 @@ pub struct RemoteEvalConfig {
     pub fail_prob: f64,
     /// base RNG seed; each worker derives its own stream from its id
     pub seed: u64,
+    /// evaluation-fault policy (per-attempt deadline / attempt budget /
+    /// retry backoff); the all-zero default disables everything, matching
+    /// the behavior of pre-v5 peers that never heard of it
+    pub policy: TrialPolicy,
 }
 
 /// Tuning of a [`SocketPool`]'s fault handling; see
@@ -800,6 +843,14 @@ pub struct SocketPoolOptions {
     /// this long with zero live links; [`Duration::ZERO`] waits forever
     /// (the pre-hardening behavior)
     pub worker_loss_deadline: Duration,
+    /// consecutive failed/timed-out outcomes from one worker before the
+    /// leader quarantines its link for a cool-down (`0` disables the
+    /// circuit breaker — the default, so existing failure-injection runs
+    /// keep their semantics)
+    pub quarantine_after: u32,
+    /// how long a quarantined link is excluded from dispatch before its
+    /// half-open probe trial
+    pub quarantine_cooldown: Duration,
 }
 
 impl Default for SocketPoolOptions {
@@ -810,6 +861,8 @@ impl Default for SocketPoolOptions {
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
             checksum: false,
             worker_loss_deadline: Duration::from_secs(60),
+            quarantine_after: 0,
+            quarantine_cooldown: Duration::from_millis(500),
         }
     }
 }
@@ -855,9 +908,72 @@ struct Conn {
     /// (study, trial id) → (trial, dispatch instant); drained on disconnect
     in_flight: Mutex<HashMap<GateKey, (Trial, Instant)>>,
     stats: ConnStats,
+    /// circuit-breaker state: consecutive failed/timed-out outcomes
+    consec_failures: AtomicU64,
+    /// quarantine cool-down end, if the breaker tripped
+    quarantined_until: Mutex<Option<Instant>>,
+    /// half-open: the cool-down elapsed and the next dispatch is the probe
+    probing: AtomicBool,
+}
+
+/// How much work the circuit breaker lets a connection accept right now.
+#[derive(PartialEq)]
+enum BreakerGate {
+    /// healthy (or breaker disabled): dispatch up to capacity
+    Open,
+    /// cool-down elapsed: exactly one probe trial allowed
+    HalfOpen,
+    /// quarantined: no dispatch until the cool-down elapses
+    Closed,
 }
 
 impl Conn {
+    fn fresh(id: usize, capacity: usize, writer: TcpStream) -> Conn {
+        Conn {
+            id,
+            capacity,
+            alive: AtomicBool::new(true),
+            writer: Mutex::new(writer),
+            in_flight: Mutex::new(HashMap::new()),
+            stats: ConnStats::default(),
+            consec_failures: AtomicU64::new(0),
+            quarantined_until: Mutex::new(None),
+            probing: AtomicBool::new(false),
+        }
+    }
+
+    /// Is the link inside its quarantine cool-down right now?
+    fn is_quarantined(&self, now: Instant) -> bool {
+        matches!(
+            *self.quarantined_until.lock().expect("quarantine poisoned"),
+            Some(until) if now < until
+        )
+    }
+
+    /// Consult (and advance) the breaker: a cool-down that just elapsed
+    /// transitions the link to half-open, where a single probe trial is
+    /// allowed until its outcome settles the state.
+    fn breaker_gate(&self, now: Instant) -> BreakerGate {
+        let mut until = self.quarantined_until.lock().expect("quarantine poisoned");
+        match *until {
+            Some(t) if now < t => BreakerGate::Closed,
+            Some(_) => {
+                *until = None;
+                self.probing.store(true, Ordering::SeqCst);
+                BreakerGate::HalfOpen
+            }
+            None if self.probing.load(Ordering::SeqCst) => BreakerGate::HalfOpen,
+            None => BreakerGate::Open,
+        }
+    }
+
+    /// Trip the breaker: quarantine this link for `cooldown`.
+    fn quarantine(&self, cooldown: Duration) {
+        *self.quarantined_until.lock().expect("quarantine poisoned") =
+            Some(Instant::now() + cooldown);
+        self.probing.store(false, Ordering::SeqCst);
+        self.consec_failures.store(0, Ordering::SeqCst);
+    }
     fn counter(&self) -> TransportCounter {
         let completed = self.stats.completed.load(Ordering::Relaxed);
         let rtt_ns = self.stats.rtt_ns.load(Ordering::Relaxed);
@@ -883,6 +999,9 @@ struct FaultTotals {
     frames_rejected: AtomicU64,
     relistens: AtomicU64,
     duplicates_dropped: AtomicU64,
+    timeouts: AtomicU64,
+    cancels: AtomicU64,
+    quarantines: AtomicU64,
 }
 
 impl FaultTotals {
@@ -894,6 +1013,9 @@ impl FaultTotals {
             frames_rejected: self.frames_rejected.load(Ordering::Relaxed),
             relistens: self.relistens.load(Ordering::Relaxed),
             duplicates_dropped: self.duplicates_dropped.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            cancels: self.cancels.load(Ordering::Relaxed),
+            quarantines: self.quarantines.load(Ordering::Relaxed),
         }
     }
 }
@@ -928,6 +1050,10 @@ struct Shared {
     study_stats: Mutex<BTreeMap<u64, StudyTotals>>,
     next_conn_id: AtomicUsize,
     faults: FaultTotals,
+    /// circuit breaker: consecutive failures before quarantine (0 = off)
+    quarantine_after: u32,
+    /// circuit breaker: cool-down before the half-open probe
+    quarantine_cooldown: Duration,
     reader_handles: Mutex<Vec<JoinHandle<()>>>,
     /// ACK mode: a journaling coordinator attached
     /// ([`Transport::preload_gate`]), so Welcomes advertise `acks` and
@@ -1021,6 +1147,8 @@ impl SocketPool {
             study_stats: Mutex::new(BTreeMap::new()),
             next_conn_id: AtomicUsize::new(0),
             faults: FaultTotals::default(),
+            quarantine_after: options.quarantine_after,
+            quarantine_cooldown: options.quarantine_cooldown,
             reader_handles: Mutex::new(Vec::new()),
             acks: AtomicBool::new(false),
         });
@@ -1056,14 +1184,18 @@ impl SocketPool {
         self.local_addr
     }
 
-    /// Sum of trial slots over live connections.
+    /// Sum of trial slots over live connections. Quarantined links are
+    /// excluded for the duration of their cool-down, so fair-share
+    /// capacity (and the service scheduler built on it) never counts a
+    /// worker the circuit breaker has benched.
     pub fn capacity_now(&self) -> usize {
+        let now = Instant::now();
         self.shared
             .conns
             .lock()
             .expect("conns poisoned")
             .iter()
-            .filter(|c| c.alive.load(Ordering::SeqCst))
+            .filter(|c| c.alive.load(Ordering::SeqCst) && !c.is_quarantined(now))
             .map(|c| c.capacity)
             .sum()
     }
@@ -1420,17 +1552,11 @@ fn admit_worker(
         seed: shared.eval.seed,
         net: shared.net,
         acks: shared.acks.load(Ordering::SeqCst),
+        policy: shared.eval.policy,
     };
     let mut writer = stream;
     let welcome_bytes = write_frame_with(&mut writer, &welcome.to_json(), &hs)?;
-    let conn = Arc::new(Conn {
-        id,
-        capacity,
-        alive: AtomicBool::new(true),
-        writer: Mutex::new(writer),
-        in_flight: Mutex::new(HashMap::new()),
-        stats: ConnStats::default(),
-    });
+    let conn = Arc::new(Conn::fresh(id, capacity, writer));
     conn.stats.bytes_rx.store(hello_bytes, Ordering::Relaxed);
     conn.stats.bytes_tx.store(welcome_bytes, Ordering::Relaxed);
     // Replay the study registry before the conn becomes dispatchable, and
@@ -1551,6 +1677,30 @@ fn deliver_outcome(
             .rtt_ns
             .fetch_add(dispatched_at.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
+    // Circuit breaker: score the outcome against this link's health.
+    // Cancelled attempts never reach here (workers swallow them instead of
+    // transmitting), so only genuine failures and timeouts count.
+    match outcome.result {
+        Err(ref e) => {
+            if matches!(e, TrialError::Timeout(_)) {
+                shared.faults.timeouts.fetch_add(1, Ordering::Relaxed);
+            }
+            if shared.quarantine_after > 0 {
+                let probing = conn.probing.swap(false, Ordering::SeqCst);
+                let consec = conn.consec_failures.fetch_add(1, Ordering::SeqCst) + 1;
+                // a failed half-open probe re-trips the breaker immediately
+                if probing || consec >= u64::from(shared.quarantine_after) {
+                    conn.quarantine(shared.quarantine_cooldown);
+                    shared.faults.quarantines.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(_) if shared.quarantine_after > 0 => {
+            conn.consec_failures.store(0, Ordering::SeqCst);
+            conn.probing.store(false, Ordering::SeqCst);
+        }
+        Ok(_) => {}
+    }
     // cancel a pending requeue of the same trial: it may sit in the queue
     // (rescued from this worker's previous link) or in another connection's
     // in-flight set (already re-dispatched)
@@ -1612,12 +1762,22 @@ fn disconnect(conn: &Conn, shared: &Shared) {
 }
 
 /// Move queued trials onto free worker slots; park on the condvar
-/// otherwise.
+/// otherwise. Between dispatches (at least every ~100 ms, the condvar
+/// timeout) the loop sweeps in-flight trials for deadline overruns.
 fn dispatch_loop(shared: &Arc<Shared>) {
+    const REAP_PERIOD: Duration = Duration::from_millis(100);
+    let mut last_reap = Instant::now();
     let mut guard = shared.queue.lock().expect("queue poisoned");
     loop {
         if shared.stop.load(Ordering::SeqCst) {
             return;
+        }
+        if last_reap.elapsed() >= REAP_PERIOD {
+            drop(guard); // the reaper takes conn/queue locks itself
+            reap_overdue(shared);
+            last_reap = Instant::now();
+            guard = shared.queue.lock().expect("queue poisoned");
+            continue;
         }
         let target = if guard.is_empty() { None } else { pick_target(shared) };
         match target {
@@ -1639,14 +1799,100 @@ fn dispatch_loop(shared: &Arc<Shared>) {
     }
 }
 
-/// Least-loaded live connection with a free slot.
+/// Leader-side backstop for wedged evaluations: cancel and requeue any
+/// in-flight trial that has overrun **2×** its study's deadline. Workers
+/// enforce the deadline themselves at 1× and report `Timeout`, so the
+/// reaper only fires when that report never arrives (wedged worker, lost
+/// frame) — the factor of two keeps the two mechanisms from racing. The
+/// requeue goes through the exactly-once gate: an outcome that crosses the
+/// reap wins, and [`send_trial`] re-checks the gate before re-dispatching.
+fn reap_overdue(shared: &Arc<Shared>) {
+    let now = Instant::now();
+    let default_deadline = shared.eval.policy.deadline_s;
+    let deadlines: BTreeMap<u64, f64> = shared
+        .studies
+        .lock()
+        .expect("studies poisoned")
+        .iter()
+        .map(|(&s, e)| (s, e.policy.deadline_s))
+        .collect();
+    if default_deadline <= 0.0 && deadlines.values().all(|&d| d <= 0.0) {
+        return; // no study has a deadline: nothing can be overdue
+    }
+    let conns: Vec<Arc<Conn>> =
+        shared.conns.lock().expect("conns poisoned").to_vec();
+    for conn in conns {
+        if !conn.alive.load(Ordering::SeqCst) {
+            continue; // disconnect already rescued its in-flight set
+        }
+        let overdue: Vec<Trial> = {
+            let mut in_flight = conn.in_flight.lock().expect("in_flight poisoned");
+            let keys: Vec<GateKey> = in_flight
+                .iter()
+                .filter(|(_, (t, at))| {
+                    let d = deadlines
+                        .get(&t.study.0)
+                        .copied()
+                        .unwrap_or(default_deadline);
+                    d > 0.0 && now.duration_since(*at).as_secs_f64() >= 2.0 * d
+                })
+                .map(|(k, _)| *k)
+                .collect();
+            keys.into_iter()
+                .filter_map(|k| in_flight.remove(&k).map(|(t, _)| t))
+                .collect()
+        };
+        if overdue.is_empty() {
+            continue;
+        }
+        let fc = shared.net.frame_config();
+        for trial in overdue {
+            let key = gate_key(&trial);
+            // best-effort cancel frame; the worker interrupts the attempt
+            // and swallows its outcome, so no stale result can follow
+            let msg =
+                LeaderMsg::Cancel { study: trial.study.0, trial: trial.id }.to_json();
+            {
+                let mut w = conn.writer.lock().expect("writer poisoned");
+                if let Ok(n) = write_frame_with(&mut *w, &msg, &fc) {
+                    conn.stats.bytes_tx.fetch_add(n, Ordering::Relaxed);
+                }
+            }
+            shared.faults.cancels.fetch_add(1, Ordering::Relaxed);
+            if shared.delivered.lock().expect("delivered poisoned").contains(&key) {
+                continue; // outcome crossed the reap: it wins, no requeue
+            }
+            conn.stats.requeued.fetch_add(1, Ordering::Relaxed);
+            shared.faults.requeued.fetch_add(1, Ordering::Relaxed);
+            shared.note_study(trial.study, |s| s.requeued += 1);
+            shared.queue.lock().expect("queue poisoned").push_front(trial);
+        }
+        shared.cv.notify_all();
+    }
+}
+
+/// Least-loaded live connection with a free slot, as the circuit breaker
+/// allows: a quarantined link gets nothing, a half-open link gets exactly
+/// one probe trial (its outcome decides rejoin vs re-quarantine).
 fn pick_target(shared: &Shared) -> Option<Arc<Conn>> {
+    let now = Instant::now();
     let conns = shared.conns.lock().expect("conns poisoned");
     conns
         .iter()
         .filter(|c| c.alive.load(Ordering::SeqCst))
-        .map(|c| (c.in_flight.lock().expect("in_flight poisoned").len(), c))
-        .filter(|(load, c)| *load < c.capacity)
+        .filter_map(|c| {
+            let load = c.in_flight.lock().expect("in_flight poisoned").len();
+            let allowed = match c.breaker_gate(now) {
+                BreakerGate::Open => c.capacity,
+                BreakerGate::HalfOpen => 1,
+                BreakerGate::Closed => 0,
+            };
+            if load < allowed {
+                Some((load, c))
+            } else {
+                None
+            }
+        })
         .min_by_key(|(load, _)| *load)
         .map(|(_, c)| Arc::clone(c))
 }
@@ -1759,11 +2005,19 @@ pub struct WorkerOptions {
     /// in-process [`WorkerPool`]
     pub threads: usize,
     pub reconnect: ReconnectConfig,
+    /// scripted fault injection for the chaos harness (empty = faithful
+    /// evaluation); keyed by `(study, trial id)` so it is deterministic
+    /// regardless of which thread picks a trial up
+    pub fault_plan: FaultPlan,
 }
 
 impl Default for WorkerOptions {
     fn default() -> Self {
-        Self { threads: 1, reconnect: ReconnectConfig::default() }
+        Self {
+            threads: 1,
+            reconnect: ReconnectConfig::default(),
+            fault_plan: FaultPlan::default(),
+        }
     }
 }
 
@@ -1843,6 +2097,7 @@ pub fn run_worker_with(addr: &str, opts: WorkerOptions) -> crate::Result<WorkerS
             stream,
             threads,
             resume,
+            &opts.fault_plan,
             &mut pool,
             &mut objective_name,
             &mut undelivered,
@@ -1917,10 +2172,12 @@ fn connect_leader(addr: &str) -> crate::Result<TcpStream> {
 /// then the trial/outcome/heartbeat pump. `Ok` means the handshake
 /// succeeded and reports how the session ended; `Err` means the handshake
 /// itself failed.
+#[allow(clippy::too_many_arguments)]
 fn worker_session(
     stream: TcpStream,
     threads: usize,
     resume: Option<u64>,
+    fault_plan: &FaultPlan,
     pool: &mut Option<WorkerPool>,
     objective_name: &mut Option<String>,
     undelivered: &mut Vec<TrialOutcome>,
@@ -1940,8 +2197,16 @@ fn worker_session(
         &hs,
     )?;
     let (welcome, _) = read_frame_with(&mut reader, &hs)?;
-    let LeaderMsg::Welcome { worker_id, objective, sleep_scale, fail_prob, seed, net, acks } =
-        LeaderMsg::from_json(&welcome)?
+    let LeaderMsg::Welcome {
+        worker_id,
+        objective,
+        sleep_scale,
+        fail_prob,
+        seed,
+        net,
+        acks,
+        policy,
+    } = LeaderMsg::from_json(&welcome)?
     else {
         return Err(crate::Error::protocol("leader did not start with a welcome message"));
     };
@@ -1972,6 +2237,9 @@ fn worker_session(
                 queue_cap: (threads * 2).max(8),
                 // distinct stream per daemon; threads substream via wid
                 seed: seed ^ worker_id.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                policy,
+                fault_plan: fault_plan.clone(),
+                ..WorkerConfig::default()
             },
         ));
     }
@@ -2012,6 +2280,7 @@ fn worker_session(
         Trial(Trial),
         Study(StudyId, RemoteEvalConfig),
         Ack(u64, u64),
+        Cancel(u64, u64),
         Pong,
         Shutdown,
         Lost,
@@ -2032,6 +2301,11 @@ fn worker_session(
                 }
                 Ok(LeaderMsg::Ack { study, trial }) => {
                     if in_tx.send(Inbound::Ack(study, trial)).is_err() {
+                        return;
+                    }
+                }
+                Ok(LeaderMsg::Cancel { study, trial }) => {
+                    if in_tx.send(Inbound::Cancel(study, trial)).is_err() {
                         return;
                     }
                 }
@@ -2065,11 +2339,17 @@ fn worker_session(
     let mut seq: u64 = 0;
     let mut last_tx = Instant::now();
     let mut fatal: Option<crate::Error> = None;
+    // trials handed to the pool this session whose outcome has not come
+    // back yet; a Cancel for anything else is stale (the leader reaped a
+    // Dispatch that never arrived here) and must be ignored, or it would
+    // park a pending cancel that kills the trial's *re-dispatched* attempt
+    let mut submitted: HashSet<GateKey> = HashSet::new();
     let end;
     'pump: loop {
         loop {
             match in_rx.try_recv() {
                 Ok(Inbound::Trial(t)) => {
+                    submitted.insert(gate_key(&t));
                     // the leader never over-fills a slot, so this submit
                     // cannot block longer than the queue bound
                     pool.submit(t);
@@ -2087,6 +2367,13 @@ fn worker_session(
                 Ok(Inbound::Ack(study, trial)) => {
                     // durable on the leader's disk: the retention copy can go
                     unacked.retain(|o| !(o.trial.study.0 == study && o.trial.id == trial));
+                }
+                Ok(Inbound::Cancel(study, trial)) => {
+                    if submitted.contains(&(study, trial)) {
+                        // interrupt the attempt (mid-eval or still queued);
+                        // its Cancelled outcome is swallowed below
+                        pool.cancel(StudyId(study), trial);
+                    }
                 }
                 Ok(Inbound::Pong) => {}
                 Ok(Inbound::Shutdown) => {
@@ -2111,6 +2398,14 @@ fn worker_session(
             }
         }
         if let Some(outcome) = pool.recv_timeout(Duration::from_millis(20)) {
+            submitted.remove(&gate_key(&outcome.trial));
+            // a cancelled attempt is discarded, never transmitted: the
+            // leader already requeued the trial, and a stale outcome racing
+            // the retry would trip its exactly-once gate against the fresh
+            // attempt's result
+            if matches!(outcome.result, Err(TrialError::Cancelled)) {
+                continue;
+            }
             match write_frame_with(
                 &mut writer,
                 &WorkerMsg::Outcome(outcome.clone()).to_json(),
@@ -2275,6 +2570,7 @@ mod tests {
             max_frame_bytes: 1 << 20,
             checksum: true,
         };
+        let policy = TrialPolicy { deadline_s: 1.5, max_attempts: 4, retry_backoff_s: 0.25 };
         let welcome = LeaderMsg::Welcome {
             worker_id: 4,
             objective: "sphere5".into(),
@@ -2283,6 +2579,7 @@ mod tests {
             seed: u64::MAX, // full range must survive the string encoding
             net,
             acks: true,
+            policy,
         };
         let LeaderMsg::Welcome {
             worker_id,
@@ -2292,6 +2589,7 @@ mod tests {
             seed,
             net: back,
             acks,
+            policy: policy_back,
         } = LeaderMsg::from_json(&Json::parse(&welcome.to_json().to_string()).unwrap()).unwrap()
         else {
             panic!("wrong variant");
@@ -2303,16 +2601,22 @@ mod tests {
         assert_eq!(seed, u64::MAX);
         assert_eq!(back, net);
         assert!(acks);
+        assert_eq!(policy_back, policy);
 
-        // a version-3 Welcome (no `acks` key) decodes with acks disabled
+        // a version-3 Welcome (no `acks` key, no policy fields) decodes
+        // with acks disabled and the all-default trial policy
         let mut legacy = welcome.to_json();
         if let Json::Obj(pairs) = &mut legacy {
-            pairs.retain(|(k, _)| k.as_str() != "acks");
+            pairs.retain(|(k, _)| {
+                !matches!(k.as_str(), "acks" | "deadline_s" | "max_attempts" | "retry_backoff_s")
+            });
         }
-        let LeaderMsg::Welcome { acks, .. } = LeaderMsg::from_json(&legacy).unwrap() else {
+        let LeaderMsg::Welcome { acks, policy, .. } = LeaderMsg::from_json(&legacy).unwrap()
+        else {
             panic!("wrong variant");
         };
         assert!(!acks);
+        assert_eq!(policy, TrialPolicy::default());
 
         let ack = LeaderMsg::Ack { study: 3, trial: 91 };
         let LeaderMsg::Ack { study, trial } =
@@ -2321,6 +2625,14 @@ mod tests {
             panic!("wrong variant");
         };
         assert_eq!((study, trial), (3, 91));
+
+        let cancel = LeaderMsg::Cancel { study: 2, trial: 17 };
+        let LeaderMsg::Cancel { study, trial } =
+            LeaderMsg::from_json(&Json::parse(&cancel.to_json().to_string()).unwrap()).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        assert_eq!((study, trial), (2, 17));
 
         let ping = WorkerMsg::Ping { seq: 42 };
         let WorkerMsg::Ping { seq } =
@@ -2357,7 +2669,8 @@ mod tests {
         assert!(!o.is_ok());
         assert_eq!(o.sim_cost_s, 3.5);
 
-        // the v3 study-registration frame, seed at the full u64 range
+        // the v3 study-registration frame, seed at the full u64 range,
+        // now carrying a per-study trial policy
         let reg = LeaderMsg::Study {
             study: 7,
             eval: RemoteEvalConfig {
@@ -2365,6 +2678,7 @@ mod tests {
                 sleep_scale: 1e-6,
                 fail_prob: 0.125,
                 seed: u64::MAX,
+                policy: TrialPolicy { deadline_s: 0.75, ..TrialPolicy::default() },
             },
         };
         let LeaderMsg::Study { study, eval } =
@@ -2377,6 +2691,18 @@ mod tests {
         assert_eq!(eval.sleep_scale, 1e-6);
         assert_eq!(eval.fail_prob, 0.125);
         assert_eq!(eval.seed, u64::MAX);
+        assert_eq!(eval.policy.deadline_s, 0.75);
+        assert_eq!(eval.policy.max_attempts, 0);
+
+        // a legacy Study frame (no policy keys) decodes to the default
+        let mut legacy_reg = reg.to_json();
+        if let Json::Obj(pairs) = &mut legacy_reg {
+            pairs.retain(|(k, _)| k.as_str() != "deadline_s");
+        }
+        let LeaderMsg::Study { eval, .. } = LeaderMsg::from_json(&legacy_reg).unwrap() else {
+            panic!("wrong variant");
+        };
+        assert_eq!(eval.policy, TrialPolicy::default());
     }
 
     #[test]
@@ -2490,6 +2816,7 @@ mod tests {
                 sleep_scale: 0.0,
                 fail_prob: 0.0,
                 seed: 0,
+                policy: TrialPolicy::default(),
             },
         )
         .unwrap();

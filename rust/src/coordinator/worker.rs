@@ -7,16 +7,16 @@
 //! pool teardown — and `lazygp worker` daemons — exit promptly instead of
 //! sleeping out the remaining simulated seconds.
 
-use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::messages::{StudyId, Trial, TrialError, TrialOutcome};
+use super::messages::{StudyId, Trial, TrialError, TrialOutcome, TrialPolicy};
 use super::transport::RemoteEvalConfig;
-use crate::metrics::{StudyCounter, TransportCounter};
+use crate::metrics::{FaultCounters, StudyCounter, TransportCounter};
 use crate::objectives::Objective;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -68,6 +68,52 @@ impl ShutdownToken {
     }
 }
 
+/// What a scripted evaluation fault does to the trial it hits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The evaluation wedges: it never produces a result on its own and
+    /// holds its slot until the deadline reaps it (or a cancel/shutdown
+    /// interrupts it when no deadline is set).
+    Hang,
+    /// The training process crashes ([`TrialError::SimulatedCrash`]).
+    Crash,
+    /// The objective diverges to NaN ([`TrialError::NonFinite`]).
+    NaN,
+    /// The attempt runs `factor`× slower than its simulated cost says —
+    /// slow enough, it trips the deadline deterministically.
+    Slow(f64),
+}
+
+/// A scripted, deterministic fault schedule for the chaos harness: faults
+/// keyed by `(study, trial id)` so the plan is independent of which worker
+/// thread picks a trial up and in what order — the same plan produces the
+/// same faults at any thread count.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    faults: BTreeMap<(u64, u64), FaultKind>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `kind` for the given trial of `study` (builder-style).
+    pub fn with(mut self, study: StudyId, trial_id: u64, kind: FaultKind) -> Self {
+        self.faults.insert((study.0, trial_id), kind);
+        self
+    }
+
+    /// The fault scripted for this trial, if any.
+    pub fn get(&self, study: StudyId, trial_id: u64) -> Option<FaultKind> {
+        self.faults.get(&(study.0, trial_id)).copied()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
 /// Worker-pool configuration.
 #[derive(Debug, Clone)]
 pub struct WorkerConfig {
@@ -82,11 +128,33 @@ pub struct WorkerConfig {
     pub queue_cap: usize,
     /// base seed for the per-worker RNG streams
     pub seed: u64,
+    /// evaluation-fault policy (deadline / attempts / backoff) applied to
+    /// trials of unregistered studies; registered studies carry their own
+    /// policy in their [`RemoteEvalConfig`]
+    pub policy: TrialPolicy,
+    /// scripted faults for the chaos harness (empty = no injection)
+    pub fault_plan: FaultPlan,
+    /// consecutive failed/timed-out trials before a worker thread
+    /// quarantines itself for a cool-down (`0` disables the breaker)
+    pub quarantine_after: u32,
+    /// real seconds a quarantined worker sits out before its half-open
+    /// probe trial
+    pub quarantine_cooldown_s: f64,
 }
 
 impl Default for WorkerConfig {
     fn default() -> Self {
-        Self { workers: 4, sleep_scale: 0.0, fail_prob: 0.0, queue_cap: 64, seed: 0 }
+        Self {
+            workers: 4,
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+            queue_cap: 64,
+            seed: 0,
+            policy: TrialPolicy::default(),
+            fault_plan: FaultPlan::default(),
+            quarantine_after: 0,
+            quarantine_cooldown_s: 0.05,
+        }
     }
 }
 
@@ -103,6 +171,80 @@ struct StudyEval {
     objective: Arc<dyn Objective>,
     sleep_scale: f64,
     fail_prob: f64,
+    policy: TrialPolicy,
+}
+
+/// Evaluation-fault telemetry shared by the pool facade and its worker
+/// threads (the three counters [`FaultCounters`] gained in this layer).
+#[derive(Default)]
+struct FaultTally {
+    timeouts: AtomicU64,
+    cancels: AtomicU64,
+    quarantines: AtomicU64,
+}
+
+/// Per-trial cancellation registry. Each in-flight evaluation sleeps on its
+/// own [`ShutdownToken`]; [`cancel`](CancelTable::cancel) wakes exactly one
+/// trial, pool shutdown wakes them all, and a cancel that races the queue
+/// (the trial was submitted but no thread picked it up yet) is parked in
+/// `pending` so the eventual pickup returns [`TrialError::Cancelled`]
+/// without running the objective.
+#[derive(Default)]
+struct CancelTable {
+    live: Mutex<HashMap<(u64, u64), (ShutdownToken, Arc<AtomicBool>)>>,
+    pending: Mutex<HashSet<(u64, u64)>>,
+    shutting_down: AtomicBool,
+}
+
+impl CancelTable {
+    /// Register a trial about to be evaluated; returns its private token
+    /// and the flag distinguishing "cancelled" from "pool shutdown" wakes.
+    fn begin(&self, key: (u64, u64)) -> (ShutdownToken, Arc<AtomicBool>) {
+        let token = ShutdownToken::new();
+        let flag = Arc::new(AtomicBool::new(false));
+        self.live
+            .lock()
+            .expect("cancel table poisoned")
+            .insert(key, (token.clone(), Arc::clone(&flag)));
+        // check *after* insert so a concurrent shutdown either sees the
+        // entry (and triggers it) or set the flag first (and we see it)
+        if self.shutting_down.load(Ordering::SeqCst) {
+            token.trigger();
+        }
+        (token, flag)
+    }
+
+    fn end(&self, key: (u64, u64)) {
+        self.live.lock().expect("cancel table poisoned").remove(&key);
+    }
+
+    /// True when the trial was in the queue with a cancel parked on it.
+    fn take_pending(&self, key: (u64, u64)) -> bool {
+        self.pending.lock().expect("cancel table poisoned").remove(&key)
+    }
+
+    /// Cancel one trial: wake its evaluation if running, otherwise park the
+    /// cancel for its pickup. Returns `true` if the trial was mid-eval.
+    fn cancel(&self, key: (u64, u64)) -> bool {
+        if let Some((token, flag)) = self.live.lock().expect("cancel table poisoned").get(&key) {
+            flag.store(true, Ordering::SeqCst);
+            token.trigger();
+            true
+        } else {
+            self.pending.lock().expect("cancel table poisoned").insert(key);
+            false
+        }
+    }
+
+    /// Pool teardown: wake every in-flight evaluation (without marking any
+    /// of them cancelled — shutdown keeps the pre-cancel semantics of
+    /// returning the computed result with its sleep cut short).
+    fn shutdown_all(&self) {
+        self.shutting_down.store(true, Ordering::SeqCst);
+        for (token, _) in self.live.lock().expect("cancel table poisoned").values() {
+            token.trigger();
+        }
+    }
 }
 
 /// Per-study dispatch/completion tally (rows exist only for studies
@@ -149,6 +291,10 @@ pub struct WorkerPool {
     /// real submit time per in-flight `(study, trial id)`, for round-trip
     /// latency (studies may reuse bare ids)
     submit_times: Mutex<HashMap<(u64, u64), Instant>>,
+    /// per-trial cancellation registry (leader reaper / chaos harness)
+    cancels: Arc<CancelTable>,
+    /// evaluation-fault counters (timeouts / cancels / quarantines)
+    faults: Arc<FaultTally>,
 }
 
 impl WorkerPool {
@@ -165,9 +311,12 @@ impl WorkerPool {
                 objective: Arc::clone(&objective),
                 sleep_scale: config.sleep_scale,
                 fail_prob: config.fail_prob,
+                policy: config.policy,
             },
             table: Mutex::new(BTreeMap::new()),
         });
+        let cancels = Arc::new(CancelTable::default());
+        let faults = Arc::new(FaultTally::default());
         let mut handles = Vec::with_capacity(config.workers);
         for wid in 0..config.workers {
             let rx = Arc::clone(&rx);
@@ -175,10 +324,14 @@ impl WorkerPool {
             let table = Arc::clone(&studies);
             let cfg = config.clone();
             let token = shutdown.clone();
+            let cancel_table = Arc::clone(&cancels);
+            let fault_tally = Arc::clone(&faults);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("lazygp-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, table, rx, res_tx, cfg, token))
+                    .spawn(move || {
+                        worker_loop(wid, table, rx, res_tx, cfg, token, cancel_table, fault_tally)
+                    })
                     .expect("spawn worker"),
             );
         }
@@ -196,6 +349,8 @@ impl WorkerPool {
             studies,
             study_tallies: Mutex::new(BTreeMap::new()),
             submit_times: Mutex::new(HashMap::new()),
+            cancels,
+            faults,
         }
     }
 
@@ -216,6 +371,7 @@ impl WorkerPool {
                 objective: Arc::from(obj),
                 sleep_scale: eval.sleep_scale,
                 fail_prob: eval.fail_prob,
+                policy: eval.policy,
             },
         );
         // a tally row marks the study as tracked from now on
@@ -300,6 +456,27 @@ impl WorkerPool {
         }
     }
 
+    /// Cancel one in-flight trial: its evaluation wakes immediately and
+    /// reports [`TrialError::Cancelled`]; a trial still queued is marked so
+    /// its pickup short-circuits without running the objective. Returns
+    /// `true` when the trial was already mid-evaluation.
+    pub fn cancel(&self, study: StudyId, trial_id: u64) -> bool {
+        self.faults.cancels.fetch_add(1, Ordering::Relaxed);
+        self.cancels.cancel((study.0, trial_id))
+    }
+
+    /// Evaluation-fault counters accumulated by this pool's workers
+    /// (only the eval-layer fields are populated — link-layer faults do
+    /// not exist in-process).
+    pub fn fault_counters(&self) -> FaultCounters {
+        FaultCounters {
+            timeouts: self.faults.timeouts.load(Ordering::Relaxed),
+            cancels: self.faults.cancels.load(Ordering::Relaxed),
+            quarantines: self.faults.quarantines.load(Ordering::Relaxed),
+            ..FaultCounters::default()
+        }
+    }
+
     /// Trials submitted so far.
     pub fn dispatched(&self) -> u64 {
         self.dispatched.load(Ordering::Relaxed)
@@ -356,6 +533,7 @@ impl WorkerPool {
     /// accepted trial exactly once use this variant.
     pub fn shutdown_drain(mut self) -> Vec<TrialOutcome> {
         self.shutdown.trigger();
+        self.cancels.shutdown_all();
         self.tx.take(); // close channel ⇒ workers drain and exit
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -372,6 +550,7 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         self.shutdown.trigger();
+        self.cancels.shutdown_all();
         self.tx.take();
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -379,6 +558,7 @@ impl Drop for WorkerPool {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     wid: usize,
     studies: Arc<StudyTable>,
@@ -386,9 +566,24 @@ fn worker_loop(
     res_tx: Sender<TrialOutcome>,
     cfg: WorkerConfig,
     token: ShutdownToken,
+    cancels: Arc<CancelTable>,
+    faults: Arc<FaultTally>,
 ) {
     let mut rng = Pcg64::with_stream(cfg.seed, wid as u64 + 1);
+    let mut consec_failures = 0u32;
+    let mut quarantined_until: Option<Instant> = None;
+    let mut probing = false;
     loop {
+        // circuit breaker: a quarantined worker takes no trials until its
+        // cool-down elapses; the first trial it takes afterwards is the
+        // half-open probe — success rejoins, failure re-quarantines
+        if let Some(until) = quarantined_until.take() {
+            let now = Instant::now();
+            if until > now {
+                token.sleep(until - now);
+            }
+            probing = true;
+        }
         // hold the lock only while receiving so evaluation runs in parallel
         let trial = match rx.lock().expect("queue poisoned").recv() {
             Ok(t) => t,
@@ -400,23 +595,86 @@ fn worker_loop(
         // a trial handed over by the queue is never silently dropped
         // between `recv` and the shutdown check. `shutdown_drain` relies
         // on this to account for every accepted trial exactly once.
-        let eval = studies.resolve(trial.study);
-        let trial_cfg = WorkerConfig {
-            sleep_scale: eval.sleep_scale,
-            fail_prob: eval.fail_prob,
-            ..cfg.clone()
+        let key = (trial.study.0, trial.id);
+        let outcome = if cancels.take_pending(key) {
+            // the cancel raced the queue: short-circuit without touching
+            // the RNG so the deterministic stream is unaffected
+            cancelled_outcome(trial, wid, 0.0)
+        } else {
+            let eval = studies.resolve(trial.study);
+            let trial_cfg = WorkerConfig {
+                sleep_scale: eval.sleep_scale,
+                fail_prob: eval.fail_prob,
+                policy: eval.policy,
+                ..cfg.clone()
+            };
+            let (cancel_token, cancel_flag) = cancels.begin(key);
+            let o = evaluate_trial(
+                wid,
+                eval.objective.as_ref(),
+                &mut rng,
+                trial,
+                &trial_cfg,
+                &cancel_token,
+                &cancel_flag,
+            );
+            cancels.end(key);
+            o
         };
-        let outcome =
-            evaluate_trial(wid, eval.objective.as_ref(), &mut rng, trial, &trial_cfg, &token);
+        // rolling health: timeouts and genuine failures trip the breaker;
+        // a cancel is the leader's doing, not evidence against this worker
+        match &outcome.result {
+            Ok(_) => {
+                consec_failures = 0;
+                probing = false;
+            }
+            Err(TrialError::Cancelled) => {}
+            Err(e) => {
+                if matches!(e, TrialError::Timeout(_)) {
+                    faults.timeouts.fetch_add(1, Ordering::Relaxed);
+                }
+                consec_failures += 1;
+                let trip = cfg.quarantine_after > 0
+                    && (probing || consec_failures >= cfg.quarantine_after);
+                probing = false;
+                if trip {
+                    consec_failures = 0;
+                    faults.quarantines.fetch_add(1, Ordering::Relaxed);
+                    quarantined_until = Some(
+                        Instant::now() + Duration::from_secs_f64(cfg.quarantine_cooldown_s),
+                    );
+                }
+            }
+        }
         if res_tx.send(outcome).is_err() {
             return; // leader gone
         }
     }
 }
 
-/// Evaluate one trial: failure injection, objective call, scaled
-/// (interruptible) sleep standing in for training time. Shared by the
-/// in-process pool and the remote `lazygp worker` daemon.
+/// The outcome of an attempt whose evaluation was cancelled out from under
+/// it: no value, and no simulated cost charged — the leader requeues the
+/// trial, and the reaper already bounded the wall time the slot was held.
+fn cancelled_outcome(trial: Trial, wid: usize, worker_seconds: f64) -> TrialOutcome {
+    TrialOutcome {
+        trial,
+        worker_id: wid,
+        result: Err(TrialError::Cancelled),
+        worker_seconds,
+        sim_cost_s: 0.0,
+    }
+}
+
+/// Evaluate one trial: scripted chaos faults, failure injection, objective
+/// call, scaled (interruptible) sleep standing in for training time, and
+/// per-attempt deadline enforcement. Shared by the in-process pool and the
+/// remote `lazygp worker` daemon.
+///
+/// `token` is the attempt's *private* wake token (pre-wired to fire on
+/// pool shutdown too); `cancelled` distinguishes a leader cancel (the
+/// attempt reports [`TrialError::Cancelled`]) from a pool shutdown (the
+/// attempt returns its computed result with the sleep cut short, so drain
+/// accounting keeps seeing real outcomes).
 pub(super) fn evaluate_trial(
     wid: usize,
     objective: &dyn Objective,
@@ -424,18 +682,73 @@ pub(super) fn evaluate_trial(
     trial: Trial,
     cfg: &WorkerConfig,
     token: &ShutdownToken,
+    cancelled: &AtomicBool,
 ) -> TrialOutcome {
     let sw = Stopwatch::new();
+    let fault = cfg.fault_plan.get(trial.study, trial.id);
     // failure injection: the crash decision is drawn first (preserving
     // the deterministic stream for crash-free runs), but the objective
     // is evaluated regardless so the attempt's *simulated* cost is known
     // — a crashed training run still burned its slot until the crash
     // (modelled as the full run: results are lost at the end)
-    let crashed = cfg.fail_prob > 0.0 && rng.next_f64() < cfg.fail_prob;
-    let eval = objective.eval(&trial.x, rng);
+    let crashed = (cfg.fail_prob > 0.0 && rng.next_f64() < cfg.fail_prob)
+        || fault == Some(FaultKind::Crash);
+    let mut eval = objective.eval(&trial.x, rng);
+    if fault == Some(FaultKind::NaN) {
+        eval.value = f64::NAN;
+    }
+    if let Some(FaultKind::Slow(factor)) = fault {
+        eval.sim_cost_s *= factor;
+    }
     let sim_cost_s = eval.sim_cost_s;
-    if cfg.sleep_scale > 0.0 && sim_cost_s > 0.0 {
-        token.sleep(Duration::from_secs_f64((sim_cost_s * cfg.sleep_scale).min(5.0)));
+    let deadline = cfg.policy.deadline_s;
+
+    // a hung eval never finishes on its own: it holds its slot until the
+    // deadline reaps it, or — with no deadline set — until a cancel or
+    // shutdown wakes it
+    if fault == Some(FaultKind::Hang) {
+        if deadline > 0.0 {
+            if !token.sleep(Duration::from_secs_f64(deadline))
+                && cancelled.load(Ordering::SeqCst)
+            {
+                return cancelled_outcome(trial, wid, sw.elapsed_s());
+            }
+            return TrialOutcome {
+                trial,
+                worker_id: wid,
+                result: Err(TrialError::Timeout(deadline)),
+                worker_seconds: sw.elapsed_s(),
+                // a reaped attempt burned its deadline, not the full run
+                sim_cost_s: deadline,
+            };
+        }
+        while token.sleep(Duration::from_millis(50)) {}
+        return cancelled_outcome(trial, wid, sw.elapsed_s());
+    }
+
+    // deadline enforcement is decided from the *declared* cost, not from
+    // wall-clock jitter, so whether an attempt times out is deterministic
+    let wanted_s = if cfg.sleep_scale > 0.0 && sim_cost_s > 0.0 {
+        (sim_cost_s * cfg.sleep_scale).min(5.0)
+    } else {
+        0.0
+    };
+    let timed_out = deadline > 0.0 && wanted_s > deadline;
+    let sleep_s = if timed_out { deadline } else { wanted_s };
+    if sleep_s > 0.0
+        && !token.sleep(Duration::from_secs_f64(sleep_s))
+        && cancelled.load(Ordering::SeqCst)
+    {
+        return cancelled_outcome(trial, wid, sw.elapsed_s());
+    }
+    if timed_out {
+        return TrialOutcome {
+            trial,
+            worker_id: wid,
+            result: Err(TrialError::Timeout(deadline)),
+            worker_seconds: sw.elapsed_s(),
+            sim_cost_s: deadline,
+        };
     }
     let result = if crashed {
         Err(TrialError::SimulatedCrash)
@@ -665,6 +978,7 @@ mod tests {
             sleep_scale: 0.0,
             fail_prob: 0.0,
             seed: 0,
+            policy: TrialPolicy::default(),
         };
         p.add_study(StudyId(5), &eval).unwrap();
         // unknown objectives are protocol errors, not silent fallbacks
@@ -691,6 +1005,150 @@ mod tests {
         let sc = p.study_counters();
         assert_eq!(sc.len(), 1, "one row per registered study: {sc:?}");
         assert_eq!((sc[0].study, sc[0].dispatched, sc[0].completed), (5, 1, 1));
+        p.shutdown();
+    }
+
+    #[test]
+    fn deadline_reaps_overrunning_attempt_with_deadline_cost() {
+        use crate::objectives::trainer::ResNetCifarSim;
+        // ~190 s simulated at scale 1.0 wants the capped 5 s sleep; a 50 ms
+        // deadline must reap it in ~50 ms and charge *the deadline*, not
+        // the full simulated run, to the attempt's cost
+        let obj: Arc<dyn Objective> = Arc::new(ResNetCifarSim::new());
+        let p = WorkerPool::spawn(
+            obj,
+            WorkerConfig {
+                workers: 1,
+                sleep_scale: 1.0,
+                seed: 5,
+                policy: TrialPolicy { deadline_s: 0.05, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let sw = crate::util::timer::Stopwatch::new();
+        p.submit(Trial {
+            id: 0,
+            study: StudyId::SOLO,
+            round: 0,
+            x: vec![0.05, 5e-4, 0.9],
+            attempt: 0,
+        });
+        let o = p.recv_timeout(Duration::from_secs(5)).expect("reap timed out");
+        assert!(sw.elapsed_s() < 2.0, "deadline did not bound the attempt");
+        match o.result {
+            Err(TrialError::Timeout(d)) => assert_eq!(d, 0.05),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        assert_eq!(o.sim_cost_s, 0.05, "a reaped attempt is charged its deadline");
+        assert_eq!(p.fault_counters().timeouts, 1);
+        p.shutdown();
+    }
+
+    #[test]
+    fn fault_plan_injects_scripted_faults() {
+        use crate::objectives::trainer::LeNetMnistSim;
+        let obj: Arc<dyn Objective> = Arc::new(LeNetMnistSim::new());
+        let plan = FaultPlan::new()
+            .with(StudyId::SOLO, 1, FaultKind::Crash)
+            .with(StudyId::SOLO, 2, FaultKind::NaN)
+            .with(StudyId::SOLO, 3, FaultKind::Hang);
+        let p = WorkerPool::spawn(
+            obj,
+            WorkerConfig {
+                workers: 1,
+                seed: 9,
+                fault_plan: plan,
+                policy: TrialPolicy { deadline_s: 0.02, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let x = vec![0.7, 0.7, 0.02, 3e-4, 0.7];
+        for id in 0..4 {
+            p.submit(Trial { id, study: StudyId::SOLO, round: 0, x: x.clone(), attempt: 0 });
+        }
+        let mut results = BTreeMap::new();
+        for _ in 0..4 {
+            let o = p.recv_timeout(Duration::from_secs(5)).expect("stalled");
+            results.insert(o.trial.id, o.result);
+        }
+        assert!(results[&0].is_ok(), "unscripted trial must pass");
+        assert!(matches!(results[&1], Err(TrialError::SimulatedCrash)));
+        assert!(matches!(results[&2], Err(TrialError::NonFinite(_))));
+        assert!(
+            matches!(results[&3], Err(TrialError::Timeout(_))),
+            "a hung trial must be reaped by its deadline: {:?}",
+            results[&3]
+        );
+        p.shutdown();
+    }
+
+    #[test]
+    fn cancel_interrupts_hung_attempt() {
+        use crate::objectives::trainer::LeNetMnistSim;
+        // no deadline: the hang holds its slot until the leader cancels it
+        let obj: Arc<dyn Objective> = Arc::new(LeNetMnistSim::new());
+        let p = WorkerPool::spawn(
+            obj,
+            WorkerConfig {
+                workers: 1,
+                seed: 13,
+                fault_plan: FaultPlan::new().with(StudyId::SOLO, 0, FaultKind::Hang),
+                ..Default::default()
+            },
+        );
+        p.submit(Trial {
+            id: 0,
+            study: StudyId::SOLO,
+            round: 0,
+            x: vec![0.7, 0.7, 0.02, 3e-4, 0.7],
+            attempt: 0,
+        });
+        std::thread::sleep(Duration::from_millis(100)); // let it wedge
+        assert!(p.cancel(StudyId::SOLO, 0), "trial should be mid-eval");
+        let o = p.recv_timeout(Duration::from_secs(5)).expect("cancel did not wake the hang");
+        assert!(matches!(o.result, Err(TrialError::Cancelled)), "{:?}", o.result);
+        assert_eq!(o.sim_cost_s, 0.0, "a cancelled attempt is not charged");
+        assert_eq!(p.fault_counters().cancels, 1);
+        p.shutdown();
+    }
+
+    #[test]
+    fn quarantine_trips_after_consecutive_failures_and_probe_rejoins() {
+        // single always-failing-then-healthy worker: 3 consecutive crashes
+        // trip the breaker; after the cool-down the probe trial succeeds
+        // and the worker rejoins
+        let obj: Arc<dyn Objective> = Arc::new(Sphere::new(2));
+        let plan = FaultPlan::new()
+            .with(StudyId::SOLO, 0, FaultKind::Crash)
+            .with(StudyId::SOLO, 1, FaultKind::Crash)
+            .with(StudyId::SOLO, 2, FaultKind::Crash);
+        let p = WorkerPool::spawn(
+            obj,
+            WorkerConfig {
+                workers: 1,
+                seed: 17,
+                fault_plan: plan,
+                quarantine_after: 3,
+                quarantine_cooldown_s: 0.05,
+                ..Default::default()
+            },
+        );
+        for id in 0..5 {
+            p.submit(trial(id));
+        }
+        let sw = crate::util::timer::Stopwatch::new();
+        let mut oks = 0;
+        for _ in 0..5 {
+            if p.recv_timeout(Duration::from_secs(5)).expect("stalled").is_ok() {
+                oks += 1;
+            }
+        }
+        assert_eq!(oks, 2, "trials 3 and 4 succeed after the probe rejoin");
+        assert_eq!(p.fault_counters().quarantines, 1);
+        assert!(
+            sw.elapsed_s() >= 0.04,
+            "the cool-down must actually hold the worker out"
+        );
         p.shutdown();
     }
 

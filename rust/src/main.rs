@@ -25,7 +25,7 @@ use lazygp::coordinator::worker::WorkerConfig;
 use lazygp::coordinator::{
     recover, AsyncBo, AsyncCoordinatorConfig, CoordinatorConfig, ParallelBo, ReconnectConfig,
     RemoteEvalConfig, SocketPool, SocketPoolOptions, StudyService, StudySpec, Transport,
-    WorkerOptions, WorkerPool,
+    TrialPolicy, WorkerOptions, WorkerPool,
 };
 use lazygp::gp::{Surrogate, SurrogateSpec};
 use lazygp::metrics::AsyncTrace;
@@ -75,6 +75,19 @@ fn app() -> App {
                 .opt("evals", "total objective evaluations", Some("300"))
                 .opt("sleep-scale", "real s slept per simulated s", Some("0"))
                 .opt("fail-prob", "failure injection probability", Some("0"))
+                .opt("deadline", "per-attempt trial deadline, seconds (0 = off)", Some("0"))
+                .opt(
+                    "max-attempts",
+                    "attempts per trial incl. retries (0 = legacy max_retries)",
+                    Some("0"),
+                )
+                .opt("retry-backoff", "virtual seconds charged before a retry", Some("0"))
+                .opt(
+                    "crash-penalty",
+                    "failure-aware acquisition: impute this quantile of observed \
+                     values at crash locations (0..1; negative = off)",
+                    Some("-1"),
+                )
                 .opt("transport", "thread | tcp (remote `lazygp worker`s)", Some("thread"))
                 .opt("listen", "tcp bind address (port 0 = ephemeral)", Some("127.0.0.1:7077"))
                 .opt("heartbeat", "tcp heartbeat interval seconds (0 = off)", Some("2"))
@@ -89,6 +102,16 @@ fn app() -> App {
                     "worker-loss",
                     "seconds with zero tcp workers before erroring out (0 = wait forever)",
                     Some("60"),
+                )
+                .opt(
+                    "quarantine-after",
+                    "consecutive failures before a tcp worker is quarantined (0 = off)",
+                    Some("0"),
+                )
+                .opt(
+                    "quarantine-cooldown",
+                    "seconds a quarantined tcp worker sits out before its probe trial",
+                    Some("0.5"),
                 )
                 .opt(
                     "gp-threads",
@@ -133,6 +156,19 @@ fn app() -> App {
                 .opt("workers", "worker threads (thread) / slots to wait for (tcp)", Some("4"))
                 .opt("sleep-scale", "real s slept per simulated s", Some("0"))
                 .opt("fail-prob", "failure injection probability", Some("0"))
+                .opt("deadline", "per-attempt trial deadline, seconds (0 = off)", Some("0"))
+                .opt(
+                    "max-attempts",
+                    "attempts per trial incl. retries (0 = legacy max_retries)",
+                    Some("0"),
+                )
+                .opt("retry-backoff", "virtual seconds charged before a retry", Some("0"))
+                .opt(
+                    "crash-penalty",
+                    "failure-aware acquisition: impute this quantile of observed \
+                     values at crash locations (0..1; negative = off)",
+                    Some("-1"),
+                )
                 .opt("listen", "tcp bind address (port 0 = ephemeral)", Some("127.0.0.1:7077"))
                 .opt("heartbeat", "tcp heartbeat interval seconds (0 = off)", Some("2"))
                 .opt(
@@ -146,6 +182,16 @@ fn app() -> App {
                     "worker-loss",
                     "seconds with zero tcp workers before erroring out (0 = wait forever)",
                     Some("60"),
+                )
+                .opt(
+                    "quarantine-after",
+                    "consecutive failures before a tcp worker is quarantined (0 = off)",
+                    Some("0"),
+                )
+                .opt(
+                    "quarantine-cooldown",
+                    "seconds a quarantined tcp worker sits out before its probe trial",
+                    Some("0.5"),
                 )
                 .opt(
                     "gp-threads",
@@ -283,6 +329,15 @@ fn cmd_run(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     Ok(())
 }
 
+/// Parse the shared evaluation-fault flags into a [`TrialPolicy`].
+fn policy_from_args(p: &lazygp::util::cli::Parsed) -> lazygp::Result<TrialPolicy> {
+    Ok(TrialPolicy {
+        deadline_s: p.f64("deadline")?.max(0.0),
+        max_attempts: p.usize("max-attempts")? as u32,
+        retry_backoff_s: p.f64("retry-backoff")?.max(0.0),
+    })
+}
+
 /// Build the `--transport tcp` backend: bind (with the hardening options
 /// from the flags), announce, wait for workers.
 fn tcp_transport(
@@ -298,6 +353,8 @@ fn tcp_transport(
         max_frame_bytes: p.usize("max-frame")?,
         checksum: p.flag("checksum"),
         worker_loss_deadline: Duration::from_secs_f64(p.f64("worker-loss")?.max(0.0)),
+        quarantine_after: p.usize("quarantine-after")? as u32,
+        quarantine_cooldown: Duration::from_secs_f64(p.f64("quarantine-cooldown")?.max(0.0)),
     };
     let pool = SocketPool::listen_with(
         &listen,
@@ -306,6 +363,7 @@ fn tcp_transport(
             sleep_scale: p.f64("sleep-scale")?,
             fail_prob: p.f64("fail-prob")?,
             seed,
+            policy: policy_from_args(p)?,
         },
         options,
     )?;
@@ -338,11 +396,16 @@ fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     }
     let par =
         lazygp::util::parallel::Parallelism::from_threads_flag(p.usize("gp-threads")?);
-    let bo = BoConfig::lazy()
+    let mut bo = BoConfig::lazy()
         .with_surrogate(surrogate_from_args(p)?)
         .with_seed(seed)
         .with_init(InitDesign::Random(1))
         .with_parallelism(par);
+    let crash_q = p.f64("crash-penalty")?;
+    if crash_q >= 0.0 {
+        bo = bo.with_crash_penalty(crash_q);
+    }
+    let policy = policy_from_args(p)?;
     match p.str_or("mode", "sync").as_str() {
         "sync" => {
             let coord = CoordinatorConfig {
@@ -352,6 +415,7 @@ fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
                 fail_prob: p.f64("fail-prob")?,
                 max_retries: 3,
                 seed,
+                policy,
             };
             println!(
                 "## lazygp parallel (sync, {transport_kind}) — objective={name} workers={} t={} evals={evals}",
@@ -391,6 +455,7 @@ fn cmd_parallel(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
                 fail_prob: p.f64("fail-prob")?,
                 max_retries: 3,
                 seed,
+                policy,
             };
             println!(
                 "## lazygp parallel (async, {}, {transport_kind}) — objective={name} workers={workers} evals={evals}",
@@ -445,7 +510,7 @@ fn cmd_worker(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
          reconnect ≤{} attempts)",
         reconnect.max_attempts
     );
-    let summary = run_worker_with(addr, WorkerOptions { threads, reconnect })?;
+    let summary = run_worker_with(addr, WorkerOptions { threads, reconnect, ..Default::default() })?;
     println!(
         "worker {} done: {} trial(s) evaluated and reported \
          ({} reconnect(s), {} re-delivered)",
@@ -531,7 +596,17 @@ fn cmd_serve(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
     let seed = p.u64("seed")?;
     let workers = p.usize("workers")?;
     let par = lazygp::util::parallel::Parallelism::from_threads_flag(p.usize("gp-threads")?);
-    let studies = parse_studies(&p.str_or("studies", ""), seed, par)?;
+    let policy = policy_from_args(p)?;
+    let crash_q = p.f64("crash-penalty")?;
+    let studies: Vec<StudySpec> = parse_studies(&p.str_or("studies", ""), seed, par)?
+        .into_iter()
+        .map(|mut s| {
+            if crash_q >= 0.0 {
+                s.bo = s.bo.with_crash_penalty(crash_q);
+            }
+            s.with_policy(policy)
+        })
+        .collect();
     let control_addr = p.str("control").map(str::to_string);
     if studies.is_empty() && control_addr.is_none() {
         lazygp::bail!("`lazygp serve` needs --studies and/or --control");
@@ -550,6 +625,8 @@ fn cmd_serve(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
                     fail_prob: p.f64("fail-prob")?,
                     queue_cap: (workers * 2).max(4),
                     seed,
+                    policy: policy_from_args(p)?,
+                    ..WorkerConfig::default()
                 },
             ))
         }
@@ -688,6 +765,9 @@ fn cmd_resume(p: &lazygp::util::cli::Parsed) -> lazygp::Result<()> {
             .with_journal_dir(&dir_path);
         spec.pending = pending;
         spec.max_retries = rec.open.max_retries;
+        // a resumed study re-applies the fault policy it was journaled
+        // with, so retry budgets and virtual backoffs replay identically
+        spec.policy = rec.open.policy;
         specs.push(spec);
     }
     if specs.is_empty() {

@@ -85,6 +85,13 @@ pub struct FaultCounters {
     pub relistens: u64,
     /// duplicate outcomes (same trial id) dropped by the delivery gate
     pub duplicates_dropped: u64,
+    /// attempts that overran their trial deadline (reported `Timeout`)
+    pub timeouts: u64,
+    /// cancel requests issued: leader-side deadline reaps plus explicit
+    /// per-trial cancellations on the thread backend
+    pub cancels: u64,
+    /// times a worker's circuit breaker tripped into quarantine
+    pub quarantines: u64,
 }
 
 impl FaultCounters {
@@ -99,13 +106,17 @@ impl FaultCounters {
     pub fn render(&self) -> String {
         format!(
             "requeued {} | reconnects {} | heartbeats missed {} | frames rejected {} | \
-             relistens {} | duplicate outcomes dropped {}",
+             relistens {} | duplicate outcomes dropped {} | timeouts {} | cancels {} | \
+             quarantines {}",
             self.requeued,
             self.reconnects,
             self.heartbeats_missed,
             self.frames_rejected,
             self.relistens,
             self.duplicates_dropped,
+            self.timeouts,
+            self.cancels,
+            self.quarantines,
         )
     }
 }
@@ -402,11 +413,21 @@ mod tests {
     #[test]
     fn fault_counters_render_and_any() {
         assert!(!FaultCounters::default().any());
-        let f = FaultCounters { heartbeats_missed: 3, frames_rejected: 2, ..Default::default() };
+        let f = FaultCounters {
+            heartbeats_missed: 3,
+            frames_rejected: 2,
+            timeouts: 4,
+            cancels: 5,
+            quarantines: 1,
+            ..Default::default()
+        };
         assert!(f.any());
         let s = f.render();
         assert!(s.contains("heartbeats missed 3"), "{s}");
         assert!(s.contains("frames rejected 2"), "{s}");
+        assert!(s.contains("timeouts 4"), "{s}");
+        assert!(s.contains("cancels 5"), "{s}");
+        assert!(s.contains("quarantines 1"), "{s}");
         // a clean run renders nothing extra in the trace summary
         let mut t = demo();
         t.faults = FaultCounters::default();

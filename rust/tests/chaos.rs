@@ -1,0 +1,529 @@
+//! Deterministic chaos harness for evaluation-fault tolerance: a scripted
+//! [`FaultPlan`] (hangs, crashes, NaNs) drives multi-study runs to
+//! completion with exact exactly-once accounting, hung trials are reaped
+//! by the leader within 2× their deadline, a quarantined worker link sits
+//! out its cool-down and rejoins through the half-open probe, and a
+//! mid-chaos leader crash + journal resume is bitwise identical to a run
+//! that never crashed.
+//!
+//! Every fault here is *scripted* — keyed by `(study, trial id)` — so the
+//! suite is deterministic at any worker count. CI runs this file in its
+//! own `chaos` job with `--test-threads=1` and a hard timeout;
+//! `LAZYGP_CHAOS_DIR` pins the scratch directory so the journals of a
+//! failed run can be uploaded as artifacts.
+
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lazygp::acquisition::optim::OptimConfig;
+use lazygp::bo::driver::{Best, BoConfig, InitDesign, PendingStrategy};
+use lazygp::coordinator::transport::{
+    read_frame, read_frame_with, write_frame, FrameConfig, LeaderMsg, Transport, WorkerMsg,
+    PROTOCOL_VERSION,
+};
+use lazygp::coordinator::{
+    journal_path, recover, snapshot_path, AsyncBo, AsyncCoordinatorConfig, FaultKind, FaultPlan,
+    OpenInfo, RemoteEvalConfig, SocketPool, SocketPoolOptions, StudyId, StudyJournal,
+    StudyService, StudySpec, Trial, TrialError, TrialOutcome, TrialPolicy, WorkerConfig,
+    WorkerPool, JOURNAL_FORMAT,
+};
+use lazygp::gp::Surrogate;
+use lazygp::objectives::{self, Evaluation};
+use lazygp::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// harness helpers
+// ---------------------------------------------------------------------------
+
+fn fast_bo(seed: u64) -> BoConfig {
+    BoConfig::lazy()
+        .with_seed(seed)
+        .with_init(InitDesign::Lhs(5))
+        .with_optim(OptimConfig { candidates: 96, restarts: 3, nm_iters: 20, nm_scale: 0.08 })
+}
+
+/// Scratch root for journals; CI pins it via `LAZYGP_CHAOS_DIR` so the
+/// artifacts of a failed run can be uploaded.
+fn scratch_root() -> PathBuf {
+    match std::env::var("LAZYGP_CHAOS_DIR") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d),
+        _ => std::env::temp_dir().join("lazygp_chaos"),
+    }
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = scratch_root().join(format!("{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// Wait until `cond` holds or `timeout` passes; returns the elapsed time
+/// on success.
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> Option<Duration> {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if cond() {
+            return Some(t0.elapsed());
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    None
+}
+
+fn trial(id: u64) -> Trial {
+    Trial { id, study: StudyId::SOLO, round: 0, x: vec![0.1, -0.2, 0.3, 0.0, -0.1], attempt: 0 }
+}
+
+/// Leader options with heartbeats off — these tests manage scripted peers
+/// explicitly and must not race the link reaper.
+fn quiet_options() -> SocketPoolOptions {
+    SocketPoolOptions {
+        heartbeat_interval: Duration::ZERO,
+        worker_loss_deadline: Duration::ZERO,
+        ..Default::default()
+    }
+}
+
+fn sphere_pool(policy: TrialPolicy, options: SocketPoolOptions) -> SocketPool {
+    SocketPool::listen_with(
+        "127.0.0.1:0",
+        RemoteEvalConfig {
+            objective: "sphere5".into(),
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+            seed: 3,
+            policy,
+        },
+        options,
+    )
+    .expect("bind loopback")
+}
+
+/// A hand-rolled scripted worker: speaks the real handshake, then reads
+/// and writes raw frames exactly when told to — or wedges silently.
+struct ScriptedWorker {
+    stream: TcpStream,
+}
+
+impl ScriptedWorker {
+    fn connect(addr: SocketAddr, capacity: usize) -> ScriptedWorker {
+        let mut stream = TcpStream::connect(addr).expect("connect scripted worker");
+        write_frame(
+            &mut stream,
+            &WorkerMsg::Hello { protocol: PROTOCOL_VERSION, capacity, resume: None }.to_json(),
+        )
+        .expect("send hello");
+        let (welcome, _) = read_frame(&mut stream).expect("read welcome");
+        assert!(
+            matches!(LeaderMsg::from_json(&welcome), Ok(LeaderMsg::Welcome { .. })),
+            "expected welcome"
+        );
+        ScriptedWorker { stream }
+    }
+
+    /// Next leader frame within `timeout`, if any.
+    fn read_msg(&mut self, timeout: Duration) -> Option<LeaderMsg> {
+        self.stream.set_read_timeout(Some(timeout)).unwrap();
+        let (json, _) = read_frame(&mut self.stream).ok()?;
+        LeaderMsg::from_json(&json).ok()
+    }
+
+    /// Next dispatched trial within `timeout`, if any (skips nothing: a
+    /// non-Dispatch frame is a test failure surfaced as `None`).
+    fn read_trial(&mut self, timeout: Duration) -> Option<Trial> {
+        match self.read_msg(timeout)? {
+            LeaderMsg::Dispatch(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    fn send_outcome(&mut self, t: &Trial) {
+        let outcome = TrialOutcome {
+            trial: t.clone(),
+            worker_id: 0,
+            result: Ok(Evaluation { value: 1.0, sim_cost_s: 1.0 }),
+            worker_seconds: 0.0,
+            sim_cost_s: 1.0,
+        };
+        let _ = write_frame(&mut self.stream, &WorkerMsg::Outcome(outcome).to_json());
+    }
+
+    fn send_error(&mut self, t: &Trial, err: TrialError) {
+        let outcome = TrialOutcome {
+            trial: t.clone(),
+            worker_id: 0,
+            result: Err(err),
+            worker_seconds: 0.0,
+            sim_cost_s: 0.05,
+        };
+        let _ = write_frame(&mut self.stream, &WorkerMsg::Outcome(outcome).to_json());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scripted two-study chaos run: exact exactly-once accounting
+// ---------------------------------------------------------------------------
+
+/// Two studies share a thread fleet while a scripted plan crashes, NaNs
+/// and hangs one first-attempt trial each per study. Every fault is
+/// retried onto a fresh trial id outside the plan, so both studies must
+/// complete their full budget, and the per-study ledgers must reconcile
+/// exactly: dispatched == completed == budget + the three scripted
+/// faults, with nothing requeued, duplicated, or lost.
+#[test]
+fn two_studies_complete_their_budget_under_scripted_faults() {
+    const EVALS: usize = 8;
+    // per-study trial ids under slots=1 are sequential; ids 1, 4, 7 are
+    // first attempts (their retries land on ids 2, 5, 8 — unscripted)
+    let plan = FaultPlan::new()
+        .with(StudyId(1), 1, FaultKind::Crash)
+        .with(StudyId(1), 4, FaultKind::NaN)
+        .with(StudyId(1), 7, FaultKind::Hang)
+        .with(StudyId(2), 1, FaultKind::Crash)
+        .with(StudyId(2), 4, FaultKind::NaN)
+        .with(StudyId(2), 7, FaultKind::Hang);
+    let base: Arc<dyn objectives::Objective> =
+        Arc::from(objectives::by_name("sphere5").unwrap());
+    let fleet = WorkerPool::spawn(
+        base,
+        WorkerConfig { workers: 2, seed: 5, fault_plan: plan, ..WorkerConfig::default() },
+    );
+    let service = StudyService::new(Box::new(fleet));
+    // the deadline is what turns a scripted hang into a worker-side
+    // Timeout instead of a wedged slot
+    let policy = TrialPolicy { deadline_s: 0.05, ..TrialPolicy::default() };
+    let a = service
+        .create_study(
+            StudySpec::new("chaos-a", "sphere5")
+                .with_bo(fast_bo(11))
+                .with_evals(EVALS)
+                .with_policy(policy),
+        )
+        .unwrap();
+    let b = service
+        .create_study(
+            StudySpec::new("chaos-b", "levy2")
+                .with_bo(fast_bo(23))
+                .with_evals(EVALS)
+                .with_policy(policy),
+        )
+        .unwrap();
+    assert_eq!((a, b), (StudyId(1), StudyId(2)), "the fault plan is keyed by these ids");
+
+    let result_a = service.wait(a).unwrap();
+    let result_b = service.wait(b).unwrap();
+    for (id, result) in [(a, &result_a), (b, &result_b)] {
+        let best = result.best.as_ref().unwrap_or_else(|| panic!("study {id} found no best"));
+        assert!(best.value.is_finite(), "study {id} best is not finite");
+    }
+
+    let stats = service.stats();
+    assert_eq!(stats.faults.timeouts, 2, "one reaped hang per study: {:?}", stats.faults);
+    for id in [a, b] {
+        let row = stats.studies.iter().find(|r| r.study == id.0).expect("study row");
+        assert_eq!(
+            row.dispatched,
+            (EVALS + 3) as u64,
+            "study {id}: budget + one retry per scripted fault"
+        );
+        assert_eq!(row.completed, row.dispatched, "study {id}: every attempt settled");
+        assert_eq!(row.requeued, 0, "study {id}");
+        assert_eq!(row.duplicates_dropped, 0, "study {id}");
+    }
+    service.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// leader-side reaper: a wedged remote attempt is cancelled at 2× deadline
+// ---------------------------------------------------------------------------
+
+/// A scripted TCP worker accepts a trial and never responds — the
+/// worker-side deadline cannot fire because the worker is wedged. The
+/// leader's reaper must cancel the attempt once it overruns 2× the
+/// deadline (never earlier), requeue it through the exactly-once gate,
+/// and the re-dispatched attempt must complete exactly once.
+#[test]
+fn hung_remote_trial_is_reaped_within_twice_its_deadline() {
+    const DEADLINE_S: f64 = 0.1;
+    let pool = sphere_pool(
+        TrialPolicy { deadline_s: DEADLINE_S, ..TrialPolicy::default() },
+        quiet_options(),
+    );
+    let addr = pool.local_addr();
+    let mut wedged = ScriptedWorker::connect(addr, 1);
+    pool.wait_for_capacity(1, Duration::from_secs(10)).unwrap();
+
+    let t0 = Instant::now();
+    pool.dispatch(trial(0));
+    let t = wedged.read_trial(Duration::from_secs(10)).expect("dispatch arrives");
+    assert_eq!(t.id, 0);
+    // ...and the worker goes silent. The reaper fires at 2× deadline
+    // (+ its 100 ms sweep cadence and CI scheduling slack), not before.
+    wait_until(Duration::from_secs(5), || pool.stats().faults.cancels >= 1)
+        .expect("reaper must cancel the overdue attempt");
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed >= Duration::from_secs_f64(2.0 * DEADLINE_S),
+        "reaped too early: {elapsed:?}"
+    );
+    assert!(
+        elapsed <= Duration::from_secs_f64(2.0 * DEADLINE_S + 1.0),
+        "reaped too late: {elapsed:?}"
+    );
+    let stats = pool.stats();
+    assert!(stats.faults.requeued >= 1, "the reaped trial must be requeued: {:?}", stats.faults);
+
+    // the wedged link first sees the best-effort Cancel, then — being the
+    // only worker — the requeued re-dispatch; answering it completes the
+    // trial exactly once
+    match wedged.read_msg(Duration::from_secs(5)).expect("cancel frame") {
+        LeaderMsg::Cancel { trial, .. } => assert_eq!(trial, 0),
+        other => panic!("expected Cancel, got {other:?}"),
+    }
+    let again = wedged.read_trial(Duration::from_secs(5)).expect("requeued re-dispatch");
+    assert_eq!(again.id, 0);
+    wedged.send_outcome(&again);
+    let o = pool.poll_outcome(Duration::from_secs(10)).expect("re-dispatched trial completes");
+    assert_eq!(o.trial.id, 0);
+    assert!(o.is_ok());
+    assert!(pool.poll_outcome(Duration::from_millis(300)).is_none(), "no duplicate outcome");
+    Box::new(pool).shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// circuit breaker: quarantine, cool-down, half-open probe, rejoin
+// ---------------------------------------------------------------------------
+
+/// Two consecutive failures trip the leader-side breaker: the link's
+/// capacity leaves the fleet, it receives no trials during its cool-down,
+/// then exactly one half-open probe — and a successful probe rejoins it.
+#[test]
+fn quarantined_worker_sits_out_cooldown_and_rejoins_via_probe() {
+    let cooldown = Duration::from_millis(400);
+    let pool = sphere_pool(
+        TrialPolicy::default(),
+        SocketPoolOptions {
+            heartbeat_interval: Duration::ZERO,
+            worker_loss_deadline: Duration::ZERO,
+            quarantine_after: 2,
+            quarantine_cooldown: cooldown,
+            ..Default::default()
+        },
+    );
+    let addr = pool.local_addr();
+    let mut flaky = ScriptedWorker::connect(addr, 1);
+    pool.wait_for_capacity(1, Duration::from_secs(10)).unwrap();
+
+    // two consecutive failures trip the breaker
+    for id in 0..2 {
+        pool.dispatch(trial(id));
+        let t = flaky.read_trial(Duration::from_secs(10)).expect("dispatch arrives");
+        flaky.send_error(&t, TrialError::SimulatedCrash);
+        let o = pool.poll_outcome(Duration::from_secs(10)).expect("failure delivered");
+        assert!(!o.is_ok());
+    }
+    wait_until(Duration::from_secs(5), || pool.stats().faults.quarantines >= 1)
+        .expect("breaker must trip after 2 consecutive failures");
+    assert_eq!(pool.capacity_now(), 0, "quarantined capacity leaves the fleet");
+
+    // a trial dispatched during the cool-down must not reach the worker…
+    let quarantined_at = Instant::now();
+    pool.dispatch(trial(2));
+    assert!(
+        flaky.read_trial(cooldown / 2).is_none(),
+        "no dispatch may reach a quarantined worker during its cool-down"
+    );
+    // …but once the cool-down elapses it arrives as the half-open probe
+    let probe = flaky.read_trial(Duration::from_secs(5)).expect("half-open probe");
+    assert_eq!(probe.id, 2);
+    assert!(
+        quarantined_at.elapsed() >= cooldown / 2,
+        "probe arrived before the cool-down elapsed"
+    );
+    flaky.send_outcome(&probe);
+    let o = pool.poll_outcome(Duration::from_secs(10)).expect("probe outcome");
+    assert!(o.is_ok());
+
+    // a successful probe rejoins the link: capacity is back and trials
+    // flow immediately again
+    wait_until(Duration::from_secs(5), || pool.capacity_now() == 1)
+        .expect("successful probe must rejoin the worker");
+    pool.dispatch(trial(3));
+    let t = flaky.read_trial(Duration::from_secs(5)).expect("post-rejoin dispatch");
+    flaky.send_outcome(&t);
+    assert!(pool.poll_outcome(Duration::from_secs(10)).is_some());
+    assert_eq!(pool.stats().faults.quarantines, 1, "the breaker tripped exactly once");
+    Box::new(pool).shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// mid-chaos leader crash + resume is bitwise identical
+// ---------------------------------------------------------------------------
+
+/// Everything a run must reproduce bitwise after a crash (deliberately
+/// excludes `virtual_done_s`, which embeds real leader seconds).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct RunFacts {
+    trial_ids: Vec<u64>,
+    best_trace_bits: Vec<u64>,
+    best_value_bits: u64,
+    best_x_bits: Vec<u64>,
+    posterior_digest: u64,
+    rng_draws: u64,
+    failed_imputations: usize,
+}
+
+fn facts(abo: &AsyncBo, best: &Best) -> RunFacts {
+    RunFacts {
+        trial_ids: abo.events().iter().map(|e| e.trial_id).collect(),
+        best_trace_bits: abo.events().iter().map(|e| e.best.to_bits()).collect(),
+        best_value_bits: best.value.to_bits(),
+        best_x_bits: best.x.iter().map(|v| v.to_bits()).collect(),
+        posterior_digest: abo.driver().surrogate().state_digest(),
+        rng_draws: abo.driver().rng().draws(),
+        failed_imputations: abo.driver().failed_observations(),
+    }
+}
+
+/// Single attempt per trial: every scripted fault is terminal, so the
+/// crash-penalty imputation path runs (and is journaled) for each one.
+fn chaos_policy() -> TrialPolicy {
+    TrialPolicy { deadline_s: 0.02, max_attempts: 1, retry_backoff_s: 0.0 }
+}
+
+/// Crash, NaN and hang three distinct first-and-only attempts. With
+/// `max_attempts: 1` trial ids are sequential, so ids 2, 4, 6 are always
+/// dispatched and always faulted — the run is chaos-deterministic.
+fn chaos_plan() -> FaultPlan {
+    FaultPlan::new()
+        .with(StudyId::SOLO, 2, FaultKind::Crash)
+        .with(StudyId::SOLO, 4, FaultKind::NaN)
+        .with(StudyId::SOLO, 6, FaultKind::Hang)
+}
+
+fn chaos_open_info(seed: u64, evals: usize) -> OpenInfo {
+    OpenInfo {
+        format: JOURNAL_FORMAT,
+        study: 0,
+        name: "chaos".into(),
+        objective: "sphere5".into(),
+        seed,
+        evals,
+        slots: 1,
+        pending: "cl-min".into(),
+        max_retries: 0,
+        surrogate: lazygp::gp::SurrogateSpec::default(),
+        policy: chaos_policy(),
+    }
+}
+
+/// Journaled (or not) solo chaos run over a thread fleet with the
+/// scripted plan and failure-aware acquisition; resumes an existing
+/// journal in the directory automatically.
+fn chaos_run(journal_dir: Option<&Path>, seed: u64, evals: usize) -> RunFacts {
+    let obj: Arc<dyn objectives::Objective> = Arc::from(objectives::by_name("sphere5").unwrap());
+    let pool = WorkerPool::spawn(
+        Arc::clone(&obj),
+        WorkerConfig {
+            workers: 1,
+            seed: seed ^ 0x9e37_79b9_7f4a_7c15,
+            policy: chaos_policy(),
+            fault_plan: chaos_plan(),
+            ..WorkerConfig::default()
+        },
+    );
+    let config = AsyncCoordinatorConfig {
+        workers: 1,
+        pending: PendingStrategy::ConstantLiarMin,
+        sleep_scale: 0.0,
+        fail_prob: 0.0,
+        max_retries: 0,
+        seed,
+        policy: chaos_policy(),
+    };
+    let bo = fast_bo(seed).with_crash_penalty(0.25);
+    let mut abo = AsyncBo::with_transport(bo, obj, Box::new(pool), config);
+    if let Some(dir) = journal_dir {
+        let (journal, replay) = match recover(dir, "chaos").expect("recover repairable journal") {
+            Some(rec) => {
+                let entries = rec.entries.clone();
+                let j = StudyJournal::resume(dir, &rec).expect("reattach").with_snapshot_every(3);
+                (j, entries)
+            }
+            None => {
+                let j = StudyJournal::create(dir, chaos_open_info(seed, evals))
+                    .expect("create journal")
+                    .with_snapshot_every(3);
+                (j, Vec::new())
+            }
+        };
+        abo = abo.with_journal(journal, replay);
+    }
+    let best = abo.run_until_evals(evals).expect("chaos run completes");
+    let f = facts(&abo, &best);
+    abo.finish();
+    f
+}
+
+/// Offsets of every complete-frame boundary in `bytes` (0 included).
+fn frame_boundaries(bytes: &[u8]) -> Vec<usize> {
+    let cfg = FrameConfig { checksum: true, ..FrameConfig::default() };
+    let mut offsets = vec![0usize];
+    let mut slice: &[u8] = bytes;
+    while !slice.is_empty() {
+        if read_frame_with(&mut slice, &cfg).is_err() {
+            break;
+        }
+        offsets.push(bytes.len() - slice.len());
+    }
+    offsets
+}
+
+/// Plant a (possibly truncated) journal copy and the golden snapshot in
+/// a fresh directory, as left behind by a crash.
+fn plant(dir: &Path, journal: &[u8], snapshot: Option<&[u8]>) {
+    std::fs::write(journal_path(dir, "chaos"), journal).expect("plant journal");
+    if let Some(s) = snapshot {
+        std::fs::write(snapshot_path(dir, "chaos"), s).expect("plant snapshot");
+    }
+}
+
+/// Kill the journaled leader at record boundaries and at random
+/// mid-record byte offsets *while scripted faults and crash-penalty
+/// imputations are in flight*, resume, and demand bitwise equality with
+/// the uninterrupted chaos run. Also checks that neither journaling nor
+/// the chaos machinery itself perturbs the decision stream.
+#[test]
+fn mid_chaos_crash_and_resume_is_bitwise_identical() {
+    const SEED: u64 = 77;
+    const EVALS: usize = 9;
+    let golden_dir = fresh_dir("chaos_golden");
+    let golden = chaos_run(Some(&golden_dir), SEED, EVALS);
+    assert_eq!(
+        golden.failed_imputations, 3,
+        "all three scripted faults must be terminal and imputed"
+    );
+
+    let plain = chaos_run(None, SEED, EVALS);
+    assert_eq!(golden, plain, "journaling must not perturb the chaos run");
+
+    let journal = std::fs::read(journal_path(&golden_dir, "chaos")).expect("golden journal");
+    let snapshot = std::fs::read(snapshot_path(&golden_dir, "chaos")).ok();
+
+    // every 3rd record boundary plus a few mid-record tears keeps the
+    // sweep representative without resuming dozens of runs
+    let mut cuts: Vec<usize> = frame_boundaries(&journal).into_iter().step_by(3).collect();
+    let mut rng = Pcg64::new(0xC0A5);
+    for _ in 0..4 {
+        cuts.push((rng.next_u64() % journal.len() as u64) as usize);
+    }
+    for (i, &cut) in cuts.iter().enumerate() {
+        let dir = fresh_dir(&format!("chaos_cut_{i}"));
+        plant(&dir, &journal[..cut], snapshot.as_deref());
+        let resumed = chaos_run(Some(&dir), SEED, EVALS);
+        assert_eq!(resumed, golden, "resume after a crash at journal byte {cut} diverged");
+    }
+}

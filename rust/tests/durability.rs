@@ -30,7 +30,7 @@ use lazygp::coordinator::worker::{WorkerConfig, WorkerPool};
 use lazygp::coordinator::{
     journal_path, recover, snapshot_path, AsyncBo, AsyncCoordinatorConfig, OpenInfo,
     RemoteEvalConfig, ReplayEntry, SocketPool, StudyId, StudyJournal, StudyResult, StudyService,
-    StudySpec, Trial, TrialError, TrialOutcome, JOURNAL_FORMAT,
+    StudySpec, Trial, TrialError, TrialOutcome, TrialPolicy, JOURNAL_FORMAT,
 };
 use lazygp::gp::Surrogate;
 use lazygp::objectives::{self, Evaluation};
@@ -56,6 +56,7 @@ fn async_cfg(seed: u64) -> AsyncCoordinatorConfig {
         fail_prob: 0.0,
         max_retries: 2,
         seed,
+        ..AsyncCoordinatorConfig::default()
     }
 }
 
@@ -87,6 +88,7 @@ fn open_info(name: &str, seed: u64, evals: usize) -> OpenInfo {
         pending: "cl-min".into(),
         max_retries: 2,
         surrogate: lazygp::gp::SurrogateSpec::default(),
+        policy: TrialPolicy::default(),
     }
 }
 
@@ -223,7 +225,13 @@ fn solo_resume_is_bitwise_identical_after_any_truncation() {
 fn tcp_fleet(seed: u64) -> (SocketPool, std::thread::JoinHandle<()>) {
     let pool = SocketPool::listen(
         "127.0.0.1:0",
-        RemoteEvalConfig { objective: "sphere5".into(), sleep_scale: 0.0, fail_prob: 0.0, seed },
+        RemoteEvalConfig {
+            objective: "sphere5".into(),
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+            seed,
+            policy: TrialPolicy::default(),
+        },
     )
     .expect("bind loopback");
     // flip ACK mode before the worker is admitted, so its Welcome already
@@ -239,6 +247,7 @@ fn tcp_fleet(seed: u64) -> (SocketPool, std::thread::JoinHandle<()>) {
                 max_backoff: Duration::from_millis(200),
                 jitter_seed: 7,
             },
+            ..Default::default()
         };
         let _ = run_worker_with(&addr, opts); // Err is fine after an abort
     });
@@ -577,7 +586,13 @@ fn retract_is_journaled_before_all_workers_lost_surfaces() {
     let dir = fresh_dir("lost");
     let pool = SocketPool::listen_with(
         "127.0.0.1:0",
-        RemoteEvalConfig { objective: "sphere5".into(), sleep_scale: 0.0, fail_prob: 0.0, seed: 3 },
+        RemoteEvalConfig {
+            objective: "sphere5".into(),
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+            seed: 3,
+            policy: TrialPolicy::default(),
+        },
         SocketPoolOptions {
             heartbeat_interval: Duration::ZERO,
             worker_loss_deadline: Duration::from_millis(300),
@@ -661,6 +676,7 @@ fn acked_workers_complete_without_redelivery() {
                 sleep_scale: 0.0,
                 fail_prob: 0.0,
                 seed: SEED,
+                policy: TrialPolicy::default(),
             },
         )
         .expect("bind loopback");

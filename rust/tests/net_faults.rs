@@ -22,7 +22,7 @@ use lazygp::coordinator::transport::{
 };
 use lazygp::coordinator::{
     AsyncBo, AsyncCoordinatorConfig, RemoteEvalConfig, SocketPool, SocketPoolOptions, StudyId,
-    Trial, TrialOutcome,
+    Trial, TrialError, TrialOutcome, TrialPolicy,
 };
 use lazygp::objectives::Evaluation;
 use lazygp::util::proptest as pt;
@@ -45,7 +45,13 @@ fn quiet_options() -> SocketPoolOptions {
 fn sphere_pool(options: SocketPoolOptions) -> SocketPool {
     SocketPool::listen_with(
         "127.0.0.1:0",
-        RemoteEvalConfig { objective: "sphere5".into(), sleep_scale: 0.0, fail_prob: 0.0, seed: 3 },
+        RemoteEvalConfig {
+            objective: "sphere5".into(),
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+            seed: 3,
+            policy: TrialPolicy::default(),
+        },
         options,
     )
     .expect("bind loopback")
@@ -128,6 +134,18 @@ impl FakeWorker {
         };
         let _ = write_frame(&mut self.stream, &WorkerMsg::Outcome(outcome).to_json());
     }
+
+    /// Report a typed failure for `t` (e.g. a worker-side deadline trip).
+    fn send_error(&mut self, t: &Trial, err: TrialError) {
+        let outcome = TrialOutcome {
+            trial: t.clone(),
+            worker_id: 0,
+            result: Err(err),
+            worker_seconds: 0.0,
+            sim_cost_s: 0.05,
+        };
+        let _ = write_frame(&mut self.stream, &WorkerMsg::Outcome(outcome).to_json());
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -177,7 +195,7 @@ fn mid_frame_disconnect_requeues_and_rescuer_completes_exactly_once() {
     let rescuer = std::thread::spawn(move || {
         run_worker_with(
             &addr_s,
-            WorkerOptions { threads: 1, reconnect: ReconnectConfig::disabled() },
+            WorkerOptions { threads: 1, reconnect: ReconnectConfig::disabled(), ..Default::default() },
         )
         .expect("rescuer run")
     });
@@ -235,7 +253,7 @@ fn frozen_worker_is_reaped_within_two_heartbeat_intervals() {
     let healthy = std::thread::spawn(move || {
         run_worker_with(
             &addr_s,
-            WorkerOptions { threads: 1, reconnect: ReconnectConfig::disabled() },
+            WorkerOptions { threads: 1, reconnect: ReconnectConfig::disabled(), ..Default::default() },
         )
         .expect("healthy worker")
     });
@@ -267,6 +285,7 @@ fn leader_restart_worker_reconnects_and_completes() {
                     max_backoff: Duration::from_millis(250),
                     jitter_seed: 7,
                 },
+                ..Default::default()
             },
         )
         .expect("worker survives the restart")
@@ -290,6 +309,7 @@ fn leader_restart_worker_reconnects_and_completes() {
                 sleep_scale: 0.0,
                 fail_prob: 0.0,
                 seed: 3,
+                policy: TrialPolicy::default(),
             },
             quiet_options(),
         ) {
@@ -337,7 +357,7 @@ fn stale_outcome_after_reconnect_is_deduped() {
     let healthy = std::thread::spawn(move || {
         run_worker_with(
             &addr_s,
-            WorkerOptions { threads: 1, reconnect: ReconnectConfig::disabled() },
+            WorkerOptions { threads: 1, reconnect: ReconnectConfig::disabled(), ..Default::default() },
         )
         .expect("healthy worker")
     });
@@ -413,7 +433,7 @@ fn wait_for_capacity_is_not_fooled_by_instant_dropper() {
     let worker = std::thread::spawn(move || {
         run_worker_with(
             &addr_s,
-            WorkerOptions { threads: 1, reconnect: ReconnectConfig::disabled() },
+            WorkerOptions { threads: 1, reconnect: ReconnectConfig::disabled(), ..Default::default() },
         )
         .expect("worker")
     });
@@ -453,7 +473,13 @@ fn async_bo_survives_worker_churn_exactly_once() {
     // crashed trial requeued (once) and no duplicate id ever observed
     let pool = SocketPool::listen_with(
         "127.0.0.1:0",
-        RemoteEvalConfig { objective: "levy2".into(), sleep_scale: 1e-4, fail_prob: 0.0, seed: 9 },
+        RemoteEvalConfig {
+            objective: "levy2".into(),
+            sleep_scale: 1e-4,
+            fail_prob: 0.0,
+            seed: 9,
+            policy: TrialPolicy::default(),
+        },
         SocketPoolOptions {
             // heartbeats off: the silent saboteur must live long enough to
             // grab a trial (frozen-peer reaping has its own test above)
@@ -474,6 +500,7 @@ fn async_bo_survives_worker_churn_exactly_once() {
                     WorkerOptions {
                         threads: 1,
                         reconnect: ReconnectConfig { jitter_seed: i, ..Default::default() },
+                        ..WorkerOptions::default()
                     },
                 )
                 .expect("honest worker")
@@ -577,6 +604,85 @@ fn prop_outcome_trial_ids_unique_under_adversarial_requeue_interleavings() {
     pt::check("outcome_ids_exactly_once", &seeds, |&seed| adversarial_episode(seed as u64));
 }
 
+/// One evaluation-fault episode: the pool's study policy carries a 50 ms
+/// per-attempt deadline, and the fake worker, per dispatch, randomly
+/// completes, reports a worker-side `Timeout`, hangs past the 2× reap
+/// window and then files the late stale outcome for the attempt the
+/// leader already cancelled, double-reports, vanishes mid-trial, or
+/// reports-then-vanishes-then-re-reports. The coordinator-facing stream
+/// must still contain every trial id exactly once (ok or err).
+fn fault_adversarial_episode(seed: u64) -> bool {
+    const N: usize = 4;
+    let mut rng = Pcg64::new(seed);
+    let pool = SocketPool::listen_with(
+        "127.0.0.1:0",
+        RemoteEvalConfig {
+            objective: "sphere5".into(),
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+            seed: 3,
+            policy: TrialPolicy { deadline_s: 0.05, ..TrialPolicy::default() },
+        },
+        quiet_options(),
+    )
+    .expect("bind loopback");
+    let addr = pool.local_addr();
+    for id in 0..N as u64 {
+        pool.dispatch(trial(id));
+    }
+    let mut fake = FakeWorker::connect(addr, 2, None);
+    let mut received: Vec<u64> = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while received.len() < N && Instant::now() < deadline {
+        while let Some(o) = pool.poll_outcome(Duration::from_millis(1)) {
+            received.push(o.trial.id);
+        }
+        let Some(t) = fake.read_trial(Duration::from_millis(50)) else { continue };
+        match rng.below(6) {
+            0 => fake.send_outcome(&t),
+            1 => fake.send_error(&t, TrialError::Timeout(0.05)),
+            2 => {
+                // hang past the 2× reap window; the leader cancels and
+                // requeues, then this late stale outcome must lose (or
+                // win — either way exactly one delivery) at the gate
+                std::thread::sleep(Duration::from_millis(150));
+                fake.send_outcome(&t);
+            }
+            3 => {
+                fake.send_outcome(&t);
+                fake.send_outcome(&t); // duplicate on one link
+            }
+            4 => fake = fake.reconnect(addr), // vanish mid-trial
+            _ => {
+                fake.send_outcome(&t);
+                let stale = t.clone();
+                fake = fake.reconnect(addr);
+                fake.send_outcome(&stale); // stale re-report after requeue
+            }
+        }
+    }
+    while received.len() < N {
+        match pool.poll_outcome(Duration::from_millis(200)) {
+            Some(o) => received.push(o.trial.id),
+            None => break,
+        }
+    }
+    drop(fake);
+    Box::new(pool).shutdown();
+    let mut unique = received.clone();
+    unique.sort_unstable();
+    unique.dedup();
+    received.len() == N && unique.len() == N
+}
+
+#[test]
+fn prop_exactly_once_survives_timeouts_cancels_and_late_outcomes() {
+    let seeds = pt::usize_in(0, 1_000_000);
+    pt::check("fault_ids_exactly_once", &seeds, |&seed| {
+        fault_adversarial_episode(seed as u64)
+    });
+}
+
 /// Two studies share one fleet and deliberately reuse the same bare trial
 /// ids; the delivery gate is keyed by `(study, trial)`, so under the same
 /// adversarial worker behaviors every *pair* must reach the coordinator
@@ -595,6 +701,7 @@ fn two_study_adversarial_episode(seed: u64) -> bool {
                 sleep_scale: 0.0,
                 fail_prob: 0.0,
                 seed,
+                policy: TrialPolicy::default(),
             },
         )
         .expect("register study");

@@ -16,7 +16,7 @@ use lazygp::bo::driver::{BoConfig, InitDesign, PendingStrategy};
 use lazygp::coordinator::transport::run_worker;
 use lazygp::coordinator::{
     AsyncBo, AsyncCoordinatorConfig, ControlClient, CreateStudy, RemoteEvalConfig, SocketPool,
-    StudyResult, StudyService, StudySpec,
+    StudyResult, StudyService, StudySpec, TrialPolicy,
 };
 use lazygp::metrics::AsyncTrace;
 use lazygp::objectives;
@@ -32,7 +32,13 @@ fn fast_bo(seed: u64) -> BoConfig {
 fn tcp_fleet(n: usize, seed: u64) -> (SocketPool, Vec<std::thread::JoinHandle<()>>) {
     let pool = SocketPool::listen(
         "127.0.0.1:0",
-        RemoteEvalConfig { objective: "sphere5".into(), sleep_scale: 0.0, fail_prob: 0.0, seed },
+        RemoteEvalConfig {
+            objective: "sphere5".into(),
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+            seed,
+            policy: TrialPolicy::default(),
+        },
     )
     .expect("bind loopback");
     let addr = pool.local_addr().to_string();
@@ -64,6 +70,7 @@ fn solo_run(objective: &str, seed: u64, evals: usize) -> (lazygp::bo::driver::Be
             fail_prob: 0.0,
             max_retries: 2,
             seed,
+            ..AsyncCoordinatorConfig::default()
         },
     );
     let best = abo.run_until_evals(evals).expect("solo run completes");

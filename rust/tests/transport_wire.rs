@@ -14,7 +14,7 @@ use lazygp::coordinator::transport::{
 };
 use lazygp::coordinator::{
     AsyncBo, AsyncCoordinatorConfig, RemoteEvalConfig, SocketPool, StudyId, Trial, TrialError,
-    TrialOutcome,
+    TrialOutcome, TrialPolicy,
 };
 use lazygp::gp::Surrogate;
 use lazygp::objectives::Evaluation;
@@ -143,6 +143,7 @@ fn sphere_pool(seed: u64) -> SocketPool {
             sleep_scale: 0.0,
             fail_prob: 0.0,
             seed,
+            policy: TrialPolicy::default(),
         },
     )
     .expect("bind loopback")
@@ -246,7 +247,13 @@ fn async_bo_runs_unchanged_over_loopback_tcp() {
     // observation semantics, fantasies fully unwound at the end
     let pool = SocketPool::listen(
         "127.0.0.1:0",
-        RemoteEvalConfig { objective: "levy2".into(), sleep_scale: 0.0, fail_prob: 0.0, seed: 9 },
+        RemoteEvalConfig {
+            objective: "levy2".into(),
+            sleep_scale: 0.0,
+            fail_prob: 0.0,
+            seed: 9,
+            policy: TrialPolicy::default(),
+        },
     )
     .unwrap();
     let addr = pool.local_addr().to_string();
@@ -297,6 +304,7 @@ fn socket_pool_teardown_is_prompt() {
             sleep_scale: 1.0, // ~190 s simulated ⇒ capped 5 s real sleep
             fail_prob: 0.0,
             seed: 11,
+            policy: TrialPolicy::default(),
         },
     )
     .unwrap();
