@@ -46,7 +46,7 @@ use std::io::Write as _;
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -55,6 +55,7 @@ use crate::config::json::Json;
 use crate::gp::SurrogateSpec;
 use crate::metrics::{AsyncTrace, StudyCounter};
 use crate::objectives;
+use crate::util::sync::{LockRank, RankedMutex};
 
 use super::async_leader::{AsyncBo, AsyncCoordinatorConfig};
 use super::journal::{recover, OpenInfo, ReplayEntry, StudyJournal, JOURNAL_FORMAT};
@@ -328,8 +329,8 @@ impl Scheduler {
 /// fleet touch goes through the mutex (cooperative pumping keeps the
 /// critical sections short).
 struct ServiceCore {
-    fleet: Mutex<Option<Box<dyn Transport>>>,
-    sched: Mutex<Scheduler>,
+    fleet: RankedMutex<Option<Box<dyn Transport>>>,
+    sched: RankedMutex<Scheduler>,
 }
 
 impl ServiceCore {
@@ -338,7 +339,7 @@ impl ServiceCore {
     /// anything else already settled, then admit queued trials.
     fn pump(&self, fleet: &dyn Transport, wait: Duration) {
         let first = fleet.poll_outcome(wait.min(PUMP_SLICE));
-        let mut sched = self.sched.lock().expect("scheduler poisoned");
+        let mut sched = self.sched.lock();
         if let Some(o) = first {
             sched.route(o);
             while let Some(o) = fleet.poll_outcome(Duration::ZERO) {
@@ -367,8 +368,8 @@ impl Transport for StudyHandle {
     fn dispatch(&self, mut trial: Trial) {
         trial.study = self.study;
         {
-            let fleet = self.core.fleet.lock().expect("fleet poisoned");
-            let mut sched = self.core.sched.lock().expect("scheduler poisoned");
+            let fleet = self.core.fleet.lock();
+            let mut sched = self.core.sched.lock();
             if let Some(st) = sched.studies.get_mut(&self.study.0) {
                 st.queue.push_back(trial);
             }
@@ -389,11 +390,11 @@ impl Transport for StudyHandle {
             // cooperative pump: whichever runner wins the fleet lock
             // drives I/O for every study; losers sleep on their channel.
             match self.core.fleet.try_lock() {
-                Ok(guard) => {
+                Some(guard) => {
                     let fleet = guard.as_deref()?;
                     self.core.pump(fleet, left);
                 }
-                Err(_) => {
+                None => {
                     if let Ok(o) = self.rx.recv_timeout(left.min(PUMP_SLICE)) {
                         return Some(o);
                     }
@@ -407,7 +408,7 @@ impl Transport for StudyHandle {
             if let Some(o) = self.poll_outcome(Duration::from_millis(100)) {
                 return Ok(o);
             }
-            if self.core.fleet.lock().expect("fleet poisoned").is_none() {
+            if self.core.fleet.lock().is_none() {
                 return Err(crate::Error::msg(format!(
                     "study {}: fleet shut down while trials were outstanding",
                     self.study
@@ -421,14 +422,14 @@ impl Transport for StudyHandle {
     }
 
     fn dispatched(&self) -> u64 {
-        let sched = self.core.sched.lock().expect("scheduler poisoned");
+        let sched = self.core.sched.lock();
         sched.studies.get(&self.study.0).map_or(0, |st| st.dispatched)
     }
 
     /// Forward a journaled study's durability ACK to the shared fleet
     /// (which routes it to the worker that delivered the outcome).
     fn ack(&self, outcome: &TrialOutcome) {
-        let fleet = self.core.fleet.lock().expect("fleet poisoned");
+        let fleet = self.core.fleet.lock();
         if let Some(f) = fleet.as_deref() {
             f.ack(outcome);
         }
@@ -437,17 +438,17 @@ impl Transport for StudyHandle {
     /// Forward the exactly-once preload (and the ACK-mode flip it
     /// implies) to the shared fleet.
     fn preload_gate(&self, keys: &[(u64, u64)]) {
-        let fleet = self.core.fleet.lock().expect("fleet poisoned");
+        let fleet = self.core.fleet.lock();
         if let Some(f) = fleet.as_deref() {
             f.preload_gate(keys);
         }
     }
 
     fn stats(&self) -> TransportStats {
-        let fleet = self.core.fleet.lock().expect("fleet poisoned");
+        let fleet = self.core.fleet.lock();
         let mut stats = fleet.as_deref().map(|f| f.stats()).unwrap_or_default();
         drop(fleet);
-        self.core.sched.lock().expect("scheduler poisoned").overlay(&mut stats);
+        self.core.sched.lock().overlay(&mut stats);
         stats
     }
 
@@ -455,7 +456,7 @@ impl Transport for StudyHandle {
     /// and releases its surrogate-memory estimate). The shared fleet
     /// outlives every study; [`StudyService::shutdown`] tears it down.
     fn shutdown(self: Box<Self>) {
-        let mut sched = self.core.sched.lock().expect("scheduler poisoned");
+        let mut sched = self.core.sched.lock();
         if let Some(st) = sched.studies.get_mut(&self.study.0) {
             st.closed = true;
             st.queue.clear();
@@ -538,7 +539,7 @@ fn run_study(core: Arc<ServiceCore>, id: StudyId, spec: StudySpec, handle: Study
                 eprintln!("study {id} (`{name}`): journal unusable, not running: {e}");
                 let trace = bo.trace(name);
                 let _ = bo.finish();
-                let mut sched = core.sched.lock().expect("scheduler poisoned");
+                let mut sched = core.sched.lock();
                 if let Some(st) = sched.studies.get_mut(&id.0) {
                     st.finished = Some(StudyResult { best: None, trace });
                 }
@@ -549,7 +550,7 @@ fn run_study(core: Arc<ServiceCore>, id: StudyId, spec: StudySpec, handle: Study
     let best = bo.run_until_evals(evals).ok();
     let trace = bo.trace(name);
     let _ = bo.finish(); // closes the handle (study marked closed)
-    let mut sched = core.sched.lock().expect("scheduler poisoned");
+    let mut sched = core.sched.lock();
     if let Some(st) = sched.studies.get_mut(&id.0) {
         if let Some(b) = &best {
             if b.value > st.best {
@@ -565,7 +566,7 @@ fn run_study(core: Arc<ServiceCore>, id: StudyId, spec: StudySpec, handle: Study
 /// diagram.
 pub struct StudyService {
     core: Arc<ServiceCore>,
-    runners: Mutex<HashMap<u64, JoinHandle<()>>>,
+    runners: RankedMutex<HashMap<u64, JoinHandle<()>>>,
     /// study ids start at 1; 0 is [`StudyId::SOLO`], reserved for
     /// single-study transports that never register
     next_id: AtomicU64,
@@ -580,10 +581,10 @@ impl StudyService {
     pub fn new(fleet: Box<dyn Transport>) -> Self {
         Self {
             core: Arc::new(ServiceCore {
-                fleet: Mutex::new(Some(fleet)),
-                sched: Mutex::new(Scheduler::new()),
+                fleet: RankedMutex::new(LockRank::Fleet, "core.fleet", Some(fleet)),
+                sched: RankedMutex::new(LockRank::Scheduler, "core.sched", Scheduler::new()),
             }),
-            runners: Mutex::new(HashMap::new()),
+            runners: RankedMutex::new(LockRank::Runners, "service.runners", HashMap::new()),
             next_id: AtomicU64::new(1),
             journal_dir: None,
         }
@@ -616,7 +617,7 @@ impl StudyService {
         }
         let id = StudyId(self.next_id.fetch_add(1, Ordering::SeqCst));
         {
-            let fleet = self.core.fleet.lock().expect("fleet poisoned");
+            let fleet = self.core.fleet.lock();
             let Some(f) = fleet.as_deref() else {
                 return Err(crate::Error::msg("study service is shut down"));
             };
@@ -633,7 +634,7 @@ impl StudyService {
         }
         let (tx, rx) = channel();
         {
-            let mut sched = self.core.sched.lock().expect("scheduler poisoned");
+            let mut sched = self.core.sched.lock();
             let min_pass = sched.studies.values().map(|s| s.pass).min().unwrap_or(0);
             let tickets = spec.weight.max(1) << spec.priority.min(32);
             sched.studies.insert(
@@ -665,7 +666,7 @@ impl StudyService {
             .name(format!("study-{id}"))
             .spawn(move || run_study(core, id, spec, handle))
             .map_err(|e| crate::Error::msg(format!("failed to spawn study runner: {e}")))?;
-        self.runners.lock().expect("runners poisoned").insert(id.0, thread);
+        self.runners.lock().insert(id.0, thread);
         Ok(id)
     }
 
@@ -681,7 +682,7 @@ impl StudyService {
     }
 
     fn set_suspended(&self, id: StudyId, suspended: bool) -> crate::Result<()> {
-        let mut sched = self.core.sched.lock().expect("scheduler poisoned");
+        let mut sched = self.core.sched.lock();
         match sched.studies.get_mut(&id.0) {
             Some(st) => {
                 st.suspended = suspended;
@@ -693,7 +694,7 @@ impl StudyService {
 
     /// Point-in-time summary of one study.
     pub fn status(&self, id: StudyId) -> Option<StudyStatus> {
-        let sched = self.core.sched.lock().expect("scheduler poisoned");
+        let sched = self.core.sched.lock();
         sched.studies.get(&id.0).map(|st| StudyStatus {
             study: id,
             name: st.name.clone(),
@@ -713,7 +714,7 @@ impl StudyService {
     /// Settled evaluations of a study so far (settle order), starting
     /// at row `from` — the paging cursor for [`ControlClient::stream_trace`].
     pub fn trace_rows(&self, id: StudyId, from: usize) -> Vec<TraceRow> {
-        let sched = self.core.sched.lock().expect("scheduler poisoned");
+        let sched = self.core.sched.lock();
         match sched.studies.get(&id.0) {
             Some(st) => st.rows.iter().skip(from).cloned().collect(),
             None => Vec::new(),
@@ -722,11 +723,11 @@ impl StudyService {
 
     /// Block until a study's runner finishes; returns its result.
     pub fn wait(&self, id: StudyId) -> crate::Result<StudyResult> {
-        let thread = self.runners.lock().expect("runners poisoned").remove(&id.0);
+        let thread = self.runners.lock().remove(&id.0);
         if let Some(t) = thread {
             t.join().map_err(|_| crate::Error::msg(format!("study {id} runner panicked")))?;
         }
-        let sched = self.core.sched.lock().expect("scheduler poisoned");
+        let sched = self.core.sched.lock();
         sched
             .studies
             .get(&id.0)
@@ -739,7 +740,7 @@ impl StudyService {
         let mut out = Vec::new();
         loop {
             let next = {
-                let runners = self.runners.lock().expect("runners poisoned");
+                let runners = self.runners.lock();
                 runners.keys().min().copied()
             };
             let Some(id) = next else { break };
@@ -752,17 +753,17 @@ impl StudyService {
     /// Fleet counters with the service's per-study rows overlaid
     /// (starvation skips, surrogate memory estimates).
     pub fn stats(&self) -> TransportStats {
-        let fleet = self.core.fleet.lock().expect("fleet poisoned");
+        let fleet = self.core.fleet.lock();
         let mut stats = fleet.as_deref().map(|f| f.stats()).unwrap_or_default();
         drop(fleet);
-        self.core.sched.lock().expect("scheduler poisoned").overlay(&mut stats);
+        self.core.sched.lock().overlay(&mut stats);
         stats
     }
 
     /// Join every runner, then tear the fleet down.
     pub fn shutdown(self) -> crate::Result<()> {
         self.wait_all()?;
-        let fleet = self.core.fleet.lock().expect("fleet poisoned").take();
+        let fleet = self.core.fleet.lock().take();
         if let Some(f) = fleet {
             f.shutdown();
         }

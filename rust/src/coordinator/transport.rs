@@ -99,7 +99,7 @@ use std::net::{
 };
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -108,6 +108,7 @@ use super::worker::{FaultPlan, WorkerConfig, WorkerPool};
 use crate::config::json::Json;
 use crate::metrics::{FaultCounters, StudyCounter, TransportCounter};
 use crate::util::rng::Pcg64;
+use crate::util::sync::{LockRank, RankedCondvar, RankedMutex};
 
 /// Wire protocol version; bumped on any frame/message change. A leader
 /// rejects workers advertising a different version. Version 2 added
@@ -904,14 +905,14 @@ struct Conn {
     id: usize,
     capacity: usize,
     alive: AtomicBool,
-    writer: Mutex<TcpStream>,
+    writer: RankedMutex<TcpStream>,
     /// (study, trial id) → (trial, dispatch instant); drained on disconnect
-    in_flight: Mutex<HashMap<GateKey, (Trial, Instant)>>,
+    in_flight: RankedMutex<HashMap<GateKey, (Trial, Instant)>>,
     stats: ConnStats,
     /// circuit-breaker state: consecutive failed/timed-out outcomes
     consec_failures: AtomicU64,
     /// quarantine cool-down end, if the breaker tripped
-    quarantined_until: Mutex<Option<Instant>>,
+    quarantined_until: RankedMutex<Option<Instant>>,
     /// half-open: the cool-down elapsed and the next dispatch is the probe
     probing: AtomicBool,
 }
@@ -933,11 +934,11 @@ impl Conn {
             id,
             capacity,
             alive: AtomicBool::new(true),
-            writer: Mutex::new(writer),
-            in_flight: Mutex::new(HashMap::new()),
+            writer: RankedMutex::new(LockRank::LinkState, "conn.writer", writer),
+            in_flight: RankedMutex::new(LockRank::LinkState, "conn.in_flight", HashMap::new()),
             stats: ConnStats::default(),
             consec_failures: AtomicU64::new(0),
-            quarantined_until: Mutex::new(None),
+            quarantined_until: RankedMutex::new(LockRank::LinkState, "conn.quarantine", None),
             probing: AtomicBool::new(false),
         }
     }
@@ -945,7 +946,7 @@ impl Conn {
     /// Is the link inside its quarantine cool-down right now?
     fn is_quarantined(&self, now: Instant) -> bool {
         matches!(
-            *self.quarantined_until.lock().expect("quarantine poisoned"),
+            *self.quarantined_until.lock(),
             Some(until) if now < until
         )
     }
@@ -954,7 +955,7 @@ impl Conn {
     /// transitions the link to half-open, where a single probe trial is
     /// allowed until its outcome settles the state.
     fn breaker_gate(&self, now: Instant) -> BreakerGate {
-        let mut until = self.quarantined_until.lock().expect("quarantine poisoned");
+        let mut until = self.quarantined_until.lock();
         match *until {
             Some(t) if now < t => BreakerGate::Closed,
             Some(_) => {
@@ -969,7 +970,7 @@ impl Conn {
 
     /// Trip the breaker: quarantine this link for `cooldown`.
     fn quarantine(&self, cooldown: Duration) {
-        *self.quarantined_until.lock().expect("quarantine poisoned") =
+        *self.quarantined_until.lock() =
             Some(Instant::now() + cooldown);
         self.probing.store(false, Ordering::SeqCst);
         self.consec_failures.store(0, Ordering::SeqCst);
@@ -1027,34 +1028,34 @@ struct Shared {
     net: NetPolicy,
     stop: AtomicBool,
     /// trials waiting for a free slot; requeued trials go to the front
-    queue: Mutex<VecDeque<Trial>>,
+    queue: RankedMutex<VecDeque<Trial>>,
     /// paired with `queue`: signaled on new trial / freed slot / new
     /// worker / disconnect / stop
-    cv: std::sync::Condvar,
+    cv: RankedCondvar,
     /// every connection ever accepted; `alive` gates dispatch
-    conns: Mutex<Vec<Arc<Conn>>>,
+    conns: RankedMutex<Vec<Arc<Conn>>>,
     /// `(study, trial id)` pairs whose outcome already reached the
     /// coordinator — the exactly-once gate every delivery and every
     /// requeue consults, so a disconnect racing an outcome can never both
     /// requeue *and* complete the same trial, and one study's ids can
     /// never mask another's
-    delivered: Mutex<HashSet<GateKey>>,
+    delivered: RankedMutex<HashSet<GateKey>>,
     /// per-study eval configs; pushed to live workers on registration and
     /// replayed to every late joiner right after its Welcome. This lock
     /// also linearizes registration against admission (both take it before
     /// `conns`), so a new conn can never miss a concurrently registered
     /// study
-    studies: Mutex<BTreeMap<u64, RemoteEvalConfig>>,
+    studies: RankedMutex<BTreeMap<u64, RemoteEvalConfig>>,
     /// per-study dispatch/delivery totals (BTreeMap: deterministic order
     /// in snapshots)
-    study_stats: Mutex<BTreeMap<u64, StudyTotals>>,
+    study_stats: RankedMutex<BTreeMap<u64, StudyTotals>>,
     next_conn_id: AtomicUsize,
     faults: FaultTotals,
     /// circuit breaker: consecutive failures before quarantine (0 = off)
     quarantine_after: u32,
     /// circuit breaker: cool-down before the half-open probe
     quarantine_cooldown: Duration,
-    reader_handles: Mutex<Vec<JoinHandle<()>>>,
+    reader_handles: RankedMutex<Vec<JoinHandle<()>>>,
     /// ACK mode: a journaling coordinator attached
     /// ([`Transport::preload_gate`]), so Welcomes advertise `acks` and
     /// workers retain outcomes until the leader confirms durability
@@ -1076,7 +1077,7 @@ impl Shared {
     /// only for registered studies, so solo traffic ([`StudyId::SOLO`],
     /// never registered) stays row-free and this is a no-op for it.
     fn note_study(&self, study: StudyId, f: impl FnOnce(&mut StudyTotals)) {
-        let mut m = self.study_stats.lock().expect("study stats poisoned");
+        let mut m = self.study_stats.lock();
         if let Some(t) = m.get_mut(&study.0) {
             f(t);
         }
@@ -1085,7 +1086,6 @@ impl Shared {
     fn study_snapshot(&self) -> Vec<StudyCounter> {
         self.study_stats
             .lock()
-            .expect("study stats poisoned")
             .iter()
             .map(|(&study, t)| StudyCounter {
                 study,
@@ -1139,17 +1139,25 @@ impl SocketPool {
             eval,
             net: options.net_policy(),
             stop: AtomicBool::new(false),
-            queue: Mutex::new(VecDeque::new()),
-            cv: std::sync::Condvar::new(),
-            conns: Mutex::new(Vec::new()),
-            delivered: Mutex::new(HashSet::new()),
-            studies: Mutex::new(BTreeMap::new()),
-            study_stats: Mutex::new(BTreeMap::new()),
+            queue: RankedMutex::new(LockRank::TrialQueue, "pool.queue", VecDeque::new()),
+            cv: RankedCondvar::new(),
+            conns: RankedMutex::new(LockRank::ConnList, "pool.conns", Vec::new()),
+            delivered: RankedMutex::new(LockRank::DeliveryGate, "pool.delivered", HashSet::new()),
+            studies: RankedMutex::new(LockRank::StudyRegistry, "pool.studies", BTreeMap::new()),
+            study_stats: RankedMutex::new(
+                LockRank::StudyState,
+                "pool.study_stats",
+                BTreeMap::new(),
+            ),
             next_conn_id: AtomicUsize::new(0),
             faults: FaultTotals::default(),
             quarantine_after: options.quarantine_after,
             quarantine_cooldown: options.quarantine_cooldown,
-            reader_handles: Mutex::new(Vec::new()),
+            reader_handles: RankedMutex::new(
+                LockRank::ReaderHandles,
+                "pool.reader_handles",
+                Vec::new(),
+            ),
             acks: AtomicBool::new(false),
         });
         let acceptor = {
@@ -1193,7 +1201,6 @@ impl SocketPool {
         self.shared
             .conns
             .lock()
-            .expect("conns poisoned")
             .iter()
             .filter(|c| c.alive.load(Ordering::SeqCst) && !c.is_quarantined(now))
             .map(|c| c.capacity)
@@ -1261,10 +1268,10 @@ impl SocketPool {
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
-        let conns: Vec<Arc<Conn>> = self.shared.conns.lock().expect("conns poisoned").clone();
+        let conns: Vec<Arc<Conn>> = self.shared.conns.lock().clone();
         let fc = self.shared.net.frame_config();
         for c in &conns {
-            let mut w = c.writer.lock().expect("writer poisoned");
+            let mut w = c.writer.lock();
             // best-effort: tell the worker to exit (unless simulating a
             // crash), then close both directions so its (and our) blocked
             // reads unblock
@@ -1274,7 +1281,7 @@ impl SocketPool {
             let _ = w.shutdown(NetShutdown::Both);
         }
         let handles: Vec<JoinHandle<()>> =
-            self.shared.reader_handles.lock().expect("handles poisoned").drain(..).collect();
+            self.shared.reader_handles.lock().drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
@@ -1293,7 +1300,7 @@ impl Transport for SocketPool {
     fn dispatch(&self, trial: Trial) {
         self.dispatched.fetch_add(1, Ordering::Relaxed);
         self.shared.note_study(trial.study, |t| t.dispatched += 1);
-        self.shared.queue.lock().expect("queue poisoned").push_back(trial);
+        self.shared.queue.lock().push_back(trial);
         self.shared.cv.notify_all();
     }
 
@@ -1325,7 +1332,7 @@ impl Transport for SocketPool {
             }
             polls += 1;
             if polls % 100 == 0 && self.capacity_now() == 0 {
-                let queued = self.shared.queue.lock().expect("queue poisoned").len();
+                let queued = self.shared.queue.lock().len();
                 if queued > 0 {
                     eprintln!(
                         "socket pool: {queued} trial(s) queued but no workers connected; \
@@ -1349,15 +1356,14 @@ impl Transport for SocketPool {
         self.shared
             .study_stats
             .lock()
-            .expect("study stats poisoned")
             .entry(study.0)
             .or_default();
-        let mut studies = self.shared.studies.lock().expect("studies poisoned");
+        let mut studies = self.shared.studies.lock();
         studies.insert(study.0, eval);
-        let conns = self.shared.conns.lock().expect("conns poisoned");
+        let conns = self.shared.conns.lock();
         for c in conns.iter().filter(|c| c.alive.load(Ordering::SeqCst)) {
             let written = {
-                let mut w = c.writer.lock().expect("writer poisoned");
+                let mut w = c.writer.lock();
                 write_frame_with(&mut *w, &msg, &fc)
             };
             match written {
@@ -1378,7 +1384,7 @@ impl Transport for SocketPool {
     /// the connection id. Best-effort: a dead or dying link just means the
     /// worker redelivers later and the preloaded gate drops the duplicate.
     fn ack(&self, outcome: &TrialOutcome) {
-        let conns = self.shared.conns.lock().expect("conns poisoned");
+        let conns = self.shared.conns.lock();
         let Some(c) = conns
             .iter()
             .find(|c| c.id == outcome.worker_id && c.alive.load(Ordering::SeqCst))
@@ -1388,7 +1394,7 @@ impl Transport for SocketPool {
         let msg = LeaderMsg::Ack { study: outcome.trial.study.0, trial: outcome.trial.id };
         let fc = self.shared.net.frame_config();
         let written = {
-            let mut w = c.writer.lock().expect("writer poisoned");
+            let mut w = c.writer.lock();
             write_frame_with(&mut *w, &msg.to_json(), &fc)
         };
         if let Ok(n) = written {
@@ -1403,7 +1409,7 @@ impl Transport for SocketPool {
     /// since the gate still drops any duplicate they redeliver.
     fn preload_gate(&self, keys: &[(u64, u64)]) {
         {
-            let mut gate = self.shared.delivered.lock().expect("gate poisoned");
+            let mut gate = self.shared.delivered.lock();
             gate.extend(keys.iter().copied());
         }
         self.shared.acks.store(true, Ordering::SeqCst);
@@ -1427,7 +1433,6 @@ impl Transport for SocketPool {
             .shared
             .conns
             .lock()
-            .expect("conns poisoned")
             .iter()
             .map(|c| c.counter())
             .collect();
@@ -1565,17 +1570,17 @@ fn admit_worker(
     // either sees this conn in `conns` and pushes the new study to it, or
     // runs first and the study is replayed here — never neither.
     {
-        let studies = shared.studies.lock().expect("studies poisoned");
+        let studies = shared.studies.lock();
         let fc = shared.net.frame_config();
         for (&study, eval) in studies.iter() {
             let msg = LeaderMsg::Study { study, eval: eval.clone() }.to_json();
             let n = {
-                let mut w = conn.writer.lock().expect("writer poisoned");
+                let mut w = conn.writer.lock();
                 write_frame_with(&mut *w, &msg, &fc)?
             };
             conn.stats.bytes_tx.fetch_add(n, Ordering::Relaxed);
         }
-        shared.conns.lock().expect("conns poisoned").push(Arc::clone(&conn));
+        shared.conns.lock().push(Arc::clone(&conn));
     }
     let handle = {
         let shared = Arc::clone(shared);
@@ -1585,7 +1590,7 @@ fn admit_worker(
             .spawn(move || reader_loop(&conn, &shared, &res_tx, reader))
             .expect("spawn conn reader")
     };
-    shared.reader_handles.lock().expect("handles poisoned").push(handle);
+    shared.reader_handles.lock().push(handle);
     Ok(())
 }
 
@@ -1626,7 +1631,7 @@ fn reader_loop(
             Ok(WorkerMsg::Ping { seq }) => {
                 let pong = LeaderMsg::Pong { seq }.to_json();
                 let written = {
-                    let mut w = conn.writer.lock().expect("writer poisoned");
+                    let mut w = conn.writer.lock();
                     write_frame_with(&mut *w, &pong, &fc)
                 };
                 match written {
@@ -1660,16 +1665,16 @@ fn deliver_outcome(
     mut outcome: TrialOutcome,
 ) -> bool {
     let key = gate_key(&outcome.trial);
-    let fresh = shared.delivered.lock().expect("delivered poisoned").insert(key);
+    let fresh = shared.delivered.lock().insert(key);
     if !fresh {
         shared.faults.duplicates_dropped.fetch_add(1, Ordering::Relaxed);
         shared.note_study(outcome.trial.study, |t| t.duplicates_dropped += 1);
         // still clear any local in-flight entry so the slot frees up
-        conn.in_flight.lock().expect("in_flight poisoned").remove(&key);
+        conn.in_flight.lock().remove(&key);
         shared.cv.notify_all();
         return true;
     }
-    let entry = conn.in_flight.lock().expect("in_flight poisoned").remove(&key);
+    let entry = conn.in_flight.lock().remove(&key);
     conn.stats.completed.fetch_add(1, Ordering::Relaxed);
     shared.note_study(outcome.trial.study, |t| t.completed += 1);
     if let Some((_, dispatched_at)) = entry {
@@ -1704,10 +1709,10 @@ fn deliver_outcome(
     // cancel a pending requeue of the same trial: it may sit in the queue
     // (rescued from this worker's previous link) or in another connection's
     // in-flight set (already re-dispatched)
-    shared.queue.lock().expect("queue poisoned").retain(|t| gate_key(t) != key);
-    for other in shared.conns.lock().expect("conns poisoned").iter() {
+    shared.queue.lock().retain(|t| gate_key(t) != key);
+    for other in shared.conns.lock().iter() {
         if other.id != conn.id {
-            other.in_flight.lock().expect("in_flight poisoned").remove(&key);
+            other.in_flight.lock().remove(&key);
         }
     }
     // remap to the connection id so leader-side telemetry is per-link,
@@ -1731,19 +1736,18 @@ fn disconnect(conn: &Conn, shared: &Shared) {
     // otherwise stay open and pin a heartbeat-less worker in a blocking
     // read forever (best-effort; the fd may already be gone)
     {
-        let w = conn.writer.lock().expect("writer poisoned");
+        let w = conn.writer.lock();
         let _ = w.shutdown(NetShutdown::Both);
     }
     let orphans: Vec<Trial> = conn
         .in_flight
         .lock()
-        .expect("in_flight poisoned")
         .drain()
         .map(|(_, (t, _))| t)
         .collect();
     if !orphans.is_empty() && !shared.stop.load(Ordering::SeqCst) {
         let orphans: Vec<Trial> = {
-            let delivered = shared.delivered.lock().expect("delivered poisoned");
+            let delivered = shared.delivered.lock();
             orphans.into_iter().filter(|t| !delivered.contains(&gate_key(t))).collect()
         };
         if !orphans.is_empty() {
@@ -1752,7 +1756,7 @@ fn disconnect(conn: &Conn, shared: &Shared) {
             for t in &orphans {
                 shared.note_study(t.study, |s| s.requeued += 1);
             }
-            let mut q = shared.queue.lock().expect("queue poisoned");
+            let mut q = shared.queue.lock();
             for t in orphans {
                 q.push_front(t);
             }
@@ -1767,7 +1771,7 @@ fn disconnect(conn: &Conn, shared: &Shared) {
 fn dispatch_loop(shared: &Arc<Shared>) {
     const REAP_PERIOD: Duration = Duration::from_millis(100);
     let mut last_reap = Instant::now();
-    let mut guard = shared.queue.lock().expect("queue poisoned");
+    let mut guard = shared.queue.lock();
     loop {
         if shared.stop.load(Ordering::SeqCst) {
             return;
@@ -1776,7 +1780,7 @@ fn dispatch_loop(shared: &Arc<Shared>) {
             drop(guard); // the reaper takes conn/queue locks itself
             reap_overdue(shared);
             last_reap = Instant::now();
-            guard = shared.queue.lock().expect("queue poisoned");
+            guard = shared.queue.lock();
             continue;
         }
         let target = if guard.is_empty() { None } else { pick_target(shared) };
@@ -1785,14 +1789,11 @@ fn dispatch_loop(shared: &Arc<Shared>) {
                 let trial = guard.pop_front().expect("queue emptied under lock");
                 drop(guard); // network IO outside the queue lock
                 send_trial(shared, &conn, trial);
-                guard = shared.queue.lock().expect("queue poisoned");
+                guard = shared.queue.lock();
             }
             None => {
                 // timeout bounds stop-flag latency; spurious wakes are fine
-                let (g, _timed_out) = shared
-                    .cv
-                    .wait_timeout(guard, Duration::from_millis(100))
-                    .expect("queue poisoned");
+                let (g, _timed_out) = shared.cv.wait_timeout(guard, Duration::from_millis(100));
                 guard = g;
             }
         }
@@ -1812,7 +1813,6 @@ fn reap_overdue(shared: &Arc<Shared>) {
     let deadlines: BTreeMap<u64, f64> = shared
         .studies
         .lock()
-        .expect("studies poisoned")
         .iter()
         .map(|(&s, e)| (s, e.policy.deadline_s))
         .collect();
@@ -1820,13 +1820,13 @@ fn reap_overdue(shared: &Arc<Shared>) {
         return; // no study has a deadline: nothing can be overdue
     }
     let conns: Vec<Arc<Conn>> =
-        shared.conns.lock().expect("conns poisoned").to_vec();
+        shared.conns.lock().to_vec();
     for conn in conns {
         if !conn.alive.load(Ordering::SeqCst) {
             continue; // disconnect already rescued its in-flight set
         }
         let overdue: Vec<Trial> = {
-            let mut in_flight = conn.in_flight.lock().expect("in_flight poisoned");
+            let mut in_flight = conn.in_flight.lock();
             let keys: Vec<GateKey> = in_flight
                 .iter()
                 .filter(|(_, (t, at))| {
@@ -1853,19 +1853,19 @@ fn reap_overdue(shared: &Arc<Shared>) {
             let msg =
                 LeaderMsg::Cancel { study: trial.study.0, trial: trial.id }.to_json();
             {
-                let mut w = conn.writer.lock().expect("writer poisoned");
+                let mut w = conn.writer.lock();
                 if let Ok(n) = write_frame_with(&mut *w, &msg, &fc) {
                     conn.stats.bytes_tx.fetch_add(n, Ordering::Relaxed);
                 }
             }
             shared.faults.cancels.fetch_add(1, Ordering::Relaxed);
-            if shared.delivered.lock().expect("delivered poisoned").contains(&key) {
+            if shared.delivered.lock().contains(&key) {
                 continue; // outcome crossed the reap: it wins, no requeue
             }
             conn.stats.requeued.fetch_add(1, Ordering::Relaxed);
             shared.faults.requeued.fetch_add(1, Ordering::Relaxed);
             shared.note_study(trial.study, |s| s.requeued += 1);
-            shared.queue.lock().expect("queue poisoned").push_front(trial);
+            shared.queue.lock().push_front(trial);
         }
         shared.cv.notify_all();
     }
@@ -1876,12 +1876,12 @@ fn reap_overdue(shared: &Arc<Shared>) {
 /// one probe trial (its outcome decides rejoin vs re-quarantine).
 fn pick_target(shared: &Shared) -> Option<Arc<Conn>> {
     let now = Instant::now();
-    let conns = shared.conns.lock().expect("conns poisoned");
+    let conns = shared.conns.lock();
     conns
         .iter()
         .filter(|c| c.alive.load(Ordering::SeqCst))
         .filter_map(|c| {
-            let load = c.in_flight.lock().expect("in_flight poisoned").len();
+            let load = c.in_flight.lock().len();
             let allowed = match c.breaker_gate(now) {
                 BreakerGate::Open => c.capacity,
                 BreakerGate::HalfOpen => 1,
@@ -1903,18 +1903,18 @@ fn pick_target(shared: &Shared) -> Option<Arc<Conn>> {
 /// a requeue/redeliver race) is silently discarded instead of re-run.
 fn send_trial(shared: &Shared, conn: &Arc<Conn>, trial: Trial) {
     let key = gate_key(&trial);
-    if shared.delivered.lock().expect("delivered poisoned").contains(&key) {
+    if shared.delivered.lock().contains(&key) {
         shared.cv.notify_all();
         return;
     }
     {
-        let mut in_flight = conn.in_flight.lock().expect("in_flight poisoned");
+        let mut in_flight = conn.in_flight.lock();
         // the alive check happens under the in_flight lock: the disconnect
         // drain clears `alive` before taking this lock, so either we see
         // the flag and requeue, or our insert lands before the drain runs
         if !conn.alive.load(Ordering::SeqCst) {
             drop(in_flight);
-            shared.queue.lock().expect("queue poisoned").push_front(trial);
+            shared.queue.lock().push_front(trial);
             shared.cv.notify_all();
             return;
         }
@@ -1924,7 +1924,7 @@ fn send_trial(shared: &Shared, conn: &Arc<Conn>, trial: Trial) {
     let msg = LeaderMsg::Dispatch(trial.clone()).to_json();
     let fc = shared.net.frame_config();
     let written = {
-        let mut w = conn.writer.lock().expect("writer poisoned");
+        let mut w = conn.writer.lock();
         write_frame_with(&mut *w, &msg, &fc)
     };
     match written {
@@ -1938,14 +1938,14 @@ fn send_trial(shared: &Shared, conn: &Arc<Conn>, trial: Trial) {
             // consulted again in case an outcome crossed mid-write
             conn.alive.store(false, Ordering::SeqCst);
             let removed =
-                conn.in_flight.lock().expect("in_flight poisoned").remove(&key);
+                conn.in_flight.lock().remove(&key);
             let already_delivered =
-                shared.delivered.lock().expect("delivered poisoned").contains(&key);
+                shared.delivered.lock().contains(&key);
             if removed.is_some() && !already_delivered && !shared.stop.load(Ordering::SeqCst) {
                 conn.stats.requeued.fetch_add(1, Ordering::Relaxed);
                 shared.faults.requeued.fetch_add(1, Ordering::Relaxed);
                 shared.note_study(trial.study, |s| s.requeued += 1);
-                shared.queue.lock().expect("queue poisoned").push_front(trial);
+                shared.queue.lock().push_front(trial);
                 shared.cv.notify_all();
             }
         }

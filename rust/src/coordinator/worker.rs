@@ -10,7 +10,7 @@
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -19,6 +19,7 @@ use super::transport::RemoteEvalConfig;
 use crate::metrics::{FaultCounters, StudyCounter, TransportCounter};
 use crate::objectives::Objective;
 use crate::util::rng::Pcg64;
+use crate::util::sync::{LockRank, RankedCondvar, RankedMutex};
 use crate::util::timer::Stopwatch;
 
 /// Cooperative shutdown signal shared by a pool and its workers.
@@ -27,9 +28,28 @@ use crate::util::timer::Stopwatch;
 /// of `thread::sleep`, so [`trigger`](ShutdownToken::trigger) wakes them
 /// immediately — teardown latency is bounded by one trial *evaluation*
 /// (microseconds), not by the remaining simulated cost (seconds).
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct ShutdownToken {
-    inner: Arc<(Mutex<bool>, Condvar)>,
+    inner: Arc<SignalState>,
+}
+
+/// Flag + condvar pair behind a [`ShutdownToken`]. `LockRank::Signal` is
+/// the leaf rank: `CancelTable` triggers tokens while holding its live
+/// map, so the token lock must sit above everything else.
+struct SignalState {
+    triggered: RankedMutex<bool>,
+    cv: RankedCondvar,
+}
+
+impl Default for ShutdownToken {
+    fn default() -> Self {
+        Self {
+            inner: Arc::new(SignalState {
+                triggered: RankedMutex::new(LockRank::Signal, "shutdown.triggered", false),
+                cv: RankedCondvar::new(),
+            }),
+        }
+    }
 }
 
 impl ShutdownToken {
@@ -39,29 +59,26 @@ impl ShutdownToken {
 
     /// Signal shutdown and wake every sleeper.
     pub fn trigger(&self) {
-        let (lock, cv) = &*self.inner;
-        *lock.lock().expect("shutdown token poisoned") = true;
-        cv.notify_all();
+        *self.inner.triggered.lock() = true;
+        self.inner.cv.notify_all();
     }
 
     pub fn is_triggered(&self) -> bool {
-        *self.inner.0.lock().expect("shutdown token poisoned")
+        *self.inner.triggered.lock()
     }
 
     /// Sleep up to `dur`, returning early when triggered. Returns `true`
     /// when the full duration elapsed, `false` when interrupted.
     pub fn sleep(&self, dur: Duration) -> bool {
-        let (lock, cv) = &*self.inner;
         let deadline = Instant::now() + dur;
-        let mut triggered = lock.lock().expect("shutdown token poisoned");
+        let mut triggered = self.inner.triggered.lock();
         while !*triggered {
             let now = Instant::now();
             let Some(remaining) = deadline.checked_duration_since(now).filter(|d| !d.is_zero())
             else {
                 return true;
             };
-            let (guard, _timeout) =
-                cv.wait_timeout(triggered, remaining).expect("shutdown token poisoned");
+            let (guard, _timed_out) = self.inner.cv.wait_timeout(triggered, remaining);
             triggered = guard;
         }
         false
@@ -189,11 +206,23 @@ struct FaultTally {
 /// (the trial was submitted but no thread picked it up yet) is parked in
 /// `pending` so the eventual pickup returns [`TrialError::Cancelled`]
 /// without running the objective.
-#[derive(Default)]
 struct CancelTable {
-    live: Mutex<HashMap<(u64, u64), (ShutdownToken, Arc<AtomicBool>)>>,
-    pending: Mutex<HashSet<(u64, u64)>>,
+    live: RankedMutex<HashMap<(u64, u64), (ShutdownToken, Arc<AtomicBool>)>>,
+    pending: RankedMutex<HashSet<(u64, u64)>>,
     shutting_down: AtomicBool,
+}
+
+impl Default for CancelTable {
+    fn default() -> Self {
+        Self {
+            live: RankedMutex::new(LockRank::LinkState, "cancels.live", HashMap::new()),
+            // `CancelPending` ranks above `LinkState`: the cancel path
+            // falls through to `pending` while the `live` guard (an
+            // if-let scrutinee temporary) is still held.
+            pending: RankedMutex::new(LockRank::CancelPending, "cancels.pending", HashSet::new()),
+            shutting_down: AtomicBool::new(false),
+        }
+    }
 }
 
 impl CancelTable {
@@ -204,7 +233,6 @@ impl CancelTable {
         let flag = Arc::new(AtomicBool::new(false));
         self.live
             .lock()
-            .expect("cancel table poisoned")
             .insert(key, (token.clone(), Arc::clone(&flag)));
         // check *after* insert so a concurrent shutdown either sees the
         // entry (and triggers it) or set the flag first (and we see it)
@@ -215,23 +243,23 @@ impl CancelTable {
     }
 
     fn end(&self, key: (u64, u64)) {
-        self.live.lock().expect("cancel table poisoned").remove(&key);
+        self.live.lock().remove(&key);
     }
 
     /// True when the trial was in the queue with a cancel parked on it.
     fn take_pending(&self, key: (u64, u64)) -> bool {
-        self.pending.lock().expect("cancel table poisoned").remove(&key)
+        self.pending.lock().remove(&key)
     }
 
     /// Cancel one trial: wake its evaluation if running, otherwise park the
     /// cancel for its pickup. Returns `true` if the trial was mid-eval.
     fn cancel(&self, key: (u64, u64)) -> bool {
-        if let Some((token, flag)) = self.live.lock().expect("cancel table poisoned").get(&key) {
+        if let Some((token, flag)) = self.live.lock().get(&key) {
             flag.store(true, Ordering::SeqCst);
             token.trigger();
             true
         } else {
-            self.pending.lock().expect("cancel table poisoned").insert(key);
+            self.pending.lock().insert(key);
             false
         }
     }
@@ -241,7 +269,7 @@ impl CancelTable {
     /// returning the computed result with its sleep cut short).
     fn shutdown_all(&self) {
         self.shutting_down.store(true, Ordering::SeqCst);
-        for (token, _) in self.live.lock().expect("cancel table poisoned").values() {
+        for (token, _) in self.live.lock().values() {
             token.trigger();
         }
     }
@@ -259,7 +287,7 @@ struct StudyTally {
 /// thread so routing happens at evaluation time.
 struct StudyTable {
     base: StudyEval,
-    table: Mutex<BTreeMap<u64, StudyEval>>,
+    table: RankedMutex<BTreeMap<u64, StudyEval>>,
 }
 
 impl StudyTable {
@@ -269,7 +297,6 @@ impl StudyTable {
     fn resolve(&self, study: StudyId) -> StudyEval {
         self.table
             .lock()
-            .expect("study table poisoned")
             .get(&study.0)
             .cloned()
             .unwrap_or_else(|| self.base.clone())
@@ -287,10 +314,10 @@ pub struct WorkerPool {
     links: Vec<LinkCounters>,
     studies: Arc<StudyTable>,
     /// per-registered-study dispatch/completion totals
-    study_tallies: Mutex<BTreeMap<u64, StudyTally>>,
+    study_tallies: RankedMutex<BTreeMap<u64, StudyTally>>,
     /// real submit time per in-flight `(study, trial id)`, for round-trip
     /// latency (studies may reuse bare ids)
-    submit_times: Mutex<HashMap<(u64, u64), Instant>>,
+    submit_times: RankedMutex<HashMap<(u64, u64), Instant>>,
     /// per-trial cancellation registry (leader reaper / chaos harness)
     cancels: Arc<CancelTable>,
     /// evaluation-fault counters (timeouts / cancels / quarantines)
@@ -303,7 +330,7 @@ impl WorkerPool {
     pub fn spawn(objective: Arc<dyn Objective>, config: WorkerConfig) -> Self {
         assert!(config.workers > 0);
         let (tx, rx) = sync_channel::<Trial>(config.queue_cap);
-        let rx = Arc::new(Mutex::new(rx));
+        let rx = Arc::new(RankedMutex::new(LockRank::TrialQueue, "pool.rx", rx));
         let (res_tx, res_rx) = std::sync::mpsc::channel::<TrialOutcome>();
         let shutdown = ShutdownToken::new();
         let studies = Arc::new(StudyTable {
@@ -313,7 +340,7 @@ impl WorkerPool {
                 fail_prob: config.fail_prob,
                 policy: config.policy,
             },
-            table: Mutex::new(BTreeMap::new()),
+            table: RankedMutex::new(LockRank::StudyRegistry, "worker.study_table", BTreeMap::new()),
         });
         let cancels = Arc::new(CancelTable::default());
         let faults = Arc::new(FaultTally::default());
@@ -347,8 +374,16 @@ impl WorkerPool {
             shutdown,
             links,
             studies,
-            study_tallies: Mutex::new(BTreeMap::new()),
-            submit_times: Mutex::new(HashMap::new()),
+            study_tallies: RankedMutex::new(
+                LockRank::StudyState,
+                "pool.study_tallies",
+                BTreeMap::new(),
+            ),
+            submit_times: RankedMutex::new(
+                LockRank::StudyState,
+                "pool.submit_times",
+                HashMap::new(),
+            ),
             cancels,
             faults,
         }
@@ -365,7 +400,7 @@ impl WorkerPool {
                 eval.objective
             ))
         })?;
-        self.studies.table.lock().expect("study table poisoned").insert(
+        self.studies.table.lock().insert(
             study.0,
             StudyEval {
                 objective: Arc::from(obj),
@@ -377,7 +412,6 @@ impl WorkerPool {
         // a tally row marks the study as tracked from now on
         self.study_tallies
             .lock()
-            .expect("study tallies poisoned")
             .entry(study.0)
             .or_default();
         Ok(())
@@ -389,7 +423,6 @@ impl WorkerPool {
     pub fn study_counters(&self) -> Vec<StudyCounter> {
         self.study_tallies
             .lock()
-            .expect("study tallies poisoned")
             .iter()
             .map(|(&study, t)| StudyCounter {
                 study,
@@ -407,13 +440,12 @@ impl WorkerPool {
     pub fn submit(&self, trial: Trial) {
         self.dispatched.fetch_add(1, Ordering::Relaxed);
         if let Some(t) =
-            self.study_tallies.lock().expect("study tallies poisoned").get_mut(&trial.study.0)
+            self.study_tallies.lock().get_mut(&trial.study.0)
         {
             t.dispatched += 1;
         }
         self.submit_times
             .lock()
-            .expect("submit_times poisoned")
             .insert((trial.study.0, trial.id), Instant::now());
         self.tx
             .as_ref()
@@ -441,10 +473,9 @@ impl WorkerPool {
         let started = self
             .submit_times
             .lock()
-            .expect("submit_times poisoned")
             .remove(&(o.trial.study.0, o.trial.id));
         if let Some(t) =
-            self.study_tallies.lock().expect("study tallies poisoned").get_mut(&o.trial.study.0)
+            self.study_tallies.lock().get_mut(&o.trial.study.0)
         {
             t.completed += 1;
         }
@@ -562,7 +593,7 @@ impl Drop for WorkerPool {
 fn worker_loop(
     wid: usize,
     studies: Arc<StudyTable>,
-    rx: Arc<Mutex<Receiver<Trial>>>,
+    rx: Arc<RankedMutex<Receiver<Trial>>>,
     res_tx: Sender<TrialOutcome>,
     cfg: WorkerConfig,
     token: ShutdownToken,
@@ -585,7 +616,7 @@ fn worker_loop(
             probing = true;
         }
         // hold the lock only while receiving so evaluation runs in parallel
-        let trial = match rx.lock().expect("queue poisoned").recv() {
+        let trial = match rx.lock().recv() {
             Ok(t) => t,
             Err(_) => return, // leader closed the queue: everything drained
         };

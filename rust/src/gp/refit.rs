@@ -39,7 +39,7 @@
 //! starts and full-grid fallbacks.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use crate::util::sync::{LockRank, RankedMutex};
 
 use super::hyperfit::{log_grid, with_axis, Axis, FitSpace};
 use crate::kernels::cov::sq_dist_matrix_with;
@@ -211,7 +211,7 @@ pub struct RefitEngine {
     /// centered targets of the current refit (computed once)
     centered: Vec<f64>,
     /// per-worker scratch arenas, checked out per candidate
-    arena: Mutex<Vec<EvalScratch>>,
+    arena: RankedMutex<Vec<EvalScratch>>,
     /// `(ls, σ²) → LML` memo of the current refit
     memo: HashMap<(u64, u64), f64>,
 }
@@ -227,7 +227,7 @@ impl RefitEngine {
             stats: RefitEngineStats::default(),
             dist: Matrix::zeros(0, 0),
             centered: Vec::new(),
-            arena: Mutex::new(Vec::new()),
+            arena: RankedMutex::new(LockRank::ScratchArena, "refit.arena", Vec::new()),
             memo: HashMap::new(),
         }
     }
@@ -355,7 +355,7 @@ impl RefitEngine {
         // every surrogate would dwarf the factor itself. The per-*candidate*
         // reuse within a refit — the actual hot path — is untouched.
         self.dist = Matrix::zeros(0, 0);
-        self.arena.lock().unwrap().clear();
+        self.arena.lock().clear();
         self.memo.clear();
         best
     }
@@ -390,10 +390,10 @@ impl RefitEngine {
                 let (ls, var) = fresh_ref[idx];
                 let cand =
                     Kernel::new(kind, KernelParams { length_scale: ls, variance: var, noise });
-                let mut scratch = arena.lock().unwrap().pop().unwrap_or_default();
+                let mut scratch = arena.lock().pop().unwrap_or_default();
                 // candidate-level parallelism: each eval stays serial inside
                 slot[0] = eval_lml_cached(&cand, dist, centered, &mut scratch, 1);
-                arena.lock().unwrap().push(scratch);
+                arena.lock().push(scratch);
             });
         }
         for (&(ls, var), &v) in fresh.iter().zip(&results) {
@@ -413,9 +413,9 @@ impl RefitEngine {
         }
         let n = self.dist.rows();
         let threads = self.par.workers_for((n * n * n) / 3);
-        let mut scratch = self.arena.lock().unwrap().pop().unwrap_or_default();
+        let mut scratch = self.arena.lock().pop().unwrap_or_default();
         let v = eval_lml_cached(&kernel, &self.dist, &self.centered, &mut scratch, threads);
-        self.arena.lock().unwrap().push(scratch);
+        self.arena.lock().push(scratch);
         self.memo.insert(key, v);
         self.stats.candidates_evaluated += 1;
         v

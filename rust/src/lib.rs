@@ -57,6 +57,12 @@
 //! assert!(best.value > -1.5); // maximizing -branin; optimum is ~-0.398
 //! ```
 
+// The crate is 100% safe Rust (audited 2026-08: the only `unsafe` matches
+// in-tree were test names about rejecting unsafe *magnitudes* in the JSON
+// integer accessors). Enforced both here and via `[lints.rust]` in
+// Cargo.toml so every target — tests, benches, examples — is covered.
+#![forbid(unsafe_code)]
+
 pub mod acquisition;
 pub mod bo;
 pub mod config;

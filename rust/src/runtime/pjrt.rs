@@ -13,7 +13,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 #[cfg(feature = "xla")]
-use std::sync::Mutex;
+use crate::util::sync::{LockRank, RankedMutex};
 
 use super::artifacts::{ArtifactManifest, Bucket};
 
@@ -27,7 +27,7 @@ pub struct PjrtRuntime {
     client: xla::PjRtClient,
     manifest: ArtifactManifest,
     #[cfg(feature = "xla")]
-    cache: Mutex<HashMap<(usize, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    cache: RankedMutex<HashMap<(usize, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl PjrtRuntime {
@@ -47,7 +47,8 @@ impl PjrtRuntime {
     fn from_manifest(manifest: ArtifactManifest) -> crate::Result<Self> {
         let client =
             xla::PjRtClient::cpu().map_err(|e| crate::err!("PJRT CPU client: {e:?}"))?;
-        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+        let cache = RankedMutex::new(LockRank::Metrics, "pjrt.cache", HashMap::new());
+        Ok(Self { client, manifest, cache })
     }
 
     #[cfg(not(feature = "xla"))]
@@ -92,7 +93,7 @@ impl PjrtRuntime {
         bucket: &Bucket,
     ) -> crate::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         let key = (bucket.n, bucket.d);
-        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+        if let Some(exe) = self.cache.lock().get(&key) {
             return Ok(std::sync::Arc::clone(exe));
         }
         let path = self.manifest.path_of(bucket);
@@ -106,7 +107,7 @@ impl PjrtRuntime {
             .compile(&comp)
             .map_err(|e| crate::err!("compile {}: {e:?}", path.display()))?;
         let exe = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(key, std::sync::Arc::clone(&exe));
+        self.cache.lock().insert(key, std::sync::Arc::clone(&exe));
         Ok(exe)
     }
 

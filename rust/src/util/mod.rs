@@ -14,6 +14,9 @@
 //! * [`proptest`] — a miniature property-based testing framework with
 //!   deterministic replay and input shrinking (no `proptest` crate).
 //! * [`timer`] — scoped wall-clock timers feeding the metrics layer.
+//! * [`sync`] — ranked lock primitives ([`sync::RankedMutex`] et al.)
+//!   enforcing the crate-wide lock order in debug builds (no `parking_lot`,
+//!   no deadlock detector crate).
 
 pub mod bench;
 pub mod cli;
@@ -21,4 +24,5 @@ pub mod parallel;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod timer;

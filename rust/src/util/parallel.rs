@@ -18,7 +18,7 @@
 //! **bitwise identical** for every thread count and tile width. The
 //! property suite (`rust/tests/property_suite.rs`) pins this down.
 
-use std::sync::Mutex;
+use super::sync::{LockRank, RankedMutex};
 
 /// How many worker threads the tiled hot paths may use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -90,12 +90,12 @@ where
         return;
     }
     let workers = threads.min(jobs.len());
-    let queue = Mutex::new(jobs.into_iter());
+    let queue = RankedMutex::new(LockRank::PoolQueue, "parallel.jobs", jobs.into_iter());
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
                 // hold the lock only for the pop, not the work
-                let job = queue.lock().unwrap().next();
+                let job = queue.lock().next();
                 match job {
                     Some(job) => f(job),
                     None => break,

@@ -1,0 +1,758 @@
+//! Ranked lock primitives: the crate-wide deadlock-freedom guardrail.
+//!
+//! Every lock in the concurrent layers (`coordinator::*`, the `gp::refit`
+//! scratch arena, the `util::parallel` job queue, the `runtime::pjrt`
+//! executable cache) is a [`RankedMutex`] or [`RankedRwLock`] keyed by a
+//! [`LockRank`]. The ranks form a total order, and the rule is simple:
+//!
+//! > **A thread may only acquire a lock whose rank is strictly greater
+//! > than every rank it already holds.**
+//!
+//! Because every thread acquires in strictly increasing rank order, no
+//! cycle of waiting threads can exist, so the system cannot deadlock on
+//! these locks. See `docs/ARCHITECTURE.md` § "Lock order & enforced
+//! invariants" for the full table and the rationale behind each edge.
+//!
+//! # Enforcement
+//!
+//! Under `cfg(debug_assertions)` — or in any build with the `lock-order`
+//! feature — each thread tracks its held ranks in thread-local storage.
+//! An acquisition that violates the order (including re-acquiring the
+//! *same* rank: the order is strict) panics immediately with a diagnostic
+//! naming the offending rank and the full held-rank stack. The check runs
+//! *before* blocking on the OS mutex, so a would-be deadlock surfaces as
+//! a deterministic panic instead of a hang.
+//!
+//! In release builds without the feature, the wrappers are transparent
+//! newtypes around `std::sync` primitives: no rank field, no TLS, no
+//! branch — zero overhead.
+//!
+//! # Poison policy
+//!
+//! This module is the single place in the crate where lock poisoning is
+//! handled. `lock()`/`read()`/`write()` return the guard directly rather
+//! than a `Result`: if the lock was poisoned (a thread panicked while
+//! holding it), the guard is recovered via `PoisonError::into_inner` and
+//! a global counter ([`poison_recoveries`]) is bumped so tests and
+//! operators can observe that a recovery happened. The protected state in
+//! this crate is always either (a) re-derivable bookkeeping (queues,
+//! in-flight maps, tallies) whose invariants hold between statements, or
+//! (b) scratch memory that is re-validated on checkout — so recovering
+//! the guard is safe and strictly better than cascading the panic into
+//! every other thread. This replaces the ~200 `lock().expect("…
+//! poisoned")` sites that predated this module; `tools/repo-lint` bans
+//! reintroducing them.
+
+#[cfg(any(debug_assertions, feature = "lock-order"))]
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, RwLock};
+use std::time::Duration;
+
+/// Global lock order. A thread may only acquire a lock of strictly
+/// greater rank than every lock it already holds; `Signal` is the leaf.
+///
+/// The numeric order encodes every nesting the codebase actually
+/// performs (see `docs/ARCHITECTURE.md` for the per-edge rationale):
+/// the `StudyService` core acquires `Fleet` → `Scheduler` and then calls
+/// into the transport, so every transport-internal rank sits above
+/// `Scheduler`; inside `SocketPool`, registration holds `StudyRegistry`
+/// while publishing connections (`ConnList`) and writing frames
+/// (`LinkState`); the dispatcher holds `TrialQueue` while picking a
+/// target (`ConnList` → `LinkState`); and `CancelTable` triggers
+/// shutdown tokens (`Signal`) while holding its live map (`LinkState`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum LockRank {
+    /// `ServiceCore.fleet` — the shared transport slot.
+    Fleet = 0,
+    /// `ServiceCore.sched` — the fair-share stride scheduler.
+    Scheduler = 1,
+    /// `StudyService.runners` — per-study driver join handles.
+    Runners = 2,
+    /// Reserved for journal I/O. Today each `Journal` is owned by a
+    /// single driver thread (no lock), but any future shared-journal
+    /// work must slot in here: below the transport, above the service.
+    Journal = 3,
+    /// Study-config registries: `SocketPool.studies`, the in-process
+    /// `StudyTable.table`.
+    StudyRegistry = 4,
+    /// `SocketPool.delivered` — the exactly-once delivery gate.
+    DeliveryGate = 5,
+    /// Pending-trial queues: `SocketPool.queue`, the in-process
+    /// `WorkerPool` receiver.
+    TrialQueue = 6,
+    /// `SocketPool.conns` — the live connection list.
+    ConnList = 7,
+    /// Per-link mutable state: `Conn.{writer, in_flight,
+    /// quarantined_until}`, `CancelTable.live`. At most one lock of
+    /// this rank may be held at a time (the order is strict).
+    LinkState = 8,
+    /// `CancelTable.pending` — taken in the shadow of `LinkState`
+    /// (the cancel path falls through to it while `live` is held).
+    CancelPending = 9,
+    /// Per-study counters: `SocketPool.study_stats`,
+    /// `WorkerPool.{study_tallies, submit_times}`.
+    StudyState = 10,
+    /// `SocketPool.reader_handles` — reader-thread join handles.
+    ReaderHandles = 11,
+    /// The `util::parallel` work-stealing job queue.
+    PoolQueue = 12,
+    /// The `gp::refit` evaluation-scratch arena.
+    ScratchArena = 13,
+    /// Runtime/metrics caches: the `runtime::pjrt` executable cache.
+    Metrics = 14,
+    /// `ShutdownToken` flag+condvar pairs — always the leaf.
+    Signal = 15,
+}
+
+/// How many times a poisoned lock has been recovered (process-wide).
+///
+/// Nonzero means some thread panicked while holding a ranked lock and a
+/// later acquirer recovered the guard per the module poison policy.
+pub fn poison_recoveries() -> u64 {
+    POISON_RECOVERIES.load(Ordering::Relaxed)
+}
+
+static POISON_RECOVERIES: AtomicU64 = AtomicU64::new(0);
+
+/// Recover a possibly-poisoned guard, counting recoveries. The single
+/// documented poison-recovery site in the crate (see module docs).
+fn recovered<G>(result: Result<G, PoisonError<G>>) -> G {
+    match result {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+            poisoned.into_inner()
+        }
+    }
+}
+
+#[cfg(any(debug_assertions, feature = "lock-order"))]
+thread_local! {
+    /// Ranks this thread currently holds, in acquisition order. The
+    /// acquire-time check keeps it strictly ascending, so validating a
+    /// new acquisition only needs to look at the last entry.
+    static HELD: RefCell<Vec<(LockRank, &'static str)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Record an acquisition, panicking if it violates the strict order.
+/// Called *before* blocking so an inversion is a deterministic panic,
+/// never a hang. No-op outside checked builds (callers are cfg-gated).
+#[cfg(any(debug_assertions, feature = "lock-order"))]
+fn note_acquire(rank: LockRank, name: &'static str) {
+    HELD.with(|held| {
+        let mut held = held.borrow_mut();
+        if let Some(&(top, top_name)) = held.last() {
+            if top >= rank {
+                let stack: Vec<String> =
+                    held.iter().map(|&(r, n)| format!("{r:?}(`{n}`)")).collect();
+                drop(held);
+                panic!(
+                    "lock-order violation: acquiring {rank:?} (`{name}`) while already \
+                     holding {top:?} (`{top_name}`); ranks must strictly increase. \
+                     held stack: [{}]. See docs/ARCHITECTURE.md \
+                     \"Lock order & enforced invariants\".",
+                    stack.join(" < ")
+                );
+            }
+        }
+        held.push((rank, name));
+    });
+}
+
+/// Forget a held rank. Tolerates out-of-order guard drops (removes the
+/// innermost matching entry) and TLS teardown (`try_with`).
+#[cfg(any(debug_assertions, feature = "lock-order"))]
+fn note_release(rank: LockRank, name: &'static str) {
+    let _ = HELD.try_with(|held| {
+        let mut held = held.borrow_mut();
+        if let Some(pos) = held.iter().rposition(|&(r, n)| r == rank && n == name) {
+            held.remove(pos);
+        } else if let Some(pos) = held.iter().rposition(|&(r, _)| r == rank) {
+            held.remove(pos);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Checked implementation: debug builds, or any build with `--features
+// lock-order`. Guards carry their rank and maintain the TLS held-stack.
+// ---------------------------------------------------------------------------
+#[cfg(any(debug_assertions, feature = "lock-order"))]
+mod imp {
+    use super::*;
+    use std::ops::{Deref, DerefMut};
+
+    /// A mutex that participates in the global lock order (module docs).
+    pub struct RankedMutex<T> {
+        rank: LockRank,
+        name: &'static str,
+        inner: Mutex<T>,
+    }
+
+    impl<T> RankedMutex<T> {
+        /// Wrap `value` in a mutex at `rank`. `name` appears in
+        /// lock-order panic diagnostics; use a stable `owner.field`
+        /// spelling.
+        pub const fn new(rank: LockRank, name: &'static str, value: T) -> Self {
+            Self { rank, name, inner: Mutex::new(value) }
+        }
+
+        /// Acquire, blocking. Panics (checked builds) on a lock-order
+        /// violation; recovers poison per the module policy.
+        pub fn lock(&self) -> RankedMutexGuard<'_, T> {
+            note_acquire(self.rank, self.name);
+            RankedMutexGuard {
+                inner: Some(recovered(self.inner.lock())),
+                rank: self.rank,
+                name: self.name,
+            }
+        }
+
+        /// Acquire without blocking; `None` if the lock is contended.
+        /// The rank check still applies — an out-of-order `try_lock`
+        /// is a latent inversion and panics in checked builds.
+        pub fn try_lock(&self) -> Option<RankedMutexGuard<'_, T>> {
+            note_acquire(self.rank, self.name);
+            match self.inner.try_lock() {
+                Ok(guard) => {
+                    Some(RankedMutexGuard { inner: Some(guard), rank: self.rank, name: self.name })
+                }
+                Err(std::sync::TryLockError::Poisoned(poisoned)) => {
+                    POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+                    Some(RankedMutexGuard {
+                        inner: Some(poisoned.into_inner()),
+                        rank: self.rank,
+                        name: self.name,
+                    })
+                }
+                Err(std::sync::TryLockError::WouldBlock) => {
+                    note_release(self.rank, self.name);
+                    None
+                }
+            }
+        }
+    }
+
+    /// Guard for [`RankedMutex`]; releases the TLS rank entry on drop.
+    ///
+    /// The inner guard is `Option` only so [`RankedCondvar`] can move it
+    /// out across a wait without releasing the TLS entry (the rank is
+    /// logically held for the whole wait); it is `Some` everywhere else.
+    pub struct RankedMutexGuard<'a, T> {
+        inner: Option<MutexGuard<'a, T>>,
+        rank: LockRank,
+        name: &'static str,
+    }
+
+    impl<T> Deref for RankedMutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("guard moved into condvar wait")
+        }
+    }
+
+    impl<T> DerefMut for RankedMutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("guard moved into condvar wait")
+        }
+    }
+
+    impl<T> Drop for RankedMutexGuard<'_, T> {
+        fn drop(&mut self) {
+            if self.inner.is_some() {
+                note_release(self.rank, self.name);
+            }
+        }
+    }
+
+    /// Condvar paired with a [`RankedMutex`]. The waiting thread keeps
+    /// its TLS rank entry for the duration of the wait — the mutex is
+    /// reacquired before `wait_timeout` returns, and from the order's
+    /// point of view the thread held the rank throughout.
+    pub struct RankedCondvar {
+        inner: Condvar,
+    }
+
+    impl RankedCondvar {
+        /// New condvar; pair it with exactly one [`RankedMutex`].
+        pub const fn new() -> Self {
+            Self { inner: Condvar::new() }
+        }
+
+        /// Wake one waiter.
+        pub fn notify_one(&self) {
+            self.inner.notify_one();
+        }
+
+        /// Wake all waiters.
+        pub fn notify_all(&self) {
+            self.inner.notify_all();
+        }
+
+        /// Atomically release `guard`, wait up to `dur`, reacquire.
+        /// Returns the reacquired guard and whether the wait timed out.
+        pub fn wait_timeout<'a, T>(
+            &self,
+            mut guard: RankedMutexGuard<'a, T>,
+            dur: Duration,
+        ) -> (RankedMutexGuard<'a, T>, bool) {
+            let (rank, name) = (guard.rank, guard.name);
+            let inner = guard.inner.take().expect("guard moved into condvar wait");
+            drop(guard); // inner is None: the TLS entry stays held
+            let (inner, timed_out) = match self.inner.wait_timeout(inner, dur) {
+                Ok((g, res)) => (g, res.timed_out()),
+                Err(poisoned) => {
+                    POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+                    let (g, res) = poisoned.into_inner();
+                    (g, res.timed_out())
+                }
+            };
+            (RankedMutexGuard { inner: Some(inner), rank, name }, timed_out)
+        }
+    }
+
+    impl Default for RankedCondvar {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    /// Reader–writer lock in the global order. Both `read()` and
+    /// `write()` count as holding the rank: a thread holds at most one
+    /// lock per rank, so same-thread read reentrancy also panics.
+    pub struct RankedRwLock<T> {
+        rank: LockRank,
+        name: &'static str,
+        inner: RwLock<T>,
+    }
+
+    impl<T> RankedRwLock<T> {
+        /// Wrap `value` at `rank`; `name` appears in diagnostics.
+        pub const fn new(rank: LockRank, name: &'static str, value: T) -> Self {
+            Self { rank, name, inner: RwLock::new(value) }
+        }
+
+        /// Acquire shared. Rank-checked like [`RankedMutex::lock`].
+        pub fn read(&self) -> RankedReadGuard<'_, T> {
+            note_acquire(self.rank, self.name);
+            RankedReadGuard {
+                inner: recovered(self.inner.read()),
+                rank: self.rank,
+                name: self.name,
+            }
+        }
+
+        /// Acquire exclusive. Rank-checked like [`RankedMutex::lock`].
+        pub fn write(&self) -> RankedWriteGuard<'_, T> {
+            note_acquire(self.rank, self.name);
+            RankedWriteGuard {
+                inner: recovered(self.inner.write()),
+                rank: self.rank,
+                name: self.name,
+            }
+        }
+    }
+
+    /// Shared guard for [`RankedRwLock`].
+    pub struct RankedReadGuard<'a, T> {
+        inner: std::sync::RwLockReadGuard<'a, T>,
+        rank: LockRank,
+        name: &'static str,
+    }
+
+    impl<T> Deref for RankedReadGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            &self.inner
+        }
+    }
+
+    impl<T> Drop for RankedReadGuard<'_, T> {
+        fn drop(&mut self) {
+            note_release(self.rank, self.name);
+        }
+    }
+
+    /// Exclusive guard for [`RankedRwLock`].
+    pub struct RankedWriteGuard<'a, T> {
+        inner: std::sync::RwLockWriteGuard<'a, T>,
+        rank: LockRank,
+        name: &'static str,
+    }
+
+    impl<T> Deref for RankedWriteGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            &self.inner
+        }
+    }
+
+    impl<T> DerefMut for RankedWriteGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            &mut self.inner
+        }
+    }
+
+    impl<T> Drop for RankedWriteGuard<'_, T> {
+        fn drop(&mut self) {
+            note_release(self.rank, self.name);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Passthrough implementation: release builds without `lock-order`. Plain
+// newtypes over std::sync — no rank field, no TLS, no Drop impls. The
+// acceptance bar is `size_of::<RankedMutex<T>>() == size_of::<Mutex<T>>()`
+// (asserted in the release-mode tests of rust/tests/lock_order.rs).
+// ---------------------------------------------------------------------------
+#[cfg(not(any(debug_assertions, feature = "lock-order")))]
+mod imp {
+    use super::*;
+    use std::ops::{Deref, DerefMut};
+
+    /// A mutex that participates in the global lock order (module docs).
+    /// Release passthrough: a transparent wrapper over `std::sync::Mutex`.
+    pub struct RankedMutex<T> {
+        inner: Mutex<T>,
+    }
+
+    impl<T> RankedMutex<T> {
+        /// Wrap `value`; `rank` and `name` are compile-time metadata
+        /// only used by checked builds.
+        pub const fn new(_rank: LockRank, _name: &'static str, value: T) -> Self {
+            Self { inner: Mutex::new(value) }
+        }
+
+        /// Acquire, blocking. Recovers poison per the module policy.
+        #[inline]
+        pub fn lock(&self) -> RankedMutexGuard<'_, T> {
+            RankedMutexGuard(recovered(self.inner.lock()))
+        }
+
+        /// Acquire without blocking; `None` if contended.
+        #[inline]
+        pub fn try_lock(&self) -> Option<RankedMutexGuard<'_, T>> {
+            match self.inner.try_lock() {
+                Ok(guard) => Some(RankedMutexGuard(guard)),
+                Err(std::sync::TryLockError::Poisoned(poisoned)) => {
+                    POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+                    Some(RankedMutexGuard(poisoned.into_inner()))
+                }
+                Err(std::sync::TryLockError::WouldBlock) => None,
+            }
+        }
+    }
+
+    /// Guard for [`RankedMutex`] (release passthrough).
+    pub struct RankedMutexGuard<'a, T>(MutexGuard<'a, T>);
+
+    impl<T> Deref for RankedMutexGuard<'_, T> {
+        type Target = T;
+        #[inline]
+        fn deref(&self) -> &T {
+            &self.0
+        }
+    }
+
+    impl<T> DerefMut for RankedMutexGuard<'_, T> {
+        #[inline]
+        fn deref_mut(&mut self) -> &mut T {
+            &mut self.0
+        }
+    }
+
+    /// Condvar paired with a [`RankedMutex`] (release passthrough).
+    pub struct RankedCondvar {
+        inner: Condvar,
+    }
+
+    impl RankedCondvar {
+        /// New condvar; pair it with exactly one [`RankedMutex`].
+        pub const fn new() -> Self {
+            Self { inner: Condvar::new() }
+        }
+
+        /// Wake one waiter.
+        #[inline]
+        pub fn notify_one(&self) {
+            self.inner.notify_one();
+        }
+
+        /// Wake all waiters.
+        #[inline]
+        pub fn notify_all(&self) {
+            self.inner.notify_all();
+        }
+
+        /// Atomically release `guard`, wait up to `dur`, reacquire.
+        /// Returns the reacquired guard and whether the wait timed out.
+        #[inline]
+        pub fn wait_timeout<'a, T>(
+            &self,
+            guard: RankedMutexGuard<'a, T>,
+            dur: Duration,
+        ) -> (RankedMutexGuard<'a, T>, bool) {
+            match self.inner.wait_timeout(guard.0, dur) {
+                Ok((g, res)) => (RankedMutexGuard(g), res.timed_out()),
+                Err(poisoned) => {
+                    POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+                    let (g, res) = poisoned.into_inner();
+                    (RankedMutexGuard(g), res.timed_out())
+                }
+            }
+        }
+    }
+
+    impl Default for RankedCondvar {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    /// Reader–writer lock in the global order (release passthrough).
+    pub struct RankedRwLock<T> {
+        inner: RwLock<T>,
+    }
+
+    impl<T> RankedRwLock<T> {
+        /// Wrap `value`; `rank` and `name` are checked-build metadata.
+        pub const fn new(_rank: LockRank, _name: &'static str, value: T) -> Self {
+            Self { inner: RwLock::new(value) }
+        }
+
+        /// Acquire shared.
+        #[inline]
+        pub fn read(&self) -> RankedReadGuard<'_, T> {
+            RankedReadGuard(recovered(self.inner.read()))
+        }
+
+        /// Acquire exclusive.
+        #[inline]
+        pub fn write(&self) -> RankedWriteGuard<'_, T> {
+            RankedWriteGuard(recovered(self.inner.write()))
+        }
+    }
+
+    /// Shared guard for [`RankedRwLock`] (release passthrough).
+    pub struct RankedReadGuard<'a, T>(std::sync::RwLockReadGuard<'a, T>);
+
+    impl<T> Deref for RankedReadGuard<'_, T> {
+        type Target = T;
+        #[inline]
+        fn deref(&self) -> &T {
+            &self.0
+        }
+    }
+
+    /// Exclusive guard for [`RankedRwLock`] (release passthrough).
+    pub struct RankedWriteGuard<'a, T>(std::sync::RwLockWriteGuard<'a, T>);
+
+    impl<T> Deref for RankedWriteGuard<'_, T> {
+        type Target = T;
+        #[inline]
+        fn deref(&self) -> &T {
+            &self.0
+        }
+    }
+
+    impl<T> DerefMut for RankedWriteGuard<'_, T> {
+        #[inline]
+        fn deref_mut(&mut self) -> &mut T {
+            &mut self.0
+        }
+    }
+}
+
+pub use imp::{
+    RankedCondvar, RankedMutex, RankedMutexGuard, RankedReadGuard, RankedRwLock, RankedWriteGuard,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(any(debug_assertions, feature = "lock-order"))]
+    mod checked {
+        use super::super::*;
+        use std::sync::Arc;
+
+        fn panic_message(err: Box<dyn std::any::Any + Send>) -> String {
+            if let Some(s) = err.downcast_ref::<String>() {
+                s.clone()
+            } else if let Some(s) = err.downcast_ref::<&'static str>() {
+                (*s).to_string()
+            } else {
+                String::from("<non-string panic payload>")
+            }
+        }
+
+        #[test]
+        fn ascending_acquisition_is_allowed() {
+            let low = RankedMutex::new(LockRank::Fleet, "t.fleet", 1u32);
+            let high = RankedMutex::new(LockRank::Signal, "t.signal", 2u32);
+            let a = low.lock();
+            let b = high.lock();
+            assert_eq!(*a + *b, 3);
+            drop(b);
+            drop(a);
+            // TLS fully released: both reacquire cleanly in any order.
+            drop(high.lock());
+            drop(low.lock());
+        }
+
+        #[test]
+        fn inverted_acquisition_panics_naming_both_ranks() {
+            let err = std::thread::spawn(|| {
+                let arena = RankedMutex::new(LockRank::ScratchArena, "t.arena", ());
+                let queue = RankedMutex::new(LockRank::TrialQueue, "t.queue", ());
+                let _held = arena.lock();
+                let _bad = queue.lock(); // TrialQueue < ScratchArena: inversion
+            })
+            .join()
+            .expect_err("inverted acquisition must panic");
+            let msg = panic_message(err);
+            assert!(msg.contains("lock-order violation"), "got: {msg}");
+            assert!(msg.contains("TrialQueue"), "offending rank named: {msg}");
+            assert!(msg.contains("ScratchArena"), "held rank named: {msg}");
+            assert!(msg.contains("t.arena"), "held lock name in stack: {msg}");
+        }
+
+        #[test]
+        fn same_rank_reacquisition_panics() {
+            let err = std::thread::spawn(|| {
+                let a = RankedMutex::new(LockRank::LinkState, "t.link_a", ());
+                let b = RankedMutex::new(LockRank::LinkState, "t.link_b", ());
+                let _held = a.lock();
+                let _bad = b.lock(); // same rank: strict order forbids it
+            })
+            .join()
+            .expect_err("same-rank reacquisition must panic");
+            let msg = panic_message(err);
+            assert!(msg.contains("lock-order violation"), "got: {msg}");
+            assert!(msg.contains("LinkState"), "got: {msg}");
+        }
+
+        #[test]
+        fn out_of_order_guard_drop_keeps_tls_consistent() {
+            let low = RankedMutex::new(LockRank::Fleet, "t.fleet", ());
+            let mid = RankedMutex::new(LockRank::TrialQueue, "t.queue", ());
+            let a = low.lock();
+            let b = mid.lock();
+            drop(a); // drop the *outer* rank first
+            // The innermost held rank is now TrialQueue; acquiring above
+            // it must still work…
+            let c = RankedMutex::new(LockRank::Signal, "t.signal", ()).lock();
+            drop(c);
+            drop(b);
+        }
+
+        #[test]
+        fn try_lock_contended_returns_none_and_releases_tls() {
+            let m = Arc::new(RankedMutex::new(LockRank::Metrics, "t.metrics", ()));
+            let held = m.lock();
+            let m2 = Arc::clone(&m);
+            std::thread::spawn(move || {
+                assert!(m2.try_lock().is_none());
+                // the failed try must not leave a phantom TLS entry:
+                let lower = RankedMutex::new(LockRank::Fleet, "t.fleet", ());
+                drop(lower.lock());
+            })
+            .join()
+            .expect("contended try_lock must not panic");
+            drop(held);
+            assert!(m.try_lock().is_some());
+        }
+
+        #[test]
+        fn condvar_wait_keeps_rank_held_and_guard_usable() {
+            let m = Arc::new(RankedMutex::new(LockRank::TrialQueue, "t.queue", 0u32));
+            let cv = Arc::new(RankedCondvar::new());
+            let (m2, cv2) = (Arc::clone(&m), Arc::clone(&cv));
+            let waiter = std::thread::spawn(move || {
+                let mut guard = m2.lock();
+                while *guard == 0 {
+                    let (g, _timed_out) = cv2.wait_timeout(guard, Duration::from_millis(50));
+                    guard = g;
+                }
+                *guard
+            });
+            std::thread::sleep(Duration::from_millis(10));
+            *m.lock() = 7;
+            cv.notify_all();
+            assert_eq!(waiter.join().expect("waiter must not panic"), 7);
+            // TLS drained: the mutex is immediately reacquirable here.
+            assert_eq!(*m.lock(), 7);
+        }
+
+        #[test]
+        fn poisoned_lock_is_recovered_and_counted() {
+            let m = Arc::new(RankedMutex::new(LockRank::StudyState, "t.tally", 41u32));
+            let before = poison_recoveries();
+            let m2 = Arc::clone(&m);
+            let _ = std::thread::spawn(move || {
+                let _guard = m2.lock();
+                panic!("poison the lock");
+            })
+            .join();
+            let mut guard = m.lock(); // recovers instead of panicking
+            *guard += 1;
+            assert_eq!(*guard, 42);
+            assert!(poison_recoveries() > before, "recovery must be counted");
+        }
+
+        #[test]
+        fn rwlock_read_then_higher_write_is_allowed() {
+            let registry = RankedRwLock::new(LockRank::StudyRegistry, "t.registry", 5u32);
+            let tally = RankedRwLock::new(LockRank::StudyState, "t.tally", 0u32);
+            let r = registry.read();
+            let mut w = tally.write();
+            *w = *r;
+            drop(w);
+            drop(r);
+            assert_eq!(*tally.read(), 5);
+        }
+
+        #[test]
+        fn rwlock_inverted_write_panics() {
+            let err = std::thread::spawn(|| {
+                let high = RankedRwLock::new(LockRank::Metrics, "t.metrics", ());
+                let low = RankedRwLock::new(LockRank::Fleet, "t.fleet", ());
+                let _held = high.read();
+                let _bad = low.write();
+            })
+            .join()
+            .expect_err("inverted rwlock acquisition must panic");
+            let msg = panic_message(err);
+            assert!(msg.contains("lock-order violation"), "got: {msg}");
+        }
+    }
+
+    #[test]
+    fn rank_order_matches_documented_table() {
+        use LockRank::*;
+        let table = [
+            Fleet,
+            Scheduler,
+            Runners,
+            Journal,
+            StudyRegistry,
+            DeliveryGate,
+            TrialQueue,
+            ConnList,
+            LinkState,
+            CancelPending,
+            StudyState,
+            ReaderHandles,
+            PoolQueue,
+            ScratchArena,
+            Metrics,
+            Signal,
+        ];
+        for pair in table.windows(2) {
+            assert!(pair[0] < pair[1], "{:?} must rank below {:?}", pair[0], pair[1]);
+        }
+    }
+}

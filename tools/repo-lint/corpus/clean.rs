@@ -1,0 +1,39 @@
+// lint-as: rust/src/coordinator/clean.rs
+//
+// Clean corpus file: everything here LOOKS like a violation but is
+// legitimate — comments, string literals, raw strings, near-miss method
+// names and #[cfg(test)] code. repo-lint must report zero findings, or
+// its sanitizer / scoping has regressed.
+// NOT compiled by cargo: this file is data for repo-lint's self-test.
+
+//! Docs may freely mention `Mutex::new`, `.lock().unwrap()` and
+//! `Instant::now()` — prose is not code.
+
+/// More docs: `queue.lock().expect("poisoned")` is the banned pattern.
+fn near_misses(v: Option<u64>, r: Result<u64, u64>) -> u64 {
+    // a line comment with .unwrap() and SystemTime::now() in it
+    let a = v.unwrap_or_default(); // unwrap_or_* is not unwrap()
+    let b = r.expect_err("expect_err is not expect("); /* .unwrap() */
+    let msg = "calling .lock().unwrap() or Instant::now() is banned";
+    let raw = r#"Mutex::new(0).lock().unwrap()"#;
+    let ch = '"'; // a char literal must not open a string
+    let lifetime_user: fn(&str) -> &str = keep::<'_>;
+    a + b + (msg.len() + raw.len() + ch as usize + lifetime_user("x").len()) as u64
+}
+
+fn keep<'a>(s: &'a str) -> &'a str {
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Instant;
+
+    #[test]
+    fn test_code_may_do_anything() {
+        let t = Instant::now();
+        let v: Option<u8> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+        assert!(t.elapsed().as_secs() < 60);
+    }
+}

@@ -1,0 +1,16 @@
+// lint-as: rust/src/bo/fake.rs
+//
+// Seeded violation: the poison-swallowing `.lock().unwrap()` pattern.
+// Poison recovery is owned by util::sync (PoisonError::into_inner plus a
+// recovery counter); an ad-hoc unwrap here would cascade one worker's
+// panic into every thread that touches the lock afterwards.
+// NOT compiled by cargo: this file is data for repo-lint's self-test.
+
+fn drain(shared: &SharedState) -> Vec<u64> {
+    let mut queue = shared.queue.lock().unwrap();
+    queue.drain(..).collect()
+}
+
+fn peek(shared: &SharedState) -> Option<u64> {
+    shared.queue.lock().expect("queue poisoned").first().copied()
+}

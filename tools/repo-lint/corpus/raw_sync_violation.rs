@@ -1,0 +1,12 @@
+// lint-as: rust/src/metrics/fake.rs
+//
+// Seeded violation: raw std::sync primitives outside util::sync. Both the
+// import and the construction must be flagged — locks bypass the ranked
+// deadlock-freedom checks unless they go through RankedMutex.
+// NOT compiled by cargo: this file is data for repo-lint's self-test.
+
+use std::sync::Mutex;
+
+fn build_cache() -> Mutex<Vec<u64>> {
+    Mutex::new(Vec::new())
+}

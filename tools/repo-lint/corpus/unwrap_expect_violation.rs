@@ -1,0 +1,22 @@
+// lint-as: rust/src/coordinator/fake.rs
+//
+// Seeded violation: unwrap/expect in coordinator non-test code. The
+// concurrent layers must not abort on recoverable conditions; only
+// allowlisted, documented invariant aborts may remain.
+// NOT compiled by cargo: this file is data for repo-lint's self-test.
+
+fn route(outcomes: &[Result<f64, String>]) -> f64 {
+    let first = outcomes.first().unwrap();
+    *first.as_ref().expect("worker outcomes are always Ok")
+}
+
+#[cfg(test)]
+mod tests {
+    // test code may unwrap freely — this one must NOT be flagged
+    #[test]
+    fn picks_first() {
+        assert_eq!(super::route(&[Ok(1.0)]), 1.0);
+        let v: Option<u8> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+    }
+}

@@ -1,0 +1,14 @@
+// lint-as: rust/src/gp/fake.rs
+//
+// Seeded violation: a wall-clock read inside a deterministic layer. The
+// BO schedule is virtual-time deterministic (parallel == serial,
+// bitwise); gp/bo/acquisition/linalg must never read the real clock —
+// only the designated sites (util::timer, util::bench, the network
+// transport) may.
+// NOT compiled by cargo: this file is data for repo-lint's self-test.
+
+use std::time::Instant;
+
+fn seed_from_clock() -> u64 {
+    Instant::now().elapsed().as_nanos() as u64
+}

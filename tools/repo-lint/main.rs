@@ -1,0 +1,619 @@
+//! repo-lint — the repo-specific static-analysis pass (std-only, no deps).
+//!
+//! Scans `rust/src` for violations of invariants that rustc and clippy
+//! cannot express because they are *policies of this codebase*:
+//!
+//! * **raw-sync** — `Mutex` / `RwLock` / `Condvar` used outside
+//!   `util::sync`. Every lock must be a `RankedMutex`/`RankedRwLock` so
+//!   the global lock order (deadlock freedom) is enforced in debug
+//!   builds. `util/sync.rs` itself is the single blessed wrapper site.
+//! * **unwrap-expect** — `.unwrap()` / `.expect(` in non-test
+//!   `coordinator` code. The concurrent layers must not abort on
+//!   recoverable conditions; every remaining site is a documented
+//!   invariant abort listed in the allowlist with a justification.
+//! * **wall-clock** — `Instant::now` / `SystemTime::now` outside the
+//!   designated wall-clock sites. The BO schedule is virtual-time
+//!   deterministic (parallel == serial, bitwise); a stray clock read in
+//!   `gp`/`bo`/`acquisition`/`linalg` would silently break replay.
+//! * **poison-swallow** — `.lock().unwrap()` / `.lock().expect(` (and
+//!   the `read()`/`write()` RwLock forms). Poison recovery is owned by
+//!   `util::sync` (recover + count); ad-hoc unwraps turn one thread's
+//!   panic into a process-wide cascade.
+//!
+//! Usage: `cargo run --bin repo-lint` from the repo root. `--self-test`
+//! runs the rules over the seeded-violation corpus in
+//! `tools/repo-lint/corpus` instead (each corpus file must be flagged
+//! with its expected rule; `clean.rs` must pass). Exit code 0 = clean,
+//! 1 = findings (or a failed self-test), 2 = usage/IO error.
+//!
+//! Findings are suppressed by `tools/repo-lint/allow.txt`: one entry per
+//! line, `rule | path-suffix | needle-or-* | justification`. A `*` needle
+//! allowlists the whole file for that rule (used to designate the
+//! wall-clock sites); otherwise the needle must appear in the offending
+//! line's original text. Stale entries (matching nothing) are reported as
+//! warnings so the allowlist cannot rot silently.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Rule identifiers, also used as corpus-file name prefixes.
+const RULES: [&str; 4] = ["raw-sync", "unwrap-expect", "wall-clock", "poison-swallow"];
+
+/// One lint hit: where, which rule, and the offending (original) line.
+struct Finding {
+    path: String,
+    line: usize,
+    rule: &'static str,
+    text: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.text.trim())
+    }
+}
+
+/// One `allow.txt` entry.
+struct Allow {
+    rule: String,
+    path_suffix: String,
+    needle: String,
+    used: std::cell::Cell<bool>,
+}
+
+impl Allow {
+    fn matches(&self, finding: &Finding) -> bool {
+        let hit = self.rule == finding.rule
+            && finding.path.ends_with(&self.path_suffix)
+            && (self.needle == "*" || finding.text.contains(&self.needle));
+        if hit {
+            self.used.set(true);
+        }
+        hit
+    }
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut self_test = false;
+    let mut quiet = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => return usage("--root needs a directory"),
+            },
+            "--self-test" => self_test = true,
+            "-q" | "--quiet" => quiet = true,
+            "-h" | "--help" => {
+                eprintln!("usage: repo-lint [--root DIR] [--self-test] [-q]");
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+    if self_test {
+        return match run_self_test(&root.join("tools/repo-lint/corpus"), quiet) {
+            Ok(()) => {
+                if !quiet {
+                    println!("repo-lint self-test: corpus behaves as seeded");
+                }
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("repo-lint self-test FAILED: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+    let allows = match load_allowlist(&root.join("tools/repo-lint/allow.txt")) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("repo-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let findings = match scan_tree(&root.join("rust/src")) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("repo-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let flagged: Vec<&Finding> =
+        findings.iter().filter(|f| !allows.iter().any(|a| a.matches(f))).collect();
+    for a in allows.iter().filter(|a| !a.used.get()) {
+        eprintln!(
+            "repo-lint: warning: stale allowlist entry `{} | {} | {}` matched nothing",
+            a.rule, a.path_suffix, a.needle
+        );
+    }
+    if flagged.is_empty() {
+        if !quiet {
+            println!(
+                "repo-lint: clean ({} findings suppressed by allowlist)",
+                findings.len() - flagged.len()
+            );
+        }
+        ExitCode::SUCCESS
+    } else {
+        for f in &flagged {
+            println!("{f}");
+        }
+        eprintln!("repo-lint: {} violation(s)", flagged.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("repo-lint: {msg}\nusage: repo-lint [--root DIR] [--self-test] [-q]");
+    ExitCode::from(2)
+}
+
+// ---------------------------------------------------------------------------
+// Tree walking
+// ---------------------------------------------------------------------------
+
+/// Recursively lint every `.rs` file under `src_root`, in sorted order so
+/// output (and the corpus test) is deterministic.
+fn scan_tree(src_root: &Path) -> Result<Vec<Finding>, String> {
+    let mut files = Vec::new();
+    collect_rs_files(src_root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for file in &files {
+        let src = fs::read_to_string(file).map_err(|e| format!("read {}: {e}", file.display()))?;
+        // repo-relative path with forward slashes for stable reporting
+        let rel = file.to_string_lossy().replace('\\', "/");
+        let rel = rel.trim_start_matches("./").to_string();
+        findings.extend(lint_source(&rel, &src));
+    }
+    Ok(findings)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The rules
+// ---------------------------------------------------------------------------
+
+/// Lint one file. `path` decides rule scope; `src` is the file contents.
+fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let sanitized = sanitize(src);
+    let skip = test_spans(&sanitized);
+    let original_lines: Vec<&str> = src.lines().collect();
+
+    let in_sync_module = path.ends_with("util/sync.rs");
+    let in_coordinator = path.contains("coordinator/");
+
+    let mut findings = Vec::new();
+    let mut offset = 0usize;
+    for (idx, line) in sanitized.lines().enumerate() {
+        let lineno = idx + 1;
+        let start = offset;
+        offset += line.len() + 1;
+        if skip.iter().any(|&(s, e)| start >= s && start < e) {
+            continue; // inside #[cfg(test)] / #[test] code
+        }
+        let original = original_lines.get(idx).copied().unwrap_or("");
+        let mut hit = |rule: &'static str| {
+            findings.push(Finding {
+                path: path.to_string(),
+                line: lineno,
+                rule,
+                text: original.to_string(),
+            });
+        };
+
+        if !in_sync_module
+            && identifiers(line).any(|id| id == "Mutex" || id == "RwLock" || id == "Condvar")
+        {
+            hit("raw-sync");
+        }
+        if in_coordinator && (line.contains(".unwrap()") || line.contains(".expect(")) {
+            hit("unwrap-expect");
+        }
+        if line.contains("Instant::now") || line.contains("SystemTime::now") {
+            hit("wall-clock");
+        }
+        const SWALLOWS: [&str; 6] = [
+            ".lock().unwrap()",
+            ".lock().expect(",
+            ".read().unwrap()",
+            ".read().expect(",
+            ".write().unwrap()",
+            ".write().expect(",
+        ];
+        if SWALLOWS.iter().any(|p| line.contains(p)) {
+            hit("poison-swallow");
+        }
+    }
+    findings
+}
+
+/// Iterate the identifier-shaped tokens of a sanitized line.
+fn identifiers(line: &str) -> impl Iterator<Item = &str> {
+    line.split(|c: char| !c.is_ascii_alphanumeric() && c != '_')
+        .filter(|tok| !tok.is_empty() && !tok.starts_with(|c: char| c.is_ascii_digit()))
+}
+
+// ---------------------------------------------------------------------------
+// Source sanitizing: blank out comments, strings and char literals while
+// preserving byte offsets and line structure, so the rules only ever match
+// real code and reported line numbers stay exact.
+// ---------------------------------------------------------------------------
+
+fn sanitize(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out: Vec<char> = Vec::with_capacity(b.len());
+    let mut i = 0;
+    let n = b.len();
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    while i < n {
+        let c = b[i];
+        // line comment (also covers /// and //! doc comments)
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // block comment — Rust block comments nest
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 0usize;
+            while i < n {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw (byte) string: r"..." / r#"..."# / br#"..."#
+        if c == 'r' || (c == 'b' && i + 1 < n && b[i + 1] == 'r') {
+            let start = if c == 'b' { i + 1 } else { i };
+            let mut j = start + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            let is_raw = j < n && b[j] == '"';
+            // avoid eating identifiers like `relisten` — require the
+            // char before `r` to not be identifier-ish
+            let boundary = i == 0 || (!b[i - 1].is_ascii_alphanumeric() && b[i - 1] != '_');
+            if is_raw && boundary {
+                while i <= j {
+                    out.push(' ');
+                    i += 1;
+                }
+                // consume until `"` followed by `hashes` #s
+                'raw: while i < n {
+                    if b[i] == '"' {
+                        let mut k = 0;
+                        while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for _ in 0..=hashes {
+                                out.push(' ');
+                                i += 1;
+                            }
+                            break 'raw;
+                        }
+                    }
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // plain (byte) string
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"') {
+            if c == 'b' {
+                out.push(' ');
+                i += 1;
+            }
+            out.push(' ');
+            i += 1; // opening quote
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(blank(b[i + 1]));
+                    i += 2;
+                } else if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // char literal vs lifetime: 'x' or '\n' is a literal, 'a (no
+        // closing quote nearby) is a lifetime
+        if c == '\'' && i + 1 < n {
+            let is_escape = b[i + 1] == '\\';
+            let closes = i + 2 < n && b[i + 2] == '\'';
+            if is_escape || closes {
+                out.push(' ');
+                i += 1; // opening quote
+                while i < n && b[i] != '\'' {
+                    if b[i] == '\\' && i + 1 < n {
+                        out.push(' ');
+                        out.push(' ');
+                        i += 2;
+                    } else {
+                        out.push(blank(b[i]));
+                        i += 1;
+                    }
+                }
+                if i < n {
+                    out.push(' ');
+                    i += 1; // closing quote
+                }
+                continue;
+            }
+        }
+        out.push(c);
+        i += 1;
+    }
+    out.into_iter().collect()
+}
+
+/// Byte spans of `#[cfg(test)]` / `#[test]` items: from the attribute to
+/// the matching close brace of the item it decorates. Rules skip these —
+/// test code may unwrap freely.
+fn test_spans(sanitized: &str) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    for marker in ["#[cfg(test)]", "#[test]"] {
+        let mut from = 0usize;
+        while let Some(pos) = sanitized[from..].find(marker) {
+            let at = from + pos;
+            // a brace-less decorated item (`#[cfg(test)] use foo;` or
+            // `mod tests;`) ends at the semicolon instead
+            let next_brace = sanitized[at..].find('{');
+            let next_semi = sanitized[at..].find(';');
+            if let (Some(brace), Some(semi)) = (next_brace, next_semi) {
+                if semi < brace {
+                    spans.push((at, at + semi + 1));
+                    from = at + semi + 1;
+                    continue;
+                }
+            }
+            if let Some(open_rel) = next_brace {
+                let open = at + open_rel;
+                let mut depth = 0isize;
+                let mut end = sanitized.len();
+                for (off, ch) in sanitized[open..].char_indices() {
+                    match ch {
+                        '{' => depth += 1,
+                        '}' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                end = open + off + 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                spans.push((at, end));
+                from = end;
+            } else {
+                break;
+            }
+        }
+    }
+    spans
+}
+
+// ---------------------------------------------------------------------------
+// Allowlist
+// ---------------------------------------------------------------------------
+
+fn load_allowlist(path: &Path) -> Result<Vec<Allow>, String> {
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(format!("read {}: {e}", path.display())),
+    };
+    let mut allows = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.splitn(4, '|').map(str::trim).collect();
+        if fields.len() < 3 {
+            return Err(format!(
+                "{}:{}: malformed allowlist entry (want `rule | path | needle | why`)",
+                path.display(),
+                idx + 1
+            ));
+        }
+        if !RULES.contains(&fields[0]) {
+            return Err(format!(
+                "{}:{}: unknown rule `{}` (known: {})",
+                path.display(),
+                idx + 1,
+                fields[0],
+                RULES.join(", ")
+            ));
+        }
+        allows.push(Allow {
+            rule: fields[0].to_string(),
+            path_suffix: fields[1].to_string(),
+            needle: fields[2].to_string(),
+            used: std::cell::Cell::new(false),
+        });
+    }
+    Ok(allows)
+}
+
+// ---------------------------------------------------------------------------
+// Self-test over the seeded-violation corpus
+// ---------------------------------------------------------------------------
+
+/// Run the rules over every corpus file. Files named `<rule>_*.rs` (with
+/// `-` spelled `_`) must produce at least one finding of exactly that
+/// rule; `clean.rs` must produce none. Each corpus file carries a
+/// `// lint-as: <path>` header giving the pretend repo path that decides
+/// rule scope.
+fn run_self_test(corpus: &Path, quiet: bool) -> Result<(), String> {
+    let mut files = Vec::new();
+    collect_rs_files(corpus, &mut files).map_err(|e| format!("corpus missing: {e}"))?;
+    files.sort();
+    if files.is_empty() {
+        return Err(format!("no corpus files under {}", corpus.display()));
+    }
+    for file in &files {
+        let src = fs::read_to_string(file).map_err(|e| format!("read {}: {e}", file.display()))?;
+        let stem = file
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| format!("bad corpus file name {}", file.display()))?;
+        let lint_as = src
+            .lines()
+            .find_map(|l| l.trim().strip_prefix("// lint-as: "))
+            .ok_or_else(|| format!("{}: missing `// lint-as: <path>` header", file.display()))?
+            .trim()
+            .to_string();
+        let findings = lint_source(&lint_as, &src);
+        if stem == "clean" {
+            if let Some(f) = findings.first() {
+                return Err(format!("clean corpus file was flagged: {f}"));
+            }
+            if !quiet {
+                println!("  corpus/{stem}.rs: clean, as seeded");
+            }
+            continue;
+        }
+        let expected = RULES
+            .iter()
+            .find(|r| stem.starts_with(&r.replace('-', "_")))
+            .ok_or_else(|| format!("{}: name must start with a rule id", file.display()))?;
+        if !findings.iter().any(|f| f.rule == *expected) {
+            return Err(format!(
+                "corpus/{stem}.rs: seeded `{expected}` violation was NOT flagged \
+                 (got: {:?})",
+                findings.iter().map(|f| f.rule).collect::<Vec<_>>()
+            ));
+        }
+        if !quiet {
+            println!("  corpus/{stem}.rs: flagged `{expected}` ({} finding(s))", findings.len());
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tests (run by `cargo test` as part of tier-1: the corpus must behave as
+// seeded AND the real tree must lint clean under the committed allowlist)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_blanks_comments_strings_and_chars() {
+        let src = "let a = \"Mutex::new\"; // Mutex::new\nlet b = 'x'; /* Instant::now */";
+        let clean = sanitize(src);
+        assert!(!clean.contains("Mutex"), "got: {clean}");
+        assert!(!clean.contains("Instant"), "got: {clean}");
+        assert!(clean.contains("let a ="));
+        assert_eq!(clean.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn sanitize_handles_raw_strings_and_identifiers_starting_with_r() {
+        let src = "let s = r#\"lock().unwrap()\"#; relisten(addr);";
+        let clean = sanitize(src);
+        assert!(!clean.contains("unwrap"), "got: {clean}");
+        assert!(clean.contains("relisten"), "got: {clean}");
+    }
+
+    #[test]
+    fn raw_sync_flags_construction_and_imports_outside_util_sync() {
+        let src = "use std::sync::Mutex;\nfn f() { let m = Mutex::new(0); }\n";
+        let hits = lint_source("rust/src/metrics/mod.rs", src);
+        assert_eq!(hits.iter().filter(|f| f.rule == "raw-sync").count(), 2);
+        // …but util/sync.rs itself is the blessed wrapper site:
+        assert!(lint_source("rust/src/util/sync.rs", src).is_empty());
+    }
+
+    #[test]
+    fn ranked_wrappers_do_not_trip_raw_sync() {
+        let src = "use crate::util::sync::{LockRank, RankedMutex};\n\
+                   fn f() { let m = RankedMutex::new(LockRank::Fleet, \"t\", 0); }\n";
+        assert!(lint_source("rust/src/coordinator/service.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_expect_scope_is_coordinator_non_test() {
+        let src =
+            "fn f() { x().unwrap(); }\n#[cfg(test)]\nmod tests { fn g() { y().unwrap(); } }\n";
+        let hits = lint_source("rust/src/coordinator/leader.rs", src);
+        assert_eq!(hits.iter().filter(|f| f.rule == "unwrap-expect").count(), 1);
+        assert_eq!(hits[0].line, 1);
+        // outside coordinator/: not in scope
+        assert!(lint_source("rust/src/gp/refit.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_and_poison_swallow_fire_everywhere() {
+        let src = "fn f() { let t = Instant::now(); m.lock().unwrap(); }\n";
+        let hits = lint_source("rust/src/gp/lazy.rs", src);
+        assert!(hits.iter().any(|f| f.rule == "wall-clock"));
+        assert!(hits.iter().any(|f| f.rule == "poison-swallow"));
+    }
+
+    #[test]
+    fn corpus_behaves_as_seeded() {
+        run_self_test(Path::new("tools/repo-lint/corpus"), true).expect("corpus self-test");
+    }
+
+    #[test]
+    fn real_tree_is_clean_under_committed_allowlist() {
+        let allows = load_allowlist(Path::new("tools/repo-lint/allow.txt")).expect("allowlist");
+        let findings = scan_tree(Path::new("rust/src")).expect("scan");
+        let flagged: Vec<String> = findings
+            .iter()
+            .filter(|f| !allows.iter().any(|a| a.matches(f)))
+            .map(|f| f.to_string())
+            .collect();
+        assert!(flagged.is_empty(), "repo-lint violations:\n{}", flagged.join("\n"));
+    }
+}
